@@ -1,0 +1,98 @@
+//! Chain functions (§2's motivating scenario): a five-stage data pipeline —
+//! Ingestion → Cleaning → Transformation → Analysis → Output — where each
+//! stage needs a different CPU allocation. Vertical scaling lets each stage
+//! get its own allocation; in-place scaling applies it without restarts and
+//! releases it between items.
+//!
+//! ```sh
+//! cargo run --release --example chain_pipeline
+//! ```
+
+use kinetic::coordinator::platform::{Eng, Platform, Simulation};
+use kinetic::coordinator::service::Service;
+use kinetic::policy::Policy;
+use kinetic::simclock::SimTime;
+use kinetic::util::quantity::MilliCpu;
+use kinetic::util::table::{fmt_ms, Table};
+use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+/// (stage, serving CPU, runtime at 1 CPU ms, cpu-bound fraction)
+const STAGES: [(&str, u64, f64, f64); 5] = [
+    ("ingestion", 250, 180.0, 0.45),
+    ("cleaning", 500, 420.0, 0.80),
+    ("transformation", 1000, 900.0, 0.95),
+    ("analysis", 2000, 1600.0, 0.98),
+    ("output", 250, 120.0, 0.40),
+];
+
+fn stage_profile(name: &str, runtime_ms: f64, cpu_frac: f64) -> WorkloadProfile {
+    let mut p = WorkloadProfile::paper(WorkloadKind::Cpu);
+    p.name = name.to_string();
+    p.runtime_1cpu_ms = runtime_ms;
+    p.cpu_frac = cpu_frac;
+    p.image = format!("kinetic/{name}:v1");
+    p
+}
+
+/// Submits one item through the chain: stage i's completion submits stage i+1.
+fn submit_chain(w: &mut Platform, eng: &mut Eng, stage: usize) {
+    if stage >= STAGES.len() {
+        return;
+    }
+    let name = STAGES[stage].0;
+    w.submit_with_hook(eng, name, move |w, eng| {
+        submit_chain(w, eng, stage + 1);
+    });
+}
+
+fn run(policy: Policy, items: u32, gap: SimTime) -> (f64, f64) {
+    let mut sim = Simulation::paper(21);
+    for (name, serving_m, runtime, frac) in STAGES {
+        let mut cfg = policy.revision_config();
+        // Per-stage vertical sizing — the point of §2's motivation.
+        cfg.serving_cpu = MilliCpu(serving_m);
+        let svc = Service::with_config(name, stage_profile(name, runtime, frac), policy, cfg);
+        sim.deploy_service(svc);
+    }
+    sim.run(); // pods up (and parked, for in-place)
+
+    let start = sim.now();
+    for i in 0..items {
+        let at = start + SimTime::from_nanos(gap.as_nanos() * i as u64);
+        sim.engine.schedule_at(at, move |w: &mut Platform, eng| {
+            submit_chain(w, eng, 0);
+        });
+    }
+    sim.run();
+
+    let now = sim.now();
+    let mut total_mean = 0.0;
+    for (name, ..) in STAGES {
+        total_mean += sim.world.metrics.service(name).latency_ms.mean();
+    }
+    let committed = sim.world.metrics.committed_cpu.average_mcpu(now);
+    (total_mean, committed)
+}
+
+fn main() {
+    println!("five-stage chain pipeline, per-stage vertical sizing\n");
+    let items = 12;
+    let gap = SimTime::from_secs(10); // > stable window: worst case for cold
+    let mut t = Table::new(vec![
+        "Policy",
+        "Chain latency (ms)",
+        "Avg committed (mCPU)",
+    ])
+    .title(format!("{items} items, one every {gap}"));
+    for policy in [Policy::Cold, Policy::InPlace, Policy::Warm] {
+        let (lat, committed) = run(policy, items, gap);
+        t.row(vec![
+            policy.name().to_string(),
+            fmt_ms(lat),
+            format!("{committed:.0}"),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!("warm must reserve sum(stage allocations) = 4000 mCPU continuously;");
+    println!("in-place parks all five stages at 1 m and pays only the resize on each item.");
+}

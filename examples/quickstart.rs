@@ -1,0 +1,59 @@
+//! Quickstart: deploy one function under each of the paper's three policies
+//! and compare a single request's end-to-end latency.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use kinetic::coordinator::platform::Simulation;
+use kinetic::policy::Policy;
+use kinetic::util::table::{fmt_ms, fmt_ratio, Table};
+use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+fn measure(policy: Policy) -> f64 {
+    // A fresh paper testbed: one 8-core node, knative-style serving,
+    // InPlacePodVerticalScaling enabled.
+    let mut sim = Simulation::paper(42);
+    sim.deploy(
+        "hello",
+        WorkloadProfile::paper(WorkloadKind::HelloWorld),
+        policy,
+    );
+    sim.run(); // let min-scale pods start and park
+
+    sim.submit("hello");
+    sim.run();
+    sim.world.metrics.service("hello").latency_ms.mean()
+}
+
+fn main() {
+    println!("kinetic quickstart: one helloworld request per policy\n");
+    let default_ms = 5.31; // Table 2 baseline
+    let mut t = Table::new(vec!["Policy", "Latency (ms)", "vs Default", "Paper"]).title(
+        "helloworld, single request (paper Table 3: Cold 286.99, In-place 15.81, Warm 3.87)",
+    );
+    let mut by_policy = Vec::new();
+    for policy in [Policy::Cold, Policy::InPlace, Policy::Warm] {
+        let ms = measure(policy);
+        by_policy.push((policy, ms));
+        let paper = match policy {
+            Policy::Cold => "286.99",
+            Policy::InPlace => "15.81",
+            Policy::Warm => "3.87",
+        };
+        t.row(vec![
+            policy.name().to_string(),
+            fmt_ms(ms),
+            fmt_ratio(ms / default_ms),
+            paper.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    let cold = by_policy[0].1;
+    let inplace = by_policy[1].1;
+    println!(
+        "in-place beats cold by {}x on this request (paper headline: up to 18.15x)",
+        fmt_ratio(cold / inplace)
+    );
+}

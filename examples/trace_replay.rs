@@ -1,0 +1,64 @@
+//! Trace replay: a synthetic Azure-Functions-style trace (Zipf popularity,
+//! diurnal rate, bursts — per Shahrad et al., which the paper cites) played
+//! against all three policies. Shows the paper's §3 trade-off: warm buys
+//! latency with standing reservations; in-place gets close to warm latency
+//! at a fraction of the committed CPU.
+//!
+//! ```sh
+//! cargo run --release --example trace_replay
+//! ```
+
+use kinetic::policy::Policy;
+use kinetic::simclock::SimTime;
+use kinetic::trace::generator::{TraceConfig, TraceGenerator};
+use kinetic::trace::replay::replay;
+use kinetic::util::table::{fmt_ms, Table};
+
+fn main() {
+    let cfg = TraceConfig {
+        functions: 10,
+        peak_rate: 5.0,
+        trough_ratio: 0.1,
+        period: SimTime::from_secs(600),
+        horizon: SimTime::from_secs(1800),
+        burst_p: 0.3,
+        seed: 7,
+        ..TraceConfig::default()
+    };
+    let gen = TraceGenerator::new(cfg);
+    let trace = gen.generate();
+    println!(
+        "generated {} invocations over 30 virtual minutes across 10 functions\n",
+        trace.len()
+    );
+
+    let mut t = Table::new(vec![
+        "Policy",
+        "Mean (ms)",
+        "p50 (ms)",
+        "p99 (ms)",
+        "Failed",
+        "Cold starts",
+        "Avg committed (mCPU)",
+        "Pods created",
+    ])
+    .title("Policy comparison on the trace (single 8-core node)");
+    for policy in Policy::ALL {
+        let r = replay(&trace, 10, policy, 7);
+        t.row(vec![
+            policy.name().to_string(),
+            fmt_ms(r.mean_ms),
+            fmt_ms(r.p50_ms),
+            fmt_ms(r.p99_ms),
+            r.failed.to_string(),
+            r.cold_starts.to_string(),
+            format!("{:.0}", r.avg_committed_mcpu),
+            r.pods_created.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!("expected shape: warm owns the whole node in standing reservations (8 functions x");
+    println!("1 CPU = the node) and cannot scale out; in-place parks at ~1 m per function, so");
+    println!("horizontal scale-out still fits — near-warm latency at a fraction of the");
+    println!("committed CPU. Cold pays the pipeline on every burst edge.");
+}

@@ -1,0 +1,125 @@
+"""AOT export: lower each Layer-2 graph to HLO *text* + a JSON manifest.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records, per artifact: the file, input shapes, output arity and
+*expected outputs* for the deterministic example inputs, so the rust runtime
+can self-check numerics end-to-end without Python in the loop.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(spec):
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def export_compute(out_dir: str) -> dict:
+    specs = model.compute_example_specs()
+    lowered = jax.jit(model.compute_fn).lower(*specs)
+    path = os.path.join(out_dir, "compute.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # Expected outputs on the deterministic example inputs, via the oracle.
+    x, w, b = model.example_compute_inputs()
+    y = np.asarray(ref.compute_ref(x, w, b, iters=16))
+    mean = np.asarray(y.mean(axis=1))
+    return {
+        "file": "compute.hlo.txt",
+        "inputs": [_spec_json(s) for s in specs],
+        "outputs": 2,
+        "check": {
+            "out0_sum": float(y.sum()),
+            "out0_first8": [float(v) for v in y.ravel()[:8]],
+            "out1_first4": [float(v) for v in mean[:4]],
+            "tolerance": 2e-4,
+        },
+    }
+
+
+def export_watermark(out_dir: str) -> dict:
+    specs = model.watermark_example_specs()
+    lowered = jax.jit(model.watermark_fn).lower(*specs)
+    path = os.path.join(out_dir, "watermark.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    frames, wm, alpha, gain = model.example_watermark_inputs()
+    out = np.asarray(ref.watermark_ref(frames, wm, alpha, gain))
+    lum = out.mean(axis=(1, 2))
+    return {
+        "file": "watermark.hlo.txt",
+        "inputs": [_spec_json(s) for s in specs],
+        "outputs": 2,
+        "check": {
+            "out0_sum": float(out.sum()),
+            "out0_first8": [float(v) for v in out.ravel()[:8]],
+            "out1_first4": [float(v) for v in lum[:4]],
+            "tolerance": 2e-3,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Kept for Makefile compatibility: --out <file> writes the compute HLO
+    # at that exact path in addition to the manifest-driven layout.
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "models": {
+            "compute": export_compute(out_dir),
+            "watermark": export_watermark(out_dir),
+        },
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+
+    if args.out:
+        # Legacy single-file target (Makefile stamp).
+        with open(args.out, "w") as f:
+            with open(os.path.join(out_dir, "compute.hlo.txt")) as src:
+                f.write(src.read())
+
+    sizes = {
+        name: os.path.getsize(os.path.join(out_dir, m["file"]))
+        for name, m in manifest["models"].items()
+    }
+    print(f"wrote {mpath}: {sizes}")
+
+
+if __name__ == "__main__":
+    main()

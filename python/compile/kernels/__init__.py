@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels.
+
+Two kernels back the paper's compute-bearing workloads:
+
+* ``compute`` -- the ``cpu`` workload's "complicate math problem" as an
+  MXU-shaped iterated matmul + nonlinearity chain.
+* ``watermark`` -- the SeBS video workloads' frame-watermark blend, tiled
+  for VMEM via ``BlockSpec``.
+
+Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path; TPU
+performance is estimated structurally (DESIGN.md section 7).
+"""
+
+from .compute import compute_kernel_call, COMPUTE_ITERS
+from .watermark import watermark_call, TILE_H, TILE_W
+from . import ref
+
+__all__ = [
+    "compute_kernel_call",
+    "COMPUTE_ITERS",
+    "watermark_call",
+    "TILE_H",
+    "TILE_W",
+    "ref",
+]

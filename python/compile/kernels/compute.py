@@ -1,0 +1,73 @@
+"""The ``cpu`` workload's "complicate math problem" as a Pallas kernel.
+
+The paper's cpu function burns ~2.47 s of pure CPU at 1000 m. We express its
+inner loop as the TPU-idiomatic equivalent: an iterated affine map with a
+transcendental nonlinearity,
+
+    x_{k+1} = tanh(x_k @ W + b) + 0.1 * x_k      (k = 0..ITERS-1)
+
+over MXU-native (128, 128) tiles. On a real TPU the matmul hits the 128x128
+systolic array each iteration; ``interpret=True`` executes the same HLO on
+CPU for correctness (DESIGN.md section Hardware-Adaptation).
+
+The whole iteration runs inside one kernel invocation with the operands
+pinned in VMEM: one (B,D) activation + one (D,D) weight + bias, i.e.
+3 * 128*128*4 B < 200 KiB -- far under the ~16 MiB VMEM budget, leaving
+room for double-buffering when batch-tiled by the grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Iterations of the map inside one kernel call. Chosen so one call is a few
+# MXU-milliseconds on TPU; the rust workload model calibrates wall time.
+COMPUTE_ITERS = 16
+
+# MXU-native tile sizes.
+BATCH = 128
+DIM = 128
+
+
+def _compute_kernel(x_ref, w_ref, b_ref, o_ref, *, iters: int):
+    """Iterated affine + tanh map, fully in VMEM."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+
+    def body(_, x):
+        # MXU matmul in f32 (bf16 on real TPU via preferred_element_type).
+        y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        return jnp.tanh(y + b) + 0.1 * x
+
+    x = jax.lax.fori_loop(0, iters, body, x)
+    o_ref[...] = x
+
+
+def compute_kernel_call(x, w, b, iters: int = COMPUTE_ITERS):
+    """Runs the compute kernel: x:(B,D), w:(D,D), b:(D,) -> (B,D).
+
+    The grid tiles the batch dimension in BATCH-row blocks; weights and bias
+    are broadcast to every grid step (constant index_map), so each step is
+    one VMEM-resident (BATCH,D)x(D,D) matmul chain.
+    """
+    batch, dim = x.shape
+    assert dim == DIM, f"dim must be {DIM}, got {dim}"
+    assert batch % BATCH == 0, f"batch must be a multiple of {BATCH}"
+    assert w.shape == (dim, dim) and b.shape == (dim,)
+
+    grid = (batch // BATCH,)
+    return pl.pallas_call(
+        functools.partial(_compute_kernel, iters=iters),
+        out_shape=jax.ShapeDtypeStruct((batch, dim), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BATCH, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim, dim), lambda i: (0, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BATCH, dim), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w, b)

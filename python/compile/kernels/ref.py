@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def compute_ref(x, w, b, iters):
+    """Reference for kernels.compute: iterated tanh-affine map."""
+
+    def body(_, x):
+        return jnp.tanh(jnp.dot(x, w) + b) + 0.1 * x
+
+    return jax.lax.fori_loop(0, iters, body, x)
+
+
+def watermark_ref(frames, wm, alpha, gain):
+    """Reference for kernels.watermark: alpha blend + clip + gain."""
+    a = alpha[0]
+    g = gain[0]
+    blended = (1.0 - a) * frames + a * wm[None, :, :]
+    return jnp.clip(blended, 0.0, 1.0) * g

@@ -1,0 +1,61 @@
+"""The video workloads' watermark blend as a Pallas kernel.
+
+SeBS's video workload runs ``ffmpeg -i in.mp4 -i wm.png -filter_complex
+overlay`` -- per pixel, an alpha blend of a watermark onto each frame. The
+TPU mapping (DESIGN.md section Hardware-Adaptation): instead of a CUDA-style
+one-thread-per-pixel overlay, tile each frame into VPU-aligned
+(TILE_H, TILE_W) VMEM blocks via ``BlockSpec`` and blend vector-wise, with a
+per-frame brightness correction (the kind of light post-pass ffmpeg filter
+graphs chain) fused into the same kernel:
+
+    out = clip((1 - a) * frame + a * wm, 0, 1) * gain
+
+The grid walks (frame, h-tile, w-tile); the watermark block is re-used for
+every frame (constant leading index), so HBM traffic is one frame read +
+one frame write per frame plus a single watermark fetch -- the schedule the
+paper's GPU analog would express with threadblocks + shared memory.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# float32 VPU-aligned tiles: 8 sublanes x 128 lanes.
+TILE_H = 8
+TILE_W = 128
+
+
+def _watermark_kernel(frame_ref, wm_ref, alpha_ref, gain_ref, o_ref):
+    f = frame_ref[...]
+    wm = wm_ref[...]
+    a = alpha_ref[0]
+    g = gain_ref[0]
+    blended = (1.0 - a) * f + a * wm
+    o_ref[...] = jnp.clip(blended, 0.0, 1.0) * g
+
+
+def watermark_call(frames, wm, alpha, gain):
+    """Blends ``wm`` onto every frame.
+
+    frames: (N, H, W) float32 in [0,1]; wm: (H, W); alpha, gain: scalars
+    packed as shape-(1,) arrays (scalars prefetch poorly through BlockSpec
+    on some jax versions; a 1-element block is portable).
+    """
+    n, h, w = frames.shape
+    assert wm.shape == (h, w)
+    assert h % TILE_H == 0 and w % TILE_W == 0, (h, w)
+
+    grid = (n, h // TILE_H, w // TILE_W)
+    return pl.pallas_call(
+        _watermark_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, h, w), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_H, TILE_W), lambda f, i, j: (f, i, j)),
+            pl.BlockSpec((TILE_H, TILE_W), lambda f, i, j: (i, j)),
+            pl.BlockSpec((1,), lambda f, i, j: (0,)),
+            pl.BlockSpec((1,), lambda f, i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_H, TILE_W), lambda f, i, j: (f, i, j)),
+        interpret=True,
+    )(frames, wm, alpha, gain)

@@ -1,0 +1,85 @@
+"""Layer-2 JAX compute graphs, one per compute-bearing workload.
+
+Each graph is jitted, calls the Layer-1 Pallas kernel, and is what
+``aot.py`` lowers to HLO text for the rust runtime. Shapes are fixed at
+export (one compiled executable per model variant, per the AOT design).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.compute import compute_kernel_call, COMPUTE_ITERS, BATCH, DIM
+from .kernels.watermark import watermark_call
+
+# Export shapes. One "video segment" = 4 frames of 64x256 grayscale; the
+# rust workload model invokes the executable per segment as the inner loop
+# of the video functions.
+FRAMES = 4
+FRAME_H = 64
+FRAME_W = 256
+
+
+def compute_fn(x, w, b):
+    """The ``cpu`` workload step: kernel + a cheap output reduction the
+    function returns to its caller (keeps XLA from DCE'ing anything)."""
+    y = compute_kernel_call(x, w, b, iters=COMPUTE_ITERS)
+    return (y, jnp.mean(y, axis=1))
+
+
+def watermark_fn(frames, wm, alpha, gain):
+    """The ``video`` workload step: blend + per-frame mean luminance (the
+    sort of stats ffmpeg filter chains report)."""
+    out = watermark_call(frames, wm, alpha, gain)
+    return (out, jnp.mean(out, axis=(1, 2)))
+
+
+def compute_example_specs():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((BATCH, DIM), f32),
+        jax.ShapeDtypeStruct((DIM, DIM), f32),
+        jax.ShapeDtypeStruct((DIM,), f32),
+    )
+
+
+def watermark_example_specs():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((FRAMES, FRAME_H, FRAME_W), f32),
+        jax.ShapeDtypeStruct((FRAME_H, FRAME_W), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+
+
+# --- deterministic example inputs --------------------------------------------
+# Reproduced bit-exactly by the rust runtime (see rust/src/runtime/inputs.rs):
+# simple modular ramps, exact in float32.
+
+
+def example_compute_inputs():
+    import numpy as np
+
+    x = ((np.arange(BATCH * DIM) % 17).astype(np.float32) * 0.0625 - 0.5).reshape(
+        BATCH, DIM
+    )
+    w = ((np.arange(DIM * DIM) % 13).astype(np.float32) * 0.03125 - 0.1875).reshape(
+        DIM, DIM
+    )
+    b = (np.arange(DIM) % 7).astype(np.float32) * 0.125 - 0.375
+    return x, w, b
+
+
+def example_watermark_inputs():
+    import numpy as np
+
+    n = FRAMES * FRAME_H * FRAME_W
+    frames = ((np.arange(n) % 251).astype(np.float32) / 250.0).reshape(
+        FRAMES, FRAME_H, FRAME_W
+    )
+    wm = ((np.arange(FRAME_H * FRAME_W) % 101).astype(np.float32) / 100.0).reshape(
+        FRAME_H, FRAME_W
+    )
+    alpha = np.array([0.25], dtype=np.float32)
+    gain = np.array([1.0625], dtype=np.float32)
+    return frames, wm, alpha, gain

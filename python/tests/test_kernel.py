@@ -1,0 +1,171 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/values; fixed cases pin the export configuration.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.compute import compute_kernel_call, BATCH, DIM
+from compile.kernels.watermark import watermark_call, TILE_H, TILE_W
+from compile.kernels import ref
+
+
+# ----------------------------------------------------------------- compute
+
+
+def _rand(shape, seed, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+class TestComputeKernel:
+    def test_matches_ref_at_export_shape(self):
+        x = _rand((BATCH, DIM), 0)
+        w = _rand((DIM, DIM), 1, -0.2, 0.2)
+        b = _rand((DIM,), 2)
+        got = compute_kernel_call(x, w, b, iters=16)
+        want = ref.compute_ref(x, w, b, iters=16)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_single_iteration(self):
+        x = _rand((BATCH, DIM), 3)
+        w = _rand((DIM, DIM), 4, -0.2, 0.2)
+        b = _rand((DIM,), 5)
+        got = compute_kernel_call(x, w, b, iters=1)
+        want = np.tanh(x @ w + b) + 0.1 * x
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_iterations_is_identity(self):
+        x = _rand((BATCH, DIM), 6)
+        w = _rand((DIM, DIM), 7)
+        b = _rand((DIM,), 8)
+        got = compute_kernel_call(x, w, b, iters=0)
+        np.testing.assert_allclose(got, x, rtol=0, atol=0)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        batch_tiles=st.integers(min_value=1, max_value=3),
+        iters=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_batch_tiles_and_iters(self, batch_tiles, iters, seed):
+        x = _rand((BATCH * batch_tiles, DIM), seed)
+        w = _rand((DIM, DIM), seed + 1, -0.3, 0.3)
+        b = _rand((DIM,), seed + 2)
+        got = compute_kernel_call(x, w, b, iters=iters)
+        want = ref.compute_ref(x, w, b, iters=iters)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(AssertionError):
+            compute_kernel_call(
+                _rand((BATCH + 1, DIM), 0), _rand((DIM, DIM), 1), _rand((DIM,), 2)
+            )
+        with pytest.raises(AssertionError):
+            compute_kernel_call(
+                _rand((BATCH, 64), 0), _rand((64, 64), 1), _rand((64,), 2)
+            )
+
+    def test_output_bounded(self):
+        # tanh(+0.1x chain) keeps values bounded: |y| <= 1 + 0.1*|x|...
+        # iterated: sup bound ~ 1/(1-0.1) + |x0|. Sanity-check no blowup.
+        x = _rand((BATCH, DIM), 11, -5, 5)
+        w = _rand((DIM, DIM), 12, -1, 1)
+        b = _rand((DIM,), 13, -1, 1)
+        y = np.asarray(compute_kernel_call(x, w, b, iters=32))
+        assert np.all(np.isfinite(y))
+        assert np.abs(y).max() < 5.0
+
+
+# --------------------------------------------------------------- watermark
+
+
+class TestWatermarkKernel:
+    def test_matches_ref_at_export_shape(self):
+        frames = _rand((4, 64, 256), 20, 0.0, 1.0)
+        wm = _rand((64, 256), 21, 0.0, 1.0)
+        alpha = np.array([0.25], dtype=np.float32)
+        gain = np.array([1.0625], dtype=np.float32)
+        got = watermark_call(frames, wm, alpha, gain)
+        want = ref.watermark_ref(frames, wm, alpha, gain)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_alpha_zero_passthrough(self):
+        frames = _rand((2, TILE_H, TILE_W), 22, 0.0, 1.0)
+        wm = _rand((TILE_H, TILE_W), 23, 0.0, 1.0)
+        got = watermark_call(
+            frames,
+            wm,
+            np.array([0.0], dtype=np.float32),
+            np.array([1.0], dtype=np.float32),
+        )
+        np.testing.assert_allclose(got, frames, rtol=1e-6, atol=1e-6)
+
+    def test_alpha_one_is_watermark(self):
+        frames = _rand((2, TILE_H, TILE_W), 24, 0.0, 1.0)
+        wm = _rand((TILE_H, TILE_W), 25, 0.0, 1.0)
+        got = watermark_call(
+            frames,
+            wm,
+            np.array([1.0], dtype=np.float32),
+            np.array([1.0], dtype=np.float32),
+        )
+        want = np.broadcast_to(wm, frames.shape)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_clip_engages(self):
+        frames = np.full((1, TILE_H, TILE_W), 0.9, dtype=np.float32)
+        wm = np.full((TILE_H, TILE_W), 2.0, dtype=np.float32)  # overbright
+        got = np.asarray(
+            watermark_call(
+                frames,
+                wm,
+                np.array([0.5], dtype=np.float32),
+                np.array([1.0], dtype=np.float32),
+            )
+        )
+        assert got.max() <= 1.0 + 1e-6
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=4),
+        h_tiles=st.integers(min_value=1, max_value=4),
+        w_tiles=st.integers(min_value=1, max_value=2),
+        alpha=st.floats(min_value=0.0, max_value=1.0, width=32),
+        gain=st.floats(min_value=0.5, max_value=1.5, width=32),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shapes_and_params(self, n, h_tiles, w_tiles, alpha, gain, seed):
+        h, w = TILE_H * h_tiles, TILE_W * w_tiles
+        frames = _rand((n, h, w), seed, 0.0, 1.0)
+        wm = _rand((h, w), seed + 1, 0.0, 1.0)
+        a = np.array([alpha], dtype=np.float32)
+        g = np.array([gain], dtype=np.float32)
+        got = watermark_call(frames, wm, a, g)
+        want = ref.watermark_ref(frames, wm, a, g)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_misaligned_shapes(self):
+        with pytest.raises(AssertionError):
+            watermark_call(
+                _rand((1, TILE_H + 1, TILE_W), 0, 0, 1),
+                _rand((TILE_H + 1, TILE_W), 1, 0, 1),
+                np.array([0.5], dtype=np.float32),
+                np.array([1.0], dtype=np.float32),
+            )
+
+
+# ------------------------------------------------------------ determinism
+
+
+def test_kernels_deterministic():
+    x = _rand((BATCH, DIM), 30)
+    w = _rand((DIM, DIM), 31, -0.2, 0.2)
+    b = _rand((DIM,), 32)
+    a = np.asarray(compute_kernel_call(x, w, b, iters=4))
+    c = np.asarray(compute_kernel_call(x, w, b, iters=4))
+    np.testing.assert_array_equal(a, c)

@@ -1,0 +1,59 @@
+"""L2 graph tests: shapes, reductions, and the deterministic example inputs
+the rust runtime replays."""
+
+import numpy as np
+import jax
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestComputeModel:
+    def test_shapes(self):
+        x, w, b = model.example_compute_inputs()
+        y, m = jax.jit(model.compute_fn)(x, w, b)
+        assert y.shape == (model.BATCH, model.DIM)
+        assert m.shape == (model.BATCH,)
+
+    def test_reduction_consistent(self):
+        x, w, b = model.example_compute_inputs()
+        y, m = jax.jit(model.compute_fn)(x, w, b)
+        np.testing.assert_allclose(np.asarray(y).mean(axis=1), m, rtol=1e-6, atol=1e-6)
+
+    def test_matches_oracle_on_example_inputs(self):
+        x, w, b = model.example_compute_inputs()
+        y, _ = jax.jit(model.compute_fn)(x, w, b)
+        want = ref.compute_ref(x, w, b, iters=16)
+        np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+
+    def test_example_inputs_are_exact_f32(self):
+        # The rust side regenerates these bit-exactly; the grids must be
+        # exactly representable.
+        x, w, b = model.example_compute_inputs()
+        for arr in (x, w, b):
+            assert arr.dtype == np.float32
+            # Values are k/32 - c: multiples of 2^-5, exact in f32.
+            assert np.all(arr * 32 == np.round(arr * 32))
+
+
+class TestWatermarkModel:
+    def test_shapes(self):
+        args = model.example_watermark_inputs()
+        out, lum = jax.jit(model.watermark_fn)(*args)
+        assert out.shape == (model.FRAMES, model.FRAME_H, model.FRAME_W)
+        assert lum.shape == (model.FRAMES,)
+
+    def test_matches_oracle_on_example_inputs(self):
+        args = model.example_watermark_inputs()
+        out, lum = jax.jit(model.watermark_fn)(*args)
+        want = ref.watermark_ref(*args)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            lum, np.asarray(want).mean(axis=(1, 2)), rtol=1e-5, atol=1e-6
+        )
+
+    def test_export_shapes_tile_aligned(self):
+        from compile.kernels.watermark import TILE_H, TILE_W
+
+        assert model.FRAME_H % TILE_H == 0
+        assert model.FRAME_W % TILE_W == 0

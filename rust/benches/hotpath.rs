@@ -1,0 +1,81 @@
+//! Bench: L3 coordinator hot paths — event engine throughput, the
+//! router/queue-proxy dispatch path, and end-to-end simulated request cost
+//! per policy. These are the perf-pass targets in DESIGN.md §7.
+//!
+//! `cargo bench --bench hotpath`
+
+use kinetic::coordinator::platform::Simulation;
+use kinetic::loadgen::runner::{Runner as LoadRunner, Scenario};
+use kinetic::policy::Policy;
+use kinetic::simclock::{Engine, SimTime};
+use kinetic::util::bench::{bench_fn, black_box, BenchConfig, Runner};
+use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+fn main() {
+    let runner = Runner::from_args();
+    let cfg = BenchConfig::default();
+
+    runner.section("engine", || {
+        // Raw DES engine throughput: schedule+run N trivial events.
+        let r = bench_fn("engine/schedule+run 10k events", &cfg, || {
+            let mut eng: Engine<u64> = Engine::new();
+            let mut world = 0u64;
+            for i in 0..10_000u64 {
+                eng.schedule_at(SimTime::from_nanos(i), |w: &mut u64, _| *w += 1);
+            }
+            black_box(eng.run(&mut world));
+        });
+        println!("{}", r.line());
+        let per_event = r.mean_ns / 10_000.0;
+        println!(
+            "  -> {per_event:.0} ns/event  ({:.2} M events/s; target >= 1 M/s)",
+            1e3 / per_event
+        );
+    });
+
+    runner.section("request", || {
+        // End-to-end simulated request cost (wall time per simulated
+        // request, warm path, helloworld).
+        for policy in [Policy::Warm, Policy::InPlace] {
+            let mut sim = Simulation::paper(7);
+            sim.deploy(
+                "fn",
+                WorkloadProfile::paper(WorkloadKind::HelloWorld),
+                policy,
+            );
+            sim.run();
+            let t0 = std::time::Instant::now();
+            let report = LoadRunner::run(&mut sim, "fn", &Scenario::closed(8, 250));
+            let wall = t0.elapsed();
+            let per = wall.as_nanos() as f64 / report.completed as f64;
+            println!(
+                "request/{:<8} {} simulated requests in {:?} -> {:.1} us/request (host)",
+                policy.name(),
+                report.completed,
+                wall,
+                per / 1000.0
+            );
+        }
+    });
+
+    runner.section("trace", || {
+        use kinetic::trace::generator::{TraceConfig, TraceGenerator};
+        use kinetic::trace::replay::replay;
+        let trace = TraceGenerator::new(TraceConfig {
+            functions: 8,
+            peak_rate: 20.0,
+            horizon: SimTime::from_secs(300),
+            ..TraceConfig::default()
+        })
+        .generate();
+        let t0 = std::time::Instant::now();
+        let r = replay(&trace, 8, Policy::InPlace, 3);
+        let wall = t0.elapsed();
+        println!(
+            "trace/in-place: {} invocations replayed in {:?} ({:.0} sim-req/s host)",
+            r.completed,
+            wall,
+            r.completed as f64 / wall.as_secs_f64()
+        );
+    });
+}

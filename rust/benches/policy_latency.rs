@@ -1,0 +1,61 @@
+//! Bench: regenerates §4.2 — Table 2 (workload runtimes), Table 3 + Fig 5
+//! (policy latency comparison) and Fig 6 (runtime vs in-place effect).
+//!
+//! `cargo bench --bench policy_latency [-- table2|table3|fig5|fig6]`
+
+use kinetic::experiments::policies::PolicyExperiment;
+use kinetic::experiments::report::{fig5_table, fig6_table, table3_table};
+use kinetic::simclock::SimTime;
+use kinetic::util::bench::Runner;
+use kinetic::util::table::{fmt_ms, fmt_ratio, Table};
+use kinetic::workload::registry::WorkloadProfile;
+
+fn main() {
+    let runner = Runner::from_args();
+    let exp = PolicyExperiment {
+        iterations: 8,
+        think: SimTime::from_secs(8),
+        seed: 42,
+    };
+
+    runner.section("table2", || {
+        let mut t = Table::new(vec!["Workload", "Runtime (ms)", "sigma (ms)", "Paper (ms)"])
+            .title("Table 2: runtime measurements with 1 CPU");
+        for (kind, s) in exp.table2(64) {
+            t.row(vec![
+                kind.name().to_string(),
+                fmt_ms(s.mean()),
+                fmt_ms(s.std_dev()),
+                fmt_ms(WorkloadProfile::paper(kind).runtime_1cpu_ms),
+            ]);
+        }
+        println!("{}", t.to_ascii());
+    });
+
+    // table3 / fig5 / fig6 share one sweep.
+    if runner.enabled("table3") || runner.enabled("fig5") || runner.enabled("fig6") {
+        let rows = exp.table3();
+        runner.section("table3", || {
+            println!("{}", table3_table(&rows).to_ascii());
+            println!("paper row (helloworld): Cold 286.99, In-place 15.81, Warm 3.87");
+        });
+        runner.section("fig5", || {
+            println!("{}", fig5_table(&rows).to_ascii());
+        });
+        runner.section("fig6", || {
+            println!("{}", fig6_table(&PolicyExperiment::fig6(&rows)).to_ascii());
+            // Shape assertions the paper highlights.
+            let hello = rows.iter().find(|r| r.function == "helloworld").unwrap();
+            let v10m = rows.iter().find(|r| r.function == "videos-10m").unwrap();
+            println!(
+                "inverse relationship: in-place effect {} (helloworld) -> {} (videos-10m)",
+                fmt_ratio(hello.inplace),
+                fmt_ratio(v10m.inplace)
+            );
+            println!(
+                "headline improvement band: {}x (paper: 1.16x - 18.15x)",
+                fmt_ratio(hello.improvement())
+            );
+        });
+    }
+}

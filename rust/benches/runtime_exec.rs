@@ -1,0 +1,57 @@
+//! Bench: the PJRT hot path — artifact load/compile time and per-execution
+//! latency of both AOT kernels (compute + watermark) from rust.
+//!
+//! `cargo bench --bench runtime_exec`
+
+use kinetic::runtime::{inputs, Executor};
+use kinetic::util::bench::{bench_fn, black_box, BenchConfig, Runner};
+
+fn main() {
+    let runner = Runner::from_args();
+    let Ok(mut ex) = Executor::new(None) else {
+        eprintln!("artifacts missing — run `make artifacts` first; skipping runtime_exec");
+        return;
+    };
+    println!("PJRT platform: {}", ex.platform());
+
+    runner.section("compile", || {
+        let t0 = std::time::Instant::now();
+        let mut fresh = Executor::new(None).unwrap();
+        fresh.load("compute").unwrap();
+        let c1 = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        fresh.load("watermark").unwrap();
+        let c2 = t1.elapsed();
+        println!("compile compute:   {c1:?}");
+        println!("compile watermark: {c2:?}");
+        println!("(compilation happens once per model variant; the request path only executes)");
+    });
+
+    runner.section("execute", || {
+        ex.self_check("compute").expect("numeric check");
+        ex.self_check("watermark").expect("numeric check");
+        let cfg = BenchConfig::default();
+
+        let (x, w, b) = inputs::compute_inputs();
+        let r = bench_fn("execute/compute(128x128,16 iters)", &cfg, || {
+            black_box(ex.execute("compute", &[&x, &w, &b]).unwrap());
+        });
+        println!("{}", r.line());
+        let lits = ex.prepare_inputs("compute", &[&x, &w, &b]).unwrap();
+        let r = bench_fn("execute_prepared/compute (reused literals)", &cfg, || {
+            black_box(ex.execute_prepared("compute", &lits).unwrap());
+        });
+        println!("{}", r.line());
+
+        let (f, wm, a, g) = inputs::watermark_inputs();
+        let r = bench_fn("execute/watermark(4x64x256)", &cfg, || {
+            black_box(ex.execute("watermark", &[&f, &wm, &a, &g]).unwrap());
+        });
+        println!("{}", r.line());
+        let lits = ex.prepare_inputs("watermark", &[&f, &wm, &a, &g]).unwrap();
+        let r = bench_fn("execute_prepared/watermark (reused literals)", &cfg, || {
+            black_box(ex.execute_prepared("watermark", &lits).unwrap());
+        });
+        println!("{}", r.line());
+    });
+}

@@ -1,0 +1,75 @@
+//! Feature gates. The paper's mechanism is gated behind
+//! `InPlacePodVerticalScaling` (alpha, Kubernetes 1.27); with the gate off,
+//! resize patches are rejected exactly like a pre-1.27 cluster, forcing the
+//! restart-based vertical scaling path the paper contrasts against.
+
+use std::collections::BTreeMap;
+
+/// Well-known gate names used by the platform.
+pub const IN_PLACE_POD_VERTICAL_SCALING: &str = "InPlacePodVerticalScaling";
+
+/// A set of named boolean feature gates.
+#[derive(Debug, Clone, Default)]
+pub struct FeatureGates {
+    gates: BTreeMap<String, bool>,
+}
+
+impl FeatureGates {
+    /// Kubernetes 1.27 defaults: the in-place gate exists but is *off*
+    /// (alpha features default to disabled).
+    pub fn v1_27() -> FeatureGates {
+        let mut g = FeatureGates::default();
+        g.set(IN_PLACE_POD_VERTICAL_SCALING, false);
+        g
+    }
+
+    /// The paper's testbed: the gate explicitly enabled.
+    pub fn paper_testbed() -> FeatureGates {
+        let mut g = FeatureGates::v1_27();
+        g.set(IN_PLACE_POD_VERTICAL_SCALING, true);
+        g
+    }
+
+    pub fn set(&mut self, name: &str, enabled: bool) {
+        self.gates.insert(name.to_string(), enabled);
+    }
+
+    pub fn enabled(&self, name: &str) -> bool {
+        self.gates.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn in_place_scaling(&self) -> bool {
+        self.enabled(IN_PLACE_POD_VERTICAL_SCALING)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_gate_defaults_off() {
+        let g = FeatureGates::v1_27();
+        assert!(!g.in_place_scaling());
+    }
+
+    #[test]
+    fn paper_testbed_enables_gate() {
+        assert!(FeatureGates::paper_testbed().in_place_scaling());
+    }
+
+    #[test]
+    fn unknown_gate_is_off() {
+        let g = FeatureGates::default();
+        assert!(!g.enabled("NoSuchGate"));
+    }
+
+    #[test]
+    fn set_toggles() {
+        let mut g = FeatureGates::v1_27();
+        g.set(IN_PLACE_POD_VERTICAL_SCALING, true);
+        assert!(g.in_place_scaling());
+        g.set(IN_PLACE_POD_VERTICAL_SCALING, false);
+        assert!(!g.in_place_scaling());
+    }
+}

@@ -1,0 +1,11 @@
+//! The Kubernetes API-server substrate: feature gates, the in-place resize
+//! patch endpoint, and a watch/event bus that controllers (autoscaler,
+//! activator, kubelet sync driven by the coordinator) subscribe to.
+
+pub mod gates;
+pub mod patch;
+pub mod watch;
+
+pub use gates::FeatureGates;
+pub use patch::{ApiError, ApiServer, ResizePatch};
+pub use watch::{Event, EventBus, EventKind};

@@ -1,0 +1,282 @@
+//! The API server: admission + the in-place resize patch endpoint.
+//!
+//! A [`ResizePatch`] is the `kubectl patch pod ... --subresource resize`
+//! call the paper's modified queue-proxy dispatches around each request.
+//! Admission validates the gate, the pod's phase, the resize policy and the
+//! requested bounds, flips the pod's `status.resize` to `Proposed`, and
+//! publishes a watch event for the kubelet sync loop (driven by the
+//! coordinator) to act on.
+
+use thiserror::Error;
+
+use crate::apiserver::gates::FeatureGates;
+use crate::apiserver::watch::{EventBus, EventKind};
+use crate::cluster::container::ResizePolicy;
+use crate::cluster::pod::{PodId, PodPhase, ResizeError};
+use crate::cluster::Cluster;
+use crate::simclock::SimTime;
+use crate::util::quantity::MilliCpu;
+
+/// Desired CPU limit change for a pod's main container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResizePatch {
+    pub pod: PodId,
+    pub new_cpu_limit: MilliCpu,
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ApiError {
+    #[error("InPlacePodVerticalScaling feature gate is disabled")]
+    GateDisabled,
+    #[error("no such pod {0:?}")]
+    NoSuchPod(PodId),
+    #[error("pod {0:?} is not running (phase {1:?})")]
+    NotRunning(PodId, PodPhase),
+    #[error("container resize policy requires restart")]
+    RestartRequired,
+    #[error("invalid cpu limit {0:?}")]
+    InvalidLimit(MilliCpu),
+    #[error("resize conflict: {0}")]
+    Conflict(ResizeError),
+}
+
+/// The API server.
+#[derive(Debug, Default)]
+pub struct ApiServer {
+    pub gates: FeatureGates,
+    pub bus: EventBus,
+}
+
+impl ApiServer {
+    pub fn new(gates: FeatureGates) -> ApiServer {
+        ApiServer {
+            gates,
+            bus: EventBus::default(),
+        }
+    }
+
+    /// Admission + acceptance of a resize patch. On success the pod is in
+    /// `Proposed` and a `ResizeProposed` event is on the bus; the caller
+    /// (coordinator) schedules the kubelet sync that applies it.
+    pub fn patch_resize(
+        &mut self,
+        cluster: &mut Cluster,
+        patch: ResizePatch,
+        now: SimTime,
+    ) -> Result<(), ApiError> {
+        if !self.gates.in_place_scaling() {
+            return Err(ApiError::GateDisabled);
+        }
+        if patch.new_cpu_limit == MilliCpu::ZERO {
+            return Err(ApiError::InvalidLimit(patch.new_cpu_limit));
+        }
+        let pod = cluster
+            .pod_mut(patch.pod)
+            .ok_or(ApiError::NoSuchPod(patch.pod))?;
+        if pod.status.phase != PodPhase::Running {
+            return Err(ApiError::NotRunning(patch.pod, pod.status.phase));
+        }
+        if pod.main_container().cpu_resize_policy == ResizePolicy::RestartContainer {
+            return Err(ApiError::RestartRequired);
+        }
+        pod.status.begin_resize().map_err(ApiError::Conflict)?;
+        // Desired state lands in the spec immediately (that is what the
+        // patch writes); status catches up when the kubelet applies it.
+        pod.main_container_mut().limits.cpu = patch.new_cpu_limit;
+        self.bus
+            .publish(now, EventKind::ResizeProposed(patch.pod, patch.new_cpu_limit));
+        Ok(())
+    }
+
+    /// Marks a proposal in-progress (kubelet picked it up).
+    pub fn mark_in_progress(
+        &mut self,
+        cluster: &mut Cluster,
+        pod_id: PodId,
+        limit: MilliCpu,
+        now: SimTime,
+    ) -> Result<(), ApiError> {
+        let pod = cluster.pod_mut(pod_id).ok_or(ApiError::NoSuchPod(pod_id))?;
+        pod.status.start_applying().map_err(ApiError::Conflict)?;
+        self.bus.publish(now, EventKind::ResizeInProgress(pod_id, limit));
+        Ok(())
+    }
+
+    /// Completes a resize: cgroup write landed on the node.
+    pub fn mark_done(
+        &mut self,
+        cluster: &mut Cluster,
+        pod_id: PodId,
+        limit: MilliCpu,
+        now: SimTime,
+    ) -> Result<(), ApiError> {
+        let pod = cluster.pod_mut(pod_id).ok_or(ApiError::NoSuchPod(pod_id))?;
+        pod.status.finish_resize(limit).map_err(ApiError::Conflict)?;
+        self.bus.publish(now, EventKind::ResizeDone(pod_id, limit));
+        Ok(())
+    }
+
+    /// Rejects a proposal as infeasible on the node.
+    pub fn mark_infeasible(
+        &mut self,
+        cluster: &mut Cluster,
+        pod_id: PodId,
+        limit: MilliCpu,
+        now: SimTime,
+    ) -> Result<(), ApiError> {
+        let pod = cluster.pod_mut(pod_id).ok_or(ApiError::NoSuchPod(pod_id))?;
+        pod.status.mark_infeasible().map_err(ApiError::Conflict)?;
+        self.bus
+            .publish(now, EventKind::ResizeInfeasible(pod_id, limit));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pod::{PodSpec, ResizeStatus};
+    use crate::util::quantity::{Memory, Resources};
+
+    fn setup() -> (ApiServer, Cluster, PodId) {
+        let mut cluster = Cluster::new();
+        let node = cluster.add_node("n0", Resources::new(MilliCpu(8000), Memory::from_gib(10)));
+        let pod = cluster.create_pod(PodSpec::single(
+            "fn",
+            "img",
+            Resources::new(MilliCpu(100), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(128)),
+        ));
+        cluster.bind(pod, node).unwrap();
+        cluster.pod_mut(pod).unwrap().status.phase = PodPhase::Running;
+        (ApiServer::new(FeatureGates::paper_testbed()), cluster, pod)
+    }
+
+    #[test]
+    fn gate_disabled_rejects_patch() {
+        let (_, mut cluster, pod) = setup();
+        let mut api = ApiServer::new(FeatureGates::v1_27());
+        let err = api
+            .patch_resize(
+                &mut cluster,
+                ResizePatch { pod, new_cpu_limit: MilliCpu(1) },
+                SimTime::ZERO,
+            )
+            .unwrap_err();
+        assert_eq!(err, ApiError::GateDisabled);
+    }
+
+    #[test]
+    fn happy_path_full_cycle() {
+        let (mut api, mut cluster, pod) = setup();
+        api.patch_resize(
+            &mut cluster,
+            ResizePatch { pod, new_cpu_limit: MilliCpu(1) },
+            SimTime::ZERO,
+        )
+        .unwrap();
+        assert_eq!(
+            cluster.pod(pod).unwrap().status.resize,
+            Some(ResizeStatus::Proposed)
+        );
+        // Spec reflects desired state immediately; applied limit lags.
+        assert_eq!(cluster.pod(pod).unwrap().main_container().limits.cpu, MilliCpu(1));
+        assert_eq!(
+            cluster.pod(pod).unwrap().status.applied_cpu_limit,
+            MilliCpu(1000)
+        );
+
+        api.mark_in_progress(&mut cluster, pod, MilliCpu(1), SimTime::from_millis(10))
+            .unwrap();
+        api.mark_done(&mut cluster, pod, MilliCpu(1), SimTime::from_millis(60))
+            .unwrap();
+        let p = cluster.pod(pod).unwrap();
+        assert_eq!(p.status.resize, None);
+        assert_eq!(p.status.applied_cpu_limit, MilliCpu(1));
+
+        // Bus saw the whole lifecycle.
+        let (events, _) = api.bus.poll(crate::apiserver::watch::FRESH_CURSOR);
+        let kinds: Vec<_> = events.iter().map(|e| &e.kind).collect();
+        assert!(matches!(kinds[0], EventKind::ResizeProposed(_, _)));
+        assert!(matches!(kinds[1], EventKind::ResizeInProgress(_, _)));
+        assert!(matches!(kinds[2], EventKind::ResizeDone(_, _)));
+    }
+
+    #[test]
+    fn not_running_pod_rejected() {
+        let (mut api, mut cluster, pod) = setup();
+        cluster.pod_mut(pod).unwrap().status.phase = PodPhase::Creating;
+        let err = api
+            .patch_resize(
+                &mut cluster,
+                ResizePatch { pod, new_cpu_limit: MilliCpu(1) },
+                SimTime::ZERO,
+            )
+            .unwrap_err();
+        assert!(matches!(err, ApiError::NotRunning(_, PodPhase::Creating)));
+    }
+
+    #[test]
+    fn restart_policy_rejected() {
+        let (mut api, mut cluster, pod) = setup();
+        cluster.pod_mut(pod).unwrap().main_container_mut().cpu_resize_policy =
+            ResizePolicy::RestartContainer;
+        let err = api
+            .patch_resize(
+                &mut cluster,
+                ResizePatch { pod, new_cpu_limit: MilliCpu(1) },
+                SimTime::ZERO,
+            )
+            .unwrap_err();
+        assert_eq!(err, ApiError::RestartRequired);
+    }
+
+    #[test]
+    fn zero_limit_invalid() {
+        let (mut api, mut cluster, pod) = setup();
+        let err = api
+            .patch_resize(
+                &mut cluster,
+                ResizePatch { pod, new_cpu_limit: MilliCpu(0) },
+                SimTime::ZERO,
+            )
+            .unwrap_err();
+        assert_eq!(err, ApiError::InvalidLimit(MilliCpu(0)));
+    }
+
+    #[test]
+    fn concurrent_patch_conflicts() {
+        let (mut api, mut cluster, pod) = setup();
+        api.patch_resize(
+            &mut cluster,
+            ResizePatch { pod, new_cpu_limit: MilliCpu(1) },
+            SimTime::ZERO,
+        )
+        .unwrap();
+        let err = api
+            .patch_resize(
+                &mut cluster,
+                ResizePatch { pod, new_cpu_limit: MilliCpu(500) },
+                SimTime::ZERO,
+            )
+            .unwrap_err();
+        assert!(matches!(err, ApiError::Conflict(ResizeError::Busy)));
+    }
+
+    #[test]
+    fn infeasible_marks_status() {
+        let (mut api, mut cluster, pod) = setup();
+        api.patch_resize(
+            &mut cluster,
+            ResizePatch { pod, new_cpu_limit: MilliCpu(6000) },
+            SimTime::ZERO,
+        )
+        .unwrap();
+        api.mark_infeasible(&mut cluster, pod, MilliCpu(6000), SimTime::ZERO)
+            .unwrap();
+        assert_eq!(
+            cluster.pod(pod).unwrap().status.resize,
+            Some(ResizeStatus::Infeasible)
+        );
+    }
+}

@@ -1,0 +1,247 @@
+//! Completely Fair Scheduler arbitration.
+//!
+//! Converts per-container (weight, limit) pairs plus node capacity into
+//! *effective CPU rates* — the quantity that stretches request runtimes in
+//! the simulation. Implements the §2 semantics the paper describes: CPU
+//! requests become proportional shares under contention ("100m vs 50m →
+//! two-thirds / one-third"), while `cpu.max` caps what any container may use
+//! regardless of idle capacity.
+//!
+//! The algorithm is weighted water-filling: repeatedly distribute remaining
+//! capacity proportionally to weights, freeze entities that hit their cap or
+//! their demand, and redistribute the surplus.
+
+use crate::util::quantity::MilliCpu;
+
+/// One runnable entity (container / stressor) from the arbiter's view.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CfsShare {
+    /// `cpu.weight`-style proportional share (from the CPU request).
+    pub weight: u64,
+    /// Bandwidth cap from `cpu.max`; `None` = unlimited.
+    pub limit: Option<MilliCpu>,
+    /// How much CPU the entity would consume if unconstrained.
+    pub demand: MilliCpu,
+}
+
+impl CfsShare {
+    pub fn new(weight: u64, limit: Option<MilliCpu>, demand: MilliCpu) -> CfsShare {
+        CfsShare {
+            weight: weight.max(1),
+            limit,
+            demand,
+        }
+    }
+
+    /// A fully cpu-hungry entity (demand = node capacity).
+    pub fn hungry(weight: u64, limit: Option<MilliCpu>) -> CfsShare {
+        CfsShare::new(weight, limit, MilliCpu(u64::MAX / 2))
+    }
+
+    fn effective_cap(&self) -> f64 {
+        let lim = self.limit.map(|l| l.0).unwrap_or(u64::MAX / 2);
+        lim.min(self.demand.0) as f64
+    }
+}
+
+/// Weighted water-filling CPU arbiter for a single node.
+#[derive(Debug, Clone)]
+pub struct CfsArbiter {
+    capacity: MilliCpu,
+}
+
+impl CfsArbiter {
+    pub fn new(capacity: MilliCpu) -> CfsArbiter {
+        CfsArbiter { capacity }
+    }
+
+    pub fn capacity(&self) -> MilliCpu {
+        self.capacity
+    }
+
+    /// Computes the effective rate (milliCPU) granted to each entity.
+    ///
+    /// Invariants (property-tested in `rust/tests/prop_invariants.rs`):
+    /// * rate_i ≤ min(limit_i, demand_i)
+    /// * Σ rate_i ≤ capacity
+    /// * work-conserving: if Σ min(limit,demand) ≥ capacity then
+    ///   Σ rate_i == capacity (up to rounding)
+    /// * under pure contention rates are proportional to weights.
+    pub fn allocate(&self, entities: &[CfsShare]) -> Vec<MilliCpu> {
+        let n = entities.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut rate = vec![0.0f64; n];
+        let mut frozen = vec![false; n];
+        let mut remaining = self.capacity.0 as f64;
+
+        // Water-filling: at most n rounds (≥1 entity freezes per round).
+        for _ in 0..n {
+            if remaining <= 0.5 {
+                break;
+            }
+            let active_weight: f64 = entities
+                .iter()
+                .zip(&frozen)
+                .filter(|(_, &f)| !f)
+                .map(|(e, _)| e.weight as f64)
+                .sum();
+            if active_weight == 0.0 {
+                break;
+            }
+            let mut any_frozen = false;
+            let mut consumed = 0.0;
+            for i in 0..n {
+                if frozen[i] {
+                    continue;
+                }
+                let fair = remaining * entities[i].weight as f64 / active_weight;
+                let cap = entities[i].effective_cap();
+                let head = cap - rate[i];
+                if fair >= head {
+                    // Entity satisfied: freeze at its cap.
+                    consumed += head;
+                    rate[i] = cap;
+                    frozen[i] = true;
+                    any_frozen = true;
+                } else {
+                    rate[i] += fair;
+                    consumed += fair;
+                }
+            }
+            remaining -= consumed;
+            if !any_frozen {
+                break; // all proportional shares fit under caps — done
+            }
+        }
+
+        rate.into_iter().map(|r| MilliCpu(r.round() as u64)).collect()
+    }
+
+    /// Convenience: the rate a single container gets given background load
+    /// expressed as (weight, used) aggregates.
+    pub fn rate_for(
+        &self,
+        target: CfsShare,
+        background: &[CfsShare],
+    ) -> MilliCpu {
+        let mut all = Vec::with_capacity(background.len() + 1);
+        all.push(target);
+        all.extend_from_slice(background);
+        self.allocate(&all)[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(v: u64) -> MilliCpu {
+        MilliCpu(v)
+    }
+
+    #[test]
+    fn paper_example_two_thirds_one_third() {
+        // §2: requests 100m and 50m under full contention → 2/3 vs 1/3.
+        let arb = CfsArbiter::new(m(3000));
+        let rates = arb.allocate(&[
+            CfsShare::hungry(100, None),
+            CfsShare::hungry(50, None),
+        ]);
+        assert_eq!(rates[0], m(2000));
+        assert_eq!(rates[1], m(1000));
+    }
+
+    #[test]
+    fn limits_cap_rates() {
+        let arb = CfsArbiter::new(m(8000));
+        let rates = arb.allocate(&[
+            CfsShare::hungry(100, Some(m(1000))),
+            CfsShare::hungry(100, Some(m(1))),
+        ]);
+        assert_eq!(rates[0], m(1000));
+        assert_eq!(rates[1], m(1));
+    }
+
+    #[test]
+    fn surplus_redistributes_to_uncapped() {
+        let arb = CfsArbiter::new(m(4000));
+        let rates = arb.allocate(&[
+            CfsShare::hungry(100, Some(m(500))), // capped low
+            CfsShare::hungry(100, None),         // picks up the slack
+        ]);
+        assert_eq!(rates[0], m(500));
+        assert_eq!(rates[1], m(3500));
+    }
+
+    #[test]
+    fn demand_limits_allocation() {
+        let arb = CfsArbiter::new(m(4000));
+        let rates = arb.allocate(&[
+            CfsShare::new(100, None, m(300)), // only wants 300m
+            CfsShare::hungry(100, None),
+        ]);
+        assert_eq!(rates[0], m(300));
+        assert_eq!(rates[1], m(3700));
+    }
+
+    #[test]
+    fn idle_node_grants_full_demand() {
+        let arb = CfsArbiter::new(m(8000));
+        let rates = arb.allocate(&[CfsShare::new(100, Some(m(1000)), m(1000))]);
+        assert_eq!(rates[0], m(1000));
+    }
+
+    #[test]
+    fn work_conserving_under_contention() {
+        let arb = CfsArbiter::new(m(8000));
+        let rates = arb.allocate(&[
+            CfsShare::hungry(100, None),
+            CfsShare::hungry(200, None),
+            CfsShare::hungry(300, None),
+        ]);
+        let total: u64 = rates.iter().map(|r| r.0).sum();
+        assert!((total as i64 - 8000).abs() <= 2, "total={total}");
+        // proportional to weights
+        assert!(rates[2] > rates[1] && rates[1] > rates[0]);
+    }
+
+    #[test]
+    fn empty_and_zero_cases() {
+        let arb = CfsArbiter::new(m(1000));
+        assert!(arb.allocate(&[]).is_empty());
+        let rates = arb.allocate(&[CfsShare::new(100, Some(m(0)), m(1000))]);
+        assert_eq!(rates[0], m(0));
+    }
+
+    #[test]
+    fn rate_for_with_background() {
+        let arb = CfsArbiter::new(m(8000));
+        // Container limited to 1000m, stressor eating everything else.
+        let r = arb.rate_for(
+            CfsShare::hungry(100, Some(m(1000))),
+            &[CfsShare::hungry(100, None)],
+        );
+        // Fair share is 4000m > cap → container still gets its full 1000m.
+        assert_eq!(r, m(1000));
+
+        // Parked at 1m against a stressor: gets only 1m.
+        let r = arb.rate_for(
+            CfsShare::hungry(100, Some(m(1))),
+            &[CfsShare::hungry(100, None)],
+        );
+        assert_eq!(r, m(1));
+    }
+
+    #[test]
+    fn weights_respected_under_caps_mix() {
+        let arb = CfsArbiter::new(m(2000));
+        let rates = arb.allocate(&[
+            CfsShare::hungry(300, None),
+            CfsShare::hungry(100, Some(m(100))),
+        ]);
+        assert_eq!(rates[1], m(100));
+        assert_eq!(rates[0], m(1900));
+    }
+}

@@ -1,0 +1,373 @@
+//! A cgroups-v2 hierarchy with the `cpu` controller files the paper's
+//! experiment observes: `cpu.max` (bandwidth limit) and `cpu.weight`.
+//!
+//! The §4.1 experiment measures "from the time the patch request was
+//! dispatched to the point when specified changes were detected within the
+//! `cpu.max` file" — so this model keeps a per-file *generation* counter that
+//! watchers (the in-container observer, the CFS arbiter) use to detect
+//! changes, and records the virtual time of the last write.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use crate::simclock::SimTime;
+use crate::util::quantity::MilliCpu;
+
+/// Identifies a cgroup within a [`CgroupFs`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CgroupId(pub u32);
+
+/// cgroups-v2 `cpu.max`: `$MAX $PERIOD` or `max $PERIOD`.
+///
+/// Kubernetes translates a CPU *limit* of `m` milliCPU into
+/// `quota = m * period / 1000` microseconds per period.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuMax {
+    /// Quota in microseconds per period; `None` = `max` (unlimited).
+    pub quota_us: Option<u64>,
+    /// Period in microseconds (Kubernetes default: 100ms).
+    pub period_us: u64,
+}
+
+pub const DEFAULT_PERIOD_US: u64 = 100_000;
+
+impl CpuMax {
+    pub fn unlimited() -> CpuMax {
+        CpuMax {
+            quota_us: None,
+            period_us: DEFAULT_PERIOD_US,
+        }
+    }
+
+    /// Limit expressed as milliCPU, the k8s convention.
+    pub fn from_millicpu(m: MilliCpu) -> CpuMax {
+        CpuMax {
+            quota_us: Some(m.0 * DEFAULT_PERIOD_US / 1000),
+            period_us: DEFAULT_PERIOD_US,
+        }
+    }
+
+    /// Effective limit in milliCPU (`None` → unlimited).
+    pub fn as_millicpu(&self) -> Option<MilliCpu> {
+        self.quota_us
+            .map(|q| MilliCpu(q * 1000 / self.period_us))
+    }
+
+    /// Renders the file content, e.g. `"100000 100000"` or `"max 100000"`.
+    pub fn file_content(&self) -> String {
+        match self.quota_us {
+            Some(q) => format!("{q} {}", self.period_us),
+            None => format!("max {}", self.period_us),
+        }
+    }
+
+    /// Parses file content (the reverse of [`CpuMax::file_content`]).
+    pub fn parse(s: &str) -> Result<CpuMax, CgroupError> {
+        let mut it = s.split_whitespace();
+        let quota = it.next().ok_or(CgroupError::BadCpuMax(s.to_string()))?;
+        let period = it
+            .next()
+            .unwrap_or("100000")
+            .parse::<u64>()
+            .map_err(|_| CgroupError::BadCpuMax(s.to_string()))?;
+        let quota_us = if quota == "max" {
+            None
+        } else {
+            Some(
+                quota
+                    .parse::<u64>()
+                    .map_err(|_| CgroupError::BadCpuMax(s.to_string()))?,
+            )
+        };
+        if period == 0 {
+            return Err(CgroupError::BadCpuMax(s.to_string()));
+        }
+        Ok(CpuMax { quota_us, period_us: period })
+    }
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum CgroupError {
+    #[error("no such cgroup: {0:?}")]
+    NotFound(CgroupId),
+    #[error("no such cgroup path: {0}")]
+    PathNotFound(String),
+    #[error("cgroup has children: {0:?}")]
+    HasChildren(CgroupId),
+    #[error("invalid cpu.max content: {0}")]
+    BadCpuMax(String),
+    #[error("invalid cpu.weight: {0}")]
+    BadWeight(u64),
+}
+
+/// One cgroup node.
+#[derive(Debug, Clone)]
+pub struct Cgroup {
+    pub id: CgroupId,
+    pub parent: Option<CgroupId>,
+    pub name: String,
+    pub cpu_max: CpuMax,
+    /// cgroups-v2 `cpu.weight` (1..=10000, default 100). Kubernetes derives
+    /// it from the CPU *request*.
+    pub weight: u64,
+    /// Bumped on every `cpu.max` write; watchers compare generations.
+    pub generation: u64,
+    /// Virtual time of the last `cpu.max` write.
+    pub last_write: SimTime,
+    alive: bool,
+}
+
+/// The cgroup filesystem for one node.
+#[derive(Debug, Default)]
+pub struct CgroupFs {
+    groups: Vec<Cgroup>,
+    by_path: HashMap<String, CgroupId>,
+}
+
+impl CgroupFs {
+    pub fn new() -> CgroupFs {
+        let mut fs = CgroupFs {
+            groups: Vec::new(),
+            by_path: HashMap::new(),
+        };
+        // The root cgroup always exists.
+        fs.create_internal(None, "");
+        fs
+    }
+
+    pub fn root(&self) -> CgroupId {
+        CgroupId(0)
+    }
+
+    fn create_internal(&mut self, parent: Option<CgroupId>, name: &str) -> CgroupId {
+        let id = CgroupId(self.groups.len() as u32);
+        let path = match parent {
+            Some(p) => format!("{}/{}", self.path_of(p), name),
+            None => String::new(),
+        };
+        self.groups.push(Cgroup {
+            id,
+            parent,
+            name: name.to_string(),
+            cpu_max: CpuMax::unlimited(),
+            weight: 100,
+            generation: 0,
+            last_write: SimTime::ZERO,
+            alive: true,
+        });
+        self.by_path.insert(path, id);
+        id
+    }
+
+    /// Creates a child cgroup (mkdir).
+    pub fn create(&mut self, parent: CgroupId, name: &str) -> Result<CgroupId, CgroupError> {
+        self.get(parent)?;
+        Ok(self.create_internal(Some(parent), name))
+    }
+
+    /// Removes a leaf cgroup (rmdir).
+    pub fn remove(&mut self, id: CgroupId) -> Result<(), CgroupError> {
+        self.get(id)?;
+        if self
+            .groups
+            .iter()
+            .any(|g| g.alive && g.parent == Some(id))
+        {
+            return Err(CgroupError::HasChildren(id));
+        }
+        let path = self.path_of(id);
+        self.by_path.remove(&path);
+        self.groups[id.0 as usize].alive = false;
+        Ok(())
+    }
+
+    pub fn get(&self, id: CgroupId) -> Result<&Cgroup, CgroupError> {
+        self.groups
+            .get(id.0 as usize)
+            .filter(|g| g.alive)
+            .ok_or(CgroupError::NotFound(id))
+    }
+
+    pub fn lookup(&self, path: &str) -> Result<CgroupId, CgroupError> {
+        self.by_path
+            .get(path)
+            .copied()
+            .ok_or_else(|| CgroupError::PathNotFound(path.to_string()))
+    }
+
+    pub fn path_of(&self, id: CgroupId) -> String {
+        let g = &self.groups[id.0 as usize];
+        match g.parent {
+            Some(p) => format!("{}/{}", self.path_of(p), g.name),
+            None => String::new(),
+        }
+    }
+
+    /// Writes `cpu.max` — the operation whose end-to-end latency the paper
+    /// measures. `now` stamps the change for watchers.
+    pub fn write_cpu_max(
+        &mut self,
+        id: CgroupId,
+        value: CpuMax,
+        now: SimTime,
+    ) -> Result<(), CgroupError> {
+        self.get(id)?;
+        let g = &mut self.groups[id.0 as usize];
+        g.cpu_max = value;
+        g.generation += 1;
+        g.last_write = now;
+        Ok(())
+    }
+
+    /// Writes `cpu.weight` (derived from the CPU request).
+    pub fn write_weight(&mut self, id: CgroupId, weight: u64) -> Result<(), CgroupError> {
+        if !(1..=10_000).contains(&weight) {
+            return Err(CgroupError::BadWeight(weight));
+        }
+        self.get(id)?;
+        self.groups[id.0 as usize].weight = weight;
+        Ok(())
+    }
+
+    /// Reads the current `cpu.max` content as the in-container watcher would.
+    pub fn read_cpu_max(&self, id: CgroupId) -> Result<String, CgroupError> {
+        Ok(self.get(id)?.cpu_max.file_content())
+    }
+
+    /// Effective CPU limit of a cgroup: the minimum along its ancestor chain
+    /// (cgroups-v2 semantics: a child can never exceed its parent).
+    pub fn effective_limit(&self, id: CgroupId) -> Result<Option<MilliCpu>, CgroupError> {
+        let mut cur = Some(id);
+        let mut limit: Option<MilliCpu> = None;
+        while let Some(c) = cur {
+            let g = self.get(c)?;
+            if let Some(m) = g.cpu_max.as_millicpu() {
+                limit = Some(match limit {
+                    Some(l) => l.min(m),
+                    None => m,
+                });
+            }
+            cur = g.parent;
+        }
+        Ok(limit)
+    }
+
+    /// All live descendants of `id` (for accounting / arbiter scans).
+    pub fn descendants(&self, id: CgroupId) -> Vec<CgroupId> {
+        let mut out = Vec::new();
+        let mut stack = vec![id];
+        while let Some(top) = stack.pop() {
+            for g in &self.groups {
+                if g.alive && g.parent == Some(top) {
+                    stack.push(g.id);
+                    out.push(g.id);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_max_millicpu_round_trip() {
+        let m = CpuMax::from_millicpu(MilliCpu(100));
+        assert_eq!(m.quota_us, Some(10_000));
+        assert_eq!(m.as_millicpu(), Some(MilliCpu(100)));
+        assert_eq!(m.file_content(), "10000 100000");
+        assert_eq!(CpuMax::parse("10000 100000").unwrap(), m);
+    }
+
+    #[test]
+    fn cpu_max_unlimited() {
+        let m = CpuMax::unlimited();
+        assert_eq!(m.as_millicpu(), None);
+        assert_eq!(m.file_content(), "max 100000");
+        assert_eq!(CpuMax::parse("max 100000").unwrap(), m);
+    }
+
+    #[test]
+    fn cpu_max_parse_errors() {
+        assert!(CpuMax::parse("").is_err());
+        assert!(CpuMax::parse("abc 100000").is_err());
+        assert!(CpuMax::parse("1000 xyz").is_err());
+        assert!(CpuMax::parse("1000 0").is_err());
+    }
+
+    #[test]
+    fn hierarchy_paths() {
+        let mut fs = CgroupFs::new();
+        let kubepods = fs.create(fs.root(), "kubepods").unwrap();
+        let pod = fs.create(kubepods, "pod-abc").unwrap();
+        let ctr = fs.create(pod, "ctr-1").unwrap();
+        assert_eq!(fs.path_of(ctr), "/kubepods/pod-abc/ctr-1");
+        assert_eq!(fs.lookup("/kubepods/pod-abc/ctr-1").unwrap(), ctr);
+        assert!(fs.lookup("/nope").is_err());
+    }
+
+    #[test]
+    fn write_bumps_generation_and_time() {
+        let mut fs = CgroupFs::new();
+        let g = fs.create(fs.root(), "pod").unwrap();
+        assert_eq!(fs.get(g).unwrap().generation, 0);
+        fs.write_cpu_max(g, CpuMax::from_millicpu(MilliCpu(1000)), SimTime::from_millis(7))
+            .unwrap();
+        let c = fs.get(g).unwrap();
+        assert_eq!(c.generation, 1);
+        assert_eq!(c.last_write, SimTime::from_millis(7));
+        assert_eq!(fs.read_cpu_max(g).unwrap(), "100000 100000");
+    }
+
+    #[test]
+    fn effective_limit_takes_ancestor_min() {
+        let mut fs = CgroupFs::new();
+        let pod = fs.create(fs.root(), "pod").unwrap();
+        let ctr = fs.create(pod, "ctr").unwrap();
+        fs.write_cpu_max(pod, CpuMax::from_millicpu(MilliCpu(500)), SimTime::ZERO)
+            .unwrap();
+        fs.write_cpu_max(ctr, CpuMax::from_millicpu(MilliCpu(2000)), SimTime::ZERO)
+            .unwrap();
+        assert_eq!(fs.effective_limit(ctr).unwrap(), Some(MilliCpu(500)));
+        // Unlimited child under limited parent.
+        fs.write_cpu_max(ctr, CpuMax::unlimited(), SimTime::ZERO).unwrap();
+        assert_eq!(fs.effective_limit(ctr).unwrap(), Some(MilliCpu(500)));
+    }
+
+    #[test]
+    fn remove_rules() {
+        let mut fs = CgroupFs::new();
+        let pod = fs.create(fs.root(), "pod").unwrap();
+        let ctr = fs.create(pod, "ctr").unwrap();
+        assert_eq!(fs.remove(pod), Err(CgroupError::HasChildren(pod)));
+        fs.remove(ctr).unwrap();
+        fs.remove(pod).unwrap();
+        assert!(fs.get(pod).is_err());
+        assert!(fs.lookup("/pod").is_err());
+    }
+
+    #[test]
+    fn weight_validation() {
+        let mut fs = CgroupFs::new();
+        let g = fs.create(fs.root(), "x").unwrap();
+        assert!(fs.write_weight(g, 0).is_err());
+        assert!(fs.write_weight(g, 10_001).is_err());
+        fs.write_weight(g, 79).unwrap();
+        assert_eq!(fs.get(g).unwrap().weight, 79);
+    }
+
+    #[test]
+    fn descendants_enumerates_subtree() {
+        let mut fs = CgroupFs::new();
+        let a = fs.create(fs.root(), "a").unwrap();
+        let b = fs.create(a, "b").unwrap();
+        let c = fs.create(a, "c").unwrap();
+        let d = fs.create(b, "d").unwrap();
+        let mut ds = fs.descendants(a);
+        ds.sort();
+        assert_eq!(ds, vec![b, c, d]);
+    }
+}

@@ -1,0 +1,23 @@
+//! cgroups-v2 / CFS substrate.
+//!
+//! The paper's mechanism is a write to a pod cgroup's `cpu.max`; its §4.1
+//! experiments measure how long that write takes to land under different
+//! step sizes, directions and node load. This module models:
+//!
+//! * the cgroup hierarchy with `cpu.max` bandwidth limits ([`hierarchy`]),
+//! * CFS bandwidth + shares arbitration that converts allocations into
+//!   effective CPU rates ([`cfs`]),
+//! * the **resize-latency model** calibrated against the paper's Figures
+//!   2–4 ([`latency`]),
+//! * stress-ng-like CPU / I/O stressors used by the §4.1 experiments
+//!   ([`stress`]).
+
+pub mod cfs;
+pub mod hierarchy;
+pub mod latency;
+pub mod stress;
+
+pub use cfs::{CfsArbiter, CfsShare};
+pub use hierarchy::{CgroupFs, CgroupId, CpuMax};
+pub use latency::{LatencyModel, LatencyParams, NodeLoad, ResizeKind};
+pub use stress::{StressKind, Stressor};

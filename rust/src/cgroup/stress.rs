@@ -1,0 +1,122 @@
+//! stress-ng-style load generators for the §4.1 experiments.
+//!
+//! A [`Stressor`] occupies node CPU (or generates I/O wait) for the duration
+//! it is attached; the scaling-overhead experiment attaches one to reproduce
+//! the paper's Idle / Stress-CPU / Stress-I/O conditions, and the CFS
+//! arbiter sees it as a hungry background entity.
+
+use crate::cgroup::cfs::CfsShare;
+use crate::cgroup::latency::NodeLoad;
+use crate::util::quantity::MilliCpu;
+
+/// Which stress-ng stressor class to emulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StressKind {
+    /// `stress-ng --cpu N`: spin loops saturating N workers.
+    Cpu,
+    /// `stress-ng --io N`: sync/IO-wait heavy workers with little CPU.
+    Io,
+}
+
+/// An active stressor instance.
+#[derive(Debug, Clone)]
+pub struct Stressor {
+    pub kind: StressKind,
+    /// Worker count (stress-ng `N`).
+    pub workers: u32,
+    /// Optional cgroup CPU cap applied to the stressor itself.
+    pub limit: Option<MilliCpu>,
+}
+
+impl Stressor {
+    /// CPU stressor sized to saturate a node with `cores` cores.
+    pub fn cpu_saturating(cores: u32) -> Stressor {
+        Stressor {
+            kind: StressKind::Cpu,
+            workers: cores,
+            limit: None,
+        }
+    }
+
+    pub fn io(workers: u32) -> Stressor {
+        Stressor {
+            kind: StressKind::Io,
+            workers,
+            limit: None,
+        }
+    }
+
+    /// Demand this stressor places on node CPU.
+    pub fn cpu_demand(&self) -> MilliCpu {
+        match self.kind {
+            StressKind::Cpu => MilliCpu(self.workers as u64 * 1000),
+            // I/O workers mostly sleep in D-state; ~8% of a core each.
+            StressKind::Io => MilliCpu(self.workers as u64 * 80),
+        }
+    }
+
+    /// The CFS view of this stressor.
+    pub fn as_cfs_share(&self) -> CfsShare {
+        CfsShare::new(100, self.limit, self.cpu_demand())
+    }
+
+    /// The resize-latency model's load descriptor for a node with `cores`
+    /// cores running this stressor set.
+    pub fn node_load(stressors: &[Stressor], cores: u32) -> NodeLoad {
+        let cap = (cores as f64) * 1000.0;
+        let mut cpu = 0.0;
+        let mut io = false;
+        for s in stressors {
+            cpu += s.cpu_demand().0 as f64;
+            io |= s.kind == StressKind::Io;
+        }
+        NodeLoad {
+            cpu_utilization: (cpu / cap).min(1.0),
+            io_stress: io,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_stressor_saturates() {
+        let s = Stressor::cpu_saturating(8);
+        assert_eq!(s.cpu_demand(), MilliCpu(8000));
+        let load = Stressor::node_load(&[s], 8);
+        assert_eq!(load.cpu_utilization, 1.0);
+        assert!(!load.io_stress);
+    }
+
+    #[test]
+    fn io_stressor_light_on_cpu() {
+        let s = Stressor::io(4);
+        assert_eq!(s.cpu_demand(), MilliCpu(320));
+        let load = Stressor::node_load(&[s], 8);
+        assert!(load.cpu_utilization < 0.1);
+        assert!(load.io_stress);
+    }
+
+    #[test]
+    fn idle_node_load() {
+        let load = Stressor::node_load(&[], 8);
+        assert_eq!(load, NodeLoad::IDLE);
+    }
+
+    #[test]
+    fn mixed_stressors_combine() {
+        let load = Stressor::node_load(&[Stressor::cpu_saturating(4), Stressor::io(2)], 8);
+        assert!(load.cpu_utilization > 0.5);
+        assert!(load.io_stress);
+    }
+
+    #[test]
+    fn cfs_share_is_hungry_for_cpu_kind() {
+        let s = Stressor::cpu_saturating(2);
+        let share = s.as_cfs_share();
+        assert_eq!(share.demand, MilliCpu(2000));
+        assert_eq!(share.limit, None);
+    }
+}

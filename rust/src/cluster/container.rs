@@ -1,0 +1,95 @@
+//! Container specs, including the k8s 1.27 `resizePolicy` field that the
+//! in-place scaling feature introduced.
+
+use crate::util::quantity::Resources;
+
+/// Per-resource resize policy (k8s 1.27 `ContainerResizePolicy`).
+///
+/// The paper depends on `NotRequired` for CPU: resizing must not restart the
+/// container — that is the whole point of in-place scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResizePolicy {
+    /// Apply the new limit in place, no restart (the feature's raison d'être).
+    #[default]
+    NotRequired,
+    /// Container must restart for the change to apply (pre-1.27 behaviour,
+    /// and what the VPA did before in-place support).
+    RestartContainer,
+}
+
+/// Pod-level restart policy (subset used here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RestartPolicy {
+    #[default]
+    Always,
+    Never,
+}
+
+/// A container spec: image + resources + resize policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainerSpec {
+    pub name: String,
+    pub image: String,
+    /// Scheduling requests (CPU request → `cpu.weight`).
+    pub requests: Resources,
+    /// Limits (CPU limit → `cpu.max`).
+    pub limits: Resources,
+    pub cpu_resize_policy: ResizePolicy,
+}
+
+impl ContainerSpec {
+    pub fn new(name: &str, image: &str, requests: Resources, limits: Resources) -> ContainerSpec {
+        ContainerSpec {
+            name: name.to_string(),
+            image: image.to_string(),
+            requests,
+            limits,
+            cpu_resize_policy: ResizePolicy::NotRequired,
+        }
+    }
+
+    pub fn with_resize_policy(mut self, p: ResizePolicy) -> ContainerSpec {
+        self.cpu_resize_policy = p;
+        self
+    }
+
+    /// cgroups-v2 `cpu.weight` derived from the CPU request, following the
+    /// kubelet's `sharesToWeight` conversion:
+    /// shares = milliCPU*1024/1000, weight = 1 + (shares-2)*9999/262142.
+    pub fn cpu_weight(&self) -> u64 {
+        let shares = (self.requests.cpu.0 * 1024 / 1000).clamp(2, 262_144);
+        1 + (shares - 2) * 9999 / 262_142
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quantity::{Memory, MilliCpu};
+
+    fn spec(request_m: u64) -> ContainerSpec {
+        ContainerSpec::new(
+            "c",
+            "img",
+            Resources::new(MilliCpu(request_m), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(128)),
+        )
+    }
+
+    #[test]
+    fn default_resize_policy_is_not_required() {
+        assert_eq!(spec(100).cpu_resize_policy, ResizePolicy::NotRequired);
+        let r = spec(100).with_resize_policy(ResizePolicy::RestartContainer);
+        assert_eq!(r.cpu_resize_policy, ResizePolicy::RestartContainer);
+    }
+
+    #[test]
+    fn cpu_weight_follows_kubelet_conversion() {
+        // 1000m → shares 1024 → weight 1 + 1022*9999/262142 = 39.
+        assert_eq!(spec(1000).cpu_weight(), 39);
+        // Tiny request clamps at shares=2 → weight 1.
+        assert_eq!(spec(1).cpu_weight(), 1);
+        // Weight grows monotonically with the request.
+        assert!(spec(4000).cpu_weight() > spec(1000).cpu_weight());
+    }
+}

@@ -1,0 +1,159 @@
+//! Deployments: the §2 observation the paper builds on —
+//!
+//! > "Kubernetes allocates pods for deployment with uniform computing
+//! >  resources, meaning that instances under the same deployment receive
+//! >  identical resource allocations, irrespective of varying external
+//! >  factors such as input size."
+//!
+//! A [`Deployment`] is a replica-count controller over a pod template with
+//! *uniform* resources; [`Deployment::reconcile`] computes the create /
+//! delete actions to converge the observed replica set — the level-based
+//! loop a ReplicaSet controller runs. In-place resize is exactly the escape
+//! hatch from this uniformity: per-pod limits may diverge from the template
+//! at runtime without recreating pods.
+
+use crate::cluster::pod::{PodId, PodSpec};
+
+/// Desired state: template + replicas.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub name: String,
+    pub template: PodSpec,
+    pub replicas: u32,
+    /// Pods currently owned by this deployment.
+    owned: Vec<PodId>,
+}
+
+/// Actions the controller wants executed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Create one pod from the template.
+    Create,
+    /// Delete this owned pod (scale-in picks the newest first, matching the
+    /// ReplicaSet controller's preference for youngest pods).
+    Delete(PodId),
+}
+
+impl Deployment {
+    pub fn new(name: &str, template: PodSpec, replicas: u32) -> Deployment {
+        Deployment {
+            name: name.to_string(),
+            template,
+            replicas,
+            owned: Vec::new(),
+        }
+    }
+
+    pub fn owned(&self) -> &[PodId] {
+        &self.owned
+    }
+
+    /// Records a pod created on this deployment's behalf.
+    pub fn adopt(&mut self, pod: PodId) {
+        if !self.owned.contains(&pod) {
+            self.owned.push(pod);
+        }
+    }
+
+    /// Forgets a pod (deleted / failed).
+    pub fn release(&mut self, pod: PodId) {
+        self.owned.retain(|p| *p != pod);
+    }
+
+    /// Updates the desired replica count (HPA-style horizontal scaling).
+    pub fn scale(&mut self, replicas: u32) {
+        self.replicas = replicas;
+    }
+
+    /// Level-based reconcile: returns the actions to converge |owned| to
+    /// `replicas`. Idempotent — applying the actions and reconciling again
+    /// yields nothing.
+    pub fn reconcile(&self) -> Vec<Action> {
+        let have = self.owned.len() as u32;
+        if have < self.replicas {
+            (0..self.replicas - have).map(|_| Action::Create).collect()
+        } else {
+            // Newest-first scale-in.
+            self.owned
+                .iter()
+                .rev()
+                .take((have - self.replicas) as usize)
+                .map(|p| Action::Delete(*p))
+                .collect()
+        }
+    }
+
+    /// §2's uniformity property: every owned pod was stamped from the same
+    /// template, so their *spec* resources are identical by construction.
+    /// (Runtime in-place resizes can still diverge `status.applied_*` —
+    /// that is the paper's point.)
+    pub fn template_cpu_m(&self) -> u64 {
+        self.template.total_limits().cpu.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quantity::{Memory, MilliCpu, Resources};
+
+    fn template() -> PodSpec {
+        PodSpec::single(
+            "fn",
+            "img:v1",
+            Resources::new(MilliCpu(100), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(256)),
+        )
+    }
+
+    #[test]
+    fn scale_out_creates_missing_replicas() {
+        let mut d = Deployment::new("web", template(), 3);
+        assert_eq!(d.reconcile(), vec![Action::Create; 3]);
+        d.adopt(PodId(1));
+        d.adopt(PodId(2));
+        assert_eq!(d.reconcile(), vec![Action::Create]);
+        d.adopt(PodId(3));
+        assert!(d.reconcile().is_empty());
+    }
+
+    #[test]
+    fn scale_in_deletes_newest_first() {
+        let mut d = Deployment::new("web", template(), 3);
+        for i in 1..=3 {
+            d.adopt(PodId(i));
+        }
+        d.scale(1);
+        let actions = d.reconcile();
+        assert_eq!(actions, vec![Action::Delete(PodId(3)), Action::Delete(PodId(2))]);
+        d.release(PodId(3));
+        d.release(PodId(2));
+        assert!(d.reconcile().is_empty());
+        assert_eq!(d.owned(), &[PodId(1)]);
+    }
+
+    #[test]
+    fn adopt_is_idempotent() {
+        let mut d = Deployment::new("web", template(), 1);
+        d.adopt(PodId(5));
+        d.adopt(PodId(5));
+        assert_eq!(d.owned().len(), 1);
+    }
+
+    #[test]
+    fn uniform_resources_by_construction() {
+        let d = Deployment::new("web", template(), 4);
+        assert_eq!(d.template_cpu_m(), 1000);
+        // Every create stamps the same template; there is no per-replica
+        // sizing — the §2 limitation in-place resize works around.
+    }
+
+    #[test]
+    fn scale_to_zero() {
+        let mut d = Deployment::new("web", template(), 2);
+        d.adopt(PodId(1));
+        d.adopt(PodId(2));
+        d.scale(0);
+        assert_eq!(d.reconcile().len(), 2);
+    }
+}

@@ -1,0 +1,193 @@
+//! The Kubernetes cluster substrate: nodes, pods, containers, a bin-packing
+//! scheduler and a kubelet model — everything the paper's `kind` testbed
+//! provided, rebuilt as simulation state.
+//!
+//! The module is engine-agnostic: operations either mutate state or return
+//! *plans* (stage, duration) that the coordinator schedules on the DES
+//! engine. That keeps every piece unit-testable without a running platform.
+
+pub mod container;
+pub mod deployment;
+pub mod kubelet;
+pub mod node;
+pub mod pod;
+pub mod scheduler;
+
+pub use container::{ContainerSpec, ResizePolicy, RestartPolicy};
+pub use deployment::{Action as DeploymentAction, Deployment};
+pub use kubelet::{Kubelet, StartupParams, StartupStage};
+pub use node::{Node, NodeId};
+pub use pod::{Pod, PodId, PodPhase, PodSpec, PodStatus, ResizeStatus};
+pub use scheduler::{ScheduleError, Scheduler, ScoringPolicy};
+
+use std::collections::HashMap;
+
+use crate::util::quantity::Resources;
+
+/// The cluster: node + pod tables with uid allocation.
+#[derive(Debug, Default)]
+pub struct Cluster {
+    nodes: Vec<Node>,
+    pods: HashMap<PodId, Pod>,
+    next_pod_uid: u64,
+}
+
+impl Cluster {
+    pub fn new() -> Cluster {
+        Cluster::default()
+    }
+
+    /// Adds a node; returns its id.
+    pub fn add_node(&mut self, name: &str, capacity: Resources) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node::new(id, name, capacity));
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Creates a pod in `Pending`; the scheduler binds it later.
+    pub fn create_pod(&mut self, spec: PodSpec) -> PodId {
+        let id = PodId(self.next_pod_uid);
+        self.next_pod_uid += 1;
+        self.pods.insert(id, Pod::new(id, spec));
+        id
+    }
+
+    pub fn pod(&self, id: PodId) -> Option<&Pod> {
+        self.pods.get(&id)
+    }
+
+    pub fn pod_mut(&mut self, id: PodId) -> Option<&mut Pod> {
+        self.pods.get_mut(&id)
+    }
+
+    pub fn pods(&self) -> impl Iterator<Item = &Pod> {
+        self.pods.values()
+    }
+
+    /// Binds `pod` to `node`, reserving its requests on the node and
+    /// creating its cgroups. Called by the scheduler.
+    pub fn bind(&mut self, pod_id: PodId, node_id: NodeId) -> Result<(), ScheduleError> {
+        let requests = {
+            let pod = self
+                .pods
+                .get(&pod_id)
+                .ok_or(ScheduleError::NoSuchPod(pod_id))?;
+            if pod.node.is_some() {
+                return Err(ScheduleError::AlreadyBound(pod_id));
+            }
+            pod.spec.total_requests()
+        };
+        let node = &mut self.nodes[node_id.0 as usize];
+        if !requests.fits_in(&node.free()) {
+            return Err(ScheduleError::Unschedulable(pod_id));
+        }
+        node.reserve(requests);
+        let cgroup = node.create_pod_cgroups(pod_id, &self.pods[&pod_id].spec);
+        let pod = self.pods.get_mut(&pod_id).unwrap();
+        pod.node = Some(node_id);
+        pod.cgroup = Some(cgroup);
+        pod.status.phase = PodPhase::Scheduled;
+        Ok(())
+    }
+
+    /// Removes a terminated pod, releasing node resources and cgroups.
+    pub fn delete_pod(&mut self, pod_id: PodId) {
+        if let Some(pod) = self.pods.remove(&pod_id) {
+            if let Some(node_id) = pod.node {
+                let node = &mut self.nodes[node_id.0 as usize];
+                node.release(pod.reserved());
+                node.remove_pod_cgroups(pod_id);
+            }
+        }
+    }
+
+    /// Total CPU currently *reserved* by requests across all nodes — the
+    /// "enhanced resource availability" metric the paper's §3 argues for.
+    pub fn total_reserved(&self) -> Resources {
+        let mut total = Resources::ZERO;
+        for n in &self.nodes {
+            total += n.reserved();
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quantity::{Memory, MilliCpu};
+
+    fn small_pod() -> PodSpec {
+        PodSpec::single(
+            "fn",
+            "reg/fn:latest",
+            Resources::new(MilliCpu(100), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(256)),
+        )
+    }
+
+    #[test]
+    fn bind_reserves_and_creates_cgroups() {
+        let mut c = Cluster::new();
+        let n = c.add_node("n0", Resources::new(MilliCpu(8000), Memory::from_gib(10)));
+        let p = c.create_pod(small_pod());
+        c.bind(p, n).unwrap();
+        assert_eq!(c.pod(p).unwrap().status.phase, PodPhase::Scheduled);
+        assert_eq!(c.node(n).reserved().cpu, MilliCpu(100));
+        assert!(c.pod(p).unwrap().cgroup.is_some());
+    }
+
+    #[test]
+    fn bind_rejects_overcommit() {
+        let mut c = Cluster::new();
+        let n = c.add_node("n0", Resources::new(MilliCpu(150), Memory::from_gib(1)));
+        let p1 = c.create_pod(small_pod());
+        let p2 = c.create_pod(small_pod());
+        c.bind(p1, n).unwrap();
+        assert!(matches!(c.bind(p2, n), Err(ScheduleError::Unschedulable(_))));
+    }
+
+    #[test]
+    fn double_bind_rejected() {
+        let mut c = Cluster::new();
+        let n = c.add_node("n0", Resources::new(MilliCpu(8000), Memory::from_gib(10)));
+        let p = c.create_pod(small_pod());
+        c.bind(p, n).unwrap();
+        assert!(matches!(c.bind(p, n), Err(ScheduleError::AlreadyBound(_))));
+    }
+
+    #[test]
+    fn delete_releases_resources() {
+        let mut c = Cluster::new();
+        let n = c.add_node("n0", Resources::new(MilliCpu(8000), Memory::from_gib(10)));
+        let p = c.create_pod(small_pod());
+        c.bind(p, n).unwrap();
+        c.delete_pod(p);
+        assert_eq!(c.node(n).reserved(), Resources::ZERO);
+        assert!(c.pod(p).is_none());
+    }
+
+    #[test]
+    fn total_reserved_sums_nodes() {
+        let mut c = Cluster::new();
+        let n0 = c.add_node("n0", Resources::new(MilliCpu(8000), Memory::from_gib(10)));
+        let n1 = c.add_node("n1", Resources::new(MilliCpu(8000), Memory::from_gib(10)));
+        let p0 = c.create_pod(small_pod());
+        let p1 = c.create_pod(small_pod());
+        c.bind(p0, n0).unwrap();
+        c.bind(p1, n1).unwrap();
+        assert_eq!(c.total_reserved().cpu, MilliCpu(200));
+    }
+}

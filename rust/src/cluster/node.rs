@@ -1,0 +1,260 @@
+//! Nodes: allocatable accounting, per-node cgroup filesystem, image cache,
+//! and attached stressors (the §4.1 load conditions).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cgroup::{CgroupFs, CgroupId, CpuMax, Stressor};
+use crate::cgroup::latency::NodeLoad;
+use crate::cluster::pod::{PodId, PodSpec};
+use crate::simclock::SimTime;
+use crate::util::quantity::{MilliCpu, Resources};
+
+/// Node index within the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// A worker node.
+#[derive(Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    /// Full capacity (the paper's testbed: 8 cores / 10 GB).
+    capacity: Resources,
+    /// Reserved by pod requests.
+    reserved: Resources,
+    /// Per-node cgroups-v2 filesystem.
+    pub cgfs: CgroupFs,
+    /// kubepods root cgroup.
+    kubepods: CgroupId,
+    /// pod uid → (pod cgroup, container cgroups).
+    pod_cgroups: HashMap<PodId, (CgroupId, Vec<CgroupId>)>,
+    /// Pulled images (cold starts hit the pull path once per image).
+    image_cache: HashSet<String>,
+    /// Attached stress-ng style stressors.
+    pub stressors: Vec<Stressor>,
+}
+
+impl Node {
+    pub fn new(id: NodeId, name: &str, capacity: Resources) -> Node {
+        let mut cgfs = CgroupFs::new();
+        let kubepods = cgfs.create(cgfs.root(), "kubepods").unwrap();
+        Node {
+            id,
+            name: name.to_string(),
+            capacity,
+            reserved: Resources::ZERO,
+            cgfs,
+            kubepods,
+            pod_cgroups: HashMap::new(),
+            image_cache: HashSet::new(),
+            stressors: Vec::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> Resources {
+        self.capacity
+    }
+
+    pub fn reserved(&self) -> Resources {
+        self.reserved
+    }
+
+    pub fn free(&self) -> Resources {
+        self.capacity.saturating_sub(&self.reserved)
+    }
+
+    pub fn cores(&self) -> u32 {
+        (self.capacity.cpu.0 / 1000) as u32
+    }
+
+    pub(crate) fn reserve(&mut self, r: Resources) {
+        self.reserved += r;
+    }
+
+    pub(crate) fn release(&mut self, r: Resources) {
+        self.reserved = self.reserved.saturating_sub(&r);
+    }
+
+    /// Creates `/kubepods/pod-<uid>` + one child per container, wiring
+    /// weights from requests and `cpu.max` from limits. Returns the pod
+    /// cgroup id.
+    pub fn create_pod_cgroups(&mut self, pod: PodId, spec: &PodSpec) -> CgroupId {
+        let pod_cg = self
+            .cgfs
+            .create(self.kubepods, &format!("pod-{}", pod.0))
+            .expect("kubepods exists");
+        // Pod-level cpu.max = sum of container limits (kubelet behaviour).
+        let total_limit = spec.total_limits().cpu;
+        self.cgfs
+            .write_cpu_max(pod_cg, CpuMax::from_millicpu(total_limit), SimTime::ZERO)
+            .unwrap();
+        let mut ctrs = Vec::new();
+        for c in &spec.containers {
+            let cg = self.cgfs.create(pod_cg, &c.name).unwrap();
+            self.cgfs
+                .write_cpu_max(cg, CpuMax::from_millicpu(c.limits.cpu), SimTime::ZERO)
+                .unwrap();
+            self.cgfs.write_weight(cg, c.cpu_weight().max(1)).unwrap();
+            ctrs.push(cg);
+        }
+        self.pod_cgroups.insert(pod, (pod_cg, ctrs));
+        pod_cg
+    }
+
+    pub fn remove_pod_cgroups(&mut self, pod: PodId) {
+        if let Some((pod_cg, ctrs)) = self.pod_cgroups.remove(&pod) {
+            for c in ctrs {
+                let _ = self.cgfs.remove(c);
+            }
+            let _ = self.cgfs.remove(pod_cg);
+        }
+    }
+
+    /// The main-container cgroup of a pod on this node.
+    pub fn container_cgroup(&self, pod: PodId) -> Option<CgroupId> {
+        self.pod_cgroups.get(&pod).and_then(|(_, cs)| cs.first().copied())
+    }
+
+    pub fn pod_cgroup(&self, pod: PodId) -> Option<CgroupId> {
+        self.pod_cgroups.get(&pod).map(|(p, _)| *p)
+    }
+
+    /// Applies a CPU limit resize to both the pod and main-container
+    /// cgroups — the write whose propagation §4.1 measures.
+    pub fn apply_cpu_limit(&mut self, pod: PodId, new_limit: MilliCpu, now: SimTime) -> bool {
+        if let Some((pod_cg, ctrs)) = self.pod_cgroups.get(&pod) {
+            let (pod_cg, ctr) = (*pod_cg, ctrs[0]);
+            self.cgfs
+                .write_cpu_max(pod_cg, CpuMax::from_millicpu(new_limit), now)
+                .unwrap();
+            self.cgfs
+                .write_cpu_max(ctr, CpuMax::from_millicpu(new_limit), now)
+                .unwrap();
+            true
+        } else {
+            false
+        }
+    }
+
+    // -- image cache --------------------------------------------------------
+
+    pub fn image_cached(&self, image: &str) -> bool {
+        self.image_cache.contains(image)
+    }
+
+    pub fn cache_image(&mut self, image: &str) {
+        self.image_cache.insert(image.to_string());
+    }
+
+    // -- load ----------------------------------------------------------------
+
+    pub fn attach_stressor(&mut self, s: Stressor) {
+        self.stressors.push(s);
+    }
+
+    pub fn clear_stressors(&mut self) {
+        self.stressors.clear();
+    }
+
+    /// Load descriptor for the resize-latency model, combining stressors
+    /// with `busy_m` milliCPU of request-serving work currently running.
+    pub fn load_with_busy(&self, busy_m: MilliCpu) -> NodeLoad {
+        let mut load = Stressor::node_load(&self.stressors, self.cores().max(1));
+        let cap = (self.cores().max(1) as f64) * 1000.0;
+        load.cpu_utilization = (load.cpu_utilization + busy_m.0 as f64 / cap).min(1.0);
+        load
+    }
+
+    pub fn load(&self) -> NodeLoad {
+        self.load_with_busy(MilliCpu::ZERO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quantity::Memory;
+
+    fn node() -> Node {
+        Node::new(
+            NodeId(0),
+            "n0",
+            Resources::new(MilliCpu(8000), Memory::from_gib(10)),
+        )
+    }
+
+    fn spec() -> PodSpec {
+        PodSpec::single(
+            "fn",
+            "img:v1",
+            Resources::new(MilliCpu(100), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(128)),
+        )
+    }
+
+    #[test]
+    fn cgroup_tree_wired_from_spec() {
+        let mut n = node();
+        let cg = n.create_pod_cgroups(PodId(7), &spec());
+        assert_eq!(n.cgfs.path_of(cg), "/kubepods/pod-7");
+        let ctr = n.container_cgroup(PodId(7)).unwrap();
+        assert_eq!(n.cgfs.path_of(ctr), "/kubepods/pod-7/fn");
+        assert_eq!(
+            n.cgfs.effective_limit(ctr).unwrap(),
+            Some(MilliCpu(1000))
+        );
+    }
+
+    #[test]
+    fn apply_cpu_limit_updates_both_levels() {
+        let mut n = node();
+        n.create_pod_cgroups(PodId(1), &spec());
+        assert!(n.apply_cpu_limit(PodId(1), MilliCpu(1), SimTime::from_millis(9)));
+        let ctr = n.container_cgroup(PodId(1)).unwrap();
+        assert_eq!(n.cgfs.effective_limit(ctr).unwrap(), Some(MilliCpu(1)));
+        assert_eq!(n.cgfs.get(ctr).unwrap().last_write, SimTime::from_millis(9));
+        assert!(!n.apply_cpu_limit(PodId(99), MilliCpu(1), SimTime::ZERO));
+    }
+
+    #[test]
+    fn remove_pod_cgroups_cleans_up() {
+        let mut n = node();
+        n.create_pod_cgroups(PodId(1), &spec());
+        n.remove_pod_cgroups(PodId(1));
+        assert!(n.container_cgroup(PodId(1)).is_none());
+        assert!(n.cgfs.lookup("/kubepods/pod-1").is_err());
+    }
+
+    #[test]
+    fn reserve_release_accounting() {
+        let mut n = node();
+        n.reserve(Resources::cpu_m(3000));
+        assert_eq!(n.free().cpu, MilliCpu(5000));
+        n.release(Resources::cpu_m(3000));
+        assert_eq!(n.free().cpu, MilliCpu(8000));
+        // Release never underflows.
+        n.release(Resources::cpu_m(999_999));
+        assert_eq!(n.free(), n.capacity());
+    }
+
+    #[test]
+    fn image_cache() {
+        let mut n = node();
+        assert!(!n.image_cached("img:v1"));
+        n.cache_image("img:v1");
+        assert!(n.image_cached("img:v1"));
+    }
+
+    #[test]
+    fn load_combines_stressors_and_busy_work() {
+        let mut n = node();
+        assert_eq!(n.load(), NodeLoad::IDLE);
+        n.attach_stressor(Stressor::cpu_saturating(4));
+        let load = n.load();
+        assert!((load.cpu_utilization - 0.5).abs() < 1e-9);
+        let load = n.load_with_busy(MilliCpu(2000));
+        assert!((load.cpu_utilization - 0.75).abs() < 1e-9);
+        n.clear_stressors();
+        assert_eq!(n.load(), NodeLoad::IDLE);
+    }
+}

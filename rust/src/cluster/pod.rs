@@ -1,0 +1,309 @@
+//! Pods: spec, lifecycle phases, and the in-place resize status machine.
+
+use crate::cgroup::CgroupId;
+use crate::cluster::container::{ContainerSpec, RestartPolicy};
+use crate::cluster::node::NodeId;
+use crate::simclock::SimTime;
+use crate::util::quantity::{MilliCpu, Resources};
+
+/// Cluster-unique pod uid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PodId(pub u64);
+
+/// Pod lifecycle (the subset the experiments traverse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    /// Created, not yet bound to a node.
+    Pending,
+    /// Bound; kubelet has not started containers yet.
+    Scheduled,
+    /// Sandbox/image/container startup pipeline running.
+    Creating,
+    /// Containers up; readiness gate may still be closed.
+    Running,
+    Terminating,
+    Dead,
+}
+
+/// k8s 1.27 `status.resize` — the in-place resize state machine.
+///
+/// Transitions (enforced by [`PodStatus::begin_resize`] /
+/// [`PodStatus::finish_resize`], property-tested in the suite):
+/// `None → Proposed → InProgress → None(done)`, or `Proposed → Infeasible`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResizeStatus {
+    /// Patch accepted by the API server, kubelet not yet acting.
+    Proposed,
+    /// Kubelet is applying the new limits.
+    InProgress,
+    /// Node cannot satisfy the proposal (insufficient allocatable).
+    Infeasible,
+}
+
+/// A pod spec: containers + restart policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PodSpec {
+    pub containers: Vec<ContainerSpec>,
+    pub restart_policy: RestartPolicy,
+}
+
+impl PodSpec {
+    /// Single-container pod (every function pod in the experiments, plus a
+    /// queue-proxy sidecar is modelled at the knative layer).
+    pub fn single(name: &str, image: &str, requests: Resources, limits: Resources) -> PodSpec {
+        PodSpec {
+            containers: vec![ContainerSpec::new(name, image, requests, limits)],
+            restart_policy: RestartPolicy::Always,
+        }
+    }
+
+    pub fn total_requests(&self) -> Resources {
+        let mut total = Resources::ZERO;
+        for c in &self.containers {
+            total += c.requests;
+        }
+        total
+    }
+
+    pub fn total_limits(&self) -> Resources {
+        let mut total = Resources::ZERO;
+        for c in &self.containers {
+            total += c.limits;
+        }
+        total
+    }
+}
+
+/// Mutable pod status.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PodStatus {
+    pub phase: PodPhase,
+    pub ready: bool,
+    pub resize: Option<ResizeStatus>,
+    /// CPU limit currently *in force* in the cgroup (may lag the spec while
+    /// a resize is in flight — exactly the window the paper measures).
+    pub applied_cpu_limit: MilliCpu,
+    /// Virtual time until which the kubelet's per-pod resize mutex is held.
+    /// Back-to-back resizes serialize on this (the in-place policy's
+    /// scale-down → scale-up churn).
+    pub resize_busy_until: SimTime,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ResizeError {
+    #[error("resize already in flight")]
+    Busy,
+    #[error("pod not running")]
+    NotRunning,
+    #[error("no resize in flight")]
+    NotResizing,
+}
+
+impl PodStatus {
+    fn new(initial_cpu_limit: MilliCpu) -> PodStatus {
+        PodStatus {
+            phase: PodPhase::Pending,
+            ready: false,
+            resize: None,
+            applied_cpu_limit: initial_cpu_limit,
+            resize_busy_until: SimTime::ZERO,
+        }
+    }
+
+    /// API server accepted a resize patch.
+    pub fn begin_resize(&mut self) -> Result<(), ResizeError> {
+        if self.phase != PodPhase::Running {
+            return Err(ResizeError::NotRunning);
+        }
+        match self.resize {
+            None | Some(ResizeStatus::Infeasible) => {
+                self.resize = Some(ResizeStatus::Proposed);
+                Ok(())
+            }
+            Some(_) => Err(ResizeError::Busy),
+        }
+    }
+
+    /// Kubelet picked the proposal up.
+    pub fn start_applying(&mut self) -> Result<(), ResizeError> {
+        match self.resize {
+            Some(ResizeStatus::Proposed) => {
+                self.resize = Some(ResizeStatus::InProgress);
+                Ok(())
+            }
+            _ => Err(ResizeError::NotResizing),
+        }
+    }
+
+    /// cgroup write landed; the new limit is in force.
+    pub fn finish_resize(&mut self, new_limit: MilliCpu) -> Result<(), ResizeError> {
+        match self.resize {
+            Some(ResizeStatus::InProgress) => {
+                self.resize = None;
+                self.applied_cpu_limit = new_limit;
+                Ok(())
+            }
+            _ => Err(ResizeError::NotResizing),
+        }
+    }
+
+    /// Node rejected the proposal.
+    pub fn mark_infeasible(&mut self) -> Result<(), ResizeError> {
+        match self.resize {
+            Some(ResizeStatus::Proposed) => {
+                self.resize = Some(ResizeStatus::Infeasible);
+                Ok(())
+            }
+            _ => Err(ResizeError::NotResizing),
+        }
+    }
+}
+
+/// A pod: spec + status + placement.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: PodId,
+    pub spec: PodSpec,
+    pub status: PodStatus,
+    pub node: Option<NodeId>,
+    /// Pod-level cgroup on the node (container cgroups are children).
+    pub cgroup: Option<CgroupId>,
+    /// Resources reserved on the node at bind time (requests). In-place
+    /// resize of *limits* does not change this — that asymmetry is the
+    /// "enhanced resource availability" the paper claims.
+    reserved: Resources,
+    pub created_at: SimTime,
+}
+
+impl Pod {
+    pub fn new(id: PodId, spec: PodSpec) -> Pod {
+        let limit = spec
+            .containers
+            .first()
+            .map(|c| c.limits.cpu)
+            .unwrap_or(MilliCpu::ZERO);
+        let reserved = spec.total_requests();
+        Pod {
+            id,
+            spec,
+            status: PodStatus::new(limit),
+            node: None,
+            cgroup: None,
+            reserved,
+            created_at: SimTime::ZERO,
+        }
+    }
+
+    pub fn reserved(&self) -> Resources {
+        self.reserved
+    }
+
+    /// The pod's primary (function) container.
+    pub fn main_container(&self) -> &ContainerSpec {
+        &self.spec.containers[0]
+    }
+
+    pub fn main_container_mut(&mut self) -> &mut ContainerSpec {
+        &mut self.spec.containers[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quantity::Memory;
+
+    fn pod() -> Pod {
+        let spec = PodSpec::single(
+            "fn",
+            "img",
+            Resources::new(MilliCpu(100), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(128)),
+        );
+        Pod::new(PodId(0), spec)
+    }
+
+    #[test]
+    fn initial_status() {
+        let p = pod();
+        assert_eq!(p.status.phase, PodPhase::Pending);
+        assert_eq!(p.status.applied_cpu_limit, MilliCpu(1000));
+        assert_eq!(p.status.resize, None);
+        assert_eq!(p.reserved().cpu, MilliCpu(100));
+    }
+
+    #[test]
+    fn resize_state_machine_happy_path() {
+        let mut p = pod();
+        p.status.phase = PodPhase::Running;
+        p.status.begin_resize().unwrap();
+        assert_eq!(p.status.resize, Some(ResizeStatus::Proposed));
+        p.status.start_applying().unwrap();
+        assert_eq!(p.status.resize, Some(ResizeStatus::InProgress));
+        p.status.finish_resize(MilliCpu(1)).unwrap();
+        assert_eq!(p.status.resize, None);
+        assert_eq!(p.status.applied_cpu_limit, MilliCpu(1));
+    }
+
+    #[test]
+    fn resize_rejected_when_not_running() {
+        let mut p = pod();
+        assert_eq!(p.status.begin_resize(), Err(ResizeError::NotRunning));
+    }
+
+    #[test]
+    fn concurrent_resize_rejected() {
+        let mut p = pod();
+        p.status.phase = PodPhase::Running;
+        p.status.begin_resize().unwrap();
+        assert_eq!(p.status.begin_resize(), Err(ResizeError::Busy));
+        p.status.start_applying().unwrap();
+        assert_eq!(p.status.begin_resize(), Err(ResizeError::Busy));
+    }
+
+    #[test]
+    fn infeasible_path_allows_retry() {
+        let mut p = pod();
+        p.status.phase = PodPhase::Running;
+        p.status.begin_resize().unwrap();
+        p.status.mark_infeasible().unwrap();
+        assert_eq!(p.status.resize, Some(ResizeStatus::Infeasible));
+        // A new proposal may replace an infeasible one.
+        p.status.begin_resize().unwrap();
+        assert_eq!(p.status.resize, Some(ResizeStatus::Proposed));
+    }
+
+    #[test]
+    fn out_of_order_transitions_rejected() {
+        let mut p = pod();
+        p.status.phase = PodPhase::Running;
+        assert_eq!(p.status.start_applying(), Err(ResizeError::NotResizing));
+        assert_eq!(
+            p.status.finish_resize(MilliCpu(1)),
+            Err(ResizeError::NotResizing)
+        );
+        p.status.begin_resize().unwrap();
+        assert_eq!(
+            p.status.finish_resize(MilliCpu(1)),
+            Err(ResizeError::NotResizing)
+        );
+    }
+
+    #[test]
+    fn spec_totals() {
+        let spec = PodSpec {
+            containers: vec![
+                ContainerSpec::new(
+                    "a",
+                    "img",
+                    Resources::cpu_m(100),
+                    Resources::cpu_m(1000),
+                ),
+                ContainerSpec::new("b", "img", Resources::cpu_m(50), Resources::cpu_m(200)),
+            ],
+            restart_policy: RestartPolicy::Always,
+        };
+        assert_eq!(spec.total_requests().cpu, MilliCpu(150));
+        assert_eq!(spec.total_limits().cpu, MilliCpu(1200));
+    }
+}

@@ -1,0 +1,131 @@
+//! A kube-scheduler-shaped pod scheduler: filter nodes that fit the pod's
+//! requests, score the survivors, bind to the winner.
+
+use thiserror::Error;
+
+use crate::cluster::node::{Node, NodeId};
+use crate::cluster::pod::PodId;
+use crate::util::quantity::Resources;
+
+/// Node scoring policies (kube-scheduler's two classic strategies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScoringPolicy {
+    /// Prefer emptier nodes — spreads load (kube default).
+    #[default]
+    LeastAllocated,
+    /// Prefer fuller nodes — bin-packs, frees whole nodes.
+    MostAllocated,
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ScheduleError {
+    #[error("no node fits pod {0:?}")]
+    Unschedulable(PodId),
+    #[error("pod {0:?} already bound")]
+    AlreadyBound(PodId),
+    #[error("no such pod {0:?}")]
+    NoSuchPod(PodId),
+}
+
+/// The scheduler. Stateless between decisions; holds only the policy.
+#[derive(Debug, Clone, Default)]
+pub struct Scheduler {
+    pub policy: ScoringPolicy,
+}
+
+impl Scheduler {
+    pub fn new(policy: ScoringPolicy) -> Scheduler {
+        Scheduler { policy }
+    }
+
+    /// Picks the best node for `requests`, or None if nothing fits.
+    pub fn pick(&self, nodes: &[Node], requests: Resources) -> Option<NodeId> {
+        let mut best: Option<(NodeId, f64)> = None;
+        for n in nodes {
+            if !requests.fits_in(&n.free()) {
+                continue;
+            }
+            let score = self.score(n, requests);
+            match best {
+                Some((_, s)) if s >= score => {}
+                _ => best = Some((n.id, score)),
+            }
+        }
+        best.map(|(id, _)| id)
+    }
+
+    /// Higher is better. Uses CPU as the dominant axis (the paper's
+    /// experiments are CPU-centric) with memory as a tiebreaker.
+    fn score(&self, node: &Node, requests: Resources) -> f64 {
+        let cap = node.capacity();
+        if cap.cpu.0 == 0 {
+            return 0.0;
+        }
+        let cpu_after = (node.reserved().cpu.0 + requests.cpu.0) as f64 / cap.cpu.0 as f64;
+        let mem_after = if cap.memory.0 == 0 {
+            0.0
+        } else {
+            (node.reserved().memory.0 + requests.memory.0) as f64 / cap.memory.0 as f64
+        };
+        let utilization = 0.75 * cpu_after + 0.25 * mem_after;
+        match self.policy {
+            ScoringPolicy::LeastAllocated => 1.0 - utilization,
+            ScoringPolicy::MostAllocated => utilization,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quantity::{Memory, MilliCpu};
+
+    fn node(id: u32, reserved_m: u64) -> Node {
+        let mut n = Node::new(
+            NodeId(id),
+            "n",
+            Resources::new(MilliCpu(8000), Memory::from_gib(10)),
+        );
+        n.reserve(Resources::cpu_m(reserved_m));
+        n
+    }
+
+    #[test]
+    fn least_allocated_prefers_empty_node() {
+        let s = Scheduler::new(ScoringPolicy::LeastAllocated);
+        let nodes = vec![node(0, 4000), node(1, 1000)];
+        assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn most_allocated_prefers_full_node() {
+        let s = Scheduler::new(ScoringPolicy::MostAllocated);
+        let nodes = vec![node(0, 4000), node(1, 1000)];
+        assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), Some(NodeId(0)));
+    }
+
+    #[test]
+    fn filter_excludes_full_nodes() {
+        let s = Scheduler::default();
+        let nodes = vec![node(0, 7900), node(1, 1000)];
+        // 500m doesn't fit on node 0 (only 100m free).
+        assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn unschedulable_when_nothing_fits() {
+        let s = Scheduler::default();
+        let nodes = vec![node(0, 7900), node(1, 7900)];
+        assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), None);
+    }
+
+    #[test]
+    fn memory_is_a_tiebreaker() {
+        let s = Scheduler::new(ScoringPolicy::LeastAllocated);
+        let mut a = node(0, 1000);
+        a.reserve(Resources::new(MilliCpu(0), Memory::from_gib(8)));
+        let b = node(1, 1000);
+        let nodes = vec![a, b];
+        assert_eq!(s.pick(&nodes, Resources::cpu_m(100)), Some(NodeId(1)));
+    }
+}

@@ -1,0 +1,18 @@
+//! The L3 coordinator: the public API of the platform.
+//!
+//! [`Simulation`] owns the event engine + [`Platform`] world state;
+//! [`Platform::deploy`] installs a service under one of the paper's three
+//! policies and [`Platform::submit`] drives requests through the full
+//! serverless path (ingress → activator/queue-proxy → container under CFS →
+//! response), with the in-place resize hooks on the request path exactly as
+//! §4.2 describes.
+
+pub mod metrics;
+pub mod platform;
+pub mod request;
+pub mod service;
+
+pub use metrics::{CommittedCpuIntegral, Metrics, ServiceMetrics};
+pub use platform::{Eng, Platform, Simulation};
+pub use request::RequestState;
+pub use service::{Service, ServicePod};

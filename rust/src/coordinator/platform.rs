@@ -1,0 +1,1014 @@
+//! The platform: the L3 coordinator that wires cluster, API server, Knative
+//! layer and policies onto the discrete-event engine.
+//!
+//! All transitions run as events; handlers are associated functions taking
+//! `(&mut Platform, &mut Eng)`. The request hot path is:
+//!
+//! ```text
+//! submit → [forward] → arrive → dispatch → (in-place: resize hook ‖ exec)
+//!        → exec under CFS shares → complete → [respond] → metrics
+//!                                     ↘ post-hook: park / idle-timer
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::util::nohash::IdHashMap;
+
+use crate::apiserver::{ApiServer, FeatureGates, ResizePatch};
+use crate::cluster::kubelet::Kubelet;
+use crate::cluster::pod::{PodId, PodPhase, PodSpec};
+use crate::cluster::scheduler::Scheduler;
+use crate::cluster::{Cluster, NodeId};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::RequestState;
+use crate::coordinator::service::{Service, ServicePod};
+use crate::knative::activator::RequestId;
+use crate::policy::{PlatformParams, Policy};
+use crate::simclock::{Engine, SimTime};
+use crate::util::quantity::{Memory, MilliCpu, Resources};
+use crate::util::rng::Rng;
+use crate::workload::exec::Execution;
+use crate::workload::registry::WorkloadProfile;
+
+/// Engine type alias used across the coordinator.
+pub type Eng = Engine<Platform>;
+
+/// The world state driven by the event engine.
+pub struct Platform {
+    pub cluster: Cluster,
+    pub api: ApiServer,
+    pub kubelet: Kubelet,
+    pub scheduler: Scheduler,
+    pub params: PlatformParams,
+    pub services: BTreeMap<String, Service>,
+    requests: IdHashMap<RequestId, RequestState>,
+    next_request: u64,
+    pub rng: Rng,
+    pub metrics: Metrics,
+    /// One-shot continuations fired when a request completes (or fails) —
+    /// how closed-loop virtual users chain their iterations.
+    completion_hooks: IdHashMap<RequestId, Box<dyn FnOnce(&mut Platform, &mut Eng)>>,
+    /// Scratch buffer reused by `recompute_pod` (hot path: one regime change
+    /// per request start/finish/resize; avoids a per-event allocation).
+    scratch_active: Vec<RequestId>,
+}
+
+impl Platform {
+    /// A platform with the paper's testbed: one 8-core / 10 GB node and the
+    /// `InPlacePodVerticalScaling` gate enabled.
+    pub fn paper_testbed(params: PlatformParams) -> Platform {
+        let mut cluster = Cluster::new();
+        cluster.add_node(
+            "kind-worker",
+            Resources::new(MilliCpu(8000), Memory::from_gib(10)),
+        );
+        let rng = Rng::new(params.seed);
+        Platform {
+            cluster,
+            api: ApiServer::new(FeatureGates::paper_testbed()),
+            kubelet: Kubelet::new(params.startup.clone(), params.resize.clone()),
+            scheduler: Scheduler::default(),
+            params,
+            services: BTreeMap::new(),
+            requests: IdHashMap::default(),
+            next_request: 1,
+            rng,
+            metrics: Metrics::default(),
+            completion_hooks: IdHashMap::default(),
+            scratch_active: Vec::with_capacity(64),
+        }
+    }
+
+    // ---------------------------------------------------------------- deploy
+
+    /// Deploys a service; pre-creates `min_scale` pods. Images are
+    /// side-loaded onto every node at deploy time (the paper's `kind load`
+    /// setup), so cold starts pay container start + init, not a registry
+    /// pull.
+    pub fn deploy(&mut self, eng: &mut Eng, svc: Service) {
+        let name = svc.name.clone();
+        let min = svc.cfg.min_scale;
+        let image = svc.profile.image.clone();
+        for i in 0..self.cluster.nodes().len() {
+            self.cluster
+                .node_mut(crate::cluster::NodeId(i as u32))
+                .cache_image(&image);
+        }
+        self.services.insert(name.clone(), svc);
+        for _ in 0..min {
+            Self::start_pod(self, eng, &name, false);
+        }
+    }
+
+    /// Convenience: deploy a paper workload under a policy.
+    pub fn deploy_workload(
+        &mut self,
+        eng: &mut Eng,
+        name: &str,
+        profile: WorkloadProfile,
+        policy: Policy,
+    ) {
+        self.deploy(eng, Service::new(name, profile, policy));
+    }
+
+    // ---------------------------------------------------------------- submit
+
+    /// Submits a request now; returns its id.
+    pub fn submit(&mut self, eng: &mut Eng, service: &str) -> RequestId {
+        let id = RequestId(self.next_request);
+        self.next_request += 1;
+        let req = RequestState::new(id, service, eng.now());
+        self.requests.insert(id, req);
+        let fwd = self.params.proxy.sample_forward(&mut self.rng);
+        eng.schedule_in(fwd, move |w: &mut Platform, eng| {
+            Self::arrive(w, eng, id);
+        });
+        id
+    }
+
+    /// Schedules a submission at an absolute virtual time (load generation).
+    pub fn submit_at(&mut self, eng: &mut Eng, at: SimTime, service: &str) {
+        let service = service.to_string();
+        eng.schedule_at(at, move |w: &mut Platform, eng| {
+            w.submit(eng, &service);
+        });
+    }
+
+    /// Submits a request and registers a one-shot continuation invoked when
+    /// it completes or fails (closed-loop load generation).
+    pub fn submit_with_hook<F>(&mut self, eng: &mut Eng, service: &str, hook: F) -> RequestId
+    where
+        F: FnOnce(&mut Platform, &mut Eng) + 'static,
+    {
+        let id = self.submit(eng, service);
+        self.completion_hooks.insert(id, Box::new(hook));
+        id
+    }
+
+    fn fire_hook(w: &mut Platform, eng: &mut Eng, req: RequestId) {
+        if let Some(hook) = w.completion_hooks.remove(&req) {
+            hook(w, eng);
+        }
+    }
+
+    pub fn request(&self, id: RequestId) -> Option<&RequestState> {
+        self.requests.get(&id)
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.requests.len()
+    }
+
+    // ---------------------------------------------------------------- arrive
+
+    fn arrive(w: &mut Platform, eng: &mut Eng, req: RequestId) {
+        let svc_name = match w.requests.get(&req) {
+            Some(r) => r.service.clone(),
+            None => return,
+        };
+        let Some(svc) = w.services.get_mut(&*svc_name) else {
+            // Unknown service: fail fast.
+            Self::fail_request(w, eng, req);
+            return;
+        };
+
+        if let Some(idx) = svc.pick_pod() {
+            Self::dispatch(w, eng, &svc_name, req, idx);
+        } else {
+            // Buffer at the activator; start a pod if none is coming up.
+            let now = eng.now();
+            if svc.activator.buffer(req, now).is_err() {
+                Self::fail_request(w, eng, req);
+                return;
+            }
+            let needs_pod = svc.live_pods() == 0;
+            if needs_pod {
+                if let Some(r) = w.requests.get_mut(&req) {
+                    r.cold_start = true;
+                }
+                Self::start_pod(w, eng, &svc_name, true);
+            } else {
+                Self::maybe_scale_up(w, eng, &svc_name);
+            }
+        }
+        Self::record_concurrency(w, eng, &svc_name);
+    }
+
+    fn fail_request(w: &mut Platform, eng: &mut Eng, req: RequestId) {
+        if let Some(r) = w.requests.remove(&req) {
+            w.metrics.service(&r.service).failed += 1;
+        }
+        Self::fire_hook(w, eng, req);
+    }
+
+    // -------------------------------------------------------------- dispatch
+
+    /// Admits `req` into pod `idx` of `svc` and (policy-dependent) fires the
+    /// pre-request resize hook before redirecting.
+    fn dispatch(w: &mut Platform, eng: &mut Eng, svc_name: &str, req: RequestId, idx: usize) {
+        let (pod_id, hooks, serving, applied) = {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            let serving = svc.cfg.serving_cpu;
+            let sp = &mut svc.pods[idx];
+            sp.proxy.offer(req);
+            let pod_id = sp.pod;
+            let applied = w
+                .cluster
+                .pod(pod_id)
+                .map(|p| p.status.applied_cpu_limit)
+                .unwrap_or(MilliCpu::ZERO);
+            (pod_id, sp.proxy.inplace_hooks, serving, applied)
+        };
+        if let Some(r) = w.requests.get_mut(&req) {
+            r.pod = Some(pod_id);
+        }
+        // Cancel any pending idle scale-down for this pod.
+        let svc = w.services.get_mut(svc_name).unwrap();
+        if let Some(t) = svc.pods[idx].idle_timer.take() {
+            eng.cancel(t);
+        }
+
+        // A park may be in flight (status shows a resize) or already desired;
+        // a new request must claim the serving allocation either way.
+        let resize_in_flight = w
+            .cluster
+            .pod(pod_id)
+            .map(|p| p.status.resize.is_some())
+            .unwrap_or(false);
+        let park_desired = {
+            let svc = &w.services[svc_name];
+            svc.pod_index(pod_id)
+                .and_then(|i| svc.pods[i].desired_limit)
+                .map(|d| d < serving)
+                .unwrap_or(false)
+        };
+        if hooks && (applied < serving || resize_in_flight || park_desired) {
+            // The paper's pre-hook: dispatch the scale-up patch, then
+            // redirect immediately — the request starts at the parked
+            // allocation and speeds up when the resize lands.
+            if let Some(r) = w.requests.get_mut(&req) {
+                r.scaled_up = true;
+            }
+            w.metrics.service(svc_name).inplace_scale_ups += 1;
+            Self::request_resize(w, eng, svc_name, pod_id, serving);
+        }
+        Self::begin_exec(w, eng, svc_name, req, pod_id);
+    }
+
+    fn begin_exec(w: &mut Platform, eng: &mut Eng, svc_name: &str, req: RequestId, pod: PodId) {
+        let profile = w.services[svc_name].profile.clone();
+        if let Some(r) = w.requests.get_mut(&req) {
+            r.exec = Some(Execution::start(&profile, eng.now()));
+        }
+        Self::recompute_pod(w, eng, svc_name, pod);
+    }
+
+    // ------------------------------------------------------------- execution
+
+    /// Re-integrates progress for every active request on `pod` and
+    /// reschedules their completion events under the current allocation.
+    /// Called on every regime change: request start/finish, resize landing.
+    fn recompute_pod(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod: PodId) {
+        let now = eng.now();
+        let Some(svc) = w.services.get(svc_name) else { return };
+        let Some(idx) = svc.pod_index(pod) else { return };
+        // Reuse the platform scratch buffer instead of allocating per event.
+        let mut active = std::mem::take(&mut w.scratch_active);
+        active.clear();
+        active.extend_from_slice(w.services[svc_name].pods[idx].proxy.active_requests());
+        let _ = svc;
+        if active.is_empty() {
+            w.scratch_active = active;
+            return;
+        }
+        let alloc = w
+            .cluster
+            .pod(pod)
+            .map(|p| p.status.applied_cpu_limit)
+            .unwrap_or(MilliCpu::ZERO);
+        // Equal CFS split among in-container requests.
+        let share = MilliCpu((alloc.0 / active.len() as u64).max(1));
+        for &id in &active {
+            let Some(r) = w.requests.get_mut(&id) else { continue };
+            let Some(exec) = r.exec.as_mut() else { continue };
+            // Integrate the interval just ended under the old share.
+            exec.advance(now, r.share.max(MilliCpu(1)));
+            r.share = share;
+            if let Some(ev) = r.completion.take() {
+                eng.cancel(ev);
+            }
+            if exec.done() {
+                // Finished exactly at this boundary.
+                let s = eng.schedule_in(SimTime::ZERO, move |w: &mut Platform, eng| {
+                    Self::complete(w, eng, id);
+                });
+                r.completion = Some(s.id);
+            } else {
+                let eta = exec.eta(share);
+                let s = eng.schedule_in(eta, move |w: &mut Platform, eng| {
+                    Self::complete(w, eng, id);
+                });
+                r.completion = Some(s.id);
+            }
+        }
+        w.scratch_active = active;
+    }
+
+    fn complete(w: &mut Platform, eng: &mut Eng, req: RequestId) {
+        let now = eng.now();
+        let Some(r) = w.requests.get_mut(&req) else { return };
+        let svc_name = r.service.clone();
+        let pod = r.pod;
+        if let Some(exec) = r.exec.as_mut() {
+            exec.advance(now, r.share.max(MilliCpu(1)));
+        }
+        r.completion = None;
+
+        // Response proxy hop is part of the measured latency.
+        let respond = w.params.proxy.sample_respond(&mut w.rng);
+        let latency_ms = (now + respond).saturating_sub(r.submitted_at).as_millis_f64();
+        let r = w.requests.remove(&req).unwrap();
+        {
+            let m = w.metrics.service(&svc_name);
+            m.latency_ms.record(latency_ms);
+            m.completed += 1;
+            if r.cold_start {
+                m.cold_starts += 1;
+            }
+        }
+
+        let Some(pod_id) = pod else { return };
+        // Free the concurrency slot; promote a queued request if any.
+        let promoted = {
+            let Some(svc) = w.services.get_mut(&*svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            svc.pods[idx].proxy.complete(req)
+        };
+        if let Some(next) = promoted {
+            Self::begin_exec(w, eng, &svc_name, next, pod_id);
+        } else {
+            Self::recompute_pod(w, eng, &svc_name, pod_id);
+        }
+
+        Self::post_request_hooks(w, eng, &svc_name, pod_id);
+        Self::record_concurrency(w, eng, &svc_name);
+        Self::drain_activator(w, eng, &svc_name);
+        Self::fire_hook(w, eng, req);
+    }
+
+    /// Policy post-hooks after a request leaves a pod.
+    fn post_request_hooks(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+        let (policy, idle, parked, stable_window) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            (
+                svc.policy,
+                svc.pods[idx].proxy.idle(),
+                svc.cfg.parked_cpu,
+                svc.cfg.stable_window,
+            )
+        };
+        match policy {
+            Policy::InPlace => {
+                if idle {
+                    // The paper's post-hook: deallocate back to 1 m.
+                    Self::request_resize(w, eng, svc_name, pod_id, parked);
+                }
+            }
+            Policy::Cold => {
+                if idle {
+                    // Arm the scale-to-zero timer (stable window).
+                    let name = svc_name.to_string();
+                    let s = eng.schedule_in(stable_window, move |w: &mut Platform, eng| {
+                        Self::idle_check(w, eng, &name, pod_id);
+                    });
+                    let svc = w.services.get_mut(svc_name).unwrap();
+                    if let Some(idx) = svc.pod_index(pod_id) {
+                        if let Some(old) = svc.pods[idx].idle_timer.replace(s.id) {
+                            eng.cancel(old);
+                        }
+                    }
+                }
+            }
+            Policy::Warm => {}
+        }
+    }
+
+    // ---------------------------------------------------------------- resize
+
+    /// Fires the queue-proxy resize hook: after the dispatch cost, try the
+    /// patch; on conflict (kubelet busy with a previous resize) retry on a
+    /// short period — the churn that penalizes back-to-back in-place
+    /// activations.
+    fn request_resize(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+        target: MilliCpu,
+    ) {
+        // Record the latest desire; older pending desires are superseded.
+        {
+            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            svc.pods[idx].desired_limit = Some(target);
+        }
+        let hook = w.params.proxy.sample_hook(&mut w.rng);
+        let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+        eng.schedule_in(hook, move |w: &mut Platform, eng| {
+            Self::try_patch(w, eng, &name, pod_id);
+        });
+    }
+
+    fn try_patch(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+        let target = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            match svc.pods[idx].desired_limit {
+                Some(t) => t,
+                None => return,
+            }
+        };
+        let applied = match w.cluster.pod(pod_id) {
+            Some(p) => p.status.applied_cpu_limit,
+            None => return,
+        };
+        if applied == target && w.cluster.pod(pod_id).unwrap().status.resize.is_none() {
+            // Already there.
+            let svc = w.services.get_mut(svc_name).unwrap();
+            if let Some(idx) = svc.pod_index(pod_id) {
+                svc.pods[idx].desired_limit = None;
+            }
+            return;
+        }
+        let now = eng.now();
+        match w.api.patch_resize(
+            &mut w.cluster,
+            ResizePatch {
+                pod: pod_id,
+                new_cpu_limit: target,
+            },
+            now,
+        ) {
+            Ok(()) => {
+                w.metrics.resizes_accepted += 1;
+                {
+                    let svc = w.services.get_mut(svc_name).unwrap();
+                    if let Some(idx) = svc.pod_index(pod_id) {
+                        svc.pods[idx].desired_limit = None;
+                        svc.pods[idx].retry_pending = false;
+                    }
+                }
+                let _ = w.api.mark_in_progress(&mut w.cluster, pod_id, target, now);
+                // Sample propagation latency under current node load.
+                let node_id = w.cluster.pod(pod_id).unwrap().node.unwrap();
+                let load = Self::node_load(w, node_id);
+                let lat = w.kubelet.resize_latency(applied, target, load, &mut w.rng);
+                let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+                eng.schedule_in(lat, move |w: &mut Platform, eng| {
+                    Self::resize_landed(w, eng, &name, pod_id, target);
+                });
+            }
+            Err(e) => {
+                let transient = matches!(
+                    e,
+                    crate::apiserver::ApiError::Conflict(_)
+                        | crate::apiserver::ApiError::NotRunning(_, _)
+                );
+                if !transient {
+                    // Permanent rejection (gate disabled, restart-required
+                    // policy, invalid limit): drop the desire — the pod
+                    // simply keeps its current allocation.
+                    let svc = w.services.get_mut(svc_name).unwrap();
+                    if let Some(idx) = svc.pod_index(pod_id) {
+                        svc.pods[idx].desired_limit = None;
+                    }
+                    return;
+                }
+                // Kubelet busy applying a previous resize (or pod still
+                // coming up): retry shortly unless one is already scheduled.
+                w.metrics.resize_conflicts += 1;
+                let retry = w.params.resize_retry;
+                let svc = w.services.get_mut(svc_name).unwrap();
+                let Some(idx) = svc.pod_index(pod_id) else { return };
+                if !svc.pods[idx].retry_pending {
+                    svc.pods[idx].retry_pending = true;
+                    let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+                    eng.schedule_in(retry, move |w: &mut Platform, eng| {
+                        if let Some(svc) = w.services.get_mut(&*name) {
+                            if let Some(i) = svc.pod_index(pod_id) {
+                                svc.pods[i].retry_pending = false;
+                            }
+                        }
+                        Self::try_patch(w, eng, &name, pod_id);
+                    });
+                }
+            }
+        }
+    }
+
+    fn resize_landed(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+        target: MilliCpu,
+    ) {
+        let now = eng.now();
+        let Some(pod) = w.cluster.pod(pod_id) else { return };
+        let Some(node_id) = pod.node else { return };
+        w.cluster
+            .node_mut(node_id)
+            .apply_cpu_limit(pod_id, target, now);
+        let _ = w.api.mark_done(&mut w.cluster, pod_id, target, now);
+        Self::committed_changed(w, eng);
+        Self::recompute_pod(w, eng, svc_name, pod_id);
+        // A newer desire may have raced in (up while down was landing).
+        let pending = {
+            let svc = w.services.get(svc_name);
+            svc.and_then(|s| s.pod_index(pod_id))
+                .and_then(|i| w.services[svc_name].pods[i].desired_limit)
+        };
+        if let Some(t) = pending {
+            if t != target {
+                let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+                eng.schedule_in(SimTime::ZERO, move |w: &mut Platform, eng| {
+                    Self::try_patch(w, eng, &name, pod_id);
+                });
+            }
+        }
+    }
+
+    /// Node load for the latency model: stressors + busy serving capacity.
+    fn node_load(w: &Platform, node: NodeId) -> crate::cgroup::latency::NodeLoad {
+        let mut busy = MilliCpu::ZERO;
+        for svc in w.services.values() {
+            for sp in &svc.pods {
+                if sp.proxy.active_count() > 0 {
+                    if let Some(pod) = w.cluster.pod(sp.pod) {
+                        if pod.node == Some(node) {
+                            busy += pod.status.applied_cpu_limit;
+                        }
+                    }
+                }
+            }
+        }
+        w.cluster.node(node).load_with_busy(busy)
+    }
+
+    // ------------------------------------------------------------ pod lifecycle
+
+    /// Creates and starts a pod for `svc_name`. `on_demand` marks a
+    /// cold-start (request-triggered) creation.
+    fn start_pod(w: &mut Platform, eng: &mut Eng, svc_name: &str, on_demand: bool) {
+        let (spec, image, image_mb, init_ms) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let p = &svc.profile;
+            let requests = Resources::new(
+                // In-place pods reserve only a small request — the paper's
+                // resource-availability advantage; warm/cold reserve the
+                // full serving CPU (Guaranteed-ish QoS).
+                if svc.policy == Policy::InPlace {
+                    MilliCpu(100)
+                } else {
+                    svc.cfg.serving_cpu
+                },
+                Memory::from_mib(256),
+            );
+            let limits = Resources::new(svc.cfg.serving_cpu, Memory::from_mib(512));
+            (
+                PodSpec::single(&svc.profile.name, &p.image, requests, limits),
+                p.image.clone(),
+                p.image_mb,
+                p.runtime_init_ms,
+            )
+        };
+
+        let pod_id = w.cluster.create_pod(spec);
+        let Some(node_id) = w.scheduler.pick(w.cluster.nodes(), w.cluster.pod(pod_id).unwrap().spec.total_requests())
+        else {
+            // Unschedulable — drop the pod; buffered requests will time out.
+            w.cluster.delete_pod(pod_id);
+            return;
+        };
+        if w.cluster.bind(pod_id, node_id).is_err() {
+            w.cluster.delete_pod(pod_id);
+            return;
+        }
+        w.metrics.pods_created += 1;
+        {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            svc.starting += 1;
+        }
+        let _ = on_demand;
+
+        // Run the startup pipeline as chained events.
+        let cached = w.cluster.node(node_id).image_cached(&image);
+        let plan = w
+            .kubelet
+            .startup_plan(cached, image_mb, init_ms, &mut w.rng);
+        let total = Kubelet::plan_total(&plan);
+        {
+            let pod = w.cluster.pod_mut(pod_id).unwrap();
+            pod.status.phase = PodPhase::Creating;
+            pod.created_at = eng.now();
+        }
+        let name = svc_name.to_string();
+        eng.schedule_in(total, move |w: &mut Platform, eng| {
+            Self::pod_ready(w, eng, &name, pod_id, node_id, image.clone());
+        });
+    }
+
+    fn pod_ready(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+        node_id: NodeId,
+        image: String,
+    ) {
+        w.cluster.node_mut(node_id).cache_image(&image);
+        {
+            let Some(pod) = w.cluster.pod_mut(pod_id) else { return };
+            pod.status.phase = PodPhase::Running;
+            pod.status.ready = true;
+        }
+        let (hooks, climit) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            (svc.policy.inplace_hooks(), svc.cfg.concurrency_limit())
+        };
+        {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            svc.starting = svc.starting.saturating_sub(1);
+            let mut sp = ServicePod::new(pod_id, climit, hooks);
+            sp.ready = true;
+            svc.pods.push(sp);
+        }
+        Self::committed_changed(w, eng);
+        Self::drain_activator(w, eng, svc_name);
+
+        // A fresh in-place pod with nothing to do parks immediately.
+        let idle = {
+            let svc = &w.services[svc_name];
+            let idx = svc.pod_index(pod_id).unwrap();
+            svc.pods[idx].proxy.idle()
+        };
+        if hooks && idle {
+            let parked = w.services[svc_name].cfg.parked_cpu;
+            Self::request_resize(w, eng, svc_name, pod_id, parked);
+        }
+        // Cold pods with nothing to do arm their idle timer right away.
+        let (policy, stable_window) = {
+            let svc = &w.services[svc_name];
+            (svc.policy, svc.cfg.stable_window)
+        };
+        if policy == Policy::Cold && idle {
+            let name = svc_name.to_string();
+            let s = eng.schedule_in(stable_window, move |w: &mut Platform, eng| {
+                Self::idle_check(w, eng, &name, pod_id);
+            });
+            let svc = w.services.get_mut(svc_name).unwrap();
+            if let Some(idx) = svc.pod_index(pod_id) {
+                svc.pods[idx].idle_timer = Some(s.id);
+            }
+        }
+    }
+
+    /// Dispatches as many buffered requests as capacity allows.
+    fn drain_activator(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        loop {
+            let (idx, buffered) = {
+                let Some(svc) = w.services.get_mut(svc_name) else { return };
+                let Some(idx) = svc.pick_pod() else { return };
+                let (mut out, dead) = svc.activator.drain(1, eng.now());
+                for d in dead {
+                    Self::fail_request(w, eng, d.request);
+                    return; // re-enter loop via next call; keep simple
+                }
+                match out.pop() {
+                    Some(b) => (idx, b),
+                    None => return,
+                }
+            };
+            Self::dispatch(w, eng, svc_name, buffered.request, idx);
+        }
+    }
+
+    /// Cold policy: scale this pod to zero if its stable window stayed quiet.
+    fn idle_check(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+        let idle = {
+            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            svc.pods[idx].idle_timer = None;
+            svc.pods[idx].proxy.idle() && !svc.pods[idx].terminating
+        };
+        if !idle {
+            return;
+        }
+        // Begin termination.
+        {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            let idx = svc.pod_index(pod_id).unwrap();
+            svc.pods[idx].terminating = true;
+        }
+        if let Some(pod) = w.cluster.pod_mut(pod_id) {
+            pod.status.phase = PodPhase::Terminating;
+            pod.status.ready = false;
+        }
+        Self::committed_changed(w, eng);
+        let term = w.kubelet.termination_time(&mut w.rng);
+        let name = svc_name.to_string();
+        eng.schedule_in(term, move |w: &mut Platform, _eng| {
+            w.cluster.delete_pod(pod_id);
+            w.metrics.pods_deleted += 1;
+            if let Some(svc) = w.services.get_mut(&name) {
+                if let Some(idx) = svc.pod_index(pod_id) {
+                    svc.pods.remove(idx);
+                }
+            }
+        });
+    }
+
+    /// Event-driven KPA evaluation: scale up when the decision demands it.
+    fn maybe_scale_up(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        let (desired, live) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let d = svc.autoscaler.decide(eng.now(), svc.ready_pods() as u32);
+            (d.desired, svc.live_pods() as u32)
+        };
+        for _ in live..desired {
+            Self::start_pod(w, eng, svc_name, true);
+        }
+    }
+
+    fn record_concurrency(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        let now = eng.now();
+        let overloaded = if let Some(svc) = w.services.get_mut(svc_name) {
+            // One pass over the pod list for concurrency + readiness.
+            let mut in_flight = svc.activator.len();
+            let mut ready = 0usize;
+            for p in &svc.pods {
+                in_flight += p.proxy.in_flight();
+                if p.ready && !p.terminating {
+                    ready += 1;
+                }
+            }
+            svc.autoscaler.record(now, in_flight as u32);
+            // Level-triggered KPA: consider scale-out whenever observed
+            // concurrency exceeds what the current fleet targets — skipped
+            // entirely for the common single-pod-capped revision.
+            (svc.live_pods() as u32) < svc.cfg.max_scale
+                && in_flight as f64 > svc.cfg.target_concurrency * ready.max(1) as f64
+        } else {
+            false
+        };
+        if overloaded {
+            Self::maybe_scale_up(w, eng, svc_name);
+        }
+    }
+
+    /// Recomputes the committed-CPU metric (Σ applied limits of live pods).
+    fn committed_changed(w: &mut Platform, eng: &mut Eng) {
+        let mut total = MilliCpu::ZERO;
+        for svc in w.services.values() {
+            for sp in &svc.pods {
+                if sp.terminating {
+                    continue;
+                }
+                if let Some(pod) = w.cluster.pod(sp.pod) {
+                    if pod.status.phase == PodPhase::Running {
+                        total += pod.status.applied_cpu_limit;
+                    }
+                }
+            }
+        }
+        w.metrics.committed_cpu.update(eng.now(), total);
+    }
+}
+
+// ============================================================ Simulation
+
+/// Owns the engine + platform pair; the entry point examples and benches use.
+pub struct Simulation {
+    pub engine: Eng,
+    pub world: Platform,
+}
+
+impl Simulation {
+    /// Paper testbed with default calibration.
+    pub fn paper(seed: u64) -> Simulation {
+        Simulation {
+            engine: Engine::new(),
+            world: Platform::paper_testbed(PlatformParams::with_seed(seed)),
+        }
+    }
+
+    pub fn with_params(params: PlatformParams) -> Simulation {
+        Simulation {
+            engine: Engine::new(),
+            world: Platform::paper_testbed(params),
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    pub fn deploy(&mut self, name: &str, profile: WorkloadProfile, policy: Policy) {
+        self.world
+            .deploy_workload(&mut self.engine, name, profile, policy);
+    }
+
+    pub fn deploy_service(&mut self, svc: Service) {
+        self.world.deploy(&mut self.engine, svc);
+    }
+
+    pub fn submit(&mut self, service: &str) -> RequestId {
+        self.world.submit(&mut self.engine, service)
+    }
+
+    pub fn submit_at(&mut self, at: SimTime, service: &str) {
+        self.world.submit_at(&mut self.engine, at, service);
+    }
+
+    /// Runs until the event queue drains.
+    pub fn run(&mut self) -> u64 {
+        self.engine.run(&mut self.world)
+    }
+
+    pub fn run_until(&mut self, deadline: SimTime) -> u64 {
+        self.engine.run_until(&mut self.world, deadline)
+    }
+
+    /// Runs until all submitted requests completed (or the queue drained).
+    pub fn run_to_quiescence(&mut self) {
+        // Idle timers may keep the queue alive; step until no requests
+        // remain in flight.
+        while self.world.in_flight() > 0 {
+            if self.engine.step(&mut self.world).is_none() {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::registry::WorkloadKind;
+
+    fn sim_with(policy: Policy, kind: WorkloadKind) -> Simulation {
+        let mut sim = Simulation::paper(7);
+        sim.deploy("fn", WorkloadProfile::paper(kind), policy);
+        // Let pre-created pods come up.
+        sim.run_to_quiescence();
+        let settle = sim.now() + SimTime::from_secs(30);
+        sim.run_until(settle);
+        sim
+    }
+
+    fn mean_latency(sim: &mut Simulation, svc: &str) -> f64 {
+        sim.world.metrics.service(svc).latency_ms.mean()
+    }
+
+    #[test]
+    fn warm_request_close_to_default_runtime() {
+        let mut sim = sim_with(Policy::Warm, WorkloadKind::HelloWorld);
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        let m = mean_latency(&mut sim, "fn");
+        // helloworld 5.31 ms + ~15 ms proxy.
+        assert!((12.0..40.0).contains(&m), "warm latency {m}");
+        assert_eq!(sim.world.metrics.service("fn").completed, 1);
+    }
+
+    #[test]
+    fn cold_request_pays_startup_pipeline() {
+        let mut sim = Simulation::paper(7);
+        sim.deploy(
+            "fn",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::Cold,
+        );
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        let m = mean_latency(&mut sim, "fn");
+        // Pipeline ≈1.2–1.7 s (image cold on first pull adds more).
+        assert!(m > 1000.0, "cold latency {m}");
+        assert_eq!(sim.world.metrics.service("fn").cold_starts, 1);
+    }
+
+    #[test]
+    fn inplace_request_pays_scale_up_only() {
+        let mut sim = sim_with(Policy::InPlace, WorkloadKind::HelloWorld);
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        let m = mean_latency(&mut sim, "fn");
+        // ≈ 5.31 runtime + ~15 proxy + ~2 hook + ~56 resize + dead window.
+        assert!((40.0..220.0).contains(&m), "in-place latency {m}");
+        assert_eq!(sim.world.metrics.service("fn").inplace_scale_ups, 1);
+        assert!(sim.world.metrics.resizes_accepted >= 2); // park + up
+    }
+
+    #[test]
+    fn policy_ordering_matches_paper() {
+        let mut results = Vec::new();
+        for policy in [Policy::Cold, Policy::InPlace, Policy::Warm] {
+            let mut sim = sim_with(policy, WorkloadKind::HelloWorld);
+            sim.submit("fn");
+            sim.run_to_quiescence();
+            results.push(mean_latency(&mut sim, "fn"));
+        }
+        let (cold, inplace, warm) = (results[0], results[1], results[2]);
+        assert!(cold > inplace, "cold={cold} inplace={inplace}");
+        assert!(inplace > warm, "inplace={inplace} warm={warm}");
+    }
+
+    #[test]
+    fn cold_pod_scales_to_zero_after_stable_window() {
+        let mut sim = Simulation::paper(7);
+        sim.deploy(
+            "fn",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::Cold,
+        );
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        // After the request, 6 s stable window + termination passes.
+        let deadline = sim.now() + SimTime::from_secs(10);
+        sim.run_until(deadline);
+        assert_eq!(sim.world.services["fn"].pods.len(), 0);
+        assert_eq!(sim.world.metrics.pods_deleted, 1);
+        // A second request pays another cold start.
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        assert_eq!(sim.world.metrics.service("fn").cold_starts, 2);
+    }
+
+    #[test]
+    fn inplace_pod_parks_between_requests() {
+        let mut sim = sim_with(Policy::InPlace, WorkloadKind::HelloWorld);
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        // Let the park resize land.
+        let deadline = sim.now() + SimTime::from_secs(5);
+        sim.run_until(deadline);
+        let pod = sim.world.services["fn"].pods[0].pod;
+        let applied = sim.world.cluster.pod(pod).unwrap().status.applied_cpu_limit;
+        assert_eq!(applied, MilliCpu(1), "pod should be parked at 1m");
+    }
+
+    #[test]
+    fn warm_pod_stays_at_serving_allocation() {
+        let mut sim = sim_with(Policy::Warm, WorkloadKind::HelloWorld);
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        let pod = sim.world.services["fn"].pods[0].pod;
+        let applied = sim.world.cluster.pod(pod).unwrap().status.applied_cpu_limit;
+        assert_eq!(applied, MilliCpu(1000));
+    }
+
+    #[test]
+    fn committed_cpu_reflects_policies() {
+        // Warm commits 1000 m always; in-place parks at 1 m.
+        let mut warm = sim_with(Policy::Warm, WorkloadKind::HelloWorld);
+        let mut inp = sim_with(Policy::InPlace, WorkloadKind::HelloWorld);
+        let horizon = SimTime::from_secs(120);
+        warm.run_until(warm.now() + horizon);
+        inp.run_until(inp.now() + horizon);
+        let now_w = warm.now();
+        let now_i = inp.now();
+        let warm_avg = warm.world.metrics.committed_cpu.average_mcpu(now_w);
+        let inp_avg = inp.world.metrics.committed_cpu.average_mcpu(now_i);
+        assert!(warm_avg > 900.0, "warm avg {warm_avg}");
+        assert!(inp_avg < 120.0, "in-place avg {inp_avg}");
+    }
+
+    #[test]
+    fn concurrent_requests_share_cpu() {
+        let mut sim = sim_with(Policy::Warm, WorkloadKind::Cpu);
+        // Two simultaneous cpu-bound requests on one 1000 m pod: each sees
+        // ~500 m ⇒ each takes ~2× the default runtime.
+        sim.submit("fn");
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        let mut lat = sim.world.metrics.service("fn").latency_ms.clone();
+        assert_eq!(lat.len(), 2);
+        let min = lat.min();
+        assert!(min > 4000.0, "each should be ~2×2465 ms, min={min}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = |seed: u64| {
+            let mut sim = sim_with(Policy::InPlace, WorkloadKind::Cpu);
+            let _ = seed;
+            for _ in 0..5 {
+                sim.submit("fn");
+            }
+            sim.run_to_quiescence();
+            sim.world.metrics.service("fn").latency_ms.mean()
+        };
+        assert_eq!(run(1).to_bits(), run(1).to_bits());
+    }
+}

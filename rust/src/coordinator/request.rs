@@ -1,0 +1,69 @@
+//! Per-request state tracked by the platform.
+
+use crate::cluster::pod::PodId;
+use crate::knative::activator::RequestId;
+use crate::simclock::{EventId, SimTime};
+use crate::util::quantity::MilliCpu;
+use crate::workload::exec::Execution;
+
+/// How a request ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Completed,
+    Failed,
+}
+
+/// A request in flight through the platform.
+#[derive(Debug)]
+pub struct RequestState {
+    pub id: RequestId,
+    /// Owning service name; `Arc<str>` so per-request clones on the hot
+    /// path are refcount bumps, not heap copies.
+    pub service: std::sync::Arc<str>,
+    pub pod: Option<PodId>,
+    pub submitted_at: SimTime,
+    /// Execution progress once dispatched into a container.
+    pub exec: Option<Execution>,
+    /// CFS share currently granted (container limit / active requests).
+    pub share: MilliCpu,
+    /// Scheduled completion event (cancelled + rescheduled on regime change).
+    pub completion: Option<EventId>,
+    /// The request caused a pod to be created (cold start).
+    pub cold_start: bool,
+    /// The request triggered an in-place scale-up.
+    pub scaled_up: bool,
+}
+
+impl RequestState {
+    pub fn new(id: RequestId, service: &str, submitted_at: SimTime) -> RequestState {
+        RequestState {
+            id,
+            service: std::sync::Arc::from(service),
+            pod: None,
+            submitted_at,
+            exec: None,
+            share: MilliCpu::ZERO,
+            completion: None,
+            cold_start: false,
+            scaled_up: false,
+        }
+    }
+
+    pub fn executing(&self) -> bool {
+        self.exec.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_request_state() {
+        let r = RequestState::new(RequestId(1), "svc", SimTime::from_millis(5));
+        assert!(!r.executing());
+        assert!(!r.cold_start);
+        assert_eq!(r.submitted_at, SimTime::from_millis(5));
+        assert_eq!(&*r.service, "svc");
+    }
+}

@@ -1,0 +1,187 @@
+//! Per-service (Knative revision) runtime state inside the platform.
+
+use crate::cluster::pod::PodId;
+use crate::knative::activator::{Activator, RequestId};
+use crate::knative::autoscaler::Autoscaler;
+use crate::knative::config::RevisionConfig;
+use crate::knative::queue_proxy::QueueProxy;
+use crate::policy::Policy;
+use crate::simclock::EventId;
+use crate::util::quantity::MilliCpu;
+use crate::workload::registry::WorkloadProfile;
+
+/// A function pod from the service's point of view.
+#[derive(Debug)]
+pub struct ServicePod {
+    pub pod: PodId,
+    pub proxy: QueueProxy,
+    /// Idle scale-to-zero timer (cold policy).
+    pub idle_timer: Option<EventId>,
+    /// Desired CPU limit the hooks most recently asked for; retried while
+    /// the kubelet's per-pod resize pipeline is busy.
+    pub desired_limit: Option<MilliCpu>,
+    /// A retry event is already scheduled.
+    pub retry_pending: bool,
+    pub ready: bool,
+    pub terminating: bool,
+}
+
+impl ServicePod {
+    pub fn new(pod: PodId, concurrency_limit: u32, hooks: bool) -> ServicePod {
+        ServicePod {
+            pod,
+            proxy: QueueProxy::new(concurrency_limit, hooks),
+            idle_timer: None,
+            desired_limit: None,
+            retry_pending: false,
+            ready: false,
+            terminating: false,
+        }
+    }
+}
+
+/// A deployed service.
+#[derive(Debug)]
+pub struct Service {
+    pub name: String,
+    pub profile: WorkloadProfile,
+    pub policy: Policy,
+    pub cfg: RevisionConfig,
+    pub autoscaler: Autoscaler,
+    pub activator: Activator,
+    pub pods: Vec<ServicePod>,
+    /// Pods whose startup pipeline is still running.
+    pub starting: u32,
+}
+
+impl Service {
+    pub fn new(name: &str, profile: WorkloadProfile, policy: Policy) -> Service {
+        let cfg = policy.revision_config();
+        Service::with_config(name, profile, policy, cfg)
+    }
+
+    pub fn with_config(
+        name: &str,
+        profile: WorkloadProfile,
+        policy: Policy,
+        cfg: RevisionConfig,
+    ) -> Service {
+        Service {
+            name: name.to_string(),
+            profile,
+            policy,
+            cfg: cfg.clone(),
+            autoscaler: Autoscaler::new(cfg),
+            activator: Activator::default(),
+            pods: Vec::new(),
+            starting: 0,
+        }
+    }
+
+    /// Ready pod with a free concurrency slot, preferring the least loaded
+    /// (knative's activator load-balances by in-flight count).
+    pub fn pick_pod(&self) -> Option<usize> {
+        self.pods
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.ready && !p.terminating)
+            .filter(|(_, p)| (p.proxy.active_count() as u32) < self.cfg.concurrency_limit())
+            .min_by_key(|(_, p)| p.proxy.in_flight())
+            .map(|(i, _)| i)
+    }
+
+    /// Any live (ready or starting-up, non-terminating) pod exists?
+    pub fn live_pods(&self) -> usize {
+        self.pods.iter().filter(|p| !p.terminating).count() + self.starting as usize
+    }
+
+    pub fn ready_pods(&self) -> usize {
+        self.pods.iter().filter(|p| p.ready && !p.terminating).count()
+    }
+
+    /// Total in-flight requests across pods + buffered in the activator.
+    pub fn total_in_flight(&self) -> usize {
+        self.pods.iter().map(|p| p.proxy.in_flight()).sum::<usize>() + self.activator.len()
+    }
+
+    pub fn pod_index(&self, pod: PodId) -> Option<usize> {
+        self.pods.iter().position(|p| p.pod == pod)
+    }
+
+    /// Buffered request ids waiting in the activator (for tests/debugging).
+    pub fn buffered(&self) -> usize {
+        self.activator.len()
+    }
+
+    pub fn slot_available(&self) -> bool {
+        self.pick_pod().is_some()
+    }
+
+    /// Concurrency as the autoscaler should see it (active + queued).
+    pub fn observed_concurrency(&self) -> u32 {
+        self.total_in_flight() as u32
+    }
+
+    pub fn next_request_target(&self) -> Option<RequestId> {
+        None // placeholder for multi-revision routing; single revision here
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::registry::WorkloadKind;
+
+    fn svc(policy: Policy) -> Service {
+        Service::new(
+            "hello",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            policy,
+        )
+    }
+
+    #[test]
+    fn pick_pod_prefers_least_loaded_ready() {
+        let mut s = svc(Policy::Warm);
+        s.pods.push(ServicePod::new(PodId(0), 10, false));
+        s.pods.push(ServicePod::new(PodId(1), 10, false));
+        s.pods[0].ready = true;
+        s.pods[1].ready = true;
+        s.pods[0].proxy.offer(RequestId(1));
+        assert_eq!(s.pick_pod(), Some(1));
+        s.pods[1].terminating = true;
+        assert_eq!(s.pick_pod(), Some(0));
+    }
+
+    #[test]
+    fn pick_pod_respects_concurrency_limit() {
+        let mut s = svc(Policy::Warm);
+        s.cfg.container_concurrency = 1;
+        s.pods.push(ServicePod::new(PodId(0), 1, false));
+        s.pods[0].ready = true;
+        s.pods[0].proxy.offer(RequestId(1));
+        assert_eq!(s.pick_pod(), None);
+    }
+
+    #[test]
+    fn unready_pods_not_picked() {
+        let mut s = svc(Policy::Cold);
+        s.pods.push(ServicePod::new(PodId(0), 10, false));
+        assert_eq!(s.pick_pod(), None);
+        assert_eq!(s.ready_pods(), 0);
+        assert_eq!(s.live_pods(), 1);
+    }
+
+    #[test]
+    fn in_flight_counts_pods_and_activator() {
+        let mut s = svc(Policy::InPlace);
+        s.pods.push(ServicePod::new(PodId(0), 10, true));
+        s.pods[0].ready = true;
+        s.pods[0].proxy.offer(RequestId(1));
+        s.activator
+            .buffer(RequestId(2), crate::simclock::SimTime::ZERO)
+            .unwrap();
+        assert_eq!(s.total_in_flight(), 2);
+        assert_eq!(s.observed_concurrency(), 2);
+    }
+}

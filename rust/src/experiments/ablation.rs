@@ -1,0 +1,170 @@
+//! Ablations of the in-place policy's design choices (DESIGN.md §6d).
+//!
+//! The paper fixes three knobs without exploring them; each ablation sweeps
+//! one and reports the latency/reservation trade-off:
+//!
+//! * **Parked allocation** — the paper parks at 1 m. Sweeping 1 m → 500 m
+//!   shows the trade: a larger park costs standing reservation but (a)
+//!   shortens the dead window (the request progresses while the resize
+//!   lands) and (b) avoids the slow deep-down-scale tail (Fig 4b).
+//! * **Cold stable window** — the paper sets 6 s (Knative's minimum).
+//!   Sweeping 6 s → 120 s trades cold-start frequency against reservation.
+//! * **Resize-retry period** — the queue-proxy hook's retry cadence when
+//!   the kubelet is busy; governs the up-after-down serialization penalty
+//!   for back-to-back in-place activations.
+
+use crate::coordinator::platform::Simulation;
+use crate::coordinator::service::Service;
+use crate::loadgen::runner::{Runner, Scenario};
+use crate::policy::{PlatformParams, Policy};
+use crate::simclock::SimTime;
+use crate::util::quantity::MilliCpu;
+use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+/// One point of an ablation sweep.
+#[derive(Debug, Clone)]
+pub struct AblationPoint {
+    pub x: f64,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+    pub avg_committed_mcpu: f64,
+    pub cold_starts: u64,
+    pub resize_conflicts: u64,
+}
+
+/// Sweep of the parked CPU allocation under the in-place policy.
+pub fn parked_cpu_sweep(kind: WorkloadKind, parked: &[u64], seed: u64) -> Vec<AblationPoint> {
+    parked
+        .iter()
+        .map(|&m| {
+            let mut sim = Simulation::with_params(PlatformParams::with_seed(seed));
+            let mut cfg = Policy::InPlace.revision_config();
+            cfg.parked_cpu = MilliCpu(m);
+            sim.deploy_service(Service::with_config(
+                "fn",
+                WorkloadProfile::paper(kind),
+                Policy::InPlace,
+                cfg,
+            ));
+            sim.run();
+            let r = Runner::run(
+                &mut sim,
+                "fn",
+                &Scenario::closed_with_think(1, 8, SimTime::from_secs(8)),
+            );
+            AblationPoint {
+                x: m as f64,
+                mean_ms: r.mean_ms,
+                p99_ms: r.p99_ms,
+                avg_committed_mcpu: r.avg_committed_mcpu,
+                cold_starts: r.cold_starts,
+                resize_conflicts: sim.world.metrics.resize_conflicts,
+            }
+        })
+        .collect()
+}
+
+/// Sweep of the cold policy's stable window (scale-to-zero threshold) under
+/// arrivals with a fixed inter-arrival gap.
+pub fn stable_window_sweep(
+    windows_s: &[u64],
+    gap: SimTime,
+    seed: u64,
+) -> Vec<AblationPoint> {
+    windows_s
+        .iter()
+        .map(|&w| {
+            let mut sim = Simulation::with_params(PlatformParams::with_seed(seed));
+            let mut cfg = Policy::Cold.revision_config();
+            cfg.stable_window = SimTime::from_secs(w);
+            sim.deploy_service(Service::with_config(
+                "fn",
+                WorkloadProfile::paper(WorkloadKind::HelloWorld),
+                Policy::Cold,
+                cfg,
+            ));
+            sim.run();
+            let r = Runner::run(
+                &mut sim,
+                "fn",
+                &Scenario::closed_with_think(1, 10, gap),
+            );
+            AblationPoint {
+                x: w as f64,
+                mean_ms: r.mean_ms,
+                p99_ms: r.p99_ms,
+                avg_committed_mcpu: r.avg_committed_mcpu,
+                cold_starts: r.cold_starts,
+                resize_conflicts: 0,
+            }
+        })
+        .collect()
+}
+
+/// Sweep of the hook retry period for back-to-back in-place activations
+/// (no think time ⇒ every request races the previous park).
+pub fn retry_period_sweep(retries_ms: &[u64], seed: u64) -> Vec<AblationPoint> {
+    retries_ms
+        .iter()
+        .map(|&ms| {
+            let mut params = PlatformParams::with_seed(seed);
+            params.resize_retry = SimTime::from_millis(ms);
+            let mut sim = Simulation::with_params(params);
+            sim.deploy(
+                "fn",
+                WorkloadProfile::paper(WorkloadKind::HelloWorld),
+                Policy::InPlace,
+            );
+            sim.run();
+            let r = Runner::run(&mut sim, "fn", &Scenario::closed(1, 12));
+            AblationPoint {
+                x: ms as f64,
+                mean_ms: r.mean_ms,
+                p99_ms: r.p99_ms,
+                avg_committed_mcpu: r.avg_committed_mcpu,
+                cold_starts: r.cold_starts,
+                resize_conflicts: sim.world.metrics.resize_conflicts,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parked_sweep_trades_reservation_for_latency() {
+        let pts = parked_cpu_sweep(WorkloadKind::HelloWorld, &[1, 100, 500], 3);
+        // Reservation grows with the parked level...
+        assert!(pts[0].avg_committed_mcpu < pts[1].avg_committed_mcpu);
+        assert!(pts[1].avg_committed_mcpu < pts[2].avg_committed_mcpu);
+        // ...and latency never gets *worse* with a larger park (the dead
+        // window shrinks; helloworld at 100m parked serves almost fully).
+        assert!(pts[2].mean_ms <= pts[0].mean_ms * 1.1);
+        // No cold starts anywhere — it's still the in-place policy.
+        assert!(pts.iter().all(|p| p.cold_starts == 0));
+    }
+
+    #[test]
+    fn stable_window_controls_cold_start_frequency() {
+        // 10 requests, 20 s apart: a 6 s window cold-starts every time; a
+        // 60 s window keeps the pod warm after the first.
+        let pts = stable_window_sweep(&[6, 60], SimTime::from_secs(20), 5);
+        assert_eq!(pts[0].cold_starts, 10);
+        assert_eq!(pts[1].cold_starts, 1);
+        assert!(pts[1].mean_ms < pts[0].mean_ms / 3.0);
+        // The warm-held pod commits more CPU on average.
+        assert!(pts[1].avg_committed_mcpu > pts[0].avg_committed_mcpu);
+    }
+
+    #[test]
+    fn retry_period_affects_back_to_back_latency() {
+        let pts = retry_period_sweep(&[5, 25, 200], 7);
+        // Conflicts occur in all configurations (park races the next
+        // request)…
+        assert!(pts.iter().all(|p| p.resize_conflicts > 0));
+        // …and a 40× coarser retry cannot be faster than the fine one.
+        assert!(pts[2].mean_ms >= pts[0].mean_ms * 0.9);
+    }
+}

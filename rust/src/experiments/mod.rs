@@ -1,0 +1,26 @@
+//! Reproduction of every table and figure in the paper's evaluation.
+//!
+//! | id   | paper artifact                      | module              |
+//! |------|-------------------------------------|---------------------|
+//! | t1   | Table 1 (experiment matrix)         | `scaling_overhead`  |
+//! | fig2 | Fig 2a–d (step 100 m, up/down)      | `scaling_overhead`  |
+//! | fig3 | Fig 3a–b (step 1000 m)              | `scaling_overhead`  |
+//! | fig4 | Fig 4a–b (5 m granularity)          | `scaling_overhead`  |
+//! | t2   | Table 2 (runtimes @ 1 CPU)          | `policies`          |
+//! | t3   | Table 3 + Fig 5 (policy latencies)  | `policies`          |
+//! | fig6 | Fig 6 (runtime vs in-place effect)  | `policies`          |
+//!
+//! Each experiment renders the same rows/series the paper reports and is
+//! reachable from both `kinetic exp <id>` and `cargo bench`.
+
+pub mod ablation;
+pub mod memory;
+pub mod policies;
+pub mod report;
+pub mod scaling_overhead;
+
+pub use ablation::AblationPoint;
+pub use memory::{MemoryOutcome, MemoryProfile};
+pub use policies::{PolicyExperiment, PolicyRow};
+pub use report::ExperimentReport;
+pub use scaling_overhead::{OverheadConfig, OverheadExperiment, OverheadPoint, WorkState};

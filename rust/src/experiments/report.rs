@@ -1,0 +1,218 @@
+//! Rendering experiment results as the paper's tables/figures (ASCII for
+//! the terminal, markdown + CSV under `results/` for EXPERIMENTS.md).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::experiments::policies::PolicyRow;
+use crate::experiments::scaling_overhead::{OverheadPoint, WorkState};
+use crate::util::table::{fmt_ms, fmt_ratio, Table};
+
+/// Accumulates rendered sections and writes them out.
+#[derive(Debug, Default)]
+pub struct ExperimentReport {
+    sections: Vec<(String, String, String)>, // (id, ascii, markdown)
+}
+
+impl ExperimentReport {
+    pub fn new() -> ExperimentReport {
+        ExperimentReport::default()
+    }
+
+    pub fn add_table(&mut self, id: &str, table: &Table) {
+        self.sections
+            .push((id.to_string(), table.to_ascii(), table.to_markdown()));
+    }
+
+    /// Prints every section to stdout.
+    pub fn print(&self) {
+        for (id, ascii, _) in &self.sections {
+            println!("\n## {id}\n{ascii}");
+        }
+    }
+
+    /// Writes `results/<id>.md` + a combined `results/experiments.md`.
+    pub fn write_dir(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let combined = dir.join("experiments.md");
+        let mut all = std::fs::File::create(&combined)?;
+        for (id, _, md) in &self.sections {
+            writeln!(all, "## {id}\n\n{md}")?;
+            std::fs::write(dir.join(format!("{id}.md")), md)?;
+        }
+        Ok(combined)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sections.is_empty()
+    }
+}
+
+/// Renders one §4.1 sweep (a Fig 2/3 panel): rows = intervals, columns =
+/// mean latency per work state.
+pub fn overhead_table(title: &str, points: &[OverheadPoint]) -> Table {
+    let mut intervals: Vec<(u64, u64)> = points
+        .iter()
+        .map(|p| (p.from_m, p.to_m))
+        .collect::<Vec<_>>();
+    intervals.dedup();
+    let mut t = Table::new(vec![
+        "Interval",
+        "Idle (ms)",
+        "Stress-CPU (ms)",
+        "Stress-I/O (ms)",
+        "CPU/Idle ×",
+    ])
+    .title(title);
+    for (from, to) in intervals {
+        let find = |state: WorkState| -> Option<&OverheadPoint> {
+            points
+                .iter()
+                .find(|p| p.from_m == from && p.to_m == to && p.state == state)
+        };
+        let idle = find(WorkState::Idle).map(|p| p.stats.mean());
+        let cpu = find(WorkState::StressCpu).map(|p| p.stats.mean());
+        let io = find(WorkState::StressIo).map(|p| p.stats.mean());
+        let ratio = match (idle, cpu) {
+            (Some(i), Some(c)) if i > 0.0 => fmt_ratio(c / i),
+            _ => "-".to_string(),
+        };
+        t.row(vec![
+            format!("{from}m→{to}m"),
+            idle.map(fmt_ms).unwrap_or_else(|| "-".into()),
+            cpu.map(fmt_ms).unwrap_or_else(|| "-".into()),
+            io.map(fmt_ms).unwrap_or_else(|| "-".into()),
+            ratio,
+        ]);
+    }
+    t
+}
+
+/// Renders a single-state sweep (Fig 4 panels).
+pub fn overhead_series_table(title: &str, points: &[OverheadPoint]) -> Table {
+    let mut t = Table::new(vec!["Interval", "Mean (ms)", "Std (ms)"]).title(title);
+    for p in points {
+        t.row(vec![
+            format!("{}m→{}m", p.from_m, p.to_m),
+            fmt_ms(p.stats.mean()),
+            fmt_ms(p.stats.std_dev()),
+        ]);
+    }
+    t
+}
+
+/// Renders Table 3 (relative latencies, `Default = 1.00`).
+pub fn table3_table(rows: &[PolicyRow]) -> Table {
+    let mut t = Table::new(vec!["Function", "Cold", "In-place", "Warm", "Default"])
+        .title("Table 3: Relative latency vs Default (paper: 286.99/15.81/3.87 for helloworld)");
+    for r in rows {
+        t.row(vec![
+            r.function.clone(),
+            fmt_ratio(r.cold),
+            fmt_ratio(r.inplace),
+            fmt_ratio(r.warm),
+            "1.00".to_string(),
+        ]);
+    }
+    t
+}
+
+/// Renders the absolute means behind Table 3 (Fig 5's bars).
+pub fn fig5_table(rows: &[PolicyRow]) -> Table {
+    let mut t = Table::new(vec![
+        "Function",
+        "Default (ms)",
+        "Warm (ms)",
+        "In-place (ms)",
+        "Cold (ms)",
+        "Cold/In-place ×",
+    ])
+    .title("Fig 5: Average latency per scheduling policy (absolute)");
+    for r in rows {
+        t.row(vec![
+            r.function.clone(),
+            fmt_ms(r.default_ms),
+            fmt_ms(r.warm_ms),
+            fmt_ms(r.inplace_ms),
+            fmt_ms(r.cold_ms),
+            fmt_ratio(r.improvement()),
+        ]);
+    }
+    t
+}
+
+/// Renders Fig 6 (runtime vs in-place effect).
+pub fn fig6_table(pts: &[(f64, f64)]) -> Table {
+    let mut t = Table::new(vec!["Default runtime (ms)", "In-place relative latency"])
+        .title("Fig 6: Runtime vs In-place effect (inverse relationship)");
+    for (rt, ratio) in pts {
+        t.row(vec![fmt_ms(*rt), fmt_ratio(*ratio)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::scaling_overhead::Pattern;
+    use crate::util::stats::Summary;
+
+    fn pt(from: u64, to: u64, state: WorkState, mean: f64) -> OverheadPoint {
+        let mut stats = Summary::new();
+        stats.record(mean);
+        OverheadPoint {
+            from_m: from,
+            to_m: to,
+            state,
+            pattern: Pattern::Incremental,
+            stats,
+        }
+    }
+
+    #[test]
+    fn overhead_table_includes_ratio() {
+        let points = vec![
+            pt(1, 100, WorkState::Idle, 56.0),
+            pt(1, 100, WorkState::StressCpu, 340.0),
+            pt(1, 100, WorkState::StressIo, 60.0),
+        ];
+        let t = overhead_table("Fig 2a", &points);
+        let s = t.to_ascii();
+        assert!(s.contains("1m→100m"));
+        assert!(s.contains("6.07")); // 340/56
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let mut rep = ExperimentReport::new();
+        let mut t = Table::new(vec!["a"]).title("x");
+        t.row(vec!["1"]);
+        rep.add_table("t1", &t);
+        assert!(!rep.is_empty());
+        let dir = std::env::temp_dir().join(format!("kinetic-rep-{}", std::process::id()));
+        let combined = rep.write_dir(&dir).unwrap();
+        let body = std::fs::read_to_string(combined).unwrap();
+        assert!(body.contains("## t1"));
+        assert!(dir.join("t1.md").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table3_renders_paper_columns() {
+        let rows = vec![PolicyRow {
+            function: "helloworld".into(),
+            default_ms: 5.31,
+            cold_ms: 1523.9,
+            inplace_ms: 83.9,
+            warm_ms: 20.5,
+            cold: 286.99,
+            inplace: 15.81,
+            warm: 3.87,
+        }];
+        let s = table3_table(&rows).to_ascii();
+        assert!(s.contains("286.99"));
+        assert!(s.contains("15.81"));
+        let f5 = fig5_table(&rows).to_ascii();
+        assert!(f5.contains("18.15")); // 286.99 / 15.81 — the paper's headline
+    }
+}

@@ -1,0 +1,415 @@
+//! §4.1 — in-place scaling overhead (Table 1, Figures 2, 3, 4).
+//!
+//! Reproduces the paper's methodology end-to-end on the simulated substrate:
+//! a single pod on the 8-core node, a watcher exec'd into its cgroup, and a
+//! sequence of resize patches following the Incremental / Cumulative
+//! patterns in both directions, under Idle / Stress-CPU / Stress-I/O
+//! conditions. Durations are measured from patch dispatch to the `cpu.max`
+//! change landing (the `ResizeDone` watch event), exactly as the paper
+//! defines them — through the real API-server → kubelet → cgroup pipeline,
+//! not by sampling the latency model directly.
+
+use crate::apiserver::{ApiServer, FeatureGates, ResizePatch};
+use crate::cgroup::latency::NodeLoad;
+use crate::cgroup::Stressor;
+use crate::cluster::kubelet::Kubelet;
+use crate::cluster::pod::{PodId, PodPhase, PodSpec};
+use crate::cluster::{Cluster, NodeId};
+use crate::simclock::{Engine, SimTime};
+use crate::util::quantity::{Memory, MilliCpu, Resources};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Workload condition during the measurement (paper's Idle / Busy states).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkState {
+    Idle,
+    StressCpu,
+    StressIo,
+}
+
+impl WorkState {
+    pub const ALL: [WorkState; 3] = [WorkState::Idle, WorkState::StressCpu, WorkState::StressIo];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkState::Idle => "idle",
+            WorkState::StressCpu => "stress-cpu",
+            WorkState::StressIo => "stress-io",
+        }
+    }
+
+    fn stressors(&self, cores: u32) -> Vec<Stressor> {
+        match self {
+            WorkState::Idle => vec![],
+            WorkState::StressCpu => vec![Stressor::cpu_saturating(cores)],
+            WorkState::StressIo => vec![Stressor::io(4)],
+        }
+    }
+}
+
+/// Scaling pattern (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Each step builds on the previous value: 1→100→200→…
+    Incremental,
+    /// Reset to base between steps: 1→100, 1→200, …
+    Cumulative,
+}
+
+impl Pattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::Incremental => "incremental",
+            Pattern::Cumulative => "cumulative",
+        }
+    }
+}
+
+/// One measured transition.
+#[derive(Debug, Clone)]
+pub struct OverheadPoint {
+    /// Interval label, e.g. "1m-100m".
+    pub from_m: u64,
+    pub to_m: u64,
+    pub state: WorkState,
+    pub pattern: Pattern,
+    pub stats: Summary,
+}
+
+/// Experiment configuration.
+#[derive(Debug, Clone)]
+pub struct OverheadConfig {
+    /// Repetitions per interval (the paper averages repeated runs).
+    pub reps: u32,
+    pub seed: u64,
+}
+
+impl Default for OverheadConfig {
+    fn default() -> Self {
+        OverheadConfig { reps: 30, seed: 42 }
+    }
+}
+
+// --------------------------------------------------------------------------
+// A minimal world for the §4.1 rig: one pod, no serving stack.
+
+struct Rig {
+    cluster: Cluster,
+    api: ApiServer,
+    kubelet: Kubelet,
+    rng: Rng,
+    node: NodeId,
+    pod: PodId,
+    /// Completed (dispatch, landed) times for the in-flight patch.
+    landed_at: Option<SimTime>,
+}
+
+type REng = Engine<Rig>;
+
+impl Rig {
+    fn new(seed: u64, state: WorkState) -> Rig {
+        let mut cluster = Cluster::new();
+        let node = cluster.add_node(
+            "kind-worker",
+            Resources::new(MilliCpu(8000), Memory::from_gib(10)),
+        );
+        for s in state.stressors(8) {
+            cluster.node_mut(node).attach_stressor(s);
+        }
+        // The paper's rig: a single plain container, request small, limit
+        // adjustable; 6000m sweeps need capacity headroom.
+        let pod = cluster.create_pod(PodSpec::single(
+            "target",
+            "kinetic/rig:v1",
+            Resources::new(MilliCpu(100), Memory::from_mib(128)),
+            Resources::new(MilliCpu(1), Memory::from_mib(512)),
+        ));
+        cluster.bind(pod, node).unwrap();
+        cluster.pod_mut(pod).unwrap().status.phase = PodPhase::Running;
+        Rig {
+            cluster,
+            api: ApiServer::new(FeatureGates::paper_testbed()),
+            kubelet: Kubelet::default(),
+            rng: Rng::new(seed),
+            node,
+            pod,
+            landed_at: None,
+        }
+    }
+
+    fn load(&self) -> NodeLoad {
+        self.cluster.node(self.node).load()
+    }
+
+    /// Sets the applied limit directly (preparing an interval start).
+    fn force_limit(&mut self, m: MilliCpu, now: SimTime) {
+        let pod = self.cluster.pod_mut(self.pod).unwrap();
+        pod.status.applied_cpu_limit = m;
+        pod.main_container_mut().limits.cpu = m;
+        let node = self.node;
+        self.cluster.node_mut(node).apply_cpu_limit(self.pod, m, now);
+    }
+
+}
+
+/// Drives one measured resize on a (rig, engine) pair.
+fn measure(rig: &mut Rig, eng: &mut REng, target: MilliCpu) -> SimTime {
+    let dispatched = eng.now();
+    rig.landed_at = None;
+    let cur = rig.cluster.pod(rig.pod).unwrap().status.applied_cpu_limit;
+    rig.api
+        .patch_resize(
+            &mut rig.cluster,
+            ResizePatch {
+                pod: rig.pod,
+                new_cpu_limit: target,
+            },
+            dispatched,
+        )
+        .expect("patch accepted");
+    let _ = rig
+        .api
+        .mark_in_progress(&mut rig.cluster, rig.pod, target, dispatched);
+    let load = rig.load();
+    let lat = rig.kubelet.resize_latency(cur, target, load, &mut rig.rng);
+    let pod = rig.pod;
+    eng.schedule_in(lat, move |w: &mut Rig, eng| {
+        let now = eng.now();
+        let node = w.node;
+        w.cluster.node_mut(node).apply_cpu_limit(pod, target, now);
+        w.api
+            .mark_done(&mut w.cluster, pod, target, now)
+            .expect("resize done");
+        w.landed_at = Some(now);
+    });
+    eng.run(rig);
+    eng.now() - dispatched
+}
+
+// --------------------------------------------------------------------------
+
+/// The §4.1 experiment driver.
+pub struct OverheadExperiment {
+    pub cfg: OverheadConfig,
+}
+
+impl OverheadExperiment {
+    pub fn new(cfg: OverheadConfig) -> OverheadExperiment {
+        OverheadExperiment { cfg }
+    }
+
+    /// Interval endpoints for a sweep, e.g. step 100: [1,100,200,…,1000].
+    fn sweep_points(step: u64, max: u64) -> Vec<u64> {
+        let mut pts = vec![1u64];
+        let mut v = step;
+        while v <= max {
+            pts.push(v);
+            v += step;
+        }
+        pts
+    }
+
+    /// Runs one (step, pattern, direction, state) cell of Table 1 and
+    /// returns per-interval stats.
+    pub fn run_cell(
+        &self,
+        step: u64,
+        max: u64,
+        pattern: Pattern,
+        up: bool,
+        state: WorkState,
+    ) -> Vec<OverheadPoint> {
+        let mut pts = Self::sweep_points(step, max);
+        if !up {
+            pts.reverse();
+        }
+        let base = pts[0];
+        let mut out: Vec<OverheadPoint> = pts
+            .windows(2)
+            .map(|w| OverheadPoint {
+                from_m: w[0],
+                to_m: w[1],
+                state,
+                pattern,
+                stats: Summary::new(),
+            })
+            .collect();
+
+        for rep in 0..self.cfg.reps {
+            let mut rig = Rig::new(
+                self.cfg.seed ^ (rep as u64) << 17 ^ hash_state(state, pattern, up, step),
+                state,
+            );
+            let mut eng: REng = Engine::new();
+            match pattern {
+                Pattern::Incremental => {
+                    rig.force_limit(MilliCpu(base), eng.now());
+                    for (i, w) in pts.windows(2).enumerate() {
+                        let d = measure(&mut rig, &mut eng, MilliCpu(w[1]));
+                        out[i].stats.record(d.as_millis_f64());
+                    }
+                }
+                Pattern::Cumulative => {
+                    for (i, w) in pts.windows(2).enumerate() {
+                        rig.force_limit(MilliCpu(base), eng.now());
+                        let d = measure(&mut rig, &mut eng, MilliCpu(w[1]));
+                        out[i].stats.record(d.as_millis_f64());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Fig 2: step 100 m over 1 m↔1000 m, all states, both patterns and
+    /// directions. Returns (pattern, up, state) → points.
+    pub fn fig2(&self) -> Vec<(Pattern, bool, Vec<OverheadPoint>)> {
+        let mut out = Vec::new();
+        for pattern in [Pattern::Incremental, Pattern::Cumulative] {
+            for up in [true, false] {
+                let mut merged: Vec<OverheadPoint> = Vec::new();
+                for state in WorkState::ALL {
+                    merged.extend(self.run_cell(100, 1000, pattern, up, state));
+                }
+                out.push((pattern, up, merged));
+            }
+        }
+        out
+    }
+
+    /// Fig 3: step 1000 m over 1 m↔6000 m.
+    pub fn fig3(&self) -> Vec<(bool, Vec<OverheadPoint>)> {
+        let mut out = Vec::new();
+        for up in [true, false] {
+            let mut merged = Vec::new();
+            for state in WorkState::ALL {
+                merged.extend(self.run_cell(1000, 6000, Pattern::Incremental, up, state));
+            }
+            out.push((up, merged));
+        }
+        out
+    }
+
+    /// Fig 4: idle, 5 m granularity. (a) increments ending at 1000 m,
+    /// (b) decrements from 1000 m toward 5 m.
+    pub fn fig4(&self) -> (Vec<OverheadPoint>, Vec<OverheadPoint>) {
+        let up = self.run_cell(5, 1000, Pattern::Incremental, true, WorkState::Idle);
+        let down = self.run_cell(5, 1000, Pattern::Incremental, false, WorkState::Idle);
+        (up, down)
+    }
+}
+
+fn hash_state(state: WorkState, pattern: Pattern, up: bool, step: u64) -> u64 {
+    let s = match state {
+        WorkState::Idle => 1,
+        WorkState::StressCpu => 2,
+        WorkState::StressIo => 3,
+    };
+    let p = match pattern {
+        Pattern::Incremental => 5,
+        Pattern::Cumulative => 7,
+    };
+    s * 1_000_003 + p * 10_007 + (up as u64) * 97 + step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> OverheadExperiment {
+        OverheadExperiment::new(OverheadConfig { reps: 12, seed: 3 })
+    }
+
+    #[test]
+    fn sweep_points_shape() {
+        assert_eq!(
+            OverheadExperiment::sweep_points(100, 1000),
+            vec![1, 100, 200, 300, 400, 500, 600, 700, 800, 900, 1000]
+        );
+        assert_eq!(
+            OverheadExperiment::sweep_points(1000, 6000),
+            vec![1, 1000, 2000, 3000, 4000, 5000, 6000]
+        );
+    }
+
+    #[test]
+    fn fig2a_first_intervals_inflate_under_cpu_stress() {
+        let exp = quick();
+        let idle = exp.run_cell(100, 1000, Pattern::Incremental, true, WorkState::Idle);
+        let busy = exp.run_cell(100, 1000, Pattern::Incremental, true, WorkState::StressCpu);
+        // 1m→100m: mean ratio in the paper is 6.06×.
+        let r0 = busy[0].stats.mean() / idle[0].stats.mean();
+        assert!((3.5..9.5).contains(&r0), "1m→100m ratio {r0}");
+        // 100m→200m: 2.88×.
+        let r1 = busy[1].stats.mean() / idle[1].stats.mean();
+        assert!((1.8..4.8).contains(&r1), "100m→200m ratio {r1}");
+        // Later intervals: not notable.
+        let r8 = busy[8].stats.mean() / idle[8].stats.mean();
+        assert!(r8 < 1.6, "800m→900m ratio {r8}");
+    }
+
+    #[test]
+    fn fig3_large_steps_uniform_but_final_downstep_slow() {
+        let exp = quick();
+        let fig3 = exp.fig3();
+        let (_, up_points) = &fig3[0];
+        // Up: idle vs stress-cpu similar on every interval.
+        let idle: Vec<&OverheadPoint> = up_points
+            .iter()
+            .filter(|p| p.state == WorkState::Idle)
+            .collect();
+        let busy: Vec<&OverheadPoint> = up_points
+            .iter()
+            .filter(|p| p.state == WorkState::StressCpu)
+            .collect();
+        for (i, b) in idle.iter().zip(&busy) {
+            let r = b.stats.mean() / i.stats.mean();
+            assert!(r < 1.6, "up interval {}→{} ratio {r}", i.from_m, i.to_m);
+        }
+        let (_, down_points) = &fig3[1];
+        let idle_down: Vec<&OverheadPoint> = down_points
+            .iter()
+            .filter(|p| p.state == WorkState::Idle)
+            .collect();
+        // Final 1000m→1m step dominates the others.
+        let last = idle_down.last().unwrap();
+        assert_eq!(last.to_m, 1);
+        let mid = &idle_down[2];
+        assert!(
+            last.stats.mean() > 4.0 * mid.stats.mean(),
+            "last={} mid={}",
+            last.stats.mean(),
+            mid.stats.mean()
+        );
+    }
+
+    #[test]
+    fn fig4a_flat_mean_near_56ms() {
+        let exp = OverheadExperiment::new(OverheadConfig { reps: 6, seed: 5 });
+        let (up, down) = exp.fig4();
+        let mut all = Summary::new();
+        for p in &up {
+            all.record(p.stats.mean());
+        }
+        // Paper: 56.44 ms ± 8.53.
+        assert!((all.mean() - 56.44).abs() < 6.0, "mean={}", all.mean());
+        // Down: rising toward small targets.
+        let head = &down[0]; // 1000m→995m
+        let tail = down.last().unwrap(); // →5m? last interval ends at 1? ends at 5.
+        assert!(
+            tail.stats.mean() > 2.0 * head.stats.mean(),
+            "head={} tail={}",
+            head.stats.mean(),
+            tail.stats.mean()
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let exp = quick();
+        let a = exp.run_cell(1000, 6000, Pattern::Cumulative, true, WorkState::Idle);
+        let b = exp.run_cell(1000, 6000, Pattern::Cumulative, true, WorkState::Idle);
+        assert_eq!(a[0].stats.mean().to_bits(), b[0].stats.mean().to_bits());
+    }
+}

@@ -1,0 +1,151 @@
+//! The activator: when a revision is scaled to zero (or all pods are at
+//! their concurrency limit), requests buffer here while a pod comes up.
+//! First-in first-out, with capacity + timeout guards.
+
+use std::collections::VecDeque;
+
+use crate::simclock::SimTime;
+
+/// Identifies a request across the platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// A buffered request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Buffered {
+    pub request: RequestId,
+    pub enqueued_at: SimTime,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ActivatorError {
+    #[error("activator buffer full")]
+    Overflow,
+}
+
+/// Per-revision activator buffer.
+#[derive(Debug)]
+pub struct Activator {
+    queue: VecDeque<Buffered>,
+    capacity: usize,
+    /// Requests older than this are failed on drain (k8s ingress timeout).
+    pub timeout: SimTime,
+    /// Counters for metrics.
+    pub total_buffered: u64,
+    pub total_timed_out: u64,
+}
+
+impl Default for Activator {
+    fn default() -> Self {
+        Activator::new(4096, SimTime::from_secs(600))
+    }
+}
+
+impl Activator {
+    pub fn new(capacity: usize, timeout: SimTime) -> Activator {
+        Activator {
+            queue: VecDeque::new(),
+            capacity,
+            timeout,
+            total_buffered: 0,
+            total_timed_out: 0,
+        }
+    }
+
+    /// Buffers a request while capacity scales up.
+    pub fn buffer(&mut self, request: RequestId, now: SimTime) -> Result<(), ActivatorError> {
+        if self.queue.len() >= self.capacity {
+            return Err(ActivatorError::Overflow);
+        }
+        self.queue.push_back(Buffered {
+            request,
+            enqueued_at: now,
+        });
+        self.total_buffered += 1;
+        Ok(())
+    }
+
+    /// Pops up to `n` requests for dispatch, dropping timed-out entries.
+    /// Returns `(dispatchable, timed_out)`.
+    pub fn drain(&mut self, n: usize, now: SimTime) -> (Vec<Buffered>, Vec<Buffered>) {
+        let mut out = Vec::new();
+        let mut dead = Vec::new();
+        while out.len() < n {
+            match self.queue.front() {
+                Some(b) if now.saturating_sub(b.enqueued_at) > self.timeout => {
+                    dead.push(self.queue.pop_front().unwrap());
+                    self.total_timed_out += 1;
+                }
+                Some(_) => out.push(self.queue.pop_front().unwrap()),
+                None => break,
+            }
+        }
+        (out, dead)
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Age of the oldest buffered request.
+    pub fn oldest_wait(&self, now: SimTime) -> SimTime {
+        self.queue
+            .front()
+            .map(|b| now.saturating_sub(b.enqueued_at))
+            .unwrap_or(SimTime::ZERO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut a = Activator::default();
+        for i in 0..5 {
+            a.buffer(RequestId(i), SimTime::from_millis(i)).unwrap();
+        }
+        let (out, dead) = a.drain(3, SimTime::from_millis(10));
+        assert!(dead.is_empty());
+        let ids: Vec<u64> = out.iter().map(|b| b.request.0).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut a = Activator::new(2, SimTime::from_secs(1));
+        a.buffer(RequestId(0), SimTime::ZERO).unwrap();
+        a.buffer(RequestId(1), SimTime::ZERO).unwrap();
+        assert_eq!(
+            a.buffer(RequestId(2), SimTime::ZERO),
+            Err(ActivatorError::Overflow)
+        );
+    }
+
+    #[test]
+    fn timeouts_dropped_on_drain() {
+        let mut a = Activator::new(10, SimTime::from_secs(1));
+        a.buffer(RequestId(0), SimTime::ZERO).unwrap();
+        a.buffer(RequestId(1), SimTime::from_secs(2)).unwrap();
+        let (out, dead) = a.drain(10, SimTime::from_secs(2));
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].request, RequestId(0));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].request, RequestId(1));
+        assert_eq!(a.total_timed_out, 1);
+    }
+
+    #[test]
+    fn oldest_wait_tracks_head() {
+        let mut a = Activator::default();
+        assert_eq!(a.oldest_wait(SimTime::from_secs(5)), SimTime::ZERO);
+        a.buffer(RequestId(0), SimTime::from_secs(1)).unwrap();
+        assert_eq!(a.oldest_wait(SimTime::from_secs(5)), SimTime::from_secs(4));
+    }
+}

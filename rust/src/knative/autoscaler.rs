@@ -1,0 +1,226 @@
+//! The KPA (Knative Pod Autoscaler), concurrency mode.
+//!
+//! Tracks revision concurrency as a step function of virtual time, computes
+//! the time-weighted average over the stable window (and a 6× shorter panic
+//! window), and recommends a replica count:
+//!
+//! * desired = ceil(window_avg / target_concurrency), clamped to
+//!   [min_scale, max_scale];
+//! * panic mode (short-window avg ≥ 2× target × pods) freezes scale-down;
+//! * scale-to-zero only after the stable window has seen zero concurrency.
+
+use std::collections::VecDeque;
+
+use crate::knative::config::RevisionConfig;
+use crate::simclock::SimTime;
+
+/// A recommendation from the autoscaler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleDecision {
+    pub desired: u32,
+    /// True when the panic window is hot (scale-down frozen).
+    pub panicking: bool,
+}
+
+/// Concurrency sample: value in force since `at`.
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    at: SimTime,
+    concurrency: u32,
+}
+
+/// Per-revision autoscaler state.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: RevisionConfig,
+    /// Step-function history, oldest first. Always non-empty.
+    history: VecDeque<Sample>,
+    current: u32,
+    /// Time of the last moment concurrency was non-zero.
+    last_active: SimTime,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: RevisionConfig) -> Autoscaler {
+        Autoscaler {
+            cfg,
+            history: VecDeque::from([Sample {
+                at: SimTime::ZERO,
+                concurrency: 0,
+            }]),
+            current: 0,
+            last_active: SimTime::ZERO,
+        }
+    }
+
+    pub fn config(&self) -> &RevisionConfig {
+        &self.cfg
+    }
+
+    /// Records a concurrency change (request started / finished).
+    pub fn record(&mut self, now: SimTime, concurrency: u32) {
+        if self.current > 0 {
+            self.last_active = now;
+        }
+        self.current = concurrency;
+        if concurrency > 0 {
+            self.last_active = now;
+        }
+        self.history.push_back(Sample { at: now, concurrency });
+        self.gc(now);
+    }
+
+    fn gc(&mut self, now: SimTime) {
+        let horizon = now.saturating_sub(self.cfg.stable_window + SimTime::from_secs(1));
+        while self.history.len() > 1 && self.history[1].at <= horizon {
+            self.history.pop_front();
+        }
+    }
+
+    /// Time-weighted average concurrency over `[now - window, now]`.
+    pub fn window_average(&self, now: SimTime, window: SimTime) -> f64 {
+        let start = now.saturating_sub(window);
+        if now == start {
+            return self.current as f64;
+        }
+        let mut acc = 0.0f64;
+        // Walk samples; each sample holds from its `at` until the next.
+        for (i, s) in self.history.iter().enumerate() {
+            let seg_start = s.at.max(start);
+            let seg_end = self
+                .history
+                .get(i + 1)
+                .map(|n| n.at)
+                .unwrap_or(now)
+                .min(now);
+            if seg_end > seg_start {
+                acc += s.concurrency as f64 * (seg_end - seg_start).as_millis_f64();
+            }
+        }
+        acc / (now - start).as_millis_f64()
+    }
+
+    /// The scaling recommendation at `now`, given current ready replicas.
+    pub fn decide(&self, now: SimTime, ready: u32) -> ScaleDecision {
+        let stable_avg = self.window_average(now, self.cfg.stable_window);
+        let panic_window = SimTime::from_nanos(self.cfg.stable_window.as_nanos() / 6);
+        let panic_avg = self.window_average(now, panic_window.max(SimTime::from_secs(1)));
+
+        let target = self.cfg.target_concurrency.max(0.01);
+        let mut desired = (stable_avg / target).ceil() as u32;
+
+        let panicking = ready > 0 && panic_avg >= 2.0 * target * ready as f64;
+        if panicking {
+            // Panic: react to the short window, never scale down.
+            desired = desired.max((panic_avg / target).ceil() as u32).max(ready);
+        }
+
+        // Scale-to-zero gate: only when the stable window saw no activity.
+        if desired == 0 {
+            let quiet_for = now.saturating_sub(self.last_active);
+            if self.current > 0 || quiet_for < self.cfg.stable_window {
+                desired = 1.min(ready.max(1));
+            }
+        }
+
+        ScaleDecision {
+            desired: desired.clamp(self.cfg.min_scale, self.cfg.max_scale.max(self.cfg.min_scale)),
+            panicking,
+        }
+    }
+
+    /// True when the revision has been idle long enough to scale to zero.
+    pub fn idle_expired(&self, now: SimTime) -> bool {
+        self.current == 0
+            && now.saturating_sub(self.last_active)
+                >= self.cfg.stable_window + self.cfg.scale_to_zero_grace
+    }
+
+    pub fn current_concurrency(&self) -> u32 {
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(min: u32, max: u32, window_s: u64, target: f64) -> RevisionConfig {
+        RevisionConfig {
+            min_scale: min,
+            max_scale: max,
+            stable_window: SimTime::from_secs(window_s),
+            target_concurrency: target,
+            ..RevisionConfig::default()
+        }
+    }
+
+    #[test]
+    fn window_average_step_function() {
+        let mut a = Autoscaler::new(cfg(0, 10, 10, 1.0));
+        a.record(SimTime::from_secs(0), 2);
+        a.record(SimTime::from_secs(5), 4);
+        // Over [0,10]: 5s at 2 + 5s at 4 = 3.0 average.
+        let avg = a.window_average(SimTime::from_secs(10), SimTime::from_secs(10));
+        assert!((avg - 3.0).abs() < 1e-9, "avg={avg}");
+    }
+
+    #[test]
+    fn desired_scales_with_load() {
+        let mut a = Autoscaler::new(cfg(0, 10, 10, 2.0));
+        a.record(SimTime::from_secs(0), 8);
+        let d = a.decide(SimTime::from_secs(10), 1);
+        // avg 8 / target 2 = 4 pods.
+        assert_eq!(d.desired, 4);
+    }
+
+    #[test]
+    fn clamped_to_max_scale() {
+        let mut a = Autoscaler::new(cfg(0, 3, 10, 1.0));
+        a.record(SimTime::from_secs(0), 50);
+        assert_eq!(a.decide(SimTime::from_secs(10), 1).desired, 3);
+    }
+
+    #[test]
+    fn min_scale_keeps_warm_pod() {
+        let a = Autoscaler::new(cfg(1, 10, 10, 1.0));
+        // Never any traffic — min_scale=1 still demands a pod.
+        assert_eq!(a.decide(SimTime::from_secs(100), 1).desired, 1);
+    }
+
+    #[test]
+    fn scale_to_zero_needs_quiet_stable_window() {
+        let mut a = Autoscaler::new(cfg(0, 10, 6, 1.0));
+        a.record(SimTime::from_secs(0), 1);
+        a.record(SimTime::from_secs(2), 0);
+        // At t=4: only 2s quiet — not yet.
+        assert!(!a.idle_expired(SimTime::from_secs(4)));
+        assert_eq!(a.decide(SimTime::from_secs(4), 1).desired, 1);
+        // At t=9: 7s ≥ 6s window — scale to zero allowed.
+        assert!(a.idle_expired(SimTime::from_secs(9)));
+    }
+
+    #[test]
+    fn panic_mode_freezes_scale_down() {
+        let mut a = Autoscaler::new(cfg(0, 10, 60, 1.0));
+        // Long quiet history then a sudden heavy burst filling the panic
+        // window (stable_window/6 = 10 s).
+        a.record(SimTime::from_secs(0), 0);
+        a.record(SimTime::from_secs(51), 100);
+        let d = a.decide(SimTime::from_secs(60), 4);
+        assert!(d.panicking);
+        assert!(d.desired >= 4, "panic must not scale down, got {}", d.desired);
+    }
+
+    #[test]
+    fn history_gc_keeps_window_accurate() {
+        let mut a = Autoscaler::new(cfg(0, 10, 5, 1.0));
+        for s in 0..100 {
+            a.record(SimTime::from_secs(s), (s % 3) as u32);
+        }
+        // History bounded (window 5s + 1s slack → ≲ 8 samples retained).
+        assert!(a.history.len() < 10, "len={}", a.history.len());
+        let avg = a.window_average(SimTime::from_secs(100), SimTime::from_secs(5));
+        assert!(avg > 0.0 && avg < 3.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Revision-level autoscaling configuration — the knobs the paper tunes to
+//! express its three policies (§4.2):
+//!
+//! * **Cold**: `stable_window = 6 s` (Knative's minimum; default is 30 s),
+//!   `min_scale = 0` → the revision scales to zero between bursts and every
+//!   fresh request pays a cold start.
+//! * **Warm**: `min_scale = 1` → one pod always ready.
+//! * **In-place**: `min_scale = 1` *but* the pod parks at 1 m CPU between
+//!   requests; the queue-proxy hooks resize it around each request.
+
+use crate::simclock::SimTime;
+use crate::util::quantity::MilliCpu;
+
+/// Autoscaling + serving configuration for one revision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RevisionConfig {
+    /// Minimum replicas (0 allows scale-to-zero).
+    pub min_scale: u32,
+    /// Maximum replicas.
+    pub max_scale: u32,
+    /// Window with no traffic after which a pod may be scaled to zero.
+    pub stable_window: SimTime,
+    /// Extra grace after the window before the pod is actually deleted.
+    pub scale_to_zero_grace: SimTime,
+    /// Hard cap on in-flight requests per pod (0 = unlimited).
+    pub container_concurrency: u32,
+    /// Soft target concurrency per pod the KPA aims for.
+    pub target_concurrency: f64,
+    /// Serving CPU limit for the function container.
+    pub serving_cpu: MilliCpu,
+    /// Parked CPU limit between requests (in-place policy only).
+    pub parked_cpu: MilliCpu,
+}
+
+impl Default for RevisionConfig {
+    fn default() -> Self {
+        RevisionConfig {
+            min_scale: 0,
+            max_scale: 1,
+            // Knative default stable window.
+            stable_window: SimTime::from_secs(30),
+            scale_to_zero_grace: SimTime::from_secs(0),
+            container_concurrency: 0,
+            target_concurrency: 10.0,
+            serving_cpu: MilliCpu::ONE_CPU,
+            parked_cpu: MilliCpu::PARKED,
+        }
+    }
+}
+
+impl RevisionConfig {
+    /// The paper's cold configuration: 6 s stable window, scale-to-zero.
+    pub fn paper_cold() -> RevisionConfig {
+        RevisionConfig {
+            min_scale: 0,
+            stable_window: SimTime::from_secs(6),
+            ..RevisionConfig::default()
+        }
+    }
+
+    /// The paper's warm configuration: `min-scale: 1`.
+    pub fn paper_warm() -> RevisionConfig {
+        RevisionConfig {
+            min_scale: 1,
+            ..RevisionConfig::default()
+        }
+    }
+
+    /// The paper's in-place configuration: one pod kept, parked at 1 m,
+    /// resized to 1000 m per request.
+    pub fn paper_inplace() -> RevisionConfig {
+        RevisionConfig {
+            min_scale: 1,
+            serving_cpu: MilliCpu::ONE_CPU,
+            parked_cpu: MilliCpu::PARKED,
+            ..RevisionConfig::default()
+        }
+    }
+
+    /// Effective per-pod concurrency limit (`u32::MAX` when unlimited).
+    pub fn concurrency_limit(&self) -> u32 {
+        if self.container_concurrency == 0 {
+            u32::MAX
+        } else {
+            self.container_concurrency
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs() {
+        let cold = RevisionConfig::paper_cold();
+        assert_eq!(cold.min_scale, 0);
+        assert_eq!(cold.stable_window, SimTime::from_secs(6));
+
+        let warm = RevisionConfig::paper_warm();
+        assert_eq!(warm.min_scale, 1);
+
+        let inp = RevisionConfig::paper_inplace();
+        assert_eq!(inp.parked_cpu, MilliCpu(1));
+        assert_eq!(inp.serving_cpu, MilliCpu(1000));
+    }
+
+    #[test]
+    fn concurrency_limit_zero_means_unlimited() {
+        let mut c = RevisionConfig::default();
+        assert_eq!(c.concurrency_limit(), u32::MAX);
+        c.container_concurrency = 4;
+        assert_eq!(c.concurrency_limit(), 4);
+    }
+}

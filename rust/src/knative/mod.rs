@@ -1,0 +1,14 @@
+//! The Knative-shaped serving layer: revision configuration, the KPA
+//! (Knative Pod Autoscaler), the activator (scale-from-zero request
+//! buffering) and the queue-proxy sidecar — including the paper's §4.2
+//! modification: resize hooks before and after each request.
+
+pub mod activator;
+pub mod autoscaler;
+pub mod config;
+pub mod queue_proxy;
+
+pub use activator::Activator;
+pub use autoscaler::{Autoscaler, ScaleDecision};
+pub use config::RevisionConfig;
+pub use queue_proxy::{ProxyParams, QueueProxy};

@@ -1,0 +1,27 @@
+//! # kinetic
+//!
+//! A three-layer (Rust + JAX + Pallas) reproduction of *"Towards Serverless
+//! Optimization with In-place Scaling"* (Hsieh & Chou, 2023): a serverless
+//! platform with Kubernetes-1.27-style **in-place pod vertical scaling**
+//! integrated as a first-class scheduling policy, plus every substrate the
+//! paper's evaluation depends on (cluster, cgroups/CFS, Knative-style
+//! autoscaling, load generation) built from scratch as a deterministic
+//! discrete-event simulation with a real PJRT compute path.
+//!
+//! Start from [`coordinator::Platform`] for the public API, or run
+//! `cargo run -- exp all` to regenerate every table and figure in the paper.
+
+pub mod simclock;
+pub mod util;
+
+pub mod apiserver;
+pub mod cgroup;
+pub mod cluster;
+pub mod coordinator;
+pub mod experiments;
+pub mod knative;
+pub mod loadgen;
+pub mod policy;
+pub mod runtime;
+pub mod trace;
+pub mod workload;

@@ -1,0 +1,128 @@
+//! Arrival processes for open-loop load generation.
+
+use crate::simclock::SimTime;
+use crate::util::rng::Rng;
+
+/// An arrival process generating inter-arrival gaps.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// Fixed rate: one request every `period`.
+    Constant { period: SimTime },
+    /// Poisson process with `rate_per_sec` mean arrivals per second.
+    Poisson { rate_per_sec: f64 },
+    /// On/off bursts: `burst_n` back-to-back requests every `period`.
+    Bursty { period: SimTime, burst_n: u32 },
+}
+
+impl Arrival {
+    /// Generates all arrival times in `[0, horizon)`.
+    pub fn times(&self, horizon: SimTime, rng: &mut Rng) -> Vec<SimTime> {
+        let mut out = Vec::new();
+        match self {
+            Arrival::Constant { period } => {
+                assert!(period.as_nanos() > 0);
+                let mut t = SimTime::ZERO;
+                while t < horizon {
+                    out.push(t);
+                    t += *period;
+                }
+            }
+            Arrival::Poisson { rate_per_sec } => {
+                assert!(*rate_per_sec > 0.0);
+                let mut t = 0.0f64;
+                let horizon_s = horizon.as_secs_f64();
+                loop {
+                    t += rng.exponential(*rate_per_sec);
+                    if t >= horizon_s {
+                        break;
+                    }
+                    out.push(SimTime::from_secs_f64(t));
+                }
+            }
+            Arrival::Bursty { period, burst_n } => {
+                let mut t = SimTime::ZERO;
+                while t < horizon {
+                    for i in 0..*burst_n {
+                        // Spread the burst over a millisecond so ordering
+                        // stays deterministic but near-simultaneous.
+                        out.push(t + SimTime::from_micros(i as u64 * 50));
+                    }
+                    t += *period;
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean rate in requests/second (for reports).
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            Arrival::Constant { period } => 1.0 / period.as_secs_f64(),
+            Arrival::Poisson { rate_per_sec } => *rate_per_sec,
+            Arrival::Bursty { period, burst_n } => *burst_n as f64 / period.as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_arrivals_evenly_spaced() {
+        let mut rng = Rng::new(1);
+        let ts = Arrival::Constant {
+            period: SimTime::from_secs(2),
+        }
+        .times(SimTime::from_secs(10), &mut rng);
+        assert_eq!(ts.len(), 5);
+        assert_eq!(ts[1] - ts[0], SimTime::from_secs(2));
+    }
+
+    #[test]
+    fn poisson_rate_approximately_respected() {
+        let mut rng = Rng::new(2);
+        let ts = Arrival::Poisson { rate_per_sec: 50.0 }
+            .times(SimTime::from_secs(100), &mut rng);
+        let n = ts.len() as f64;
+        assert!((n - 5000.0).abs() < 300.0, "n={n}");
+        // Sorted and within horizon.
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        assert!(ts.iter().all(|t| *t < SimTime::from_secs(100)));
+    }
+
+    #[test]
+    fn bursts_cluster() {
+        let mut rng = Rng::new(3);
+        let ts = Arrival::Bursty {
+            period: SimTime::from_secs(5),
+            burst_n: 4,
+        }
+        .times(SimTime::from_secs(10), &mut rng);
+        assert_eq!(ts.len(), 8);
+        // First four within a millisecond of each other.
+        assert!((ts[3] - ts[0]).as_millis_f64() < 1.0);
+        // Gap to the next burst ≈ 5 s.
+        assert!((ts[4] - ts[0]).as_secs_f64() > 4.9);
+    }
+
+    #[test]
+    fn mean_rates() {
+        assert_eq!(
+            Arrival::Constant {
+                period: SimTime::from_millis(100)
+            }
+            .mean_rate(),
+            10.0
+        );
+        assert_eq!(Arrival::Poisson { rate_per_sec: 7.5 }.mean_rate(), 7.5);
+        assert_eq!(
+            Arrival::Bursty {
+                period: SimTime::from_secs(2),
+                burst_n: 6
+            }
+            .mean_rate(),
+            3.0
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! k6-style load generation.
+//!
+//! The paper drives its §4.2 experiments with k6. This module reproduces the
+//! two k6 execution models on the virtual clock:
+//!
+//! * **closed-loop VUs** ([`Scenario::closed`]) — N virtual users each
+//!   issuing `iterations` sequential requests with optional think-time
+//!   (`sleep` between iterations). The cold-policy scenario uses a
+//!   think-time longer than the 6 s stable window so every request pays a
+//!   cold start, mirroring §3's description of when the cold path applies.
+//! * **open-loop arrivals** ([`Scenario::open`]) — Poisson or
+//!   constant-rate arrivals, used by the trace replayer.
+
+pub mod arrival;
+pub mod runner;
+
+pub use arrival::Arrival;
+pub use runner::{LoadReport, Runner, Scenario};

@@ -1,0 +1,248 @@
+//! Scenario runner: drives a [`Simulation`] with k6-style load and reports
+//! latency statistics.
+
+use crate::coordinator::platform::{Eng, Platform, Simulation};
+use crate::loadgen::arrival::Arrival;
+use crate::simclock::SimTime;
+
+/// A load scenario against one service.
+#[derive(Debug, Clone)]
+pub enum Scenario {
+    /// `vus` virtual users, each issuing `iterations` sequential requests
+    /// with `think` sleep between them (k6 closed-loop executor).
+    Closed {
+        vus: u32,
+        iterations: u32,
+        think: SimTime,
+    },
+    /// Open-loop arrivals over `horizon`.
+    Open { arrival: Arrival, horizon: SimTime },
+}
+
+impl Scenario {
+    /// k6 defaults-ish: a handful of VUs, no think time.
+    pub fn closed(vus: u32, iterations: u32) -> Scenario {
+        Scenario::Closed {
+            vus,
+            iterations,
+            think: SimTime::ZERO,
+        }
+    }
+
+    pub fn closed_with_think(vus: u32, iterations: u32, think: SimTime) -> Scenario {
+        Scenario::Closed {
+            vus,
+            iterations,
+            think,
+        }
+    }
+
+    pub fn total_requests(&self, rng_preview: Option<&mut crate::util::rng::Rng>) -> u64 {
+        match self {
+            Scenario::Closed { vus, iterations, .. } => *vus as u64 * *iterations as u64,
+            Scenario::Open { arrival, horizon } => match rng_preview {
+                Some(rng) => arrival.times(*horizon, rng).len() as u64,
+                None => (arrival.mean_rate() * horizon.as_secs_f64()) as u64,
+            },
+        }
+    }
+}
+
+/// Results of a scenario run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub service: String,
+    pub completed: u64,
+    pub failed: u64,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub wall: SimTime,
+    pub throughput_rps: f64,
+    pub cold_starts: u64,
+    pub inplace_scale_ups: u64,
+    /// Average committed CPU over the run (milliCPU) — the reservation cost.
+    pub avg_committed_mcpu: f64,
+}
+
+/// Runs scenarios against a simulation.
+pub struct Runner;
+
+impl Runner {
+    /// VU chain: issue one request; on completion, sleep `think` and repeat
+    /// until `remaining` hits zero.
+    fn vu_iterate(w: &mut Platform, eng: &mut Eng, service: String, remaining: u32, think: SimTime) {
+        if remaining == 0 {
+            return;
+        }
+        let svc = service.clone();
+        w.submit_with_hook(eng, &service, move |w, eng| {
+            if remaining > 1 {
+                let svc2 = svc.clone();
+                eng.schedule_in(think, move |w: &mut Platform, eng| {
+                    Self::vu_iterate(w, eng, svc2, remaining - 1, think);
+                });
+                let _ = w;
+            }
+        });
+    }
+
+    /// Executes `scenario` against `service` on `sim`, running the engine to
+    /// completion, and reports. Metrics are deltas over the run.
+    pub fn run(sim: &mut Simulation, service: &str, scenario: &Scenario) -> LoadReport {
+        let start = sim.now();
+        let (completed0, failed0, cold0, ups0) = {
+            let m = sim.world.metrics.service(service);
+            (m.completed, m.failed, m.cold_starts, m.inplace_scale_ups)
+        };
+        let lat_mark = sim.world.metrics.service(service).latency_ms.len();
+
+        match scenario {
+            Scenario::Closed {
+                vus,
+                iterations,
+                think,
+            } => {
+                for _ in 0..*vus {
+                    let svc = service.to_string();
+                    let (iters, think) = (*iterations, *think);
+                    // Stagger VU starts by a few ms like k6 ramp-up.
+                    let jitter =
+                        SimTime::from_millis_f64(sim.world.rng.range_f64(0.0, 5.0));
+                    sim.engine
+                        .schedule_in(jitter, move |w: &mut Platform, eng| {
+                            Runner::vu_iterate(w, eng, svc, iters, think);
+                        });
+                }
+            }
+            Scenario::Open { arrival, horizon } => {
+                let mut rng = sim.world.rng.fork();
+                for t in arrival.times(*horizon, &mut rng) {
+                    sim.submit_at(start + t, service);
+                }
+            }
+        }
+        sim.run();
+
+        let wall = sim.now().saturating_sub(start);
+        let now = sim.now();
+        let avg_committed = sim.world.metrics.committed_cpu.average_mcpu(now);
+        let m = sim.world.metrics.service(service);
+        let completed = m.completed - completed0;
+        let failed = m.failed - failed0;
+        // Percentiles over the samples recorded during this run only.
+        let all = m.latency_ms.values()[lat_mark..].to_vec();
+        let mut window = crate::util::stats::Samples::new();
+        for v in all {
+            window.record(v);
+        }
+        LoadReport {
+            service: service.to_string(),
+            completed,
+            failed,
+            mean_ms: window.mean(),
+            std_ms: window.std_dev(),
+            p50_ms: window.percentile(50.0),
+            p95_ms: window.percentile(95.0),
+            p99_ms: window.percentile(99.0),
+            min_ms: window.min(),
+            max_ms: window.max(),
+            wall,
+            throughput_rps: if wall.as_secs_f64() > 0.0 {
+                completed as f64 / wall.as_secs_f64()
+            } else {
+                0.0
+            },
+            cold_starts: m.cold_starts - cold0,
+            inplace_scale_ups: m.inplace_scale_ups - ups0,
+            avg_committed_mcpu: avg_committed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::Policy;
+    use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+    fn warm_sim(kind: WorkloadKind) -> Simulation {
+        let mut sim = Simulation::paper(11);
+        sim.deploy("fn", WorkloadProfile::paper(kind), Policy::Warm);
+        sim.run(); // bring up the min-scale pod
+        sim
+    }
+
+    #[test]
+    fn closed_loop_completes_all_iterations() {
+        let mut sim = warm_sim(WorkloadKind::HelloWorld);
+        let report = Runner::run(&mut sim, "fn", &Scenario::closed(3, 10));
+        assert_eq!(report.completed, 30);
+        assert_eq!(report.failed, 0);
+        assert!(report.mean_ms > 5.0);
+        assert!(report.p99_ms >= report.p50_ms);
+        assert!(report.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn think_time_spaces_requests() {
+        let mut sim = warm_sim(WorkloadKind::HelloWorld);
+        let think = SimTime::from_secs(1);
+        let report = Runner::run(
+            &mut sim,
+            "fn",
+            &Scenario::closed_with_think(1, 5, think),
+        );
+        assert_eq!(report.completed, 5);
+        // Wall ≥ 4 think gaps.
+        assert!(report.wall >= SimTime::from_secs(4), "wall={}", report.wall);
+    }
+
+    #[test]
+    fn open_loop_poisson_completes() {
+        let mut sim = warm_sim(WorkloadKind::HelloWorld);
+        let report = Runner::run(
+            &mut sim,
+            "fn",
+            &Scenario::Open {
+                arrival: Arrival::Poisson { rate_per_sec: 20.0 },
+                horizon: SimTime::from_secs(5),
+            },
+        );
+        assert!(report.completed > 50, "completed={}", report.completed);
+        assert_eq!(report.failed, 0);
+    }
+
+    #[test]
+    fn cold_policy_with_long_think_pays_cold_start_each_time() {
+        let mut sim = Simulation::paper(11);
+        sim.deploy(
+            "fn",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::Cold,
+        );
+        sim.run();
+        // Think 8 s > 6 s stable window ⇒ every iteration is a cold start.
+        let report = Runner::run(
+            &mut sim,
+            "fn",
+            &Scenario::closed_with_think(1, 4, SimTime::from_secs(8)),
+        );
+        assert_eq!(report.completed, 4);
+        assert_eq!(report.cold_starts, 4, "report={report:?}");
+        assert!(report.mean_ms > 1000.0);
+    }
+
+    #[test]
+    fn deterministic_reports() {
+        let f = || {
+            let mut sim = warm_sim(WorkloadKind::Cpu);
+            Runner::run(&mut sim, "fn", &Scenario::closed(2, 3)).mean_ms
+        };
+        assert_eq!(f().to_bits(), f().to_bits());
+    }
+}

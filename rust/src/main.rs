@@ -1,0 +1,362 @@
+//! `kinetic` — the platform CLI.
+//!
+//! Subcommands:
+//! * `exp`        — regenerate paper tables/figures (t1|fig2|fig3|fig4|t2|t3|fig6|all)
+//! * `serve`      — run the end-to-end serving demo over the PJRT artifacts
+//! * `trace`      — generate + replay an Azure-style trace under all policies
+//! * `selfcheck`  — validate the AOT artifacts against the manifest oracle
+
+use kinetic::coordinator::platform::Simulation;
+use kinetic::experiments::ablation;
+use kinetic::experiments::memory;
+use kinetic::experiments::policies::PolicyExperiment;
+use kinetic::experiments::report::{
+    fig5_table, fig6_table, overhead_series_table, overhead_table, table3_table,
+    ExperimentReport,
+};
+use kinetic::experiments::scaling_overhead::{OverheadConfig, OverheadExperiment};
+use kinetic::loadgen::runner::{Runner, Scenario};
+use kinetic::policy::Policy;
+use kinetic::runtime::Executor;
+use kinetic::simclock::SimTime;
+use kinetic::trace::generator::{TraceConfig, TraceGenerator};
+use kinetic::trace::replay::replay;
+use kinetic::util::cli::{App, CliError, Command};
+use kinetic::util::logging;
+use kinetic::util::stats::Summary;
+use kinetic::util::table::{fmt_ms, fmt_ratio, Table};
+use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+fn app() -> App {
+    App::new("kinetic", "in-place vertical scaling for serverless (paper reproduction)")
+        .command(
+            Command::new("exp", "regenerate paper tables and figures")
+                .opt("id", "t1|fig2|fig3|fig4|t2|t3|fig6|ablation|memory|all", "all")
+                .opt("reps", "repetitions per measurement", "30")
+                .opt("seed", "rng seed", "42")
+                .opt("out", "results directory", "results")
+                .flag("verbose", "chatty logging"),
+        )
+        .command(
+            Command::new("serve", "serve batched requests over the PJRT artifacts")
+                .opt("requests", "number of requests", "64")
+                .opt("policy", "cold|warm|inplace", "inplace")
+                .opt("seed", "rng seed", "42"),
+        )
+        .command(
+            Command::new("trace", "replay a synthetic Azure-style trace under all policies")
+                .opt("functions", "distinct functions", "8")
+                .opt("seconds", "trace horizon (virtual seconds)", "600")
+                .opt("rate", "peak request rate per second", "4")
+                .opt("seed", "rng seed", "1"),
+        )
+        .command(Command::new("selfcheck", "validate AOT artifacts against the manifest oracle"))
+}
+
+fn run_exp(id: &str, reps: u32, seed: u64, out: &str) {
+    let mut report = ExperimentReport::new();
+    let want = |section: &str| id == "all" || id == section;
+
+    if want("t1") || want("fig2") || want("fig3") || want("fig4") {
+        let exp = OverheadExperiment::new(OverheadConfig { reps, seed });
+        if want("fig2") || want("t1") {
+            for (pattern, up, points) in exp.fig2() {
+                let dir = if up { "up" } else { "down" };
+                let title = format!(
+                    "Fig 2 ({} {}, step 100m): avg in-place scaling latency",
+                    pattern.name(),
+                    dir
+                );
+                let idlbl = format!("fig2_{}_{}", pattern.name(), dir);
+                report.add_table(&idlbl, &overhead_table(&title, &points));
+            }
+        }
+        if want("fig3") || want("t1") {
+            for (up, points) in exp.fig3() {
+                let dir = if up { "up" } else { "down" };
+                let title = format!("Fig 3 ({dir}, step 1000m): avg in-place scaling latency");
+                report.add_table(&format!("fig3_{dir}"), &overhead_table(&title, &points));
+            }
+        }
+        if want("fig4") || want("t1") {
+            let (up, down) = exp.fig4();
+            // Fig 4a headline: flat mean ≈ 56.44 ms ± 8.53.
+            let mut all = Summary::new();
+            for p in &up {
+                all.record(p.stats.mean());
+            }
+            println!(
+                "fig4a: mean {:.2} ms (paper: 56.44), spread σ {:.2} (paper: 8.53)",
+                all.mean(),
+                all.std_dev()
+            );
+            report.add_table(
+                "fig4a",
+                &overhead_series_table("Fig 4a: 5m-granularity increments → 1000m (idle)", &up),
+            );
+            report.add_table(
+                "fig4b",
+                &overhead_series_table("Fig 4b: decrements from 1000m (idle)", &down),
+            );
+        }
+    }
+
+    if want("t2") || want("t3") || want("fig6") {
+        let exp = PolicyExperiment {
+            iterations: reps.clamp(3, 16),
+            think: SimTime::from_secs(8),
+            seed,
+        };
+        if want("t2") {
+            let mut t = Table::new(vec!["Workload", "Runtime (ms)", "σ (ms)", "Paper (ms)"])
+                .title("Table 2: runtime measurements with 1 CPU");
+            for (kind, s) in exp.table2(64) {
+                t.row(vec![
+                    kind.name().to_string(),
+                    fmt_ms(s.mean()),
+                    fmt_ms(s.std_dev()),
+                    fmt_ms(WorkloadProfile::paper(kind).runtime_1cpu_ms),
+                ]);
+            }
+            report.add_table("table2", &t);
+        }
+        if want("t3") || want("fig6") {
+            let rows = exp.table3();
+            if want("t3") {
+                report.add_table("table3", &table3_table(&rows));
+                report.add_table("fig5", &fig5_table(&rows));
+            }
+            if want("fig6") {
+                report.add_table("fig6", &fig6_table(&PolicyExperiment::fig6(&rows)));
+            }
+            if let Some(h) = rows.iter().find(|r| r.function == "helloworld") {
+                println!(
+                    "headline: in-place improves on cold by {}× for helloworld (paper: 18.15×)",
+                    fmt_ratio(h.improvement())
+                );
+            }
+        }
+    }
+
+    if want("ablation") {
+        let mut t = Table::new(vec![
+            "Parked (mCPU)",
+            "Mean (ms)",
+            "p99 (ms)",
+            "Committed (mCPU)",
+            "Conflicts",
+        ])
+        .title("Ablation: parked allocation (in-place, helloworld)");
+        for p in ablation::parked_cpu_sweep(
+            WorkloadKind::HelloWorld,
+            &[1, 10, 50, 100, 250, 500],
+            seed,
+        ) {
+            t.row(vec![
+                format!("{:.0}", p.x),
+                fmt_ms(p.mean_ms),
+                fmt_ms(p.p99_ms),
+                format!("{:.0}", p.avg_committed_mcpu),
+                p.resize_conflicts.to_string(),
+            ]);
+        }
+        report.add_table("ablation_parked", &t);
+
+        let mut t = Table::new(vec![
+            "Stable window (s)",
+            "Mean (ms)",
+            "Cold starts",
+            "Committed (mCPU)",
+        ])
+        .title("Ablation: cold stable window (helloworld, 20 s gaps)");
+        for p in ablation::stable_window_sweep(&[6, 15, 30, 60, 120], SimTime::from_secs(20), seed)
+        {
+            t.row(vec![
+                format!("{:.0}", p.x),
+                fmt_ms(p.mean_ms),
+                p.cold_starts.to_string(),
+                format!("{:.0}", p.avg_committed_mcpu),
+            ]);
+        }
+        report.add_table("ablation_window", &t);
+
+        let mut t = Table::new(vec![
+            "Retry period (ms)",
+            "Mean (ms)",
+            "p99 (ms)",
+            "Conflicts",
+        ])
+        .title("Ablation: hook retry period (in-place, back-to-back)");
+        for p in ablation::retry_period_sweep(&[5, 10, 25, 50, 100, 200], seed) {
+            t.row(vec![
+                format!("{:.0}", p.x),
+                fmt_ms(p.mean_ms),
+                fmt_ms(p.p99_ms),
+                p.resize_conflicts.to_string(),
+            ]);
+        }
+        report.add_table("ablation_retry", &t);
+    }
+
+    if want("memory") {
+        let mut t = Table::new(vec![
+            "Parked (MiB)",
+            "OOM kills / 200",
+            "Mean (ms)",
+            "Committed (MiB)",
+        ])
+        .title("Future work (§6): in-place MEMORY scaling — io workload");
+        for o in memory::parked_memory_sweep(
+            WorkloadKind::Io,
+            &[56.0, 64.0, 96.0, 128.0, 192.0, 256.0, 512.0],
+            seed,
+        ) {
+            t.row(vec![
+                format!("{:.0}", o.parked_mb),
+                o.ooms.to_string(),
+                fmt_ms(o.latency.mean()),
+                format!("{:.0}", o.avg_committed_mb),
+            ]);
+        }
+        report.add_table("memory_sweep", &t);
+        println!("memory ablation: unlike CPU (throttling), memory under-provision kills —");
+        println!("the quantitative form of the paper's reason to defer memory scaling.");
+    }
+
+    if report.is_empty() {
+        eprintln!("unknown experiment id: {id}");
+        std::process::exit(2);
+    }
+    report.print();
+    match report.write_dir(std::path::Path::new(out)) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("could not write results: {e}"),
+    }
+}
+
+fn run_serve(requests: u32, policy: Policy, seed: u64) {
+    // Real-compute path: verify artifacts, then serve through the platform.
+    let mut executor = match Executor::new(None) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    executor.self_check("compute").expect("compute artifact validates");
+    executor.self_check("watermark").expect("watermark artifact validates");
+    println!("PJRT platform: {}; artifacts OK", executor.platform());
+
+    let mut sim = Simulation::paper(seed);
+    sim.deploy("cpu", WorkloadProfile::paper(WorkloadKind::Cpu), policy);
+    sim.run();
+    let report = Runner::run(&mut sim, "cpu", &Scenario::closed(4, (requests / 4).max(1)));
+
+    // Each simulated request corresponds to real kernel executions; run a
+    // batch through PJRT to demonstrate the hot path and measure it.
+    let (x, w, b) = kinetic::runtime::inputs::compute_inputs();
+    let t0 = std::time::Instant::now();
+    let execs = 32.min(requests.max(1));
+    for _ in 0..execs {
+        executor.execute("compute", &[&x, &w, &b]).expect("execute");
+    }
+    let per = t0.elapsed().as_secs_f64() * 1000.0 / f64::from(execs);
+
+    println!(
+        "policy={} completed={} mean={} p99={} throughput={:.1} rps (virtual)",
+        policy.name(),
+        report.completed,
+        fmt_ms(report.mean_ms),
+        fmt_ms(report.p99_ms),
+        report.throughput_rps
+    );
+    println!("real PJRT compute: {execs} executions, {per:.3} ms/exec");
+}
+
+fn run_trace(functions: usize, seconds: u64, rate: f64, seed: u64) {
+    let cfg = TraceConfig {
+        functions,
+        peak_rate: rate,
+        horizon: SimTime::from_secs(seconds),
+        seed,
+        ..TraceConfig::default()
+    };
+    let trace = TraceGenerator::new(cfg).generate();
+    println!(
+        "trace: {} invocations over {seconds}s across {functions} functions",
+        trace.len()
+    );
+    let mut t = Table::new(vec![
+        "Policy",
+        "Mean (ms)",
+        "p99 (ms)",
+        "Cold starts",
+        "Avg committed (mCPU)",
+        "Pods created",
+    ])
+    .title("Trace replay: latency vs reservation");
+    for policy in Policy::ALL {
+        let r = replay(&trace, functions, policy, seed);
+        t.row(vec![
+            policy.name().to_string(),
+            fmt_ms(r.mean_ms),
+            fmt_ms(r.p99_ms),
+            r.cold_starts.to_string(),
+            format!("{:.0}", r.avg_committed_mcpu),
+            r.pods_created.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let inv = match app().parse(&args) {
+        Ok(inv) => inv,
+        Err(CliError::Help(h)) => {
+            println!("{h}");
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    logging::init(if inv.flag("verbose") { 3 } else { 1 });
+
+    match inv.command.as_str() {
+        "exp" => run_exp(
+            inv.get_or("id", "all"),
+            inv.get_u64("reps", 30) as u32,
+            inv.get_u64("seed", 42),
+            inv.get_or("out", "results"),
+        ),
+        "serve" => {
+            let policy: Policy = inv
+                .get_or("policy", "inplace")
+                .parse()
+                .unwrap_or(Policy::InPlace);
+            run_serve(
+                inv.get_u64("requests", 64) as u32,
+                policy,
+                inv.get_u64("seed", 42),
+            );
+        }
+        "trace" => run_trace(
+            inv.get_u64("functions", 8) as usize,
+            inv.get_u64("seconds", 600),
+            inv.get_f64("rate", 4.0),
+            inv.get_u64("seed", 1),
+        ),
+        "selfcheck" => {
+            let mut ex = Executor::new(None).expect("artifacts present");
+            ex.self_check("compute").expect("compute check");
+            ex.self_check("watermark").expect("watermark check");
+            println!("selfcheck OK: compute + watermark match the python oracle");
+        }
+        other => {
+            eprintln!("unhandled command {other}");
+            std::process::exit(2);
+        }
+    }
+}

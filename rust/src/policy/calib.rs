@@ -1,0 +1,106 @@
+//! The platform-wide calibration bundle: every latency constant in one
+//! place, each annotated with the paper measurement it was fitted to.
+
+use crate::cgroup::latency::LatencyModel;
+use crate::cluster::kubelet::StartupParams;
+use crate::knative::queue_proxy::ProxyParams;
+use crate::simclock::SimTime;
+use crate::util::json::Json;
+
+/// All tunables of the simulated platform.
+#[derive(Debug, Clone)]
+pub struct PlatformParams {
+    /// Cold-start pipeline (fitted to Table 3 "Cold" ratios).
+    pub startup: StartupParams,
+    /// Proxy-hop costs (fitted to Table 3 "Warm" ratios).
+    pub proxy: ProxyParams,
+    /// In-place resize propagation (fitted to Figures 2–4).
+    pub resize: LatencyModel,
+    /// Queue-proxy hook retry period when a resize patch conflicts with one
+    /// already in flight (kubelet applies pod resizes serially).
+    pub resize_retry: SimTime,
+    /// Autoscaler evaluation period (Knative ticks at 2 s).
+    pub autoscaler_tick: SimTime,
+    /// RNG seed for the whole platform.
+    pub seed: u64,
+}
+
+impl Default for PlatformParams {
+    fn default() -> Self {
+        PlatformParams {
+            startup: StartupParams::default(),
+            proxy: ProxyParams::default(),
+            resize: LatencyModel::default(),
+            resize_retry: SimTime::from_millis(25),
+            autoscaler_tick: SimTime::from_secs(2),
+            seed: 42,
+        }
+    }
+}
+
+impl PlatformParams {
+    pub fn with_seed(seed: u64) -> PlatformParams {
+        PlatformParams {
+            seed,
+            ..PlatformParams::default()
+        }
+    }
+
+    /// Serializes the calibration for experiment records (EXPERIMENTS.md
+    /// provenance).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", self.seed.into()),
+            (
+                "startup_ms",
+                Json::obj(vec![
+                    ("schedule", self.startup.schedule_ms.into()),
+                    ("sandbox", self.startup.sandbox_ms.into()),
+                    ("image_cached", self.startup.image_cached_ms.into()),
+                    ("container_start", self.startup.container_start_ms.into()),
+                ]),
+            ),
+            (
+                "proxy_ms",
+                Json::obj(vec![
+                    ("forward", self.proxy.forward_ms.into()),
+                    ("respond", self.proxy.respond_ms.into()),
+                    ("hook_dispatch", self.proxy.hook_dispatch_ms.into()),
+                ]),
+            ),
+            (
+                "resize_ms",
+                Json::obj(vec![
+                    ("api_commit", self.resize.params.api_commit_ms.into()),
+                    ("sync_mean", self.resize.params.sync_mean_ms.into()),
+                    ("sync_std", self.resize.params.sync_std_ms.into()),
+                    ("stress_up", self.resize.params.stress_up_ms.into()),
+                    ("stress_down", self.resize.params.stress_down_ms.into()),
+                ]),
+            ),
+            ("resize_retry_ms", self.resize_retry.as_millis_f64().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_consistent() {
+        let p = PlatformParams::default();
+        assert!(p.resize_retry < SimTime::from_millis(100));
+        assert!(p.startup.sandbox_ms > 0.0);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let p = PlatformParams::with_seed(7);
+        let j = p.to_json();
+        assert_eq!(j.req_u64("seed").unwrap(), 7);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req_u64("seed").unwrap(), 7);
+        assert!(parsed.get("resize_ms").unwrap().req_f64("sync_mean").unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! The three scheduling policies of the paper's §3 and the platform-wide
+//! calibration bundle.
+
+pub mod calib;
+
+pub use calib::PlatformParams;
+
+use crate::knative::config::RevisionConfig;
+
+/// The §3 policies.
+///
+/// * `Cold` — scale-to-zero; a request arriving with no live handler pays
+///   the full pod startup pipeline.
+/// * `Warm` — `min-scale: 1`; one pod always ready at full allocation.
+/// * `InPlace` — one pod kept, parked at 1 m CPU; the queue-proxy hooks
+///   resize it to the serving allocation before redirecting each request
+///   and park it again when the pod goes idle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    Cold,
+    Warm,
+    InPlace,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 3] = [Policy::Cold, Policy::Warm, Policy::InPlace];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Cold => "cold",
+            Policy::Warm => "warm",
+            Policy::InPlace => "in-place",
+        }
+    }
+
+    /// The revision configuration the paper uses for this policy.
+    pub fn revision_config(&self) -> RevisionConfig {
+        match self {
+            Policy::Cold => RevisionConfig::paper_cold(),
+            Policy::Warm => RevisionConfig::paper_warm(),
+            Policy::InPlace => RevisionConfig::paper_inplace(),
+        }
+    }
+
+    /// Does this policy install the queue-proxy resize hooks?
+    pub fn inplace_hooks(&self) -> bool {
+        matches!(self, Policy::InPlace)
+    }
+
+    /// Does this policy scale to zero when idle?
+    pub fn scales_to_zero(&self) -> bool {
+        matches!(self, Policy::Cold)
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "cold" => Ok(Policy::Cold),
+            "warm" => Ok(Policy::Warm),
+            "inplace" | "in-place" => Ok(Policy::InPlace),
+            other => Err(format!("unknown policy: {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simclock::SimTime;
+
+    #[test]
+    fn policy_configs_match_paper() {
+        assert_eq!(
+            Policy::Cold.revision_config().stable_window,
+            SimTime::from_secs(6)
+        );
+        assert_eq!(Policy::Warm.revision_config().min_scale, 1);
+        assert!(Policy::InPlace.inplace_hooks());
+        assert!(!Policy::Warm.inplace_hooks());
+        assert!(Policy::Cold.scales_to_zero());
+        assert!(!Policy::InPlace.scales_to_zero());
+    }
+
+    #[test]
+    fn parse_policy() {
+        assert_eq!("cold".parse::<Policy>().unwrap(), Policy::Cold);
+        assert_eq!("in-place".parse::<Policy>().unwrap(), Policy::InPlace);
+        assert_eq!("INPLACE".parse::<Policy>().unwrap(), Policy::InPlace);
+        assert!("hot".parse::<Policy>().is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Artifact manifest: discovery + parsing of `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use thiserror::Error;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Error)]
+pub enum ArtifactError {
+    #[error("artifacts directory not found (tried {0:?}); run `make artifacts`")]
+    DirNotFound(Vec<PathBuf>),
+    #[error("io error reading {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("no such model in manifest: {0}")]
+    NoSuchModel(String),
+}
+
+/// Expected-output check data emitted by `aot.py` (oracle values on the
+/// deterministic example inputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCheck {
+    pub out0_sum: f64,
+    pub out0_first8: Vec<f64>,
+    pub out1_first4: Vec<f64>,
+    pub tolerance: f64,
+}
+
+/// One exported model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub file: String,
+    /// Input shapes (row-major dims).
+    pub input_shapes: Vec<Vec<usize>>,
+    pub outputs: usize,
+    pub check: ModelCheck,
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    /// Locates the artifacts dir: `$KINETIC_ARTIFACTS`, `./artifacts`, or
+    /// `../artifacts` relative to the executable's cwd.
+    pub fn discover() -> Result<Manifest, ArtifactError> {
+        let mut candidates = Vec::new();
+        if let Ok(env) = std::env::var("KINETIC_ARTIFACTS") {
+            candidates.push(PathBuf::from(env));
+        }
+        candidates.push(PathBuf::from("artifacts"));
+        candidates.push(PathBuf::from("../artifacts"));
+        for c in &candidates {
+            if c.join("manifest.json").exists() {
+                return Self::load(c);
+            }
+        }
+        Err(ArtifactError::DirNotFound(candidates))
+    }
+
+    /// Loads the manifest from a specific directory.
+    pub fn load(dir: &Path) -> Result<Manifest, ArtifactError> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| ArtifactError::Io(mpath.clone(), e))?;
+        let json = Json::parse(&text).map_err(|e| ArtifactError::Parse(e.to_string()))?;
+        let models_json = json
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| ArtifactError::Parse("missing 'models'".into()))?;
+        let mut models = Vec::new();
+        for (name, m) in models_json {
+            let file = m
+                .req_str("file")
+                .map_err(|e| ArtifactError::Parse(e.to_string()))?
+                .to_string();
+            let inputs = m
+                .req_arr("inputs")
+                .map_err(|e| ArtifactError::Parse(e.to_string()))?;
+            let mut input_shapes = Vec::new();
+            for i in inputs {
+                let shape = i
+                    .req_arr("shape")
+                    .map_err(|e| ArtifactError::Parse(e.to_string()))?
+                    .iter()
+                    .filter_map(Json::as_u64)
+                    .map(|v| v as usize)
+                    .collect();
+                input_shapes.push(shape);
+            }
+            let outputs = m
+                .req_u64("outputs")
+                .map_err(|e| ArtifactError::Parse(e.to_string()))? as usize;
+            let chk = m
+                .get("check")
+                .ok_or_else(|| ArtifactError::Parse("missing 'check'".into()))?;
+            let grab = |key: &str| -> Result<Vec<f64>, ArtifactError> {
+                Ok(chk
+                    .req_arr(key)
+                    .map_err(|e| ArtifactError::Parse(e.to_string()))?
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .collect())
+            };
+            let check = ModelCheck {
+                out0_sum: chk
+                    .req_f64("out0_sum")
+                    .map_err(|e| ArtifactError::Parse(e.to_string()))?,
+                out0_first8: grab("out0_first8")?,
+                out1_first4: grab("out1_first4")?,
+                tolerance: chk.opt_f64("tolerance", 1e-4),
+            };
+            models.push(ModelEntry {
+                name: name.clone(),
+                file,
+                input_shapes,
+                outputs,
+                check,
+            });
+        }
+        models.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry, ArtifactError> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| ArtifactError::NoSuchModel(name.to_string()))
+    }
+
+    pub fn hlo_path(&self, entry: &ModelEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "models": {
+            "compute": {
+              "file": "compute.hlo.txt",
+              "inputs": [
+                {"shape": [128, 128], "dtype": "float32"},
+                {"shape": [128, 128], "dtype": "float32"},
+                {"shape": [128], "dtype": "float32"}
+              ],
+              "outputs": 2,
+              "check": {
+                "out0_sum": -80.9,
+                "out0_first8": [1, 2, 3, 4, 5, 6, 7, 8],
+                "out1_first4": [0.1, 0.2, 0.3, 0.4],
+                "tolerance": 0.0002
+              }
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("kinetic-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let c = m.model("compute").unwrap();
+        assert_eq!(c.input_shapes[0], vec![128, 128]);
+        assert_eq!(c.input_shapes[2], vec![128]);
+        assert_eq!(c.outputs, 2);
+        assert_eq!(c.check.out0_first8.len(), 8);
+        assert_eq!(c.check.tolerance, 0.0002);
+        assert!(m.model("nope").is_err());
+        assert!(m.hlo_path(c).ends_with("compute.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(matches!(err, ArtifactError::Io(_, _)));
+    }
+
+    #[test]
+    fn real_artifacts_parse_when_present() {
+        // Exercised in CI after `make artifacts`; skips gracefully otherwise.
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.model("compute").is_ok());
+        assert!(m.model("watermark").is_ok());
+    }
+}

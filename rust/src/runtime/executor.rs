@@ -1,0 +1,307 @@
+//! The executor: a PJRT CPU client with a per-model compiled-executable
+//! cache. Compilation happens once per model variant (at platform start or
+//! first use); the request path only queues `execute` calls.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+use crate::runtime::artifacts::{ArtifactError, Manifest, ModelEntry};
+use crate::runtime::inputs;
+
+#[derive(Debug, Error)]
+pub enum ExecError {
+    #[error("artifact error: {0}")]
+    Artifact(#[from] ArtifactError),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("model {0} expects {1} inputs, got {2}")]
+    InputArity(String, usize, usize),
+    #[error("input {0} expects {1} elements, got {2}")]
+    InputSize(usize, usize, usize),
+    #[error("numeric check failed for {model}: {detail}")]
+    CheckFailed { model: String, detail: String },
+}
+
+impl From<xla::Error> for ExecError {
+    fn from(e: xla::Error) -> Self {
+        ExecError::Xla(e.to_string())
+    }
+}
+
+/// Decoded outputs of one execution: each output flattened to f32.
+#[derive(Debug, Clone)]
+pub struct Outputs(pub Vec<Vec<f32>>);
+
+impl Outputs {
+    pub fn primary(&self) -> &[f32] {
+        &self.0[0]
+    }
+}
+
+/// PJRT client + compiled executable cache.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Builds an executor over a manifest (discovers artifacts when `None`).
+    pub fn new(manifest: Option<Manifest>) -> Result<Executor, ExecError> {
+        let manifest = match manifest {
+            Some(m) => m,
+            None => Manifest::discover()?,
+        };
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Executor {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compiles (or fetches from cache) a model's executable.
+    pub fn load(&mut self, name: &str) -> Result<(), ExecError> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.model(name)?.clone();
+        let path = self.manifest.hlo_path(&entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Executes a model with flat-f32 inputs (shapes from the manifest).
+    pub fn execute(&mut self, name: &str, flat_inputs: &[&[f32]]) -> Result<Outputs, ExecError> {
+        self.load(name)?;
+        let entry = self.manifest.model(name)?.clone();
+        if flat_inputs.len() != entry.input_shapes.len() {
+            return Err(ExecError::InputArity(
+                name.to_string(),
+                entry.input_shapes.len(),
+                flat_inputs.len(),
+            ));
+        }
+        let mut literals = Vec::with_capacity(flat_inputs.len());
+        for (i, (data, shape)) in flat_inputs.iter().zip(&entry.input_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                return Err(ExecError::InputSize(i, want, data.len()));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let exe = self.cache.get(name).expect("loaded above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(Outputs(out))
+    }
+
+    /// Builds input literals once for repeated execution (a serving tier
+    /// reuses request buffers; `Literal::vec1 + reshape` copies twice per
+    /// call otherwise — see EXPERIMENTS.md §Perf).
+    pub fn prepare_inputs(
+        &mut self,
+        name: &str,
+        flat_inputs: &[&[f32]],
+    ) -> Result<Vec<xla::Literal>, ExecError> {
+        let entry = self.manifest.model(name)?.clone();
+        if flat_inputs.len() != entry.input_shapes.len() {
+            return Err(ExecError::InputArity(
+                name.to_string(),
+                entry.input_shapes.len(),
+                flat_inputs.len(),
+            ));
+        }
+        let mut literals = Vec::with_capacity(flat_inputs.len());
+        for (i, (data, shape)) in flat_inputs.iter().zip(&entry.input_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                return Err(ExecError::InputSize(i, want, data.len()));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        Ok(literals)
+    }
+
+    /// Executes with pre-built literals (the repeated-execution hot path).
+    pub fn execute_prepared(
+        &mut self,
+        name: &str,
+        literals: &[xla::Literal],
+    ) -> Result<Outputs, ExecError> {
+        self.load(name)?;
+        let exe = self.cache.get(name).expect("loaded above");
+        let result = exe.execute::<xla::Literal>(literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(Outputs(out))
+    }
+
+    /// Runs `model` on its deterministic example inputs and validates the
+    /// outputs against the oracle values baked into the manifest — the
+    /// cross-language numeric check of the whole L1→L2→AOT→PJRT stack.
+    pub fn self_check(&mut self, name: &str) -> Result<(), ExecError> {
+        let entry = self.manifest.model(name)?.clone();
+        let outs = match name {
+            "compute" => {
+                let (x, w, b) = inputs::compute_inputs();
+                self.execute(name, &[&x, &w, &b])?
+            }
+            "watermark" => {
+                let (f, wm, a, g) = inputs::watermark_inputs();
+                self.execute(name, &[&f, &wm, &a, &g])?
+            }
+            other => {
+                return Err(ExecError::Artifact(ArtifactError::NoSuchModel(
+                    other.to_string(),
+                )))
+            }
+        };
+        Self::validate(&entry, &outs)
+    }
+
+    fn validate(entry: &ModelEntry, outs: &Outputs) -> Result<(), ExecError> {
+        let chk = &entry.check;
+        let tol = chk.tolerance.max(1e-9);
+        let fail = |detail: String| ExecError::CheckFailed {
+            model: entry.name.clone(),
+            detail,
+        };
+        if outs.0.len() != entry.outputs {
+            return Err(fail(format!(
+                "expected {} outputs, got {}",
+                entry.outputs,
+                outs.0.len()
+            )));
+        }
+        let sum: f64 = outs.0[0].iter().map(|&v| v as f64).sum();
+        let sum_tol = tol * (outs.0[0].len() as f64).sqrt() * 10.0;
+        if (sum - chk.out0_sum).abs() > sum_tol.max(chk.out0_sum.abs() * 1e-4) {
+            return Err(fail(format!(
+                "out0 sum {} vs expected {}",
+                sum, chk.out0_sum
+            )));
+        }
+        for (i, &want) in chk.out0_first8.iter().enumerate() {
+            let got = outs.0[0][i] as f64;
+            if (got - want).abs() > tol {
+                return Err(fail(format!("out0[{i}] {got} vs expected {want}")));
+            }
+        }
+        for (i, &want) in chk.out1_first4.iter().enumerate() {
+            let got = outs.0[1][i] as f64;
+            if (got - want).abs() > tol {
+                return Err(fail(format!("out1[{i}] {got} vs expected {want}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts_present() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn compute_self_check_end_to_end() {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut ex = Executor::new(None).unwrap();
+        assert_eq!(ex.platform(), "cpu");
+        ex.self_check("compute").unwrap();
+        assert!(ex.loaded("compute"));
+    }
+
+    #[test]
+    fn watermark_self_check_end_to_end() {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut ex = Executor::new(None).unwrap();
+        ex.self_check("watermark").unwrap();
+    }
+
+    #[test]
+    fn execute_validates_arity_and_size() {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut ex = Executor::new(None).unwrap();
+        let err = ex.execute("compute", &[&[1.0f32]]).unwrap_err();
+        assert!(matches!(err, ExecError::InputArity(_, 3, 1)), "{err}");
+        let x = vec![0.0f32; 128 * 128];
+        let w = vec![0.0f32; 128 * 128];
+        let b = vec![0.0f32; 7]; // wrong
+        let err = ex.execute("compute", &[&x, &w, &b]).unwrap_err();
+        assert!(matches!(err, ExecError::InputSize(2, 128, 7)), "{err}");
+    }
+
+    #[test]
+    fn executable_cache_reused() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut ex = Executor::new(None).unwrap();
+        let (x, w, b) = inputs::compute_inputs();
+        let t0 = std::time::Instant::now();
+        ex.execute("compute", &[&x, &w, &b]).unwrap();
+        let first = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        for _ in 0..3 {
+            ex.execute("compute", &[&x, &w, &b]).unwrap();
+        }
+        let later = t1.elapsed() / 3;
+        // Cached executions skip compilation; must be much faster than the
+        // first call (which compiled).
+        assert!(later < first, "first={first:?} later={later:?}");
+    }
+
+    #[test]
+    fn watermark_output_in_range() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut ex = Executor::new(None).unwrap();
+        let (f, wm, a, g) = inputs::watermark_inputs();
+        let out = ex.execute("watermark", &[&f, &wm, &a, &g]).unwrap();
+        let max = out.primary().iter().cloned().fold(f32::MIN, f32::max);
+        assert!(max <= 1.0625 + 1e-5, "max={max}");
+        assert_eq!(out.0[1].len(), 4); // per-frame luminance
+    }
+}

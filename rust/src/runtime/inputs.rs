@@ -1,0 +1,54 @@
+//! Deterministic example inputs — bit-exact mirrors of
+//! `python/compile/model.py::example_*_inputs`, used for end-to-end numeric
+//! validation of the AOT bridge without Python in the loop.
+
+/// Mirrors `example_compute_inputs`: x (128×128), w (128×128), b (128).
+pub fn compute_inputs() -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..128 * 128)
+        .map(|i| (i % 17) as f32 * 0.0625 - 0.5)
+        .collect();
+    let w: Vec<f32> = (0..128 * 128)
+        .map(|i| (i % 13) as f32 * 0.03125 - 0.1875)
+        .collect();
+    let b: Vec<f32> = (0..128).map(|i| (i % 7) as f32 * 0.125 - 0.375).collect();
+    (x, w, b)
+}
+
+/// Mirrors `example_watermark_inputs`: frames (4×64×256), wm (64×256),
+/// alpha (1), gain (1).
+pub fn watermark_inputs() -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = 4 * 64 * 256;
+    let frames: Vec<f32> = (0..n).map(|i| (i % 251) as f32 / 250.0).collect();
+    let wm: Vec<f32> = (0..64 * 256).map(|i| (i % 101) as f32 / 100.0).collect();
+    (frames, wm, vec![0.25], vec![1.0625])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_inputs_shapes_and_values() {
+        let (x, w, b) = compute_inputs();
+        assert_eq!(x.len(), 128 * 128);
+        assert_eq!(w.len(), 128 * 128);
+        assert_eq!(b.len(), 128);
+        assert_eq!(x[0], -0.5);
+        assert_eq!(x[17], -0.5); // period 17
+        assert_eq!(x[1], -0.4375);
+        assert_eq!(b[0], -0.375);
+        // All values exactly representable multiples of 2^-5.
+        assert!(x.iter().all(|v| (v * 32.0).fract() == 0.0));
+    }
+
+    #[test]
+    fn watermark_inputs_ranges() {
+        let (frames, wm, a, g) = watermark_inputs();
+        assert_eq!(frames.len(), 4 * 64 * 256);
+        assert_eq!(wm.len(), 64 * 256);
+        assert!(frames.iter().all(|v| (0.0..=1.0).contains(v)));
+        assert!(wm.iter().all(|v| (0.0..=1.0).contains(v)));
+        assert_eq!(a, vec![0.25]);
+        assert_eq!(g, vec![1.0625]);
+    }
+}

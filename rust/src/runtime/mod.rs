@@ -1,0 +1,13 @@
+//! The PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time — `make artifacts` is the only place
+//! the L1/L2 layers execute; afterwards the `kinetic` binary is
+//! self-contained. Interchange is HLO *text* (see `aot.py` for why).
+
+pub mod artifacts;
+pub mod executor;
+pub mod inputs;
+
+pub use artifacts::{ArtifactError, Manifest, ModelCheck, ModelEntry};
+pub use executor::{ExecError, Executor, Outputs};

@@ -1,0 +1,146 @@
+//! Virtual time: nanosecond-resolution monotonic simulation timestamps.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time, in nanoseconds since simulation start.
+///
+/// Nanosecond resolution keeps sub-microsecond control-plane costs (router
+/// dispatch, queue-proxy hops) representable while `u64` still covers ~584
+/// simulated years — far beyond any trace replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    /// Sentinel for "never".
+    pub const NEVER: SimTime = SimTime(u64::MAX);
+
+    pub fn from_nanos(ns: u64) -> SimTime {
+        SimTime(ns)
+    }
+
+    pub fn from_micros(us: u64) -> SimTime {
+        SimTime(us * 1_000)
+    }
+
+    pub fn from_millis(ms: u64) -> SimTime {
+        SimTime(ms * 1_000_000)
+    }
+
+    pub fn from_secs(s: u64) -> SimTime {
+        SimTime(s * 1_000_000_000)
+    }
+
+    /// Fractional milliseconds → SimTime (latency models are in f64 ms).
+    /// Negative inputs clamp to zero.
+    pub fn from_millis_f64(ms: f64) -> SimTime {
+        SimTime((ms.max(0.0) * 1_000_000.0).round() as u64)
+    }
+
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        SimTime::from_millis_f64(s * 1e3)
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_micros_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+
+    pub fn min(self, other: SimTime) -> SimTime {
+        SimTime(self.0.min(other.0))
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.0;
+        if ns < 1_000 {
+            write!(f, "{ns}ns")
+        } else if ns < 1_000_000 {
+            write!(f, "{:.2}µs", ns as f64 / 1e3)
+        } else if ns < 1_000_000_000 {
+            write!(f, "{:.2}ms", ns as f64 / 1e6)
+        } else {
+            write!(f, "{:.3}s", ns as f64 / 1e9)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(SimTime::from_millis(5).as_nanos(), 5_000_000);
+        assert_eq!(SimTime::from_secs(2).as_millis_f64(), 2000.0);
+        assert_eq!(SimTime::from_millis_f64(56.44).as_millis_f64(), 56.44);
+        assert_eq!(SimTime::from_micros(3).as_micros_f64(), 3.0);
+        assert_eq!(SimTime::from_secs_f64(1.5).as_secs_f64(), 1.5);
+    }
+
+    #[test]
+    fn arithmetic_and_ordering() {
+        let a = SimTime::from_millis(10);
+        let b = SimTime::from_millis(25);
+        assert_eq!((a + b).as_millis_f64(), 35.0);
+        assert_eq!((b - a).as_millis_f64(), 15.0);
+        assert!(a < b);
+        assert_eq!(a.max(b), b);
+        assert_eq!(a.min(b), a);
+        assert_eq!(a.saturating_sub(b), SimTime::ZERO);
+    }
+
+    #[test]
+    fn negative_f64_clamps_to_zero() {
+        assert_eq!(SimTime::from_millis_f64(-3.0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(SimTime(900).to_string(), "900ns");
+        assert_eq!(SimTime::from_micros(12).to_string(), "12.00µs");
+        assert_eq!(SimTime::from_millis(56).to_string(), "56.00ms");
+        assert_eq!(SimTime::from_secs(3).to_string(), "3.000s");
+    }
+}

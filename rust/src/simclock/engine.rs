@@ -1,0 +1,324 @@
+//! The event queue engine.
+//!
+//! `Engine<W>` is generic over the world state `W` (the platform). Handlers
+//! are `FnOnce(&mut W, &mut Engine<W>)` — they mutate the world and schedule
+//! follow-up events. Ordering is deterministic: ties in virtual time break by
+//! insertion sequence, so two runs with the same seed replay identically.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::nohash::IdHashSet;
+
+use super::clock::SimTime;
+
+/// Handle for cancelling a scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(pub u64);
+
+type Handler<W> = Box<dyn FnOnce(&mut W, &mut Engine<W>)>;
+
+struct Entry<W> {
+    at: SimTime,
+    seq: u64,
+    id: EventId,
+    f: Handler<W>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<W> Eq for Entry<W> {}
+
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Result of a scheduling call.
+#[derive(Debug, Clone, Copy)]
+pub struct Scheduled {
+    pub id: EventId,
+    pub at: SimTime,
+}
+
+/// Discrete-event engine over world state `W`.
+pub struct Engine<W> {
+    now: SimTime,
+    queue: BinaryHeap<Entry<W>>,
+    next_seq: u64,
+    cancelled: IdHashSet<EventId>,
+    processed: u64,
+}
+
+impl<W> Default for Engine<W> {
+    fn default() -> Self {
+        Engine::new()
+    }
+}
+
+impl<W> Engine<W> {
+    pub fn new() -> Engine<W> {
+        Engine {
+            now: SimTime::ZERO,
+            queue: BinaryHeap::new(),
+            next_seq: 0,
+            cancelled: IdHashSet::default(),
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total handlers executed so far (engine throughput metric).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending (non-cancelled) events.
+    pub fn pending(&self) -> usize {
+        self.queue.len() - self.cancelled.len().min(self.queue.len())
+    }
+
+    /// Schedules `f` at absolute time `at` (clamped to now if in the past).
+    pub fn schedule_at<F>(&mut self, at: SimTime, f: F) -> Scheduled
+    where
+        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
+    {
+        let at = at.max(self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let id = EventId(seq);
+        self.queue.push(Entry {
+            at,
+            seq,
+            id,
+            f: Box::new(f),
+        });
+        Scheduled { id, at }
+    }
+
+    /// Schedules `f` after virtual delay `d`.
+    pub fn schedule_in<F>(&mut self, d: SimTime, f: F) -> Scheduled
+    where
+        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
+    {
+        self.schedule_at(self.now + d, f)
+    }
+
+    /// Cancels a scheduled event. Safe to call on already-fired ids.
+    pub fn cancel(&mut self, id: EventId) {
+        self.cancelled.insert(id);
+    }
+
+    fn pop_next(&mut self) -> Option<Entry<W>> {
+        while let Some(e) = self.queue.pop() {
+            if self.cancelled.remove(&e.id) {
+                continue;
+            }
+            return Some(e);
+        }
+        None
+    }
+
+    /// Runs until the queue drains. Returns events processed.
+    pub fn run(&mut self, world: &mut W) -> u64 {
+        let before = self.processed;
+        while let Some(e) = self.pop_next() {
+            debug_assert!(e.at >= self.now, "time went backwards");
+            self.now = e.at;
+            self.processed += 1;
+            (e.f)(world, self);
+        }
+        self.processed - before
+    }
+
+    /// Runs events with `at <= deadline`, then advances the clock to
+    /// `deadline`. Returns events processed.
+    pub fn run_until(&mut self, world: &mut W, deadline: SimTime) -> u64 {
+        let before = self.processed;
+        loop {
+            let next_at = loop {
+                match self.queue.peek() {
+                    Some(e) if self.cancelled.contains(&e.id) => {
+                        let e = self.queue.pop().unwrap();
+                        self.cancelled.remove(&e.id);
+                    }
+                    Some(e) => break Some(e.at),
+                    None => break None,
+                }
+            };
+            match next_at {
+                Some(at) if at <= deadline => {
+                    let e = self.pop_next().unwrap();
+                    self.now = e.at;
+                    self.processed += 1;
+                    (e.f)(world, self);
+                }
+                _ => break,
+            }
+        }
+        self.now = self.now.max(deadline);
+        self.processed - before
+    }
+
+    /// Runs a single event if one is pending. Returns its time.
+    pub fn step(&mut self, world: &mut W) -> Option<SimTime> {
+        let e = self.pop_next()?;
+        self.now = e.at;
+        self.processed += 1;
+        (e.f)(world, self);
+        Some(self.now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(u64, &'static str)>,
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(SimTime::from_millis(30), |w: &mut World, _| {
+            w.log.push((30, "c"))
+        });
+        eng.schedule_at(SimTime::from_millis(10), |w: &mut World, _| {
+            w.log.push((10, "a"))
+        });
+        eng.schedule_at(SimTime::from_millis(20), |w: &mut World, _| {
+            w.log.push((20, "b"))
+        });
+        let n = eng.run(&mut w);
+        assert_eq!(n, 3);
+        assert_eq!(w.log, vec![(10, "a"), (20, "b"), (30, "c")]);
+        assert_eq!(eng.now(), SimTime::from_millis(30));
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        let t = SimTime::from_millis(5);
+        eng.schedule_at(t, |w: &mut World, _| w.log.push((5, "first")));
+        eng.schedule_at(t, |w: &mut World, _| w.log.push((5, "second")));
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(5, "first"), (5, "second")]);
+    }
+
+    #[test]
+    fn handlers_can_schedule_follow_ups() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(SimTime::from_millis(1), |w: &mut World, eng| {
+            w.log.push((1, "start"));
+            eng.schedule_in(SimTime::from_millis(9), |w: &mut World, _| {
+                w.log.push((10, "chained"));
+            });
+        });
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(1, "start"), (10, "chained")]);
+        assert_eq!(eng.now(), SimTime::from_millis(10));
+    }
+
+    #[test]
+    fn cancel_prevents_execution() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        let s = eng.schedule_at(SimTime::from_millis(10), |w: &mut World, _| {
+            w.log.push((10, "cancelled"))
+        });
+        eng.schedule_at(SimTime::from_millis(20), |w: &mut World, _| {
+            w.log.push((20, "kept"))
+        });
+        eng.cancel(s.id);
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(20, "kept")]);
+    }
+
+    #[test]
+    fn run_until_stops_and_advances_clock() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(SimTime::from_millis(10), |w: &mut World, _| {
+            w.log.push((10, "in"))
+        });
+        eng.schedule_at(SimTime::from_millis(100), |w: &mut World, _| {
+            w.log.push((100, "out"))
+        });
+        let n = eng.run_until(&mut w, SimTime::from_millis(50));
+        assert_eq!(n, 1);
+        assert_eq!(w.log, vec![(10, "in")]);
+        assert_eq!(eng.now(), SimTime::from_millis(50));
+        eng.run(&mut w);
+        assert_eq!(w.log.len(), 2);
+    }
+
+    #[test]
+    fn past_schedules_clamp_to_now() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(SimTime::from_millis(10), |w: &mut World, eng| {
+            // Try to schedule in the past — must fire at `now`, not panic.
+            eng.schedule_at(SimTime::from_millis(1), |w: &mut World, _| {
+                w.log.push((10, "clamped"))
+            });
+            w.log.push((10, "origin"));
+        });
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(10, "origin"), (10, "clamped")]);
+    }
+
+    #[test]
+    fn step_processes_one_event() {
+        let mut eng: Engine<World> = Engine::new();
+        let mut w = World::default();
+        eng.schedule_at(SimTime::from_millis(1), |w: &mut World, _| {
+            w.log.push((1, "one"))
+        });
+        eng.schedule_at(SimTime::from_millis(2), |w: &mut World, _| {
+            w.log.push((2, "two"))
+        });
+        assert_eq!(eng.step(&mut w), Some(SimTime::from_millis(1)));
+        assert_eq!(w.log.len(), 1);
+        assert_eq!(eng.pending(), 1);
+    }
+
+    #[test]
+    fn deterministic_processed_count() {
+        let run = || {
+            let mut eng: Engine<World> = Engine::new();
+            let mut w = World::default();
+            for i in 0..100u64 {
+                eng.schedule_at(SimTime::from_micros(i * 7 % 50), move |w: &mut World, _| {
+                    w.log.push((i, "x"))
+                });
+            }
+            eng.run(&mut w);
+            w.log
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,193 @@
+//! Synthetic FaaS trace generator (Shahrad-style).
+
+use crate::simclock::SimTime;
+use crate::util::rng::Rng;
+use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+/// One invocation in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at: SimTime,
+    /// Index into the function population.
+    pub function: usize,
+}
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Number of distinct functions.
+    pub functions: usize,
+    /// Zipf exponent for per-function popularity (≈1.1–1.5 in production).
+    pub popularity_s: f64,
+    /// Mean aggregate invocation rate (req/s) at the diurnal peak.
+    pub peak_rate: f64,
+    /// Ratio of trough to peak rate (diurnal depth), in (0, 1].
+    pub trough_ratio: f64,
+    /// Diurnal period (a scaled-down "day").
+    pub period: SimTime,
+    /// Trace horizon.
+    pub horizon: SimTime,
+    /// Burstiness: probability an arrival spawns an immediate follow-up.
+    pub burst_p: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            functions: 12,
+            popularity_s: 1.2,
+            peak_rate: 6.0,
+            trough_ratio: 0.15,
+            period: SimTime::from_secs(600),
+            horizon: SimTime::from_secs(1200),
+            burst_p: 0.25,
+            seed: 1,
+        }
+    }
+}
+
+/// Generates traces from a config.
+pub struct TraceGenerator {
+    cfg: TraceConfig,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: TraceConfig) -> TraceGenerator {
+        TraceGenerator { cfg }
+    }
+
+    /// Diurnal rate at time `t` (sinusoid between trough and peak).
+    pub fn rate_at(&self, t: SimTime) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * t.as_secs_f64()
+            / self.cfg.period.as_secs_f64().max(1e-9);
+        let lo = self.cfg.peak_rate * self.cfg.trough_ratio;
+        let hi = self.cfg.peak_rate;
+        lo + (hi - lo) * 0.5 * (1.0 - phase.cos())
+    }
+
+    /// Generates the trace: thinned (time-varying) Poisson arrivals with
+    /// Zipf function assignment and optional burst doubling.
+    pub fn generate(&self) -> Vec<TraceEvent> {
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut out = Vec::new();
+        let horizon_s = self.cfg.horizon.as_secs_f64();
+        let peak = self.cfg.peak_rate.max(1e-9);
+        let mut t = 0.0f64;
+        loop {
+            // Thinning: candidate arrivals at the peak rate, accepted with
+            // probability rate(t)/peak.
+            t += rng.exponential(peak);
+            if t >= horizon_s {
+                break;
+            }
+            let at = SimTime::from_secs_f64(t);
+            if !rng.chance(self.rate_at(at) / peak) {
+                continue;
+            }
+            let function = rng.zipf(self.cfg.functions, self.cfg.popularity_s);
+            out.push(TraceEvent { at, function });
+            // Bursts: correlated immediate retries/fan-outs.
+            if rng.chance(self.cfg.burst_p) {
+                let burst = 1 + rng.below(3);
+                for i in 0..burst {
+                    out.push(TraceEvent {
+                        at: at + SimTime::from_millis(1 + i),
+                        function,
+                    });
+                }
+            }
+        }
+        out.sort_by_key(|e| e.at);
+        out
+    }
+
+    /// Maps function indices onto paper workloads: hot ranks get the short
+    /// functions (matching Shahrad's "most invocations are short"); the
+    /// heavy video job appears only in the cold tail so aggregate demand
+    /// stays within a single-node testbed.
+    pub fn profile_for(rank: usize) -> WorkloadProfile {
+        let kind = match rank % 8 {
+            0 | 1 | 2 => WorkloadKind::HelloWorld,
+            3 | 4 => WorkloadKind::Io,
+            5 => WorkloadKind::Cpu,
+            6 => WorkloadKind::Video10s,
+            _ => WorkloadKind::Video1m,
+        };
+        WorkloadProfile::paper(kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TraceConfig {
+        TraceConfig {
+            functions: 8,
+            horizon: SimTime::from_secs(300),
+            ..TraceConfig::default()
+        }
+    }
+
+    #[test]
+    fn trace_sorted_and_in_horizon() {
+        let trace = TraceGenerator::new(small()).generate();
+        assert!(!trace.is_empty());
+        assert!(trace.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(trace.iter().all(|e| e.at < SimTime::from_secs(302)));
+        assert!(trace.iter().all(|e| e.function < 8));
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let trace = TraceGenerator::new(TraceConfig {
+            horizon: SimTime::from_secs(2000),
+            ..small()
+        })
+        .generate();
+        let mut counts = vec![0usize; 8];
+        for e in &trace {
+            counts[e.function] += 1;
+        }
+        // Rank 0 should dominate rank 7 heavily.
+        assert!(counts[0] > 4 * counts[7].max(1), "{counts:?}");
+    }
+
+    #[test]
+    fn diurnal_rate_varies() {
+        let g = TraceGenerator::new(small());
+        let trough = g.rate_at(SimTime::ZERO);
+        let peak = g.rate_at(SimTime::from_secs(300)); // half period
+        assert!(peak > 3.0 * trough, "trough={trough} peak={peak}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TraceGenerator::new(small()).generate();
+        let b = TraceGenerator::new(small()).generate();
+        assert_eq!(a, b);
+        let c = TraceGenerator::new(TraceConfig {
+            seed: 9,
+            ..small()
+        })
+        .generate();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn bursts_produce_near_simultaneous_arrivals() {
+        let trace = TraceGenerator::new(TraceConfig {
+            burst_p: 1.0,
+            ..small()
+        })
+        .generate();
+        let mut bursty = 0;
+        for w in trace.windows(2) {
+            if (w[1].at - w[0].at).as_millis_f64() <= 3.0 && w[0].function == w[1].function {
+                bursty += 1;
+            }
+        }
+        assert!(bursty > trace.len() / 4, "bursty={bursty}/{}", trace.len());
+    }
+}

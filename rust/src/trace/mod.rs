@@ -1,0 +1,15 @@
+//! Azure-Functions-style trace generation and replay.
+//!
+//! Shahrad et al. (ATC '20), which the paper cites for "over 50% of
+//! functions execute in less than one second", characterize production FaaS
+//! traffic as: heavily skewed per-function popularity (Zipf-like), diurnal
+//! rate variation, and bursty inter-arrivals (CV > 1). The generator
+//! reproduces those properties synthetically so the `trace_replay` example
+//! can compare the three policies on realistic multi-tenant traffic —
+//! the paper's substitution for a production trace (DESIGN.md §1).
+
+pub mod generator;
+pub mod replay;
+
+pub use generator::{TraceConfig, TraceEvent, TraceGenerator};
+pub use replay::{replay, ReplayReport};

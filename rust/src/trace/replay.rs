@@ -1,0 +1,144 @@
+//! Replays a generated trace against the platform under one policy and
+//! reports latency + reservation cost — the multi-tenant comparison the
+//! paper's §3 motivates ("resources ... can be dynamically allocated based
+//! on incoming requests").
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::platform::Simulation;
+use crate::policy::{PlatformParams, Policy};
+use crate::simclock::SimTime;
+use crate::trace::generator::{TraceEvent, TraceGenerator};
+use crate::util::stats::Samples;
+
+/// Outcome of one policy's replay.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub policy: Policy,
+    pub completed: u64,
+    pub failed: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub cold_starts: u64,
+    /// Average committed CPU over the replay, milliCPU.
+    pub avg_committed_mcpu: f64,
+    /// Total pods created (churn).
+    pub pods_created: u64,
+    pub wall: SimTime,
+}
+
+/// Replays `trace` (over `functions` distinct functions) under `policy`.
+pub fn replay(
+    trace: &[TraceEvent],
+    functions: usize,
+    policy: Policy,
+    seed: u64,
+) -> ReplayReport {
+    let mut sim = Simulation::with_params(PlatformParams::with_seed(seed));
+    // Deploy one service per function rank. Multi-tenant traffic needs
+    // horizontal headroom too: allow the KPA to scale out to a few pods per
+    // function (the paper's future-work "holistic vertical + horizontal"
+    // setting), with a concurrency target so heavy functions fan out.
+    let mut names: BTreeMap<usize, String> = BTreeMap::new();
+    for rank in 0..functions {
+        let name = format!("fn-{rank}");
+        let mut cfg = policy.revision_config();
+        cfg.max_scale = 4;
+        cfg.target_concurrency = 2.0;
+        cfg.container_concurrency = 2;
+        let svc = crate::coordinator::service::Service::with_config(
+            &name,
+            TraceGenerator::profile_for(rank),
+            policy,
+            cfg,
+        );
+        sim.deploy_service(svc);
+        names.insert(rank, name);
+    }
+    sim.run(); // bring up min-scale pods
+
+    let start = sim.now();
+    for ev in trace {
+        sim.submit_at(start + ev.at, &names[&ev.function]);
+    }
+    sim.run();
+
+    let now = sim.now();
+    let mut lat = Samples::new();
+    let mut completed = 0;
+    let mut failed = 0;
+    let mut cold = 0;
+    for (_, m) in sim.world.metrics.services() {
+        completed += m.completed;
+        failed += m.failed;
+        cold += m.cold_starts;
+        for &v in m.latency_ms.values() {
+            lat.record(v);
+        }
+    }
+    ReplayReport {
+        policy,
+        completed,
+        failed,
+        mean_ms: lat.mean(),
+        p50_ms: lat.percentile(50.0),
+        p99_ms: lat.percentile(99.0),
+        cold_starts: cold,
+        avg_committed_mcpu: sim.world.metrics.committed_cpu.average_mcpu(now),
+        pods_created: sim.world.metrics.pods_created,
+        wall: now.saturating_sub(start),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generator::TraceConfig;
+
+    fn tiny_trace() -> (Vec<TraceEvent>, usize) {
+        let cfg = TraceConfig {
+            functions: 4,
+            peak_rate: 2.0,
+            horizon: SimTime::from_secs(120),
+            ..TraceConfig::default()
+        };
+        (TraceGenerator::new(cfg).generate(), 4)
+    }
+
+    #[test]
+    fn all_policies_complete_the_trace() {
+        let (trace, n) = tiny_trace();
+        for policy in Policy::ALL {
+            let r = replay(&trace, n, policy, 3);
+            assert_eq!(r.completed + r.failed, trace.len() as u64, "{policy:?}");
+            assert_eq!(r.failed, 0, "{policy:?}");
+            assert!(r.mean_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn warm_fastest_cold_cheapest_reservation() {
+        let (trace, n) = tiny_trace();
+        let cold = replay(&trace, n, Policy::Cold, 3);
+        let warm = replay(&trace, n, Policy::Warm, 3);
+        let inp = replay(&trace, n, Policy::InPlace, 3);
+
+        // Latency: warm < in-place < cold.
+        assert!(warm.mean_ms < inp.mean_ms, "warm={} inp={}", warm.mean_ms, inp.mean_ms);
+        assert!(inp.mean_ms < cold.mean_ms, "inp={} cold={}", inp.mean_ms, cold.mean_ms);
+
+        // Reservation: in-place commits far less than warm.
+        assert!(
+            inp.avg_committed_mcpu < warm.avg_committed_mcpu / 3.0,
+            "inp={} warm={}",
+            inp.avg_committed_mcpu,
+            warm.avg_committed_mcpu
+        );
+
+        // Churn: cold creates pods repeatedly; warm/in-place only min-scale.
+        assert!(cold.pods_created > warm.pods_created);
+        assert!(cold.cold_starts > 0);
+        assert_eq!(inp.cold_starts, 0);
+    }
+}

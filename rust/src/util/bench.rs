@@ -1,0 +1,262 @@
+//! Micro-benchmark harness (criterion is not in the offline mirror).
+//!
+//! Provides warmup + timed iterations with mean/σ/percentiles, a `black_box`
+//! to defeat const-folding, and a runner that understands the conventional
+//! `cargo bench -- <filter>` argument so individual paper artifacts
+//! (e.g. `fig2`, `table3`) can be regenerated alone.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Samples;
+
+/// Opaque identity function the optimizer cannot see through.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// Human-friendly one-liner, criterion-style.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p50 {:>10}, p99 {:>10}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+/// Formats nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+            max_iters: 10_000_000,
+        }
+    }
+}
+
+/// Times `f` per the config; each sample is one call.
+pub fn bench_fn<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    let mut warm_iters = 0u64;
+    while start.elapsed() < cfg.warmup && warm_iters < cfg.max_iters {
+        f();
+        warm_iters += 1;
+    }
+
+    let mut samples = Samples::new();
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while (start.elapsed() < cfg.measure || iters < cfg.min_iters) && iters < cfg.max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.record(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.mean(),
+        std_ns: samples.std_dev(),
+        p50_ns: samples.percentile(50.0),
+        p99_ns: samples.percentile(99.0),
+        min_ns: samples.min(),
+    }
+}
+
+/// Times `f` in batches of `batch` calls per sample — for sub-100ns bodies
+/// where per-call `Instant::now()` overhead would dominate.
+pub fn bench_batched<F: FnMut()>(
+    name: &str,
+    cfg: &BenchConfig,
+    batch: u64,
+    mut f: F,
+) -> BenchResult {
+    assert!(batch > 0);
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        for _ in 0..batch {
+            f();
+        }
+    }
+    let mut samples = Samples::new();
+    let mut iters = 0u64;
+    let start = Instant::now();
+    while (start.elapsed() < cfg.measure || iters < cfg.min_iters) && iters < cfg.max_iters {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.record(t0.elapsed().as_nanos() as f64 / batch as f64);
+        iters += batch;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.mean(),
+        std_ns: samples.std_dev(),
+        p50_ns: samples.percentile(50.0),
+        p99_ns: samples.percentile(99.0),
+        min_ns: samples.min(),
+    }
+}
+
+/// Bench-binary runner: registers named sections and honours the
+/// `cargo bench -- <filter>` convention.
+pub struct Runner {
+    filter: Option<String>,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner::from_args()
+    }
+}
+
+impl Runner {
+    pub fn from_args() -> Runner {
+        // cargo passes `--bench`; any other non-flag arg is a filter.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'));
+        Runner {
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_filter(filter: Option<String>) -> Runner {
+        Runner {
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    /// Should the section named `name` run under the current filter?
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Runs a whole *section* (a paper table/figure) if enabled.
+    pub fn section<F: FnOnce()>(&self, name: &str, f: F) {
+        if self.enabled(name) {
+            println!("\n### {name}");
+            f();
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let r = bench_fn(name, &BenchConfig::default(), f);
+        println!("{}", r.line());
+        self.results.push(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+
+    #[test]
+    fn bench_fn_measures_something() {
+        let r = bench_fn("spin", &quick(), || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn batched_reduces_timer_noise() {
+        let r = bench_batched("tiny", &quick(), 1000, || {
+            black_box(1u64 + black_box(2u64));
+        });
+        assert!(r.iters >= 1000);
+        // A single add should take < 100ns/iter even on a loaded machine.
+        assert!(r.mean_ns < 100.0, "mean={}", r.mean_ns);
+    }
+
+    #[test]
+    fn filter_controls_sections() {
+        let r = Runner::with_filter(Some("fig2".into()));
+        assert!(r.enabled("fig2_up"));
+        assert!(!r.enabled("table3"));
+        let all = Runner::with_filter(None);
+        assert!(all.enabled("anything"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert_eq!(fmt_ns(12_300.0), "12.30 µs");
+        assert_eq!(fmt_ns(12_300_000.0), "12.30 ms");
+        assert_eq!(fmt_ns(2_500_000_000.0), "2.500 s");
+    }
+}

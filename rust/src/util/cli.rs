@@ -1,0 +1,319 @@
+//! A small declarative CLI argument parser (clap is not in the offline
+//! mirror). Supports subcommands, `--flag`, `--key value` / `--key=value`,
+//! defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declared option for a subcommand.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed invocation: subcommand plus resolved options.
+#[derive(Debug, Clone)]
+pub struct Invocation {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    UnknownCommand(String),
+    UnknownOption(String, String),
+    MissingValue(String),
+    Help(String),
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownCommand(c) => write!(f, "unknown command: {c}"),
+            CliError::UnknownOption(cmd, o) => {
+                write!(f, "unknown option --{o} for command {cmd}")
+            }
+            CliError::MissingValue(o) => write!(f, "option --{o} requires a value"),
+            CliError::Help(text) => write!(f, "{text}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Invocation {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+/// A subcommand with its options.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+}
+
+/// Top-level application.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> App {
+        App {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, cmd: Command) -> App {
+        self.commands.push(cmd);
+        self
+    }
+
+    /// Renders the top-level help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+        }
+        s.push_str(&format!("\nRun `{} <command> --help` for command options.\n", self.name));
+        s
+    }
+
+    fn command_help(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, cmd.name, cmd.about);
+        for o in &cmd.opts {
+            let head = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <value>", o.name)
+            };
+            let default = match o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  {:<26} {}{}\n", head, o.help, default));
+        }
+        s
+    }
+
+    /// Parses argv (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Invocation, CliError> {
+        if args.is_empty()
+            || args[0] == "--help"
+            || args[0] == "-h"
+            || args[0] == "help"
+        {
+            return Err(CliError::Help(self.help()));
+        }
+        let cmd_name = &args[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == *cmd_name)
+            .ok_or_else(|| CliError::UnknownCommand(cmd_name.clone()))?;
+
+        let mut opts: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for o in &cmd.opts {
+            if let (false, Some(d)) = (o.is_flag, o.default) {
+                opts.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help(self.command_help(cmd)));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(cmd.name.to_string(), key.clone()))?;
+                if spec.is_flag {
+                    flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    opts.insert(key, val);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+
+        Ok(Invocation {
+            command: cmd.name.to_string(),
+            opts,
+            flags,
+            positionals,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("kinetic", "serverless platform")
+            .command(
+                Command::new("exp", "run an experiment")
+                    .opt("id", "experiment id", "all")
+                    .opt("seed", "rng seed", "42")
+                    .flag("verbose", "chatty output"),
+            )
+            .command(Command::new("serve", "start platform").opt_req("artifacts", "artifact dir"))
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults() {
+        let inv = app().parse(&sv(&["exp"])).unwrap();
+        assert_eq!(inv.command, "exp");
+        assert_eq!(inv.get("id"), Some("all"));
+        assert_eq!(inv.get_u64("seed", 0), 42);
+        assert!(!inv.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let inv = app()
+            .parse(&sv(&["exp", "--id", "t1", "--verbose", "--seed=7"]))
+            .unwrap();
+        assert_eq!(inv.get("id"), Some("t1"));
+        assert_eq!(inv.get_u64("seed", 0), 7);
+        assert!(inv.flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let inv = app().parse(&sv(&["exp", "extra1", "extra2"])).unwrap();
+        assert_eq!(inv.positionals, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(matches!(
+            app().parse(&sv(&["nope"])),
+            Err(CliError::UnknownCommand(_))
+        ));
+        assert!(matches!(
+            app().parse(&sv(&["exp", "--bogus", "1"])),
+            Err(CliError::UnknownOption(_, _))
+        ));
+    }
+
+    #[test]
+    fn missing_value_detected() {
+        assert!(matches!(
+            app().parse(&sv(&["exp", "--id"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn help_requested() {
+        assert!(matches!(app().parse(&sv(&[])), Err(CliError::Help(_))));
+        assert!(matches!(
+            app().parse(&sv(&["exp", "--help"])),
+            Err(CliError::Help(_))
+        ));
+        if let Err(CliError::Help(h)) = app().parse(&sv(&["exp", "--help"])) {
+            assert!(h.contains("--seed"));
+            assert!(h.contains("default: 42"));
+        }
+    }
+}

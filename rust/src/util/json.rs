@@ -1,0 +1,550 @@
+//! Minimal JSON: parser, value model, and writer.
+//!
+//! Used for the artifact manifest (`artifacts/manifest.json`), experiment
+//! result export, and platform config files. Implements RFC 8259 minus
+//! `\u` surrogate-pair edge cases we never emit (they still parse).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use thiserror::Error;
+
+/// A JSON value. Object keys are sorted (BTreeMap) so output is canonical.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum JsonError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("unexpected character '{1}' at byte {0}")]
+    Unexpected(usize, char),
+    #[error("invalid number at byte {0}")]
+    BadNumber(usize),
+    #[error("invalid escape at byte {0}")]
+    BadEscape(usize),
+    #[error("trailing data at byte {0}")]
+    Trailing(usize),
+    #[error("missing field '{0}'")]
+    MissingField(String),
+    #[error("wrong type for '{0}'")]
+    WrongType(String),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        let mut p = Parser {
+            b: s.as_bytes(),
+            i: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(JsonError::Trailing(p.i));
+        }
+        Ok(v)
+    }
+
+    // -- typed accessors ---------------------------------------------------
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|m| m.get(key))
+    }
+
+    /// Required-field helpers that surface good errors for config parsing.
+    pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
+        self.get(key)
+            .ok_or_else(|| JsonError::MissingField(key.into()))?
+            .as_str()
+            .ok_or_else(|| JsonError::WrongType(key.into()))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64, JsonError> {
+        self.get(key)
+            .ok_or_else(|| JsonError::MissingField(key.into()))?
+            .as_f64()
+            .ok_or_else(|| JsonError::WrongType(key.into()))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64, JsonError> {
+        self.get(key)
+            .ok_or_else(|| JsonError::MissingField(key.into()))?
+            .as_u64()
+            .ok_or_else(|| JsonError::WrongType(key.into()))
+    }
+
+    pub fn req_arr(&self, key: &str) -> Result<&[Json], JsonError> {
+        self.get(key)
+            .ok_or_else(|| JsonError::MissingField(key.into()))?
+            .as_arr()
+            .ok_or_else(|| JsonError::WrongType(key.into()))
+    }
+
+    /// Optional field with default.
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Json::as_f64).unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Json::as_str).unwrap_or(default)
+    }
+
+    pub fn opt_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Json::as_bool).unwrap_or(default)
+    }
+
+    // -- builders ----------------------------------------------------------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    /// Compact serialization.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Pretty serialization with 2-space indent.
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                if !v.is_empty() {
+                    newline_indent(out, indent, depth);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, item)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    item.write(out, indent, depth + 1);
+                }
+                if !m.is_empty() {
+                    newline_indent(out, indent, depth);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string_compact())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..w * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8, JsonError> {
+        self.b.get(self.i).copied().ok_or(JsonError::Eof(self.i))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        let got = self.peek()?;
+        if got != c {
+            return Err(JsonError::Unexpected(self.i, got as char));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<(), JsonError> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(JsonError::Unexpected(self.i, self.peek()? as char))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => {
+                self.literal("true")?;
+                Ok(Json::Bool(true))
+            }
+            b'f' => {
+                self.literal("false")?;
+                Ok(Json::Bool(false))
+            }
+            b'n' => {
+                self.literal("null")?;
+                Ok(Json::Null)
+            }
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(JsonError::Unexpected(self.i, c as char)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => return Err(JsonError::Unexpected(self.i, c as char)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.skip_ws();
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => return Err(JsonError::Unexpected(self.i, c as char)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let esc = self.peek()?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(JsonError::Eof(self.i));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| JsonError::BadEscape(self.i))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| JsonError::BadEscape(self.i))?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(JsonError::BadEscape(self.i - 1)),
+                    }
+                }
+                c if c < 0x80 => s.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: copy the full sequence.
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    if start + len > self.b.len() {
+                        return Err(JsonError::Eof(self.i));
+                    }
+                    let chunk = std::str::from_utf8(&self.b[start..start + len])
+                        .map_err(|_| JsonError::BadEscape(start))?;
+                    s.push_str(chunk);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        txt.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| JsonError::BadNumber(start))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(j.get("c").unwrap().as_str(), Some("x"));
+        let arr = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("b"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parse_escapes() {
+        let j = Json::parse(r#""a\nb\t\"c\" A""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\nb\t\"c\" A"));
+    }
+
+    #[test]
+    fn parse_unicode_passthrough() {
+        let j = Json::parse(r#""héllo ✓""#).unwrap();
+        assert_eq!(j.as_str(), Some("héllo ✓"));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("tru").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn round_trip() {
+        let src = r#"{"arr":[1,2.5,"x"],"nested":{"t":true},"z":null}"#;
+        let j = Json::parse(src).unwrap();
+        let out = j.to_string_compact();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    fn pretty_parses_back() {
+        let j = Json::obj(vec![
+            ("name", "kinetic".into()),
+            ("n", 3u64.into()),
+            ("xs", Json::arr([1u64.into(), 2u64.into()])),
+        ]);
+        let pretty = j.to_string_pretty();
+        assert!(pretty.contains('\n'));
+        assert_eq!(Json::parse(&pretty).unwrap(), j);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let j = Json::parse(r#"{"s":"v","n":7,"f":1.5,"b":true}"#).unwrap();
+        assert_eq!(j.req_str("s").unwrap(), "v");
+        assert_eq!(j.req_u64("n").unwrap(), 7);
+        assert_eq!(j.req_f64("f").unwrap(), 1.5);
+        assert!(j.opt_bool("b", false));
+        assert_eq!(j.opt_f64("missing", 9.0), 9.0);
+        assert!(matches!(j.req_str("nope"), Err(JsonError::MissingField(_))));
+        assert!(matches!(j.req_u64("f"), Err(JsonError::WrongType(_))));
+    }
+
+    #[test]
+    fn integer_formatting_has_no_decimal() {
+        assert_eq!(Json::Num(5.0).to_string_compact(), "5");
+        assert_eq!(Json::Num(5.25).to_string_compact(), "5.25");
+    }
+}

@@ -1,0 +1,70 @@
+//! Tiny `log`-facade backend with per-run verbosity, used by the CLI and
+//! examples. Writes to stderr so experiment tables on stdout stay clean.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(1);
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        let v = VERBOSITY.load(Ordering::Relaxed);
+        let max = match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        };
+        metadata.level() <= max
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:<5} {}] {}",
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Installs the logger (idempotent) and sets verbosity 0..=4.
+pub fn init(verbosity: u8) {
+    VERBOSITY.store(verbosity, Ordering::Relaxed);
+    // Ignore AlreadySet errors — tests may init repeatedly.
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(LevelFilter::Trace);
+}
+
+/// Current verbosity level.
+pub fn verbosity() -> u8 {
+    VERBOSITY.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent_and_sets_verbosity() {
+        init(2);
+        assert_eq!(verbosity(), 2);
+        init(3);
+        assert_eq!(verbosity(), 3);
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,18 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The offline crate mirror for this image carries only `xla` and a handful of
+//! leaf crates, so the pieces a production service would normally pull from
+//! crates.io — JSON, a CLI parser, an RNG with distributions, a statistics /
+//! histogram kit, a micro-benchmark harness and a property-testing driver —
+//! are implemented here from scratch and unit-tested like any other module.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod nohash;
+pub mod prop;
+pub mod quantity;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,101 @@
+//! Identity hashing for dense sequential ids (RequestId, EventId).
+//!
+//! The platform's hot maps are keyed by monotonically assigned u64 ids;
+//! SipHash showed up at ~6% of the request hot path in `perf` (see
+//! EXPERIMENTS.md §Perf). An identity hasher is collision-safe here because
+//! the ids are already unique and well-distributed for hashbrown's
+//! high-bits bucketing after its multiply-shift finalizer... which hashbrown
+//! does NOT apply to `write_u64` — so we mix minimally with a cheap
+//! fibonacci multiply instead of full SipHash.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Hasher for u64-newtype keys: one wrapping multiply (Fibonacci hashing).
+#[derive(Default)]
+pub struct IdHasher {
+    state: u64,
+}
+
+impl Hasher for IdHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Only used for the newtype's inner u64 (8 bytes) in practice, but
+        // stay correct for arbitrary input.
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.write_u64(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        // Fibonacci multiplier spreads sequential ids across the hash space.
+        self.state = (self.state ^ i).wrapping_mul(0x9E3779B97F4A7C15);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.write_u64(i as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.write_u64(i as u64);
+    }
+}
+
+/// BuildHasher for id-keyed maps/sets.
+pub type IdHashBuilder = BuildHasherDefault<IdHasher>;
+
+/// HashMap keyed by sequential-id newtypes.
+pub type IdHashMap<K, V> = std::collections::HashMap<K, V, IdHashBuilder>;
+
+/// HashSet keyed by sequential-id newtypes.
+pub type IdHashSet<K> = std::collections::HashSet<K, IdHashBuilder>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_basic_ops() {
+        let mut m: IdHashMap<u64, &str> = IdHashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, "x");
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m.get(&500), Some(&"x"));
+        assert_eq!(m.remove(&500), Some("x"));
+        assert_eq!(m.get(&500), None);
+    }
+
+    #[test]
+    fn sequential_ids_spread() {
+        // Fibonacci mixing must not collapse sequential ids into the same
+        // high bits (hashbrown uses the top 7 bits for control bytes).
+        let b = IdHashBuilder::default();
+        use std::hash::BuildHasher;
+        let mut tops = std::collections::HashSet::new();
+        for i in 0..128u64 {
+            let mut h = b.build_hasher();
+            h.write_u64(i);
+            tops.insert(h.finish() >> 57);
+        }
+        assert!(tops.len() > 32, "top bits poorly distributed: {}", tops.len());
+    }
+
+    #[test]
+    fn set_ops() {
+        let mut s: IdHashSet<u64> = IdHashSet::default();
+        assert!(s.insert(7));
+        assert!(!s.insert(7));
+        assert!(s.remove(&7));
+        assert!(!s.remove(&7));
+    }
+}

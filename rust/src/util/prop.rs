@@ -1,0 +1,184 @@
+//! Property-based testing driver (proptest is not in the offline mirror).
+//!
+//! A `Gen` wraps a seeded [`Rng`](crate::util::rng::Rng) with size-aware
+//! generators; [`property`] runs a closure over many generated cases and, on
+//! failure, re-runs a bounded shrink loop to report a minimal counterexample
+//! seed. Coordinator invariants (routing conservation, CFS work conservation,
+//! resize state machine) are tested with this in `rust/tests/`.
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Grows with the case index so later cases explore larger structures.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vec with size-scaled length in `[0, max_len]`.
+    pub fn vec<T, F: FnMut(&mut Gen) -> T>(&mut self, max_len: usize, mut f: F) -> Vec<T> {
+        let cap = max_len.min(self.size.max(1));
+        let len = self.usize(0, cap);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// An interesting milliCPU value: the paper's sweep points plus noise.
+    pub fn millicpu(&mut self) -> u64 {
+        const ANCHORS: [u64; 8] = [1, 5, 50, 100, 200, 500, 1000, 6000];
+        if self.bool() {
+            *self.rng.choose(&ANCHORS)
+        } else {
+            self.u64(1, 8000)
+        }
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct Failure {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+/// Runs `cases` generated cases of `prop`. `prop` returns `Err(msg)` to fail.
+/// Panics with a reproducible seed on failure.
+pub fn property<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = env_seed().unwrap_or(0x5EED_0000);
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 4 + case * 64 / cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if let Err(message) = prop(&mut g) {
+            // One retry at smaller sizes to find a smaller failing case.
+            let minimal = shrink_seed(seed, size, &mut prop).unwrap_or((seed, size));
+            panic!(
+                "property '{name}' failed at case {case}\n  seed={:#x} size={}\n  {message}\n  \
+                 reproduce with KINETIC_PROP_SEED={:#x}",
+                minimal.0, minimal.1, base_seed
+            );
+        }
+    }
+}
+
+/// Tries progressively smaller sizes with the failing seed; returns the
+/// smallest (seed, size) that still fails.
+fn shrink_seed<F>(seed: u64, size: usize, prop: &mut F) -> Option<(u64, usize)>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut best = None;
+    let mut s = size;
+    while s > 1 {
+        s /= 2;
+        let mut g = Gen::new(seed, s);
+        if prop(&mut g).is_err() {
+            best = Some((seed, s));
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("KINETIC_PROP_SEED").ok().and_then(|s| {
+        let s = s.trim_start_matches("0x");
+        u64::from_str_radix(s, 16).ok().or_else(|| s.parse().ok())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        property("add_commutes", 50, |g| {
+            n += 1;
+            let a = g.u64(0, 1000);
+            let b = g.u64(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_seed() {
+        property("always_fails", 10, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        property("bounds", 100, |g| {
+            let x = g.u64(10, 20);
+            if !(10..=20).contains(&x) {
+                return Err(format!("u64 out of bounds: {x}"));
+            }
+            let f = g.f64(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&f) {
+                return Err(format!("f64 out of bounds: {f}"));
+            }
+            let v = g.vec(8, |g| g.bool());
+            if v.len() > 8 {
+                return Err("vec too long".into());
+            }
+            let m = g.millicpu();
+            if !(1..=8000).contains(&m) {
+                return Err(format!("millicpu out of bounds: {m}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_grow_over_cases() {
+        let mut sizes = Vec::new();
+        property("sizes", 32, |g| {
+            sizes.push(g.size);
+            Ok(())
+        });
+        assert!(sizes.first().unwrap() < sizes.last().unwrap());
+    }
+}

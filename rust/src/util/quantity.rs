@@ -1,0 +1,362 @@
+//! Kubernetes resource quantities.
+//!
+//! CPU is tracked in **milliCPU** (`1000m == 1 CPU`, the unit the paper's
+//! experiments sweep over) and memory in bytes. The parser accepts the k8s
+//! suffix grammar actually used by the paper's manifests: plain integers,
+//! `m` (milli) for CPU, and `Ki/Mi/Gi/K/M/G` for memory.
+
+use std::fmt;
+use std::str::FromStr;
+
+use thiserror::Error;
+
+/// Errors produced when parsing a resource quantity string.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum QuantityError {
+    #[error("empty quantity")]
+    Empty,
+    #[error("invalid number in quantity: {0}")]
+    BadNumber(String),
+    #[error("unknown suffix in quantity: {0}")]
+    BadSuffix(String),
+    #[error("quantity out of range: {0}")]
+    OutOfRange(String),
+}
+
+/// CPU quantity in milliCPU. `MilliCpu(1000)` is one core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct MilliCpu(pub u64);
+
+impl MilliCpu {
+    pub const ZERO: MilliCpu = MilliCpu(0);
+    /// The paper's parked allocation for in-place pods: 1 milliCPU.
+    pub const PARKED: MilliCpu = MilliCpu(1);
+    /// One full CPU (1000m), the paper's serving allocation.
+    pub const ONE_CPU: MilliCpu = MilliCpu(1000);
+
+    pub fn cores(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    pub fn from_cores(cores: f64) -> MilliCpu {
+        MilliCpu((cores * 1000.0).round() as u64)
+    }
+
+    pub fn saturating_sub(self, other: MilliCpu) -> MilliCpu {
+        MilliCpu(self.0.saturating_sub(other.0))
+    }
+
+    pub fn min(self, other: MilliCpu) -> MilliCpu {
+        MilliCpu(self.0.min(other.0))
+    }
+
+    pub fn max(self, other: MilliCpu) -> MilliCpu {
+        MilliCpu(self.0.max(other.0))
+    }
+}
+
+impl fmt::Display for MilliCpu {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 % 1000 == 0 && self.0 > 0 {
+            write!(f, "{}", self.0 / 1000)
+        } else {
+            write!(f, "{}m", self.0)
+        }
+    }
+}
+
+impl std::ops::Add for MilliCpu {
+    type Output = MilliCpu;
+    fn add(self, rhs: MilliCpu) -> MilliCpu {
+        MilliCpu(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for MilliCpu {
+    fn add_assign(&mut self, rhs: MilliCpu) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::Sub for MilliCpu {
+    type Output = MilliCpu;
+    fn sub(self, rhs: MilliCpu) -> MilliCpu {
+        MilliCpu(self.0 - rhs.0)
+    }
+}
+
+impl std::ops::SubAssign for MilliCpu {
+    fn sub_assign(&mut self, rhs: MilliCpu) {
+        self.0 -= rhs.0;
+    }
+}
+
+impl FromStr for MilliCpu {
+    type Err = QuantityError;
+
+    /// Parses `"1"`, `"1.5"`, `"1500m"`, `"100m"` into milliCPU.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err(QuantityError::Empty);
+        }
+        if let Some(num) = s.strip_suffix('m') {
+            let v: u64 = num
+                .parse()
+                .map_err(|_| QuantityError::BadNumber(s.to_string()))?;
+            Ok(MilliCpu(v))
+        } else {
+            let v: f64 = s
+                .parse()
+                .map_err(|_| QuantityError::BadNumber(s.to_string()))?;
+            if !(0.0..=1e9).contains(&v) {
+                return Err(QuantityError::OutOfRange(s.to_string()));
+            }
+            Ok(MilliCpu((v * 1000.0).round() as u64))
+        }
+    }
+}
+
+/// Memory quantity in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Memory(pub u64);
+
+impl Memory {
+    pub const ZERO: Memory = Memory(0);
+
+    pub fn mib(self) -> f64 {
+        self.0 as f64 / (1024.0 * 1024.0)
+    }
+
+    pub fn from_mib(mib: u64) -> Memory {
+        Memory(mib * 1024 * 1024)
+    }
+
+    pub fn from_gib(gib: u64) -> Memory {
+        Memory(gib * 1024 * 1024 * 1024)
+    }
+
+    pub fn saturating_sub(self, other: Memory) -> Memory {
+        Memory(self.0.saturating_sub(other.0))
+    }
+}
+
+impl std::ops::Add for Memory {
+    type Output = Memory;
+    fn add(self, rhs: Memory) -> Memory {
+        Memory(self.0 + rhs.0)
+    }
+}
+
+impl std::ops::AddAssign for Memory {
+    fn add_assign(&mut self, rhs: Memory) {
+        self.0 += rhs.0;
+    }
+}
+
+impl std::ops::SubAssign for Memory {
+    fn sub_assign(&mut self, rhs: Memory) {
+        self.0 -= rhs.0;
+    }
+}
+
+impl fmt::Display for Memory {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        const GI: u64 = 1024 * 1024 * 1024;
+        const MI: u64 = 1024 * 1024;
+        const KI: u64 = 1024;
+        if self.0 >= GI && self.0 % GI == 0 {
+            write!(f, "{}Gi", self.0 / GI)
+        } else if self.0 >= MI && self.0 % MI == 0 {
+            write!(f, "{}Mi", self.0 / MI)
+        } else if self.0 >= KI && self.0 % KI == 0 {
+            write!(f, "{}Ki", self.0 / KI)
+        } else {
+            write!(f, "{}", self.0)
+        }
+    }
+}
+
+impl FromStr for Memory {
+    type Err = QuantityError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err(QuantityError::Empty);
+        }
+        let (num, mult): (&str, u64) = if let Some(n) = s.strip_suffix("Ki") {
+            (n, 1024)
+        } else if let Some(n) = s.strip_suffix("Mi") {
+            (n, 1024 * 1024)
+        } else if let Some(n) = s.strip_suffix("Gi") {
+            (n, 1024 * 1024 * 1024)
+        } else if let Some(n) = s.strip_suffix('K') {
+            (n, 1000)
+        } else if let Some(n) = s.strip_suffix('M') {
+            (n, 1_000_000)
+        } else if let Some(n) = s.strip_suffix('G') {
+            (n, 1_000_000_000)
+        } else if s.chars().all(|c| c.is_ascii_digit()) {
+            (s, 1)
+        } else {
+            return Err(QuantityError::BadSuffix(s.to_string()));
+        };
+        let v: u64 = num
+            .parse()
+            .map_err(|_| QuantityError::BadNumber(s.to_string()))?;
+        v.checked_mul(mult)
+            .map(Memory)
+            .ok_or_else(|| QuantityError::OutOfRange(s.to_string()))
+    }
+}
+
+/// A CPU+memory resource vector, the unit of pod requests/limits and node
+/// allocatable capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default, Hash)]
+pub struct Resources {
+    pub cpu: MilliCpu,
+    pub memory: Memory,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources {
+        cpu: MilliCpu::ZERO,
+        memory: Memory::ZERO,
+    };
+
+    pub fn new(cpu: MilliCpu, memory: Memory) -> Resources {
+        Resources { cpu, memory }
+    }
+
+    pub fn cpu_m(cpu_m: u64) -> Resources {
+        Resources {
+            cpu: MilliCpu(cpu_m),
+            memory: Memory::ZERO,
+        }
+    }
+
+    /// True when `self` fits inside `capacity` on both axes.
+    pub fn fits_in(&self, capacity: &Resources) -> bool {
+        self.cpu <= capacity.cpu && self.memory <= capacity.memory
+    }
+
+    pub fn saturating_sub(&self, other: &Resources) -> Resources {
+        Resources {
+            cpu: self.cpu.saturating_sub(other.cpu),
+            memory: self.memory.saturating_sub(other.memory),
+        }
+    }
+}
+
+impl std::ops::Add for Resources {
+    type Output = Resources;
+    fn add(self, rhs: Resources) -> Resources {
+        Resources {
+            cpu: self.cpu + rhs.cpu,
+            memory: self.memory + rhs.memory,
+        }
+    }
+}
+
+impl std::ops::AddAssign for Resources {
+    fn add_assign(&mut self, rhs: Resources) {
+        self.cpu += rhs.cpu;
+        self.memory += rhs.memory;
+    }
+}
+
+impl std::ops::SubAssign for Resources {
+    fn sub_assign(&mut self, rhs: Resources) {
+        self.cpu -= rhs.cpu;
+        self.memory -= rhs.memory;
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cpu={} mem={}", self.cpu, self.memory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_millicpu() {
+        assert_eq!("100m".parse::<MilliCpu>().unwrap(), MilliCpu(100));
+        assert_eq!("1m".parse::<MilliCpu>().unwrap(), MilliCpu(1));
+        assert_eq!("1".parse::<MilliCpu>().unwrap(), MilliCpu(1000));
+        assert_eq!("1.5".parse::<MilliCpu>().unwrap(), MilliCpu(1500));
+        assert_eq!("6".parse::<MilliCpu>().unwrap(), MilliCpu(6000));
+    }
+
+    #[test]
+    fn parse_millicpu_errors() {
+        assert!("".parse::<MilliCpu>().is_err());
+        assert!("abc".parse::<MilliCpu>().is_err());
+        assert!("12q".parse::<MilliCpu>().is_err());
+        assert!("-5".parse::<MilliCpu>().is_err());
+    }
+
+    #[test]
+    fn display_millicpu_round_trips() {
+        for s in ["100m", "1m", "999m", "2", "6"] {
+            let q: MilliCpu = s.parse().unwrap();
+            assert_eq!(q.to_string(), s);
+        }
+    }
+
+    #[test]
+    fn cores_conversion() {
+        assert_eq!(MilliCpu(1500).cores(), 1.5);
+        assert_eq!(MilliCpu::from_cores(0.25), MilliCpu(250));
+    }
+
+    #[test]
+    fn parse_memory() {
+        assert_eq!("10Gi".parse::<Memory>().unwrap(), Memory::from_gib(10));
+        assert_eq!("512Mi".parse::<Memory>().unwrap(), Memory::from_mib(512));
+        assert_eq!("1024".parse::<Memory>().unwrap(), Memory(1024));
+        assert_eq!("4K".parse::<Memory>().unwrap(), Memory(4000));
+    }
+
+    #[test]
+    fn parse_memory_errors() {
+        assert!("".parse::<Memory>().is_err());
+        assert!("10Qi".parse::<Memory>().is_err());
+        assert!("xGi".parse::<Memory>().is_err());
+    }
+
+    #[test]
+    fn display_memory() {
+        assert_eq!(Memory::from_gib(10).to_string(), "10Gi");
+        assert_eq!(Memory::from_mib(512).to_string(), "512Mi");
+        assert_eq!(Memory(1000).to_string(), "1000");
+    }
+
+    #[test]
+    fn resources_fit() {
+        let node = Resources::new(MilliCpu(8000), Memory::from_gib(10));
+        let pod = Resources::new(MilliCpu(1000), Memory::from_mib(256));
+        assert!(pod.fits_in(&node));
+        assert!(!node.fits_in(&pod));
+    }
+
+    #[test]
+    fn resources_arithmetic() {
+        let mut a = Resources::new(MilliCpu(500), Memory::from_mib(100));
+        a += Resources::new(MilliCpu(250), Memory::from_mib(50));
+        assert_eq!(a.cpu, MilliCpu(750));
+        a -= Resources::new(MilliCpu(750), Memory::from_mib(150));
+        assert_eq!(a, Resources::ZERO);
+    }
+
+    #[test]
+    fn saturating_sub_clamps() {
+        let a = Resources::cpu_m(100);
+        let b = Resources::cpu_m(500);
+        assert_eq!(a.saturating_sub(&b).cpu, MilliCpu::ZERO);
+    }
+}

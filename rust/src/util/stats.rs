@@ -1,0 +1,415 @@
+//! Latency statistics: running summaries, exact-percentile samples, and
+//! HDR-style log-bucketed histograms for high-volume hot paths.
+
+use std::fmt;
+
+/// Running mean / variance via Welford's algorithm plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Summary {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample standard deviation.
+    pub fn std_dev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl fmt::Display for Summary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.2} sd={:.2} min={:.2} max={:.2}",
+            self.n,
+            self.mean(),
+            self.std_dev(),
+            self.min(),
+            self.max()
+        )
+    }
+}
+
+/// Exact-percentile reservoir: stores every sample. Fine for experiment-scale
+/// counts (≤ a few million); the hot path uses [`LogHistogram`] instead.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Samples {
+        Samples {
+            xs: Vec::new(),
+            sorted: true,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile by linear interpolation; `q` in `[0, 100]`.
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = q / 100.0 * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = rank - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        self.xs[0]
+    }
+
+    pub fn max(&mut self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        *self.xs.last().unwrap()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Log-bucketed histogram (HdrHistogram-flavoured): ~2.5% relative error,
+/// constant memory, O(1) record. Units are whatever the caller records —
+/// the platform uses microseconds.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// buckets[i] counts values in [lo_i, lo_i * growth).
+    buckets: Vec<u64>,
+    zero_count: u64,
+    growth: f64,
+    inv_log_growth: f64,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    /// 5% bucket growth, covers [1, ~1e13] in 640 buckets.
+    pub fn new() -> LogHistogram {
+        let growth = 1.05f64;
+        LogHistogram {
+            buckets: vec![0; 640],
+            zero_count: 0,
+            growth,
+            inv_log_growth: 1.0 / growth.ln(),
+            count: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    #[inline]
+    fn index(&self, x: f64) -> usize {
+        // x >= 1 here.
+        let idx = (x.ln() * self.inv_log_growth) as usize;
+        idx.min(self.buckets.len() - 1)
+    }
+
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < 1.0 {
+            self.zero_count += 1;
+        } else {
+            let i = self.index(x);
+            self.buckets[i] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate percentile (bucket midpoint in log space).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = self.zero_count;
+        if acc >= target {
+            return 0.0;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let lo = self.growth.powi(i as i32);
+                let hi = lo * self.growth;
+                return (lo * hi).sqrt(); // geometric midpoint
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.zero_count += other.zero_count;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std_dev() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn summary_merge_equals_concat() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0 + 20.0).collect();
+        let mut whole = Summary::new();
+        for &x in &xs {
+            whole.record(x);
+        }
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.record(x)
+            } else {
+                b.record(x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.std_dev() - whole.std_dev()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroes() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std_dev(), 0.0);
+    }
+
+    #[test]
+    fn samples_percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.median(), 50.5);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.02);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn samples_single_value() {
+        let mut s = Samples::new();
+        s.record(42.0);
+        assert_eq!(s.median(), 42.0);
+        assert_eq!(s.percentile(0.0), 42.0);
+        assert_eq!(s.percentile(100.0), 42.0);
+    }
+
+    #[test]
+    fn log_histogram_percentile_accuracy() {
+        let mut h = LogHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i as f64);
+        }
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.06, "p50={p50}");
+        let p99 = h.percentile(99.0);
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.06, "p99={p99}");
+        assert_eq!(h.count(), 10_000);
+        assert!((h.mean() - 5000.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn log_histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for i in 1..=500u64 {
+            a.record(i as f64);
+            b.record((i + 500) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        let p50 = a.percentile(50.0);
+        assert!((p50 - 500.0).abs() / 500.0 < 0.08, "p50={p50}");
+    }
+
+    #[test]
+    fn log_histogram_sub_one_values() {
+        let mut h = LogHistogram::new();
+        h.record(0.5);
+        h.record(0.1);
+        h.record(100.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.percentile(50.0), 0.0); // sub-1 values collapse to bucket 0
+    }
+}

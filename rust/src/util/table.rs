@@ -1,0 +1,241 @@
+//! ASCII / markdown table rendering for experiment reports — the bench
+//! harness prints the same rows the paper's tables and figures report.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Table {
+        let headers: Vec<String> = headers.into_iter().map(Into::into).collect();
+        let aligns = headers
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        Table {
+            headers,
+            aligns,
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn title<S: Into<String>>(mut self, t: S) -> Table {
+        self.title = Some(t.into());
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        if col < self.aligns.len() {
+            self.aligns[col] = a;
+        }
+        self
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Table {
+        let mut cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        cells.resize(self.headers.len(), String::new());
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    fn fmt_cell(cell: &str, width: usize, align: Align) -> String {
+        let pad = width.saturating_sub(cell.chars().count());
+        match align {
+            Align::Left => format!("{}{}", cell, " ".repeat(pad)),
+            Align::Right => format!("{}{}", " ".repeat(pad), cell),
+        }
+    }
+
+    /// Box-drawing ASCII rendering for terminal output.
+    pub fn to_ascii(&self) -> String {
+        let w = self.widths();
+        let sep = |l: &str, m: &str, r: &str| -> String {
+            let mut s = String::from(l);
+            for (i, width) in w.iter().enumerate() {
+                s.push_str(&"-".repeat(width + 2));
+                s.push_str(if i + 1 == w.len() { r } else { m });
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep("+", "+", "+"));
+        out.push('|');
+        for (i, h) in self.headers.iter().enumerate() {
+            out.push_str(&format!(" {} |", Self::fmt_cell(h, w[i], Align::Left)));
+        }
+        out.push('\n');
+        out.push_str(&sep("+", "+", "+"));
+        for row in &self.rows {
+            out.push('|');
+            for (i, c) in row.iter().enumerate() {
+                out.push_str(&format!(" {} |", Self::fmt_cell(c, w[i], self.aligns[i])));
+            }
+            out.push('\n');
+        }
+        out.push_str(&sep("+", "+", "+"));
+        out
+    }
+
+    /// GitHub-flavoured markdown rendering for EXPERIMENTS.md.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("**{t}**\n\n"));
+        }
+        out.push('|');
+        for (i, h) in self.headers.iter().enumerate() {
+            out.push_str(&format!(" {} |", Self::fmt_cell(h, w[i], Align::Left)));
+        }
+        out.push('\n');
+        out.push('|');
+        for (i, a) in self.aligns.iter().enumerate() {
+            let dashes = "-".repeat(w[i].max(3));
+            match a {
+                Align::Left => out.push_str(&format!(" {dashes} |")),
+                Align::Right => out.push_str(&format!(" {}: |", &dashes[..dashes.len() - 1])),
+            }
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for (i, c) in row.iter().enumerate() {
+                out.push_str(&format!(" {} |", Self::fmt_cell(c, w[i], self.aligns[i])));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Formats a float with a sensible number of digits for latency tables.
+pub fn fmt_ms(x: f64) -> String {
+    if x >= 1000.0 {
+        format!("{x:.1}")
+    } else if x >= 10.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Formats a ratio like the paper's Table 3 (two decimals).
+pub fn fmt_ratio(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new(vec!["Function", "Cold", "Warm"]).title("Table 3");
+        t.row(vec!["helloworld", "286.99", "3.87"]);
+        t.row(vec!["cpu", "2.00", "1.13"]);
+        t
+    }
+
+    #[test]
+    fn ascii_contains_all_cells() {
+        let s = sample().to_ascii();
+        for needle in ["Table 3", "helloworld", "286.99", "1.13", "Function"] {
+            assert!(s.contains(needle), "missing {needle} in\n{s}");
+        }
+        // All data lines share the same width.
+        let widths: Vec<usize> = s
+            .lines()
+            .filter(|l| l.starts_with('|') || l.starts_with('+'))
+            .map(|l| l.chars().count())
+            .collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{widths:?}");
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let s = sample().to_markdown();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].starts_with("**Table 3**"));
+        assert!(lines[3].contains("---")); // title, blank, header, separator
+        assert_eq!(lines.len(), 2 + 2 + 2); // title+blank, header+sep, 2 rows
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["x,y", "he said \"hi\""]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn short_rows_padded() {
+        let mut t = Table::new(vec!["a", "b", "c"]);
+        t.row(vec!["only"]);
+        assert!(t.to_ascii().contains("only"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ms(5.312), "5.312");
+        assert_eq!(fmt_ms(56.44), "56.44");
+        assert_eq!(fmt_ms(2465.18), "2465.2");
+        assert_eq!(fmt_ratio(18.149), "18.15");
+    }
+}

@@ -1,0 +1,152 @@
+//! Request progress integration across allocation changes.
+//!
+//! Under the in-place policy a request starts executing at the parked
+//! allocation (1 m) and speeds up when the resize lands; under any policy,
+//! concurrent requests share the container's allocation. [`Execution`]
+//! tracks the *normalized remaining work* of one request and integrates it
+//! piecewise across those regime changes:
+//!
+//! progress rate at allocation `a` = `1 / (cpu_frac · 1000/a + (1 − cpu_frac))`
+//! in units of "default (1-CPU) runtimes per unit time", so a request is done
+//! when accumulated progress reaches `runtime_1cpu_ms`.
+
+use crate::simclock::SimTime;
+use crate::util::quantity::MilliCpu;
+use crate::workload::registry::WorkloadProfile;
+
+/// One in-flight request's progress state.
+#[derive(Debug, Clone)]
+pub struct Execution {
+    /// Remaining work in default-runtime milliseconds.
+    remaining_ms: f64,
+    cpu_frac: f64,
+    min_useful_cpu: MilliCpu,
+    /// Virtual time at which `remaining_ms` was last integrated.
+    last_update: SimTime,
+}
+
+impl Execution {
+    /// Starts an execution for `profile` at time `now`.
+    pub fn start(profile: &WorkloadProfile, now: SimTime) -> Execution {
+        Execution {
+            remaining_ms: profile.runtime_1cpu_ms,
+            cpu_frac: profile.cpu_frac,
+            min_useful_cpu: profile.min_useful_cpu,
+            last_update: now,
+        }
+    }
+
+    /// Stretch factor at allocation `a`: wall-ms per default-runtime-ms.
+    fn stretch(&self, alloc: MilliCpu) -> f64 {
+        if alloc < self.min_useful_cpu {
+            // Effectively stalled: interpreter heartbeat only. Finite but
+            // enormous, so EDTs stay schedulable.
+            return 1000.0 / (alloc.0.max(1) as f64) * 10.0;
+        }
+        let a = alloc.0 as f64;
+        self.cpu_frac * 1000.0 / a + (1.0 - self.cpu_frac)
+    }
+
+    /// Integrates progress from `last_update` to `now` at allocation
+    /// `alloc` (the allocation that was in force over that interval).
+    pub fn advance(&mut self, now: SimTime, alloc: MilliCpu) {
+        debug_assert!(now >= self.last_update);
+        let dt_ms = (now - self.last_update).as_millis_f64();
+        let progressed = dt_ms / self.stretch(alloc);
+        self.remaining_ms = (self.remaining_ms - progressed).max(0.0);
+        self.last_update = now;
+    }
+
+    /// Completion ETA from `now` if allocation `alloc` stays in force.
+    pub fn eta(&self, alloc: MilliCpu) -> SimTime {
+        SimTime::from_millis_f64(self.remaining_ms * self.stretch(alloc))
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining_ms <= 1e-9
+    }
+
+    pub fn remaining_default_ms(&self) -> f64 {
+        self.remaining_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+    fn profile(kind: WorkloadKind) -> WorkloadProfile {
+        WorkloadProfile::paper(kind)
+    }
+
+    #[test]
+    fn constant_allocation_matches_closed_form() {
+        let p = profile(WorkloadKind::Cpu);
+        for alloc in [MilliCpu(250), MilliCpu(1000), MilliCpu(4000)] {
+            let e = Execution::start(&p, SimTime::ZERO);
+            let eta = e.eta(alloc).as_millis_f64();
+            let want = p.runtime_at(alloc);
+            assert!((eta - want).abs() < 0.5, "alloc={alloc} eta={eta} want={want}");
+        }
+    }
+
+    #[test]
+    fn piecewise_integration_sums_correctly() {
+        // Run the cpu workload 100 ms at 1 CPU, then finish at 2 CPU.
+        let p = profile(WorkloadKind::Cpu);
+        let mut e = Execution::start(&p, SimTime::ZERO);
+        e.advance(SimTime::from_millis(100), MilliCpu(1000));
+        // 100 default-ms consumed (stretch≈1 at 1 CPU for cpu_frac≈1).
+        let rem = e.remaining_default_ms();
+        assert!((rem - (p.runtime_1cpu_ms - 100.0 / e.stretch(MilliCpu(1000)))).abs() < 1e-6);
+        let eta2 = e.eta(MilliCpu(2000)).as_millis_f64();
+        // Remaining work at 2 CPU takes ~rem*stretch(2000).
+        assert!((eta2 - rem * e.stretch(MilliCpu(2000))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn in_place_dead_window_costs_the_window() {
+        // The in-place activation scenario: 56 ms at 1 m, then 1 CPU.
+        let p = profile(WorkloadKind::Cpu);
+        let mut e = Execution::start(&p, SimTime::ZERO);
+        e.advance(SimTime::from_millis(56), MilliCpu(1));
+        // Essentially no progress happened.
+        assert!(p.runtime_1cpu_ms - e.remaining_default_ms() < 0.1);
+        let total = 56.0 + e.eta(MilliCpu(1000)).as_millis_f64();
+        // Total ≈ runtime + dead window.
+        assert!((total - (p.runtime_1cpu_ms + 56.0)).abs() < 0.5, "total={total}");
+    }
+
+    #[test]
+    fn io_bound_work_survives_low_allocation() {
+        let p = profile(WorkloadKind::Io);
+        let e = Execution::start(&p, SimTime::ZERO);
+        // Even at 10m, io work (62% wall-bound) finishes in bounded time:
+        // stretch = 0.38*100 + 0.62 ≈ 38.6.
+        let eta = e.eta(MilliCpu(10)).as_millis_f64();
+        assert!(eta < 40.0 * p.runtime_1cpu_ms, "eta={eta}");
+    }
+
+    #[test]
+    fn completion_detection() {
+        let p = profile(WorkloadKind::HelloWorld);
+        let mut e = Execution::start(&p, SimTime::ZERO);
+        let eta = e.eta(MilliCpu(1000));
+        e.advance(eta, MilliCpu(1000));
+        assert!(e.done());
+        // Advancing past completion stays done, no underflow.
+        e.advance(eta + SimTime::from_millis(10), MilliCpu(1000));
+        assert!(e.done());
+        assert_eq!(e.remaining_default_ms(), 0.0);
+    }
+
+    #[test]
+    fn stalled_allocation_is_finite_but_huge() {
+        let p = profile(WorkloadKind::Cpu);
+        let e = Execution::start(&p, SimTime::ZERO);
+        let eta_1m = e.eta(MilliCpu(1)).as_secs_f64();
+        assert!(eta_1m > 3600.0, "parked cpu work must be ~stalled");
+        assert!(eta_1m.is_finite());
+    }
+}

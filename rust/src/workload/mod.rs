@@ -1,0 +1,21 @@
+//! Function workloads.
+//!
+//! The paper evaluates six Python functions (Table 2): `helloworld`, `cpu`
+//! (a "complicate math problem"), `io` (open a file n times), and three
+//! video-watermark jobs from SeBS at 10 s / 1 m / 10 m of input. This module
+//! models each as a [`WorkloadProfile`] — calibrated default runtime at
+//! 1 CPU, CPU-bound fraction, image/runtime-init properties — plus an
+//! [`Execution`] progress integrator that answers the question the in-place
+//! policy hinges on: *how much work gets done while the allocation is
+//! changing under the request?*
+//!
+//! The `cpu` and `video` workloads also carry a real compute path: their
+//! inner loop is an AOT-compiled JAX/Pallas kernel executed through
+//! [`crate::runtime`] in the end-to-end example, with these profiles'
+//! service times calibrated from Table 2.
+
+pub mod exec;
+pub mod registry;
+
+pub use exec::Execution;
+pub use registry::{WorkloadKind, WorkloadProfile};

@@ -1,0 +1,164 @@
+//! The workload catalog, calibrated to the paper's Table 2.
+
+use crate::util::quantity::MilliCpu;
+
+/// The six paper workloads (plus a parameterizable custom slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    HelloWorld,
+    Cpu,
+    Io,
+    Video10s,
+    Video1m,
+    Video10m,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 6] = [
+        WorkloadKind::HelloWorld,
+        WorkloadKind::Cpu,
+        WorkloadKind::Io,
+        WorkloadKind::Video10s,
+        WorkloadKind::Video1m,
+        WorkloadKind::Video10m,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::HelloWorld => "helloworld",
+            WorkloadKind::Cpu => "cpu",
+            WorkloadKind::Io => "io",
+            WorkloadKind::Video10s => "videos-10s",
+            WorkloadKind::Video1m => "videos-1m",
+            WorkloadKind::Video10m => "videos-10m",
+        }
+    }
+}
+
+/// Static execution profile of a function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadProfile {
+    pub kind: WorkloadKind,
+    pub name: String,
+    /// Table 2: runtime at 1 CPU, milliseconds.
+    pub runtime_1cpu_ms: f64,
+    /// Fraction of the runtime that scales with CPU allocation; the rest is
+    /// I/O / wall-clock bound (file opens, codec reads) and does not.
+    pub cpu_frac: f64,
+    /// Container image and its (compressed) size for cold pulls.
+    pub image: String,
+    pub image_mb: f64,
+    /// Language-runtime boot + imports, ms (part of the cold start).
+    pub runtime_init_ms: f64,
+    /// Below this allocation the function makes essentially no progress
+    /// (interpreter heartbeat, GC, page faults dominate).
+    pub min_useful_cpu: MilliCpu,
+    /// AOT artifact executed on the real-compute path (e2e example);
+    /// `None` for trivial/io-only workloads.
+    pub artifact: Option<String>,
+}
+
+impl WorkloadProfile {
+    /// Table 2 calibration.
+    pub fn paper(kind: WorkloadKind) -> WorkloadProfile {
+        // (runtime_ms, cpu_frac, image_mb, init_ms, artifact)
+        let (runtime, cpu_frac, image_mb, init_ms, artifact): (f64, f64, f64, f64, Option<&str>) =
+            match kind {
+                // "return the helloworld string" — all overhead, tiny CPU.
+                WorkloadKind::HelloWorld => (5.31, 0.85, 98.0, 410.0, None),
+                // "complicate math problem" — pure CPU.
+                WorkloadKind::Cpu => (2465.18, 0.99, 112.0, 450.0, Some("compute")),
+                // "open file n times" — syscall/page-cache heavy.
+                WorkloadKind::Io => (2258.22, 0.38, 105.0, 430.0, None),
+                // ffmpeg watermark over N frames: decode is I/O-ish, the
+                // blend is CPU.
+                WorkloadKind::Video10s => (1659.03, 0.85, 310.0, 780.0, Some("watermark")),
+                WorkloadKind::Video1m => (13888.03, 0.85, 310.0, 780.0, Some("watermark")),
+                WorkloadKind::Video10m => (119028.34, 0.85, 310.0, 780.0, Some("watermark")),
+            };
+        WorkloadProfile {
+            kind,
+            name: kind.name().to_string(),
+            runtime_1cpu_ms: runtime,
+            cpu_frac,
+            image: format!("kinetic/{}:v1", kind.name()),
+            image_mb,
+            runtime_init_ms: init_ms,
+            min_useful_cpu: MilliCpu(2),
+            artifact: artifact.map(str::to_string),
+        }
+    }
+
+    /// All six Table-2 profiles.
+    pub fn paper_catalog() -> Vec<WorkloadProfile> {
+        WorkloadKind::ALL.iter().map(|&k| Self::paper(k)).collect()
+    }
+
+    /// Expected runtime at a *fixed* allocation, ms — the simple closed form
+    /// the progress integrator generalizes.
+    pub fn runtime_at(&self, alloc: MilliCpu) -> f64 {
+        let a = alloc.0.max(1) as f64;
+        self.runtime_1cpu_ms * (self.cpu_frac * 1000.0 / a + (1.0 - self.cpu_frac))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_runtimes_match() {
+        let expect = [
+            (WorkloadKind::HelloWorld, 5.31),
+            (WorkloadKind::Cpu, 2465.18),
+            (WorkloadKind::Io, 2258.22),
+            (WorkloadKind::Video10s, 1659.03),
+            (WorkloadKind::Video1m, 13888.03),
+            (WorkloadKind::Video10m, 119028.34),
+        ];
+        for (kind, ms) in expect {
+            let p = WorkloadProfile::paper(kind);
+            assert_eq!(p.runtime_1cpu_ms, ms);
+            // At exactly 1 CPU the closed form returns the Table-2 number.
+            assert!((p.runtime_at(MilliCpu(1000)) - ms).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn catalog_has_six_unique_names() {
+        let cat = WorkloadProfile::paper_catalog();
+        assert_eq!(cat.len(), 6);
+        let mut names: Vec<_> = cat.iter().map(|p| p.name.clone()).collect();
+        names.dedup();
+        assert_eq!(names.len(), 6);
+    }
+
+    #[test]
+    fn cpu_bound_scales_io_bound_doesnt() {
+        let cpu = WorkloadProfile::paper(WorkloadKind::Cpu);
+        let io = WorkloadProfile::paper(WorkloadKind::Io);
+        // Doubling CPU nearly halves the cpu workload...
+        let cpu_speedup = cpu.runtime_at(MilliCpu(1000)) / cpu.runtime_at(MilliCpu(2000));
+        assert!(cpu_speedup > 1.85, "{cpu_speedup}");
+        // ...but barely moves the io workload.
+        let io_speedup = io.runtime_at(MilliCpu(1000)) / io.runtime_at(MilliCpu(2000));
+        assert!(io_speedup < 1.35, "{io_speedup}");
+    }
+
+    #[test]
+    fn parked_allocation_is_catastrophic_for_cpu_work() {
+        let cpu = WorkloadProfile::paper(WorkloadKind::Cpu);
+        // At 1m the cpu workload would take ~1000× longer — why the in-place
+        // policy must scale up before real work happens.
+        assert!(cpu.runtime_at(MilliCpu(1)) > 500.0 * cpu.runtime_at(MilliCpu(1000)));
+    }
+
+    #[test]
+    fn video_artifacts_wired() {
+        assert_eq!(
+            WorkloadProfile::paper(WorkloadKind::Video10s).artifact.as_deref(),
+            Some("watermark")
+        );
+        assert_eq!(WorkloadProfile::paper(WorkloadKind::HelloWorld).artifact, None);
+    }
+}

@@ -1,0 +1,258 @@
+//! Cross-module integration tests: the full platform driven end-to-end,
+//! exercising cluster + apiserver + knative + policy + loadgen together —
+//! the scenarios the paper's §4.2 narrative describes.
+
+use kinetic::coordinator::platform::{Platform, Simulation};
+use kinetic::coordinator::service::Service;
+use kinetic::loadgen::arrival::Arrival;
+use kinetic::loadgen::runner::{Runner, Scenario};
+use kinetic::policy::{PlatformParams, Policy};
+use kinetic::simclock::SimTime;
+use kinetic::util::quantity::MilliCpu;
+use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+fn sim(policy: Policy, kind: WorkloadKind, seed: u64) -> Simulation {
+    let mut sim = Simulation::with_params(PlatformParams::with_seed(seed));
+    sim.deploy("fn", WorkloadProfile::paper(kind), policy);
+    sim.run();
+    sim
+}
+
+#[test]
+fn paper_phase_diagram_cold_path() {
+    // §3 Figure 1(A): request arrives after shutdown → full restart.
+    let mut s = sim(Policy::Cold, WorkloadKind::HelloWorld, 1);
+    let r = Runner::run(
+        &mut s,
+        "fn",
+        &Scenario::closed_with_think(1, 3, SimTime::from_secs(10)),
+    );
+    assert_eq!(r.completed, 3);
+    assert_eq!(r.cold_starts, 3, "every request must cold-start");
+    assert!(r.mean_ms > 1000.0, "cold path must include the pipeline");
+    // Pods were created and torn down repeatedly.
+    assert_eq!(s.world.metrics.pods_created, 3);
+}
+
+#[test]
+fn paper_phase_diagram_warm_path() {
+    // §3 Figure 1(B): handler alive and idle → immediate dispatch.
+    let mut s = sim(Policy::Warm, WorkloadKind::HelloWorld, 2);
+    let r = Runner::run(
+        &mut s,
+        "fn",
+        &Scenario::closed_with_think(1, 5, SimTime::from_secs(10)),
+    );
+    assert_eq!(r.completed, 5);
+    assert_eq!(r.cold_starts, 0);
+    assert!(r.mean_ms < 50.0, "warm ≈ runtime + proxy, got {}", r.mean_ms);
+    assert_eq!(s.world.metrics.pods_created, 1, "single standing pod");
+}
+
+#[test]
+fn paper_phase_diagram_inplace_path() {
+    // §3 Figure 1(C): parked instance, scale up on arrival, down after.
+    let mut s = sim(Policy::InPlace, WorkloadKind::HelloWorld, 3);
+    let r = Runner::run(
+        &mut s,
+        "fn",
+        &Scenario::closed_with_think(1, 5, SimTime::from_secs(10)),
+    );
+    assert_eq!(r.completed, 5);
+    assert_eq!(r.cold_starts, 0);
+    assert_eq!(r.inplace_scale_ups, 5, "each request triggers a scale-up");
+    // Between cold and warm.
+    assert!(r.mean_ms > 40.0 && r.mean_ms < 400.0, "got {}", r.mean_ms);
+    // Scale-ups and parks both landed through the API server.
+    assert!(s.world.metrics.resizes_accepted >= 10);
+}
+
+#[test]
+fn inplace_back_to_back_requests_serialize_on_kubelet() {
+    // Back-to-back requests churn up/down resizes; conflicts must be
+    // retried, never lost, and all requests complete.
+    let mut s = sim(Policy::InPlace, WorkloadKind::Cpu, 4);
+    let r = Runner::run(&mut s, "fn", &Scenario::closed(1, 6));
+    assert_eq!(r.completed, 6);
+    assert!(
+        s.world.metrics.resize_conflicts > 0,
+        "down→up churn should hit the kubelet's per-pod serialization"
+    );
+}
+
+#[test]
+fn feature_gate_off_falls_back_to_no_resize() {
+    // With the alpha gate disabled (k8s 1.27 default) the in-place hooks
+    // can't do anything: patches are rejected, yet serving must still work
+    // (the pod just stays at its boot-time serving allocation).
+    let mut sim = Simulation::with_params(PlatformParams::with_seed(5));
+    sim.world.api.gates.set(
+        kinetic::apiserver::gates::IN_PLACE_POD_VERTICAL_SCALING,
+        false,
+    );
+    sim.deploy(
+        "fn",
+        WorkloadProfile::paper(WorkloadKind::HelloWorld),
+        Policy::InPlace,
+    );
+    sim.run();
+    let r = Runner::run(&mut sim, "fn", &Scenario::closed(1, 4));
+    assert_eq!(r.completed, 4);
+    assert_eq!(sim.world.metrics.resizes_accepted, 0);
+    // Pod never parked: still at serving CPU.
+    let pod = sim.world.services["fn"].pods[0].pod;
+    assert_eq!(
+        sim.world.cluster.pod(pod).unwrap().status.applied_cpu_limit,
+        MilliCpu(1000)
+    );
+}
+
+#[test]
+fn open_loop_burst_queues_and_completes() {
+    let mut s = sim(Policy::InPlace, WorkloadKind::Io, 6);
+    let r = Runner::run(
+        &mut s,
+        "fn",
+        &Scenario::Open {
+            arrival: Arrival::Bursty {
+                period: SimTime::from_secs(20),
+                burst_n: 6,
+            },
+            horizon: SimTime::from_secs(60),
+        },
+    );
+    assert_eq!(r.failed, 0);
+    assert_eq!(r.completed, 18);
+    // Burst members share the pod → p99 well above p50.
+    assert!(r.p99_ms > r.p50_ms);
+}
+
+#[test]
+fn multi_service_isolation() {
+    // Two services on one node: metrics and pods must not bleed.
+    let mut sim = Simulation::with_params(PlatformParams::with_seed(7));
+    sim.deploy(
+        "a",
+        WorkloadProfile::paper(WorkloadKind::HelloWorld),
+        Policy::Warm,
+    );
+    sim.deploy(
+        "b",
+        WorkloadProfile::paper(WorkloadKind::Io),
+        Policy::InPlace,
+    );
+    sim.run();
+    for _ in 0..4 {
+        sim.submit("a");
+        sim.submit("b");
+    }
+    sim.run();
+    let ma = sim.world.metrics.service("a");
+    assert_eq!(ma.completed, 4);
+    assert_eq!(ma.inplace_scale_ups, 0);
+    let mb = sim.world.metrics.service("b");
+    assert_eq!(mb.completed, 4);
+    assert!(mb.inplace_scale_ups >= 1);
+}
+
+#[test]
+fn node_capacity_respected_under_many_services() {
+    // 8-core node; warm services reserve 1 CPU each. The 9th+ pod must not
+    // fit — deploys succeed but pods beyond capacity stay unscheduled.
+    let mut sim = Simulation::with_params(PlatformParams::with_seed(8));
+    for i in 0..10 {
+        sim.deploy(
+            &format!("svc-{i}"),
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::Warm,
+        );
+    }
+    sim.run();
+    let ready: usize = sim
+        .world
+        .services
+        .values()
+        .map(|s| s.ready_pods())
+        .sum();
+    assert!(ready <= 8, "ready={ready} cannot exceed node cores");
+    let reserved = sim.world.cluster.total_reserved();
+    assert!(reserved.cpu <= MilliCpu(8000));
+}
+
+#[test]
+fn concurrency_limit_queues_at_proxy() {
+    let mut sim = Simulation::with_params(PlatformParams::with_seed(9));
+    let mut cfg = Policy::Warm.revision_config();
+    cfg.container_concurrency = 1;
+    cfg.max_scale = 1;
+    let svc = Service::with_config(
+        "fn",
+        WorkloadProfile::paper(WorkloadKind::Cpu),
+        Policy::Warm,
+        cfg,
+    );
+    sim.deploy_service(svc);
+    sim.run();
+    // Two simultaneous requests; CC=1 → strictly serial execution.
+    sim.submit("fn");
+    sim.submit("fn");
+    sim.run();
+    let mut lat = sim.world.metrics.service("fn").latency_ms.clone();
+    assert_eq!(lat.len(), 2);
+    // Second request waits for the first: ~2× runtime, not CPU-shared.
+    let max = lat.max();
+    assert!(max > 4500.0, "serialized second request, got {max}");
+    let min = lat.min();
+    assert!(min < 3000.0, "first request unqueued, got {min}");
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let run = || {
+        let mut s = sim(Policy::InPlace, WorkloadKind::Cpu, 1234);
+        let r = Runner::run(&mut s, "fn", &Scenario::closed(3, 4));
+        (r.completed, r.mean_ms.to_bits(), r.p99_ms.to_bits())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn committed_cpu_tracks_policy_difference_over_a_day() {
+    // One hour of sparse traffic: the §3 "enhanced resource availability"
+    // claim quantified.
+    let measure = |policy: Policy| -> f64 {
+        let mut s = sim(policy, WorkloadKind::HelloWorld, 11);
+        let start = s.now();
+        for i in 0..30u64 {
+            s.submit_at(start + SimTime::from_secs(i * 120), "fn");
+        }
+        s.run();
+        let end = s.now().max(start + SimTime::from_secs(3600));
+        s.run_until(end);
+        s.world.metrics.committed_cpu.average_mcpu(end)
+    };
+    let warm = measure(Policy::Warm);
+    let inplace = measure(Policy::InPlace);
+    let cold = measure(Policy::Cold);
+    assert!(warm > 900.0, "warm federates a full CPU: {warm}");
+    assert!(inplace < 60.0, "in-place parks at ~1m: {inplace}");
+    assert!(cold < inplace + 50.0, "cold commits nothing while idle: {cold}");
+}
+
+/// The platform is the public API — keep the documented entry points
+/// compiling exactly as README shows them.
+#[test]
+fn readme_snippet_compiles_and_runs() {
+    let mut sim = Simulation::paper(42);
+    sim.deploy(
+        "hello",
+        WorkloadProfile::paper(WorkloadKind::HelloWorld),
+        Policy::InPlace,
+    );
+    sim.run();
+    sim.submit("hello");
+    sim.run();
+    let m = sim.world.metrics.service("hello");
+    assert_eq!(m.completed, 1);
+    let _: &Platform = &sim.world;
+}

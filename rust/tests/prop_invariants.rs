@@ -1,0 +1,264 @@
+//! Property-based invariants over the coordinator substrates (DESIGN.md
+//! §6c): CFS work conservation, resize state-machine safety, routing/request
+//! conservation through the platform, autoscaler window math, and the
+//! latency model's monotonicity guarantees.
+
+use kinetic::cgroup::cfs::{CfsArbiter, CfsShare};
+use kinetic::cgroup::latency::{LatencyModel, NodeLoad};
+use kinetic::coordinator::platform::Simulation;
+use kinetic::knative::autoscaler::Autoscaler;
+use kinetic::knative::config::RevisionConfig;
+use kinetic::policy::Policy;
+use kinetic::simclock::SimTime;
+use kinetic::util::prop::{property, Gen};
+use kinetic::util::quantity::MilliCpu;
+use kinetic::workload::exec::Execution;
+use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+/// CFS: rates never exceed caps/demands, never exceed capacity, and the
+/// arbiter is work-conserving under saturation.
+#[test]
+fn prop_cfs_work_conservation() {
+    property("cfs_work_conservation", 300, |g: &mut Gen| {
+        let capacity = MilliCpu(g.u64(100, 16_000));
+        let n = g.usize(1, 12);
+        let entities: Vec<CfsShare> = (0..n)
+            .map(|_| {
+                let weight = g.u64(1, 10_000);
+                let limit = if g.bool() {
+                    Some(MilliCpu(g.millicpu()))
+                } else {
+                    None
+                };
+                let demand = MilliCpu(g.u64(0, 12_000));
+                CfsShare::new(weight, limit, demand)
+            })
+            .collect();
+        let arb = CfsArbiter::new(capacity);
+        let rates = arb.allocate(&entities);
+
+        let mut total = 0u64;
+        for (e, r) in entities.iter().zip(&rates) {
+            if let Some(l) = e.limit {
+                if *r > l {
+                    return Err(format!("rate {r} exceeds limit {l}"));
+                }
+            }
+            if r.0 > e.demand.0 + 1 {
+                return Err(format!("rate {r} exceeds demand {}", e.demand));
+            }
+            total += r.0;
+        }
+        if total > capacity.0 + entities.len() as u64 {
+            return Err(format!("total {total} exceeds capacity {capacity}"));
+        }
+        // Work conservation: when aggregate eligible demand saturates the
+        // node, the node is fully used (up to rounding).
+        let eligible: u64 = entities
+            .iter()
+            .map(|e| e.limit.map(|l| l.0).unwrap_or(u64::MAX / 2).min(e.demand.0))
+            .sum();
+        if eligible >= capacity.0 && total + entities.len() as u64 * 2 < capacity.0 {
+            return Err(format!(
+                "not work conserving: total {total} < capacity {capacity} with eligible {eligible}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Resize latency model: positive, finite, and monotone in the target for
+/// scale-down (Fig 4b's shape) for any load.
+#[test]
+fn prop_latency_model_sane() {
+    property("latency_model_sane", 200, |g: &mut Gen| {
+        let model = LatencyModel::default();
+        let load = NodeLoad {
+            cpu_utilization: g.f64(0.0, 1.0),
+            io_stress: g.bool(),
+        };
+        let cur = g.millicpu();
+        let tgt = g.millicpu();
+        let ms = model.mean_ms(cur, tgt, load);
+        if !(ms.is_finite() && ms > 0.0) {
+            return Err(format!("mean_ms({cur},{tgt}) = {ms}"));
+        }
+        if ms > 60_000.0 {
+            return Err(format!("implausible latency {ms} ms"));
+        }
+        // Scale-down monotonicity in target.
+        let t1 = g.u64(1, 500);
+        let t2 = t1 + g.u64(1, 499);
+        let down_small = model.mean_ms(1000, t1, load);
+        let down_large = model.mean_ms(1000, t2, load);
+        if down_small + 1e-9 < down_large {
+            return Err(format!(
+                "down-latency not monotone: target {t1} => {down_small}, target {t2} => {down_large}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Execution progress: piecewise integration over arbitrary allocation
+/// schedules conserves work — total progress equals the sum of segment
+/// contributions, and completion time at constant allocation matches the
+/// closed form.
+#[test]
+fn prop_execution_work_conservation() {
+    property("execution_work_conservation", 200, |g: &mut Gen| {
+        let kinds = [
+            WorkloadKind::HelloWorld,
+            WorkloadKind::Cpu,
+            WorkloadKind::Io,
+            WorkloadKind::Video10s,
+        ];
+        let profile = WorkloadProfile::paper(*g.choose(&kinds));
+        let mut exec = Execution::start(&profile, SimTime::ZERO);
+        let mut now = SimTime::ZERO;
+        let segments = g.usize(1, 10);
+        let mut spent = 0.0f64;
+        for _ in 0..segments {
+            let alloc = MilliCpu(g.millicpu());
+            let dt = SimTime::from_millis_f64(g.f64(0.1, 500.0));
+            let before = exec.remaining_default_ms();
+            exec.advance(now + dt, alloc);
+            let after = exec.remaining_default_ms();
+            if after > before + 1e-9 {
+                return Err("remaining work increased".to_string());
+            }
+            spent += before - after;
+            now = now + dt;
+            if exec.done() {
+                break;
+            }
+        }
+        let accounted = profile.runtime_1cpu_ms - exec.remaining_default_ms();
+        if (accounted - spent).abs() > 1e-6 {
+            return Err(format!("work leak: accounted {accounted} vs spent {spent}"));
+        }
+        Ok(())
+    });
+}
+
+/// Routing conservation: every submitted request is eventually exactly one
+/// of {completed, failed}; none vanish, none double-count — across random
+/// policies, workloads and burst patterns.
+#[test]
+fn prop_request_conservation() {
+    property("request_conservation", 25, |g: &mut Gen| {
+        let policy = *g.choose(&[Policy::Cold, Policy::Warm, Policy::InPlace]);
+        let kind = *g.choose(&[
+            WorkloadKind::HelloWorld,
+            WorkloadKind::Cpu,
+            WorkloadKind::Io,
+        ]);
+        let mut sim = Simulation::paper(g.u64(0, u64::MAX / 2));
+        sim.deploy("fn", WorkloadProfile::paper(kind), policy);
+        sim.run();
+
+        let n = g.usize(1, 24) as u64;
+        let mut at = sim.now();
+        for _ in 0..n {
+            at = at + SimTime::from_millis_f64(g.f64(0.0, 9000.0));
+            sim.submit_at(at, "fn");
+        }
+        sim.run();
+
+        let in_flight = sim.world.in_flight();
+        let m = sim.world.metrics.service("fn");
+        let total = m.completed + m.failed;
+        if total != n {
+            return Err(format!(
+                "submitted {n}, accounted {total} (completed {} failed {})",
+                m.completed, m.failed
+            ));
+        }
+        if in_flight != 0 {
+            return Err(format!("{in_flight} requests still in flight"));
+        }
+        // Latency samples match completions.
+        if m.latency_ms.len() as u64 != m.completed {
+            return Err("latency sample count != completions".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// Autoscaler: the window average is always within [0, max concurrency
+/// recorded], and decisions respect min/max bounds.
+#[test]
+fn prop_autoscaler_bounds() {
+    property("autoscaler_bounds", 200, |g: &mut Gen| {
+        let min = g.u64(0, 3) as u32;
+        let max = min + g.u64(1, 8) as u32;
+        let cfg = RevisionConfig {
+            min_scale: min,
+            max_scale: max,
+            stable_window: SimTime::from_secs(g.u64(2, 60)),
+            target_concurrency: g.f64(0.5, 20.0),
+            ..RevisionConfig::default()
+        };
+        let mut a = Autoscaler::new(cfg.clone());
+        let mut now = SimTime::ZERO;
+        let mut max_seen = 0u32;
+        for _ in 0..g.usize(1, 40) {
+            now = now + SimTime::from_millis_f64(g.f64(1.0, 5000.0));
+            let c = g.u64(0, 40) as u32;
+            max_seen = max_seen.max(c);
+            a.record(now, c);
+        }
+        let avg = a.window_average(now, cfg.stable_window);
+        if !(0.0..=max_seen as f64 + 1e-9).contains(&avg) {
+            return Err(format!("window avg {avg} outside [0, {max_seen}]"));
+        }
+        let d = a.decide(now, g.u64(0, 8) as u32);
+        if d.desired < min || d.desired > max {
+            return Err(format!("desired {} outside [{min}, {max}]", d.desired));
+        }
+        Ok(())
+    });
+}
+
+/// In-place policy safety: after any request pattern quiesces, the pod is
+/// parked back at 1 m (the post-hook always wins eventually) and committed
+/// CPU returns to the parked level.
+#[test]
+fn prop_inplace_always_reparks() {
+    property("inplace_always_reparks", 15, |g: &mut Gen| {
+        let mut sim = Simulation::paper(g.u64(0, u64::MAX / 2));
+        sim.deploy(
+            "fn",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::InPlace,
+        );
+        sim.run();
+        let mut at = sim.now();
+        for _ in 0..g.usize(1, 16) {
+            at = at + SimTime::from_millis_f64(g.f64(0.0, 400.0));
+            sim.submit_at(at, "fn");
+        }
+        sim.run();
+        // Let any trailing park resize land.
+        let deadline = sim.now() + SimTime::from_secs(30);
+        sim.run_until(deadline);
+        sim.run();
+
+        let svc = &sim.world.services["fn"];
+        if svc.pods.len() != 1 {
+            return Err(format!("expected 1 pod, got {}", svc.pods.len()));
+        }
+        let pod = svc.pods[0].pod;
+        let applied = sim
+            .world
+            .cluster
+            .pod(pod)
+            .unwrap()
+            .status
+            .applied_cpu_limit;
+        if applied != MilliCpu(1) {
+            return Err(format!("pod not parked: applied={applied}"));
+        }
+        Ok(())
+    });
+}
