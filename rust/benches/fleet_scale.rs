@@ -1,0 +1,61 @@
+//! Bench: fleet-scale behaviour beyond the paper — per-policy latency on a
+//! 10-node topology and simulator throughput (host wall-clock per simulated
+//! request) as the fleet grows 10 → 100 nodes.
+//!
+//! `cargo bench --bench fleet_scale [-- table|scale|hetero]`
+
+use kinetic::cluster::topology::Topology;
+use kinetic::experiments::fleet::{self, FleetConfig};
+use kinetic::policy::Policy;
+use kinetic::simclock::SimTime;
+use kinetic::util::bench::Runner;
+
+fn cfg(topology: Topology, seed: u64) -> FleetConfig {
+    let services = 2 * topology.len();
+    FleetConfig {
+        topology,
+        services,
+        rate_per_service: 0.05,
+        horizon: SimTime::from_secs(120),
+        seed,
+    }
+}
+
+fn main() {
+    let runner = Runner::from_args();
+
+    runner.section("table", || {
+        // The acceptance artifact: per-policy latency table on ≥10 nodes.
+        let rows = fleet::run_all(&cfg(Topology::uniform_paper(10), 42));
+        println!("{}", fleet::fleet_table(&rows).to_ascii());
+    });
+
+    runner.section("scale", || {
+        // Simulator throughput as the fleet grows: virtual load scales with
+        // node count; report host-time per simulated request.
+        for nodes in [10usize, 25, 50, 100] {
+            let c = cfg(Topology::uniform_paper(nodes), 7);
+            let t0 = std::time::Instant::now();
+            let row = fleet::run_policy(&c, Policy::InPlace);
+            let wall = t0.elapsed();
+            let per_req = if row.completed > 0 {
+                wall.as_nanos() as f64 / row.completed as f64 / 1000.0
+            } else {
+                0.0
+            };
+            println!(
+                "scale/{nodes:>3} nodes  {} tenants  {:>6} requests in {wall:>10.2?}  \
+                 ({per_req:.1} us/request host)",
+                c.services, row.completed
+            );
+        }
+    });
+
+    runner.section("hetero", || {
+        let rows = fleet::run_all(&cfg(Topology::hetero_preset(12), 21));
+        println!("{}", fleet::fleet_table(&rows).to_ascii());
+        for r in &rows {
+            assert_eq!(r.failed, 0, "{:?} failed requests on hetero fleet", r.policy);
+        }
+    });
+}

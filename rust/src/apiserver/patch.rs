@@ -7,7 +7,7 @@
 //! publishes a watch event for the kubelet sync loop (driven by the
 //! coordinator) to act on.
 
-use thiserror::Error;
+use std::fmt;
 
 use crate::apiserver::gates::FeatureGates;
 use crate::apiserver::watch::{EventBus, EventKind};
@@ -24,21 +24,34 @@ pub struct ResizePatch {
     pub new_cpu_limit: MilliCpu,
 }
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ApiError {
-    #[error("InPlacePodVerticalScaling feature gate is disabled")]
     GateDisabled,
-    #[error("no such pod {0:?}")]
     NoSuchPod(PodId),
-    #[error("pod {0:?} is not running (phase {1:?})")]
     NotRunning(PodId, PodPhase),
-    #[error("container resize policy requires restart")]
     RestartRequired,
-    #[error("invalid cpu limit {0:?}")]
     InvalidLimit(MilliCpu),
-    #[error("resize conflict: {0}")]
     Conflict(ResizeError),
 }
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::GateDisabled => {
+                write!(f, "InPlacePodVerticalScaling feature gate is disabled")
+            }
+            ApiError::NoSuchPod(p) => write!(f, "no such pod {p:?}"),
+            ApiError::NotRunning(p, phase) => {
+                write!(f, "pod {p:?} is not running (phase {phase:?})")
+            }
+            ApiError::RestartRequired => write!(f, "container resize policy requires restart"),
+            ApiError::InvalidLimit(l) => write!(f, "invalid cpu limit {l:?}"),
+            ApiError::Conflict(e) => write!(f, "resize conflict: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
 
 /// The API server.
 #[derive(Debug, Default)]

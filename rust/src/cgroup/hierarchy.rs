@@ -8,8 +8,7 @@
 //! changes, and records the virtual time of the last write.
 
 use std::collections::HashMap;
-
-use thiserror::Error;
+use std::fmt;
 
 use crate::simclock::SimTime;
 use crate::util::quantity::MilliCpu;
@@ -87,19 +86,28 @@ impl CpuMax {
     }
 }
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum CgroupError {
-    #[error("no such cgroup: {0:?}")]
     NotFound(CgroupId),
-    #[error("no such cgroup path: {0}")]
     PathNotFound(String),
-    #[error("cgroup has children: {0:?}")]
     HasChildren(CgroupId),
-    #[error("invalid cpu.max content: {0}")]
     BadCpuMax(String),
-    #[error("invalid cpu.weight: {0}")]
     BadWeight(u64),
 }
+
+impl fmt::Display for CgroupError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CgroupError::NotFound(id) => write!(f, "no such cgroup: {id:?}"),
+            CgroupError::PathNotFound(p) => write!(f, "no such cgroup path: {p}"),
+            CgroupError::HasChildren(id) => write!(f, "cgroup has children: {id:?}"),
+            CgroupError::BadCpuMax(s) => write!(f, "invalid cpu.max content: {s}"),
+            CgroupError::BadWeight(w) => write!(f, "invalid cpu.weight: {w}"),
+        }
+    }
+}
+
+impl std::error::Error for CgroupError {}
 
 /// One cgroup node.
 #[derive(Debug, Clone)]

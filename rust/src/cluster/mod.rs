@@ -12,6 +12,7 @@ pub mod kubelet;
 pub mod node;
 pub mod pod;
 pub mod scheduler;
+pub mod topology;
 
 pub use container::{ContainerSpec, ResizePolicy, RestartPolicy};
 pub use deployment::{Action as DeploymentAction, Deployment};
@@ -19,6 +20,7 @@ pub use kubelet::{Kubelet, StartupParams, StartupStage};
 pub use node::{Node, NodeId};
 pub use pod::{Pod, PodId, PodPhase, PodSpec, PodStatus, ResizeStatus};
 pub use scheduler::{ScheduleError, Scheduler, ScoringPolicy};
+pub use topology::{NodeShape, Topology};
 
 use std::collections::HashMap;
 

@@ -89,15 +89,24 @@ pub struct PodStatus {
     pub resize_busy_until: SimTime,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ResizeError {
-    #[error("resize already in flight")]
     Busy,
-    #[error("pod not running")]
     NotRunning,
-    #[error("no resize in flight")]
     NotResizing,
 }
+
+impl std::fmt::Display for ResizeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResizeError::Busy => write!(f, "resize already in flight"),
+            ResizeError::NotRunning => write!(f, "pod not running"),
+            ResizeError::NotResizing => write!(f, "no resize in flight"),
+        }
+    }
+}
+
+impl std::error::Error for ResizeError {}
 
 impl PodStatus {
     fn new(initial_cpu_limit: MilliCpu) -> PodStatus {

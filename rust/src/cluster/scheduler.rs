@@ -1,7 +1,7 @@
 //! A kube-scheduler-shaped pod scheduler: filter nodes that fit the pod's
 //! requests, score the survivors, bind to the winner.
 
-use thiserror::Error;
+use std::fmt;
 
 use crate::cluster::node::{Node, NodeId};
 use crate::cluster::pod::PodId;
@@ -17,15 +17,24 @@ pub enum ScoringPolicy {
     MostAllocated,
 }
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ScheduleError {
-    #[error("no node fits pod {0:?}")]
     Unschedulable(PodId),
-    #[error("pod {0:?} already bound")]
     AlreadyBound(PodId),
-    #[error("no such pod {0:?}")]
     NoSuchPod(PodId),
 }
+
+impl fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScheduleError::Unschedulable(p) => write!(f, "no node fits pod {p:?}"),
+            ScheduleError::AlreadyBound(p) => write!(f, "pod {p:?} already bound"),
+            ScheduleError::NoSuchPod(p) => write!(f, "no such pod {p:?}"),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 /// The scheduler. Stateless between decisions; holds only the policy.
 #[derive(Debug, Clone, Default)]
@@ -39,6 +48,10 @@ impl Scheduler {
     }
 
     /// Picks the best node for `requests`, or None if nothing fits.
+    ///
+    /// Ties break on the lowest `NodeId` so placement is deterministic
+    /// regardless of how the node slice was produced — on a fresh uniform
+    /// fleet every scheduler in the simulation agrees on the same winner.
     pub fn pick(&self, nodes: &[Node], requests: Resources) -> Option<NodeId> {
         let mut best: Option<(NodeId, f64)> = None;
         for n in nodes {
@@ -46,10 +59,11 @@ impl Scheduler {
                 continue;
             }
             let score = self.score(n, requests);
-            match best {
-                Some((_, s)) if s >= score => {}
-                _ => best = Some((n.id, score)),
-            }
+            best = match best {
+                Some((id, s)) if score > s || (score == s && n.id < id) => Some((n.id, score)),
+                None => Some((n.id, score)),
+                keep => keep,
+            };
         }
         best.map(|(id, _)| id)
     }
@@ -117,6 +131,22 @@ mod tests {
         let s = Scheduler::default();
         let nodes = vec![node(0, 7900), node(1, 7900)];
         assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), None);
+    }
+
+    #[test]
+    fn equal_scores_break_to_lowest_node_id() {
+        // Identical reservations on every node ⇒ identical scores; the
+        // lowest NodeId must win under both scoring policies, and the
+        // winner must not depend on slice order tricks like reversal of
+        // equally-scored peers.
+        for policy in [ScoringPolicy::LeastAllocated, ScoringPolicy::MostAllocated] {
+            let s = Scheduler::new(policy);
+            let nodes = vec![node(0, 2000), node(1, 2000), node(2, 2000)];
+            assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), Some(NodeId(0)));
+            // Same fleet presented in reverse order: still the lowest id.
+            let rev = vec![node(2, 2000), node(1, 2000), node(0, 2000)];
+            assert_eq!(s.pick(&rev, Resources::cpu_m(500)), Some(NodeId(0)));
+        }
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Cluster topologies: the shape of the fleet the platform runs on.
+//!
+//! The paper's testbed is a single 8-core / 10 GB `kind` node —
+//! [`Topology::paper`] reproduces it exactly. Everything beyond the paper
+//! (the fleet experiments, the multi-node scheduler path, heterogeneous
+//! node pools) is expressed as a [`Topology`]: an ordered list of
+//! [`NodeShape`]s that [`Topology::build`] materializes into a
+//! [`Cluster`]. Node order is placement order — [`NodeId`]s are assigned
+//! ascending, which is what the scheduler's lowest-id tie-break keys on.
+
+use crate::cluster::{Cluster, NodeId};
+use crate::util::quantity::{Memory, MilliCpu, Resources};
+
+/// One node's shape: a name prefix and its capacity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeShape {
+    pub name: String,
+    pub capacity: Resources,
+}
+
+impl NodeShape {
+    pub fn new(name: &str, capacity: Resources) -> NodeShape {
+        NodeShape {
+            name: name.to_string(),
+            capacity,
+        }
+    }
+
+    /// The paper's worker shape: 8 cores, 10 GB.
+    pub fn paper_worker(name: &str) -> NodeShape {
+        NodeShape::new(name, Resources::new(MilliCpu(8000), Memory::from_gib(10)))
+    }
+}
+
+/// An ordered fleet description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    nodes: Vec<NodeShape>,
+}
+
+impl Topology {
+    /// The paper's testbed: exactly one 8-core / 10 GB `kind` worker.
+    pub fn paper() -> Topology {
+        Topology {
+            nodes: vec![NodeShape::paper_worker("kind-worker")],
+        }
+    }
+
+    /// `n` identical nodes of the given capacity, named `node-0..node-n`.
+    pub fn uniform(n: usize, capacity: Resources) -> Topology {
+        assert!(n > 0, "a topology needs at least one node");
+        Topology {
+            nodes: (0..n)
+                .map(|i| NodeShape::new(&format!("node-{i}"), capacity))
+                .collect(),
+        }
+    }
+
+    /// `n` paper-shaped workers — the fleet the §3 policies are swept over.
+    pub fn uniform_paper(n: usize) -> Topology {
+        Topology::uniform(n, Resources::new(MilliCpu(8000), Memory::from_gib(10)))
+    }
+
+    /// An explicit list of node shapes (heterogeneous pools).
+    pub fn heterogeneous(nodes: Vec<NodeShape>) -> Topology {
+        assert!(!nodes.is_empty(), "a topology needs at least one node");
+        Topology { nodes }
+    }
+
+    /// A mixed pool alternating large (16-core / 32 GiB), paper (8-core /
+    /// 10 GB) and small (4-core / 8 GiB) shapes — the heterogeneous preset
+    /// behind `--topology hetero`.
+    pub fn hetero_preset(n: usize) -> Topology {
+        assert!(n > 0, "a topology needs at least one node");
+        let shapes = [
+            Resources::new(MilliCpu(16_000), Memory::from_gib(32)),
+            Resources::new(MilliCpu(8000), Memory::from_gib(10)),
+            Resources::new(MilliCpu(4000), Memory::from_gib(8)),
+        ];
+        Topology {
+            nodes: (0..n)
+                .map(|i| NodeShape::new(&format!("node-{i}"), shapes[i % shapes.len()]))
+                .collect(),
+        }
+    }
+
+    /// Parses a `--topology` CLI value: `paper`, `uniform`, or `hetero`
+    /// (`nodes` sizes the latter two).
+    pub fn from_cli(spec: &str, nodes: usize) -> Result<Topology, String> {
+        match spec.to_ascii_lowercase().as_str() {
+            "paper" => Ok(Topology::paper()),
+            "uniform" => Ok(Topology::uniform_paper(nodes.max(1))),
+            "hetero" | "heterogeneous" => Ok(Topology::hetero_preset(nodes.max(1))),
+            other => Err(format!(
+                "unknown topology: {other} (expected paper|uniform|hetero)"
+            )),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn shapes(&self) -> &[NodeShape] {
+        &self.nodes
+    }
+
+    /// Sum of node capacities.
+    pub fn total_capacity(&self) -> Resources {
+        let mut total = Resources::ZERO;
+        for n in &self.nodes {
+            total += n.capacity;
+        }
+        total
+    }
+
+    /// Materializes the fleet: nodes are added in order, so `NodeId(i)`
+    /// corresponds to `shapes()[i]`.
+    pub fn build(&self) -> Cluster {
+        let mut cluster = Cluster::new();
+        for shape in &self.nodes {
+            cluster.add_node(&shape.name, shape.capacity);
+        }
+        cluster
+    }
+
+    /// Capacity of node `i` (panics on out-of-range, like `Cluster::node`).
+    pub fn capacity_of(&self, id: NodeId) -> Resources {
+        self.nodes[id.0 as usize].capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_topology_matches_seed_testbed() {
+        let t = Topology::paper();
+        assert_eq!(t.len(), 1);
+        let c = t.build();
+        assert_eq!(c.nodes().len(), 1);
+        assert_eq!(c.node(NodeId(0)).name, "kind-worker");
+        assert_eq!(c.node(NodeId(0)).capacity().cpu, MilliCpu(8000));
+        assert_eq!(c.node(NodeId(0)).capacity().memory, Memory::from_gib(10));
+    }
+
+    #[test]
+    fn uniform_builds_n_identical_nodes() {
+        let t = Topology::uniform_paper(10);
+        assert_eq!(t.len(), 10);
+        let c = t.build();
+        assert_eq!(c.nodes().len(), 10);
+        for (i, n) in c.nodes().iter().enumerate() {
+            assert_eq!(n.id, NodeId(i as u32));
+            assert_eq!(n.capacity().cpu, MilliCpu(8000));
+        }
+        assert_eq!(t.total_capacity().cpu, MilliCpu(80_000));
+    }
+
+    #[test]
+    fn heterogeneous_preserves_order_and_shapes() {
+        let t = Topology::heterogeneous(vec![
+            NodeShape::new("big", Resources::new(MilliCpu(16_000), Memory::from_gib(32))),
+            NodeShape::new("small", Resources::new(MilliCpu(2000), Memory::from_gib(4))),
+        ]);
+        let c = t.build();
+        assert_eq!(c.node(NodeId(0)).name, "big");
+        assert_eq!(c.node(NodeId(1)).capacity().cpu, MilliCpu(2000));
+        assert_eq!(t.capacity_of(NodeId(1)).cpu, MilliCpu(2000));
+    }
+
+    #[test]
+    fn hetero_preset_cycles_shapes() {
+        let t = Topology::hetero_preset(7);
+        assert_eq!(t.len(), 7);
+        assert_eq!(t.shapes()[0].capacity.cpu, MilliCpu(16_000));
+        assert_eq!(t.shapes()[1].capacity.cpu, MilliCpu(8000));
+        assert_eq!(t.shapes()[2].capacity.cpu, MilliCpu(4000));
+        assert_eq!(t.shapes()[3].capacity.cpu, MilliCpu(16_000));
+    }
+
+    #[test]
+    fn cli_parsing() {
+        assert_eq!(Topology::from_cli("paper", 99).unwrap(), Topology::paper());
+        assert_eq!(Topology::from_cli("uniform", 10).unwrap().len(), 10);
+        assert_eq!(Topology::from_cli("hetero", 5).unwrap().len(), 5);
+        assert!(Topology::from_cli("ring", 3).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Pod lifecycle: creation through the scheduler, the kubelet startup
+//! pipeline, post-request policy hooks (park / idle timers), scale-to-zero
+//! teardown, and event-driven KPA scale-out.
+//!
+//! Every pod binds through [`Scheduler::pick`](crate::cluster::Scheduler)
+//! against the whole fleet, and its startup/termination latencies are drawn
+//! from the kubelet of the node it landed on — the per-node state the
+//! multi-node topologies exercise.
+
+use crate::cluster::kubelet::Kubelet;
+use crate::cluster::pod::{PodId, PodPhase, PodSpec};
+use crate::coordinator::platform::{Eng, Platform};
+use crate::coordinator::service::ServicePod;
+use crate::policy::Policy;
+use crate::util::quantity::{Memory, MilliCpu, Resources};
+
+impl Platform {
+    /// Creates and starts a pod for `svc_name`. `on_demand` marks a
+    /// cold-start (request-triggered) creation.
+    pub(crate) fn start_pod(w: &mut Platform, eng: &mut Eng, svc_name: &str, on_demand: bool) {
+        let (spec, image, image_mb, init_ms) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let p = &svc.profile;
+            let requests = Resources::new(
+                // In-place pods reserve only a small request — the paper's
+                // resource-availability advantage; warm/cold reserve the
+                // full serving CPU (Guaranteed-ish QoS).
+                if svc.policy == Policy::InPlace {
+                    MilliCpu(100)
+                } else {
+                    svc.cfg.serving_cpu
+                },
+                Memory::from_mib(256),
+            );
+            let limits = Resources::new(svc.cfg.serving_cpu, Memory::from_mib(512));
+            (
+                PodSpec::single(&svc.profile.name, &p.image, requests, limits),
+                p.image.clone(),
+                p.image_mb,
+                p.runtime_init_ms,
+            )
+        };
+
+        let pod_id = w.cluster.create_pod(spec);
+        let Some(node_id) = w.scheduler.pick(
+            w.cluster.nodes(),
+            w.cluster.pod(pod_id).unwrap().spec.total_requests(),
+        ) else {
+            // Unschedulable — drop the pod; buffered requests will time out.
+            w.cluster.delete_pod(pod_id);
+            return;
+        };
+        if w.cluster.bind(pod_id, node_id).is_err() {
+            w.cluster.delete_pod(pod_id);
+            return;
+        }
+        w.metrics.pods_created += 1;
+        {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            svc.starting += 1;
+        }
+        let _ = on_demand;
+
+        // Run the startup pipeline as chained events, timed by the kubelet
+        // of the node the pod landed on.
+        let cached = w.cluster.node(node_id).image_cached(&image);
+        let plan =
+            w.kubelets[node_id.0 as usize].startup_plan(cached, image_mb, init_ms, &mut w.rng);
+        let total = Kubelet::plan_total(&plan);
+        {
+            let pod = w.cluster.pod_mut(pod_id).unwrap();
+            pod.status.phase = PodPhase::Creating;
+            pod.created_at = eng.now();
+        }
+        let name = svc_name.to_string();
+        eng.schedule_in(total, move |w: &mut Platform, eng| {
+            Self::pod_ready(w, eng, &name, pod_id, node_id, image.clone());
+        });
+    }
+
+    pub(crate) fn pod_ready(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+        node_id: crate::cluster::NodeId,
+        image: String,
+    ) {
+        w.cluster.node_mut(node_id).cache_image(&image);
+        {
+            let Some(pod) = w.cluster.pod_mut(pod_id) else { return };
+            pod.status.phase = PodPhase::Running;
+            pod.status.ready = true;
+        }
+        let (hooks, climit) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            (svc.policy.inplace_hooks(), svc.cfg.concurrency_limit())
+        };
+        {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            svc.starting = svc.starting.saturating_sub(1);
+            let mut sp = ServicePod::new(pod_id, climit, hooks);
+            sp.ready = true;
+            sp.node = Some(node_id);
+            svc.pods.push(sp);
+        }
+        Self::committed_changed(w, eng);
+        Self::drain_activator(w, eng, svc_name);
+
+        // A fresh pod with nothing to do behaves exactly like one a request
+        // just left: in-place parks immediately, cold arms its idle timer.
+        Self::post_request_hooks(w, eng, svc_name, pod_id);
+    }
+
+    /// Policy post-hooks after a request leaves a pod.
+    pub(crate) fn post_request_hooks(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+    ) {
+        let (policy, idle, parked, stable_window) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            (
+                svc.policy,
+                svc.pods[idx].proxy.idle(),
+                svc.cfg.parked_cpu,
+                svc.cfg.stable_window,
+            )
+        };
+        match policy {
+            Policy::InPlace => {
+                if idle {
+                    // The paper's post-hook: deallocate back to 1 m.
+                    Self::request_resize(w, eng, svc_name, pod_id, parked);
+                }
+            }
+            Policy::Cold => {
+                if idle {
+                    // Arm the scale-to-zero timer (stable window).
+                    let name = svc_name.to_string();
+                    let s = eng.schedule_in(stable_window, move |w: &mut Platform, eng| {
+                        Self::idle_check(w, eng, &name, pod_id);
+                    });
+                    let svc = w.services.get_mut(svc_name).unwrap();
+                    if let Some(idx) = svc.pod_index(pod_id) {
+                        if let Some(old) = svc.pods[idx].idle_timer.replace(s.id) {
+                            eng.cancel(old);
+                        }
+                    }
+                }
+            }
+            Policy::Warm => {}
+        }
+    }
+
+    /// Cold policy: scale this pod to zero if its stable window stayed quiet.
+    pub(crate) fn idle_check(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+        let idle = {
+            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            svc.pods[idx].idle_timer = None;
+            svc.pods[idx].proxy.idle() && !svc.pods[idx].terminating
+        };
+        if !idle {
+            return;
+        }
+        // The pod must still exist and be bound — its node's kubelet times
+        // the teardown. (Unbound here would mean inconsistent state; bail
+        // rather than guess another node's pipeline.)
+        let Some(node_id) = w.cluster.pod(pod_id).and_then(|p| p.node) else {
+            return;
+        };
+        // Begin termination.
+        {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            let idx = svc.pod_index(pod_id).unwrap();
+            svc.pods[idx].terminating = true;
+        }
+        if let Some(pod) = w.cluster.pod_mut(pod_id) {
+            pod.status.phase = PodPhase::Terminating;
+            pod.status.ready = false;
+        }
+        Self::committed_changed(w, eng);
+        let term = w.kubelets[node_id.0 as usize].termination_time(&mut w.rng);
+        let name = svc_name.to_string();
+        eng.schedule_in(term, move |w: &mut Platform, _eng| {
+            w.cluster.delete_pod(pod_id);
+            w.metrics.pods_deleted += 1;
+            if let Some(svc) = w.services.get_mut(&name) {
+                if let Some(idx) = svc.pod_index(pod_id) {
+                    svc.pods.remove(idx);
+                }
+            }
+        });
+    }
+
+    /// Event-driven KPA evaluation: scale up when the decision demands it.
+    pub(crate) fn maybe_scale_up(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        let (desired, live) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let d = svc.autoscaler.decide(eng.now(), svc.ready_pods() as u32);
+            (d.desired, svc.live_pods() as u32)
+        };
+        for _ in live..desired {
+            Self::start_pod(w, eng, svc_name, true);
+        }
+    }
+}

@@ -6,13 +6,24 @@
 //! serverless path (ingress → activator/queue-proxy → container under CFS →
 //! response), with the in-place resize hooks on the request path exactly as
 //! §4.2 describes.
+//!
+//! Behaviour is split by concern — `platform` holds state + event wiring,
+//! `routing` the request hot path, `lifecycle` pod start/park/idle/teardown,
+//! `resize` the in-place patch hooks, `sim` the engine+world harness — all
+//! contributing `impl Platform` blocks to the one coordinator type.
 
 pub mod metrics;
 pub mod platform;
 pub mod request;
 pub mod service;
+pub mod sim;
+
+mod lifecycle;
+mod resize;
+mod routing;
 
 pub use metrics::{CommittedCpuIntegral, Metrics, ServiceMetrics};
-pub use platform::{Eng, Platform, Simulation};
+pub use platform::{Eng, Platform};
 pub use request::RequestState;
 pub use service::{Service, ServicePod};
+pub use sim::Simulation;

@@ -1,34 +1,43 @@
 //! The platform: the L3 coordinator that wires cluster, API server, Knative
 //! layer and policies onto the discrete-event engine.
 //!
-//! All transitions run as events; handlers are associated functions taking
-//! `(&mut Platform, &mut Eng)`. The request hot path is:
+//! This file owns the world *state* and event wiring only; behaviour is
+//! split by concern across sibling modules, all contributing `impl
+//! Platform` blocks:
 //!
-//! ```text
-//! submit → [forward] → arrive → dispatch → (in-place: resize hook ‖ exec)
-//!        → exec under CFS shares → complete → [respond] → metrics
-//!                                     ↘ post-hook: park / idle-timer
-//! ```
+//! * [`routing`](super::routing) — the request hot path
+//!   (`submit → [forward] → arrive → dispatch → exec under CFS → complete`),
+//! * [`lifecycle`](super::lifecycle) — pod start/park/idle/teardown and
+//!   event-driven KPA scale-out,
+//! * [`resize`](super::resize) — the in-place patch hooks and their
+//!   conflict/retry churn,
+//! * [`sim`](super::sim) — the [`Simulation`] harness owning the engine +
+//!   platform pair.
+//!
+//! The fleet shape is a [`Topology`]: the paper's single 8-core `kind`
+//! node is `Topology::paper()`, and everything multi-node (uniform or
+//! heterogeneous pools, per-node kubelets, the scheduler's filter/score
+//! path) flows from the same constructor.
 
 use std::collections::BTreeMap;
 
 use crate::util::nohash::IdHashMap;
 
-use crate::apiserver::{ApiServer, FeatureGates, ResizePatch};
+use crate::apiserver::{ApiServer, FeatureGates};
 use crate::cluster::kubelet::Kubelet;
-use crate::cluster::pod::{PodId, PodPhase, PodSpec};
 use crate::cluster::scheduler::Scheduler;
+use crate::cluster::topology::Topology;
 use crate::cluster::{Cluster, NodeId};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::RequestState;
-use crate::coordinator::service::{Service, ServicePod};
+use crate::coordinator::service::Service;
 use crate::knative::activator::RequestId;
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::{Engine, SimTime};
-use crate::util::quantity::{Memory, MilliCpu, Resources};
 use crate::util::rng::Rng;
-use crate::workload::exec::Execution;
 use crate::workload::registry::WorkloadProfile;
+
+pub use crate::coordinator::sim::Simulation;
 
 /// Engine type alias used across the coordinator.
 pub type Eng = Engine<Platform>;
@@ -36,37 +45,49 @@ pub type Eng = Engine<Platform>;
 /// The world state driven by the event engine.
 pub struct Platform {
     pub cluster: Cluster,
+    /// The fleet shape the cluster was built from.
+    pub topology: Topology,
     pub api: ApiServer,
-    pub kubelet: Kubelet,
+    /// One kubelet per node, indexed by `NodeId` — per-node startup and
+    /// resize pipelines (today they share calibration; heterogeneous
+    /// per-node parameters plug in here).
+    pub(crate) kubelets: Vec<Kubelet>,
     pub scheduler: Scheduler,
     pub params: PlatformParams,
     pub services: BTreeMap<String, Service>,
-    requests: IdHashMap<RequestId, RequestState>,
-    next_request: u64,
+    pub(crate) requests: IdHashMap<RequestId, RequestState>,
+    pub(crate) next_request: u64,
     pub rng: Rng,
     pub metrics: Metrics,
     /// One-shot continuations fired when a request completes (or fails) —
     /// how closed-loop virtual users chain their iterations.
-    completion_hooks: IdHashMap<RequestId, Box<dyn FnOnce(&mut Platform, &mut Eng)>>,
+    pub(crate) completion_hooks: IdHashMap<RequestId, Box<dyn FnOnce(&mut Platform, &mut Eng)>>,
     /// Scratch buffer reused by `recompute_pod` (hot path: one regime change
     /// per request start/finish/resize; avoids a per-event allocation).
-    scratch_active: Vec<RequestId>,
+    pub(crate) scratch_active: Vec<RequestId>,
 }
 
 impl Platform {
     /// A platform with the paper's testbed: one 8-core / 10 GB node and the
     /// `InPlacePodVerticalScaling` gate enabled.
     pub fn paper_testbed(params: PlatformParams) -> Platform {
-        let mut cluster = Cluster::new();
-        cluster.add_node(
-            "kind-worker",
-            Resources::new(MilliCpu(8000), Memory::from_gib(10)),
-        );
+        Platform::with_topology(Topology::paper(), params)
+    }
+
+    /// A platform over an arbitrary fleet shape. `Topology::paper()`
+    /// reproduces [`Platform::paper_testbed`] exactly (same node, same RNG
+    /// stream, byte-identical seeded metrics).
+    pub fn with_topology(topology: Topology, params: PlatformParams) -> Platform {
+        let cluster = topology.build();
+        let kubelets: Vec<Kubelet> = (0..topology.len())
+            .map(|_| Kubelet::new(params.startup.clone(), params.resize.clone()))
+            .collect();
         let rng = Rng::new(params.seed);
         Platform {
             cluster,
+            topology,
             api: ApiServer::new(FeatureGates::paper_testbed()),
-            kubelet: Kubelet::new(params.startup.clone(), params.resize.clone()),
+            kubelets,
             scheduler: Scheduler::default(),
             params,
             services: BTreeMap::new(),
@@ -91,7 +112,7 @@ impl Platform {
         let image = svc.profile.image.clone();
         for i in 0..self.cluster.nodes().len() {
             self.cluster
-                .node_mut(crate::cluster::NodeId(i as u32))
+                .node_mut(NodeId(i as u32))
                 .cache_image(&image);
         }
         self.services.insert(name.clone(), svc);
@@ -145,7 +166,7 @@ impl Platform {
         id
     }
 
-    fn fire_hook(w: &mut Platform, eng: &mut Eng, req: RequestId) {
+    pub(crate) fn fire_hook(w: &mut Platform, eng: &mut Eng, req: RequestId) {
         if let Some(hook) = w.completion_hooks.remove(&req) {
             hook(w, eng);
         }
@@ -158,703 +179,12 @@ impl Platform {
     pub fn in_flight(&self) -> usize {
         self.requests.len()
     }
-
-    // ---------------------------------------------------------------- arrive
-
-    fn arrive(w: &mut Platform, eng: &mut Eng, req: RequestId) {
-        let svc_name = match w.requests.get(&req) {
-            Some(r) => r.service.clone(),
-            None => return,
-        };
-        let Some(svc) = w.services.get_mut(&*svc_name) else {
-            // Unknown service: fail fast.
-            Self::fail_request(w, eng, req);
-            return;
-        };
-
-        if let Some(idx) = svc.pick_pod() {
-            Self::dispatch(w, eng, &svc_name, req, idx);
-        } else {
-            // Buffer at the activator; start a pod if none is coming up.
-            let now = eng.now();
-            if svc.activator.buffer(req, now).is_err() {
-                Self::fail_request(w, eng, req);
-                return;
-            }
-            let needs_pod = svc.live_pods() == 0;
-            if needs_pod {
-                if let Some(r) = w.requests.get_mut(&req) {
-                    r.cold_start = true;
-                }
-                Self::start_pod(w, eng, &svc_name, true);
-            } else {
-                Self::maybe_scale_up(w, eng, &svc_name);
-            }
-        }
-        Self::record_concurrency(w, eng, &svc_name);
-    }
-
-    fn fail_request(w: &mut Platform, eng: &mut Eng, req: RequestId) {
-        if let Some(r) = w.requests.remove(&req) {
-            w.metrics.service(&r.service).failed += 1;
-        }
-        Self::fire_hook(w, eng, req);
-    }
-
-    // -------------------------------------------------------------- dispatch
-
-    /// Admits `req` into pod `idx` of `svc` and (policy-dependent) fires the
-    /// pre-request resize hook before redirecting.
-    fn dispatch(w: &mut Platform, eng: &mut Eng, svc_name: &str, req: RequestId, idx: usize) {
-        let (pod_id, hooks, serving, applied) = {
-            let svc = w.services.get_mut(svc_name).unwrap();
-            let serving = svc.cfg.serving_cpu;
-            let sp = &mut svc.pods[idx];
-            sp.proxy.offer(req);
-            let pod_id = sp.pod;
-            let applied = w
-                .cluster
-                .pod(pod_id)
-                .map(|p| p.status.applied_cpu_limit)
-                .unwrap_or(MilliCpu::ZERO);
-            (pod_id, sp.proxy.inplace_hooks, serving, applied)
-        };
-        if let Some(r) = w.requests.get_mut(&req) {
-            r.pod = Some(pod_id);
-        }
-        // Cancel any pending idle scale-down for this pod.
-        let svc = w.services.get_mut(svc_name).unwrap();
-        if let Some(t) = svc.pods[idx].idle_timer.take() {
-            eng.cancel(t);
-        }
-
-        // A park may be in flight (status shows a resize) or already desired;
-        // a new request must claim the serving allocation either way.
-        let resize_in_flight = w
-            .cluster
-            .pod(pod_id)
-            .map(|p| p.status.resize.is_some())
-            .unwrap_or(false);
-        let park_desired = {
-            let svc = &w.services[svc_name];
-            svc.pod_index(pod_id)
-                .and_then(|i| svc.pods[i].desired_limit)
-                .map(|d| d < serving)
-                .unwrap_or(false)
-        };
-        if hooks && (applied < serving || resize_in_flight || park_desired) {
-            // The paper's pre-hook: dispatch the scale-up patch, then
-            // redirect immediately — the request starts at the parked
-            // allocation and speeds up when the resize lands.
-            if let Some(r) = w.requests.get_mut(&req) {
-                r.scaled_up = true;
-            }
-            w.metrics.service(svc_name).inplace_scale_ups += 1;
-            Self::request_resize(w, eng, svc_name, pod_id, serving);
-        }
-        Self::begin_exec(w, eng, svc_name, req, pod_id);
-    }
-
-    fn begin_exec(w: &mut Platform, eng: &mut Eng, svc_name: &str, req: RequestId, pod: PodId) {
-        let profile = w.services[svc_name].profile.clone();
-        if let Some(r) = w.requests.get_mut(&req) {
-            r.exec = Some(Execution::start(&profile, eng.now()));
-        }
-        Self::recompute_pod(w, eng, svc_name, pod);
-    }
-
-    // ------------------------------------------------------------- execution
-
-    /// Re-integrates progress for every active request on `pod` and
-    /// reschedules their completion events under the current allocation.
-    /// Called on every regime change: request start/finish, resize landing.
-    fn recompute_pod(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod: PodId) {
-        let now = eng.now();
-        let Some(svc) = w.services.get(svc_name) else { return };
-        let Some(idx) = svc.pod_index(pod) else { return };
-        // Reuse the platform scratch buffer instead of allocating per event.
-        let mut active = std::mem::take(&mut w.scratch_active);
-        active.clear();
-        active.extend_from_slice(w.services[svc_name].pods[idx].proxy.active_requests());
-        let _ = svc;
-        if active.is_empty() {
-            w.scratch_active = active;
-            return;
-        }
-        let alloc = w
-            .cluster
-            .pod(pod)
-            .map(|p| p.status.applied_cpu_limit)
-            .unwrap_or(MilliCpu::ZERO);
-        // Equal CFS split among in-container requests.
-        let share = MilliCpu((alloc.0 / active.len() as u64).max(1));
-        for &id in &active {
-            let Some(r) = w.requests.get_mut(&id) else { continue };
-            let Some(exec) = r.exec.as_mut() else { continue };
-            // Integrate the interval just ended under the old share.
-            exec.advance(now, r.share.max(MilliCpu(1)));
-            r.share = share;
-            if let Some(ev) = r.completion.take() {
-                eng.cancel(ev);
-            }
-            if exec.done() {
-                // Finished exactly at this boundary.
-                let s = eng.schedule_in(SimTime::ZERO, move |w: &mut Platform, eng| {
-                    Self::complete(w, eng, id);
-                });
-                r.completion = Some(s.id);
-            } else {
-                let eta = exec.eta(share);
-                let s = eng.schedule_in(eta, move |w: &mut Platform, eng| {
-                    Self::complete(w, eng, id);
-                });
-                r.completion = Some(s.id);
-            }
-        }
-        w.scratch_active = active;
-    }
-
-    fn complete(w: &mut Platform, eng: &mut Eng, req: RequestId) {
-        let now = eng.now();
-        let Some(r) = w.requests.get_mut(&req) else { return };
-        let svc_name = r.service.clone();
-        let pod = r.pod;
-        if let Some(exec) = r.exec.as_mut() {
-            exec.advance(now, r.share.max(MilliCpu(1)));
-        }
-        r.completion = None;
-
-        // Response proxy hop is part of the measured latency.
-        let respond = w.params.proxy.sample_respond(&mut w.rng);
-        let latency_ms = (now + respond).saturating_sub(r.submitted_at).as_millis_f64();
-        let r = w.requests.remove(&req).unwrap();
-        {
-            let m = w.metrics.service(&svc_name);
-            m.latency_ms.record(latency_ms);
-            m.completed += 1;
-            if r.cold_start {
-                m.cold_starts += 1;
-            }
-        }
-
-        let Some(pod_id) = pod else { return };
-        // Free the concurrency slot; promote a queued request if any.
-        let promoted = {
-            let Some(svc) = w.services.get_mut(&*svc_name) else { return };
-            let Some(idx) = svc.pod_index(pod_id) else { return };
-            svc.pods[idx].proxy.complete(req)
-        };
-        if let Some(next) = promoted {
-            Self::begin_exec(w, eng, &svc_name, next, pod_id);
-        } else {
-            Self::recompute_pod(w, eng, &svc_name, pod_id);
-        }
-
-        Self::post_request_hooks(w, eng, &svc_name, pod_id);
-        Self::record_concurrency(w, eng, &svc_name);
-        Self::drain_activator(w, eng, &svc_name);
-        Self::fire_hook(w, eng, req);
-    }
-
-    /// Policy post-hooks after a request leaves a pod.
-    fn post_request_hooks(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
-        let (policy, idle, parked, stable_window) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
-            let Some(idx) = svc.pod_index(pod_id) else { return };
-            (
-                svc.policy,
-                svc.pods[idx].proxy.idle(),
-                svc.cfg.parked_cpu,
-                svc.cfg.stable_window,
-            )
-        };
-        match policy {
-            Policy::InPlace => {
-                if idle {
-                    // The paper's post-hook: deallocate back to 1 m.
-                    Self::request_resize(w, eng, svc_name, pod_id, parked);
-                }
-            }
-            Policy::Cold => {
-                if idle {
-                    // Arm the scale-to-zero timer (stable window).
-                    let name = svc_name.to_string();
-                    let s = eng.schedule_in(stable_window, move |w: &mut Platform, eng| {
-                        Self::idle_check(w, eng, &name, pod_id);
-                    });
-                    let svc = w.services.get_mut(svc_name).unwrap();
-                    if let Some(idx) = svc.pod_index(pod_id) {
-                        if let Some(old) = svc.pods[idx].idle_timer.replace(s.id) {
-                            eng.cancel(old);
-                        }
-                    }
-                }
-            }
-            Policy::Warm => {}
-        }
-    }
-
-    // ---------------------------------------------------------------- resize
-
-    /// Fires the queue-proxy resize hook: after the dispatch cost, try the
-    /// patch; on conflict (kubelet busy with a previous resize) retry on a
-    /// short period — the churn that penalizes back-to-back in-place
-    /// activations.
-    fn request_resize(
-        w: &mut Platform,
-        eng: &mut Eng,
-        svc_name: &str,
-        pod_id: PodId,
-        target: MilliCpu,
-    ) {
-        // Record the latest desire; older pending desires are superseded.
-        {
-            let Some(svc) = w.services.get_mut(svc_name) else { return };
-            let Some(idx) = svc.pod_index(pod_id) else { return };
-            svc.pods[idx].desired_limit = Some(target);
-        }
-        let hook = w.params.proxy.sample_hook(&mut w.rng);
-        let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-        eng.schedule_in(hook, move |w: &mut Platform, eng| {
-            Self::try_patch(w, eng, &name, pod_id);
-        });
-    }
-
-    fn try_patch(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
-        let target = {
-            let Some(svc) = w.services.get(svc_name) else { return };
-            let Some(idx) = svc.pod_index(pod_id) else { return };
-            match svc.pods[idx].desired_limit {
-                Some(t) => t,
-                None => return,
-            }
-        };
-        let applied = match w.cluster.pod(pod_id) {
-            Some(p) => p.status.applied_cpu_limit,
-            None => return,
-        };
-        if applied == target && w.cluster.pod(pod_id).unwrap().status.resize.is_none() {
-            // Already there.
-            let svc = w.services.get_mut(svc_name).unwrap();
-            if let Some(idx) = svc.pod_index(pod_id) {
-                svc.pods[idx].desired_limit = None;
-            }
-            return;
-        }
-        let now = eng.now();
-        match w.api.patch_resize(
-            &mut w.cluster,
-            ResizePatch {
-                pod: pod_id,
-                new_cpu_limit: target,
-            },
-            now,
-        ) {
-            Ok(()) => {
-                w.metrics.resizes_accepted += 1;
-                {
-                    let svc = w.services.get_mut(svc_name).unwrap();
-                    if let Some(idx) = svc.pod_index(pod_id) {
-                        svc.pods[idx].desired_limit = None;
-                        svc.pods[idx].retry_pending = false;
-                    }
-                }
-                let _ = w.api.mark_in_progress(&mut w.cluster, pod_id, target, now);
-                // Sample propagation latency under current node load.
-                let node_id = w.cluster.pod(pod_id).unwrap().node.unwrap();
-                let load = Self::node_load(w, node_id);
-                let lat = w.kubelet.resize_latency(applied, target, load, &mut w.rng);
-                let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-                eng.schedule_in(lat, move |w: &mut Platform, eng| {
-                    Self::resize_landed(w, eng, &name, pod_id, target);
-                });
-            }
-            Err(e) => {
-                let transient = matches!(
-                    e,
-                    crate::apiserver::ApiError::Conflict(_)
-                        | crate::apiserver::ApiError::NotRunning(_, _)
-                );
-                if !transient {
-                    // Permanent rejection (gate disabled, restart-required
-                    // policy, invalid limit): drop the desire — the pod
-                    // simply keeps its current allocation.
-                    let svc = w.services.get_mut(svc_name).unwrap();
-                    if let Some(idx) = svc.pod_index(pod_id) {
-                        svc.pods[idx].desired_limit = None;
-                    }
-                    return;
-                }
-                // Kubelet busy applying a previous resize (or pod still
-                // coming up): retry shortly unless one is already scheduled.
-                w.metrics.resize_conflicts += 1;
-                let retry = w.params.resize_retry;
-                let svc = w.services.get_mut(svc_name).unwrap();
-                let Some(idx) = svc.pod_index(pod_id) else { return };
-                if !svc.pods[idx].retry_pending {
-                    svc.pods[idx].retry_pending = true;
-                    let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-                    eng.schedule_in(retry, move |w: &mut Platform, eng| {
-                        if let Some(svc) = w.services.get_mut(&*name) {
-                            if let Some(i) = svc.pod_index(pod_id) {
-                                svc.pods[i].retry_pending = false;
-                            }
-                        }
-                        Self::try_patch(w, eng, &name, pod_id);
-                    });
-                }
-            }
-        }
-    }
-
-    fn resize_landed(
-        w: &mut Platform,
-        eng: &mut Eng,
-        svc_name: &str,
-        pod_id: PodId,
-        target: MilliCpu,
-    ) {
-        let now = eng.now();
-        let Some(pod) = w.cluster.pod(pod_id) else { return };
-        let Some(node_id) = pod.node else { return };
-        w.cluster
-            .node_mut(node_id)
-            .apply_cpu_limit(pod_id, target, now);
-        let _ = w.api.mark_done(&mut w.cluster, pod_id, target, now);
-        Self::committed_changed(w, eng);
-        Self::recompute_pod(w, eng, svc_name, pod_id);
-        // A newer desire may have raced in (up while down was landing).
-        let pending = {
-            let svc = w.services.get(svc_name);
-            svc.and_then(|s| s.pod_index(pod_id))
-                .and_then(|i| w.services[svc_name].pods[i].desired_limit)
-        };
-        if let Some(t) = pending {
-            if t != target {
-                let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-                eng.schedule_in(SimTime::ZERO, move |w: &mut Platform, eng| {
-                    Self::try_patch(w, eng, &name, pod_id);
-                });
-            }
-        }
-    }
-
-    /// Node load for the latency model: stressors + busy serving capacity.
-    fn node_load(w: &Platform, node: NodeId) -> crate::cgroup::latency::NodeLoad {
-        let mut busy = MilliCpu::ZERO;
-        for svc in w.services.values() {
-            for sp in &svc.pods {
-                if sp.proxy.active_count() > 0 {
-                    if let Some(pod) = w.cluster.pod(sp.pod) {
-                        if pod.node == Some(node) {
-                            busy += pod.status.applied_cpu_limit;
-                        }
-                    }
-                }
-            }
-        }
-        w.cluster.node(node).load_with_busy(busy)
-    }
-
-    // ------------------------------------------------------------ pod lifecycle
-
-    /// Creates and starts a pod for `svc_name`. `on_demand` marks a
-    /// cold-start (request-triggered) creation.
-    fn start_pod(w: &mut Platform, eng: &mut Eng, svc_name: &str, on_demand: bool) {
-        let (spec, image, image_mb, init_ms) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
-            let p = &svc.profile;
-            let requests = Resources::new(
-                // In-place pods reserve only a small request — the paper's
-                // resource-availability advantage; warm/cold reserve the
-                // full serving CPU (Guaranteed-ish QoS).
-                if svc.policy == Policy::InPlace {
-                    MilliCpu(100)
-                } else {
-                    svc.cfg.serving_cpu
-                },
-                Memory::from_mib(256),
-            );
-            let limits = Resources::new(svc.cfg.serving_cpu, Memory::from_mib(512));
-            (
-                PodSpec::single(&svc.profile.name, &p.image, requests, limits),
-                p.image.clone(),
-                p.image_mb,
-                p.runtime_init_ms,
-            )
-        };
-
-        let pod_id = w.cluster.create_pod(spec);
-        let Some(node_id) = w.scheduler.pick(w.cluster.nodes(), w.cluster.pod(pod_id).unwrap().spec.total_requests())
-        else {
-            // Unschedulable — drop the pod; buffered requests will time out.
-            w.cluster.delete_pod(pod_id);
-            return;
-        };
-        if w.cluster.bind(pod_id, node_id).is_err() {
-            w.cluster.delete_pod(pod_id);
-            return;
-        }
-        w.metrics.pods_created += 1;
-        {
-            let svc = w.services.get_mut(svc_name).unwrap();
-            svc.starting += 1;
-        }
-        let _ = on_demand;
-
-        // Run the startup pipeline as chained events.
-        let cached = w.cluster.node(node_id).image_cached(&image);
-        let plan = w
-            .kubelet
-            .startup_plan(cached, image_mb, init_ms, &mut w.rng);
-        let total = Kubelet::plan_total(&plan);
-        {
-            let pod = w.cluster.pod_mut(pod_id).unwrap();
-            pod.status.phase = PodPhase::Creating;
-            pod.created_at = eng.now();
-        }
-        let name = svc_name.to_string();
-        eng.schedule_in(total, move |w: &mut Platform, eng| {
-            Self::pod_ready(w, eng, &name, pod_id, node_id, image.clone());
-        });
-    }
-
-    fn pod_ready(
-        w: &mut Platform,
-        eng: &mut Eng,
-        svc_name: &str,
-        pod_id: PodId,
-        node_id: NodeId,
-        image: String,
-    ) {
-        w.cluster.node_mut(node_id).cache_image(&image);
-        {
-            let Some(pod) = w.cluster.pod_mut(pod_id) else { return };
-            pod.status.phase = PodPhase::Running;
-            pod.status.ready = true;
-        }
-        let (hooks, climit) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
-            (svc.policy.inplace_hooks(), svc.cfg.concurrency_limit())
-        };
-        {
-            let svc = w.services.get_mut(svc_name).unwrap();
-            svc.starting = svc.starting.saturating_sub(1);
-            let mut sp = ServicePod::new(pod_id, climit, hooks);
-            sp.ready = true;
-            svc.pods.push(sp);
-        }
-        Self::committed_changed(w, eng);
-        Self::drain_activator(w, eng, svc_name);
-
-        // A fresh in-place pod with nothing to do parks immediately.
-        let idle = {
-            let svc = &w.services[svc_name];
-            let idx = svc.pod_index(pod_id).unwrap();
-            svc.pods[idx].proxy.idle()
-        };
-        if hooks && idle {
-            let parked = w.services[svc_name].cfg.parked_cpu;
-            Self::request_resize(w, eng, svc_name, pod_id, parked);
-        }
-        // Cold pods with nothing to do arm their idle timer right away.
-        let (policy, stable_window) = {
-            let svc = &w.services[svc_name];
-            (svc.policy, svc.cfg.stable_window)
-        };
-        if policy == Policy::Cold && idle {
-            let name = svc_name.to_string();
-            let s = eng.schedule_in(stable_window, move |w: &mut Platform, eng| {
-                Self::idle_check(w, eng, &name, pod_id);
-            });
-            let svc = w.services.get_mut(svc_name).unwrap();
-            if let Some(idx) = svc.pod_index(pod_id) {
-                svc.pods[idx].idle_timer = Some(s.id);
-            }
-        }
-    }
-
-    /// Dispatches as many buffered requests as capacity allows.
-    fn drain_activator(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
-        loop {
-            let (idx, buffered) = {
-                let Some(svc) = w.services.get_mut(svc_name) else { return };
-                let Some(idx) = svc.pick_pod() else { return };
-                let (mut out, dead) = svc.activator.drain(1, eng.now());
-                for d in dead {
-                    Self::fail_request(w, eng, d.request);
-                    return; // re-enter loop via next call; keep simple
-                }
-                match out.pop() {
-                    Some(b) => (idx, b),
-                    None => return,
-                }
-            };
-            Self::dispatch(w, eng, svc_name, buffered.request, idx);
-        }
-    }
-
-    /// Cold policy: scale this pod to zero if its stable window stayed quiet.
-    fn idle_check(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
-        let idle = {
-            let Some(svc) = w.services.get_mut(svc_name) else { return };
-            let Some(idx) = svc.pod_index(pod_id) else { return };
-            svc.pods[idx].idle_timer = None;
-            svc.pods[idx].proxy.idle() && !svc.pods[idx].terminating
-        };
-        if !idle {
-            return;
-        }
-        // Begin termination.
-        {
-            let svc = w.services.get_mut(svc_name).unwrap();
-            let idx = svc.pod_index(pod_id).unwrap();
-            svc.pods[idx].terminating = true;
-        }
-        if let Some(pod) = w.cluster.pod_mut(pod_id) {
-            pod.status.phase = PodPhase::Terminating;
-            pod.status.ready = false;
-        }
-        Self::committed_changed(w, eng);
-        let term = w.kubelet.termination_time(&mut w.rng);
-        let name = svc_name.to_string();
-        eng.schedule_in(term, move |w: &mut Platform, _eng| {
-            w.cluster.delete_pod(pod_id);
-            w.metrics.pods_deleted += 1;
-            if let Some(svc) = w.services.get_mut(&name) {
-                if let Some(idx) = svc.pod_index(pod_id) {
-                    svc.pods.remove(idx);
-                }
-            }
-        });
-    }
-
-    /// Event-driven KPA evaluation: scale up when the decision demands it.
-    fn maybe_scale_up(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
-        let (desired, live) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
-            let d = svc.autoscaler.decide(eng.now(), svc.ready_pods() as u32);
-            (d.desired, svc.live_pods() as u32)
-        };
-        for _ in live..desired {
-            Self::start_pod(w, eng, svc_name, true);
-        }
-    }
-
-    fn record_concurrency(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
-        let now = eng.now();
-        let overloaded = if let Some(svc) = w.services.get_mut(svc_name) {
-            // One pass over the pod list for concurrency + readiness.
-            let mut in_flight = svc.activator.len();
-            let mut ready = 0usize;
-            for p in &svc.pods {
-                in_flight += p.proxy.in_flight();
-                if p.ready && !p.terminating {
-                    ready += 1;
-                }
-            }
-            svc.autoscaler.record(now, in_flight as u32);
-            // Level-triggered KPA: consider scale-out whenever observed
-            // concurrency exceeds what the current fleet targets — skipped
-            // entirely for the common single-pod-capped revision.
-            (svc.live_pods() as u32) < svc.cfg.max_scale
-                && in_flight as f64 > svc.cfg.target_concurrency * ready.max(1) as f64
-        } else {
-            false
-        };
-        if overloaded {
-            Self::maybe_scale_up(w, eng, svc_name);
-        }
-    }
-
-    /// Recomputes the committed-CPU metric (Σ applied limits of live pods).
-    fn committed_changed(w: &mut Platform, eng: &mut Eng) {
-        let mut total = MilliCpu::ZERO;
-        for svc in w.services.values() {
-            for sp in &svc.pods {
-                if sp.terminating {
-                    continue;
-                }
-                if let Some(pod) = w.cluster.pod(sp.pod) {
-                    if pod.status.phase == PodPhase::Running {
-                        total += pod.status.applied_cpu_limit;
-                    }
-                }
-            }
-        }
-        w.metrics.committed_cpu.update(eng.now(), total);
-    }
-}
-
-// ============================================================ Simulation
-
-/// Owns the engine + platform pair; the entry point examples and benches use.
-pub struct Simulation {
-    pub engine: Eng,
-    pub world: Platform,
-}
-
-impl Simulation {
-    /// Paper testbed with default calibration.
-    pub fn paper(seed: u64) -> Simulation {
-        Simulation {
-            engine: Engine::new(),
-            world: Platform::paper_testbed(PlatformParams::with_seed(seed)),
-        }
-    }
-
-    pub fn with_params(params: PlatformParams) -> Simulation {
-        Simulation {
-            engine: Engine::new(),
-            world: Platform::paper_testbed(params),
-        }
-    }
-
-    pub fn now(&self) -> SimTime {
-        self.engine.now()
-    }
-
-    pub fn deploy(&mut self, name: &str, profile: WorkloadProfile, policy: Policy) {
-        self.world
-            .deploy_workload(&mut self.engine, name, profile, policy);
-    }
-
-    pub fn deploy_service(&mut self, svc: Service) {
-        self.world.deploy(&mut self.engine, svc);
-    }
-
-    pub fn submit(&mut self, service: &str) -> RequestId {
-        self.world.submit(&mut self.engine, service)
-    }
-
-    pub fn submit_at(&mut self, at: SimTime, service: &str) {
-        self.world.submit_at(&mut self.engine, at, service);
-    }
-
-    /// Runs until the event queue drains.
-    pub fn run(&mut self) -> u64 {
-        self.engine.run(&mut self.world)
-    }
-
-    pub fn run_until(&mut self, deadline: SimTime) -> u64 {
-        self.engine.run_until(&mut self.world, deadline)
-    }
-
-    /// Runs until all submitted requests completed (or the queue drained).
-    pub fn run_to_quiescence(&mut self) {
-        // Idle timers may keep the queue alive; step until no requests
-        // remain in flight.
-        while self.world.in_flight() > 0 {
-            if self.engine.step(&mut self.world).is_none() {
-                break;
-            }
-        }
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::quantity::MilliCpu;
     use crate::workload::registry::WorkloadKind;
 
     fn sim_with(policy: Policy, kind: WorkloadKind) -> Simulation {
@@ -1010,5 +340,65 @@ mod tests {
             sim.world.metrics.service("fn").latency_ms.mean()
         };
         assert_eq!(run(1).to_bits(), run(1).to_bits());
+    }
+
+    #[test]
+    fn paper_topology_platform_matches_paper_testbed() {
+        // `with_topology(Topology::paper(), ..)` and `paper_testbed(..)`
+        // must be the same platform: same fleet, same seeded results.
+        let run = |mk: fn(PlatformParams) -> Platform| {
+            let mut sim = Simulation {
+                engine: Engine::new(),
+                world: mk(PlatformParams::with_seed(7)),
+            };
+            sim.deploy(
+                "fn",
+                WorkloadProfile::paper(WorkloadKind::HelloWorld),
+                Policy::InPlace,
+            );
+            sim.run();
+            for _ in 0..4 {
+                sim.submit("fn");
+            }
+            sim.run();
+            sim.world.metrics.service("fn").latency_ms.mean().to_bits()
+        };
+        let direct = run(Platform::paper_testbed);
+        let via_topology = run(|p| Platform::with_topology(Topology::paper(), p));
+        assert_eq!(direct, via_topology);
+    }
+
+    #[test]
+    fn multi_node_fleet_spreads_warm_pods() {
+        // 4 nodes, 12 warm services: pods must spread (LeastAllocated) and
+        // every node must respect its capacity.
+        let mut sim = Simulation::fleet(Topology::uniform_paper(4), 9);
+        for i in 0..12 {
+            sim.deploy(
+                &format!("svc-{i}"),
+                WorkloadProfile::paper(WorkloadKind::HelloWorld),
+                Policy::Warm,
+            );
+        }
+        sim.run();
+        let ready: usize = sim.world.services.values().map(|s| s.ready_pods()).sum();
+        assert_eq!(ready, 12, "4×8-core fleet fits 12 warm pods");
+        for node in sim.world.cluster.nodes() {
+            assert!(
+                node.reserved().cpu <= node.capacity().cpu,
+                "node {:?} over-committed",
+                node.id
+            );
+        }
+        // LeastAllocated spreads: every node hosts exactly 3 of the 12.
+        for node in sim.world.cluster.nodes() {
+            let hosted = sim
+                .world
+                .cluster
+                .pods()
+                .filter(|p| p.node == Some(node.id))
+                .count();
+            assert_eq!(hosted, 3, "node {:?} hosts {hosted}", node.id);
+        }
     }
 }

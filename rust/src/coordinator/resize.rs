@@ -1,0 +1,192 @@
+//! In-place resize hooks: the queue-proxy patch dispatch, the kubelet's
+//! conflict/retry serialization, resize landing, and the committed-CPU /
+//! node-load accounting the latency model feeds on.
+
+use crate::apiserver::ResizePatch;
+use crate::cluster::pod::{PodId, PodPhase};
+use crate::cluster::NodeId;
+use crate::coordinator::platform::{Eng, Platform};
+use crate::simclock::SimTime;
+use crate::util::quantity::MilliCpu;
+
+impl Platform {
+    /// Fires the queue-proxy resize hook: after the dispatch cost, try the
+    /// patch; on conflict (kubelet busy with a previous resize) retry on a
+    /// short period — the churn that penalizes back-to-back in-place
+    /// activations.
+    pub(crate) fn request_resize(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+        target: MilliCpu,
+    ) {
+        // Record the latest desire; older pending desires are superseded.
+        {
+            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            svc.pods[idx].desired_limit = Some(target);
+        }
+        let hook = w.params.proxy.sample_hook(&mut w.rng);
+        let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+        eng.schedule_in(hook, move |w: &mut Platform, eng| {
+            Self::try_patch(w, eng, &name, pod_id);
+        });
+    }
+
+    pub(crate) fn try_patch(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+        let target = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            match svc.pods[idx].desired_limit {
+                Some(t) => t,
+                None => return,
+            }
+        };
+        let applied = match w.cluster.pod(pod_id) {
+            Some(p) => p.status.applied_cpu_limit,
+            None => return,
+        };
+        if applied == target && w.cluster.pod(pod_id).unwrap().status.resize.is_none() {
+            // Already there.
+            let svc = w.services.get_mut(svc_name).unwrap();
+            if let Some(idx) = svc.pod_index(pod_id) {
+                svc.pods[idx].desired_limit = None;
+            }
+            return;
+        }
+        let now = eng.now();
+        match w.api.patch_resize(
+            &mut w.cluster,
+            ResizePatch {
+                pod: pod_id,
+                new_cpu_limit: target,
+            },
+            now,
+        ) {
+            Ok(()) => {
+                w.metrics.resizes_accepted += 1;
+                {
+                    let svc = w.services.get_mut(svc_name).unwrap();
+                    if let Some(idx) = svc.pod_index(pod_id) {
+                        svc.pods[idx].desired_limit = None;
+                        svc.pods[idx].retry_pending = false;
+                    }
+                }
+                let _ = w.api.mark_in_progress(&mut w.cluster, pod_id, target, now);
+                // Sample propagation latency under current node load, from
+                // the kubelet owning the pod's node.
+                let node_id = w.cluster.pod(pod_id).unwrap().node.unwrap();
+                let load = Self::node_load(w, node_id);
+                let lat = w.kubelets[node_id.0 as usize]
+                    .resize_latency(applied, target, load, &mut w.rng);
+                let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+                eng.schedule_in(lat, move |w: &mut Platform, eng| {
+                    Self::resize_landed(w, eng, &name, pod_id, target);
+                });
+            }
+            Err(e) => {
+                let transient = matches!(
+                    e,
+                    crate::apiserver::ApiError::Conflict(_)
+                        | crate::apiserver::ApiError::NotRunning(_, _)
+                );
+                if !transient {
+                    // Permanent rejection (gate disabled, restart-required
+                    // policy, invalid limit): drop the desire — the pod
+                    // simply keeps its current allocation.
+                    let svc = w.services.get_mut(svc_name).unwrap();
+                    if let Some(idx) = svc.pod_index(pod_id) {
+                        svc.pods[idx].desired_limit = None;
+                    }
+                    return;
+                }
+                // Kubelet busy applying a previous resize (or pod still
+                // coming up): retry shortly unless one is already scheduled.
+                w.metrics.resize_conflicts += 1;
+                let retry = w.params.resize_retry;
+                let svc = w.services.get_mut(svc_name).unwrap();
+                let Some(idx) = svc.pod_index(pod_id) else { return };
+                if !svc.pods[idx].retry_pending {
+                    svc.pods[idx].retry_pending = true;
+                    let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+                    eng.schedule_in(retry, move |w: &mut Platform, eng| {
+                        if let Some(svc) = w.services.get_mut(&*name) {
+                            if let Some(i) = svc.pod_index(pod_id) {
+                                svc.pods[i].retry_pending = false;
+                            }
+                        }
+                        Self::try_patch(w, eng, &name, pod_id);
+                    });
+                }
+            }
+        }
+    }
+
+    pub(crate) fn resize_landed(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+        target: MilliCpu,
+    ) {
+        let now = eng.now();
+        let Some(pod) = w.cluster.pod(pod_id) else { return };
+        let Some(node_id) = pod.node else { return };
+        w.cluster
+            .node_mut(node_id)
+            .apply_cpu_limit(pod_id, target, now);
+        let _ = w.api.mark_done(&mut w.cluster, pod_id, target, now);
+        Self::committed_changed(w, eng);
+        Self::recompute_pod(w, eng, svc_name, pod_id);
+        // A newer desire may have raced in (up while down was landing).
+        let pending = {
+            let svc = w.services.get(svc_name);
+            svc.and_then(|s| s.pod_index(pod_id))
+                .and_then(|i| w.services[svc_name].pods[i].desired_limit)
+        };
+        if let Some(t) = pending {
+            if t != target {
+                let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+                eng.schedule_in(SimTime::ZERO, move |w: &mut Platform, eng| {
+                    Self::try_patch(w, eng, &name, pod_id);
+                });
+            }
+        }
+    }
+
+    /// Node load for the latency model: stressors + busy serving capacity.
+    pub(crate) fn node_load(w: &Platform, node: NodeId) -> crate::cgroup::latency::NodeLoad {
+        let mut busy = MilliCpu::ZERO;
+        for svc in w.services.values() {
+            // `ServicePod.node` mirrors the bind target, so off-node pods
+            // are skipped without a cluster lookup.
+            for sp in svc.pods_on(node) {
+                if sp.proxy.active_count() > 0 {
+                    if let Some(pod) = w.cluster.pod(sp.pod) {
+                        busy += pod.status.applied_cpu_limit;
+                    }
+                }
+            }
+        }
+        w.cluster.node(node).load_with_busy(busy)
+    }
+
+    /// Recomputes the committed-CPU metric (Σ applied limits of live pods).
+    pub(crate) fn committed_changed(w: &mut Platform, eng: &mut Eng) {
+        let mut total = MilliCpu::ZERO;
+        for svc in w.services.values() {
+            for sp in &svc.pods {
+                if sp.terminating {
+                    continue;
+                }
+                if let Some(pod) = w.cluster.pod(sp.pod) {
+                    if pod.status.phase == PodPhase::Running {
+                        total += pod.status.applied_cpu_limit;
+                    }
+                }
+            }
+        }
+        w.metrics.committed_cpu.update(eng.now(), total);
+    }
+}

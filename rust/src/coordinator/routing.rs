@@ -1,0 +1,300 @@
+//! Request routing: the submit → arrive → dispatch → exec → complete hot
+//! path, including activator buffering, CFS share recomputation and the
+//! level-triggered concurrency bookkeeping.
+//!
+//! ```text
+//! submit → [forward] → arrive → dispatch → (in-place: resize hook ‖ exec)
+//!        → exec under CFS shares → complete → [respond] → metrics
+//!                                     ↘ post-hook: park / idle-timer
+//! ```
+//!
+//! All handlers are associated functions on [`Platform`] taking
+//! `(&mut Platform, &mut Eng)`; state lives in
+//! [`platform`](super::platform).
+
+use crate::cluster::pod::PodId;
+use crate::coordinator::platform::{Eng, Platform};
+use crate::knative::activator::RequestId;
+use crate::simclock::SimTime;
+use crate::util::quantity::MilliCpu;
+use crate::workload::exec::Execution;
+
+impl Platform {
+    // ---------------------------------------------------------------- arrive
+
+    pub(crate) fn arrive(w: &mut Platform, eng: &mut Eng, req: RequestId) {
+        let svc_name = match w.requests.get(&req) {
+            Some(r) => r.service.clone(),
+            None => return,
+        };
+        let Some(svc) = w.services.get_mut(&*svc_name) else {
+            // Unknown service: fail fast.
+            Self::fail_request(w, eng, req);
+            return;
+        };
+
+        if let Some(idx) = svc.pick_pod() {
+            Self::dispatch(w, eng, &svc_name, req, idx);
+        } else {
+            // Buffer at the activator; start a pod if none is coming up.
+            let now = eng.now();
+            if svc.activator.buffer(req, now).is_err() {
+                Self::fail_request(w, eng, req);
+                return;
+            }
+            let needs_pod = svc.live_pods() == 0;
+            if needs_pod {
+                if let Some(r) = w.requests.get_mut(&req) {
+                    r.cold_start = true;
+                }
+                Self::start_pod(w, eng, &svc_name, true);
+            } else {
+                Self::maybe_scale_up(w, eng, &svc_name);
+            }
+        }
+        Self::record_concurrency(w, eng, &svc_name);
+    }
+
+    pub(crate) fn fail_request(w: &mut Platform, eng: &mut Eng, req: RequestId) {
+        if let Some(r) = w.requests.remove(&req) {
+            w.metrics.service(&r.service).failed += 1;
+        }
+        Self::fire_hook(w, eng, req);
+    }
+
+    // -------------------------------------------------------------- dispatch
+
+    /// Admits `req` into pod `idx` of `svc` and (policy-dependent) fires the
+    /// pre-request resize hook before redirecting.
+    pub(crate) fn dispatch(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        req: RequestId,
+        idx: usize,
+    ) {
+        let (pod_id, hooks, serving, applied) = {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            let serving = svc.cfg.serving_cpu;
+            let sp = &mut svc.pods[idx];
+            sp.proxy.offer(req);
+            let pod_id = sp.pod;
+            let applied = w
+                .cluster
+                .pod(pod_id)
+                .map(|p| p.status.applied_cpu_limit)
+                .unwrap_or(MilliCpu::ZERO);
+            (pod_id, sp.proxy.inplace_hooks, serving, applied)
+        };
+        if let Some(r) = w.requests.get_mut(&req) {
+            r.pod = Some(pod_id);
+        }
+        // Cancel any pending idle scale-down for this pod.
+        let svc = w.services.get_mut(svc_name).unwrap();
+        if let Some(t) = svc.pods[idx].idle_timer.take() {
+            eng.cancel(t);
+        }
+
+        // A park may be in flight (status shows a resize) or already desired;
+        // a new request must claim the serving allocation either way.
+        let resize_in_flight = w
+            .cluster
+            .pod(pod_id)
+            .map(|p| p.status.resize.is_some())
+            .unwrap_or(false);
+        let park_desired = {
+            let svc = &w.services[svc_name];
+            svc.pod_index(pod_id)
+                .and_then(|i| svc.pods[i].desired_limit)
+                .map(|d| d < serving)
+                .unwrap_or(false)
+        };
+        if hooks && (applied < serving || resize_in_flight || park_desired) {
+            // The paper's pre-hook: dispatch the scale-up patch, then
+            // redirect immediately — the request starts at the parked
+            // allocation and speeds up when the resize lands.
+            if let Some(r) = w.requests.get_mut(&req) {
+                r.scaled_up = true;
+            }
+            w.metrics.service(svc_name).inplace_scale_ups += 1;
+            Self::request_resize(w, eng, svc_name, pod_id, serving);
+        }
+        Self::begin_exec(w, eng, svc_name, req, pod_id);
+    }
+
+    pub(crate) fn begin_exec(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        req: RequestId,
+        pod: PodId,
+    ) {
+        let profile = w.services[svc_name].profile.clone();
+        if let Some(r) = w.requests.get_mut(&req) {
+            r.exec = Some(Execution::start(&profile, eng.now()));
+        }
+        Self::recompute_pod(w, eng, svc_name, pod);
+    }
+
+    // ------------------------------------------------------------- execution
+
+    /// Re-integrates progress for every active request on `pod` and
+    /// reschedules their completion events under the current allocation.
+    /// Called on every regime change: request start/finish, resize landing.
+    pub(crate) fn recompute_pod(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod: PodId) {
+        let now = eng.now();
+        let Some(svc) = w.services.get(svc_name) else { return };
+        let Some(idx) = svc.pod_index(pod) else { return };
+        // Reuse the platform scratch buffer instead of allocating per event.
+        let mut active = std::mem::take(&mut w.scratch_active);
+        active.clear();
+        active.extend_from_slice(w.services[svc_name].pods[idx].proxy.active_requests());
+        let _ = svc;
+        if active.is_empty() {
+            w.scratch_active = active;
+            return;
+        }
+        let alloc = w
+            .cluster
+            .pod(pod)
+            .map(|p| p.status.applied_cpu_limit)
+            .unwrap_or(MilliCpu::ZERO);
+        // Equal CFS split among in-container requests.
+        let share = MilliCpu((alloc.0 / active.len() as u64).max(1));
+        for &id in &active {
+            let Some(r) = w.requests.get_mut(&id) else { continue };
+            let Some(exec) = r.exec.as_mut() else { continue };
+            // Integrate the interval just ended under the old share.
+            exec.advance(now, r.share.max(MilliCpu(1)));
+            r.share = share;
+            if let Some(ev) = r.completion.take() {
+                eng.cancel(ev);
+            }
+            if exec.done() {
+                // Finished exactly at this boundary.
+                let s = eng.schedule_in(SimTime::ZERO, move |w: &mut Platform, eng| {
+                    Self::complete(w, eng, id);
+                });
+                r.completion = Some(s.id);
+            } else {
+                let eta = exec.eta(share);
+                let s = eng.schedule_in(eta, move |w: &mut Platform, eng| {
+                    Self::complete(w, eng, id);
+                });
+                r.completion = Some(s.id);
+            }
+        }
+        w.scratch_active = active;
+    }
+
+    pub(crate) fn complete(w: &mut Platform, eng: &mut Eng, req: RequestId) {
+        let now = eng.now();
+        let Some(r) = w.requests.get_mut(&req) else { return };
+        let svc_name = r.service.clone();
+        let pod = r.pod;
+        if let Some(exec) = r.exec.as_mut() {
+            exec.advance(now, r.share.max(MilliCpu(1)));
+        }
+        r.completion = None;
+
+        // Response proxy hop is part of the measured latency.
+        let respond = w.params.proxy.sample_respond(&mut w.rng);
+        let latency_ms = (now + respond).saturating_sub(r.submitted_at).as_millis_f64();
+        let r = w.requests.remove(&req).unwrap();
+        {
+            let m = w.metrics.service(&svc_name);
+            m.latency_ms.record(latency_ms);
+            m.completed += 1;
+            if r.cold_start {
+                m.cold_starts += 1;
+            }
+        }
+
+        let Some(pod_id) = pod else { return };
+        // Free the concurrency slot; promote a queued request if any.
+        let promoted = {
+            let Some(svc) = w.services.get_mut(&*svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            svc.pods[idx].proxy.complete(req)
+        };
+        if let Some(next) = promoted {
+            Self::begin_exec(w, eng, &svc_name, next, pod_id);
+        } else {
+            Self::recompute_pod(w, eng, &svc_name, pod_id);
+        }
+
+        Self::post_request_hooks(w, eng, &svc_name, pod_id);
+        Self::record_concurrency(w, eng, &svc_name);
+        Self::drain_activator(w, eng, &svc_name);
+        Self::fire_hook(w, eng, req);
+    }
+
+    /// Dispatches as many buffered requests as capacity allows, failing
+    /// timed-out entries as they surface.
+    pub(crate) fn drain_activator(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        loop {
+            let (next, dead) = {
+                let Some(svc) = w.services.get_mut(svc_name) else { return };
+                if svc.pick_pod().is_none() {
+                    return;
+                }
+                let (mut out, dead) = svc.activator.drain(1, eng.now());
+                (out.pop(), dead)
+            };
+            // `drain` pops timed-out head entries alongside the dispatchable
+            // one; every popped request must be failed or dispatched —
+            // returning before consuming `next` would leak it in flight.
+            for d in dead {
+                Self::fail_request(w, eng, d.request);
+            }
+            let Some(b) = next else { return };
+            // Re-pick after failing dead entries: their completion hooks may
+            // have mutated pod state.
+            let Some(idx) = w.services.get(svc_name).and_then(|s| s.pick_pod()) else {
+                // Capacity vanished under us (a hook claimed it): re-buffer
+                // the request with its original enqueue time. If even the
+                // buffer is full now, the request must fail — it was already
+                // popped, so dropping it here would leak it in flight.
+                let requeued = w
+                    .services
+                    .get_mut(svc_name)
+                    .map(|svc| svc.activator.buffer(b.request, b.enqueued_at).is_ok())
+                    .unwrap_or(false);
+                if !requeued {
+                    Self::fail_request(w, eng, b.request);
+                }
+                return;
+            };
+            Self::dispatch(w, eng, svc_name, b.request, idx);
+        }
+    }
+
+    /// Level-triggered concurrency bookkeeping after every arrival and
+    /// completion: records the KPA sample and considers scale-out whenever
+    /// observed concurrency exceeds what the current fleet targets.
+    pub(crate) fn record_concurrency(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        let now = eng.now();
+        let overloaded = if let Some(svc) = w.services.get_mut(svc_name) {
+            // One pass over the pod list for concurrency + readiness.
+            let mut in_flight = svc.activator.len();
+            let mut ready = 0usize;
+            for p in &svc.pods {
+                in_flight += p.proxy.in_flight();
+                if p.ready && !p.terminating {
+                    ready += 1;
+                }
+            }
+            svc.autoscaler.record(now, in_flight as u32);
+            // Level-triggered KPA: consider scale-out whenever observed
+            // concurrency exceeds what the current fleet targets — skipped
+            // entirely for the common single-pod-capped revision.
+            (svc.live_pods() as u32) < svc.cfg.max_scale
+                && in_flight as f64 > svc.cfg.target_concurrency * ready.max(1) as f64
+        } else {
+            false
+        };
+        if overloaded {
+            Self::maybe_scale_up(w, eng, svc_name);
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! Per-service (Knative revision) runtime state inside the platform.
 
 use crate::cluster::pod::PodId;
+use crate::cluster::NodeId;
 use crate::knative::activator::{Activator, RequestId};
 use crate::knative::autoscaler::Autoscaler;
 use crate::knative::config::RevisionConfig;
@@ -14,6 +15,10 @@ use crate::workload::registry::WorkloadProfile;
 #[derive(Debug)]
 pub struct ServicePod {
     pub pod: PodId,
+    /// Node the pod was bound to (set when the pod comes up) — placement
+    /// the fleet experiments and per-node accounting read without a
+    /// cluster lookup.
+    pub node: Option<NodeId>,
     pub proxy: QueueProxy,
     /// Idle scale-to-zero timer (cold policy).
     pub idle_timer: Option<EventId>,
@@ -30,6 +35,7 @@ impl ServicePod {
     pub fn new(pod: PodId, concurrency_limit: u32, hooks: bool) -> ServicePod {
         ServicePod {
             pod,
+            node: None,
             proxy: QueueProxy::new(concurrency_limit, hooks),
             idle_timer: None,
             desired_limit: None,
@@ -106,6 +112,13 @@ impl Service {
 
     pub fn pod_index(&self, pod: PodId) -> Option<usize> {
         self.pods.iter().position(|p| p.pod == pod)
+    }
+
+    /// Live pods of this service placed on `node`.
+    pub fn pods_on(&self, node: NodeId) -> impl Iterator<Item = &ServicePod> {
+        self.pods
+            .iter()
+            .filter(move |p| p.node == Some(node) && !p.terminating)
     }
 
     /// Buffered request ids waiting in the activator (for tests/debugging).

@@ -1,0 +1,86 @@
+//! The [`Simulation`] harness: owns the engine + platform pair; the entry
+//! point examples, experiments and benches use.
+
+use crate::cluster::topology::Topology;
+use crate::coordinator::platform::{Eng, Platform};
+use crate::coordinator::service::Service;
+use crate::knative::activator::RequestId;
+use crate::policy::{PlatformParams, Policy};
+use crate::simclock::{Engine, SimTime};
+use crate::workload::registry::WorkloadProfile;
+
+/// Owns the engine + platform pair.
+pub struct Simulation {
+    pub engine: Eng,
+    pub world: Platform,
+}
+
+impl Simulation {
+    /// Paper testbed with default calibration.
+    pub fn paper(seed: u64) -> Simulation {
+        Simulation {
+            engine: Engine::new(),
+            world: Platform::paper_testbed(PlatformParams::with_seed(seed)),
+        }
+    }
+
+    pub fn with_params(params: PlatformParams) -> Simulation {
+        Simulation {
+            engine: Engine::new(),
+            world: Platform::paper_testbed(params),
+        }
+    }
+
+    /// A simulation over an arbitrary fleet shape with default calibration.
+    pub fn fleet(topology: Topology, seed: u64) -> Simulation {
+        Simulation::fleet_with_params(topology, PlatformParams::with_seed(seed))
+    }
+
+    pub fn fleet_with_params(topology: Topology, params: PlatformParams) -> Simulation {
+        Simulation {
+            engine: Engine::new(),
+            world: Platform::with_topology(topology, params),
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    pub fn deploy(&mut self, name: &str, profile: WorkloadProfile, policy: Policy) {
+        self.world
+            .deploy_workload(&mut self.engine, name, profile, policy);
+    }
+
+    pub fn deploy_service(&mut self, svc: Service) {
+        self.world.deploy(&mut self.engine, svc);
+    }
+
+    pub fn submit(&mut self, service: &str) -> RequestId {
+        self.world.submit(&mut self.engine, service)
+    }
+
+    pub fn submit_at(&mut self, at: SimTime, service: &str) {
+        self.world.submit_at(&mut self.engine, at, service);
+    }
+
+    /// Runs until the event queue drains.
+    pub fn run(&mut self) -> u64 {
+        self.engine.run(&mut self.world)
+    }
+
+    pub fn run_until(&mut self, deadline: SimTime) -> u64 {
+        self.engine.run_until(&mut self.world, deadline)
+    }
+
+    /// Runs until all submitted requests completed (or the queue drained).
+    pub fn run_to_quiescence(&mut self) {
+        // Idle timers may keep the queue alive; step until no requests
+        // remain in flight.
+        while self.world.in_flight() > 0 {
+            if self.engine.step(&mut self.world).is_none() {
+                break;
+            }
+        }
+    }
+}

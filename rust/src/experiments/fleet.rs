@@ -1,0 +1,269 @@
+//! Fleet-scale policy comparison: the §3 policies swept over multi-node
+//! topologies with a mixed-workload, multi-tenant request stream — the
+//! regime the paper's single-node testbed cannot express.
+//!
+//! Per related work (Li et al., arXiv:1911.07449; Lin & Glikson,
+//! arXiv:1903.12221), cold-start policy trade-offs shift once requests
+//! spread over a fleet: per-function arrival rates thin out, so warm pools
+//! hold far more idle reservation and scale-to-zero pays far more cold
+//! starts. This experiment quantifies that shift: `kinetic fleet
+//! --nodes 10..100 --topology uniform|hetero` emits the same per-policy
+//! latency table as Table 3, but aggregated over the whole fleet.
+
+use crate::cluster::topology::Topology;
+use crate::coordinator::service::Service;
+use crate::coordinator::sim::Simulation;
+use crate::loadgen::arrival::Arrival;
+use crate::policy::{PlatformParams, Policy};
+use crate::simclock::SimTime;
+use crate::util::stats::Samples;
+use crate::util::table::{fmt_ms, Table};
+use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+/// The workload mix cycled across fleet services: mostly tiny functions
+/// with a tail of cpu-, io- and video-bound tenants (the shape of real
+/// multi-tenant traffic per the open-source-platform studies).
+pub const FLEET_MIX: [WorkloadKind; 6] = [
+    WorkloadKind::HelloWorld,
+    WorkloadKind::HelloWorld,
+    WorkloadKind::Cpu,
+    WorkloadKind::Io,
+    WorkloadKind::HelloWorld,
+    WorkloadKind::Video10s,
+];
+
+/// Configuration of one fleet sweep.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub topology: Topology,
+    /// Deployed services (tenants); workloads cycle through [`FLEET_MIX`].
+    pub services: usize,
+    /// Open-loop Poisson arrivals per service, requests/second.
+    pub rate_per_service: f64,
+    /// Virtual-time horizon of the arrival stream.
+    pub horizon: SimTime,
+    pub seed: u64,
+}
+
+impl FleetConfig {
+    /// A 10-node uniform fleet with two tenants per node — the smallest
+    /// configuration the acceptance sweep runs.
+    pub fn default_10_node(seed: u64) -> FleetConfig {
+        FleetConfig {
+            topology: Topology::uniform_paper(10),
+            services: 20,
+            rate_per_service: 0.05,
+            horizon: SimTime::from_secs(300),
+            seed,
+        }
+    }
+}
+
+/// One policy's aggregate outcome over the fleet.
+#[derive(Debug, Clone)]
+pub struct FleetRow {
+    pub policy: Policy,
+    pub nodes: usize,
+    pub services: usize,
+    pub completed: u64,
+    pub failed: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub cold_starts: u64,
+    pub inplace_scale_ups: u64,
+    /// Average committed CPU over the run, milliCPU (reservation cost).
+    pub avg_committed_mcpu: f64,
+    pub pods_created: u64,
+}
+
+/// Runs one policy over the configured fleet and aggregates every tenant's
+/// metrics.
+pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
+    let mut sim = Simulation::fleet_with_params(
+        cfg.topology.clone(),
+        PlatformParams::with_seed(cfg.seed),
+    );
+    for i in 0..cfg.services {
+        let kind = FLEET_MIX[i % FLEET_MIX.len()];
+        let mut rc = policy.revision_config();
+        // Tenants may fan out horizontally under load; keep the per-pod
+        // concurrency bounded so the KPA path is exercised at scale.
+        rc.max_scale = 4;
+        rc.target_concurrency = 2.0;
+        rc.container_concurrency = 4;
+        let svc = Service::with_config(
+            &format!("fn-{i}"),
+            WorkloadProfile::paper(kind),
+            policy,
+            rc,
+        );
+        sim.deploy_service(svc);
+    }
+    sim.run(); // bring up min-scale pods / let in-place pods park
+
+    // Open-loop Poisson stream per tenant, seeded independently of the
+    // platform RNG so arrival times are identical across the three
+    // policies (same seed).
+    let start = sim.now();
+    for i in 0..cfg.services {
+        let mut rng = crate::util::rng::Rng::new(cfg.seed ^ (0xF1EE7 + i as u64));
+        let arrival = Arrival::Poisson {
+            rate_per_sec: cfg.rate_per_service,
+        };
+        let name = format!("fn-{i}");
+        for t in arrival.times(cfg.horizon, &mut rng) {
+            sim.submit_at(start + t, &name);
+        }
+    }
+    sim.run();
+
+    let now = sim.now();
+    let mut lat = Samples::new();
+    let (mut completed, mut failed, mut cold, mut ups) = (0u64, 0u64, 0u64, 0u64);
+    for (_, m) in sim.world.metrics.services() {
+        completed += m.completed;
+        failed += m.failed;
+        cold += m.cold_starts;
+        ups += m.inplace_scale_ups;
+        for &v in m.latency_ms.values() {
+            lat.record(v);
+        }
+    }
+    FleetRow {
+        policy,
+        nodes: cfg.topology.len(),
+        services: cfg.services,
+        completed,
+        failed,
+        mean_ms: lat.mean(),
+        p50_ms: lat.percentile(50.0),
+        p99_ms: lat.percentile(99.0),
+        cold_starts: cold,
+        inplace_scale_ups: ups,
+        avg_committed_mcpu: sim.world.metrics.committed_cpu.average_mcpu(now),
+        pods_created: sim.world.metrics.pods_created,
+    }
+}
+
+/// All three §3 policies over one fleet.
+pub fn run_all(cfg: &FleetConfig) -> Vec<FleetRow> {
+    Policy::ALL.iter().map(|&p| run_policy(cfg, p)).collect()
+}
+
+/// Renders the per-policy fleet latency table.
+pub fn fleet_table(rows: &[FleetRow]) -> Table {
+    let (nodes, services) = rows
+        .first()
+        .map(|r| (r.nodes, r.services))
+        .unwrap_or((0, 0));
+    let mut t = Table::new(vec![
+        "Policy",
+        "Completed",
+        "Failed",
+        "Mean (ms)",
+        "p50 (ms)",
+        "p99 (ms)",
+        "Cold starts",
+        "Committed (mCPU)",
+        "Pods created",
+    ])
+    .title(format!(
+        "Fleet: per-policy latency over {nodes} nodes / {services} services (mixed workloads)"
+    ));
+    for r in rows {
+        t.row(vec![
+            r.policy.name().to_string(),
+            r.completed.to_string(),
+            r.failed.to_string(),
+            fmt_ms(r.mean_ms),
+            fmt_ms(r.p50_ms),
+            fmt_ms(r.p99_ms),
+            r.cold_starts.to_string(),
+            format!("{:.0}", r.avg_committed_mcpu),
+            r.pods_created.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(nodes: usize, services: usize) -> FleetConfig {
+        FleetConfig {
+            topology: Topology::uniform_paper(nodes),
+            services,
+            rate_per_service: 0.1,
+            horizon: SimTime::from_secs(60),
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn ten_node_fleet_produces_per_policy_table() {
+        let cfg = quick_cfg(10, 10);
+        let rows = run_all(&cfg);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert_eq!(r.nodes, 10);
+            assert_eq!(r.failed, 0, "{:?} failed requests", r.policy);
+            assert!(r.completed > 0, "{:?} completed nothing", r.policy);
+        }
+        let t = fleet_table(&rows);
+        assert_eq!(t.n_rows(), 3);
+        let ascii = t.to_ascii();
+        assert!(ascii.contains("in-place"), "{ascii}");
+        assert!(ascii.contains("10 nodes"), "{ascii}");
+    }
+
+    #[test]
+    fn fleet_preserves_policy_ordering() {
+        // The paper's ordering must survive the fleet: cold slowest,
+        // warm fastest, in-place between; in-place reserves far less
+        // than warm.
+        let cfg = quick_cfg(10, 12);
+        let cold = run_policy(&cfg, Policy::Cold);
+        let warm = run_policy(&cfg, Policy::Warm);
+        let inp = run_policy(&cfg, Policy::InPlace);
+        assert!(
+            warm.mean_ms < inp.mean_ms && inp.mean_ms < cold.mean_ms,
+            "warm={} inp={} cold={}",
+            warm.mean_ms,
+            inp.mean_ms,
+            cold.mean_ms
+        );
+        assert!(
+            inp.avg_committed_mcpu < warm.avg_committed_mcpu / 3.0,
+            "inp={} warm={}",
+            inp.avg_committed_mcpu,
+            warm.avg_committed_mcpu
+        );
+        assert!(cold.cold_starts > 0);
+        assert_eq!(inp.cold_starts, 0);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_schedules_everything() {
+        let cfg = FleetConfig {
+            topology: Topology::hetero_preset(6),
+            services: 12,
+            rate_per_service: 0.1,
+            horizon: SimTime::from_secs(30),
+            seed: 5,
+        };
+        let r = run_policy(&cfg, Policy::Warm);
+        assert_eq!(r.failed, 0);
+        assert!(r.completed > 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg(4, 6);
+        let a = run_policy(&cfg, Policy::InPlace);
+        let b = run_policy(&cfg, Policy::InPlace);
+        assert_eq!(a.mean_ms.to_bits(), b.mean_ms.to_bits());
+        assert_eq!(a.completed, b.completed);
+    }
+}

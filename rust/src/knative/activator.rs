@@ -17,11 +17,20 @@ pub struct Buffered {
     pub enqueued_at: SimTime,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ActivatorError {
-    #[error("activator buffer full")]
     Overflow,
 }
+
+impl std::fmt::Display for ActivatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ActivatorError::Overflow => write!(f, "activator buffer full"),
+        }
+    }
+}
+
+impl std::error::Error for ActivatorError {}
 
 /// Per-revision activator buffer.
 #[derive(Debug)]

@@ -2,12 +2,15 @@
 //!
 //! Subcommands:
 //! * `exp`        — regenerate paper tables/figures (t1|fig2|fig3|fig4|t2|t3|fig6|all)
+//! * `fleet`      — run the three §3 policies over a multi-node topology
 //! * `serve`      — run the end-to-end serving demo over the PJRT artifacts
 //! * `trace`      — generate + replay an Azure-style trace under all policies
 //! * `selfcheck`  — validate the AOT artifacts against the manifest oracle
 
+use kinetic::cluster::topology::Topology;
 use kinetic::coordinator::platform::Simulation;
 use kinetic::experiments::ablation;
+use kinetic::experiments::fleet::{self, FleetConfig};
 use kinetic::experiments::memory;
 use kinetic::experiments::policies::PolicyExperiment;
 use kinetic::experiments::report::{
@@ -36,6 +39,15 @@ fn app() -> App {
                 .opt("seed", "rng seed", "42")
                 .opt("out", "results directory", "results")
                 .flag("verbose", "chatty logging"),
+        )
+        .command(
+            Command::new("fleet", "run the three §3 policies over a multi-node fleet")
+                .opt("nodes", "node count for uniform/hetero topologies", "10")
+                .opt("topology", "paper|uniform|hetero", "uniform")
+                .opt("services", "deployed tenants (0 = 2 per node)", "0")
+                .opt("rate", "Poisson requests/second per tenant", "0.05")
+                .opt("seconds", "arrival-stream horizon (virtual seconds)", "300")
+                .opt("seed", "rng seed", "42"),
         )
         .command(
             Command::new("serve", "serve batched requests over the PJRT artifacts")
@@ -234,6 +246,52 @@ fn run_exp(id: &str, reps: u32, seed: u64, out: &str) {
     }
 }
 
+fn run_fleet(
+    nodes: usize,
+    topology_spec: &str,
+    services: usize,
+    rate: f64,
+    seconds: u64,
+    seed: u64,
+) {
+    let topology = match Topology::from_cli(topology_spec, nodes) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let services = if services == 0 {
+        (2 * topology.len()).max(1)
+    } else {
+        services
+    };
+    println!(
+        "fleet: {} nodes ({} mCPU total), {services} tenants, {rate} rps each over {seconds}s",
+        topology.len(),
+        topology.total_capacity().cpu.0,
+    );
+    let cfg = FleetConfig {
+        topology,
+        services,
+        rate_per_service: rate,
+        horizon: SimTime::from_secs(seconds),
+        seed,
+    };
+    let rows = fleet::run_all(&cfg);
+    println!("{}", fleet::fleet_table(&rows).to_ascii());
+    let warm = rows.iter().find(|r| r.policy == Policy::Warm);
+    let inp = rows.iter().find(|r| r.policy == Policy::InPlace);
+    if let (Some(w), Some(i)) = (warm, inp) {
+        if i.avg_committed_mcpu > 0.0 {
+            println!(
+                "reservation: warm commits {:.1}× the CPU of in-place across the fleet",
+                w.avg_committed_mcpu / i.avg_committed_mcpu
+            );
+        }
+    }
+}
+
 fn run_serve(requests: u32, policy: Policy, seed: u64) {
     // Real-compute path: verify artifacts, then serve through the platform.
     let mut executor = match Executor::new(None) {
@@ -331,6 +389,14 @@ fn main() {
             inv.get_u64("seed", 42),
             inv.get_or("out", "results"),
         ),
+        "fleet" => run_fleet(
+            inv.get_u64("nodes", 10) as usize,
+            inv.get_or("topology", "uniform"),
+            inv.get_u64("services", 0) as usize,
+            inv.get_f64("rate", 0.05),
+            inv.get_u64("seconds", 300),
+            inv.get_u64("seed", 42),
+        ),
         "serve" => {
             let policy: Policy = inv
                 .get_or("policy", "inplace")
@@ -349,7 +415,13 @@ fn main() {
             inv.get_u64("seed", 1),
         ),
         "selfcheck" => {
-            let mut ex = Executor::new(None).expect("artifacts present");
+            let mut ex = match Executor::new(None) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("selfcheck unavailable ({e}); run `make artifacts`");
+                    std::process::exit(1);
+                }
+            };
             ex.self_check("compute").expect("compute check");
             ex.self_check("watermark").expect("watermark check");
             println!("selfcheck OK: compute + watermark match the python oracle");

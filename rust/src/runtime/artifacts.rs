@@ -1,22 +1,33 @@
 //! Artifact manifest: discovery + parsing of `artifacts/manifest.json`.
 
+use std::fmt;
 use std::path::{Path, PathBuf};
-
-use thiserror::Error;
 
 use crate::util::json::Json;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("artifacts directory not found (tried {0:?}); run `make artifacts`")]
     DirNotFound(Vec<PathBuf>),
-    #[error("io error reading {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("manifest parse error: {0}")]
     Parse(String),
-    #[error("no such model in manifest: {0}")]
     NoSuchModel(String),
 }
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::DirNotFound(tried) => write!(
+                f,
+                "artifacts directory not found (tried {tried:?}); run `make artifacts`"
+            ),
+            ArtifactError::Io(path, e) => write!(f, "io error reading {}: {e}", path.display()),
+            ArtifactError::Parse(s) => write!(f, "manifest parse error: {s}"),
+            ArtifactError::NoSuchModel(s) => write!(f, "no such model in manifest: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
 
 /// Expected-output check data emitted by `aot.py` (oracle values on the
 /// deterministic example inputs).

@@ -1,31 +1,51 @@
 //! The executor: a PJRT CPU client with a per-model compiled-executable
 //! cache. Compilation happens once per model variant (at platform start or
 //! first use); the request path only queues `execute` calls.
+//!
+//! The `xla` PJRT bindings come from the offline crate mirror, which not
+//! every build machine carries, so the real client is gated behind the
+//! `pjrt` cargo feature. Without it the same public surface compiles as an
+//! uninstantiable stub whose constructor reports the feature is off —
+//! callers (`kinetic serve`, `cargo bench --bench runtime_exec`, the e2e
+//! example) already handle `Executor::new` failing because the artifacts
+//! may equally be missing.
 
-use std::collections::HashMap;
+use std::fmt;
 
-use thiserror::Error;
+use crate::runtime::artifacts::ArtifactError;
 
-use crate::runtime::artifacts::{ArtifactError, Manifest, ModelEntry};
-use crate::runtime::inputs;
-
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ExecError {
-    #[error("artifact error: {0}")]
-    Artifact(#[from] ArtifactError),
-    #[error("xla error: {0}")]
+    Artifact(ArtifactError),
     Xla(String),
-    #[error("model {0} expects {1} inputs, got {2}")]
     InputArity(String, usize, usize),
-    #[error("input {0} expects {1} elements, got {2}")]
     InputSize(usize, usize, usize),
-    #[error("numeric check failed for {model}: {detail}")]
     CheckFailed { model: String, detail: String },
 }
 
-impl From<xla::Error> for ExecError {
-    fn from(e: xla::Error) -> Self {
-        ExecError::Xla(e.to_string())
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::Artifact(e) => write!(f, "artifact error: {e}"),
+            ExecError::Xla(s) => write!(f, "xla error: {s}"),
+            ExecError::InputArity(model, want, got) => {
+                write!(f, "model {model} expects {want} inputs, got {got}")
+            }
+            ExecError::InputSize(i, want, got) => {
+                write!(f, "input {i} expects {want} elements, got {got}")
+            }
+            ExecError::CheckFailed { model, detail } => {
+                write!(f, "numeric check failed for {model}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+impl From<ArtifactError> for ExecError {
+    fn from(e: ArtifactError) -> Self {
+        ExecError::Artifact(e)
     }
 }
 
@@ -39,195 +59,270 @@ impl Outputs {
     }
 }
 
-/// PJRT client + compiled executable cache.
-pub struct Executor {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+#[cfg(feature = "pjrt")]
+pub use real::{Executor, Literal};
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executor, Literal};
+
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::HashMap;
+
+    use super::{ExecError, Outputs};
+    use crate::runtime::artifacts::{ArtifactError, Manifest, ModelEntry};
+    use crate::runtime::inputs;
+
+    /// Input literal handed back by [`Executor::prepare_inputs`].
+    pub type Literal = xla::Literal;
+
+    impl From<xla::Error> for ExecError {
+        fn from(e: xla::Error) -> Self {
+            ExecError::Xla(e.to_string())
+        }
+    }
+
+    /// PJRT client + compiled executable cache.
+    pub struct Executor {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Executor {
+        /// Builds an executor over a manifest (discovers artifacts when `None`).
+        pub fn new(manifest: Option<Manifest>) -> Result<Executor, ExecError> {
+            let manifest = match manifest {
+                Some(m) => m,
+                None => Manifest::discover()?,
+            };
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Executor {
+                client,
+                manifest,
+                cache: HashMap::new(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Compiles (or fetches from cache) a model's executable.
+        pub fn load(&mut self, name: &str) -> Result<(), ExecError> {
+            if self.cache.contains_key(name) {
+                return Ok(());
+            }
+            let entry = self.manifest.model(name)?.clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        pub fn loaded(&self, name: &str) -> bool {
+            self.cache.contains_key(name)
+        }
+
+        /// Executes a model with flat-f32 inputs (shapes from the manifest).
+        pub fn execute(
+            &mut self,
+            name: &str,
+            flat_inputs: &[&[f32]],
+        ) -> Result<Outputs, ExecError> {
+            let literals = self.prepare_inputs(name, flat_inputs)?;
+            self.execute_prepared(name, &literals)
+        }
+
+        /// Builds input literals once for repeated execution (a serving tier
+        /// reuses request buffers; `Literal::vec1 + reshape` copies twice per
+        /// call otherwise — see EXPERIMENTS.md §Perf).
+        pub fn prepare_inputs(
+            &mut self,
+            name: &str,
+            flat_inputs: &[&[f32]],
+        ) -> Result<Vec<Literal>, ExecError> {
+            let entry = self.manifest.model(name)?.clone();
+            if flat_inputs.len() != entry.input_shapes.len() {
+                return Err(ExecError::InputArity(
+                    name.to_string(),
+                    entry.input_shapes.len(),
+                    flat_inputs.len(),
+                ));
+            }
+            let mut literals = Vec::with_capacity(flat_inputs.len());
+            for (i, (data, shape)) in flat_inputs.iter().zip(&entry.input_shapes).enumerate() {
+                let want: usize = shape.iter().product();
+                if data.len() != want {
+                    return Err(ExecError::InputSize(i, want, data.len()));
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+            }
+            Ok(literals)
+        }
+
+        /// Executes with pre-built literals (the repeated-execution hot path).
+        pub fn execute_prepared(
+            &mut self,
+            name: &str,
+            literals: &[Literal],
+        ) -> Result<Outputs, ExecError> {
+            self.load(name)?;
+            let exe = self.cache.get(name).expect("loaded above");
+            let result = exe.execute::<xla::Literal>(literals)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True.
+            let parts = result.to_tuple()?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(p.to_vec::<f32>()?);
+            }
+            Ok(Outputs(out))
+        }
+
+        /// Runs `model` on its deterministic example inputs and validates the
+        /// outputs against the oracle values baked into the manifest — the
+        /// cross-language numeric check of the whole L1→L2→AOT→PJRT stack.
+        pub fn self_check(&mut self, name: &str) -> Result<(), ExecError> {
+            let entry = self.manifest.model(name)?.clone();
+            let outs = match name {
+                "compute" => {
+                    let (x, w, b) = inputs::compute_inputs();
+                    self.execute(name, &[&x, &w, &b])?
+                }
+                "watermark" => {
+                    let (f, wm, a, g) = inputs::watermark_inputs();
+                    self.execute(name, &[&f, &wm, &a, &g])?
+                }
+                other => {
+                    return Err(ExecError::Artifact(ArtifactError::NoSuchModel(
+                        other.to_string(),
+                    )))
+                }
+            };
+            Self::validate(&entry, &outs)
+        }
+
+        fn validate(entry: &ModelEntry, outs: &Outputs) -> Result<(), ExecError> {
+            let chk = &entry.check;
+            let tol = chk.tolerance.max(1e-9);
+            let fail = |detail: String| ExecError::CheckFailed {
+                model: entry.name.clone(),
+                detail,
+            };
+            if outs.0.len() != entry.outputs {
+                return Err(fail(format!(
+                    "expected {} outputs, got {}",
+                    entry.outputs,
+                    outs.0.len()
+                )));
+            }
+            let sum: f64 = outs.0[0].iter().map(|&v| v as f64).sum();
+            let sum_tol = tol * (outs.0[0].len() as f64).sqrt() * 10.0;
+            if (sum - chk.out0_sum).abs() > sum_tol.max(chk.out0_sum.abs() * 1e-4) {
+                return Err(fail(format!(
+                    "out0 sum {} vs expected {}",
+                    sum, chk.out0_sum
+                )));
+            }
+            for (i, &want) in chk.out0_first8.iter().enumerate() {
+                let got = outs.0[0][i] as f64;
+                if (got - want).abs() > tol {
+                    return Err(fail(format!("out0[{i}] {got} vs expected {want}")));
+                }
+            }
+            for (i, &want) in chk.out1_first4.iter().enumerate() {
+                let got = outs.0[1][i] as f64;
+                if (got - want).abs() > tol {
+                    return Err(fail(format!("out1[{i}] {got} vs expected {want}")));
+                }
+            }
+            Ok(())
+        }
+    }
 }
 
-impl Executor {
-    /// Builds an executor over a manifest (discovers artifacts when `None`).
-    pub fn new(manifest: Option<Manifest>) -> Result<Executor, ExecError> {
-        let manifest = match manifest {
-            Some(m) => m,
-            None => Manifest::discover()?,
-        };
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Executor {
-            client,
-            manifest,
-            cache: HashMap::new(),
-        })
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::{ExecError, Outputs};
+    use crate::runtime::artifacts::Manifest;
+
+    /// Placeholder for `xla::Literal` when the PJRT path is compiled out.
+    #[derive(Debug, Clone, Copy)]
+    pub struct Literal;
+
+    /// Uninstantiable stand-in: `new` always fails, so the other methods can
+    /// never be reached — the `Infallible` field proves it to the compiler.
+    pub struct Executor {
+        never: std::convert::Infallible,
+        manifest: Manifest,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    impl Executor {
+        pub fn new(_manifest: Option<Manifest>) -> Result<Executor, ExecError> {
+            Err(ExecError::Xla(
+                "compiled without the `pjrt` feature; rebuild with --features pjrt \
+                 and the mirrored `xla` crate to run real compute"
+                    .to_string(),
+            ))
+        }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
 
-    /// Compiles (or fetches from cache) a model's executable.
-    pub fn load(&mut self, name: &str) -> Result<(), ExecError> {
-        if self.cache.contains_key(name) {
-            return Ok(());
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        let entry = self.manifest.model(name)?.clone();
-        let path = self.manifest.hlo_path(&entry);
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
-    }
 
-    pub fn loaded(&self, name: &str) -> bool {
-        self.cache.contains_key(name)
-    }
+        pub fn load(&mut self, _name: &str) -> Result<(), ExecError> {
+            match self.never {}
+        }
 
-    /// Executes a model with flat-f32 inputs (shapes from the manifest).
-    pub fn execute(&mut self, name: &str, flat_inputs: &[&[f32]]) -> Result<Outputs, ExecError> {
-        self.load(name)?;
-        let entry = self.manifest.model(name)?.clone();
-        if flat_inputs.len() != entry.input_shapes.len() {
-            return Err(ExecError::InputArity(
-                name.to_string(),
-                entry.input_shapes.len(),
-                flat_inputs.len(),
-            ));
+        pub fn loaded(&self, _name: &str) -> bool {
+            match self.never {}
         }
-        let mut literals = Vec::with_capacity(flat_inputs.len());
-        for (i, (data, shape)) in flat_inputs.iter().zip(&entry.input_shapes).enumerate() {
-            let want: usize = shape.iter().product();
-            if data.len() != want {
-                return Err(ExecError::InputSize(i, want, data.len()));
-            }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data).reshape(&dims)?;
-            literals.push(lit);
-        }
-        let exe = self.cache.get(name).expect("loaded above");
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>()?);
-        }
-        Ok(Outputs(out))
-    }
 
-    /// Builds input literals once for repeated execution (a serving tier
-    /// reuses request buffers; `Literal::vec1 + reshape` copies twice per
-    /// call otherwise — see EXPERIMENTS.md §Perf).
-    pub fn prepare_inputs(
-        &mut self,
-        name: &str,
-        flat_inputs: &[&[f32]],
-    ) -> Result<Vec<xla::Literal>, ExecError> {
-        let entry = self.manifest.model(name)?.clone();
-        if flat_inputs.len() != entry.input_shapes.len() {
-            return Err(ExecError::InputArity(
-                name.to_string(),
-                entry.input_shapes.len(),
-                flat_inputs.len(),
-            ));
+        pub fn execute(
+            &mut self,
+            _name: &str,
+            _flat_inputs: &[&[f32]],
+        ) -> Result<Outputs, ExecError> {
+            match self.never {}
         }
-        let mut literals = Vec::with_capacity(flat_inputs.len());
-        for (i, (data, shape)) in flat_inputs.iter().zip(&entry.input_shapes).enumerate() {
-            let want: usize = shape.iter().product();
-            if data.len() != want {
-                return Err(ExecError::InputSize(i, want, data.len()));
-            }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
-        }
-        Ok(literals)
-    }
 
-    /// Executes with pre-built literals (the repeated-execution hot path).
-    pub fn execute_prepared(
-        &mut self,
-        name: &str,
-        literals: &[xla::Literal],
-    ) -> Result<Outputs, ExecError> {
-        self.load(name)?;
-        let exe = self.cache.get(name).expect("loaded above");
-        let result = exe.execute::<xla::Literal>(literals)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>()?);
+        pub fn prepare_inputs(
+            &mut self,
+            _name: &str,
+            _flat_inputs: &[&[f32]],
+        ) -> Result<Vec<Literal>, ExecError> {
+            match self.never {}
         }
-        Ok(Outputs(out))
-    }
 
-    /// Runs `model` on its deterministic example inputs and validates the
-    /// outputs against the oracle values baked into the manifest — the
-    /// cross-language numeric check of the whole L1→L2→AOT→PJRT stack.
-    pub fn self_check(&mut self, name: &str) -> Result<(), ExecError> {
-        let entry = self.manifest.model(name)?.clone();
-        let outs = match name {
-            "compute" => {
-                let (x, w, b) = inputs::compute_inputs();
-                self.execute(name, &[&x, &w, &b])?
-            }
-            "watermark" => {
-                let (f, wm, a, g) = inputs::watermark_inputs();
-                self.execute(name, &[&f, &wm, &a, &g])?
-            }
-            other => {
-                return Err(ExecError::Artifact(ArtifactError::NoSuchModel(
-                    other.to_string(),
-                )))
-            }
-        };
-        Self::validate(&entry, &outs)
-    }
+        pub fn execute_prepared(
+            &mut self,
+            _name: &str,
+            _literals: &[Literal],
+        ) -> Result<Outputs, ExecError> {
+            match self.never {}
+        }
 
-    fn validate(entry: &ModelEntry, outs: &Outputs) -> Result<(), ExecError> {
-        let chk = &entry.check;
-        let tol = chk.tolerance.max(1e-9);
-        let fail = |detail: String| ExecError::CheckFailed {
-            model: entry.name.clone(),
-            detail,
-        };
-        if outs.0.len() != entry.outputs {
-            return Err(fail(format!(
-                "expected {} outputs, got {}",
-                entry.outputs,
-                outs.0.len()
-            )));
+        pub fn self_check(&mut self, _name: &str) -> Result<(), ExecError> {
+            match self.never {}
         }
-        let sum: f64 = outs.0[0].iter().map(|&v| v as f64).sum();
-        let sum_tol = tol * (outs.0[0].len() as f64).sqrt() * 10.0;
-        if (sum - chk.out0_sum).abs() > sum_tol.max(chk.out0_sum.abs() * 1e-4) {
-            return Err(fail(format!(
-                "out0 sum {} vs expected {}",
-                sum, chk.out0_sum
-            )));
-        }
-        for (i, &want) in chk.out0_first8.iter().enumerate() {
-            let got = outs.0[0][i] as f64;
-            if (got - want).abs() > tol {
-                return Err(fail(format!("out0[{i}] {got} vs expected {want}")));
-            }
-        }
-        for (i, &want) in chk.out1_first4.iter().enumerate() {
-            let got = outs.0[1][i] as f64;
-            if (got - want).abs() > tol {
-                return Err(fail(format!("out1[{i}] {got} vs expected {want}")));
-            }
-        }
-        Ok(())
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use crate::runtime::inputs;
     use std::path::Path;
 
     fn artifacts_present() -> bool {
@@ -303,5 +398,17 @@ mod tests {
         let max = out.primary().iter().cloned().fold(f32::MIN, f32::max);
         assert!(max <= 1.0625 + 1e-5, "max={max}");
         assert_eq!(out.0[1].len(), 4); // per-frame luminance
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructor_reports_feature_off() {
+        let err = Executor::new(None).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "unexpected message: {msg}");
     }
 }

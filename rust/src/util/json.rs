@@ -7,8 +7,6 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use thiserror::Error;
-
 /// A JSON value. Object keys are sorted (BTreeMap) so output is canonical.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -20,23 +18,32 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character '{1}' at byte {0}")]
     Unexpected(usize, char),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing data at byte {0}")]
     Trailing(usize),
-    #[error("missing field '{0}'")]
     MissingField(String),
-    #[error("wrong type for '{0}'")]
     WrongType(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(i) => write!(f, "unexpected end of input at byte {i}"),
+            JsonError::Unexpected(i, c) => write!(f, "unexpected character '{c}' at byte {i}"),
+            JsonError::BadNumber(i) => write!(f, "invalid number at byte {i}"),
+            JsonError::BadEscape(i) => write!(f, "invalid escape at byte {i}"),
+            JsonError::Trailing(i) => write!(f, "trailing data at byte {i}"),
+            JsonError::MissingField(s) => write!(f, "missing field '{s}'"),
+            JsonError::WrongType(s) => write!(f, "wrong type for '{s}'"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {

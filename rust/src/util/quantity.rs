@@ -8,20 +8,27 @@
 use std::fmt;
 use std::str::FromStr;
 
-use thiserror::Error;
-
 /// Errors produced when parsing a resource quantity string.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum QuantityError {
-    #[error("empty quantity")]
     Empty,
-    #[error("invalid number in quantity: {0}")]
     BadNumber(String),
-    #[error("unknown suffix in quantity: {0}")]
     BadSuffix(String),
-    #[error("quantity out of range: {0}")]
     OutOfRange(String),
 }
+
+impl fmt::Display for QuantityError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QuantityError::Empty => write!(f, "empty quantity"),
+            QuantityError::BadNumber(s) => write!(f, "invalid number in quantity: {s}"),
+            QuantityError::BadSuffix(s) => write!(f, "unknown suffix in quantity: {s}"),
+            QuantityError::OutOfRange(s) => write!(f, "quantity out of range: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for QuantityError {}
 
 /// CPU quantity in milliCPU. `MilliCpu(1000)` is one core.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]

@@ -5,13 +5,14 @@
 
 use kinetic::cgroup::cfs::{CfsArbiter, CfsShare};
 use kinetic::cgroup::latency::{LatencyModel, NodeLoad};
+use kinetic::cluster::topology::{NodeShape, Topology};
 use kinetic::coordinator::platform::Simulation;
 use kinetic::knative::autoscaler::Autoscaler;
 use kinetic::knative::config::RevisionConfig;
 use kinetic::policy::Policy;
 use kinetic::simclock::SimTime;
 use kinetic::util::prop::{property, Gen};
-use kinetic::util::quantity::MilliCpu;
+use kinetic::util::quantity::{Memory, MilliCpu, Resources};
 use kinetic::workload::exec::Execution;
 use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
 
@@ -216,6 +217,91 @@ fn prop_autoscaler_bounds() {
         if d.desired < min || d.desired > max {
             return Err(format!("desired {} outside [{min}, {max}]", d.desired));
         }
+        Ok(())
+    });
+}
+
+/// Multi-node capacity safety: across random topologies (uniform and
+/// heterogeneous), random policy/workload mixes and bursty traffic —
+/// which drives scheduling, KPA scale-out, scale-to-zero teardown and
+/// in-place resizes — no node's reserved requests ever exceed its
+/// capacity, and no pod's applied CPU limit ever exceeds the capacity of
+/// the node it runs on. Checked mid-flight and after quiescence.
+#[test]
+fn prop_fleet_never_overcommits_nodes() {
+    property("fleet_never_overcommits_nodes", 12, |g: &mut Gen| {
+        // Random fleet: 1–6 nodes, 2–16 cores and 4–16 GiB each.
+        let n_nodes = g.usize(1, 6);
+        let shapes: Vec<NodeShape> = (0..n_nodes)
+            .map(|i| {
+                NodeShape::new(
+                    &format!("node-{i}"),
+                    Resources::new(
+                        MilliCpu(g.u64(2, 16) * 1000),
+                        Memory::from_gib(g.u64(4, 16)),
+                    ),
+                )
+            })
+            .collect();
+        let topology = Topology::heterogeneous(shapes);
+        let mut sim = Simulation::fleet(topology, g.u64(0, u64::MAX / 2));
+
+        let n_services = g.usize(1, 8);
+        for i in 0..n_services {
+            let policy = *g.choose(&[Policy::Cold, Policy::Warm, Policy::InPlace]);
+            let kind = *g.choose(&[
+                WorkloadKind::HelloWorld,
+                WorkloadKind::Cpu,
+                WorkloadKind::Io,
+            ]);
+            sim.deploy(&format!("fn-{i}"), WorkloadProfile::paper(kind), policy);
+        }
+        sim.run();
+
+        let check = |sim: &Simulation, when: &str| -> Result<(), String> {
+            for node in sim.world.cluster.nodes() {
+                let r = node.reserved();
+                let cap = node.capacity();
+                if !(r.cpu <= cap.cpu && r.memory <= cap.memory) {
+                    return Err(format!(
+                        "{when}: node {:?} over-committed: reserved {:?} > capacity {:?}",
+                        node.id, r, cap
+                    ));
+                }
+            }
+            for pod in sim.world.cluster.pods() {
+                if let Some(node_id) = pod.node {
+                    let cap = sim.world.cluster.node(node_id).capacity().cpu;
+                    if pod.status.applied_cpu_limit > cap {
+                        return Err(format!(
+                            "{when}: pod {:?} applied limit {} exceeds node {:?} capacity {}",
+                            pod.id, pod.status.applied_cpu_limit, node_id, cap
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        };
+        check(&sim, "after deploy")?;
+
+        // Bursty traffic across all services, interleaved with checks.
+        let rounds = g.usize(1, 4);
+        for _ in 0..rounds {
+            let mut at = sim.now();
+            for _ in 0..g.usize(1, 12) {
+                at = at + SimTime::from_millis_f64(g.f64(0.0, 3000.0));
+                let svc = g.usize(0, n_services - 1);
+                sim.submit_at(at, &format!("fn-{svc}"));
+            }
+            sim.run();
+            check(&sim, "after burst")?;
+        }
+
+        // Let trailing parks/teardowns land, then re-check.
+        let deadline = sim.now() + SimTime::from_secs(30);
+        sim.run_until(deadline);
+        sim.run();
+        check(&sim, "after quiescence")?;
         Ok(())
     });
 }
