@@ -1,14 +1,27 @@
 //! Bench: fleet-scale behaviour beyond the paper — per-policy latency on a
-//! 10-node topology and simulator throughput (host wall-clock per simulated
-//! request) as the fleet grows 10 → 100 nodes.
+//! 10-node topology, simulator throughput as the fleet grows 10 → 100
+//! nodes, the routing-policy sweep over a calibrated heterogeneous fleet,
+//! and the incremental-accounting speedup (O(1) counter read vs the
+//! O(total pods) rescan the hot path used to pay per event).
 //!
-//! `cargo bench --bench fleet_scale [-- table|scale|hetero]`
+//! `cargo bench --bench fleet_scale [-- table|scale|hetero|routing|accounting]`
+//!
+//! Set `KINETIC_SMOKE=1` to run every section at minimal size (1 bench
+//! iteration, small fleets, short horizons) — the CI smoke gate that keeps
+//! this bench compiling and running without burning minutes.
 
+use kinetic::cluster::NodeId;
 use kinetic::cluster::topology::Topology;
+use kinetic::coordinator::accounting::RoutingPolicy;
 use kinetic::experiments::fleet::{self, FleetConfig};
 use kinetic::policy::Policy;
 use kinetic::simclock::SimTime;
-use kinetic::util::bench::Runner;
+use kinetic::util::bench::{black_box, Runner};
+use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+fn smoke() -> bool {
+    std::env::var("KINETIC_SMOKE").is_ok()
+}
 
 fn cfg(topology: Topology, seed: u64) -> FleetConfig {
     let services = 2 * topology.len();
@@ -16,8 +29,9 @@ fn cfg(topology: Topology, seed: u64) -> FleetConfig {
         topology,
         services,
         rate_per_service: 0.05,
-        horizon: SimTime::from_secs(120),
+        horizon: SimTime::from_secs(if smoke() { 10 } else { 120 }),
         seed,
+        routing: RoutingPolicy::LeastLoaded,
     }
 }
 
@@ -33,7 +47,8 @@ fn main() {
     runner.section("scale", || {
         // Simulator throughput as the fleet grows: virtual load scales with
         // node count; report host-time per simulated request.
-        for nodes in [10usize, 25, 50, 100] {
+        let sizes: &[usize] = if smoke() { &[10] } else { &[10, 25, 50, 100] };
+        for &nodes in sizes {
             let c = cfg(Topology::uniform_paper(nodes), 7);
             let t0 = std::time::Instant::now();
             let row = fleet::run_policy(&c, Policy::InPlace);
@@ -57,5 +72,71 @@ fn main() {
         for r in &rows {
             assert_eq!(r.failed, 0, "{:?} failed requests on hetero fleet", r.policy);
         }
+    });
+
+    runner.section("routing", || {
+        // Placement-aware routing over the calibrated heterogeneous fleet
+        // (fast large nodes, slow small nodes — the regime where locality
+        // has signal to exploit).
+        let n = if smoke() { 6 } else { 12 };
+        let rows = fleet::routing_sweep(&cfg(Topology::hetero_preset(n), 21));
+        println!("{}", fleet::routing_table(&rows).to_ascii());
+        for r in &rows {
+            assert_eq!(
+                r.failed, 0,
+                "{:?}/{:?} failed requests",
+                r.routing, r.policy
+            );
+        }
+    });
+
+    runner.section("accounting", || {
+        // The incremental-accounting speedup: freeze a loaded fleet
+        // mid-flight, then compare the from-scratch rescan (what
+        // `node_load`/`committed_changed` paid per event before this
+        // subsystem) against the O(1) incremental counter reads.
+        let nodes = if smoke() { 10 } else { 100 };
+        let c = cfg(Topology::uniform_paper(nodes), 13);
+        let mut sim = kinetic::coordinator::platform::Simulation::fleet(c.topology.clone(), 13);
+        for i in 0..c.services {
+            sim.deploy(
+                &format!("fn-{i}"),
+                WorkloadProfile::paper(WorkloadKind::Cpu),
+                Policy::Warm,
+            );
+        }
+        sim.run();
+        // Put every tenant's pod mid-request, then stop between events.
+        let start = sim.now();
+        for i in 0..c.services {
+            sim.submit_at(start + SimTime::from_millis(i as u64), &format!("fn-{i}"));
+        }
+        sim.run_until(start + SimTime::from_secs(1));
+        let tracked = sim.world.fleet.tracked_pods();
+
+        let iters: u32 = if smoke() { 10 } else { 2000 };
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            black_box(sim.world.rescan_accounting());
+        }
+        let rescan_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let t1 = std::time::Instant::now();
+        for _ in 0..iters {
+            black_box(sim.world.fleet.committed_total());
+            black_box(sim.world.fleet.node(NodeId(0)).busy_mcpu);
+        }
+        let incr_ns = t1.elapsed().as_nanos() as f64 / iters as f64;
+        println!(
+            "accounting/{nodes} nodes, {tracked} pods: full rescan {:.0} ns vs \
+             incremental read {:.0} ns  ({:.0}× speedup per event)",
+            rescan_ns,
+            incr_ns,
+            rescan_ns / incr_ns.max(1.0)
+        );
+        // The counters must agree with the rescan on the frozen state.
+        assert!(
+            sim.world.fleet.diff(&sim.world.rescan_accounting()).is_none(),
+            "incremental counters drifted from rescan"
+        );
     });
 }

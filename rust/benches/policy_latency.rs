@@ -5,18 +5,15 @@
 
 use kinetic::experiments::policies::PolicyExperiment;
 use kinetic::experiments::report::{fig5_table, fig6_table, table3_table};
-use kinetic::simclock::SimTime;
 use kinetic::util::bench::Runner;
 use kinetic::util::table::{fmt_ms, fmt_ratio, Table};
 use kinetic::workload::registry::WorkloadProfile;
 
 fn main() {
     let runner = Runner::from_args();
-    let exp = PolicyExperiment {
-        iterations: 8,
-        think: SimTime::from_secs(8),
-        seed: 42,
-    };
+    // iterations 8 / 8 s think / seed 42 / least-loaded routing — the
+    // documented paper-reproduction configuration.
+    let exp = PolicyExperiment::default();
 
     runner.section("table2", || {
         let mut t = Table::new(vec!["Workload", "Runtime (ms)", "sigma (ms)", "Paper (ms)"])

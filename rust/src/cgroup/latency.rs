@@ -71,7 +71,7 @@ impl NodeLoad {
 }
 
 /// Calibration constants (milliseconds). Defaults reproduce §4.1.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LatencyParams {
     /// API-server patch commit + admission.
     pub api_commit_ms: f64,
@@ -117,7 +117,7 @@ impl Default for LatencyParams {
 }
 
 /// The resize latency model.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct LatencyModel {
     pub params: LatencyParams,
 }
@@ -125,6 +125,23 @@ pub struct LatencyModel {
 impl LatencyModel {
     pub fn new(params: LatencyParams) -> LatencyModel {
         LatencyModel { params }
+    }
+
+    /// Every time constant scaled by `factor` (shape parameters — exponents,
+    /// decay constants, the io multiplier — preserved): the per-node resize
+    /// calibration override carried by `NodeShape`.
+    pub fn scaled(&self, factor: f64) -> LatencyModel {
+        LatencyModel {
+            params: LatencyParams {
+                api_commit_ms: self.params.api_commit_ms * factor,
+                sync_mean_ms: self.params.sync_mean_ms * factor,
+                sync_std_ms: self.params.sync_std_ms * factor,
+                poll_cost_ms: self.params.poll_cost_ms * factor,
+                stress_up_ms: self.params.stress_up_ms * factor,
+                stress_down_ms: self.params.stress_down_ms * factor,
+                ..self.params.clone()
+            },
+        }
     }
 
     /// Mean (noise-free) end-to-end resize latency in ms.
@@ -277,6 +294,21 @@ mod tests {
         let m = model();
         let r = m.mean_ms(1, 100, NodeLoad::stress_io()) / m.mean_ms(1, 100, NodeLoad::IDLE);
         assert!((1.0..1.5).contains(&r), "io ratio={r}");
+    }
+
+    /// Per-node calibration: scaling the model scales every mean linearly
+    /// while the shape (exponents, decay, io multiplier) is untouched.
+    #[test]
+    fn scaled_model_scales_means_linearly() {
+        let m = model();
+        let s = m.scaled(2.0);
+        for (cur, tgt) in [(1u64, 1000u64), (1000u64, 1u64), (100, 200)] {
+            let a = m.mean_ms(cur, tgt, NodeLoad::stress_cpu());
+            let b = s.mean_ms(cur, tgt, NodeLoad::stress_cpu());
+            assert!((b - 2.0 * a).abs() < 1e-9, "{cur}->{tgt}: {b} vs 2×{a}");
+        }
+        assert_eq!(s.params.alpha_up, m.params.alpha_up);
+        assert_eq!(s.params.io_mult, m.params.io_mult);
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub enum StartupStage {
 /// Defaults are calibrated so a cached-image Python function lands at
 /// ≈1.4–1.6 s of platform cold start, matching Table 3's helloworld
 /// `Cold/Default = 286.99` against its 5.31 ms runtime.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StartupParams {
     pub schedule_ms: f64,
     pub sandbox_ms: f64,
@@ -60,6 +60,23 @@ impl Default for StartupParams {
             container_start_ms: 240.0,
             readiness_period_ms: 50.0,
             jitter_cv: 0.12,
+        }
+    }
+}
+
+impl StartupParams {
+    /// Every stage mean scaled by `factor` (jitter shape preserved) — the
+    /// per-node calibration override carried by `NodeShape` for
+    /// heterogeneous fleets with genuinely slow/fast machines.
+    pub fn scaled(&self, factor: f64) -> StartupParams {
+        StartupParams {
+            schedule_ms: self.schedule_ms * factor,
+            sandbox_ms: self.sandbox_ms * factor,
+            image_cached_ms: self.image_cached_ms * factor,
+            image_pull_per_100mb_ms: self.image_pull_per_100mb_ms * factor,
+            container_start_ms: self.container_start_ms * factor,
+            readiness_period_ms: self.readiness_period_ms * factor,
+            jitter_cv: self.jitter_cv,
         }
     }
 }

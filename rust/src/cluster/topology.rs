@@ -8,14 +8,32 @@
 //! [`Cluster`]. Node order is placement order — [`NodeId`]s are assigned
 //! ascending, which is what the scheduler's lowest-id tie-break keys on.
 
+use crate::cgroup::latency::LatencyModel;
+use crate::cluster::kubelet::StartupParams;
 use crate::cluster::{Cluster, NodeId};
 use crate::util::quantity::{Memory, MilliCpu, Resources};
 
-/// One node's shape: a name prefix and its capacity.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// One node's shape: a name prefix, its capacity, and optional per-node
+/// calibration overrides over the shared `PlatformParams` — a fleet may mix
+/// genuinely slow and fast machines (different startup pipelines, different
+/// resize propagation) without forking the platform-wide calibration.
+#[derive(Debug, Clone, PartialEq)]
 pub struct NodeShape {
     pub name: String,
     pub capacity: Resources,
+    /// Cold-start pipeline override for this node's kubelet
+    /// (`None` ⇒ the shared `PlatformParams::startup`, possibly scaled by
+    /// [`NodeShape::calibration_scale`]).
+    pub startup: Option<StartupParams>,
+    /// Resize-propagation override for this node's kubelet
+    /// (`None` ⇒ the shared `PlatformParams::resize`, possibly scaled by
+    /// [`NodeShape::calibration_scale`]).
+    pub resize: Option<LatencyModel>,
+    /// Relative speed of this node: both shared pipelines are scaled by
+    /// this factor at platform build time (`> 1` ⇒ slower, `< 1` ⇒ faster).
+    /// Unlike the explicit overrides above, the scale composes with
+    /// whatever `PlatformParams` the platform actually runs.
+    pub calibration_scale: Option<f64>,
 }
 
 impl NodeShape {
@@ -23,6 +41,9 @@ impl NodeShape {
         NodeShape {
             name: name.to_string(),
             capacity,
+            startup: None,
+            resize: None,
+            calibration_scale: None,
         }
     }
 
@@ -30,10 +51,55 @@ impl NodeShape {
     pub fn paper_worker(name: &str) -> NodeShape {
         NodeShape::new(name, Resources::new(MilliCpu(8000), Memory::from_gib(10)))
     }
+
+    /// Overrides this node's cold-start pipeline calibration.
+    pub fn with_startup(mut self, startup: StartupParams) -> NodeShape {
+        self.startup = Some(startup);
+        self
+    }
+
+    /// Overrides this node's resize-propagation calibration.
+    pub fn with_resize(mut self, resize: LatencyModel) -> NodeShape {
+        self.resize = Some(resize);
+        self
+    }
+
+    /// Convenience: both pipelines at `factor` × the platform's shared
+    /// calibration (`factor > 1` ⇒ a slower node, `< 1` ⇒ faster
+    /// hardware). Applied against the actual `PlatformParams` at build
+    /// time, so custom calibrations stay the baseline.
+    pub fn calibrated(mut self, factor: f64) -> NodeShape {
+        self.calibration_scale = Some(factor);
+        self
+    }
+
+    /// The startup pipeline this node's kubelet runs, given the shared
+    /// platform calibration: explicit override > scaled shared > shared.
+    pub fn effective_startup(&self, shared: &StartupParams) -> StartupParams {
+        if let Some(s) = &self.startup {
+            return s.clone();
+        }
+        match self.calibration_scale {
+            Some(f) => shared.scaled(f),
+            None => shared.clone(),
+        }
+    }
+
+    /// The resize-latency model this node's kubelet runs, given the shared
+    /// platform calibration: explicit override > scaled shared > shared.
+    pub fn effective_resize(&self, shared: &LatencyModel) -> LatencyModel {
+        if let Some(m) = &self.resize {
+            return m.clone();
+        }
+        match self.calibration_scale {
+            Some(f) => shared.scaled(f),
+            None => shared.clone(),
+        }
+    }
 }
 
 /// An ordered fleet description.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     nodes: Vec<NodeShape>,
 }
@@ -69,19 +135,28 @@ impl Topology {
 
     /// A mixed pool alternating large (16-core / 32 GiB), paper (8-core /
     /// 10 GB) and small (4-core / 8 GiB) shapes — the heterogeneous preset
-    /// behind `--topology hetero`.
+    /// behind `--topology hetero`. The shapes are genuinely heterogeneous
+    /// in *time* too: large nodes run faster pipelines (0.85× the shared
+    /// startup/resize calibration), small nodes slower ones (1.5×), while
+    /// the paper shape keeps the shared `PlatformParams` unscaled.
     pub fn hetero_preset(n: usize) -> Topology {
         assert!(n > 0, "a topology needs at least one node");
-        let shapes = [
-            Resources::new(MilliCpu(16_000), Memory::from_gib(32)),
-            Resources::new(MilliCpu(8000), Memory::from_gib(10)),
-            Resources::new(MilliCpu(4000), Memory::from_gib(8)),
-        ];
-        Topology {
-            nodes: (0..n)
-                .map(|i| NodeShape::new(&format!("node-{i}"), shapes[i % shapes.len()]))
-                .collect(),
-        }
+        let nodes = (0..n)
+            .map(|i| {
+                let name = format!("node-{i}");
+                match i % 3 {
+                    0 => NodeShape::new(
+                        &name,
+                        Resources::new(MilliCpu(16_000), Memory::from_gib(32)),
+                    )
+                    .calibrated(0.85),
+                    1 => NodeShape::new(&name, Resources::new(MilliCpu(8000), Memory::from_gib(10))),
+                    _ => NodeShape::new(&name, Resources::new(MilliCpu(4000), Memory::from_gib(8)))
+                        .calibrated(1.5),
+                }
+            })
+            .collect();
+        Topology { nodes }
     }
 
     /// Parses a `--topology` CLI value: `paper`, `uniform`, or `hetero`
@@ -182,6 +257,55 @@ mod tests {
         assert_eq!(t.shapes()[1].capacity.cpu, MilliCpu(8000));
         assert_eq!(t.shapes()[2].capacity.cpu, MilliCpu(4000));
         assert_eq!(t.shapes()[3].capacity.cpu, MilliCpu(16_000));
+        // Large nodes are calibrated fast, small slow, paper shape shared.
+        assert_eq!(t.shapes()[0].calibration_scale, Some(0.85));
+        assert_eq!(t.shapes()[1].calibration_scale, None);
+        assert_eq!(t.shapes()[2].calibration_scale, Some(1.5));
+        let shared = StartupParams::default();
+        let fast = t.shapes()[0].effective_startup(&shared);
+        let slow = t.shapes()[2].effective_startup(&shared);
+        assert!(fast.sandbox_ms < shared.sandbox_ms && shared.sandbox_ms < slow.sandbox_ms);
+    }
+
+    #[test]
+    fn paper_topology_carries_no_calibration_overrides() {
+        // The golden reproduction path must keep sharing PlatformParams.
+        for shape in Topology::paper()
+            .shapes()
+            .iter()
+            .chain(Topology::uniform_paper(4).shapes())
+        {
+            assert!(shape.startup.is_none());
+            assert!(shape.resize.is_none());
+            assert!(shape.calibration_scale.is_none());
+            let shared = StartupParams::default();
+            assert_eq!(shape.effective_startup(&shared), shared);
+        }
+    }
+
+    #[test]
+    fn calibration_scales_the_shared_params_not_the_defaults() {
+        let shape = NodeShape::paper_worker("n").calibrated(2.0);
+        // A custom (non-default) platform calibration stays the baseline.
+        let shared = StartupParams {
+            sandbox_ms: 100.0,
+            ..StartupParams::default()
+        };
+        let s = shape.effective_startup(&shared);
+        assert!((s.sandbox_ms - 200.0).abs() < 1e-9);
+        assert!((s.schedule_ms - 2.0 * shared.schedule_ms).abs() < 1e-9);
+        // Jitter shape is preserved, only means scale.
+        assert!((s.jitter_cv - shared.jitter_cv).abs() < 1e-12);
+        let base = LatencyModel::new(crate::cgroup::latency::LatencyParams {
+            sync_mean_ms: 10.0,
+            ..Default::default()
+        });
+        let r = shape.effective_resize(&base);
+        assert!((r.params.sync_mean_ms - 20.0).abs() < 1e-9);
+        assert!((r.params.alpha_down - base.params.alpha_down).abs() < 1e-12);
+        // An explicit override beats the scale.
+        let shape = shape.with_startup(StartupParams::default());
+        assert_eq!(shape.effective_startup(&shared), StartupParams::default());
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! The locality-aware fleet hot path: routing policies and incremental
+//! per-node accounting.
+//!
+//! Before this module, every hot-path consumer of fleet state paid a full
+//! scan: `node_load` walked every pod of every service to find busy CPU on
+//! one node, `committed_changed` re-summed every applied limit on each
+//! resize landing, and the activator's `pick_pod` knew nothing about
+//! placement. On a 100-node fleet that is O(total pods) per *event*.
+//!
+//! [`FleetAccounting`] replaces the scans with counters maintained
+//! incrementally at the five places fleet state actually changes —
+//! dispatch, complete, resize landing, pod up, pod teardown — so every
+//! read is O(1). The differential property test in
+//! `tests/prop_invariants.rs` pins the counters to a from-scratch rescan
+//! ([`Platform::rescan_accounting`]) after randomized event sequences.
+//!
+//! [`RoutingPolicy`] is the knob the activator's scored
+//! [`pick_pod_with`](crate::coordinator::Service::pick_pod_with) reads:
+//! `least-loaded` reproduces Knative's in-flight-count balancing exactly
+//! (the seeded paper metrics are pinned to it), `locality` routes to the
+//! pod on the node with the most free capacity per in-flight request, and
+//! `hybrid` blends pod load, node pressure and resize state.
+
+use crate::cluster::pod::{PodId, PodPhase};
+use crate::cluster::topology::Topology;
+use crate::cluster::NodeId;
+use crate::coordinator::platform::Platform;
+use crate::util::nohash::IdHashMap;
+use crate::util::quantity::MilliCpu;
+
+/// How the activator picks among a service's ready pods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoutingPolicy {
+    /// Knative's stock activator: fewest in-flight requests, lowest pod
+    /// index on ties. The paper-reproduction default — golden metrics are
+    /// pinned under this policy.
+    LeastLoaded,
+    /// Placement-aware: prefer the pod whose node has the lowest pressure
+    /// (in-flight per milliCPU of capacity), then pod load, then pods not
+    /// mid-resize.
+    Locality,
+    /// Weighted blend: pod in-flight dominates, node pressure and resize
+    /// state break near-ties.
+    Hybrid,
+}
+
+impl RoutingPolicy {
+    pub const ALL: [RoutingPolicy; 3] = [
+        RoutingPolicy::LeastLoaded,
+        RoutingPolicy::Locality,
+        RoutingPolicy::Hybrid,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::Locality => "locality",
+            RoutingPolicy::Hybrid => "hybrid",
+        }
+    }
+}
+
+impl std::str::FromStr for RoutingPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "least-loaded" | "leastloaded" | "least_loaded" => Ok(RoutingPolicy::LeastLoaded),
+            "locality" => Ok(RoutingPolicy::Locality),
+            "hybrid" => Ok(RoutingPolicy::Hybrid),
+            other => Err(format!(
+                "unknown routing policy: {other} (expected least-loaded|locality|hybrid)"
+            )),
+        }
+    }
+}
+
+/// Incrementally maintained per-node aggregates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeCounters {
+    /// Requests in flight (active + queued) on pods bound to this node.
+    pub in_flight: u64,
+    /// Σ applied CPU limits of pods currently serving at least one request
+    /// — the `busy` input of the resize-latency model's `NodeLoad`.
+    pub busy_mcpu: MilliCpu,
+    /// Σ applied CPU limits of live (Running, non-terminating) pods.
+    pub committed_mcpu: MilliCpu,
+    /// Static node capacity, captured from the topology at build time.
+    pub capacity_mcpu: MilliCpu,
+}
+
+impl NodeCounters {
+    fn new(capacity: MilliCpu) -> NodeCounters {
+        NodeCounters {
+            in_flight: 0,
+            busy_mcpu: MilliCpu::ZERO,
+            committed_mcpu: MilliCpu::ZERO,
+            capacity_mcpu: capacity,
+        }
+    }
+
+    /// Load pressure for locality scoring: in-flight requests per unit of
+    /// capacity (×10⁶ to stay integral). Bigger nodes absorb more load
+    /// before looking pressured — the heterogeneous-fleet affinity signal.
+    pub fn pressure(&self) -> u64 {
+        self.in_flight
+            .saturating_mul(1_000_000)
+            .checked_div(self.capacity_mcpu.0)
+            .unwrap_or(u64::MAX)
+    }
+}
+
+/// One tracked pod: alive from `pod_up` (readiness) until terminating or
+/// deletion. Terminating pods are dropped immediately — they are idle by
+/// construction and excluded from every aggregate, matching the scans this
+/// subsystem replaced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PodEntry {
+    node: NodeId,
+    applied: MilliCpu,
+    in_flight: u32,
+}
+
+/// O(1) per-event fleet accounting (see module docs).
+#[derive(Debug, Clone)]
+pub struct FleetAccounting {
+    nodes: Vec<NodeCounters>,
+    pods: IdHashMap<PodId, PodEntry>,
+    committed: MilliCpu,
+}
+
+impl FleetAccounting {
+    /// Zeroed counters for every node of `topology`.
+    pub fn for_topology(topology: &Topology) -> FleetAccounting {
+        FleetAccounting {
+            nodes: topology
+                .shapes()
+                .iter()
+                .map(|s| NodeCounters::new(s.capacity.cpu))
+                .collect(),
+            pods: IdHashMap::default(),
+            committed: MilliCpu::ZERO,
+        }
+    }
+
+    pub fn node(&self, id: NodeId) -> &NodeCounters {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn nodes(&self) -> &[NodeCounters] {
+        &self.nodes
+    }
+
+    /// Total committed CPU (Σ applied limits of live pods) — what
+    /// `committed_changed` used to recompute by scanning every service.
+    pub fn committed_total(&self) -> MilliCpu {
+        self.committed
+    }
+
+    /// Number of tracked (live, non-terminating) pods.
+    pub fn tracked_pods(&self) -> usize {
+        self.pods.len()
+    }
+
+    // ------------------------------------------------------------- events
+
+    /// A pod became ready on `node` with `applied` CPU limit in force.
+    pub fn pod_up(&mut self, pod: PodId, node: NodeId, applied: MilliCpu) {
+        self.nodes[node.0 as usize].committed_mcpu += applied;
+        self.committed += applied;
+        self.pods.insert(
+            pod,
+            PodEntry {
+                node,
+                applied,
+                in_flight: 0,
+            },
+        );
+    }
+
+    /// A pod entered termination (scale-to-zero). Terminating pods are idle,
+    /// but fold out any residual load defensively so the counters can never
+    /// drift from the rescan definitions.
+    pub fn pod_terminating(&mut self, pod: PodId) {
+        if let Some(e) = self.pods.remove(&pod) {
+            let n = &mut self.nodes[e.node.0 as usize];
+            n.in_flight = n.in_flight.saturating_sub(e.in_flight as u64);
+            if e.in_flight > 0 {
+                n.busy_mcpu = n.busy_mcpu.saturating_sub(e.applied);
+            }
+            n.committed_mcpu = n.committed_mcpu.saturating_sub(e.applied);
+            self.committed = self.committed.saturating_sub(e.applied);
+        }
+    }
+
+    /// A pod was deleted. No-op when termination already untracked it.
+    pub fn pod_gone(&mut self, pod: PodId) {
+        self.pod_terminating(pod);
+    }
+
+    /// A request was admitted into the pod's queue-proxy (active or queued).
+    pub fn dispatched(&mut self, pod: PodId) {
+        if let Some(e) = self.pods.get_mut(&pod) {
+            e.in_flight += 1;
+            let n = &mut self.nodes[e.node.0 as usize];
+            n.in_flight += 1;
+            if e.in_flight == 1 {
+                n.busy_mcpu += e.applied;
+            }
+        }
+    }
+
+    /// A request left the pod's queue-proxy.
+    pub fn completed(&mut self, pod: PodId) {
+        if let Some(e) = self.pods.get_mut(&pod) {
+            e.in_flight = e.in_flight.saturating_sub(1);
+            let n = &mut self.nodes[e.node.0 as usize];
+            n.in_flight = n.in_flight.saturating_sub(1);
+            if e.in_flight == 0 {
+                n.busy_mcpu = n.busy_mcpu.saturating_sub(e.applied);
+            }
+        }
+    }
+
+    /// An in-place resize landed: the pod's applied limit changed.
+    pub fn resize_landed(&mut self, pod: PodId, new: MilliCpu) {
+        if let Some(e) = self.pods.get_mut(&pod) {
+            let n = &mut self.nodes[e.node.0 as usize];
+            if e.in_flight > 0 {
+                n.busy_mcpu = (n.busy_mcpu + new).saturating_sub(e.applied);
+            }
+            n.committed_mcpu = (n.committed_mcpu + new).saturating_sub(e.applied);
+            self.committed = (self.committed + new).saturating_sub(e.applied);
+            e.applied = new;
+        }
+    }
+
+    // ---------------------------------------------------------- diffing
+
+    fn sorted_pods(&self) -> Vec<(PodId, PodEntry)> {
+        let mut v: Vec<(PodId, PodEntry)> = self.pods.iter().map(|(k, v)| (*k, *v)).collect();
+        v.sort_by_key(|(k, _)| *k);
+        v
+    }
+
+    /// First discrepancy against `oracle` (a from-scratch rescan), or
+    /// `None` when the two agree exactly. Drives the differential test.
+    pub fn diff(&self, oracle: &FleetAccounting) -> Option<String> {
+        if self.committed != oracle.committed {
+            return Some(format!(
+                "committed total: incremental {} vs rescan {}",
+                self.committed, oracle.committed
+            ));
+        }
+        for (i, (a, b)) in self.nodes.iter().zip(&oracle.nodes).enumerate() {
+            if a != b {
+                return Some(format!(
+                    "node {i}: incremental {a:?} vs rescan {b:?}"
+                ));
+            }
+        }
+        let (a, b) = (self.sorted_pods(), oracle.sorted_pods());
+        if a != b {
+            for (x, y) in a.iter().zip(&b) {
+                if x != y {
+                    return Some(format!("pod entry: incremental {x:?} vs rescan {y:?}"));
+                }
+            }
+            return Some(format!(
+                "tracked pod sets differ: incremental {} pods vs rescan {}",
+                a.len(),
+                b.len()
+            ));
+        }
+        None
+    }
+}
+
+impl PartialEq for FleetAccounting {
+    fn eq(&self, other: &FleetAccounting) -> bool {
+        self.diff(other).is_none()
+    }
+}
+
+impl Platform {
+    /// From-scratch recomputation of the fleet counters — the O(total pods)
+    /// scan the incremental path replaced. Kept as the test oracle and for
+    /// the `fleet_scale` bench's speedup report.
+    pub fn rescan_accounting(&self) -> FleetAccounting {
+        let mut acct = FleetAccounting::for_topology(&self.topology);
+        for svc in self.services.values() {
+            for sp in &svc.pods {
+                if sp.terminating {
+                    continue;
+                }
+                let Some(node) = sp.node else { continue };
+                let Some(pod) = self.cluster.pod(sp.pod) else { continue };
+                if pod.status.phase != PodPhase::Running {
+                    continue;
+                }
+                let applied = pod.status.applied_cpu_limit;
+                let in_flight = sp.proxy.in_flight() as u32;
+                let n = &mut acct.nodes[node.0 as usize];
+                n.in_flight += in_flight as u64;
+                if in_flight > 0 {
+                    n.busy_mcpu += applied;
+                }
+                n.committed_mcpu += applied;
+                acct.committed += applied;
+                acct.pods.insert(
+                    sp.pod,
+                    PodEntry {
+                        node,
+                        applied,
+                        in_flight,
+                    },
+                );
+            }
+        }
+        acct
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acct2() -> FleetAccounting {
+        FleetAccounting::for_topology(&Topology::uniform_paper(2))
+    }
+
+    #[test]
+    fn pod_lifecycle_updates_counters() {
+        let mut a = acct2();
+        a.pod_up(PodId(1), NodeId(0), MilliCpu(1000));
+        assert_eq!(a.committed_total(), MilliCpu(1000));
+        assert_eq!(a.node(NodeId(0)).committed_mcpu, MilliCpu(1000));
+        assert_eq!(a.node(NodeId(0)).busy_mcpu, MilliCpu::ZERO);
+
+        a.dispatched(PodId(1));
+        assert_eq!(a.node(NodeId(0)).in_flight, 1);
+        assert_eq!(a.node(NodeId(0)).busy_mcpu, MilliCpu(1000));
+        // Second request on the same pod does not double-count busy CPU.
+        a.dispatched(PodId(1));
+        assert_eq!(a.node(NodeId(0)).in_flight, 2);
+        assert_eq!(a.node(NodeId(0)).busy_mcpu, MilliCpu(1000));
+
+        a.completed(PodId(1));
+        a.completed(PodId(1));
+        assert_eq!(a.node(NodeId(0)).in_flight, 0);
+        assert_eq!(a.node(NodeId(0)).busy_mcpu, MilliCpu::ZERO);
+
+        a.pod_terminating(PodId(1));
+        assert_eq!(a.committed_total(), MilliCpu::ZERO);
+        assert_eq!(a.tracked_pods(), 0);
+        // Deletion after termination is a no-op.
+        a.pod_gone(PodId(1));
+        assert_eq!(a.committed_total(), MilliCpu::ZERO);
+    }
+
+    #[test]
+    fn resize_landing_moves_committed_and_busy() {
+        let mut a = acct2();
+        a.pod_up(PodId(3), NodeId(1), MilliCpu(1000));
+        // Park while idle: committed follows, busy stays zero.
+        a.resize_landed(PodId(3), MilliCpu(1));
+        assert_eq!(a.committed_total(), MilliCpu(1));
+        assert_eq!(a.node(NodeId(1)).busy_mcpu, MilliCpu::ZERO);
+        // Serve: dispatch at parked allocation, then the scale-up lands.
+        a.dispatched(PodId(3));
+        assert_eq!(a.node(NodeId(1)).busy_mcpu, MilliCpu(1));
+        a.resize_landed(PodId(3), MilliCpu(1000));
+        assert_eq!(a.node(NodeId(1)).busy_mcpu, MilliCpu(1000));
+        assert_eq!(a.committed_total(), MilliCpu(1000));
+    }
+
+    #[test]
+    fn pressure_normalizes_by_capacity() {
+        let mut a = FleetAccounting::for_topology(&Topology::hetero_preset(2));
+        // Node 0 is the 16-core shape, node 1 the 8-core paper shape.
+        a.pod_up(PodId(1), NodeId(0), MilliCpu(1000));
+        a.pod_up(PodId(2), NodeId(1), MilliCpu(1000));
+        a.dispatched(PodId(1));
+        a.dispatched(PodId(2));
+        assert!(a.node(NodeId(0)).pressure() < a.node(NodeId(1)).pressure());
+    }
+
+    #[test]
+    fn diff_reports_first_mismatch() {
+        let mut a = acct2();
+        let b = acct2();
+        assert_eq!(a.diff(&b), None);
+        assert_eq!(a, b);
+        a.pod_up(PodId(1), NodeId(0), MilliCpu(7));
+        let d = a.diff(&b).expect("must differ");
+        assert!(d.contains("committed"), "{d}");
+    }
+
+    #[test]
+    fn routing_policy_parses() {
+        assert_eq!(
+            "least-loaded".parse::<RoutingPolicy>().unwrap(),
+            RoutingPolicy::LeastLoaded
+        );
+        assert_eq!(
+            "LOCALITY".parse::<RoutingPolicy>().unwrap(),
+            RoutingPolicy::Locality
+        );
+        assert_eq!("hybrid".parse::<RoutingPolicy>().unwrap(), RoutingPolicy::Hybrid);
+        assert!("random".parse::<RoutingPolicy>().is_err());
+        assert_eq!(RoutingPolicy::ALL.len(), 3);
+        assert_eq!(RoutingPolicy::Locality.name(), "locality");
+    }
+}

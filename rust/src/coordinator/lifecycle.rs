@@ -103,7 +103,10 @@ impl Platform {
             sp.ready = true;
             sp.node = Some(node_id);
             svc.pods.push(sp);
+            svc.ready_count += 1;
         }
+        let applied = w.applied_limit(pod_id).unwrap_or(MilliCpu::ZERO);
+        w.fleet.pod_up(pod_id, node_id, applied);
         Self::committed_changed(w, eng);
         Self::drain_activator(w, eng, svc_name);
 
@@ -177,16 +180,19 @@ impl Platform {
             let svc = w.services.get_mut(svc_name).unwrap();
             let idx = svc.pod_index(pod_id).unwrap();
             svc.pods[idx].terminating = true;
+            svc.ready_count = svc.ready_count.saturating_sub(1);
         }
         if let Some(pod) = w.cluster.pod_mut(pod_id) {
             pod.status.phase = PodPhase::Terminating;
             pod.status.ready = false;
         }
+        w.fleet.pod_terminating(pod_id);
         Self::committed_changed(w, eng);
         let term = w.kubelets[node_id.0 as usize].termination_time(&mut w.rng);
         let name = svc_name.to_string();
         eng.schedule_in(term, move |w: &mut Platform, _eng| {
             w.cluster.delete_pod(pod_id);
+            w.fleet.pod_gone(pod_id);
             w.metrics.pods_deleted += 1;
             if let Some(svc) = w.services.get_mut(&name) {
                 if let Some(idx) = svc.pod_index(pod_id) {
@@ -200,8 +206,11 @@ impl Platform {
     pub(crate) fn maybe_scale_up(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
         let (desired, live) = {
             let Some(svc) = w.services.get(svc_name) else { return };
-            let d = svc.autoscaler.decide(eng.now(), svc.ready_pods() as u32);
-            (d.desired, svc.live_pods() as u32)
+            // `ready_count` mirrors `ready_pods()` incrementally (pinned by
+            // the differential property test), and `ready_count + starting`
+            // mirrors `live_pods()` — no pod scan on this path.
+            let d = svc.autoscaler.decide(eng.now(), svc.ready_count);
+            (d.desired, svc.ready_count + svc.starting)
         };
         for _ in live..desired {
             Self::start_pod(w, eng, svc_name, true);

@@ -12,6 +12,7 @@
 //! `resize` the in-place patch hooks, `sim` the engine+world harness — all
 //! contributing `impl Platform` blocks to the one coordinator type.
 
+pub mod accounting;
 pub mod metrics;
 pub mod platform;
 pub mod request;
@@ -22,6 +23,7 @@ mod lifecycle;
 mod resize;
 mod routing;
 
+pub use accounting::{FleetAccounting, NodeCounters, RoutingPolicy};
 pub use metrics::{CommittedCpuIntegral, Metrics, ServiceMetrics};
 pub use platform::{Eng, Platform};
 pub use request::RequestState;

@@ -25,15 +25,18 @@ use crate::util::nohash::IdHashMap;
 
 use crate::apiserver::{ApiServer, FeatureGates};
 use crate::cluster::kubelet::Kubelet;
+use crate::cluster::pod::PodId;
 use crate::cluster::scheduler::Scheduler;
 use crate::cluster::topology::Topology;
 use crate::cluster::{Cluster, NodeId};
+use crate::coordinator::accounting::{FleetAccounting, RoutingPolicy};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::RequestState;
 use crate::coordinator::service::Service;
 use crate::knative::activator::RequestId;
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::{Engine, SimTime};
+use crate::util::quantity::MilliCpu;
 use crate::util::rng::Rng;
 use crate::workload::registry::WorkloadProfile;
 
@@ -54,6 +57,12 @@ pub struct Platform {
     pub(crate) kubelets: Vec<Kubelet>,
     pub scheduler: Scheduler,
     pub params: PlatformParams,
+    /// Activator pod-selection policy (default: Knative's least-loaded).
+    pub routing: RoutingPolicy,
+    /// Incremental per-node busy/committed/in-flight counters — the O(1)
+    /// fleet state behind `node_load`, `committed_changed` and the
+    /// placement-aware routing scores.
+    pub fleet: FleetAccounting,
     pub services: BTreeMap<String, Service>,
     pub(crate) requests: IdHashMap<RequestId, RequestState>,
     pub(crate) next_request: u64,
@@ -79,9 +88,21 @@ impl Platform {
     /// stream, byte-identical seeded metrics).
     pub fn with_topology(topology: Topology, params: PlatformParams) -> Platform {
         let cluster = topology.build();
-        let kubelets: Vec<Kubelet> = (0..topology.len())
-            .map(|_| Kubelet::new(params.startup.clone(), params.resize.clone()))
+        // Per-node calibration: a NodeShape may override or scale the
+        // shared startup/resize pipelines (heterogeneous fleets with
+        // slow/fast nodes); shapes without either share `PlatformParams`
+        // as before.
+        let kubelets: Vec<Kubelet> = topology
+            .shapes()
+            .iter()
+            .map(|shape| {
+                Kubelet::new(
+                    shape.effective_startup(&params.startup),
+                    shape.effective_resize(&params.resize),
+                )
+            })
             .collect();
+        let fleet = FleetAccounting::for_topology(&topology);
         let rng = Rng::new(params.seed);
         Platform {
             cluster,
@@ -90,6 +111,8 @@ impl Platform {
             kubelets,
             scheduler: Scheduler::default(),
             params,
+            routing: RoutingPolicy::LeastLoaded,
+            fleet,
             services: BTreeMap::new(),
             requests: IdHashMap::default(),
             next_request: 1,
@@ -174,6 +197,13 @@ impl Platform {
 
     pub fn request(&self, id: RequestId) -> Option<&RequestState> {
         self.requests.get(&id)
+    }
+
+    /// CPU limit currently in force for `pod`, if the pod still exists —
+    /// the single definition of "applied" the hot path and the fleet
+    /// counters share.
+    pub fn applied_limit(&self, pod: PodId) -> Option<MilliCpu> {
+        self.cluster.pod(pod).map(|p| p.status.applied_cpu_limit)
     }
 
     pub fn in_flight(&self) -> usize {

@@ -3,7 +3,7 @@
 //! node-load accounting the latency model feeds on.
 
 use crate::apiserver::ResizePatch;
-use crate::cluster::pod::{PodId, PodPhase};
+use crate::cluster::pod::PodId;
 use crate::cluster::NodeId;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::simclock::SimTime;
@@ -43,10 +43,7 @@ impl Platform {
                 None => return,
             }
         };
-        let applied = match w.cluster.pod(pod_id) {
-            Some(p) => p.status.applied_cpu_limit,
-            None => return,
-        };
+        let Some(applied) = w.applied_limit(pod_id) else { return };
         if applied == target && w.cluster.pod(pod_id).unwrap().status.resize.is_none() {
             // Already there.
             let svc = w.services.get_mut(svc_name).unwrap();
@@ -137,6 +134,11 @@ impl Platform {
             .node_mut(node_id)
             .apply_cpu_limit(pod_id, target, now);
         let _ = w.api.mark_done(&mut w.cluster, pod_id, target, now);
+        // Mirror whatever limit is actually in force (mark_done may reject
+        // pathological state transitions), so the counters track the
+        // cluster, not the intent.
+        let applied = w.applied_limit(pod_id).unwrap_or(target);
+        w.fleet.resize_landed(pod_id, applied);
         Self::committed_changed(w, eng);
         Self::recompute_pod(w, eng, svc_name, pod_id);
         // A newer desire may have raced in (up while down was landing).
@@ -156,37 +158,39 @@ impl Platform {
     }
 
     /// Node load for the latency model: stressors + busy serving capacity.
+    /// O(1): reads the incrementally maintained per-node busy counter
+    /// instead of rescanning every pod of every service per resize patch.
+    /// Debug builds cross-check the counter against the placement-filtered
+    /// scan (`Service::pods_on`) it replaced — a drift tripwire on the very
+    /// path whose RNG draws the golden metrics are pinned to.
     pub(crate) fn node_load(w: &Platform, node: NodeId) -> crate::cgroup::latency::NodeLoad {
-        let mut busy = MilliCpu::ZERO;
-        for svc in w.services.values() {
-            // `ServicePod.node` mirrors the bind target, so off-node pods
-            // are skipped without a cluster lookup.
-            for sp in svc.pods_on(node) {
-                if sp.proxy.active_count() > 0 {
-                    if let Some(pod) = w.cluster.pod(sp.pod) {
-                        busy += pod.status.applied_cpu_limit;
+        let busy = w.fleet.node(node).busy_mcpu;
+        #[cfg(debug_assertions)]
+        {
+            let mut scan = MilliCpu::ZERO;
+            for svc in w.services.values() {
+                for sp in svc.pods_on(node) {
+                    if sp.proxy.active_count() > 0 {
+                        if let Some(pod) = w.cluster.pod(sp.pod) {
+                            scan += pod.status.applied_cpu_limit;
+                        }
                     }
                 }
             }
+            debug_assert_eq!(
+                scan, busy,
+                "incremental busy counter drifted from pods_on scan for {node:?}"
+            );
         }
         w.cluster.node(node).load_with_busy(busy)
     }
 
-    /// Recomputes the committed-CPU metric (Σ applied limits of live pods).
+    /// Updates the committed-CPU metric (Σ applied limits of live pods).
+    /// O(1): the total is maintained incrementally on pod up/teardown and
+    /// resize landings instead of re-summed over the whole fleet here.
     pub(crate) fn committed_changed(w: &mut Platform, eng: &mut Eng) {
-        let mut total = MilliCpu::ZERO;
-        for svc in w.services.values() {
-            for sp in &svc.pods {
-                if sp.terminating {
-                    continue;
-                }
-                if let Some(pod) = w.cluster.pod(sp.pod) {
-                    if pod.status.phase == PodPhase::Running {
-                        total += pod.status.applied_cpu_limit;
-                    }
-                }
-            }
-        }
-        w.metrics.committed_cpu.update(eng.now(), total);
+        w.metrics
+            .committed_cpu
+            .update(eng.now(), w.fleet.committed_total());
     }
 }

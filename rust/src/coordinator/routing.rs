@@ -27,17 +27,24 @@ impl Platform {
             Some(r) => r.service.clone(),
             None => return,
         };
-        let Some(svc) = w.services.get_mut(&*svc_name) else {
+        // Placement-aware selection: the scored pick reads the per-node
+        // counters, so the service borrow must be shared here.
+        let Some(pick) = w
+            .services
+            .get(&*svc_name)
+            .map(|svc| svc.pick_pod_with(w.routing, &w.fleet))
+        else {
             // Unknown service: fail fast.
             Self::fail_request(w, eng, req);
             return;
         };
 
-        if let Some(idx) = svc.pick_pod() {
+        if let Some(idx) = pick {
             Self::dispatch(w, eng, &svc_name, req, idx);
         } else {
             // Buffer at the activator; start a pod if none is coming up.
             let now = eng.now();
+            let svc = w.services.get_mut(&*svc_name).unwrap();
             if svc.activator.buffer(req, now).is_err() {
                 Self::fail_request(w, eng, req);
                 return;
@@ -73,19 +80,18 @@ impl Platform {
         req: RequestId,
         idx: usize,
     ) {
-        let (pod_id, hooks, serving, applied) = {
+        let (pod_id, hooks, serving) = {
             let svc = w.services.get_mut(svc_name).unwrap();
             let serving = svc.cfg.serving_cpu;
             let sp = &mut svc.pods[idx];
             sp.proxy.offer(req);
             let pod_id = sp.pod;
-            let applied = w
-                .cluster
-                .pod(pod_id)
-                .map(|p| p.status.applied_cpu_limit)
-                .unwrap_or(MilliCpu::ZERO);
-            (pod_id, sp.proxy.inplace_hooks, serving, applied)
+            let hooks = sp.proxy.inplace_hooks;
+            svc.in_flight_pods += 1;
+            (pod_id, hooks, serving)
         };
+        w.fleet.dispatched(pod_id);
+        let applied = w.applied_limit(pod_id).unwrap_or(MilliCpu::ZERO);
         if let Some(r) = w.requests.get_mut(&req) {
             r.pod = Some(pod_id);
         }
@@ -215,8 +221,12 @@ impl Platform {
         let promoted = {
             let Some(svc) = w.services.get_mut(&*svc_name) else { return };
             let Some(idx) = svc.pod_index(pod_id) else { return };
+            // Net one request leaves the pod whether or not a queued one is
+            // promoted into the freed slot.
+            svc.in_flight_pods = svc.in_flight_pods.saturating_sub(1);
             svc.pods[idx].proxy.complete(req)
         };
+        w.fleet.completed(pod_id);
         if let Some(next) = promoted {
             Self::begin_exec(w, eng, &svc_name, next, pod_id);
         } else {
@@ -232,10 +242,11 @@ impl Platform {
     /// Dispatches as many buffered requests as capacity allows, failing
     /// timed-out entries as they surface.
     pub(crate) fn drain_activator(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        let policy = w.routing;
         loop {
             let (next, dead) = {
                 let Some(svc) = w.services.get_mut(svc_name) else { return };
-                if svc.pick_pod().is_none() {
+                if svc.pick_pod_with(policy, &w.fleet).is_none() {
                     return;
                 }
                 let (mut out, dead) = svc.activator.drain(1, eng.now());
@@ -250,7 +261,11 @@ impl Platform {
             let Some(b) = next else { return };
             // Re-pick after failing dead entries: their completion hooks may
             // have mutated pod state.
-            let Some(idx) = w.services.get(svc_name).and_then(|s| s.pick_pod()) else {
+            let Some(idx) = w
+                .services
+                .get(svc_name)
+                .and_then(|s| s.pick_pod_with(policy, &w.fleet))
+            else {
                 // Capacity vanished under us (a hook claimed it): re-buffer
                 // the request with its original enqueue time. If even the
                 // buffer is full now, the request must fail — it was already
@@ -275,20 +290,21 @@ impl Platform {
     pub(crate) fn record_concurrency(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
         let now = eng.now();
         let overloaded = if let Some(svc) = w.services.get_mut(svc_name) {
-            // One pass over the pod list for concurrency + readiness.
-            let mut in_flight = svc.activator.len();
-            let mut ready = 0usize;
-            for p in &svc.pods {
-                in_flight += p.proxy.in_flight();
-                if p.ready && !p.terminating {
-                    ready += 1;
-                }
-            }
+            // O(1): the per-service counters maintained on dispatch/complete
+            // and pod ready/terminating transitions replace the former
+            // per-tick scan over every pod. `kpa_signal_matches_scan` (in
+            // tests/integration_platform.rs) pins the recorded signal to the
+            // scan it replaced.
+            let in_flight = svc.activator.len() + svc.in_flight_pods as usize;
+            let ready = svc.ready_count as usize;
             svc.autoscaler.record(now, in_flight as u32);
             // Level-triggered KPA: consider scale-out whenever observed
             // concurrency exceeds what the current fleet targets — skipped
             // entirely for the common single-pod-capped revision.
-            (svc.live_pods() as u32) < svc.cfg.max_scale
+            // `ready_count + starting` equals `live_pods()`: pods join the
+            // list ready, so the non-terminating ones are exactly the
+            // ready ones — no pod scan on this path either.
+            (svc.ready_count + svc.starting) < svc.cfg.max_scale
                 && in_flight as f64 > svc.cfg.target_concurrency * ready.max(1) as f64
         } else {
             false

@@ -2,6 +2,7 @@
 
 use crate::cluster::pod::PodId;
 use crate::cluster::NodeId;
+use crate::coordinator::accounting::{FleetAccounting, RoutingPolicy};
 use crate::knative::activator::{Activator, RequestId};
 use crate::knative::autoscaler::Autoscaler;
 use crate::knative::config::RevisionConfig;
@@ -58,6 +59,12 @@ pub struct Service {
     pub pods: Vec<ServicePod>,
     /// Pods whose startup pipeline is still running.
     pub starting: u32,
+    /// Σ `proxy.in_flight()` over `pods`, maintained on dispatch/complete —
+    /// the KPA concurrency signal without the per-tick pod scan.
+    pub in_flight_pods: u32,
+    /// Count of ready, non-terminating pods, maintained on pod
+    /// ready/terminating transitions.
+    pub ready_count: u32,
 }
 
 impl Service {
@@ -81,19 +88,60 @@ impl Service {
             activator: Activator::default(),
             pods: Vec::new(),
             starting: 0,
+            in_flight_pods: 0,
+            ready_count: 0,
         }
     }
 
-    /// Ready pod with a free concurrency slot, preferring the least loaded
-    /// (knative's activator load-balances by in-flight count).
-    pub fn pick_pod(&self) -> Option<usize> {
+    /// Ready pods with a free concurrency slot — the candidate set every
+    /// routing policy draws from (concurrency limits are enforced here, so
+    /// no score can override them).
+    fn candidates(&self) -> impl Iterator<Item = (usize, &ServicePod)> {
         self.pods
             .iter()
             .enumerate()
             .filter(|(_, p)| p.ready && !p.terminating)
             .filter(|(_, p)| (p.proxy.active_count() as u32) < self.cfg.concurrency_limit())
+    }
+
+    /// Ready pod with a free concurrency slot, preferring the least loaded
+    /// (knative's activator load-balances by in-flight count). Ties break
+    /// to the lowest pod index — `min_by_key` keeps the first minimum.
+    pub fn pick_pod(&self) -> Option<usize> {
+        self.candidates()
             .min_by_key(|(_, p)| p.proxy.in_flight())
             .map(|(i, _)| i)
+    }
+
+    /// Scored, placement-aware pod selection. `LeastLoaded` reproduces
+    /// [`Service::pick_pod`] bit-for-bit (the golden paper metrics are
+    /// pinned to it); `Locality` and `Hybrid` additionally weigh the
+    /// per-node pressure from [`FleetAccounting`] and the pod's resize
+    /// state. All policies are deterministic: lowest index wins ties.
+    pub fn pick_pod_with(&self, policy: RoutingPolicy, fleet: &FleetAccounting) -> Option<usize> {
+        match policy {
+            RoutingPolicy::LeastLoaded => self.pick_pod(),
+            RoutingPolicy::Locality => self
+                .candidates()
+                .min_by_key(|(i, p)| {
+                    (
+                        node_pressure(fleet, p),
+                        p.proxy.in_flight(),
+                        resize_penalty(p),
+                        *i,
+                    )
+                })
+                .map(|(i, _)| i),
+            RoutingPolicy::Hybrid => self
+                .candidates()
+                .min_by_key(|(i, p)| {
+                    let score = p.proxy.in_flight() as u64 * 1000
+                        + node_pressure(fleet, p) / 4
+                        + resize_penalty(p) * 500;
+                    (score, *i)
+                })
+                .map(|(i, _)| i),
+        }
     }
 
     /// Any live (ready or starting-up, non-terminating) pod exists?
@@ -140,6 +188,17 @@ impl Service {
     }
 }
 
+/// Pressure of the node hosting `p` (unplaced pods sort last).
+fn node_pressure(fleet: &FleetAccounting, p: &ServicePod) -> u64 {
+    p.node.map(|n| fleet.node(n).pressure()).unwrap_or(u64::MAX)
+}
+
+/// Pods with a resize pending or retrying score worse: a request routed
+/// there queues behind the kubelet's per-pod resize serialization.
+fn resize_penalty(p: &ServicePod) -> u64 {
+    u64::from(p.desired_limit.is_some() || p.retry_pending)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +242,111 @@ mod tests {
         assert_eq!(s.pick_pod(), None);
         assert_eq!(s.ready_pods(), 0);
         assert_eq!(s.live_pods(), 1);
+    }
+
+    fn fleet2() -> FleetAccounting {
+        FleetAccounting::for_topology(&crate::cluster::topology::Topology::uniform_paper(2))
+    }
+
+    /// Two ready pods at equal load on nodes 0/1; node 0 carries foreign
+    /// traffic. Locality must pick the pod on the quiet node, while
+    /// least-loaded (index tie-break) keeps picking pod 0.
+    #[test]
+    fn locality_beats_remote_at_equal_load() {
+        let mut s = svc(Policy::Warm);
+        s.pods.push(ServicePod::new(PodId(0), 10, false));
+        s.pods.push(ServicePod::new(PodId(1), 10, false));
+        s.pods[0].ready = true;
+        s.pods[0].node = Some(NodeId(0));
+        s.pods[1].ready = true;
+        s.pods[1].node = Some(NodeId(1));
+
+        let mut fleet = fleet2();
+        fleet.pod_up(PodId(99), NodeId(0), MilliCpu(1000));
+        fleet.dispatched(PodId(99)); // foreign load on node 0
+
+        assert_eq!(s.pick_pod_with(RoutingPolicy::LeastLoaded, &fleet), Some(0));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::Locality, &fleet), Some(1));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::Hybrid, &fleet), Some(1));
+    }
+
+    /// Concurrency limits bound every policy: a full pod on the preferred
+    /// node is skipped no matter how good its locality score is.
+    #[test]
+    fn scored_pick_respects_concurrency_limit() {
+        let mut s = svc(Policy::Warm);
+        s.cfg.container_concurrency = 1;
+        s.pods.push(ServicePod::new(PodId(0), 1, false));
+        s.pods.push(ServicePod::new(PodId(1), 1, false));
+        s.pods[0].ready = true;
+        s.pods[0].node = Some(NodeId(1)); // quiet node, but pod is full
+        s.pods[1].ready = true;
+        s.pods[1].node = Some(NodeId(0));
+        s.pods[0].proxy.offer(RequestId(1));
+
+        let mut fleet = fleet2();
+        fleet.pod_up(PodId(99), NodeId(0), MilliCpu(1000));
+        fleet.dispatched(PodId(99));
+
+        for policy in RoutingPolicy::ALL {
+            assert_eq!(s.pick_pod_with(policy, &fleet), Some(1), "{policy:?}");
+        }
+        s.pods[1].proxy.offer(RequestId(2));
+        for policy in RoutingPolicy::ALL {
+            assert_eq!(s.pick_pod_with(policy, &fleet), None, "{policy:?}");
+        }
+    }
+
+    /// Identical pods on identical nodes: every policy deterministically
+    /// breaks the tie to the lowest index.
+    #[test]
+    fn scored_pick_tie_breaks_to_lowest_index() {
+        let mut s = svc(Policy::Warm);
+        for i in 0..3 {
+            s.pods.push(ServicePod::new(PodId(i), 10, false));
+            s.pods[i as usize].ready = true;
+            s.pods[i as usize].node = Some(NodeId((i % 2) as u32));
+        }
+        let fleet = fleet2();
+        for policy in RoutingPolicy::ALL {
+            assert_eq!(s.pick_pod_with(policy, &fleet), Some(0), "{policy:?}");
+        }
+    }
+
+    /// A pending resize (park in flight / retry scheduled) demotes a pod
+    /// under the placement-aware policies.
+    #[test]
+    fn resize_state_demotes_pod() {
+        let mut s = svc(Policy::InPlace);
+        s.pods.push(ServicePod::new(PodId(0), 10, true));
+        s.pods.push(ServicePod::new(PodId(1), 10, true));
+        s.pods[0].ready = true;
+        s.pods[0].node = Some(NodeId(0));
+        s.pods[0].desired_limit = Some(MilliCpu(1)); // park dispatched
+        s.pods[1].ready = true;
+        s.pods[1].node = Some(NodeId(0));
+        let fleet = fleet2();
+        assert_eq!(s.pick_pod_with(RoutingPolicy::LeastLoaded, &fleet), Some(0));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::Locality, &fleet), Some(1));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::Hybrid, &fleet), Some(1));
+    }
+
+    #[test]
+    fn pods_on_filters_by_node() {
+        let mut s = svc(Policy::Warm);
+        s.pods.push(ServicePod::new(PodId(0), 10, false));
+        s.pods.push(ServicePod::new(PodId(1), 10, false));
+        s.pods.push(ServicePod::new(PodId(2), 10, false));
+        s.pods[0].node = Some(NodeId(0));
+        s.pods[1].node = Some(NodeId(1));
+        s.pods[2].node = Some(NodeId(0));
+        assert_eq!(s.pods_on(NodeId(0)).count(), 2);
+        assert_eq!(s.pods_on(NodeId(1)).count(), 1);
+        assert_eq!(s.pods_on(NodeId(7)).count(), 0);
+        // Terminating pods are excluded.
+        s.pods[2].terminating = true;
+        assert_eq!(s.pods_on(NodeId(0)).count(), 1);
+        assert_eq!(s.pods_on(NodeId(0)).next().unwrap().pod, PodId(0));
     }
 
     #[test]

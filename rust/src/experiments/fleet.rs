@@ -11,6 +11,7 @@
 //! latency table as Table 3, but aggregated over the whole fleet.
 
 use crate::cluster::topology::Topology;
+use crate::coordinator::accounting::RoutingPolicy;
 use crate::coordinator::service::Service;
 use crate::coordinator::sim::Simulation;
 use crate::loadgen::arrival::Arrival;
@@ -43,6 +44,8 @@ pub struct FleetConfig {
     /// Virtual-time horizon of the arrival stream.
     pub horizon: SimTime,
     pub seed: u64,
+    /// Activator pod-selection policy threaded into the platform.
+    pub routing: RoutingPolicy,
 }
 
 impl FleetConfig {
@@ -55,6 +58,7 @@ impl FleetConfig {
             rate_per_service: 0.05,
             horizon: SimTime::from_secs(300),
             seed,
+            routing: RoutingPolicy::LeastLoaded,
         }
     }
 }
@@ -63,6 +67,7 @@ impl FleetConfig {
 #[derive(Debug, Clone)]
 pub struct FleetRow {
     pub policy: Policy,
+    pub routing: RoutingPolicy,
     pub nodes: usize,
     pub services: usize,
     pub completed: u64,
@@ -84,6 +89,7 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
         cfg.topology.clone(),
         PlatformParams::with_seed(cfg.seed),
     );
+    sim.world.routing = cfg.routing;
     for i in 0..cfg.services {
         let kind = FLEET_MIX[i % FLEET_MIX.len()];
         let mut rc = policy.revision_config();
@@ -132,6 +138,7 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
     }
     FleetRow {
         policy,
+        routing: cfg.routing,
         nodes: cfg.topology.len(),
         services: cfg.services,
         completed,
@@ -151,13 +158,26 @@ pub fn run_all(cfg: &FleetConfig) -> Vec<FleetRow> {
     Policy::ALL.iter().map(|&p| run_policy(cfg, p)).collect()
 }
 
-/// Renders the per-policy fleet latency table.
-pub fn fleet_table(rows: &[FleetRow]) -> Table {
-    let (nodes, services) = rows
-        .first()
-        .map(|r| (r.nodes, r.services))
-        .unwrap_or((0, 0));
-    let mut t = Table::new(vec![
+/// Every routing policy × every §3 policy over one fleet — the
+/// placement-aware sweep, typically over `Topology::hetero_preset` so the
+/// per-node calibration overrides (fast large nodes, slow small nodes)
+/// give locality something real to exploit.
+pub fn routing_sweep(cfg: &FleetConfig) -> Vec<FleetRow> {
+    RoutingPolicy::ALL
+        .iter()
+        .flat_map(|&routing| {
+            let mut c = cfg.clone();
+            c.routing = routing;
+            run_all(&c)
+        })
+        .collect()
+}
+
+/// One table builder for both renderings, so the two CLI views can never
+/// drift in schema: the routing sweep is the same table with a leading
+/// `Routing` column.
+fn table_with(rows: &[FleetRow], title: String, with_routing: bool) -> Table {
+    let mut headers = vec![
         "Policy",
         "Completed",
         "Failed",
@@ -167,12 +187,13 @@ pub fn fleet_table(rows: &[FleetRow]) -> Table {
         "Cold starts",
         "Committed (mCPU)",
         "Pods created",
-    ])
-    .title(format!(
-        "Fleet: per-policy latency over {nodes} nodes / {services} services (mixed workloads)"
-    ));
+    ];
+    if with_routing {
+        headers.insert(0, "Routing");
+    }
+    let mut t = Table::new(headers).title(title);
     for r in rows {
-        t.row(vec![
+        let mut cells = vec![
             r.policy.name().to_string(),
             r.completed.to_string(),
             r.failed.to_string(),
@@ -182,9 +203,39 @@ pub fn fleet_table(rows: &[FleetRow]) -> Table {
             r.cold_starts.to_string(),
             format!("{:.0}", r.avg_committed_mcpu),
             r.pods_created.to_string(),
-        ]);
+        ];
+        if with_routing {
+            cells.insert(0, r.routing.name().to_string());
+        }
+        t.row(cells);
     }
     t
+}
+
+fn fleet_dims(rows: &[FleetRow]) -> (usize, usize) {
+    rows.first().map(|r| (r.nodes, r.services)).unwrap_or((0, 0))
+}
+
+/// Renders the per-policy fleet latency table.
+pub fn fleet_table(rows: &[FleetRow]) -> Table {
+    let (nodes, services) = fleet_dims(rows);
+    table_with(
+        rows,
+        format!(
+            "Fleet: per-policy latency over {nodes} nodes / {services} services (mixed workloads)"
+        ),
+        false,
+    )
+}
+
+/// Renders the routing-sweep table (routing policy × §3 policy).
+pub fn routing_table(rows: &[FleetRow]) -> Table {
+    let (nodes, services) = fleet_dims(rows);
+    table_with(
+        rows,
+        format!("Fleet routing sweep over {nodes} nodes / {services} services"),
+        true,
+    )
 }
 
 #[cfg(test)]
@@ -198,6 +249,7 @@ mod tests {
             rate_per_service: 0.1,
             horizon: SimTime::from_secs(60),
             seed: 11,
+            routing: RoutingPolicy::LeastLoaded,
         }
     }
 
@@ -252,10 +304,77 @@ mod tests {
             rate_per_service: 0.1,
             horizon: SimTime::from_secs(30),
             seed: 5,
+            routing: RoutingPolicy::LeastLoaded,
         };
         let r = run_policy(&cfg, Policy::Warm);
         assert_eq!(r.failed, 0);
         assert!(r.completed > 0);
+    }
+
+    /// The routing sweep over a calibrated heterogeneous fleet: every
+    /// routing policy completes the identical arrival stream without
+    /// failures, and results are deterministic per (routing, seed).
+    #[test]
+    fn routing_sweep_over_calibrated_hetero_fleet() {
+        let cfg = FleetConfig {
+            topology: Topology::hetero_preset(6),
+            services: 12,
+            rate_per_service: 0.1,
+            horizon: SimTime::from_secs(30),
+            seed: 5,
+            routing: RoutingPolicy::LeastLoaded,
+        };
+        let rows = routing_sweep(&cfg);
+        assert_eq!(rows.len(), 9, "3 routing × 3 §3 policies");
+        for r in &rows {
+            assert_eq!(r.failed, 0, "{:?}/{:?} failed", r.routing, r.policy);
+            assert!(r.completed > 0, "{:?}/{:?}", r.routing, r.policy);
+        }
+        // Same arrival stream ⇒ same completion count under every routing.
+        for chunk in rows.chunks(3).skip(1) {
+            for (a, b) in chunk.iter().zip(&rows[0..3]) {
+                assert_eq!(a.policy, b.policy);
+                assert_eq!(
+                    a.completed, b.completed,
+                    "{:?} vs {:?}",
+                    a.routing, b.routing
+                );
+            }
+        }
+        let t = routing_table(&rows);
+        assert_eq!(t.n_rows(), 9);
+        let ascii = t.to_ascii();
+        assert!(ascii.contains("locality"), "{ascii}");
+        assert!(ascii.contains("hybrid"), "{ascii}");
+    }
+
+    /// Single-node paper topology, warm pods (no resize state): the scored
+    /// policies degenerate to least-loaded bit-for-bit — one node means no
+    /// placement signal and warm pods carry no resize penalty, so every
+    /// score ordering collapses to (in-flight, index). The paper
+    /// reproduction cannot drift under a routing flag.
+    #[test]
+    fn routing_policies_agree_on_paper_topology() {
+        let base = FleetConfig {
+            topology: Topology::paper(),
+            services: 3,
+            rate_per_service: 0.2,
+            horizon: SimTime::from_secs(30),
+            seed: 17,
+            routing: RoutingPolicy::LeastLoaded,
+        };
+        let want = run_policy(&base, Policy::Warm);
+        for routing in [RoutingPolicy::Locality, RoutingPolicy::Hybrid] {
+            let mut cfg = base.clone();
+            cfg.routing = routing;
+            let got = run_policy(&cfg, Policy::Warm);
+            assert_eq!(got.completed, want.completed, "{routing:?}");
+            assert_eq!(
+                got.mean_ms.to_bits(),
+                want.mean_ms.to_bits(),
+                "{routing:?} drifted the paper topology"
+            );
+        }
     }
 
     #[test]

@@ -7,10 +7,11 @@
 //! workloads under each policy, normalized by the *Default* baseline
 //! (direct function execution at 1 CPU, no platform in front).
 
+use crate::coordinator::accounting::RoutingPolicy;
+use crate::coordinator::platform::Simulation;
 use crate::loadgen::runner::{Runner, Scenario};
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::SimTime;
-use crate::coordinator::platform::Simulation;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::registry::{WorkloadKind, WorkloadProfile};
@@ -44,6 +45,10 @@ pub struct PolicyExperiment {
     /// Think time between iterations (> stable window forces cold starts).
     pub think: SimTime,
     pub seed: u64,
+    /// Activator routing policy (the golden paper table is pinned under
+    /// the default `LeastLoaded`; single-node single-VU cells are
+    /// routing-invariant, which `tests/golden_paper.rs` asserts).
+    pub routing: RoutingPolicy,
 }
 
 impl Default for PolicyExperiment {
@@ -52,6 +57,7 @@ impl Default for PolicyExperiment {
             iterations: 8,
             think: SimTime::from_secs(8),
             seed: 42,
+            routing: RoutingPolicy::LeastLoaded,
         }
     }
 }
@@ -91,6 +97,7 @@ impl PolicyExperiment {
         let mut sim = Simulation::with_params(PlatformParams::with_seed(
             self.seed ^ cell_hash(kind, policy),
         ));
+        sim.world.routing = self.routing;
         sim.deploy("fn", WorkloadProfile::paper(kind), policy);
         sim.run(); // bring up min-scale pods / let them park
         let scenario =
@@ -154,6 +161,7 @@ mod tests {
             iterations: 4,
             think: SimTime::from_secs(8),
             seed: 9,
+            routing: RoutingPolicy::LeastLoaded,
         }
     }
 

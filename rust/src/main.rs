@@ -8,6 +8,7 @@
 //! * `selfcheck`  — validate the AOT artifacts against the manifest oracle
 
 use kinetic::cluster::topology::Topology;
+use kinetic::coordinator::accounting::RoutingPolicy;
 use kinetic::coordinator::platform::Simulation;
 use kinetic::experiments::ablation;
 use kinetic::experiments::fleet::{self, FleetConfig};
@@ -44,6 +45,11 @@ fn app() -> App {
             Command::new("fleet", "run the three §3 policies over a multi-node fleet")
                 .opt("nodes", "node count for uniform/hetero topologies", "10")
                 .opt("topology", "paper|uniform|hetero", "uniform")
+                .opt(
+                    "routing",
+                    "activator pod selection: least-loaded|locality|hybrid, or 'all' to sweep",
+                    "least-loaded",
+                )
                 .opt("services", "deployed tenants (0 = 2 per node)", "0")
                 .opt("rate", "Poisson requests/second per tenant", "0.05")
                 .opt("seconds", "arrival-stream horizon (virtual seconds)", "300")
@@ -118,6 +124,7 @@ fn run_exp(id: &str, reps: u32, seed: u64, out: &str) {
             iterations: reps.clamp(3, 16),
             think: SimTime::from_secs(8),
             seed,
+            ..PolicyExperiment::default()
         };
         if want("t2") {
             let mut t = Table::new(vec!["Workload", "Runtime (ms)", "σ (ms)", "Paper (ms)"])
@@ -249,6 +256,7 @@ fn run_exp(id: &str, reps: u32, seed: u64, out: &str) {
 fn run_fleet(
     nodes: usize,
     topology_spec: &str,
+    routing_spec: &str,
     services: usize,
     rate: f64,
     seconds: u64,
@@ -261,15 +269,28 @@ fn run_fleet(
             std::process::exit(2);
         }
     };
+    let sweep_routing = routing_spec.eq_ignore_ascii_case("all");
+    let routing = if sweep_routing {
+        RoutingPolicy::LeastLoaded
+    } else {
+        match routing_spec.parse::<RoutingPolicy>() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
     let services = if services == 0 {
         (2 * topology.len()).max(1)
     } else {
         services
     };
     println!(
-        "fleet: {} nodes ({} mCPU total), {services} tenants, {rate} rps each over {seconds}s",
+        "fleet: {} nodes ({} mCPU total), {services} tenants, {rate} rps each over {seconds}s, routing {}",
         topology.len(),
         topology.total_capacity().cpu.0,
+        if sweep_routing { "sweep" } else { routing.name() },
     );
     let cfg = FleetConfig {
         topology,
@@ -277,7 +298,13 @@ fn run_fleet(
         rate_per_service: rate,
         horizon: SimTime::from_secs(seconds),
         seed,
+        routing,
     };
+    if sweep_routing {
+        let rows = fleet::routing_sweep(&cfg);
+        println!("{}", fleet::routing_table(&rows).to_ascii());
+        return;
+    }
     let rows = fleet::run_all(&cfg);
     println!("{}", fleet::fleet_table(&rows).to_ascii());
     let warm = rows.iter().find(|r| r.policy == Policy::Warm);
@@ -392,6 +419,7 @@ fn main() {
         "fleet" => run_fleet(
             inv.get_u64("nodes", 10) as usize,
             inv.get_or("topology", "uniform"),
+            inv.get_or("routing", "least-loaded"),
             inv.get_u64("services", 0) as usize,
             inv.get_f64("rate", 0.05),
             inv.get_u64("seconds", 300),

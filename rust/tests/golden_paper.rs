@@ -1,0 +1,138 @@
+//! Golden regression pinning the `Topology::paper()` seeded end-to-end
+//! metrics — the per-policy latency cells behind Table 3
+//! (`experiments/policies.rs`) — to *exact* bit-level values, so hot-path
+//! refactors (routing scores, incremental accounting, calibration
+//! plumbing) cannot silently drift the paper reproduction.
+//!
+//! Workflow: the first run on a machine writes
+//! `tests/golden/paper_policy_metrics.json` (bless-on-absence) and every
+//! later run compares bit-for-bit. Commit the blessed file so CI pins the
+//! values across refactors; after an *intentional* calibration change,
+//! re-bless with `KINETIC_BLESS=1 cargo test --test golden_paper`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use kinetic::coordinator::accounting::RoutingPolicy;
+use kinetic::experiments::policies::PolicyExperiment;
+use kinetic::policy::Policy;
+use kinetic::simclock::SimTime;
+use kinetic::util::json::Json;
+use kinetic::workload::registry::WorkloadKind;
+
+/// Small/medium/large workloads cover the paper's latency regimes without
+/// simulating the multi-minute video cells.
+const KINDS: [WorkloadKind; 3] = [WorkloadKind::HelloWorld, WorkloadKind::Cpu, WorkloadKind::Io];
+
+fn experiment(routing: RoutingPolicy) -> PolicyExperiment {
+    PolicyExperiment {
+        iterations: 4,
+        think: SimTime::from_secs(8),
+        seed: 9,
+        routing,
+    }
+}
+
+/// Every (workload, §3 policy) mean latency as exact f64 bits.
+fn fingerprint(routing: RoutingPolicy) -> Vec<(String, u64)> {
+    let exp = experiment(routing);
+    let mut cells = Vec::new();
+    for kind in KINDS {
+        for policy in Policy::ALL {
+            let ms = exp.measure_cell(kind, policy);
+            cells.push((format!("{}/{}", kind.name(), policy.name()), ms.to_bits()));
+        }
+    }
+    cells
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/paper_policy_metrics.json")
+}
+
+fn write_golden(path: &Path, cells: &[(String, u64)]) {
+    let obj = Json::obj(
+        cells
+            .iter()
+            .map(|(k, bits)| (k.as_str(), Json::from(format!("0x{bits:016x}"))))
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("seed", 9u64.into()),
+        ("iterations", 4u64.into()),
+        ("routing", "least-loaded".into()),
+        ("cells", obj),
+    ]);
+    fs::create_dir_all(path.parent().unwrap()).expect("create tests/golden");
+    fs::write(path, doc.to_string_pretty()).expect("write golden file");
+}
+
+#[test]
+fn golden_paper_policy_metrics_pinned() {
+    let cells = fingerprint(RoutingPolicy::LeastLoaded);
+    let path = golden_path();
+    if std::env::var("KINETIC_BLESS").is_ok() {
+        write_golden(&path, &cells);
+        eprintln!(
+            "golden_paper: blessed {} ({} cells) — commit it to pin the paper metrics",
+            path.display(),
+            cells.len()
+        );
+        return;
+    }
+    if !path.exists() {
+        // Bless-on-absence keeps plain `cargo test` green on fresh
+        // checkouts; the CI golden-gate step sets KINETIC_GOLDEN_REQUIRED
+        // for its comparison run so an absent fixture can never make that
+        // gate silently vacuous.
+        assert!(
+            std::env::var("KINETIC_GOLDEN_REQUIRED").is_err(),
+            "golden file {} missing but required — bless it with \
+             KINETIC_BLESS=1 cargo test --test golden_paper and commit it",
+            path.display()
+        );
+        write_golden(&path, &cells);
+        eprintln!(
+            "golden_paper: blessed {} ({} cells) — commit it to pin the paper metrics",
+            path.display(),
+            cells.len()
+        );
+        return;
+    }
+    let txt = fs::read_to_string(&path).expect("read golden file");
+    let doc = Json::parse(&txt).expect("golden file parses");
+    assert_eq!(doc.req_u64("seed").unwrap(), 9, "golden seed changed");
+    let golden = doc.get("cells").expect("golden has cells");
+    for (name, bits) in &cells {
+        let want_hex = golden
+            .get(name)
+            .and_then(|v| v.as_str())
+            .unwrap_or_else(|| panic!("golden file missing cell {name}; re-bless with KINETIC_BLESS=1"));
+        let want = u64::from_str_radix(want_hex.trim_start_matches("0x"), 16)
+            .unwrap_or_else(|_| panic!("golden cell {name} is not hex bits: {want_hex}"));
+        assert_eq!(
+            *bits,
+            want,
+            "golden drift in {name}: got {} ms, golden {} ms — a hot-path change \
+             altered the seeded paper reproduction; if intentional, re-bless with \
+             KINETIC_BLESS=1 cargo test --test golden_paper",
+            f64::from_bits(*bits),
+            f64::from_bits(want)
+        );
+    }
+}
+
+/// The single-node, single-VU paper cells are routing-invariant: with one
+/// candidate pod every scored policy must collapse to the same choice, so
+/// the `--routing` knob can never perturb the paper reproduction.
+#[test]
+fn paper_metrics_identical_under_all_routing_policies() {
+    let base = fingerprint(RoutingPolicy::LeastLoaded);
+    for routing in [RoutingPolicy::Locality, RoutingPolicy::Hybrid] {
+        let got = fingerprint(routing);
+        assert_eq!(
+            base, got,
+            "{routing:?} drifted the Topology::paper() seeded metrics"
+        );
+    }
+}

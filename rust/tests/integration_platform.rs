@@ -18,6 +18,44 @@ fn sim(policy: Policy, kind: WorkloadKind, seed: u64) -> Simulation {
     sim
 }
 
+/// `record_concurrency` now feeds the KPA autoscaler from the O(1)
+/// per-service counters instead of rescanning every pod per tick. The
+/// counter-based signal (`activator.len() + in_flight_pods`) must equal
+/// the scan it replaced (`total_in_flight`) at *every* event boundary of a
+/// bursty run — so the recorded autoscaler samples are unchanged.
+#[test]
+fn kpa_signal_matches_scan() {
+    for policy in [Policy::Cold, Policy::Warm, Policy::InPlace] {
+        let mut s = Simulation::with_params(PlatformParams::with_seed(29));
+        s.deploy("fn", WorkloadProfile::paper(WorkloadKind::Cpu), policy);
+        s.run();
+        // Overlapping submissions drive queuing, activator buffering, KPA
+        // scale-out and (in-place) resize churn.
+        let mut at = s.now();
+        for i in 0..12u64 {
+            at = at + SimTime::from_millis(250 * (i % 4));
+            s.submit_at(at, "fn");
+        }
+        let mut checked = 0u64;
+        loop {
+            let svc = &s.world.services["fn"];
+            let fast = svc.activator.len() + svc.in_flight_pods as usize;
+            assert_eq!(
+                fast,
+                svc.total_in_flight(),
+                "{policy:?}: counter signal diverged from scan at {:?}",
+                s.now()
+            );
+            checked += 1;
+            if s.engine.step(&mut s.world).is_none() {
+                break;
+            }
+        }
+        assert!(checked > 50, "{policy:?}: only {checked} event boundaries");
+        assert_eq!(s.world.metrics.service("fn").failed, 0);
+    }
+}
+
 #[test]
 fn paper_phase_diagram_cold_path() {
     // §3 Figure 1(A): request arrives after shutdown → full restart.

@@ -6,6 +6,7 @@
 use kinetic::cgroup::cfs::{CfsArbiter, CfsShare};
 use kinetic::cgroup::latency::{LatencyModel, NodeLoad};
 use kinetic::cluster::topology::{NodeShape, Topology};
+use kinetic::coordinator::accounting::RoutingPolicy;
 use kinetic::coordinator::platform::Simulation;
 use kinetic::knative::autoscaler::Autoscaler;
 use kinetic::knative::config::RevisionConfig;
@@ -298,6 +299,93 @@ fn prop_fleet_never_overcommits_nodes() {
         }
 
         // Let trailing parks/teardowns land, then re-check.
+        let deadline = sim.now() + SimTime::from_secs(30);
+        sim.run_until(deadline);
+        sim.run();
+        check(&sim, "after quiescence")?;
+        Ok(())
+    });
+}
+
+/// Differential oracle for the incremental fleet accounting: after every
+/// randomized event sequence — deploys, bursts, partial drains (checked
+/// *mid-flight*, with requests still in pods), full drains and
+/// scale-to-zero teardowns, over 10–100-node uniform and calibrated
+/// heterogeneous topologies under every routing policy — the incrementally
+/// maintained per-node busy/committed/in-flight counters and the
+/// per-service KPA counters must exactly equal a from-scratch rescan.
+#[test]
+fn prop_fleet_accounting_matches_rescan() {
+    property("fleet_accounting_matches_rescan", 110, |g: &mut Gen| {
+        let nodes = g.usize(10, 100);
+        let topology = if g.bool() {
+            Topology::uniform_paper(nodes)
+        } else {
+            Topology::hetero_preset(nodes)
+        };
+        let mut sim = Simulation::fleet(topology, g.u64(0, u64::MAX / 2));
+        sim.world.routing = *g.choose(&RoutingPolicy::ALL);
+
+        let check = |sim: &Simulation, when: &str| -> Result<(), String> {
+            let oracle = sim.world.rescan_accounting();
+            if let Some(d) = sim.world.fleet.diff(&oracle) {
+                return Err(format!("{when}: {d}"));
+            }
+            for (name, svc) in &sim.world.services {
+                let scan: usize = svc.pods.iter().map(|p| p.proxy.in_flight()).sum();
+                if svc.in_flight_pods as usize != scan {
+                    return Err(format!(
+                        "{when}: {name} in_flight_pods {} != scanned {scan}",
+                        svc.in_flight_pods
+                    ));
+                }
+                let ready = svc
+                    .pods
+                    .iter()
+                    .filter(|p| p.ready && !p.terminating)
+                    .count();
+                if svc.ready_count as usize != ready {
+                    return Err(format!(
+                        "{when}: {name} ready_count {} != scanned {ready}",
+                        svc.ready_count
+                    ));
+                }
+            }
+            Ok(())
+        };
+
+        let n_services = g.usize(2, 8);
+        for i in 0..n_services {
+            let policy = *g.choose(&[Policy::Cold, Policy::Warm, Policy::InPlace]);
+            let kind = *g.choose(&[
+                WorkloadKind::HelloWorld,
+                WorkloadKind::Cpu,
+                WorkloadKind::Io,
+            ]);
+            sim.deploy(&format!("fn-{i}"), WorkloadProfile::paper(kind), policy);
+        }
+        sim.run();
+        check(&sim, "after deploy")?;
+
+        let rounds = g.usize(1, 3);
+        for round in 0..rounds {
+            let mut at = sim.now();
+            for _ in 0..g.usize(1, 16) {
+                at = at + SimTime::from_millis_f64(g.f64(0.0, 4000.0));
+                let svc = g.usize(0, n_services - 1);
+                sim.submit_at(at, &format!("fn-{svc}"));
+            }
+            // Stop mid-flight (requests active inside pods, resizes and
+            // startups pending) — the regime where incremental counters
+            // could plausibly drift from the scans they replaced.
+            let mid = sim.now() + SimTime::from_millis_f64(g.f64(5.0, 2500.0));
+            sim.run_until(mid);
+            check(&sim, &format!("mid-flight round {round}"))?;
+            sim.run();
+            check(&sim, &format!("drained round {round}"))?;
+        }
+
+        // Let scale-to-zero teardowns land, then re-check.
         let deadline = sim.now() + SimTime::from_secs(30);
         sim.run_until(deadline);
         sim.run();
