@@ -12,7 +12,6 @@
 
 use kinetic::cluster::NodeId;
 use kinetic::cluster::topology::Topology;
-use kinetic::coordinator::accounting::RoutingPolicy;
 use kinetic::experiments::fleet::{self, FleetConfig};
 use kinetic::policy::Policy;
 use kinetic::simclock::SimTime;
@@ -24,14 +23,9 @@ fn smoke() -> bool {
 }
 
 fn cfg(topology: Topology, seed: u64) -> FleetConfig {
-    let services = 2 * topology.len();
     FleetConfig {
-        topology,
-        services,
-        rate_per_service: 0.05,
         horizon: SimTime::from_secs(if smoke() { 10 } else { 120 }),
-        seed,
-        routing: RoutingPolicy::LeastLoaded,
+        ..FleetConfig::base(topology, seed)
     }
 }
 

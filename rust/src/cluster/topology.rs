@@ -159,19 +159,6 @@ impl Topology {
         Topology { nodes }
     }
 
-    /// Parses a `--topology` CLI value: `paper`, `uniform`, or `hetero`
-    /// (`nodes` sizes the latter two).
-    pub fn from_cli(spec: &str, nodes: usize) -> Result<Topology, String> {
-        match spec.to_ascii_lowercase().as_str() {
-            "paper" => Ok(Topology::paper()),
-            "uniform" => Ok(Topology::uniform_paper(nodes.max(1))),
-            "hetero" | "heterogeneous" => Ok(Topology::hetero_preset(nodes.max(1))),
-            other => Err(format!(
-                "unknown topology: {other} (expected paper|uniform|hetero)"
-            )),
-        }
-    }
-
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
@@ -306,13 +293,5 @@ mod tests {
         // An explicit override beats the scale.
         let shape = shape.with_startup(StartupParams::default());
         assert_eq!(shape.effective_startup(&shared), StartupParams::default());
-    }
-
-    #[test]
-    fn cli_parsing() {
-        assert_eq!(Topology::from_cli("paper", 99).unwrap(), Topology::paper());
-        assert_eq!(Topology::from_cli("uniform", 10).unwrap().len(), 10);
-        assert_eq!(Topology::from_cli("hetero", 5).unwrap().len(), 5);
-        assert!(Topology::from_cli("ring", 3).is_err());
     }
 }

@@ -75,6 +75,31 @@ impl std::str::FromStr for RoutingPolicy {
     }
 }
 
+/// The [`RoutingPolicy::Hybrid`] blend weights — scenario-tunable so the
+/// routing-saturation sweep can search the weight space instead of
+/// recompiling. Score (lower wins):
+/// `in_flight × in_flight_w + node_pressure / pressure_div + resize × resize_w`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HybridWeights {
+    /// Weight on the pod's own in-flight count (dominant term).
+    pub in_flight: u64,
+    /// Divisor applied to the node-pressure signal (smaller ⇒ stronger).
+    pub pressure_div: u64,
+    /// Penalty added while a resize is pending/retrying on the pod.
+    pub resize: u64,
+}
+
+impl Default for HybridWeights {
+    /// The constants the hybrid score shipped with — the golden baseline.
+    fn default() -> HybridWeights {
+        HybridWeights {
+            in_flight: 1000,
+            pressure_div: 4,
+            resize: 500,
+        }
+    }
+}
+
 /// Incrementally maintained per-node aggregates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NodeCounters {

@@ -29,7 +29,7 @@ use crate::cluster::pod::PodId;
 use crate::cluster::scheduler::Scheduler;
 use crate::cluster::topology::Topology;
 use crate::cluster::{Cluster, NodeId};
-use crate::coordinator::accounting::{FleetAccounting, RoutingPolicy};
+use crate::coordinator::accounting::{FleetAccounting, HybridWeights, RoutingPolicy};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::RequestState;
 use crate::coordinator::service::Service;
@@ -59,6 +59,9 @@ pub struct Platform {
     pub params: PlatformParams,
     /// Activator pod-selection policy (default: Knative's least-loaded).
     pub routing: RoutingPolicy,
+    /// Blend weights for [`RoutingPolicy::Hybrid`] — scenario-tunable; the
+    /// default reproduces the original hard-wired score.
+    pub hybrid_weights: HybridWeights,
     /// Incremental per-node busy/committed/in-flight counters — the O(1)
     /// fleet state behind `node_load`, `committed_changed` and the
     /// placement-aware routing scores.
@@ -112,6 +115,7 @@ impl Platform {
             scheduler: Scheduler::default(),
             params,
             routing: RoutingPolicy::LeastLoaded,
+            hybrid_weights: HybridWeights::default(),
             fleet,
             services: BTreeMap::new(),
             requests: IdHashMap::default(),

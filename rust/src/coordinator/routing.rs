@@ -32,7 +32,7 @@ impl Platform {
         let Some(pick) = w
             .services
             .get(&*svc_name)
-            .map(|svc| svc.pick_pod_with(w.routing, &w.fleet))
+            .map(|svc| svc.pick_pod_with(w.routing, &w.fleet, w.hybrid_weights))
         else {
             // Unknown service: fail fast.
             Self::fail_request(w, eng, req);
@@ -243,10 +243,11 @@ impl Platform {
     /// timed-out entries as they surface.
     pub(crate) fn drain_activator(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
         let policy = w.routing;
+        let weights = w.hybrid_weights;
         loop {
             let (next, dead) = {
                 let Some(svc) = w.services.get_mut(svc_name) else { return };
-                if svc.pick_pod_with(policy, &w.fleet).is_none() {
+                if svc.pick_pod_with(policy, &w.fleet, weights).is_none() {
                     return;
                 }
                 let (mut out, dead) = svc.activator.drain(1, eng.now());
@@ -264,7 +265,7 @@ impl Platform {
             let Some(idx) = w
                 .services
                 .get(svc_name)
-                .and_then(|s| s.pick_pod_with(policy, &w.fleet))
+                .and_then(|s| s.pick_pod_with(policy, &w.fleet, weights))
             else {
                 // Capacity vanished under us (a hook claimed it): re-buffer
                 // the request with its original enqueue time. If even the

@@ -2,7 +2,7 @@
 
 use crate::cluster::pod::PodId;
 use crate::cluster::NodeId;
-use crate::coordinator::accounting::{FleetAccounting, RoutingPolicy};
+use crate::coordinator::accounting::{FleetAccounting, HybridWeights, RoutingPolicy};
 use crate::knative::activator::{Activator, RequestId};
 use crate::knative::autoscaler::Autoscaler;
 use crate::knative::config::RevisionConfig;
@@ -117,8 +117,14 @@ impl Service {
     /// [`Service::pick_pod`] bit-for-bit (the golden paper metrics are
     /// pinned to it); `Locality` and `Hybrid` additionally weigh the
     /// per-node pressure from [`FleetAccounting`] and the pod's resize
-    /// state. All policies are deterministic: lowest index wins ties.
-    pub fn pick_pod_with(&self, policy: RoutingPolicy, fleet: &FleetAccounting) -> Option<usize> {
+    /// state — the hybrid blend under scenario-tunable [`HybridWeights`].
+    /// All policies are deterministic: lowest index wins ties.
+    pub fn pick_pod_with(
+        &self,
+        policy: RoutingPolicy,
+        fleet: &FleetAccounting,
+        weights: HybridWeights,
+    ) -> Option<usize> {
         match policy {
             RoutingPolicy::LeastLoaded => self.pick_pod(),
             RoutingPolicy::Locality => self
@@ -135,9 +141,9 @@ impl Service {
             RoutingPolicy::Hybrid => self
                 .candidates()
                 .min_by_key(|(i, p)| {
-                    let score = p.proxy.in_flight() as u64 * 1000
-                        + node_pressure(fleet, p) / 4
-                        + resize_penalty(p) * 500;
+                    let score = p.proxy.in_flight() as u64 * weights.in_flight
+                        + node_pressure(fleet, p) / weights.pressure_div.max(1)
+                        + resize_penalty(p) * weights.resize;
                     (score, *i)
                 })
                 .map(|(i, _)| i),
@@ -265,9 +271,9 @@ mod tests {
         fleet.pod_up(PodId(99), NodeId(0), MilliCpu(1000));
         fleet.dispatched(PodId(99)); // foreign load on node 0
 
-        assert_eq!(s.pick_pod_with(RoutingPolicy::LeastLoaded, &fleet), Some(0));
-        assert_eq!(s.pick_pod_with(RoutingPolicy::Locality, &fleet), Some(1));
-        assert_eq!(s.pick_pod_with(RoutingPolicy::Hybrid, &fleet), Some(1));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::LeastLoaded, &fleet, HybridWeights::default()), Some(0));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::Locality, &fleet, HybridWeights::default()), Some(1));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::Hybrid, &fleet, HybridWeights::default()), Some(1));
     }
 
     /// Concurrency limits bound every policy: a full pod on the preferred
@@ -289,11 +295,11 @@ mod tests {
         fleet.dispatched(PodId(99));
 
         for policy in RoutingPolicy::ALL {
-            assert_eq!(s.pick_pod_with(policy, &fleet), Some(1), "{policy:?}");
+            assert_eq!(s.pick_pod_with(policy, &fleet, HybridWeights::default()), Some(1), "{policy:?}");
         }
         s.pods[1].proxy.offer(RequestId(2));
         for policy in RoutingPolicy::ALL {
-            assert_eq!(s.pick_pod_with(policy, &fleet), None, "{policy:?}");
+            assert_eq!(s.pick_pod_with(policy, &fleet, HybridWeights::default()), None, "{policy:?}");
         }
     }
 
@@ -309,7 +315,7 @@ mod tests {
         }
         let fleet = fleet2();
         for policy in RoutingPolicy::ALL {
-            assert_eq!(s.pick_pod_with(policy, &fleet), Some(0), "{policy:?}");
+            assert_eq!(s.pick_pod_with(policy, &fleet, HybridWeights::default()), Some(0), "{policy:?}");
         }
     }
 
@@ -326,9 +332,47 @@ mod tests {
         s.pods[1].ready = true;
         s.pods[1].node = Some(NodeId(0));
         let fleet = fleet2();
-        assert_eq!(s.pick_pod_with(RoutingPolicy::LeastLoaded, &fleet), Some(0));
-        assert_eq!(s.pick_pod_with(RoutingPolicy::Locality, &fleet), Some(1));
-        assert_eq!(s.pick_pod_with(RoutingPolicy::Hybrid, &fleet), Some(1));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::LeastLoaded, &fleet, HybridWeights::default()), Some(0));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::Locality, &fleet, HybridWeights::default()), Some(1));
+        assert_eq!(s.pick_pod_with(RoutingPolicy::Hybrid, &fleet, HybridWeights::default()), Some(1));
+    }
+
+    /// Tuned weights genuinely reshape the hybrid blend: pod 0 carries one
+    /// extra request but sits on the quiet node. With the stock weights the
+    /// in-flight term dominates (1000 > pressure), so hybrid routes to the
+    /// idle pod 1 on the pressured node; weighting node pressure strongly
+    /// (pressure_div 1, in_flight 1) flips the pick back to pod 0.
+    #[test]
+    fn hybrid_weights_reshape_the_blend() {
+        let mut s = svc(Policy::Warm);
+        s.pods.push(ServicePod::new(PodId(0), 10, false));
+        s.pods.push(ServicePod::new(PodId(1), 10, false));
+        s.pods[0].ready = true;
+        s.pods[0].node = Some(NodeId(0));
+        s.pods[0].proxy.offer(RequestId(7));
+        s.pods[1].ready = true;
+        s.pods[1].node = Some(NodeId(1));
+
+        let mut fleet = fleet2();
+        fleet.pod_up(PodId(99), NodeId(1), MilliCpu(1000));
+        for r in 0..3 {
+            let _ = r;
+            fleet.dispatched(PodId(99)); // heavy foreign load on node 1
+        }
+
+        assert_eq!(
+            s.pick_pod_with(RoutingPolicy::Hybrid, &fleet, HybridWeights::default()),
+            Some(1)
+        );
+        let node_first = HybridWeights {
+            in_flight: 1,
+            pressure_div: 1,
+            resize: 500,
+        };
+        assert_eq!(
+            s.pick_pod_with(RoutingPolicy::Hybrid, &fleet, node_first),
+            Some(0)
+        );
     }
 
     #[test]

@@ -11,9 +11,10 @@
 //! latency table as Table 3, but aggregated over the whole fleet.
 
 use crate::cluster::topology::Topology;
-use crate::coordinator::accounting::RoutingPolicy;
+use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
 use crate::coordinator::service::Service;
 use crate::coordinator::sim::Simulation;
+use crate::knative::config::ScaleKnobs;
 use crate::loadgen::arrival::Arrival;
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::SimTime;
@@ -37,7 +38,7 @@ pub const FLEET_MIX: [WorkloadKind; 6] = [
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
     pub topology: Topology,
-    /// Deployed services (tenants); workloads cycle through [`FLEET_MIX`].
+    /// Deployed services (tenants); workloads cycle through [`FleetConfig::mix`].
     pub services: usize,
     /// Open-loop Poisson arrivals per service, requests/second.
     pub rate_per_service: f64,
@@ -46,20 +47,37 @@ pub struct FleetConfig {
     pub seed: u64,
     /// Activator pod-selection policy threaded into the platform.
     pub routing: RoutingPolicy,
+    /// Workload cycle across tenants (default: [`FLEET_MIX`]).
+    pub mix: Vec<WorkloadKind>,
+    /// Per-scenario autoscaler knobs (default: the old hard-wired values).
+    pub knobs: ScaleKnobs,
+    /// Hybrid routing blend weights threaded into the platform.
+    pub hybrid: HybridWeights,
 }
 
 impl FleetConfig {
-    /// A 10-node uniform fleet with two tenants per node — the smallest
-    /// configuration the acceptance sweep runs.
-    pub fn default_10_node(seed: u64) -> FleetConfig {
+    /// The canonical shape everything else overrides: two tenants per
+    /// node, 0.05 rps each over 300 virtual seconds, least-loaded routing,
+    /// [`FLEET_MIX`] workloads and the pre-redesign autoscaler knobs.
+    pub fn base(topology: Topology, seed: u64) -> FleetConfig {
+        let services = (2 * topology.len()).max(1);
         FleetConfig {
-            topology: Topology::uniform_paper(10),
-            services: 20,
+            topology,
+            services,
             rate_per_service: 0.05,
             horizon: SimTime::from_secs(300),
             seed,
             routing: RoutingPolicy::LeastLoaded,
+            mix: FLEET_MIX.to_vec(),
+            knobs: ScaleKnobs::fleet_default(),
+            hybrid: HybridWeights::default(),
         }
+    }
+
+    /// A 10-node uniform fleet with two tenants per node — the smallest
+    /// configuration the acceptance sweep runs.
+    pub fn default_10_node(seed: u64) -> FleetConfig {
+        FleetConfig::base(Topology::uniform_paper(10), seed)
     }
 }
 
@@ -90,14 +108,15 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
         PlatformParams::with_seed(cfg.seed),
     );
     sim.world.routing = cfg.routing;
+    sim.world.hybrid_weights = cfg.hybrid;
+    let mix: &[WorkloadKind] = if cfg.mix.is_empty() { &FLEET_MIX } else { &cfg.mix };
     for i in 0..cfg.services {
-        let kind = FLEET_MIX[i % FLEET_MIX.len()];
+        let kind = mix[i % mix.len()];
         let mut rc = policy.revision_config();
-        // Tenants may fan out horizontally under load; keep the per-pod
-        // concurrency bounded so the KPA path is exercised at scale.
-        rc.max_scale = 4;
-        rc.target_concurrency = 2.0;
-        rc.container_concurrency = 4;
+        // Tenants may fan out horizontally under load; the per-scenario
+        // knobs bound per-pod concurrency so the KPA path is exercised at
+        // scale (defaults reproduce the old hard-wired 4 / 2.0 / 4).
+        cfg.knobs.apply(&mut rc);
         let svc = Service::with_config(
             &format!("fn-{i}"),
             WorkloadProfile::paper(kind),
@@ -244,12 +263,10 @@ mod tests {
 
     fn quick_cfg(nodes: usize, services: usize) -> FleetConfig {
         FleetConfig {
-            topology: Topology::uniform_paper(nodes),
             services,
             rate_per_service: 0.1,
             horizon: SimTime::from_secs(60),
-            seed: 11,
-            routing: RoutingPolicy::LeastLoaded,
+            ..FleetConfig::base(Topology::uniform_paper(nodes), 11)
         }
     }
 
@@ -299,12 +316,10 @@ mod tests {
     #[test]
     fn heterogeneous_fleet_schedules_everything() {
         let cfg = FleetConfig {
-            topology: Topology::hetero_preset(6),
             services: 12,
             rate_per_service: 0.1,
             horizon: SimTime::from_secs(30),
-            seed: 5,
-            routing: RoutingPolicy::LeastLoaded,
+            ..FleetConfig::base(Topology::hetero_preset(6), 5)
         };
         let r = run_policy(&cfg, Policy::Warm);
         assert_eq!(r.failed, 0);
@@ -317,12 +332,10 @@ mod tests {
     #[test]
     fn routing_sweep_over_calibrated_hetero_fleet() {
         let cfg = FleetConfig {
-            topology: Topology::hetero_preset(6),
             services: 12,
             rate_per_service: 0.1,
             horizon: SimTime::from_secs(30),
-            seed: 5,
-            routing: RoutingPolicy::LeastLoaded,
+            ..FleetConfig::base(Topology::hetero_preset(6), 5)
         };
         let rows = routing_sweep(&cfg);
         assert_eq!(rows.len(), 9, "3 routing × 3 §3 policies");
@@ -356,12 +369,10 @@ mod tests {
     #[test]
     fn routing_policies_agree_on_paper_topology() {
         let base = FleetConfig {
-            topology: Topology::paper(),
             services: 3,
             rate_per_service: 0.2,
             horizon: SimTime::from_secs(30),
-            seed: 17,
-            routing: RoutingPolicy::LeastLoaded,
+            ..FleetConfig::base(Topology::paper(), 17)
         };
         let want = run_policy(&base, Policy::Warm);
         for routing in [RoutingPolicy::Locality, RoutingPolicy::Hybrid] {

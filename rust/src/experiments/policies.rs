@@ -9,7 +9,7 @@
 
 use crate::coordinator::accounting::RoutingPolicy;
 use crate::coordinator::platform::Simulation;
-use crate::loadgen::runner::{Runner, Scenario};
+use crate::loadgen::runner::{LoadReport, Runner, Scenario};
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::SimTime;
 use crate::util::rng::Rng;
@@ -92,8 +92,9 @@ impl PolicyExperiment {
         }
     }
 
-    /// Measures the mean end-to-end latency for one (workload, policy) cell.
-    pub fn measure_cell(&self, kind: WorkloadKind, policy: Policy) -> f64 {
+    /// Runs one (workload, policy) cell and returns the full load report —
+    /// the scenario engine's entry point into the closed-loop rig.
+    pub fn measure_cell_report(&self, kind: WorkloadKind, policy: Policy) -> LoadReport {
         let mut sim = Simulation::with_params(PlatformParams::with_seed(
             self.seed ^ cell_hash(kind, policy),
         ));
@@ -104,7 +105,13 @@ impl PolicyExperiment {
             Scenario::closed_with_think(1, self.iterations_for(kind), self.think);
         let report = Runner::run(&mut sim, "fn", &scenario);
         assert_eq!(report.failed, 0, "{kind:?}/{policy:?} had failures");
-        report.mean_ms
+        report
+    }
+
+    /// Measures the mean end-to-end latency for one (workload, policy) cell
+    /// (the golden-pinned value).
+    pub fn measure_cell(&self, kind: WorkloadKind, policy: Policy) -> f64 {
+        self.measure_cell_report(kind, policy).mean_ms
     }
 
     /// Table 3 / Fig 5: all workloads × all policies, normalized by Default.

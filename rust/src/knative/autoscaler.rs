@@ -101,15 +101,18 @@ impl Autoscaler {
     }
 
     /// The scaling recommendation at `now`, given current ready replicas.
+    /// The panic window/threshold come from the revision config (scenario
+    /// specs sweep them); the defaults reproduce Knative's `/6` and `2.0×`.
     pub fn decide(&self, now: SimTime, ready: u32) -> ScaleDecision {
         let stable_avg = self.window_average(now, self.cfg.stable_window);
-        let panic_window = SimTime::from_nanos(self.cfg.stable_window.as_nanos() / 6);
+        let divisor = u64::from(self.cfg.panic_window_divisor.max(1));
+        let panic_window = SimTime::from_nanos(self.cfg.stable_window.as_nanos() / divisor);
         let panic_avg = self.window_average(now, panic_window.max(SimTime::from_secs(1)));
 
         let target = self.cfg.target_concurrency.max(0.01);
         let mut desired = (stable_avg / target).ceil() as u32;
 
-        let panicking = ready > 0 && panic_avg >= 2.0 * target * ready as f64;
+        let panicking = ready > 0 && panic_avg >= self.cfg.panic_threshold * target * ready as f64;
         if panicking {
             // Panic: react to the short window, never scale down.
             desired = desired.max((panic_avg / target).ceil() as u32).max(ready);
@@ -210,6 +213,35 @@ mod tests {
         let d = a.decide(SimTime::from_secs(60), 4);
         assert!(d.panicking);
         assert!(d.desired >= 4, "panic must not scale down, got {}", d.desired);
+    }
+
+    #[test]
+    fn panic_knobs_are_configurable() {
+        // Same burst as `panic_mode_freezes_scale_down`, but with the panic
+        // threshold raised far above the observed short-window average the
+        // autoscaler must stay calm — the knob, not a constant, decides.
+        let mut calm_cfg = cfg(0, 10, 60, 1.0);
+        calm_cfg.panic_threshold = 1000.0;
+        let mut a = Autoscaler::new(calm_cfg);
+        a.record(SimTime::from_secs(0), 0);
+        a.record(SimTime::from_secs(51), 100);
+        assert!(!a.decide(SimTime::from_secs(60), 4).panicking);
+
+        // At 10 ready pods the 10 s panic window (divisor 6) still sees the
+        // burst (avg 90 ≥ 2×1×10), but a divisor of 1 widens the window to
+        // the whole stable window where 51 s of quiet dilutes it to 15 < 20.
+        let narrow = cfg(0, 16, 60, 1.0);
+        let mut a = Autoscaler::new(narrow);
+        a.record(SimTime::from_secs(0), 0);
+        a.record(SimTime::from_secs(51), 100);
+        assert!(a.decide(SimTime::from_secs(60), 10).panicking);
+
+        let mut wide_cfg = cfg(0, 16, 60, 1.0);
+        wide_cfg.panic_window_divisor = 1;
+        let mut b = Autoscaler::new(wide_cfg);
+        b.record(SimTime::from_secs(0), 0);
+        b.record(SimTime::from_secs(51), 100);
+        assert!(!b.decide(SimTime::from_secs(60), 10).panicking);
     }
 
     #[test]

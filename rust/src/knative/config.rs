@@ -26,6 +26,13 @@ pub struct RevisionConfig {
     pub container_concurrency: u32,
     /// Soft target concurrency per pod the KPA aims for.
     pub target_concurrency: f64,
+    /// Panic window = stable window / this divisor (Knative's
+    /// panic-window-percentage, expressed as an exact integer divisor so the
+    /// seeded reproduction never depends on float rounding; 6 ≈ 16.7%).
+    pub panic_window_divisor: u32,
+    /// Panic entry threshold: panic when the short-window average reaches
+    /// `threshold × target × ready` (Knative's 200% default ⇒ 2.0).
+    pub panic_threshold: f64,
     /// Serving CPU limit for the function container.
     pub serving_cpu: MilliCpu,
     /// Parked CPU limit between requests (in-place policy only).
@@ -42,6 +49,8 @@ impl Default for RevisionConfig {
             scale_to_zero_grace: SimTime::from_secs(0),
             container_concurrency: 0,
             target_concurrency: 10.0,
+            panic_window_divisor: 6,
+            panic_threshold: 2.0,
             serving_cpu: MilliCpu::ONE_CPU,
             parked_cpu: MilliCpu::PARKED,
         }
@@ -87,6 +96,68 @@ impl RevisionConfig {
     }
 }
 
+/// The autoscaler knobs a scenario may tune per run — the multi-tenant
+/// overrides the fleet/trace harnesses used to hardwire. `apply` layers
+/// them over a policy's [`RevisionConfig`]: `None` fields keep the
+/// policy's own default (the cold policy's 6 s stable window must survive
+/// a spec that doesn't mention windows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleKnobs {
+    /// Horizontal headroom per tenant.
+    pub max_scale: u32,
+    /// KPA soft target concurrency per pod.
+    pub target_concurrency: f64,
+    /// Hard per-pod in-flight cap (0 = unlimited).
+    pub container_concurrency: u32,
+    /// Stable-window override (`None` ⇒ keep the policy default).
+    pub stable_window: Option<SimTime>,
+    /// Panic window divisor (stable window / divisor).
+    pub panic_window_divisor: u32,
+    /// Panic entry threshold (× target × ready).
+    pub panic_threshold: f64,
+    /// Parked CPU override for the in-place policy (`None` ⇒ 1 m).
+    pub parked_cpu: Option<MilliCpu>,
+}
+
+impl ScaleKnobs {
+    /// The knobs `kinetic fleet` always ran with before they were
+    /// configurable — the bit-identical baseline for the fleet preset.
+    pub fn fleet_default() -> ScaleKnobs {
+        ScaleKnobs {
+            max_scale: 4,
+            target_concurrency: 2.0,
+            container_concurrency: 4,
+            stable_window: None,
+            panic_window_divisor: 6,
+            panic_threshold: 2.0,
+            parked_cpu: None,
+        }
+    }
+
+    /// The knobs `kinetic trace` always ran with (per-pod concurrency 2).
+    pub fn trace_default() -> ScaleKnobs {
+        ScaleKnobs {
+            container_concurrency: 2,
+            ..ScaleKnobs::fleet_default()
+        }
+    }
+
+    /// Layers these knobs over a policy's revision config.
+    pub fn apply(&self, rc: &mut RevisionConfig) {
+        rc.max_scale = self.max_scale;
+        rc.target_concurrency = self.target_concurrency;
+        rc.container_concurrency = self.container_concurrency;
+        rc.panic_window_divisor = self.panic_window_divisor;
+        rc.panic_threshold = self.panic_threshold;
+        if let Some(w) = self.stable_window {
+            rc.stable_window = w;
+        }
+        if let Some(p) = self.parked_cpu {
+            rc.parked_cpu = p;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +182,48 @@ mod tests {
         assert_eq!(c.concurrency_limit(), u32::MAX);
         c.container_concurrency = 4;
         assert_eq!(c.concurrency_limit(), 4);
+    }
+
+    #[test]
+    fn fleet_knobs_reproduce_the_old_hardwired_config() {
+        // The fleet harness used to set exactly these three fields on top
+        // of the policy config; everything else must stay policy-default.
+        for policy_cfg in [
+            RevisionConfig::paper_cold(),
+            RevisionConfig::paper_warm(),
+            RevisionConfig::paper_inplace(),
+        ] {
+            let mut got = policy_cfg.clone();
+            ScaleKnobs::fleet_default().apply(&mut got);
+            let mut want = policy_cfg.clone();
+            want.max_scale = 4;
+            want.target_concurrency = 2.0;
+            want.container_concurrency = 4;
+            assert_eq!(got, want);
+        }
+        let mut trace = RevisionConfig::paper_cold();
+        ScaleKnobs::trace_default().apply(&mut trace);
+        assert_eq!(trace.container_concurrency, 2);
+        // The cold policy's 6 s window survives knobs that don't set one.
+        assert_eq!(trace.stable_window, SimTime::from_secs(6));
+    }
+
+    #[test]
+    fn knob_overrides_land() {
+        let mut rc = RevisionConfig::paper_inplace();
+        let knobs = ScaleKnobs {
+            max_scale: 8,
+            target_concurrency: 1.0,
+            container_concurrency: 1,
+            stable_window: Some(SimTime::from_secs(60)),
+            panic_window_divisor: 10,
+            panic_threshold: 3.0,
+            parked_cpu: Some(MilliCpu(250)),
+        };
+        knobs.apply(&mut rc);
+        assert_eq!(rc.max_scale, 8);
+        assert_eq!(rc.stable_window, SimTime::from_secs(60));
+        assert_eq!(rc.panic_window_divisor, 10);
+        assert_eq!(rc.parked_cpu, MilliCpu(250));
     }
 }

@@ -23,5 +23,6 @@ pub mod knative;
 pub mod loadgen;
 pub mod policy;
 pub mod runtime;
+pub mod scenario;
 pub mod trace;
 pub mod workload;

@@ -1,19 +1,22 @@
 //! `kinetic` — the platform CLI.
 //!
 //! Subcommands:
+//! * `run`        — execute a declarative scenario (JSON spec file or preset)
 //! * `exp`        — regenerate paper tables/figures (t1|fig2|fig3|fig4|t2|t3|fig6|all)
-//! * `fleet`      — run the three §3 policies over a multi-node topology
+//! * `fleet`      — preset: the three §3 policies over a multi-node topology
+//! * `trace`      — preset: generate + replay an Azure-style trace under all policies
 //! * `serve`      — run the end-to-end serving demo over the PJRT artifacts
-//! * `trace`      — generate + replay an Azure-style trace under all policies
+//! * `validate-report` — schema-check an emitted ScenarioReport JSON
 //! * `selfcheck`  — validate the AOT artifacts against the manifest oracle
+//!
+//! `fleet` and `trace` are thin wrappers over `run --scenario`: they build
+//! the matching preset spec from their flags and render the same tables
+//! they always did (the equivalence tests pin them bit-for-bit). New
+//! studies should write a scenario file instead of a new subcommand.
 
-use kinetic::cluster::topology::Topology;
-use kinetic::coordinator::accounting::RoutingPolicy;
-use kinetic::coordinator::platform::Simulation;
 use kinetic::experiments::ablation;
-use kinetic::experiments::fleet::{self, FleetConfig};
+use kinetic::experiments::fleet;
 use kinetic::experiments::memory;
-use kinetic::experiments::policies::PolicyExperiment;
 use kinetic::experiments::report::{
     fig5_table, fig6_table, overhead_series_table, overhead_table, table3_table,
     ExperimentReport,
@@ -22,9 +25,10 @@ use kinetic::experiments::scaling_overhead::{OverheadConfig, OverheadExperiment}
 use kinetic::loadgen::runner::{Runner, Scenario};
 use kinetic::policy::Policy;
 use kinetic::runtime::Executor;
+use kinetic::scenario::preset;
+use kinetic::scenario::spec::TopologySpec;
+use kinetic::scenario::{ScenarioEngine, ScenarioReport};
 use kinetic::simclock::SimTime;
-use kinetic::trace::generator::{TraceConfig, TraceGenerator};
-use kinetic::trace::replay::replay;
 use kinetic::util::cli::{App, CliError, Command};
 use kinetic::util::logging;
 use kinetic::util::stats::Summary;
@@ -34,15 +38,25 @@ use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
 fn app() -> App {
     App::new("kinetic", "in-place vertical scaling for serverless (paper reproduction)")
         .command(
+            Command::new("run", "execute a declarative scenario (spec file or preset)")
+                .opt(
+                    "scenario",
+                    "path to a ScenarioSpec JSON file, or a preset name \
+                     (fleet|trace|paper|smoke)",
+                    "smoke",
+                )
+                .opt("out", "directory the ScenarioReport JSON is written to", "results"),
+        )
+        .command(
             Command::new("exp", "regenerate paper tables and figures")
                 .opt("id", "t1|fig2|fig3|fig4|t2|t3|fig6|ablation|memory|all", "all")
                 .opt("reps", "repetitions per measurement", "30")
-                .opt("seed", "rng seed", "42")
+                .opt_seed("42")
                 .opt("out", "results directory", "results")
                 .flag("verbose", "chatty logging"),
         )
         .command(
-            Command::new("fleet", "run the three §3 policies over a multi-node fleet")
+            Command::new("fleet", "preset: the three §3 policies over a multi-node fleet")
                 .opt("nodes", "node count for uniform/hetero topologies", "10")
                 .opt("topology", "paper|uniform|hetero", "uniform")
                 .opt(
@@ -51,24 +65,94 @@ fn app() -> App {
                     "least-loaded",
                 )
                 .opt("services", "deployed tenants (0 = 2 per node)", "0")
-                .opt("rate", "Poisson requests/second per tenant", "0.05")
-                .opt("seconds", "arrival-stream horizon (virtual seconds)", "300")
-                .opt("seed", "rng seed", "42"),
+                .opt_rate("Poisson requests/second per tenant", "0.05")
+                .opt_seconds("arrival-stream horizon (virtual seconds)", "300")
+                .opt_seed("42"),
         )
         .command(
             Command::new("serve", "serve batched requests over the PJRT artifacts")
                 .opt("requests", "number of requests", "64")
                 .opt("policy", "cold|warm|inplace", "inplace")
-                .opt("seed", "rng seed", "42"),
+                .opt_seed("42"),
         )
         .command(
-            Command::new("trace", "replay a synthetic Azure-style trace under all policies")
+            Command::new("trace", "preset: replay a synthetic Azure-style trace under all policies")
                 .opt("functions", "distinct functions", "8")
-                .opt("seconds", "trace horizon (virtual seconds)", "600")
-                .opt("rate", "peak request rate per second", "4")
-                .opt("seed", "rng seed", "1"),
+                .opt_seconds("trace horizon (virtual seconds)", "600")
+                .opt_rate("peak request rate per second", "4")
+                .opt_seed("1"),
+        )
+        .command(
+            Command::new("validate-report", "schema-check a ScenarioReport JSON file")
+                .opt("file", "path to the report JSON", ""),
         )
         .command(Command::new("selfcheck", "validate AOT artifacts against the manifest oracle"))
+}
+
+/// Unwraps a validated CLI option or exits with the parse error.
+fn or_die<T>(r: Result<T, CliError>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run_scenario(arg: &str, out: &str) {
+    let spec = match ScenarioEngine::load(arg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    // Grid size is the product of axis lengths — no need to materialize
+    // the expansion here (load() already validated it; run() performs it).
+    let variants: usize = spec.sweep.iter().map(|s| s.values.len().max(1)).product();
+    println!(
+        "scenario '{}': {} variant(s) × {} routing × {} policies × {} rep(s)",
+        spec.name,
+        variants,
+        spec.routing.len(),
+        spec.policies.len(),
+        spec.reps
+    );
+    let report = match ScenarioEngine::run(&spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("{}", report.table().to_ascii());
+    match report.save(std::path::Path::new(out)) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => {
+            eprintln!("could not write report: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn validate_report(file: &str) {
+    if file.is_empty() {
+        eprintln!("error: validate-report needs --file <report.json>");
+        std::process::exit(2);
+    }
+    match ScenarioReport::load(std::path::Path::new(file)) {
+        Ok(rep) => println!(
+            "report OK: '{}', {} row(s), schema v{}",
+            rep.name,
+            rep.rows.len(),
+            kinetic::scenario::report::SCHEMA_VERSION
+        ),
+        Err(e) => {
+            eprintln!("invalid report: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn run_exp(id: &str, reps: u32, seed: u64, out: &str) {
@@ -120,12 +204,11 @@ fn run_exp(id: &str, reps: u32, seed: u64, out: &str) {
     }
 
     if want("t2") || want("t3") || want("fig6") {
-        let exp = PolicyExperiment {
-            iterations: reps.clamp(3, 16),
-            think: SimTime::from_secs(8),
-            seed,
-            ..PolicyExperiment::default()
-        };
+        // The policy portion of `exp` is the `paper` scenario preset: the
+        // spec carries iterations/think/seed and the engine compiles it to
+        // the exact PolicyExperiment these tables were always rendered from.
+        let exp = ScenarioEngine::paper_policy_experiment(&preset::paper(reps, seed))
+            .expect("the paper preset is a closed-loop spec");
         if want("t2") {
             let mut t = Table::new(vec!["Workload", "Runtime (ms)", "σ (ms)", "Paper (ms)"])
                 .title("Table 2: runtime measurements with 1 CPU");
@@ -146,7 +229,7 @@ fn run_exp(id: &str, reps: u32, seed: u64, out: &str) {
                 report.add_table("fig5", &fig5_table(&rows));
             }
             if want("fig6") {
-                report.add_table("fig6", &fig6_table(&PolicyExperiment::fig6(&rows)));
+                report.add_table("fig6", &fig6_table(&kinetic::experiments::policies::PolicyExperiment::fig6(&rows)));
             }
             if let Some(h) = rows.iter().find(|r| r.function == "helloworld") {
                 println!(
@@ -262,7 +345,7 @@ fn run_fleet(
     seconds: u64,
     seed: u64,
 ) {
-    let topology = match Topology::from_cli(topology_spec, nodes) {
+    let topo = match TopologySpec::from_cli(topology_spec, nodes) {
         Ok(t) => t,
         Err(e) => {
             eprintln!("error: {e}");
@@ -271,41 +354,42 @@ fn run_fleet(
     };
     let sweep_routing = routing_spec.eq_ignore_ascii_case("all");
     let routing = if sweep_routing {
-        RoutingPolicy::LeastLoaded
+        kinetic::coordinator::accounting::RoutingPolicy::ALL.to_vec()
     } else {
-        match routing_spec.parse::<RoutingPolicy>() {
-            Ok(r) => r,
+        match routing_spec.parse() {
+            Ok(r) => vec![r],
             Err(e) => {
                 eprintln!("error: {e}");
                 std::process::exit(2);
             }
         }
     };
-    let services = if services == 0 {
-        (2 * topology.len()).max(1)
-    } else {
-        services
+    // The preset resolves `0` tenants to two per node, as the subcommand
+    // always did; build it first so the header prints resolved numbers.
+    let spec = preset::fleet(topo, routing, services, rate, seconds, seed);
+    let topology = spec.topology.build();
+    let services = match &spec.workload {
+        kinetic::scenario::WorkloadSource::Synthetic { services, .. } => *services,
+        _ => unreachable!("fleet preset is synthetic"),
     };
     println!(
         "fleet: {} nodes ({} mCPU total), {services} tenants, {rate} rps each over {seconds}s, routing {}",
         topology.len(),
         topology.total_capacity().cpu.0,
-        if sweep_routing { "sweep" } else { routing.name() },
+        if sweep_routing { "sweep" } else { spec.routing[0].name() },
     );
-    let cfg = FleetConfig {
-        topology,
-        services,
-        rate_per_service: rate,
-        horizon: SimTime::from_secs(seconds),
-        seed,
-        routing,
+    let report = match ScenarioEngine::run(&spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
     };
+    let rows: Vec<fleet::FleetRow> = report.rows.iter().map(|r| r.to_fleet_row()).collect();
     if sweep_routing {
-        let rows = fleet::routing_sweep(&cfg);
         println!("{}", fleet::routing_table(&rows).to_ascii());
         return;
     }
-    let rows = fleet::run_all(&cfg);
     println!("{}", fleet::fleet_table(&rows).to_ascii());
     let warm = rows.iter().find(|r| r.policy == Policy::Warm);
     let inp = rows.iter().find(|r| r.policy == Policy::InPlace);
@@ -332,7 +416,7 @@ fn run_serve(requests: u32, policy: Policy, seed: u64) {
     executor.self_check("watermark").expect("watermark artifact validates");
     println!("PJRT platform: {}; artifacts OK", executor.platform());
 
-    let mut sim = Simulation::paper(seed);
+    let mut sim = kinetic::coordinator::platform::Simulation::paper(seed);
     sim.deploy("cpu", WorkloadProfile::paper(WorkloadKind::Cpu), policy);
     sim.run();
     let report = Runner::run(&mut sim, "cpu", &Scenario::closed(4, (requests / 4).max(1)));
@@ -359,17 +443,24 @@ fn run_serve(requests: u32, policy: Policy, seed: u64) {
 }
 
 fn run_trace(functions: usize, seconds: u64, rate: f64, seed: u64) {
-    let cfg = TraceConfig {
-        functions,
-        peak_rate: rate,
-        horizon: SimTime::from_secs(seconds),
-        seed,
-        ..TraceConfig::default()
+    let spec = preset::trace(functions, seconds, rate, seed);
+    let report = match ScenarioEngine::run(&spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
     };
-    let trace = TraceGenerator::new(cfg).generate();
+    // The invocation count the header always printed: every submitted
+    // event either completes or fails, so any row's sum is the trace
+    // length — no need to generate the trace a second time here.
+    let invocations = report
+        .rows
+        .first()
+        .map(|r| r.completed + r.failed)
+        .unwrap_or(0);
     println!(
-        "trace: {} invocations over {seconds}s across {functions} functions",
-        trace.len()
+        "trace: {invocations} invocations over {seconds}s across {functions} functions"
     );
     let mut t = Table::new(vec![
         "Policy",
@@ -380,10 +471,9 @@ fn run_trace(functions: usize, seconds: u64, rate: f64, seed: u64) {
         "Pods created",
     ])
     .title("Trace replay: latency vs reservation");
-    for policy in Policy::ALL {
-        let r = replay(&trace, functions, policy, seed);
+    for r in &report.rows {
         t.row(vec![
-            policy.name().to_string(),
+            r.policy.name().to_string(),
             fmt_ms(r.mean_ms),
             fmt_ms(r.p99_ms),
             r.cold_starts.to_string(),
@@ -410,20 +500,21 @@ fn main() {
     logging::init(if inv.flag("verbose") { 3 } else { 1 });
 
     match inv.command.as_str() {
+        "run" => run_scenario(inv.get_or("scenario", "smoke"), inv.get_or("out", "results")),
         "exp" => run_exp(
             inv.get_or("id", "all"),
-            inv.get_u64("reps", 30) as u32,
-            inv.get_u64("seed", 42),
+            or_die(inv.u64_in("reps", 1, 10_000)) as u32,
+            or_die(inv.seed()),
             inv.get_or("out", "results"),
         ),
         "fleet" => run_fleet(
-            inv.get_u64("nodes", 10) as usize,
+            or_die(inv.u64_in("nodes", 1, 10_000)) as usize,
             inv.get_or("topology", "uniform"),
             inv.get_or("routing", "least-loaded"),
-            inv.get_u64("services", 0) as usize,
-            inv.get_f64("rate", 0.05),
-            inv.get_u64("seconds", 300),
-            inv.get_u64("seed", 42),
+            or_die(inv.u64_in("services", 0, 100_000)) as usize,
+            or_die(inv.rate()),
+            or_die(inv.seconds()),
+            or_die(inv.seed()),
         ),
         "serve" => {
             let policy: Policy = inv
@@ -431,17 +522,26 @@ fn main() {
                 .parse()
                 .unwrap_or(Policy::InPlace);
             run_serve(
-                inv.get_u64("requests", 64) as u32,
+                or_die(inv.u64_in("requests", 1, 1_000_000)) as u32,
                 policy,
-                inv.get_u64("seed", 42),
+                or_die(inv.seed()),
             );
         }
         "trace" => run_trace(
-            inv.get_u64("functions", 8) as usize,
-            inv.get_u64("seconds", 600),
-            inv.get_f64("rate", 4.0),
-            inv.get_u64("seed", 1),
+            or_die(inv.u64_in("functions", 1, 100_000)) as usize,
+            or_die(inv.seconds()),
+            or_die(inv.rate()),
+            or_die(inv.seed()),
         ),
+        "validate-report" => {
+            let file = inv
+                .get("file")
+                .filter(|f| !f.is_empty())
+                .map(str::to_string)
+                .or_else(|| inv.positionals.first().cloned())
+                .unwrap_or_default();
+            validate_report(&file);
+        }
         "selfcheck" => {
             let mut ex = match Executor::new(None) {
                 Ok(e) => e,

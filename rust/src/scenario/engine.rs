@@ -1,0 +1,408 @@
+//! [`ScenarioEngine`] — compiles a [`ScenarioSpec`] into [`Simulation`]
+//! runs and aggregates a [`ScenarioReport`].
+//!
+//! One engine serves every experiment shape: synthetic per-tenant fleets
+//! compile to `experiments::fleet::run_policy`, generated and file-loaded
+//! traces to `trace::replay_with`, and the paper's closed-loop rig to
+//! `experiments::policies::PolicyExperiment` — so the legacy subcommands
+//! become presets over this module and can never drift from `kinetic run`.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::accounting::RoutingPolicy;
+use crate::experiments::fleet::{self, FleetConfig};
+use crate::experiments::policies::PolicyExperiment;
+use crate::scenario::report::{ScenarioReport, ScenarioRow};
+use crate::scenario::spec::{ScenarioSpec, SpecError, TopologySpec, WorkloadSource};
+use crate::simclock::SimTime;
+use crate::trace::generator::{TraceConfig, TraceEvent, TraceGenerator};
+use crate::trace::loader;
+use crate::trace::replay::{replay_with, ReplayConfig};
+use crate::workload::registry::WorkloadKind;
+
+/// Compiles specs into runs.
+pub struct ScenarioEngine;
+
+impl ScenarioEngine {
+    /// Resolves `--scenario <arg>`: a preset name, else a JSON file path.
+    pub fn load(arg: &str) -> Result<ScenarioSpec, SpecError> {
+        if let Some(spec) = crate::scenario::preset::by_name(arg) {
+            return Ok(spec);
+        }
+        ScenarioSpec::load(std::path::Path::new(arg))
+    }
+
+    /// Runs the full grid: every sweep variant × routing × policy × rep.
+    pub fn run(spec: &ScenarioSpec) -> Result<ScenarioReport, SpecError> {
+        let mut rows = Vec::new();
+        for (label, variant) in spec.expand()? {
+            run_variant(&label, &variant, &mut rows)?;
+        }
+        Ok(ScenarioReport {
+            name: spec.name.clone(),
+            spec: spec.to_json(),
+            rows,
+        })
+    }
+
+    /// The `kinetic exp` policy preset: a closed-loop spec as the exact
+    /// [`PolicyExperiment`] the paper tables are rendered from.
+    pub fn paper_policy_experiment(spec: &ScenarioSpec) -> Result<PolicyExperiment, SpecError> {
+        match spec.workload {
+            WorkloadSource::ClosedLoop { iterations, think_s } => Ok(PolicyExperiment {
+                iterations,
+                think: SimTime::from_secs_f64(think_s),
+                seed: spec.seed,
+                routing: *spec.routing.first().unwrap_or(&RoutingPolicy::LeastLoaded),
+            }),
+            _ => Err(SpecError::invalid(
+                "workload.type",
+                "the paper policy tables need a 'closed-loop' workload source",
+            )),
+        }
+    }
+}
+
+fn run_variant(
+    label: &str,
+    v: &ScenarioSpec,
+    rows: &mut Vec<ScenarioRow>,
+) -> Result<(), SpecError> {
+    match &v.workload {
+        WorkloadSource::Synthetic {
+            services,
+            rate_per_service,
+            horizon_s,
+            mix,
+        } => {
+            for &routing in &v.routing {
+                for &policy in &v.policies {
+                    for rep in 0..v.reps {
+                        let cfg = FleetConfig {
+                            topology: v.topology.build(),
+                            services: *services,
+                            rate_per_service: *rate_per_service,
+                            horizon: SimTime::from_secs_f64(*horizon_s),
+                            seed: v.seed.wrapping_add(u64::from(rep)),
+                            routing,
+                            mix: mix.clone(),
+                            knobs: v.autoscaler.clone(),
+                            hybrid: v.hybrid,
+                        };
+                        let f = fleet::run_policy(&cfg, policy);
+                        rows.push(ScenarioRow {
+                            scenario: v.name.clone(),
+                            variant: label.to_string(),
+                            workload: "mix".to_string(),
+                            rep,
+                            policy,
+                            routing,
+                            nodes: f.nodes,
+                            services: f.services,
+                            completed: f.completed,
+                            failed: f.failed,
+                            mean_ms: f.mean_ms,
+                            p50_ms: f.p50_ms,
+                            p99_ms: f.p99_ms,
+                            cold_starts: f.cold_starts,
+                            inplace_scale_ups: f.inplace_scale_ups,
+                            avg_committed_mcpu: f.avg_committed_mcpu,
+                            pods_created: f.pods_created,
+                        });
+                    }
+                }
+            }
+        }
+        WorkloadSource::AzureGenerator { .. } | WorkloadSource::TraceFile { .. } => {
+            // One trace per rep for the generator (it reseeds per rep); a
+            // file never changes, so it is read and parsed exactly once.
+            // Either way the trace is shared by every routing × policy so
+            // each policy replays the identical arrival stream — the
+            // comparison the paper's §3 tables rest on.
+            let mut cache: BTreeMap<u32, (Vec<TraceEvent>, usize)> = BTreeMap::new();
+            let file_trace = if matches!(v.workload, WorkloadSource::TraceFile { .. }) {
+                Some(build_trace(v, 0)?)
+            } else {
+                for rep in 0..v.reps {
+                    cache.insert(rep, build_trace(v, rep)?);
+                }
+                None
+            };
+            for &routing in &v.routing {
+                for &policy in &v.policies {
+                    for rep in 0..v.reps {
+                        let (trace, functions) = match &file_trace {
+                            Some(t) => t,
+                            None => &cache[&rep],
+                        };
+                        let cfg = ReplayConfig {
+                            functions: *functions,
+                            policy,
+                            routing,
+                            topology: v.topology.build(),
+                            knobs: v.autoscaler.clone(),
+                            hybrid: v.hybrid,
+                            seed: v.seed.wrapping_add(u64::from(rep)),
+                        };
+                        let r = replay_with(trace, &cfg);
+                        rows.push(ScenarioRow {
+                            scenario: v.name.clone(),
+                            variant: label.to_string(),
+                            workload: "trace".to_string(),
+                            rep,
+                            policy,
+                            routing,
+                            nodes: v.topology.nodes(),
+                            services: *functions,
+                            completed: r.completed,
+                            failed: r.failed,
+                            mean_ms: r.mean_ms,
+                            p50_ms: r.p50_ms,
+                            p99_ms: r.p99_ms,
+                            cold_starts: r.cold_starts,
+                            inplace_scale_ups: r.inplace_scale_ups,
+                            avg_committed_mcpu: r.avg_committed_mcpu,
+                            pods_created: r.pods_created,
+                        });
+                    }
+                }
+            }
+        }
+        WorkloadSource::ClosedLoop { iterations, think_s } => {
+            if v.topology != TopologySpec::Paper {
+                return Err(SpecError::invalid(
+                    "topology.kind",
+                    "the closed-loop rig reproduces the paper's single-node \
+                     testbed; use topology kind 'paper'",
+                ));
+            }
+            // The rig runs the paper's revision configs verbatim; rather
+            // than silently ignore autoscaler/hybrid settings (a swept
+            // knob would then run identical variants), reject them.
+            if v.autoscaler != crate::knative::config::ScaleKnobs::fleet_default() {
+                return Err(SpecError::invalid(
+                    "autoscaler",
+                    "closed-loop scenarios run the paper's per-policy revision \
+                     configs; autoscaler knobs (and sweeps over them) do not \
+                     apply — remove them or use a synthetic/trace source",
+                ));
+            }
+            if v.hybrid != crate::coordinator::accounting::HybridWeights::default() {
+                return Err(SpecError::invalid(
+                    "hybrid_weights",
+                    "closed-loop scenarios are single-pod; hybrid weights do \
+                     not apply — remove them or use a synthetic/trace source",
+                ));
+            }
+            // Routing is provably a no-op on the single-pod paper rig (the
+            // golden routing-invariance test pins it), so comparing routing
+            // policies here would emit identical rows per policy.
+            if v.routing.len() > 1 {
+                return Err(SpecError::invalid(
+                    "routing",
+                    "closed-loop scenarios are routing-invariant (single \
+                     pod); listing several routing policies would duplicate \
+                     every row — keep one",
+                ));
+            }
+            for &routing in &v.routing {
+                for &policy in &v.policies {
+                    for rep in 0..v.reps {
+                        let exp = PolicyExperiment {
+                            iterations: *iterations,
+                            think: SimTime::from_secs_f64(*think_s),
+                            seed: v.seed.wrapping_add(u64::from(rep)),
+                            routing,
+                        };
+                        for kind in WorkloadKind::ALL {
+                            let r = exp.measure_cell_report(kind, policy);
+                            rows.push(ScenarioRow {
+                                scenario: v.name.clone(),
+                                variant: label.to_string(),
+                                workload: kind.name().to_string(),
+                                rep,
+                                policy,
+                                routing,
+                                nodes: 1,
+                                services: 1,
+                                completed: r.completed,
+                                failed: r.failed,
+                                mean_ms: r.mean_ms,
+                                p50_ms: r.p50_ms,
+                                p99_ms: r.p99_ms,
+                                cold_starts: r.cold_starts,
+                                inplace_scale_ups: r.inplace_scale_ups,
+                                avg_committed_mcpu: r.avg_committed_mcpu,
+                                // The rig keeps one min-scale pod; churn is
+                                // not a closed-loop metric.
+                                pods_created: 0,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Materializes the trace for one rep: the generator reseeded per rep, or
+/// the file (rep-independent, loaded once per call).
+fn build_trace(v: &ScenarioSpec, rep: u32) -> Result<(Vec<TraceEvent>, usize), SpecError> {
+    match &v.workload {
+        WorkloadSource::AzureGenerator {
+            functions,
+            peak_rate,
+            horizon_s,
+            popularity_s,
+            trough_ratio,
+            period_s,
+            burst_p,
+        } => {
+            let cfg = TraceConfig {
+                functions: *functions,
+                popularity_s: *popularity_s,
+                peak_rate: *peak_rate,
+                trough_ratio: *trough_ratio,
+                period: SimTime::from_secs_f64(*period_s),
+                horizon: SimTime::from_secs_f64(*horizon_s),
+                burst_p: *burst_p,
+                seed: v.seed.wrapping_add(u64::from(rep)),
+            };
+            Ok((TraceGenerator::new(cfg).generate(), *functions))
+        }
+        WorkloadSource::TraceFile { path, time_scale } => {
+            let loaded = loader::load_azure_csv(std::path::Path::new(path), *time_scale)
+                .map_err(|e| SpecError::Io {
+                    path: path.clone(),
+                    msg: e,
+                })?;
+            Ok((loaded.events, loaded.functions))
+        }
+        _ => unreachable!("build_trace is only called for trace sources"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::Policy;
+    use crate::scenario::preset;
+
+    #[test]
+    fn smoke_preset_runs_end_to_end() {
+        let spec = preset::by_name("smoke").expect("smoke preset exists");
+        let report = ScenarioEngine::run(&spec).unwrap();
+        // 1 variant × 1 routing × 3 policies × 1 rep.
+        assert_eq!(report.rows.len(), 3);
+        for r in &report.rows {
+            assert_eq!(r.failed, 0, "{:?}", r.policy);
+            assert!(r.completed > 0);
+        }
+        // The emitted JSON validates against the schema.
+        ScenarioReport::validate(&report.to_json()).unwrap();
+    }
+
+    #[test]
+    fn engine_is_deterministic() {
+        let spec = preset::by_name("smoke").unwrap();
+        let a = ScenarioEngine::run(&spec).unwrap();
+        let b = ScenarioEngine::run(&spec).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sweep_produces_one_row_per_grid_cell() {
+        let mut spec = preset::by_name("smoke").unwrap();
+        spec.policies = vec![Policy::InPlace];
+        spec.sweep = vec![crate::scenario::spec::Sweep {
+            param: "target_concurrency".into(),
+            values: vec![1.0, 4.0],
+        }];
+        let report = ScenarioEngine::run(&spec).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        assert_eq!(report.rows[0].variant, "target_concurrency=1");
+        assert_eq!(report.rows[1].variant, "target_concurrency=4");
+        // The knob reached the platform: a tighter target scales out more.
+        assert!(report.rows[0].pods_created >= report.rows[1].pods_created);
+    }
+
+    #[test]
+    fn trace_file_scenario_replays() {
+        let dir = std::env::temp_dir().join(format!("kinetic-eng-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mini.csv");
+        std::fs::write(&path, "HashFunction,1,2\nhot,6,4\ncool,1,0\n").unwrap();
+        let spec = ScenarioSpec::parse(&format!(
+            r#"{{"name":"file-replay",
+                "workload":{{"type":"trace-file","path":"{}"}},
+                "policies":["warm"]}}"#,
+            path.display()
+        ))
+        .unwrap();
+        let report = ScenarioEngine::run(&spec).unwrap();
+        assert_eq!(report.rows.len(), 1);
+        assert_eq!(report.rows[0].completed, 11);
+        assert_eq!(report.rows[0].failed, 0);
+        assert_eq!(report.rows[0].services, 2);
+        std::fs::remove_dir_all(&dir).ok();
+
+        // A missing file surfaces as an Io error, not a panic.
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"trace-file","path":"/nope.csv"}}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ScenarioEngine::run(&spec),
+            Err(SpecError::Io { .. })
+        ));
+    }
+
+    #[test]
+    fn closed_loop_requires_paper_topology() {
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"closed-loop","iterations":2},
+                "topology":{"kind":"uniform","nodes":2}}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("paper"), "{e}");
+    }
+
+    /// Autoscaler knobs (and sweeps over them) must not silently no-op on
+    /// the closed-loop rig — they are rejected, not ignored.
+    #[test]
+    fn closed_loop_rejects_inapplicable_knobs() {
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"closed-loop","iterations":2},
+                "autoscaler":{"target_concurrency":1}}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("do not apply"), "{e}");
+
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"closed-loop","iterations":2},
+                "sweep":[{"param":"target_concurrency","values":[1,2]}]}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("do not apply"), "{e}");
+
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"closed-loop","iterations":2},
+                "hybrid_weights":{"pressure_div":1}}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("hybrid"), "{e}");
+
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"closed-loop","iterations":2},
+                "routing":["least-loaded","locality"]}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("routing-invariant"), "{e}");
+    }
+}

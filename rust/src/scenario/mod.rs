@@ -1,0 +1,23 @@
+//! The declarative scenario API: one engine for every experiment, sweep
+//! and trace replay.
+//!
+//! * [`spec`] — [`ScenarioSpec`]: workload source × topology × policies ×
+//!   routing × autoscaler knobs (+ [`spec::Sweep`] axes that expand a
+//!   single spec into a grid). Strict JSON parsing with path-qualified
+//!   errors.
+//! * [`engine`] — [`ScenarioEngine`]: compiles specs into `Simulation`
+//!   runs via the fleet harness, the trace replayer or the paper's
+//!   closed-loop rig.
+//! * [`report`] — [`ScenarioReport`]: the unified, schema-validated JSON
+//!   result document (`kinetic validate-report` gates it in CI).
+//! * [`preset`] — the legacy subcommands (`fleet`, `trace`, the policy
+//!   tables of `exp`) and the CI `smoke` gate as named specs.
+
+pub mod engine;
+pub mod preset;
+pub mod report;
+pub mod spec;
+
+pub use engine::ScenarioEngine;
+pub use report::{ScenarioReport, ScenarioRow};
+pub use spec::{ScenarioSpec, SpecError, TopologySpec, WorkloadSource};

@@ -1,0 +1,186 @@
+//! Named scenario presets — the legacy subcommands expressed as specs.
+//!
+//! `kinetic fleet`, `kinetic trace` and the policy portion of `kinetic exp`
+//! are thin wrappers that build these presets from their flags; `kinetic
+//! run --scenario fleet|trace|paper|smoke` runs the same specs with their
+//! default flag values. The equivalence tests pin the presets to the
+//! pre-redesign subcommand outputs bit-for-bit.
+
+use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
+use crate::experiments::fleet::FLEET_MIX;
+use crate::knative::config::ScaleKnobs;
+use crate::policy::Policy;
+use crate::scenario::spec::{ScenarioSpec, TopologySpec, WorkloadSource};
+
+/// Looks up a preset by name (`fleet`, `trace`, `paper`, `smoke`).
+pub fn by_name(name: &str) -> Option<ScenarioSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "fleet" => Some(fleet(
+            TopologySpec::Uniform { nodes: 10 },
+            vec![RoutingPolicy::LeastLoaded],
+            0,
+            0.05,
+            300,
+            42,
+        )),
+        "trace" => Some(trace(8, 600, 4.0, 1)),
+        "paper" => Some(paper(30, 42)),
+        "smoke" => Some(smoke()),
+        _ => None,
+    }
+}
+
+/// Every preset name, for help/error text.
+pub const NAMES: [&str; 4] = ["fleet", "trace", "paper", "smoke"];
+
+/// The `kinetic fleet` subcommand as a spec. `services == 0` resolves to
+/// two tenants per node, exactly as the subcommand always did.
+pub fn fleet(
+    topology: TopologySpec,
+    routing: Vec<RoutingPolicy>,
+    services: usize,
+    rate: f64,
+    seconds: u64,
+    seed: u64,
+) -> ScenarioSpec {
+    let services = if services == 0 {
+        (2 * topology.nodes()).max(1)
+    } else {
+        services
+    };
+    ScenarioSpec {
+        name: "fleet".to_string(),
+        workload: WorkloadSource::Synthetic {
+            services,
+            rate_per_service: rate,
+            horizon_s: seconds as f64,
+            mix: FLEET_MIX.to_vec(),
+        },
+        topology,
+        policies: Policy::ALL.to_vec(),
+        routing,
+        autoscaler: ScaleKnobs::fleet_default(),
+        hybrid: HybridWeights::default(),
+        seed,
+        reps: 1,
+        sweep: Vec::new(),
+    }
+}
+
+/// The `kinetic trace` subcommand as a spec: the Azure-style generator
+/// replayed on the paper testbed under every §3 policy.
+pub fn trace(functions: usize, seconds: u64, rate: f64, seed: u64) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "trace".to_string(),
+        workload: WorkloadSource::AzureGenerator {
+            functions,
+            peak_rate: rate,
+            horizon_s: seconds as f64,
+            // TraceConfig::default's shape parameters, spelled out.
+            popularity_s: 1.2,
+            trough_ratio: 0.15,
+            period_s: 600.0,
+            burst_p: 0.25,
+        },
+        topology: TopologySpec::Paper,
+        policies: Policy::ALL.to_vec(),
+        routing: vec![RoutingPolicy::LeastLoaded],
+        autoscaler: ScaleKnobs::trace_default(),
+        hybrid: HybridWeights::default(),
+        seed,
+        reps: 1,
+        sweep: Vec::new(),
+    }
+}
+
+/// The policy portion of `kinetic exp` (Tables 2/3, Figs 5/6) as a spec:
+/// the paper's closed-loop rig. `reps` is clamped exactly as the
+/// subcommand clamps it.
+pub fn paper(reps: u32, seed: u64) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "paper".to_string(),
+        workload: WorkloadSource::ClosedLoop {
+            iterations: reps.clamp(3, 16),
+            think_s: 8.0,
+        },
+        topology: TopologySpec::Paper,
+        policies: Policy::ALL.to_vec(),
+        routing: vec![RoutingPolicy::LeastLoaded],
+        autoscaler: ScaleKnobs::fleet_default(),
+        hybrid: HybridWeights::default(),
+        seed,
+        reps: 1,
+        sweep: Vec::new(),
+    }
+}
+
+/// A seconds-fast synthetic fleet — the CI smoke gate. Kept in lockstep
+/// with `examples/scenarios/smoke.json` (a test asserts they are equal).
+pub fn smoke() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "smoke".to_string(),
+        workload: WorkloadSource::Synthetic {
+            services: 6,
+            rate_per_service: 0.2,
+            horizon_s: 30.0,
+            mix: FLEET_MIX.to_vec(),
+        },
+        topology: TopologySpec::Uniform { nodes: 3 },
+        policies: Policy::ALL.to_vec(),
+        routing: vec![RoutingPolicy::LeastLoaded],
+        autoscaler: ScaleKnobs::fleet_default(),
+        hybrid: HybridWeights::default(),
+        seed: 42,
+        reps: 1,
+        sweep: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_round_trip() {
+        for name in NAMES {
+            let spec = by_name(name).unwrap_or_else(|| panic!("preset {name}"));
+            assert_eq!(spec.name, name);
+            let again = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, again, "{name} canonical form drifted");
+        }
+        assert!(by_name("warp-speed").is_none());
+    }
+
+    #[test]
+    fn fleet_preset_resolves_default_services() {
+        let spec = by_name("fleet").unwrap();
+        match spec.workload {
+            WorkloadSource::Synthetic { services, .. } => assert_eq!(services, 20),
+            other => panic!("{other:?}"),
+        }
+        let explicit = fleet(
+            TopologySpec::Hetero { nodes: 4 },
+            vec![RoutingPolicy::Hybrid],
+            7,
+            0.5,
+            60,
+            1,
+        );
+        match explicit.workload {
+            WorkloadSource::Synthetic { services, .. } => assert_eq!(services, 7),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn paper_preset_clamps_iterations_like_exp() {
+        match paper(30, 42).workload {
+            WorkloadSource::ClosedLoop { iterations, .. } => assert_eq!(iterations, 16),
+            other => panic!("{other:?}"),
+        }
+        match paper(1, 42).workload {
+            WorkloadSource::ClosedLoop { iterations, .. } => assert_eq!(iterations, 3),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! [`ScenarioReport`] — the unified result document every scenario run
+//! emits: one row per (variant, routing, policy, rep), JSON-serializable
+//! through `util::json` (f64 metrics survive the round trip bit-for-bit —
+//! the writer prints shortest-round-trip floats) and schema-validated so
+//! the CI smoke gate can reject a malformed emission.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::accounting::RoutingPolicy;
+use crate::experiments::fleet::FleetRow;
+use crate::policy::Policy;
+use crate::util::json::Json;
+use crate::util::table::{fmt_ms, Table};
+
+/// Bumped when a field changes meaning; `validate` pins it.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One run's aggregate metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioRow {
+    /// Spec name.
+    pub scenario: String,
+    /// Sweep label (`"param=value ..."`; empty when nothing swept).
+    pub variant: String,
+    /// What generated the load (`mix`, a workload name, `trace`, ...).
+    pub workload: String,
+    pub rep: u32,
+    pub policy: Policy,
+    pub routing: RoutingPolicy,
+    pub nodes: usize,
+    pub services: usize,
+    pub completed: u64,
+    pub failed: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub cold_starts: u64,
+    pub inplace_scale_ups: u64,
+    pub avg_committed_mcpu: f64,
+    pub pods_created: u64,
+}
+
+impl ScenarioRow {
+    /// View as a fleet row (the fleet preset renders through the original
+    /// `fleet_table`/`routing_table`, proving the presets share schema).
+    pub fn to_fleet_row(&self) -> FleetRow {
+        FleetRow {
+            policy: self.policy,
+            routing: self.routing,
+            nodes: self.nodes,
+            services: self.services,
+            completed: self.completed,
+            failed: self.failed,
+            mean_ms: self.mean_ms,
+            p50_ms: self.p50_ms,
+            p99_ms: self.p99_ms,
+            cold_starts: self.cold_starts,
+            inplace_scale_ups: self.inplace_scale_ups,
+            avg_committed_mcpu: self.avg_committed_mcpu,
+            pods_created: self.pods_created,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", self.scenario.as_str().into()),
+            ("variant", self.variant.as_str().into()),
+            ("workload", self.workload.as_str().into()),
+            ("rep", u64::from(self.rep).into()),
+            ("policy", self.policy.name().into()),
+            ("routing", self.routing.name().into()),
+            ("nodes", (self.nodes as u64).into()),
+            ("services", (self.services as u64).into()),
+            ("completed", self.completed.into()),
+            ("failed", self.failed.into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("p50_ms", self.p50_ms.into()),
+            ("p99_ms", self.p99_ms.into()),
+            ("cold_starts", self.cold_starts.into()),
+            ("inplace_scale_ups", self.inplace_scale_ups.into()),
+            ("avg_committed_mcpu", self.avg_committed_mcpu.into()),
+            ("pods_created", self.pods_created.into()),
+        ])
+    }
+
+    fn from_json(j: &Json, path: &str) -> Result<ScenarioRow, String> {
+        let req_u64 = |k: &str| {
+            j.req_u64(k)
+                .map_err(|e| format!("{path}.{k}: {e}"))
+        };
+        let req_f64 = |k: &str| {
+            j.req_f64(k)
+                .map_err(|e| format!("{path}.{k}: {e}"))
+        };
+        let req_str = |k: &str| {
+            j.req_str(k)
+                .map(str::to_string)
+                .map_err(|e| format!("{path}.{k}: {e}"))
+        };
+        Ok(ScenarioRow {
+            scenario: req_str("scenario")?,
+            variant: req_str("variant")?,
+            workload: req_str("workload")?,
+            rep: req_u64("rep")? as u32,
+            policy: req_str("policy")?
+                .parse::<Policy>()
+                .map_err(|e| format!("{path}.policy: {e}"))?,
+            routing: req_str("routing")?
+                .parse::<RoutingPolicy>()
+                .map_err(|e| format!("{path}.routing: {e}"))?,
+            nodes: req_u64("nodes")? as usize,
+            services: req_u64("services")? as usize,
+            completed: req_u64("completed")?,
+            failed: req_u64("failed")?,
+            mean_ms: req_f64("mean_ms")?,
+            p50_ms: req_f64("p50_ms")?,
+            p99_ms: req_f64("p99_ms")?,
+            cold_starts: req_u64("cold_starts")?,
+            inplace_scale_ups: req_u64("inplace_scale_ups")?,
+            avg_committed_mcpu: req_f64("avg_committed_mcpu")?,
+            pods_created: req_u64("pods_created")?,
+        })
+    }
+}
+
+/// The unified result document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioReport {
+    pub name: String,
+    /// Canonical echo of the spec that produced the rows (provenance).
+    pub spec: Json,
+    pub rows: Vec<ScenarioRow>,
+}
+
+impl ScenarioReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", SCHEMA_VERSION.into()),
+            ("name", self.name.as_str().into()),
+            ("spec", self.spec.clone()),
+            ("rows", Json::arr(self.rows.iter().map(ScenarioRow::to_json))),
+        ])
+    }
+
+    /// Validates a JSON document against the report schema; returns the
+    /// first problem found, with its path. (Thin wrapper over the single
+    /// parsing pass in [`ScenarioReport::from_json`].)
+    pub fn validate(j: &Json) -> Result<(), String> {
+        ScenarioReport::from_json(j).map(|_| ())
+    }
+
+    /// Parses and validates a document in one pass.
+    pub fn from_json(j: &Json) -> Result<ScenarioReport, String> {
+        let m = j.as_obj().ok_or("report must be a JSON object")?;
+        for key in ["schema_version", "name", "spec", "rows"] {
+            if !m.contains_key(key) {
+                return Err(format!("missing top-level field '{key}'"));
+            }
+        }
+        for key in m.keys() {
+            if !["schema_version", "name", "spec", "rows"].contains(&key.as_str()) {
+                return Err(format!("unknown top-level field '{key}'"));
+            }
+        }
+        let version = j
+            .req_u64("schema_version")
+            .map_err(|e| e.to_string())?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {version} unsupported (expected {SCHEMA_VERSION})"
+            ));
+        }
+        let spec = j
+            .get("spec")
+            .filter(|s| s.as_obj().is_some())
+            .cloned()
+            .ok_or("'spec' must be an object")?;
+        let rows = j
+            .req_arr("rows")
+            .map_err(|e| e.to_string())?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ScenarioRow::from_json(r, &format!("rows[{i}]")))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ScenarioReport {
+            name: j.req_str("name").map_err(|e| e.to_string())?.to_string(),
+            spec,
+            rows,
+        })
+    }
+
+    /// Writes `<dir>/scenario_<name>.json` (pretty) and returns the path.
+    pub fn save(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = self
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+            .collect();
+        let path = dir.join(format!("scenario_{slug}.json"));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+
+    /// Loads and validates a saved report.
+    pub fn load(path: &Path) -> Result<ScenarioReport, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        ScenarioReport::from_json(&j)
+    }
+
+    /// Renders the rows as one table (the generic `kinetic run` view).
+    pub fn table(&self) -> Table {
+        let swept = self.rows.iter().any(|r| !r.variant.is_empty());
+        let multi_rep = self.rows.iter().any(|r| r.rep > 0);
+        let mut headers = Vec::new();
+        if swept {
+            headers.push("Variant");
+        }
+        if multi_rep {
+            headers.push("Rep");
+        }
+        headers.extend([
+            "Workload",
+            "Routing",
+            "Policy",
+            "Completed",
+            "Failed",
+            "Mean (ms)",
+            "p50 (ms)",
+            "p99 (ms)",
+            "Cold",
+            "Committed (mCPU)",
+            "Pods",
+        ]);
+        let mut t = Table::new(headers).title(format!("Scenario: {}", self.name));
+        for r in &self.rows {
+            let mut cells = Vec::new();
+            if swept {
+                cells.push(r.variant.clone());
+            }
+            if multi_rep {
+                cells.push(r.rep.to_string());
+            }
+            cells.extend([
+                r.workload.clone(),
+                r.routing.name().to_string(),
+                r.policy.name().to_string(),
+                r.completed.to_string(),
+                r.failed.to_string(),
+                fmt_ms(r.mean_ms),
+                fmt_ms(r.p50_ms),
+                fmt_ms(r.p99_ms),
+                r.cold_starts.to_string(),
+                format!("{:.0}", r.avg_committed_mcpu),
+                r.pods_created.to_string(),
+            ]);
+            t.row(cells);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(variant: &str, mean: f64) -> ScenarioRow {
+        ScenarioRow {
+            scenario: "t".into(),
+            variant: variant.into(),
+            workload: "mix".into(),
+            rep: 0,
+            policy: Policy::InPlace,
+            routing: RoutingPolicy::LeastLoaded,
+            nodes: 4,
+            services: 8,
+            completed: 100,
+            failed: 0,
+            mean_ms: mean,
+            p50_ms: mean * 0.9,
+            p99_ms: mean * 3.0,
+            cold_starts: 0,
+            inplace_scale_ups: 100,
+            avg_committed_mcpu: 123.4,
+            pods_created: 8,
+        }
+    }
+
+    fn report() -> ScenarioReport {
+        ScenarioReport {
+            name: "t".into(),
+            spec: Json::obj(vec![("name", "t".into())]),
+            rows: vec![row("", 81.25), row("rate=0.5", 0.1 + 0.2)],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_f64_bits() {
+        let rep = report();
+        let text = rep.to_json().to_string_pretty();
+        let back = ScenarioReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
+        // The awkward 0.30000000000000004 survives exactly.
+        assert_eq!(
+            back.rows[1].mean_ms.to_bits(),
+            (0.1f64 + 0.2).to_bits()
+        );
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        let good = report().to_json();
+        assert!(ScenarioReport::validate(&good).is_ok());
+
+        let e = ScenarioReport::validate(&Json::parse("[1]").unwrap()).unwrap_err();
+        assert!(e.contains("object"), "{e}");
+
+        let mut m = good.as_obj().unwrap().clone();
+        m.remove("rows");
+        let e = ScenarioReport::validate(&Json::Obj(m)).unwrap_err();
+        assert!(e.contains("rows"), "{e}");
+
+        let mut m = good.as_obj().unwrap().clone();
+        m.insert("extra".into(), Json::Null);
+        let e = ScenarioReport::validate(&Json::Obj(m)).unwrap_err();
+        assert!(e.contains("extra"), "{e}");
+
+        let mut m = good.as_obj().unwrap().clone();
+        m.insert("schema_version".into(), 99u64.into());
+        let e = ScenarioReport::validate(&Json::Obj(m)).unwrap_err();
+        assert!(e.contains("schema_version 99"), "{e}");
+
+        // A row missing a metric names its path.
+        let text = good.to_string_compact().replace("\"p99_ms\":", "\"p99_xx\":");
+        let e = ScenarioReport::validate(&Json::parse(&text).unwrap()).unwrap_err();
+        assert!(e.contains("rows[0].p99_ms") || e.contains("rows[1].p99_ms"), "{e}");
+
+        // A bogus policy name is caught.
+        let text = good.to_string_compact().replace("\"in-place\"", "\"tepid\"");
+        let e = ScenarioReport::validate(&Json::parse(&text).unwrap()).unwrap_err();
+        assert!(e.contains("policy"), "{e}");
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("kinetic-scen-{}", std::process::id()));
+        let rep = report();
+        let path = rep.save(&dir).unwrap();
+        assert!(path.ends_with("scenario_t.json"));
+        let back = ScenarioReport::load(&path).unwrap();
+        assert_eq!(back, rep);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_shows_variant_column_only_when_swept() {
+        let rep = report();
+        let ascii = rep.table().to_ascii();
+        assert!(ascii.contains("Variant"));
+        assert!(ascii.contains("rate=0.5"));
+        let plain = ScenarioReport {
+            rows: vec![row("", 10.0)],
+            ..report()
+        };
+        assert!(!plain.table().to_ascii().contains("Variant"));
+    }
+
+    #[test]
+    fn fleet_row_view_carries_everything() {
+        let r = row("", 50.0);
+        let f = r.to_fleet_row();
+        assert_eq!(f.policy, Policy::InPlace);
+        assert_eq!(f.nodes, 4);
+        assert_eq!(f.mean_ms.to_bits(), 50.0f64.to_bits());
+        assert_eq!(f.pods_created, 8);
+    }
+}

@@ -1,0 +1,1374 @@
+//! [`ScenarioSpec`] — the one declarative description every experiment,
+//! sweep and trace replay compiles from.
+//!
+//! A spec names a workload source (per-tenant synthetic streams, the
+//! Azure-style generator, an Azure Functions trace file, or the paper's
+//! closed-loop rig), a [`Topology`], the §3 policies and routing policies
+//! to compare, the autoscaler knobs, and optional [`Sweep`] axes that
+//! expand the spec into a grid of runs. Parsing is *strict*: unknown
+//! fields and out-of-range values are rejected with the JSON path in the
+//! error, so a typo'd knob can never silently run the default experiment.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::cluster::topology::{NodeShape, Topology};
+use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
+use crate::experiments::fleet::FLEET_MIX;
+use crate::knative::config::ScaleKnobs;
+use crate::policy::Policy;
+use crate::simclock::SimTime;
+use crate::util::json::Json;
+use crate::util::quantity::{Memory, MilliCpu, Resources};
+use crate::workload::registry::WorkloadKind;
+
+/// Hard cap on `variants × routing × policies × reps` — a sweep that
+/// expands past this is almost certainly a typo'd axis.
+pub const MAX_RUNS: usize = 4096;
+
+/// Largest integer the f64-backed JSON layer represents exactly (2⁵³);
+/// seeds above this would silently round, so parsing rejects them.
+pub const MAX_EXACT_SEED: u64 = 1 << 53;
+
+/// Parse/validation error, carrying the JSON path it occurred at.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpecError {
+    /// The document is not valid JSON at all.
+    Json(String),
+    /// A field the schema does not know (strict parsing).
+    UnknownField {
+        path: String,
+        field: String,
+        known: String,
+    },
+    /// A required field is absent.
+    Missing(String),
+    /// A field is present but its value is out of range / the wrong type.
+    Invalid { path: String, msg: String },
+    /// Could not read a referenced file.
+    Io { path: String, msg: String },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Json(e) => write!(f, "scenario is not valid JSON: {e}"),
+            SpecError::UnknownField { path, field, known } => write!(
+                f,
+                "unknown field '{field}' in {path} (known fields: {known})"
+            ),
+            SpecError::Missing(path) => write!(f, "missing required field {path}"),
+            SpecError::Invalid { path, msg } => write!(f, "invalid value at {path}: {msg}"),
+            SpecError::Io { path, msg } => write!(f, "cannot read {path}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+impl SpecError {
+    pub fn invalid(path: &str, msg: impl Into<String>) -> SpecError {
+        SpecError::Invalid {
+            path: path.to_string(),
+            msg: msg.into(),
+        }
+    }
+}
+
+/// Where the requests come from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSource {
+    /// `services` tenants, each an open-loop Poisson stream — the
+    /// `kinetic fleet` shape. Workloads cycle through `mix`.
+    Synthetic {
+        services: usize,
+        rate_per_service: f64,
+        horizon_s: f64,
+        mix: Vec<WorkloadKind>,
+    },
+    /// The synthetic Azure-style generator — the `kinetic trace` shape.
+    AzureGenerator {
+        functions: usize,
+        peak_rate: f64,
+        horizon_s: f64,
+        popularity_s: f64,
+        trough_ratio: f64,
+        period_s: f64,
+        burst_p: f64,
+    },
+    /// Replay of a real Azure Functions minute-count CSV.
+    TraceFile { path: String, time_scale: f64 },
+    /// The paper's §4.2 closed-loop rig (single VU, think time) over every
+    /// Table-2 workload — the policy portion of `kinetic exp`.
+    ClosedLoop { iterations: u32, think_s: f64 },
+}
+
+impl WorkloadSource {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            WorkloadSource::Synthetic { .. } => "synthetic",
+            WorkloadSource::AzureGenerator { .. } => "azure-generator",
+            WorkloadSource::TraceFile { .. } => "trace-file",
+            WorkloadSource::ClosedLoop { .. } => "closed-loop",
+        }
+    }
+}
+
+/// The fleet shape a scenario runs on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologySpec {
+    /// The paper's single 8-core / 10 GB node.
+    Paper,
+    /// `nodes` paper-shaped workers.
+    Uniform { nodes: usize },
+    /// The calibrated large/paper/small preset.
+    Hetero { nodes: usize },
+    /// An explicit list of node shapes.
+    Explicit { shapes: Vec<ShapeSpec> },
+}
+
+/// One explicit node shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeSpec {
+    pub name: String,
+    pub cpu_m: u64,
+    pub mem_mib: u64,
+    /// Startup/resize pipelines scaled by this factor (>1 ⇒ slower node).
+    pub calibration: Option<f64>,
+}
+
+impl TopologySpec {
+    pub fn build(&self) -> Topology {
+        match self {
+            TopologySpec::Paper => Topology::paper(),
+            TopologySpec::Uniform { nodes } => Topology::uniform_paper(*nodes),
+            TopologySpec::Hetero { nodes } => Topology::hetero_preset(*nodes),
+            TopologySpec::Explicit { shapes } => Topology::heterogeneous(
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let shape = NodeShape::new(
+                            &s.name,
+                            Resources::new(MilliCpu(s.cpu_m), Memory::from_mib(s.mem_mib)),
+                        );
+                        match s.calibration {
+                            Some(f) => shape.calibrated(f),
+                            None => shape,
+                        }
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        match self {
+            TopologySpec::Paper => 1,
+            TopologySpec::Uniform { nodes } | TopologySpec::Hetero { nodes } => *nodes,
+            TopologySpec::Explicit { shapes } => shapes.len(),
+        }
+    }
+
+    /// Parses the `--topology` CLI value (the one parser for it — the old
+    /// `Topology::from_cli` twin was removed so the spellings and error
+    /// text cannot drift).
+    pub fn from_cli(spec: &str, nodes: usize) -> Result<TopologySpec, String> {
+        match spec.to_ascii_lowercase().as_str() {
+            "paper" => Ok(TopologySpec::Paper),
+            "uniform" => Ok(TopologySpec::Uniform { nodes: nodes.max(1) }),
+            "hetero" | "heterogeneous" => Ok(TopologySpec::Hetero { nodes: nodes.max(1) }),
+            other => Err(format!(
+                "unknown topology: {other} (expected paper|uniform|hetero)"
+            )),
+        }
+    }
+}
+
+/// One sweep axis: a named parameter and the values it takes. All axes
+/// combine as a cartesian grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sweep {
+    pub param: String,
+    pub values: Vec<f64>,
+}
+
+/// The declarative scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub workload: WorkloadSource,
+    pub topology: TopologySpec,
+    pub policies: Vec<Policy>,
+    pub routing: Vec<RoutingPolicy>,
+    pub autoscaler: ScaleKnobs,
+    pub hybrid: HybridWeights,
+    pub seed: u64,
+    pub reps: u32,
+    pub sweep: Vec<Sweep>,
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn check_keys(
+    m: &BTreeMap<String, Json>,
+    path: &str,
+    allowed: &[&str],
+) -> Result<(), SpecError> {
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(SpecError::UnknownField {
+                path: path.to_string(),
+                field: k.clone(),
+                known: allowed.join(", "),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn as_obj<'a>(j: &'a Json, path: &str) -> Result<&'a BTreeMap<String, Json>, SpecError> {
+    j.as_obj()
+        .ok_or_else(|| SpecError::invalid(path, "expected an object"))
+}
+
+fn field_path(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}
+
+fn get_f64(
+    m: &BTreeMap<String, Json>,
+    path: &str,
+    key: &str,
+    default: f64,
+) -> Result<f64, SpecError> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| SpecError::invalid(&field_path(path, key), "expected a number")),
+    }
+}
+
+fn get_u64(
+    m: &BTreeMap<String, Json>,
+    path: &str,
+    key: &str,
+    default: u64,
+) -> Result<u64, SpecError> {
+    match m.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_u64().ok_or_else(|| {
+            SpecError::invalid(&field_path(path, key), "expected a non-negative integer")
+        }),
+    }
+}
+
+fn req_f64(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<f64, SpecError> {
+    match m.get(key) {
+        None => Err(SpecError::Missing(field_path(path, key))),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| SpecError::invalid(&field_path(path, key), "expected a number")),
+    }
+}
+
+fn req_u64(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<u64, SpecError> {
+    match m.get(key) {
+        None => Err(SpecError::Missing(field_path(path, key))),
+        Some(v) => v.as_u64().ok_or_else(|| {
+            SpecError::invalid(&field_path(path, key), "expected a non-negative integer")
+        }),
+    }
+}
+
+fn req_str<'a>(
+    m: &'a BTreeMap<String, Json>,
+    path: &str,
+    key: &str,
+) -> Result<&'a str, SpecError> {
+    match m.get(key) {
+        None => Err(SpecError::Missing(field_path(path, key))),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| SpecError::invalid(&field_path(path, key), "expected a string")),
+    }
+}
+
+fn check_range_f64(path: &str, v: f64, lo: f64, hi: f64) -> Result<f64, SpecError> {
+    if !v.is_finite() || v < lo || v > hi {
+        return Err(SpecError::invalid(
+            path,
+            format!("{v} is outside [{lo}, {hi}]"),
+        ));
+    }
+    Ok(v)
+}
+
+fn check_range_u64(path: &str, v: u64, lo: u64, hi: u64) -> Result<u64, SpecError> {
+    if v < lo || v > hi {
+        return Err(SpecError::invalid(
+            path,
+            format!("{v} is outside [{lo}, {hi}]"),
+        ));
+    }
+    Ok(v)
+}
+
+/// Formats a swept value the way the JSON writer would (integers without a
+/// decimal point) so variant labels stay readable.
+pub fn fmt_value(v: f64) -> String {
+    Json::Num(v).to_string_compact()
+}
+
+// ---------------------------------------------------------------- parsing
+
+impl ScenarioSpec {
+    /// Parses a spec from JSON text (strict).
+    pub fn parse(text: &str) -> Result<ScenarioSpec, SpecError> {
+        let j = Json::parse(text).map_err(|e| SpecError::Json(e.to_string()))?;
+        ScenarioSpec::from_json(&j)
+    }
+
+    /// Reads and parses a spec file.
+    pub fn load(path: &std::path::Path) -> Result<ScenarioSpec, SpecError> {
+        let text = std::fs::read_to_string(path).map_err(|e| SpecError::Io {
+            path: path.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        ScenarioSpec::parse(&text)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec, SpecError> {
+        let m = as_obj(j, "scenario")?;
+        check_keys(
+            m,
+            "scenario",
+            &[
+                "name",
+                "workload",
+                "topology",
+                "policies",
+                "routing",
+                "autoscaler",
+                "hybrid_weights",
+                "seed",
+                "reps",
+                "sweep",
+            ],
+        )?;
+        let name = req_str(m, "", "name")?.to_string();
+        if name.is_empty() {
+            return Err(SpecError::invalid("name", "must not be empty"));
+        }
+        let workload = parse_workload(
+            m.get("workload").ok_or(SpecError::Missing("workload".into()))?,
+        )?;
+        let topology = match m.get("topology") {
+            None => TopologySpec::Paper,
+            Some(t) => parse_topology(t)?,
+        };
+        let policies = parse_name_list(m.get("policies"), "policies", Policy::ALL.to_vec(), |s| {
+            s.parse::<Policy>()
+        })?;
+        let routing = parse_name_list(
+            m.get("routing"),
+            "routing",
+            vec![RoutingPolicy::LeastLoaded],
+            |s| s.parse::<RoutingPolicy>(),
+        )?;
+        let autoscaler = match m.get("autoscaler") {
+            None => ScaleKnobs::fleet_default(),
+            Some(a) => parse_autoscaler(a)?,
+        };
+        let hybrid = match m.get("hybrid_weights") {
+            None => HybridWeights::default(),
+            Some(h) => parse_hybrid(h)?,
+        };
+        let seed = check_range_u64("seed", get_u64(m, "", "seed", 42)?, 0, MAX_EXACT_SEED)?;
+        let reps = check_range_u64("reps", get_u64(m, "", "reps", 1)?, 1, 1000)? as u32;
+        let sweep = match m.get("sweep") {
+            None => Vec::new(),
+            Some(s) => parse_sweep(s)?,
+        };
+        let spec = ScenarioSpec {
+            name,
+            workload,
+            topology,
+            policies,
+            routing,
+            autoscaler,
+            hybrid,
+            seed,
+            reps,
+            sweep,
+        };
+        // Every swept (param, value) must apply cleanly, and the grid must
+        // stay within MAX_RUNS — validated here so errors surface at parse
+        // time, not mid-run.
+        spec.validate_sweep()?;
+        Ok(spec)
+    }
+
+    /// Parse-time sweep validation: probes each (param, value) against a
+    /// clone and checks the run-count product — O(Σ axis lengths), without
+    /// materializing the cartesian grid `expand` builds at run time.
+    fn validate_sweep(&self) -> Result<(), SpecError> {
+        let mut runs = self
+            .routing
+            .len()
+            .max(1)
+            .saturating_mul(self.policies.len().max(1))
+            .saturating_mul(self.reps as usize);
+        for axis in &self.sweep {
+            if axis.values.is_empty() {
+                return Err(SpecError::invalid(
+                    &format!("sweep.{}", axis.param),
+                    "values must not be empty",
+                ));
+            }
+            for &v in &axis.values {
+                let mut probe = self.clone();
+                probe.apply_param(&axis.param, v)?;
+            }
+            runs = runs.saturating_mul(axis.values.len());
+        }
+        if runs > MAX_RUNS {
+            return Err(SpecError::invalid(
+                "sweep",
+                format!("grid expands to {runs} runs (cap {MAX_RUNS})"),
+            ));
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ writing
+
+    /// Canonical JSON form (full, explicit; `None` knobs omitted).
+    pub fn to_json(&self) -> Json {
+        let workload = match &self.workload {
+            WorkloadSource::Synthetic {
+                services,
+                rate_per_service,
+                horizon_s,
+                mix,
+            } => Json::obj(vec![
+                ("type", "synthetic".into()),
+                ("services", (*services as u64).into()),
+                ("rate_per_service", (*rate_per_service).into()),
+                ("horizon_s", (*horizon_s).into()),
+                (
+                    "mix",
+                    Json::arr(mix.iter().map(|k| Json::from(k.name()))),
+                ),
+            ]),
+            WorkloadSource::AzureGenerator {
+                functions,
+                peak_rate,
+                horizon_s,
+                popularity_s,
+                trough_ratio,
+                period_s,
+                burst_p,
+            } => Json::obj(vec![
+                ("type", "azure-generator".into()),
+                ("functions", (*functions as u64).into()),
+                ("peak_rate", (*peak_rate).into()),
+                ("horizon_s", (*horizon_s).into()),
+                ("popularity_s", (*popularity_s).into()),
+                ("trough_ratio", (*trough_ratio).into()),
+                ("period_s", (*period_s).into()),
+                ("burst_p", (*burst_p).into()),
+            ]),
+            WorkloadSource::TraceFile { path, time_scale } => Json::obj(vec![
+                ("type", "trace-file".into()),
+                ("path", path.as_str().into()),
+                ("time_scale", (*time_scale).into()),
+            ]),
+            WorkloadSource::ClosedLoop { iterations, think_s } => Json::obj(vec![
+                ("type", "closed-loop".into()),
+                ("iterations", u64::from(*iterations).into()),
+                ("think_s", (*think_s).into()),
+            ]),
+        };
+        let topology = match &self.topology {
+            TopologySpec::Paper => Json::obj(vec![("kind", "paper".into())]),
+            TopologySpec::Uniform { nodes } => Json::obj(vec![
+                ("kind", "uniform".into()),
+                ("nodes", (*nodes as u64).into()),
+            ]),
+            TopologySpec::Hetero { nodes } => Json::obj(vec![
+                ("kind", "hetero".into()),
+                ("nodes", (*nodes as u64).into()),
+            ]),
+            TopologySpec::Explicit { shapes } => Json::obj(vec![
+                ("kind", "explicit".into()),
+                (
+                    "shapes",
+                    Json::arr(shapes.iter().map(|s| {
+                        let mut pairs = vec![
+                            ("name", Json::from(s.name.as_str())),
+                            ("cpu_m", s.cpu_m.into()),
+                            ("mem_mib", s.mem_mib.into()),
+                        ];
+                        if let Some(c) = s.calibration {
+                            pairs.push(("calibration", c.into()));
+                        }
+                        Json::obj(pairs)
+                    })),
+                ),
+            ]),
+        };
+        let mut autoscaler = vec![
+            ("max_scale", u64::from(self.autoscaler.max_scale).into()),
+            (
+                "target_concurrency",
+                self.autoscaler.target_concurrency.into(),
+            ),
+            (
+                "container_concurrency",
+                u64::from(self.autoscaler.container_concurrency).into(),
+            ),
+            (
+                "panic_window_divisor",
+                u64::from(self.autoscaler.panic_window_divisor).into(),
+            ),
+            ("panic_threshold", self.autoscaler.panic_threshold.into()),
+        ];
+        if let Some(w) = self.autoscaler.stable_window {
+            autoscaler.push(("stable_window_s", w.as_secs_f64().into()));
+        }
+        if let Some(p) = self.autoscaler.parked_cpu {
+            autoscaler.push(("parked_cpu_m", p.0.into()));
+        }
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("workload", workload),
+            ("topology", topology),
+            (
+                "policies",
+                Json::arr(self.policies.iter().map(|p| Json::from(p.name()))),
+            ),
+            (
+                "routing",
+                Json::arr(self.routing.iter().map(|r| Json::from(r.name()))),
+            ),
+            ("autoscaler", Json::obj(autoscaler)),
+            (
+                "hybrid_weights",
+                Json::obj(vec![
+                    ("in_flight", self.hybrid.in_flight.into()),
+                    ("pressure_div", self.hybrid.pressure_div.into()),
+                    ("resize", self.hybrid.resize.into()),
+                ]),
+            ),
+            ("seed", self.seed.into()),
+            ("reps", u64::from(self.reps).into()),
+            (
+                "sweep",
+                Json::arr(self.sweep.iter().map(|s| {
+                    Json::obj(vec![
+                        ("param", s.param.as_str().into()),
+                        ("values", Json::arr(s.values.iter().map(|&v| Json::from(v)))),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    // ----------------------------------------------------------- sweeping
+
+    /// Expands the sweep grid into concrete (label, spec) variants. With no
+    /// sweep axes this is the spec itself under an empty label.
+    pub fn expand(&self) -> Result<Vec<(String, ScenarioSpec)>, SpecError> {
+        let mut variants: Vec<(String, ScenarioSpec)> = vec![(String::new(), self.clone())];
+        for axis in &self.sweep {
+            if axis.values.is_empty() {
+                return Err(SpecError::invalid(
+                    &format!("sweep.{}", axis.param),
+                    "values must not be empty",
+                ));
+            }
+            let mut next = Vec::with_capacity(variants.len() * axis.values.len());
+            for (label, spec) in &variants {
+                for &v in &axis.values {
+                    let mut s = spec.clone();
+                    s.apply_param(&axis.param, v)?;
+                    let piece = format!("{}={}", axis.param, fmt_value(v));
+                    let label = if label.is_empty() {
+                        piece
+                    } else {
+                        format!("{label} {piece}")
+                    };
+                    next.push((label, s));
+                }
+            }
+            variants = next;
+        }
+        let runs = variants.len()
+            * self.routing.len().max(1)
+            * self.policies.len().max(1)
+            * self.reps as usize;
+        if runs > MAX_RUNS {
+            return Err(SpecError::invalid(
+                "sweep",
+                format!("grid expands to {runs} runs (cap {MAX_RUNS})"),
+            ));
+        }
+        // Swept specs must not themselves sweep when run.
+        for (_, s) in &mut variants {
+            s.sweep.clear();
+        }
+        Ok(variants)
+    }
+
+    /// Applies one swept value by parameter name.
+    fn apply_param(&mut self, param: &str, v: f64) -> Result<(), SpecError> {
+        let path = format!("sweep.{param}");
+        let as_u64 = |p: &str| -> Result<u64, SpecError> {
+            if v < 0.0 || v.fract() != 0.0 || !v.is_finite() {
+                return Err(SpecError::invalid(p, format!("{v} is not a non-negative integer")));
+            }
+            Ok(v as u64)
+        };
+        match param {
+            // Workload axes.
+            "services" => match &mut self.workload {
+                WorkloadSource::Synthetic { services, .. } => {
+                    *services = check_range_u64(&path, as_u64(&path)?, 1, 100_000)? as usize;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            "rate_per_service" => match &mut self.workload {
+                WorkloadSource::Synthetic { rate_per_service, .. } => {
+                    *rate_per_service = check_range_f64(&path, v, 1e-6, 1e6)?;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            "horizon_s" => match &mut self.workload {
+                WorkloadSource::Synthetic { horizon_s, .. }
+                | WorkloadSource::AzureGenerator { horizon_s, .. } => {
+                    *horizon_s = check_range_f64(&path, v, 1e-3, 1e7)?;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            "functions" => match &mut self.workload {
+                WorkloadSource::AzureGenerator { functions, .. } => {
+                    *functions = check_range_u64(&path, as_u64(&path)?, 1, 100_000)? as usize;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            "peak_rate" => match &mut self.workload {
+                WorkloadSource::AzureGenerator { peak_rate, .. } => {
+                    *peak_rate = check_range_f64(&path, v, 1e-6, 1e6)?;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            "burst_p" => match &mut self.workload {
+                WorkloadSource::AzureGenerator { burst_p, .. } => {
+                    *burst_p = check_range_f64(&path, v, 0.0, 1.0)?;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            "time_scale" => match &mut self.workload {
+                WorkloadSource::TraceFile { time_scale, .. } => {
+                    *time_scale = check_range_f64(&path, v, 1e-6, 1e3)?;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            "iterations" => match &mut self.workload {
+                WorkloadSource::ClosedLoop { iterations, .. } => {
+                    *iterations = check_range_u64(&path, as_u64(&path)?, 1, 10_000)? as u32;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            "think_s" => match &mut self.workload {
+                WorkloadSource::ClosedLoop { think_s, .. } => {
+                    *think_s = check_range_f64(&path, v, 0.0, 1e5)?;
+                }
+                _ => return Err(bad_axis(&path, self.workload.type_name())),
+            },
+            // Topology axis.
+            "nodes" => match &mut self.topology {
+                TopologySpec::Uniform { nodes } | TopologySpec::Hetero { nodes } => {
+                    *nodes = check_range_u64(&path, as_u64(&path)?, 1, 10_000)? as usize;
+                }
+                _ => {
+                    return Err(SpecError::invalid(
+                        &path,
+                        "nodes is only sweepable on uniform/hetero topologies",
+                    ))
+                }
+            },
+            // Autoscaler axes.
+            "max_scale" => {
+                self.autoscaler.max_scale =
+                    check_range_u64(&path, as_u64(&path)?, 1, 1000)? as u32;
+            }
+            "target_concurrency" => {
+                self.autoscaler.target_concurrency = check_range_f64(&path, v, 0.01, 1e4)?;
+            }
+            "container_concurrency" => {
+                self.autoscaler.container_concurrency =
+                    check_range_u64(&path, as_u64(&path)?, 0, 10_000)? as u32;
+            }
+            "stable_window_s" => {
+                self.autoscaler.stable_window =
+                    Some(SimTime::from_secs_f64(check_range_f64(&path, v, 1.0, 3600.0)?));
+            }
+            "panic_window_divisor" => {
+                self.autoscaler.panic_window_divisor =
+                    check_range_u64(&path, as_u64(&path)?, 1, 100)? as u32;
+            }
+            "panic_threshold" => {
+                self.autoscaler.panic_threshold = check_range_f64(&path, v, 1.0, 1e3)?;
+            }
+            "parked_cpu_m" => {
+                self.autoscaler.parked_cpu =
+                    Some(MilliCpu(check_range_u64(&path, as_u64(&path)?, 1, 8000)?));
+            }
+            // Hybrid-routing axes.
+            "hybrid_in_flight" => {
+                self.hybrid.in_flight = check_range_u64(&path, as_u64(&path)?, 0, 1_000_000)?;
+            }
+            "hybrid_pressure_div" => {
+                self.hybrid.pressure_div = check_range_u64(&path, as_u64(&path)?, 1, 1_000_000)?;
+            }
+            "hybrid_resize" => {
+                self.hybrid.resize = check_range_u64(&path, as_u64(&path)?, 0, 1_000_000)?;
+            }
+            "seed" => {
+                self.seed = check_range_u64(&path, as_u64(&path)?, 0, MAX_EXACT_SEED)?;
+            }
+            other => {
+                return Err(SpecError::invalid(
+                    &path,
+                    format!(
+                        "unknown sweep parameter '{other}' (known: services, \
+                         rate_per_service, horizon_s, functions, peak_rate, burst_p, \
+                         time_scale, iterations, think_s, nodes, max_scale, \
+                         target_concurrency, container_concurrency, stable_window_s, \
+                         panic_window_divisor, panic_threshold, parked_cpu_m, \
+                         hybrid_in_flight, hybrid_pressure_div, hybrid_resize, seed)"
+                    ),
+                ))
+            }
+        }
+        Ok(())
+    }
+}
+
+fn bad_axis(path: &str, source: &str) -> SpecError {
+    SpecError::invalid(
+        path,
+        format!("parameter does not apply to a '{source}' workload source"),
+    )
+}
+
+fn parse_name_list<T>(
+    j: Option<&Json>,
+    path: &str,
+    default: Vec<T>,
+    parse: impl Fn(&str) -> Result<T, String>,
+) -> Result<Vec<T>, SpecError> {
+    let Some(j) = j else { return Ok(default) };
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| SpecError::invalid(path, "expected an array of names"))?;
+    if arr.is_empty() {
+        return Err(SpecError::invalid(path, "must not be empty"));
+    }
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let s = v
+                .as_str()
+                .ok_or_else(|| SpecError::invalid(&format!("{path}[{i}]"), "expected a string"))?;
+            parse(s).map_err(|e| SpecError::invalid(&format!("{path}[{i}]"), e))
+        })
+        .collect()
+}
+
+fn parse_workload(j: &Json) -> Result<WorkloadSource, SpecError> {
+    let m = as_obj(j, "workload")?;
+    let ty = req_str(m, "workload", "type")?;
+    match ty {
+        "synthetic" => {
+            check_keys(
+                m,
+                "workload",
+                &["type", "services", "rate_per_service", "horizon_s", "mix"],
+            )?;
+            let services = check_range_u64(
+                "workload.services",
+                req_u64(m, "workload", "services")?,
+                1,
+                100_000,
+            )? as usize;
+            let rate_per_service = check_range_f64(
+                "workload.rate_per_service",
+                req_f64(m, "workload", "rate_per_service")?,
+                1e-6,
+                1e6,
+            )?;
+            let horizon_s = check_range_f64(
+                "workload.horizon_s",
+                req_f64(m, "workload", "horizon_s")?,
+                1e-3,
+                1e7,
+            )?;
+            let mix = match m.get("mix") {
+                None => FLEET_MIX.to_vec(),
+                Some(mx) => parse_name_list(Some(mx), "workload.mix", Vec::new(), |s| {
+                    s.parse::<WorkloadKind>()
+                })?,
+            };
+            Ok(WorkloadSource::Synthetic {
+                services,
+                rate_per_service,
+                horizon_s,
+                mix,
+            })
+        }
+        "azure-generator" => {
+            check_keys(
+                m,
+                "workload",
+                &[
+                    "type",
+                    "functions",
+                    "peak_rate",
+                    "horizon_s",
+                    "popularity_s",
+                    "trough_ratio",
+                    "period_s",
+                    "burst_p",
+                ],
+            )?;
+            Ok(WorkloadSource::AzureGenerator {
+                functions: check_range_u64(
+                    "workload.functions",
+                    req_u64(m, "workload", "functions")?,
+                    1,
+                    100_000,
+                )? as usize,
+                peak_rate: check_range_f64(
+                    "workload.peak_rate",
+                    req_f64(m, "workload", "peak_rate")?,
+                    1e-6,
+                    1e6,
+                )?,
+                horizon_s: check_range_f64(
+                    "workload.horizon_s",
+                    req_f64(m, "workload", "horizon_s")?,
+                    1e-3,
+                    1e7,
+                )?,
+                popularity_s: check_range_f64(
+                    "workload.popularity_s",
+                    get_f64(m, "workload", "popularity_s", 1.2)?,
+                    0.0,
+                    10.0,
+                )?,
+                trough_ratio: check_range_f64(
+                    "workload.trough_ratio",
+                    get_f64(m, "workload", "trough_ratio", 0.15)?,
+                    1e-3,
+                    1.0,
+                )?,
+                period_s: check_range_f64(
+                    "workload.period_s",
+                    get_f64(m, "workload", "period_s", 600.0)?,
+                    1.0,
+                    1e7,
+                )?,
+                burst_p: check_range_f64(
+                    "workload.burst_p",
+                    get_f64(m, "workload", "burst_p", 0.25)?,
+                    0.0,
+                    1.0,
+                )?,
+            })
+        }
+        "trace-file" => {
+            check_keys(m, "workload", &["type", "path", "time_scale"])?;
+            Ok(WorkloadSource::TraceFile {
+                path: req_str(m, "workload", "path")?.to_string(),
+                time_scale: check_range_f64(
+                    "workload.time_scale",
+                    get_f64(m, "workload", "time_scale", 1.0)?,
+                    1e-6,
+                    1e3,
+                )?,
+            })
+        }
+        "closed-loop" => {
+            check_keys(m, "workload", &["type", "iterations", "think_s"])?;
+            Ok(WorkloadSource::ClosedLoop {
+                iterations: check_range_u64(
+                    "workload.iterations",
+                    req_u64(m, "workload", "iterations")?,
+                    1,
+                    10_000,
+                )? as u32,
+                think_s: check_range_f64(
+                    "workload.think_s",
+                    get_f64(m, "workload", "think_s", 8.0)?,
+                    0.0,
+                    1e5,
+                )?,
+            })
+        }
+        other => Err(SpecError::invalid(
+            "workload.type",
+            format!(
+                "unknown workload type '{other}' \
+                 (expected synthetic|azure-generator|trace-file|closed-loop)"
+            ),
+        )),
+    }
+}
+
+fn parse_topology(j: &Json) -> Result<TopologySpec, SpecError> {
+    let m = as_obj(j, "topology")?;
+    let kind = req_str(m, "topology", "kind")?;
+    match kind {
+        "paper" => {
+            check_keys(m, "topology", &["kind"])?;
+            Ok(TopologySpec::Paper)
+        }
+        "uniform" | "hetero" => {
+            check_keys(m, "topology", &["kind", "nodes"])?;
+            let nodes = check_range_u64(
+                "topology.nodes",
+                req_u64(m, "topology", "nodes")?,
+                1,
+                10_000,
+            )? as usize;
+            Ok(if kind == "uniform" {
+                TopologySpec::Uniform { nodes }
+            } else {
+                TopologySpec::Hetero { nodes }
+            })
+        }
+        "explicit" => {
+            check_keys(m, "topology", &["kind", "shapes"])?;
+            let arr = m
+                .get("shapes")
+                .ok_or(SpecError::Missing("topology.shapes".into()))?
+                .as_arr()
+                .ok_or_else(|| SpecError::invalid("topology.shapes", "expected an array"))?;
+            if arr.is_empty() {
+                return Err(SpecError::invalid("topology.shapes", "must not be empty"));
+            }
+            let shapes = arr
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let path = format!("topology.shapes[{i}]");
+                    let sm = as_obj(s, &path)?;
+                    check_keys(sm, &path, &["name", "cpu_m", "mem_mib", "calibration"])?;
+                    Ok(ShapeSpec {
+                        name: req_str(sm, &path, "name")?.to_string(),
+                        cpu_m: check_range_u64(
+                            &format!("{path}.cpu_m"),
+                            req_u64(sm, &path, "cpu_m")?,
+                            1,
+                            1_000_000,
+                        )?,
+                        mem_mib: check_range_u64(
+                            &format!("{path}.mem_mib"),
+                            req_u64(sm, &path, "mem_mib")?,
+                            1,
+                            10_000_000,
+                        )?,
+                        calibration: match sm.get("calibration") {
+                            None => None,
+                            Some(c) => Some(check_range_f64(
+                                &format!("{path}.calibration"),
+                                c.as_f64().ok_or_else(|| {
+                                    SpecError::invalid(
+                                        &format!("{path}.calibration"),
+                                        "expected a number",
+                                    )
+                                })?,
+                                0.01,
+                                100.0,
+                            )?),
+                        },
+                    })
+                })
+                .collect::<Result<Vec<_>, SpecError>>()?;
+            Ok(TopologySpec::Explicit { shapes })
+        }
+        other => Err(SpecError::invalid(
+            "topology.kind",
+            format!("unknown topology kind '{other}' (expected paper|uniform|hetero|explicit)"),
+        )),
+    }
+}
+
+fn parse_autoscaler(j: &Json) -> Result<ScaleKnobs, SpecError> {
+    let m = as_obj(j, "autoscaler")?;
+    check_keys(
+        m,
+        "autoscaler",
+        &[
+            "max_scale",
+            "target_concurrency",
+            "container_concurrency",
+            "stable_window_s",
+            "panic_window_divisor",
+            "panic_threshold",
+            "parked_cpu_m",
+        ],
+    )?;
+    let d = ScaleKnobs::fleet_default();
+    Ok(ScaleKnobs {
+        max_scale: check_range_u64(
+            "autoscaler.max_scale",
+            get_u64(m, "autoscaler", "max_scale", u64::from(d.max_scale))?,
+            1,
+            1000,
+        )? as u32,
+        target_concurrency: check_range_f64(
+            "autoscaler.target_concurrency",
+            get_f64(m, "autoscaler", "target_concurrency", d.target_concurrency)?,
+            0.01,
+            1e4,
+        )?,
+        container_concurrency: check_range_u64(
+            "autoscaler.container_concurrency",
+            get_u64(
+                m,
+                "autoscaler",
+                "container_concurrency",
+                u64::from(d.container_concurrency),
+            )?,
+            0,
+            10_000,
+        )? as u32,
+        stable_window: match m.get("stable_window_s") {
+            None => None,
+            Some(w) => Some(SimTime::from_secs_f64(check_range_f64(
+                "autoscaler.stable_window_s",
+                w.as_f64().ok_or_else(|| {
+                    SpecError::invalid("autoscaler.stable_window_s", "expected a number")
+                })?,
+                1.0,
+                3600.0,
+            )?)),
+        },
+        panic_window_divisor: check_range_u64(
+            "autoscaler.panic_window_divisor",
+            get_u64(
+                m,
+                "autoscaler",
+                "panic_window_divisor",
+                u64::from(d.panic_window_divisor),
+            )?,
+            1,
+            100,
+        )? as u32,
+        panic_threshold: check_range_f64(
+            "autoscaler.panic_threshold",
+            get_f64(m, "autoscaler", "panic_threshold", d.panic_threshold)?,
+            1.0,
+            1e3,
+        )?,
+        parked_cpu: match m.get("parked_cpu_m") {
+            None => None,
+            Some(p) => Some(MilliCpu(check_range_u64(
+                "autoscaler.parked_cpu_m",
+                p.as_u64().ok_or_else(|| {
+                    SpecError::invalid("autoscaler.parked_cpu_m", "expected an integer")
+                })?,
+                1,
+                8000,
+            )?)),
+        },
+    })
+}
+
+fn parse_hybrid(j: &Json) -> Result<HybridWeights, SpecError> {
+    let m = as_obj(j, "hybrid_weights")?;
+    check_keys(m, "hybrid_weights", &["in_flight", "pressure_div", "resize"])?;
+    let d = HybridWeights::default();
+    Ok(HybridWeights {
+        in_flight: check_range_u64(
+            "hybrid_weights.in_flight",
+            get_u64(m, "hybrid_weights", "in_flight", d.in_flight)?,
+            0,
+            1_000_000,
+        )?,
+        pressure_div: check_range_u64(
+            "hybrid_weights.pressure_div",
+            get_u64(m, "hybrid_weights", "pressure_div", d.pressure_div)?,
+            1,
+            1_000_000,
+        )?,
+        resize: check_range_u64(
+            "hybrid_weights.resize",
+            get_u64(m, "hybrid_weights", "resize", d.resize)?,
+            0,
+            1_000_000,
+        )?,
+    })
+}
+
+fn parse_sweep(j: &Json) -> Result<Vec<Sweep>, SpecError> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| SpecError::invalid("sweep", "expected an array of axes"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let path = format!("sweep[{i}]");
+            let m = as_obj(a, &path)?;
+            check_keys(m, &path, &["param", "values"])?;
+            let param = req_str(m, &path, "param")?.to_string();
+            let values = m
+                .get("values")
+                .ok_or_else(|| SpecError::Missing(format!("{path}.values")))?
+                .as_arr()
+                .ok_or_else(|| {
+                    SpecError::invalid(&format!("{path}.values"), "expected an array of numbers")
+                })?
+                .iter()
+                .enumerate()
+                .map(|(vi, v)| {
+                    v.as_f64().ok_or_else(|| {
+                        SpecError::invalid(
+                            &format!("{path}.values[{vi}]"),
+                            "expected a number",
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, SpecError>>()?;
+            if values.is_empty() {
+                return Err(SpecError::invalid(&format!("{path}.values"), "must not be empty"));
+            }
+            Ok(Sweep { param, values })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal() -> &'static str {
+        r#"{
+            "name": "t",
+            "workload": {"type": "synthetic", "services": 4,
+                         "rate_per_service": 0.1, "horizon_s": 30}
+        }"#
+    }
+
+    #[test]
+    fn minimal_spec_fills_defaults() {
+        let s = ScenarioSpec::parse(minimal()).unwrap();
+        assert_eq!(s.policies, Policy::ALL.to_vec());
+        assert_eq!(s.routing, vec![RoutingPolicy::LeastLoaded]);
+        assert_eq!(s.topology, TopologySpec::Paper);
+        assert_eq!(s.autoscaler, ScaleKnobs::fleet_default());
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.reps, 1);
+        match &s.workload {
+            WorkloadSource::Synthetic { mix, .. } => assert_eq!(mix, &FLEET_MIX.to_vec()),
+            other => panic!("wrong source {other:?}"),
+        }
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let s = ScenarioSpec::parse(minimal()).unwrap();
+        let again = ScenarioSpec::from_json(&Json::parse(&s.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(s, again);
+    }
+
+    #[test]
+    fn unknown_fields_rejected_with_path() {
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},"sedd":1}"#,
+        )
+        .unwrap_err();
+        match &e {
+            SpecError::UnknownField { field, known, .. } => {
+                assert_eq!(field, "sedd");
+                assert!(known.contains("seed"));
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+        let msg = e.to_string();
+        assert!(msg.contains("sedd") && msg.contains("seed"), "{msg}");
+
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1,"rate":2}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("workload") && e.contains("rate"), "{e}");
+    }
+
+    #[test]
+    fn invalid_values_explain_the_range() {
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":0,
+                "rate_per_service":1,"horizon_s":1}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("workload.services") && e.contains("outside"), "{e}");
+
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":-2,"horizon_s":1}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("rate_per_service"), "{e}");
+
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},"policies":["tepid"]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("policies[0]") && e.contains("tepid"), "{e}");
+    }
+
+    #[test]
+    fn sweep_expands_cartesian_grid() {
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t",
+                "workload":{"type":"synthetic","services":2,
+                            "rate_per_service":0.1,"horizon_s":10},
+                "topology":{"kind":"uniform","nodes":2},
+                "sweep":[{"param":"rate_per_service","values":[0.1,0.5]},
+                         {"param":"target_concurrency","values":[1,2,4]}]}"#,
+        )
+        .unwrap();
+        let vs = s.expand().unwrap();
+        assert_eq!(vs.len(), 6);
+        assert_eq!(vs[0].0, "rate_per_service=0.1 target_concurrency=1");
+        let mut labels: Vec<&str> = vs.iter().map(|(l, _)| l.as_str()).collect();
+        labels.dedup();
+        assert_eq!(labels.len(), 6, "labels must be unique");
+        match &vs[5].1.workload {
+            WorkloadSource::Synthetic { rate_per_service, .. } => {
+                assert_eq!(*rate_per_service, 0.5)
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(vs[5].1.autoscaler.target_concurrency, 4.0);
+        assert!(vs[5].1.sweep.is_empty());
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_param_and_oversize_grid() {
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},
+                "sweep":[{"param":"warp","values":[1]}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("warp") && e.contains("known:"), "{e}");
+
+        // 100 × 100 values × 3 policies > 4096.
+        let vals: Vec<String> = (1..=100).map(|i| i.to_string()).collect();
+        let doc = format!(
+            r#"{{"name":"t","workload":{{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1}},
+                "sweep":[{{"param":"seed","values":[{v}]}},
+                         {{"param":"max_scale","values":[{w}]}}]}}"#,
+            v = vals.join(","),
+            w = vals.join(",")
+        );
+        let e = ScenarioSpec::parse(&doc).unwrap_err().to_string();
+        assert!(e.contains("cap"), "{e}");
+    }
+
+    #[test]
+    fn explicit_topology_builds() {
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t",
+                "workload":{"type":"synthetic","services":1,
+                            "rate_per_service":1,"horizon_s":1},
+                "topology":{"kind":"explicit","shapes":[
+                    {"name":"big","cpu_m":16000,"mem_mib":32768,"calibration":0.85},
+                    {"name":"small","cpu_m":4000,"mem_mib":8192}]}}"#,
+        )
+        .unwrap();
+        let t = s.topology.build();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.shapes()[0].capacity.cpu, MilliCpu(16_000));
+        assert_eq!(t.shapes()[0].calibration_scale, Some(0.85));
+        assert_eq!(t.shapes()[1].calibration_scale, None);
+        // Round-trips too.
+        let again =
+            ScenarioSpec::from_json(&Json::parse(&s.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(s, again);
+    }
+
+    #[test]
+    fn topology_cli_parsing() {
+        assert_eq!(
+            TopologySpec::from_cli("paper", 99).unwrap().build(),
+            Topology::paper()
+        );
+        assert_eq!(TopologySpec::from_cli("uniform", 10).unwrap().nodes(), 10);
+        assert_eq!(TopologySpec::from_cli("hetero", 5).unwrap().build().len(), 5);
+        assert_eq!(TopologySpec::from_cli("uniform", 0).unwrap().nodes(), 1);
+        assert!(TopologySpec::from_cli("ring", 3).is_err());
+    }
+
+    #[test]
+    fn seed_above_f64_precision_rejected() {
+        // 2^53 + 2 is representable in f64 (even), but past the exact-
+        // integer range — the spec must refuse rather than silently run a
+        // rounded seed.
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},"seed":9007199254740994}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("seed") && e.contains("outside"), "{e}");
+    }
+
+    #[test]
+    fn trace_sources_parse() {
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"azure-generator","functions":8,
+                "peak_rate":4,"horizon_s":600}}"#,
+        )
+        .unwrap();
+        match s.workload {
+            WorkloadSource::AzureGenerator { popularity_s, burst_p, .. } => {
+                assert_eq!(popularity_s, 1.2);
+                assert_eq!(burst_p, 0.25);
+            }
+            other => panic!("{other:?}"),
+        }
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"trace-file","path":"a.csv"}}"#,
+        )
+        .unwrap();
+        match s.workload {
+            WorkloadSource::TraceFile { time_scale, .. } => assert_eq!(time_scale, 1.0),
+            other => panic!("{other:?}"),
+        }
+        let e =
+            ScenarioSpec::parse(r#"{"name":"t","workload":{"type":"quantum"}}"#).unwrap_err();
+        assert!(e.to_string().contains("quantum"), "{e}");
+    }
+}

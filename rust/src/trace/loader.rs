@@ -1,0 +1,260 @@
+//! Loader for the public Azure Functions 2019 invocation-trace format
+//! (Shahrad et al., ATC '20): a CSV whose rows are functions and whose
+//! numeric columns are per-minute invocation counts —
+//!
+//! ```text
+//! HashOwner,HashApp,HashFunction,Trigger,1,2,3,...,1440
+//! o1,a1,f1,http,0,3,1,...
+//! ```
+//!
+//! The loader turns that matrix into the deterministic [`TraceEvent`]
+//! stream the replayer consumes: a count of `k` in minute `m` becomes `k`
+//! events spread evenly inside the minute (no RNG — file in, events out,
+//! bit-stable across runs). Function indices are popularity ranks (rank 0 =
+//! most invocations), matching [`TraceGenerator::profile_for`]'s
+//! "hot ranks are short functions" mapping, with ties broken by first
+//! appearance in the file so loading is order-stable.
+
+use std::path::Path;
+
+use crate::simclock::SimTime;
+use crate::trace::generator::TraceEvent;
+
+/// A trace materialized from a file.
+#[derive(Debug, Clone)]
+pub struct LoadedTrace {
+    /// Chronologically sorted invocation stream.
+    pub events: Vec<TraceEvent>,
+    /// Distinct functions (ranks run `0..functions`).
+    pub functions: usize,
+    /// `HashFunction` values by rank (provenance for reports).
+    pub names: Vec<String>,
+    /// Horizon covered by the file after scaling.
+    pub horizon: SimTime,
+}
+
+/// Parses an Azure-Functions-style minute-count CSV. `time_scale`
+/// compresses (or stretches) the trace clock: `0.1` replays a day of trace
+/// in 2.4 simulated hours. Errors carry the offending line number.
+pub fn load_azure_csv(path: &Path, time_scale: f64) -> Result<LoadedTrace, String> {
+    if !(time_scale.is_finite() && time_scale > 0.0) {
+        return Err(format!("time_scale must be a positive number, got {time_scale}"));
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read trace file {}: {e}", path.display()))?;
+    parse_azure_csv(&text, time_scale).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn parse_azure_csv(text: &str, time_scale: f64) -> Result<LoadedTrace, String> {
+    let mut lines = text.lines().enumerate();
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| "empty trace file".to_string())?;
+    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+    let func_col = cols
+        .iter()
+        .position(|c| c.eq_ignore_ascii_case("HashFunction"))
+        .ok_or_else(|| "header has no HashFunction column".to_string())?;
+    // In the real dataset HashFunction is only unique per (owner, app) —
+    // identity is the triple when those columns are present.
+    let owner_col = cols.iter().position(|c| c.eq_ignore_ascii_case("HashOwner"));
+    let app_col = cols.iter().position(|c| c.eq_ignore_ascii_case("HashApp"));
+    // Minute columns are the ones whose header parses as a 1-based minute
+    // index; everything else (HashOwner, Trigger, ...) is metadata.
+    let minute_cols: Vec<(usize, u64)> = cols
+        .iter()
+        .enumerate()
+        .filter_map(|(i, c)| c.parse::<u64>().ok().map(|m| (i, m)))
+        .collect();
+    if minute_cols.is_empty() {
+        return Err("header has no minute-count columns (1,2,...)".to_string());
+    }
+    if minute_cols.iter().any(|&(_, m)| m == 0) {
+        return Err("minute columns are 1-based; header has a column '0'".to_string());
+    }
+
+    // Accumulate per function: (first appearance, total, per-minute counts).
+    let mut names: Vec<String> = Vec::new();
+    let mut index_of: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    let mut totals: Vec<u64> = Vec::new();
+    let mut counts: Vec<Vec<(u64, u64)>> = Vec::new(); // (minute, count)
+    for (lineno, line) in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let name = fields
+            .get(func_col)
+            .filter(|f| !f.is_empty())
+            .ok_or_else(|| format!("line {}: missing HashFunction", lineno + 1))?;
+        let part = |col: Option<usize>| col.and_then(|c| fields.get(c)).copied().unwrap_or("");
+        let key = format!("{}/{}/{name}", part(owner_col), part(app_col));
+        let idx = match index_of.get(&key) {
+            Some(&i) => i,
+            None => {
+                names.push((*name).to_string());
+                index_of.insert(key, names.len() - 1);
+                totals.push(0);
+                counts.push(Vec::new());
+                names.len() - 1
+            }
+        };
+        for &(col, minute) in &minute_cols {
+            let raw = fields.get(col).copied().unwrap_or("0");
+            if raw.is_empty() {
+                continue;
+            }
+            let k: u64 = raw.parse().map_err(|_| {
+                format!("line {}: minute {minute} count '{raw}' is not a number", lineno + 1)
+            })?;
+            if k > 0 {
+                totals[idx] += k;
+                counts[idx].push((minute, k));
+            }
+        }
+    }
+    if names.is_empty() {
+        return Err("trace file has a header but no function rows".to_string());
+    }
+
+    // Rank by total invocations, descending; first appearance breaks ties
+    // (sort_by on the index pair is stable by construction).
+    let mut order: Vec<usize> = (0..names.len()).collect();
+    order.sort_by(|&a, &b| totals[b].cmp(&totals[a]).then(a.cmp(&b)));
+    let mut rank_of = vec![0usize; names.len()];
+    for (rank, &orig) in order.iter().enumerate() {
+        rank_of[orig] = rank;
+    }
+
+    let mut events = Vec::new();
+    let mut max_minute = 0u64;
+    for (orig, per_minute) in counts.iter().enumerate() {
+        let rank = rank_of[orig];
+        for &(minute, k) in per_minute {
+            max_minute = max_minute.max(minute);
+            let minute_start = (minute - 1) as f64 * 60.0;
+            for i in 0..k {
+                // Even spacing inside the minute, offset half a slot so
+                // events never collide with the minute boundary.
+                let offset = (i as f64 + 0.5) * 60.0 / k as f64;
+                events.push(TraceEvent {
+                    at: SimTime::from_secs_f64((minute_start + offset) * time_scale),
+                    function: rank,
+                });
+            }
+        }
+    }
+    events.sort_by_key(|e| (e.at, e.function));
+    Ok(LoadedTrace {
+        events,
+        functions: names.len(),
+        names: order.into_iter().map(|i| names[i].clone()).collect(),
+        horizon: SimTime::from_secs_f64(max_minute as f64 * 60.0 * time_scale),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+HashOwner,HashApp,HashFunction,Trigger,1,2,3
+o1,a1,hot,http,4,2,0
+o1,a1,cool,timer,0,1,0
+o2,a2,mid,queue,1,1,1
+";
+
+    #[test]
+    fn parses_counts_into_ranked_events() {
+        let t = parse_azure_csv(SAMPLE, 1.0).unwrap();
+        assert_eq!(t.functions, 3);
+        // hot (6 total) > mid (3) > cool (1).
+        assert_eq!(t.names, vec!["hot", "mid", "cool"]);
+        assert_eq!(t.events.len(), 10);
+        let hot: Vec<_> = t.events.iter().filter(|e| e.function == 0).collect();
+        assert_eq!(hot.len(), 6);
+        // Minute 1's four hot events spread evenly: 7.5, 22.5, 37.5, 52.5 s.
+        assert_eq!(hot[0].at, SimTime::from_secs_f64(7.5));
+        assert_eq!(hot[3].at, SimTime::from_secs_f64(52.5));
+        // Sorted chronologically, inside the 3-minute horizon.
+        assert!(t.events.windows(2).all(|w| w[0].at <= w[1].at));
+        assert_eq!(t.horizon, SimTime::from_secs(180));
+        assert!(t.events.iter().all(|e| e.at < t.horizon));
+    }
+
+    #[test]
+    fn time_scale_compresses_the_clock() {
+        let full = parse_azure_csv(SAMPLE, 1.0).unwrap();
+        let tenth = parse_azure_csv(SAMPLE, 0.1).unwrap();
+        assert_eq!(full.events.len(), tenth.events.len());
+        assert_eq!(tenth.horizon, SimTime::from_secs(18));
+        for (a, b) in full.events.iter().zip(&tenth.events) {
+            assert_eq!(a.function, b.function);
+            assert!((a.at.as_secs_f64() * 0.1 - b.at.as_secs_f64()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rank_ties_break_by_first_appearance() {
+        let csv = "HashFunction,1\nb,2\na,2\n";
+        let t = parse_azure_csv(csv, 1.0).unwrap();
+        assert_eq!(t.names, vec!["b", "a"]);
+    }
+
+    #[test]
+    fn duplicate_function_rows_accumulate() {
+        // Identity is the (owner, app, function) triple; rows repeating
+        // the same triple accumulate into one rank.
+        let csv = "HashFunction,1,2\nf,1,0\nf,0,2\n";
+        let t = parse_azure_csv(csv, 1.0).unwrap();
+        assert_eq!(t.functions, 1);
+        assert_eq!(t.events.len(), 3);
+    }
+
+    #[test]
+    fn same_function_hash_in_different_apps_stays_distinct() {
+        // HashFunction values are only unique per (owner, app) in the real
+        // dataset — a collision across apps must not merge the functions.
+        let csv = "HashOwner,HashApp,HashFunction,1\no1,a1,f,3\no1,a2,f,1\n";
+        let t = parse_azure_csv(csv, 1.0).unwrap();
+        assert_eq!(t.functions, 2);
+        assert_eq!(t.names, vec!["f", "f"]);
+        let rank0 = t.events.iter().filter(|e| e.function == 0).count();
+        let rank1 = t.events.iter().filter(|e| e.function == 1).count();
+        assert_eq!((rank0, rank1), (3, 1));
+    }
+
+    #[test]
+    fn errors_are_specific() {
+        assert!(parse_azure_csv("", 1.0).unwrap_err().contains("empty"));
+        assert!(parse_azure_csv("HashOwner,1\nx,1\n", 1.0)
+            .unwrap_err()
+            .contains("HashFunction"));
+        assert!(parse_azure_csv("HashFunction,Trigger\nf,http\n", 1.0)
+            .unwrap_err()
+            .contains("minute-count"));
+        assert!(parse_azure_csv("HashFunction,0,1\nf,2,1\n", 1.0)
+            .unwrap_err()
+            .contains("1-based"));
+        let bad = parse_azure_csv("HashFunction,1\nf,many\n", 1.0).unwrap_err();
+        assert!(bad.contains("line 2") && bad.contains("many"), "{bad}");
+        assert!(parse_azure_csv("HashFunction,1\n", 1.0)
+            .unwrap_err()
+            .contains("no function rows"));
+    }
+
+    #[test]
+    fn file_roundtrip_via_tempfile() {
+        let dir = std::env::temp_dir().join(format!("kinetic-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("azure.csv");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let t = load_azure_csv(&path, 1.0).unwrap();
+        assert_eq!(t.events.len(), 10);
+        assert!(load_azure_csv(&dir.join("missing.csv"), 1.0)
+            .unwrap_err()
+            .contains("cannot read"));
+        assert!(load_azure_csv(&path, 0.0).unwrap_err().contains("time_scale"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

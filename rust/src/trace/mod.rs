@@ -9,7 +9,9 @@
 //! the paper's substitution for a production trace (DESIGN.md §1).
 
 pub mod generator;
+pub mod loader;
 pub mod replay;
 
 pub use generator::{TraceConfig, TraceEvent, TraceGenerator};
-pub use replay::{replay, ReplayReport};
+pub use loader::{load_azure_csv, LoadedTrace};
+pub use replay::{replay, replay_with, ReplayConfig, ReplayReport};

@@ -1,15 +1,52 @@
-//! Replays a generated trace against the platform under one policy and
-//! reports latency + reservation cost — the multi-tenant comparison the
-//! paper's §3 motivates ("resources ... can be dynamically allocated based
-//! on incoming requests").
+//! Replays a trace against the platform under one policy and reports
+//! latency + reservation cost — the multi-tenant comparison the paper's §3
+//! motivates ("resources ... can be dynamically allocated based on incoming
+//! requests").
+//!
+//! [`replay`] keeps the original paper-testbed shape (single node,
+//! least-loaded routing, the old hard-wired autoscaler knobs) bit-for-bit;
+//! [`replay_with`] is the scenario-engine entry point that generalizes the
+//! same run over any [`Topology`], [`RoutingPolicy`] and [`ScaleKnobs`].
 
 use std::collections::BTreeMap;
 
+use crate::cluster::topology::Topology;
+use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
 use crate::coordinator::platform::Simulation;
+use crate::knative::config::ScaleKnobs;
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::SimTime;
 use crate::trace::generator::{TraceEvent, TraceGenerator};
 use crate::util::stats::Samples;
+
+/// Everything one replay run depends on beyond the trace itself.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Distinct function ranks in the trace.
+    pub functions: usize,
+    pub policy: Policy,
+    pub routing: RoutingPolicy,
+    pub topology: Topology,
+    pub knobs: ScaleKnobs,
+    pub hybrid: HybridWeights,
+    pub seed: u64,
+}
+
+impl ReplayConfig {
+    /// The pre-redesign `kinetic trace` shape: paper testbed, least-loaded
+    /// routing, per-pod concurrency 2.
+    pub fn paper(functions: usize, policy: Policy, seed: u64) -> ReplayConfig {
+        ReplayConfig {
+            functions,
+            policy,
+            routing: RoutingPolicy::LeastLoaded,
+            topology: Topology::paper(),
+            knobs: ScaleKnobs::trace_default(),
+            hybrid: HybridWeights::default(),
+            seed,
+        }
+    }
+}
 
 /// Outcome of one policy's replay.
 #[derive(Debug, Clone)]
@@ -21,6 +58,7 @@ pub struct ReplayReport {
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub cold_starts: u64,
+    pub inplace_scale_ups: u64,
     /// Average committed CPU over the replay, milliCPU.
     pub avg_committed_mcpu: f64,
     /// Total pods created (churn).
@@ -28,30 +66,40 @@ pub struct ReplayReport {
     pub wall: SimTime,
 }
 
-/// Replays `trace` (over `functions` distinct functions) under `policy`.
+/// Replays `trace` (over `functions` distinct functions) under `policy` on
+/// the paper testbed — the original subcommand path.
 pub fn replay(
     trace: &[TraceEvent],
     functions: usize,
     policy: Policy,
     seed: u64,
 ) -> ReplayReport {
-    let mut sim = Simulation::with_params(PlatformParams::with_seed(seed));
+    replay_with(trace, &ReplayConfig::paper(functions, policy, seed))
+}
+
+/// Replays `trace` under an arbitrary topology / routing / knob bundle.
+pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
+    let mut sim = Simulation::fleet_with_params(
+        cfg.topology.clone(),
+        PlatformParams::with_seed(cfg.seed),
+    );
+    sim.world.routing = cfg.routing;
+    sim.world.hybrid_weights = cfg.hybrid;
     // Deploy one service per function rank. Multi-tenant traffic needs
-    // horizontal headroom too: allow the KPA to scale out to a few pods per
-    // function (the paper's future-work "holistic vertical + horizontal"
-    // setting), with a concurrency target so heavy functions fan out.
+    // horizontal headroom too: the knobs let the KPA scale out to a few
+    // pods per function (the paper's future-work "holistic vertical +
+    // horizontal" setting), with a concurrency target so heavy functions
+    // fan out.
     let mut names: BTreeMap<usize, String> = BTreeMap::new();
-    for rank in 0..functions {
+    for rank in 0..cfg.functions {
         let name = format!("fn-{rank}");
-        let mut cfg = policy.revision_config();
-        cfg.max_scale = 4;
-        cfg.target_concurrency = 2.0;
-        cfg.container_concurrency = 2;
+        let mut rc = cfg.policy.revision_config();
+        cfg.knobs.apply(&mut rc);
         let svc = crate::coordinator::service::Service::with_config(
             &name,
             TraceGenerator::profile_for(rank),
-            policy,
-            cfg,
+            cfg.policy,
+            rc,
         );
         sim.deploy_service(svc);
         names.insert(rank, name);
@@ -69,22 +117,25 @@ pub fn replay(
     let mut completed = 0;
     let mut failed = 0;
     let mut cold = 0;
+    let mut ups = 0;
     for (_, m) in sim.world.metrics.services() {
         completed += m.completed;
         failed += m.failed;
         cold += m.cold_starts;
+        ups += m.inplace_scale_ups;
         for &v in m.latency_ms.values() {
             lat.record(v);
         }
     }
     ReplayReport {
-        policy,
+        policy: cfg.policy,
         completed,
         failed,
         mean_ms: lat.mean(),
         p50_ms: lat.percentile(50.0),
         p99_ms: lat.percentile(99.0),
         cold_starts: cold,
+        inplace_scale_ups: ups,
         avg_committed_mcpu: sim.world.metrics.committed_cpu.average_mcpu(now),
         pods_created: sim.world.metrics.pods_created,
         wall: now.saturating_sub(start),
@@ -140,5 +191,37 @@ mod tests {
         assert!(cold.pods_created > warm.pods_created);
         assert!(cold.cold_starts > 0);
         assert_eq!(inp.cold_starts, 0);
+        // In-place resizes around requests; the others never do.
+        assert!(inp.inplace_scale_ups > 0);
+        assert_eq!(warm.inplace_scale_ups, 0);
+    }
+
+    /// The generalized entry point with the paper bundle is the legacy
+    /// replay, bit for bit — the scenario engine rides this equivalence.
+    #[test]
+    fn replay_with_paper_bundle_matches_legacy() {
+        let (trace, n) = tiny_trace();
+        for policy in Policy::ALL {
+            let legacy = replay(&trace, n, policy, 7);
+            let general = replay_with(&trace, &ReplayConfig::paper(n, policy, 7));
+            assert_eq!(legacy.mean_ms.to_bits(), general.mean_ms.to_bits(), "{policy:?}");
+            assert_eq!(legacy.completed, general.completed);
+            assert_eq!(legacy.pods_created, general.pods_created);
+        }
+    }
+
+    /// A replay over a multi-node topology spreads pods and still completes
+    /// everything — the ROADMAP's "replay over hetero" item.
+    #[test]
+    fn replay_over_hetero_topology() {
+        let (trace, n) = tiny_trace();
+        let cfg = ReplayConfig {
+            topology: Topology::hetero_preset(3),
+            routing: RoutingPolicy::Locality,
+            ..ReplayConfig::paper(n, Policy::Warm, 3)
+        };
+        let r = replay_with(&trace, &cfg);
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.completed, trace.len() as u64);
     }
 }

@@ -28,6 +28,8 @@ pub enum CliError {
     UnknownCommand(String),
     UnknownOption(String, String),
     MissingValue(String),
+    /// The option was given but its value does not parse / is out of range.
+    InvalidValue(String, String),
     Help(String),
 }
 
@@ -39,6 +41,7 @@ impl fmt::Display for CliError {
                 write!(f, "unknown option --{o} for command {cmd}")
             }
             CliError::MissingValue(o) => write!(f, "option --{o} requires a value"),
+            CliError::InvalidValue(o, msg) => write!(f, "invalid --{o}: {msg}"),
             CliError::Help(text) => write!(f, "{text}"),
         }
     }
@@ -69,6 +72,62 @@ impl Invocation {
         self.get(name)
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
+    }
+
+    // -- validated accessors -----------------------------------------------
+    //
+    // Unlike `get_u64`/`get_f64` (which silently fall back to the default
+    // on garbage), these reject unparseable or out-of-range values with
+    // the offending option named — the shared parsing path for the
+    // `seed`/`rate`/`seconds` options every subcommand declares.
+
+    /// Integer option constrained to `[lo, hi]`.
+    pub fn u64_in(&self, name: &str, lo: u64, hi: u64) -> Result<u64, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        let v: u64 = raw.parse().map_err(|_| {
+            CliError::InvalidValue(name.to_string(), format!("'{raw}' is not an integer"))
+        })?;
+        if v < lo || v > hi {
+            return Err(CliError::InvalidValue(
+                name.to_string(),
+                format!("{v} is outside [{lo}, {hi}]"),
+            ));
+        }
+        Ok(v)
+    }
+
+    /// Float option constrained to `[lo, hi]` (finite).
+    pub fn f64_in(&self, name: &str, lo: f64, hi: f64) -> Result<f64, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        let v: f64 = raw.parse().map_err(|_| {
+            CliError::InvalidValue(name.to_string(), format!("'{raw}' is not a number"))
+        })?;
+        if !v.is_finite() || v < lo || v > hi {
+            return Err(CliError::InvalidValue(
+                name.to_string(),
+                format!("{v} is outside [{lo}, {hi}]"),
+            ));
+        }
+        Ok(v)
+    }
+
+    /// The shared `--seed` option (any u64, but it must parse).
+    pub fn seed(&self) -> Result<u64, CliError> {
+        self.u64_in("seed", 0, u64::MAX)
+    }
+
+    /// The shared `--rate` option: requests/second in (0, 10⁶].
+    pub fn rate(&self) -> Result<f64, CliError> {
+        self.f64_in("rate", 1e-6, 1e6)
+    }
+
+    /// The shared `--seconds` option: a horizon of 1 s up to one year.
+    pub fn seconds(&self) -> Result<u64, CliError> {
+        self.u64_in("seconds", 1, 31_536_000)
     }
 }
 
@@ -117,6 +176,22 @@ impl Command {
             is_flag: true,
         });
         self
+    }
+
+    // Shared option declarations — one help string and one validated
+    // accessor (`Invocation::{seed, rate, seconds}`) per option, instead of
+    // each subcommand re-declaring and re-parsing its own copy.
+
+    pub fn opt_seed(self, default: &'static str) -> Self {
+        self.opt("seed", "rng seed", default)
+    }
+
+    pub fn opt_rate(self, help: &'static str, default: &'static str) -> Self {
+        self.opt("rate", help, default)
+    }
+
+    pub fn opt_seconds(self, help: &'static str, default: &'static str) -> Self {
+        self.opt("seconds", help, default)
     }
 }
 
@@ -302,6 +377,38 @@ mod tests {
             app().parse(&sv(&["exp", "--id"])),
             Err(CliError::MissingValue(_))
         ));
+    }
+
+    #[test]
+    fn validated_accessors_reject_garbage_and_ranges() {
+        let app = App::new("k", "t").command(
+            Command::new("go", "x")
+                .opt_seed("42")
+                .opt_rate("rps", "0.5")
+                .opt_seconds("horizon", "300"),
+        );
+        let inv = app.parse(&sv(&["go"])).unwrap();
+        assert_eq!(inv.seed().unwrap(), 42);
+        assert_eq!(inv.rate().unwrap(), 0.5);
+        assert_eq!(inv.seconds().unwrap(), 300);
+
+        let inv = app.parse(&sv(&["go", "--seed", "banana"])).unwrap();
+        let e = inv.seed().unwrap_err().to_string();
+        assert!(e.contains("--seed") && e.contains("banana"), "{e}");
+
+        let inv = app.parse(&sv(&["go", "--rate", "0"])).unwrap();
+        let e = inv.rate().unwrap_err().to_string();
+        assert!(e.contains("--rate") && e.contains("outside"), "{e}");
+
+        let inv = app.parse(&sv(&["go", "--rate", "inf"])).unwrap();
+        assert!(inv.rate().is_err());
+
+        let inv = app.parse(&sv(&["go", "--seconds", "0"])).unwrap();
+        assert!(inv.seconds().is_err());
+
+        // The legacy accessor still silently falls back (documented).
+        let inv = app.parse(&sv(&["go", "--seed", "banana"])).unwrap();
+        assert_eq!(inv.get_u64("seed", 7), 7);
     }
 
     #[test]

@@ -35,6 +35,24 @@ impl WorkloadKind {
     }
 }
 
+impl std::str::FromStr for WorkloadKind {
+    type Err = String;
+
+    /// Parses the [`WorkloadKind::name`] spelling (scenario specs name
+    /// workload mixes by these strings).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let lower = s.to_ascii_lowercase();
+        WorkloadKind::ALL
+            .iter()
+            .find(|k| k.name() == lower)
+            .copied()
+            .ok_or_else(|| {
+                let known: Vec<&str> = WorkloadKind::ALL.iter().map(|k| k.name()).collect();
+                format!("unknown workload '{s}' (known: {})", known.join("|"))
+            })
+    }
+}
+
 /// Static execution profile of a function.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadProfile {

@@ -1,0 +1,334 @@
+//! Scenario API contract tests:
+//!
+//! 1. JSON round-trip: parse → serialize → parse is the identity.
+//! 2. Strict parsing: unknown fields / invalid values are rejected with
+//!    path-qualified errors.
+//! 3. Preset equivalence: the `fleet` and `trace` presets reproduce the
+//!    pre-redesign subcommand pipelines bit-for-bit (the acceptance
+//!    criterion; the golden fixture pins the `paper` preset's substrate).
+//! 4. The committed example scenario files under `examples/scenarios/`
+//!    parse, expand and (for smoke) match the built-in preset.
+
+use std::path::PathBuf;
+
+use kinetic::cluster::topology::Topology;
+use kinetic::experiments::fleet::{self, FleetConfig};
+use kinetic::policy::Policy;
+use kinetic::scenario::preset;
+use kinetic::scenario::spec::TopologySpec;
+use kinetic::scenario::{ScenarioEngine, ScenarioReport, ScenarioSpec, SpecError, WorkloadSource};
+use kinetic::simclock::SimTime;
+use kinetic::trace::generator::{TraceConfig, TraceGenerator};
+use kinetic::trace::replay::replay;
+use kinetic::util::json::Json;
+
+// ------------------------------------------------------------- round trip
+
+#[test]
+fn every_preset_round_trips_through_json() {
+    for name in preset::NAMES {
+        let spec = preset::by_name(name).unwrap();
+        let text = spec.to_json().to_string_pretty();
+        let once = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(spec, once, "{name}: parse(serialize(x)) != x");
+        let twice = ScenarioSpec::parse(&once.to_json().to_string_pretty()).unwrap();
+        assert_eq!(once, twice, "{name}: second round trip drifted");
+    }
+}
+
+#[test]
+fn sweep_and_knobs_round_trip() {
+    let spec = ScenarioSpec::parse(
+        r#"{
+        "name": "tuned",
+        "workload": {"type": "synthetic", "services": 12,
+                     "rate_per_service": 0.4, "horizon_s": 120,
+                     "mix": ["helloworld", "cpu"]},
+        "topology": {"kind": "hetero", "nodes": 9},
+        "policies": ["in-place", "warm"],
+        "routing": ["least-loaded", "hybrid"],
+        "autoscaler": {"max_scale": 8, "target_concurrency": 1.5,
+                       "container_concurrency": 2, "stable_window_s": 12,
+                       "parked_cpu_m": 100},
+        "hybrid_weights": {"in_flight": 1000, "pressure_div": 2, "resize": 750},
+        "seed": 7,
+        "reps": 2,
+        "sweep": [{"param": "rate_per_service", "values": [0.4, 0.8, 1.6]}]
+    }"#,
+    )
+    .unwrap();
+    let again = ScenarioSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+    assert_eq!(spec, again);
+    assert_eq!(spec.expand().unwrap().len(), 3);
+    assert_eq!(spec.autoscaler.stable_window, Some(SimTime::from_secs(12)));
+}
+
+// --------------------------------------------------------- strict parsing
+
+#[test]
+fn unknown_fields_and_bad_values_fail_with_paths() {
+    // Top-level typo.
+    let e = ScenarioSpec::parse(
+        r#"{"name":"x","workload":{"type":"synthetic","services":1,
+            "rate_per_service":1,"horizon_s":10},"routnig":["hybrid"]}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("routnig") && e.contains("routing"), "{e}");
+
+    // Nested typo inside autoscaler.
+    let e = ScenarioSpec::parse(
+        r#"{"name":"x","workload":{"type":"synthetic","services":1,
+            "rate_per_service":1,"horizon_s":10},
+            "autoscaler":{"max_scale":4,"stable_windows":30}}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("autoscaler") && e.contains("stable_windows"), "{e}");
+
+    // Wrong type.
+    let e = ScenarioSpec::parse(
+        r#"{"name":"x","workload":{"type":"synthetic","services":"many",
+            "rate_per_service":1,"horizon_s":10}}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("workload.services"), "{e}");
+
+    // Out-of-range knob.
+    let e = ScenarioSpec::parse(
+        r#"{"name":"x","workload":{"type":"synthetic","services":1,
+            "rate_per_service":1,"horizon_s":10},
+            "autoscaler":{"panic_window_divisor":0}}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("panic_window_divisor") && e.contains("outside"), "{e}");
+
+    // Bad routing name points at the element.
+    let e = ScenarioSpec::parse(
+        r#"{"name":"x","workload":{"type":"synthetic","services":1,
+            "rate_per_service":1,"horizon_s":10},"routing":["nearest"]}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("routing[0]"), "{e}");
+
+    // Not JSON at all.
+    assert!(matches!(
+        ScenarioSpec::parse("{"),
+        Err(SpecError::Json(_))
+    ));
+}
+
+// ----------------------------------------------------- preset equivalence
+
+/// The `fleet` preset through the engine vs the pre-redesign pipeline
+/// (`FleetConfig` + `fleet::run_all`), bit-for-bit, single routing.
+#[test]
+fn fleet_preset_matches_legacy_subcommand_pipeline() {
+    let (nodes, services, rate, seconds, seed) = (4usize, 8usize, 0.1f64, 60u64, 11u64);
+    let spec = preset::fleet(
+        TopologySpec::Uniform { nodes },
+        vec![kinetic::coordinator::accounting::RoutingPolicy::LeastLoaded],
+        services,
+        rate,
+        seconds,
+        seed,
+    );
+    let report = ScenarioEngine::run(&spec).unwrap();
+
+    // What `kinetic fleet` ran before the redesign (knob defaults are the
+    // old hard-wired constants).
+    let legacy_cfg = FleetConfig {
+        services,
+        rate_per_service: rate,
+        horizon: SimTime::from_secs(seconds),
+        ..FleetConfig::base(Topology::uniform_paper(nodes), seed)
+    };
+    let legacy = fleet::run_all(&legacy_cfg);
+
+    assert_eq!(report.rows.len(), legacy.len());
+    for (got, want) in report.rows.iter().zip(&legacy) {
+        assert_eq!(got.policy, want.policy);
+        assert_eq!(got.completed, want.completed, "{:?}", want.policy);
+        assert_eq!(got.failed, want.failed);
+        assert_eq!(
+            got.mean_ms.to_bits(),
+            want.mean_ms.to_bits(),
+            "{:?}: engine drifted from the legacy fleet pipeline",
+            want.policy
+        );
+        assert_eq!(got.p99_ms.to_bits(), want.p99_ms.to_bits());
+        assert_eq!(got.cold_starts, want.cold_starts);
+        assert_eq!(
+            got.avg_committed_mcpu.to_bits(),
+            want.avg_committed_mcpu.to_bits()
+        );
+        assert_eq!(got.pods_created, want.pods_created);
+    }
+}
+
+/// The routing sweep (`--routing all`) vs the legacy `routing_sweep`.
+#[test]
+fn fleet_preset_routing_sweep_matches_legacy() {
+    let spec = preset::fleet(
+        TopologySpec::Hetero { nodes: 3 },
+        kinetic::coordinator::accounting::RoutingPolicy::ALL.to_vec(),
+        6,
+        0.1,
+        30,
+        5,
+    );
+    let report = ScenarioEngine::run(&spec).unwrap();
+    let legacy_cfg = FleetConfig {
+        services: 6,
+        rate_per_service: 0.1,
+        horizon: SimTime::from_secs(30),
+        ..FleetConfig::base(Topology::hetero_preset(3), 5)
+    };
+    let legacy = fleet::routing_sweep(&legacy_cfg);
+    assert_eq!(report.rows.len(), 9);
+    assert_eq!(report.rows.len(), legacy.len());
+    for (got, want) in report.rows.iter().zip(&legacy) {
+        assert_eq!(got.routing, want.routing);
+        assert_eq!(got.policy, want.policy);
+        assert_eq!(got.mean_ms.to_bits(), want.mean_ms.to_bits());
+        assert_eq!(got.completed, want.completed);
+    }
+}
+
+/// The `trace` preset vs the pre-redesign pipeline (`TraceGenerator` +
+/// `replay`), bit-for-bit per policy.
+#[test]
+fn trace_preset_matches_legacy_subcommand_pipeline() {
+    let (functions, seconds, rate, seed) = (4usize, 120u64, 2.0f64, 3u64);
+    let spec = preset::trace(functions, seconds, rate, seed);
+    let report = ScenarioEngine::run(&spec).unwrap();
+
+    let legacy_trace = TraceGenerator::new(TraceConfig {
+        functions,
+        peak_rate: rate,
+        horizon: SimTime::from_secs(seconds),
+        seed,
+        ..TraceConfig::default()
+    })
+    .generate();
+
+    assert_eq!(report.rows.len(), Policy::ALL.len());
+    for (got, &policy) in report.rows.iter().zip(Policy::ALL.iter()) {
+        let want = replay(&legacy_trace, functions, policy, seed);
+        assert_eq!(got.policy, policy);
+        assert_eq!(got.completed, want.completed, "{policy:?}");
+        assert_eq!(got.failed, want.failed);
+        assert_eq!(
+            got.mean_ms.to_bits(),
+            want.mean_ms.to_bits(),
+            "{policy:?}: engine drifted from the legacy trace pipeline"
+        );
+        assert_eq!(got.p99_ms.to_bits(), want.p99_ms.to_bits());
+        assert_eq!(got.cold_starts, want.cold_starts);
+        assert_eq!(got.pods_created, want.pods_created);
+        assert_eq!(
+            got.avg_committed_mcpu.to_bits(),
+            want.avg_committed_mcpu.to_bits()
+        );
+    }
+}
+
+// ----------------------------------------------------- committed examples
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+#[test]
+fn committed_example_scenarios_parse_and_expand() {
+    let dir = scenarios_dir();
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).expect("examples/scenarios exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        found += 1;
+        let spec = ScenarioSpec::load(&path)
+            .unwrap_or_else(|e| panic!("{} does not parse: {e}", path.display()));
+        let variants = spec.expand().unwrap();
+        assert!(!variants.is_empty(), "{}", path.display());
+        // Canonical form round-trips.
+        let again = ScenarioSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(spec, again, "{}", path.display());
+    }
+    assert!(found >= 4, "expected the committed scenario set, found {found}");
+}
+
+#[test]
+fn smoke_file_matches_builtin_preset() {
+    let spec = ScenarioSpec::load(&scenarios_dir().join("smoke.json")).unwrap();
+    assert_eq!(
+        spec,
+        preset::smoke(),
+        "examples/scenarios/smoke.json and preset::smoke() must stay in lockstep"
+    );
+}
+
+/// End-to-end: run the smoke file exactly as CI does, save the report,
+/// reload it and validate the schema.
+#[test]
+fn smoke_scenario_report_validates_after_save() {
+    let spec = ScenarioSpec::load(&scenarios_dir().join("smoke.json")).unwrap();
+    let report = ScenarioEngine::run(&spec).unwrap();
+    assert_eq!(report.rows.len(), 3);
+    for r in &report.rows {
+        assert_eq!(r.failed, 0);
+        assert!(r.completed > 0);
+    }
+    let dir = std::env::temp_dir().join(format!("kinetic-smoke-{}", std::process::id()));
+    let path = report.save(&dir).unwrap();
+    let back = ScenarioReport::load(&path).unwrap();
+    assert_eq!(back, report);
+    ScenarioReport::validate(&Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap())
+        .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The autoscaling-study spec the ROADMAP calls for is committed and
+/// declares the target-concurrency × stable-window grid.
+#[test]
+fn autoscaling_sweep_spec_declares_the_roadmap_grid() {
+    let spec = ScenarioSpec::load(&scenarios_dir().join("autoscaling_sweep.json")).unwrap();
+    let params: Vec<&str> = spec.sweep.iter().map(|s| s.param.as_str()).collect();
+    assert!(params.contains(&"target_concurrency"), "{params:?}");
+    assert!(params.contains(&"stable_window_s"), "{params:?}");
+    match spec.workload {
+        WorkloadSource::Synthetic { .. } => {}
+        other => panic!("expected a synthetic fleet source, got {other:?}"),
+    }
+}
+
+/// The routing-saturation spec sweeps every routing policy at saturating
+/// rates on a heterogeneous fleet with tuned hybrid weights.
+#[test]
+fn routing_saturation_spec_covers_all_policies_at_load() {
+    let spec = ScenarioSpec::load(&scenarios_dir().join("routing_saturation.json")).unwrap();
+    assert_eq!(
+        spec.routing.len(),
+        3,
+        "must compare least-loaded, locality and hybrid"
+    );
+    assert!(matches!(spec.topology, TopologySpec::Hetero { .. }));
+    assert_ne!(
+        spec.hybrid,
+        kinetic::coordinator::accounting::HybridWeights::default(),
+        "ships tuned hybrid weights"
+    );
+    let rates: Vec<f64> = spec
+        .sweep
+        .iter()
+        .find(|s| s.param == "rate_per_service")
+        .expect("sweeps rate_per_service")
+        .values
+        .clone();
+    assert!(rates.iter().any(|&r| r >= 1.0), "must reach saturating rates");
+}
