@@ -1,0 +1,242 @@
+//! Report-to-report regression diffing — the future CI perf gate.
+//!
+//! Two [`ScenarioReport`](crate::scenario::ScenarioReport)s are aggregated
+//! (cross-rep) and matched cell-by-cell on the full
+//! (variant, workload, routing, policy) key. A cell regresses when its
+//! mean or p99 latency grows by more than the threshold percentage, or
+//! when it fails requests the baseline completed. Cells present on only
+//! one side are reported separately — a vanished variant must be visible,
+//! not silently skipped.
+
+use crate::analysis::stats::{Group, GroupKey};
+
+/// One matched cell's deltas. Percentages are `(new - base) / base × 100`
+/// (positive ⇒ slower). When the base latency is zero but the new one is
+/// not, the delta is reported as `None` ("n/a") and still flagged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    pub key: GroupKey,
+    pub base_mean: f64,
+    pub new_mean: f64,
+    pub mean_pct: Option<f64>,
+    pub base_p99: f64,
+    pub new_p99: f64,
+    pub p99_pct: Option<f64>,
+    pub base_failed: u64,
+    pub new_failed: u64,
+    /// Did this cell regress beyond the threshold?
+    pub regression: bool,
+}
+
+/// The full diff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Comparison {
+    pub threshold_pct: f64,
+    /// Matched cells, in the new report's order.
+    pub deltas: Vec<Delta>,
+    /// Cells only the base report has (removed coverage).
+    pub only_in_base: Vec<GroupKey>,
+    /// Cells only the new report has (added coverage).
+    pub only_in_new: Vec<GroupKey>,
+}
+
+impl Comparison {
+    pub fn regressions(&self) -> impl Iterator<Item = &Delta> {
+        self.deltas.iter().filter(|d| d.regression)
+    }
+
+    pub fn regression_count(&self) -> usize {
+        self.regressions().count()
+    }
+
+    pub fn has_regressions(&self) -> bool {
+        self.regression_count() > 0
+    }
+
+    /// Do the two reports cover different cells?
+    pub fn keys_mismatch(&self) -> bool {
+        !self.only_in_base.is_empty() || !self.only_in_new.is_empty()
+    }
+}
+
+fn pct(base: f64, new: f64) -> Option<f64> {
+    if base > 0.0 && base.is_finite() && new.is_finite() {
+        Some((new - base) / base * 100.0)
+    } else if base == 0.0 && new == 0.0 {
+        Some(0.0)
+    } else {
+        None
+    }
+}
+
+/// Diffs two aggregated reports at `threshold_pct`.
+pub fn compare(base: &[Group], new: &[Group], threshold_pct: f64) -> Comparison {
+    let mut deltas = Vec::new();
+    let mut only_in_new = Vec::new();
+    for n in new {
+        let Some(b) = base.iter().find(|b| b.key == n.key) else {
+            only_in_new.push(n.key.clone());
+            continue;
+        };
+        let mean_pct = pct(b.mean_ms.mean, n.mean_ms.mean);
+        let p99_pct = pct(b.p99_ms.mean, n.p99_ms.mean);
+        let latency_regressed = |p: Option<f64>, base_v: f64, new_v: f64| match p {
+            Some(p) => p > threshold_pct,
+            // No percentage: regressed exactly when latency appeared from
+            // nothing (base 0 ⇒ the base cell completed no work there).
+            None => base_v == 0.0 && new_v > 0.0,
+        };
+        // A cell that used to complete work and now completes none would
+        // read as a -100% "improvement" on latency alone — a total stall
+        // must trip the gate, not sail through it.
+        let stalled = b.has_latency() && !n.has_latency();
+        // Failures are summed across reps, so compare *rates*: cross-
+        // multiplying by the other side's rep count avoids floats and a
+        // spurious flag (or miss) when the two reports used different
+        // rep counts for the same cell.
+        let more_failures =
+            n.failed * u64::from(b.reps.max(1)) > b.failed * u64::from(n.reps.max(1));
+        let regression = stalled
+            || latency_regressed(mean_pct, b.mean_ms.mean, n.mean_ms.mean)
+            || latency_regressed(p99_pct, b.p99_ms.mean, n.p99_ms.mean)
+            || more_failures;
+        deltas.push(Delta {
+            key: n.key.clone(),
+            base_mean: b.mean_ms.mean,
+            new_mean: n.mean_ms.mean,
+            mean_pct,
+            base_p99: b.p99_ms.mean,
+            new_p99: n.p99_ms.mean,
+            p99_pct,
+            base_failed: b.failed,
+            new_failed: n.failed,
+            regression,
+        });
+    }
+    let only_in_base = base
+        .iter()
+        .filter(|b| !new.iter().any(|n| n.key == b.key))
+        .map(|b| b.key.clone())
+        .collect();
+    Comparison {
+        threshold_pct,
+        deltas,
+        only_in_base,
+        only_in_new,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::stats::{aggregate, test_row as row};
+    use crate::policy::Policy;
+
+    fn groups(mean_cold: f64, mean_inplace: f64) -> Vec<Group> {
+        aggregate(&[
+            row("", "mix", Policy::Cold, 0, mean_cold, 10),
+            row("", "mix", Policy::InPlace, 0, mean_inplace, 10),
+        ])
+    }
+
+    #[test]
+    fn identical_reports_have_no_regressions() {
+        let base = groups(100.0, 10.0);
+        let cmp = compare(&base, &base, 5.0);
+        assert_eq!(cmp.deltas.len(), 2);
+        assert!(!cmp.has_regressions());
+        assert!(!cmp.keys_mismatch());
+        assert_eq!(cmp.deltas[0].mean_pct, Some(0.0));
+    }
+
+    #[test]
+    fn slowdown_beyond_threshold_is_flagged() {
+        let base = groups(100.0, 10.0);
+        let new = groups(100.0, 12.0); // in-place +20% mean (and p99)
+        let cmp = compare(&base, &new, 10.0);
+        assert_eq!(cmp.regression_count(), 1);
+        let d = cmp.regressions().next().unwrap();
+        assert_eq!(d.key.policy, Policy::InPlace);
+        assert!((d.mean_pct.unwrap() - 20.0).abs() < 1e-9);
+        // Under a looser threshold it passes.
+        assert!(!compare(&base, &new, 25.0).has_regressions());
+        // An improvement is never a regression.
+        assert!(!compare(&base, &groups(100.0, 5.0), 10.0).has_regressions());
+    }
+
+    #[test]
+    fn new_failures_are_regressions() {
+        let base = groups(100.0, 10.0);
+        let mut bad = row("", "mix", Policy::InPlace, 0, 10.0, 10);
+        bad.failed = 2;
+        let new = aggregate(&[row("", "mix", Policy::Cold, 0, 100.0, 10), bad]);
+        let cmp = compare(&base, &new, 50.0);
+        assert_eq!(cmp.regression_count(), 1);
+        assert_eq!(cmp.regressions().next().unwrap().new_failed, 2);
+    }
+
+    /// Failure counts are summed across reps, so the gate must compare
+    /// per-rep rates: 3 reps × 1 failure is not worse than 1 rep × 2.
+    #[test]
+    fn failure_comparison_normalizes_by_rep_count() {
+        let mut b0 = row("", "mix", Policy::Cold, 0, 100.0, 10);
+        let mut b1 = row("", "mix", Policy::Cold, 1, 100.0, 10);
+        let mut b2 = row("", "mix", Policy::Cold, 2, 100.0, 10);
+        (b0.failed, b1.failed, b2.failed) = (1, 1, 1); // 3 failures over 3 reps
+        let base = aggregate(&[b0, b1, b2]);
+        let mut worse = row("", "mix", Policy::Cold, 0, 100.0, 10);
+        worse.failed = 2; // 2 failures over 1 rep: rate doubled
+        let cmp = compare(&base, &aggregate(&[worse]), 50.0);
+        assert_eq!(cmp.regression_count(), 1);
+        let mut same_rate = row("", "mix", Policy::Cold, 0, 100.0, 10);
+        same_rate.failed = 1; // 1 failure over 1 rep: identical rate
+        let cmp = compare(&base, &aggregate(&[same_rate]), 50.0);
+        assert!(!cmp.has_regressions());
+    }
+
+    #[test]
+    fn mismatched_variant_sets_are_surfaced_not_dropped() {
+        let base = aggregate(&[
+            row("a=1", "mix", Policy::Cold, 0, 100.0, 10),
+            row("a=2", "mix", Policy::Cold, 0, 100.0, 10),
+        ]);
+        let new = aggregate(&[
+            row("a=1", "mix", Policy::Cold, 0, 100.0, 10),
+            row("a=3", "mix", Policy::Cold, 0, 100.0, 10),
+        ]);
+        let cmp = compare(&base, &new, 5.0);
+        assert_eq!(cmp.deltas.len(), 1);
+        assert_eq!(cmp.only_in_base.len(), 1);
+        assert_eq!(cmp.only_in_base[0].variant, "a=2");
+        assert_eq!(cmp.only_in_new.len(), 1);
+        assert_eq!(cmp.only_in_new[0].variant, "a=3");
+        assert!(cmp.keys_mismatch());
+        assert!(!cmp.has_regressions());
+    }
+
+    /// A cell that completed work in the base run but nothing in the new
+    /// one must regress — latency alone would call the collapse "-100%".
+    #[test]
+    fn total_stall_is_a_regression_not_an_improvement() {
+        let base = aggregate(&[row("", "mix", Policy::InPlace, 0, 10.0, 10)]);
+        let new = aggregate(&[row("", "mix", Policy::InPlace, 0, 0.0, 0)]);
+        let cmp = compare(&base, &new, 5.0);
+        assert_eq!(cmp.regression_count(), 1);
+        let d = &cmp.deltas[0];
+        assert!(d.regression);
+        assert_eq!(d.mean_pct, Some(-100.0));
+    }
+
+    #[test]
+    fn latency_appearing_from_an_empty_base_cell_is_flagged_without_nan() {
+        let base = aggregate(&[row("", "mix", Policy::Cold, 0, 0.0, 0)]);
+        let new = aggregate(&[row("", "mix", Policy::Cold, 0, 50.0, 10)]);
+        let cmp = compare(&base, &new, 5.0);
+        assert_eq!(cmp.deltas[0].mean_pct, None);
+        assert!(cmp.deltas[0].regression);
+        // Both empty: 0% delta, no regression.
+        let cmp = compare(&base, &base, 5.0);
+        assert_eq!(cmp.deltas[0].mean_pct, Some(0.0));
+        assert!(!cmp.has_regressions());
+    }
+}

@@ -1,0 +1,324 @@
+//! The measurement pipeline: turns raw [`ScenarioReport`] rows into the
+//! paper-shaped derived numbers.
+//!
+//! * [`stats`] — cross-rep aggregation into [`Group`]s (mean/p50/p99 with
+//!   min/max spread, counters summed).
+//! * [`speedup`] — ratios against a baseline policy, reproducing the
+//!   shape of the paper's Table-3 improvement column (1.16×–18.15×).
+//! * [`compare`] — report-to-report regression diffing with a threshold
+//!   (`kinetic compare`, the future CI perf gate).
+//! * [`render`] — every view as ASCII / markdown / CSV through
+//!   [`util::table`](crate::util::table).
+//!
+//! [`AnalysisReport`] is the persistable result: a schema-versioned JSON
+//! document (`analysis_<name>.json`) mirroring what `kinetic analyze`
+//! prints, so downstream tooling never has to re-derive ratios from raw
+//! rows.
+
+pub mod compare;
+pub mod render;
+pub mod speedup;
+pub mod stats;
+
+pub use compare::{compare, Comparison, Delta};
+pub use render::{render, Format};
+pub use speedup::{against_baseline, ratio_range, Speedup};
+pub use stats::{aggregate, Group, GroupKey, MetricAgg};
+
+use std::path::{Path, PathBuf};
+
+use crate::policy::Policy;
+use crate::scenario::ScenarioReport;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Bumped when a field changes meaning; `validate` pins it.
+pub const ANALYSIS_SCHEMA_VERSION: u64 = 1;
+
+/// The analysis of one scenario report: aggregated groups annotated with
+/// speedups against `baseline`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalysisReport {
+    /// The analyzed report's scenario name.
+    pub name: String,
+    /// The policy every ratio is computed against.
+    pub baseline: Policy,
+    pub rows: Vec<Speedup>,
+}
+
+impl AnalysisReport {
+    /// Aggregates and annotates a scenario report.
+    pub fn from_scenario(report: &ScenarioReport, baseline: Policy) -> AnalysisReport {
+        let groups = aggregate(&report.rows);
+        AnalysisReport {
+            name: report.name.clone(),
+            baseline,
+            rows: against_baseline(&groups, baseline),
+        }
+    }
+
+    /// The min–max mean-latency improvement the given policy achieves over
+    /// the baseline across every cell — the paper's "1.16×–18.15×" shape.
+    pub fn headline(&self, policy: Policy) -> Option<(f64, f64)> {
+        ratio_range(&self.rows, policy)
+    }
+
+    pub fn aggregate_table(&self) -> Table {
+        let groups: Vec<Group> = self.rows.iter().map(|s| s.group.clone()).collect();
+        render::aggregate_table(&self.name, &groups)
+    }
+
+    pub fn speedup_table(&self) -> Table {
+        render::speedup_table(&self.name, self.baseline, &self.rows)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", ANALYSIS_SCHEMA_VERSION.into()),
+            ("name", self.name.as_str().into()),
+            ("baseline_policy", self.baseline.name().into()),
+            ("rows", Json::arr(self.rows.iter().map(speedup_to_json))),
+        ])
+    }
+
+    /// Validates a JSON document against the analysis schema; returns the
+    /// first problem found, with its path.
+    pub fn validate(j: &Json) -> Result<(), String> {
+        AnalysisReport::from_json(j).map(|_| ())
+    }
+
+    /// Parses and validates in one pass (strict top level).
+    pub fn from_json(j: &Json) -> Result<AnalysisReport, String> {
+        let m = j.as_obj().ok_or("analysis report must be a JSON object")?;
+        const KEYS: [&str; 4] = ["schema_version", "name", "baseline_policy", "rows"];
+        for key in KEYS {
+            if !m.contains_key(key) {
+                return Err(format!("missing top-level field '{key}'"));
+            }
+        }
+        for key in m.keys() {
+            if !KEYS.contains(&key.as_str()) {
+                return Err(format!("unknown top-level field '{key}'"));
+            }
+        }
+        let version = j.req_u64("schema_version").map_err(|e| e.to_string())?;
+        if version != ANALYSIS_SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {version} unsupported (expected {ANALYSIS_SCHEMA_VERSION})"
+            ));
+        }
+        let baseline = j
+            .req_str("baseline_policy")
+            .map_err(|e| e.to_string())?
+            .parse::<Policy>()
+            .map_err(|e| format!("baseline_policy: {e}"))?;
+        let rows = j
+            .req_arr("rows")
+            .map_err(|e| e.to_string())?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| speedup_from_json(r, &format!("rows[{i}]")))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(AnalysisReport {
+            name: j.req_str("name").map_err(|e| e.to_string())?.to_string(),
+            baseline,
+            rows,
+        })
+    }
+
+    /// Writes `<dir>/analysis_<name>.json` (pretty) and returns the path.
+    pub fn save(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        crate::util::json::save_named(dir, "analysis", &self.name, &self.to_json())
+    }
+}
+
+fn agg_to_json(m: &MetricAgg) -> Json {
+    Json::obj(vec![
+        ("mean", m.mean.into()),
+        ("min", m.min.into()),
+        ("max", m.max.into()),
+    ])
+}
+
+fn speedup_to_json(s: &Speedup) -> Json {
+    let g = &s.group;
+    let mut pairs = vec![
+        ("variant", Json::from(g.key.variant.as_str())),
+        ("workload", g.key.workload.as_str().into()),
+        ("routing", g.key.routing.name().into()),
+        ("policy", g.key.policy.name().into()),
+        ("reps", u64::from(g.reps).into()),
+        ("nodes", (g.nodes as u64).into()),
+        ("services", (g.services as u64).into()),
+        ("completed", g.completed.into()),
+        ("failed", g.failed.into()),
+        ("cold_starts", g.cold_starts.into()),
+        ("inplace_scale_ups", g.inplace_scale_ups.into()),
+        ("pods_created", g.pods_created.into()),
+        ("mean_ms", agg_to_json(&g.mean_ms)),
+        ("p50_ms", agg_to_json(&g.p50_ms)),
+        ("p99_ms", agg_to_json(&g.p99_ms)),
+        ("avg_committed_mcpu", agg_to_json(&g.avg_committed_mcpu)),
+    ];
+    // Undefined ratios are omitted, never NaN.
+    if let Some(r) = s.mean_ratio {
+        pairs.push(("speedup_mean", r.into()));
+    }
+    if let Some(r) = s.p99_ratio {
+        pairs.push(("speedup_p99", r.into()));
+    }
+    Json::obj(pairs)
+}
+
+fn agg_from_json(j: &Json, path: &str) -> Result<MetricAgg, String> {
+    Ok(MetricAgg {
+        mean: j.req_f64("mean").map_err(|e| format!("{path}.mean: {e}"))?,
+        min: j.req_f64("min").map_err(|e| format!("{path}.min: {e}"))?,
+        max: j.req_f64("max").map_err(|e| format!("{path}.max: {e}"))?,
+    })
+}
+
+fn speedup_from_json(j: &Json, path: &str) -> Result<Speedup, String> {
+    let req_u64 = |k: &str| j.req_u64(k).map_err(|e| format!("{path}.{k}: {e}"));
+    let req_str = |k: &str| {
+        j.req_str(k)
+            .map(str::to_string)
+            .map_err(|e| format!("{path}.{k}: {e}"))
+    };
+    let agg = |k: &str| {
+        agg_from_json(
+            j.get(k).ok_or_else(|| format!("{path}.{k}: missing"))?,
+            &format!("{path}.{k}"),
+        )
+    };
+    let opt_ratio = |k: &str| -> Result<Option<f64>, String> {
+        match j.get(k) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| format!("{path}.{k}: expected a number")),
+        }
+    };
+    Ok(Speedup {
+        group: Group {
+            key: GroupKey {
+                variant: req_str("variant")?,
+                workload: req_str("workload")?,
+                routing: req_str("routing")?
+                    .parse()
+                    .map_err(|e| format!("{path}.routing: {e}"))?,
+                policy: req_str("policy")?
+                    .parse()
+                    .map_err(|e| format!("{path}.policy: {e}"))?,
+            },
+            reps: req_u64("reps")? as u32,
+            nodes: req_u64("nodes")? as usize,
+            services: req_u64("services")? as usize,
+            completed: req_u64("completed")?,
+            failed: req_u64("failed")?,
+            cold_starts: req_u64("cold_starts")?,
+            inplace_scale_ups: req_u64("inplace_scale_ups")?,
+            pods_created: req_u64("pods_created")?,
+            mean_ms: agg("mean_ms")?,
+            p50_ms: agg("p50_ms")?,
+            p99_ms: agg("p99_ms")?,
+            avg_committed_mcpu: agg("avg_committed_mcpu")?,
+        },
+        mean_ratio: opt_ratio("speedup_mean")?,
+        p99_ratio: opt_ratio("speedup_p99")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::stats::test_row as row;
+    use crate::scenario::ScenarioRow;
+
+    fn scenario_report(rows: Vec<ScenarioRow>) -> ScenarioReport {
+        ScenarioReport {
+            name: "t".into(),
+            spec: Json::obj(vec![("name", "t".into())]),
+            rows,
+        }
+    }
+
+    fn analysis() -> AnalysisReport {
+        AnalysisReport::from_scenario(
+            &scenario_report(vec![
+                row("", "mix", Policy::Cold, 0, 100.0, 10),
+                row("", "mix", Policy::Warm, 0, 0.0, 0),
+                row("", "mix", Policy::InPlace, 0, 10.0, 10),
+            ]),
+            Policy::Cold,
+        )
+    }
+
+    #[test]
+    fn from_scenario_computes_ratios_and_headline() {
+        let a = analysis();
+        assert_eq!(a.rows.len(), 3);
+        assert_eq!(a.rows[0].mean_ratio, Some(1.0));
+        assert_eq!(a.rows[1].mean_ratio, None); // zero completions → no NaN
+        assert_eq!(a.rows[2].mean_ratio, Some(10.0));
+        assert_eq!(a.headline(Policy::InPlace), Some((10.0, 10.0)));
+        assert_eq!(a.headline(Policy::Warm), None);
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let a = analysis();
+        let text = a.to_json().to_string_pretty();
+        let back = AnalysisReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, a);
+        // The undefined warm ratio is omitted from the document.
+        assert!(!text.contains("\"speedup_mean\": null"));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        let good = analysis().to_json();
+        assert!(AnalysisReport::validate(&good).is_ok());
+
+        let mut m = good.as_obj().unwrap().clone();
+        m.remove("baseline_policy");
+        let e = AnalysisReport::validate(&Json::Obj(m)).unwrap_err();
+        assert!(e.contains("baseline_policy"), "{e}");
+
+        let mut m = good.as_obj().unwrap().clone();
+        m.insert("extra".into(), Json::Null);
+        let e = AnalysisReport::validate(&Json::Obj(m)).unwrap_err();
+        assert!(e.contains("extra"), "{e}");
+
+        let mut m = good.as_obj().unwrap().clone();
+        m.insert("schema_version".into(), 9u64.into());
+        let e = AnalysisReport::validate(&Json::Obj(m)).unwrap_err();
+        assert!(e.contains("schema_version 9"), "{e}");
+
+        let text = good.to_string_compact().replace("\"p99_ms\":", "\"p99_xx\":");
+        let e = AnalysisReport::validate(&Json::parse(&text).unwrap()).unwrap_err();
+        assert!(e.contains("p99_ms"), "{e}");
+    }
+
+    #[test]
+    fn save_writes_the_slugged_path() {
+        let dir = std::env::temp_dir().join(format!("kinetic-ana-{}", std::process::id()));
+        let path = analysis().save(&dir).unwrap();
+        assert!(path.ends_with("analysis_t.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        AnalysisReport::validate(&Json::parse(&text).unwrap()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tables_render_from_the_report() {
+        let a = analysis();
+        let md = a.speedup_table().to_markdown();
+        assert!(md.contains("× vs cold (mean)"), "{md}");
+        assert!(md.contains("10.00×"), "{md}");
+        assert!(md.contains("n/a"), "{md}");
+        let agg = a.aggregate_table().to_ascii();
+        assert!(agg.contains("least-loaded"), "{agg}");
+    }
+}

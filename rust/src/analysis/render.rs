@@ -1,0 +1,276 @@
+//! Table rendering for the analysis subsystem — every view goes through
+//! [`util::table::Table`](crate::util::table::Table) so one builder feeds
+//! the terminal (ASCII), the docs (markdown) and downstream plotting
+//! (CSV).
+
+use crate::analysis::compare::Comparison;
+use crate::analysis::speedup::Speedup;
+use crate::analysis::stats::{Group, MetricAgg};
+use crate::policy::Policy;
+use crate::util::table::{fmt_ms, fmt_ratio, Table};
+
+/// Output format for `kinetic analyze` / `kinetic compare`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Ascii,
+    Markdown,
+    Csv,
+}
+
+impl std::str::FromStr for Format {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "ascii" => Ok(Format::Ascii),
+            "markdown" | "md" => Ok(Format::Markdown),
+            "csv" => Ok(Format::Csv),
+            other => Err(format!(
+                "unknown format: {other} (expected markdown|ascii|csv)"
+            )),
+        }
+    }
+}
+
+/// Renders one table in the chosen format.
+pub fn render(t: &Table, format: Format) -> String {
+    match format {
+        Format::Ascii => t.to_ascii(),
+        Format::Markdown => t.to_markdown(),
+        Format::Csv => t.to_csv(),
+    }
+}
+
+/// A latency cell: the cross-rep mean, with the min–max spread appended
+/// when reps disagree (`12.34 [11.90, 12.80]`).
+fn fmt_agg(m: &MetricAgg) -> String {
+    if m.has_spread() {
+        format!(
+            "{} [{}, {}]",
+            fmt_ms(m.mean),
+            fmt_ms(m.min),
+            fmt_ms(m.max)
+        )
+    } else {
+        fmt_ms(m.mean)
+    }
+}
+
+/// A ratio cell: paper-style two decimals with the `×` mark, `n/a` when
+/// the ratio is undefined (zero completions on either side).
+fn fmt_speedup(r: Option<f64>) -> String {
+    match r {
+        Some(r) => format!("{}×", fmt_ratio(r)),
+        None => "n/a".to_string(),
+    }
+}
+
+/// A delta-percent cell: explicit sign, one decimal, `n/a` when undefined.
+fn fmt_pct(p: Option<f64>) -> String {
+    match p {
+        Some(p) => format!("{p:+.1}%"),
+        None => "n/a".to_string(),
+    }
+}
+
+fn has_variants(groups: &[Group]) -> bool {
+    groups.iter().any(|g| !g.key.variant.is_empty())
+}
+
+/// The cross-rep aggregate view: one row per (variant, workload, routing,
+/// policy) with counters summed and latency spreads.
+pub fn aggregate_table(name: &str, groups: &[Group]) -> Table {
+    let swept = has_variants(groups);
+    let multi_rep = groups.iter().any(|g| g.reps > 1);
+    let mut headers = Vec::new();
+    if swept {
+        headers.push("Variant");
+    }
+    headers.extend(["Workload", "Routing", "Policy"]);
+    if multi_rep {
+        headers.push("Reps");
+    }
+    headers.extend([
+        "Completed",
+        "Failed",
+        "Mean (ms)",
+        "p50 (ms)",
+        "p99 (ms)",
+        "Cold",
+        "Committed (mCPU)",
+        "Pods",
+    ]);
+    let mut t = Table::new(headers).title(format!("Aggregate: {name}"));
+    for g in groups {
+        let mut cells = Vec::new();
+        if swept {
+            cells.push(g.key.variant.clone());
+        }
+        cells.extend([
+            g.key.workload.clone(),
+            g.key.routing.name().to_string(),
+            g.key.policy.name().to_string(),
+        ]);
+        if multi_rep {
+            cells.push(g.reps.to_string());
+        }
+        cells.extend([
+            g.completed.to_string(),
+            g.failed.to_string(),
+            fmt_agg(&g.mean_ms),
+            fmt_agg(&g.p50_ms),
+            fmt_agg(&g.p99_ms),
+            g.cold_starts.to_string(),
+            format!("{:.0}", g.avg_committed_mcpu.mean),
+            g.pods_created.to_string(),
+        ]);
+        t.row(cells);
+    }
+    t
+}
+
+/// The paper-style speedup view: mean/p99 latency per cell plus the ratio
+/// columns against the baseline policy (Table 3's improvement column).
+pub fn speedup_table(name: &str, baseline: Policy, speedups: &[Speedup]) -> Table {
+    let groups: Vec<Group> = speedups.iter().map(|s| s.group.clone()).collect();
+    let swept = has_variants(&groups);
+    let mut headers = Vec::new();
+    if swept {
+        headers.push("Variant".to_string());
+    }
+    headers.extend([
+        "Workload".to_string(),
+        "Routing".to_string(),
+        "Policy".to_string(),
+        "Mean (ms)".to_string(),
+        "p99 (ms)".to_string(),
+        format!("× vs {} (mean)", baseline.name()),
+        format!("× vs {} (p99)", baseline.name()),
+    ]);
+    let mut t = Table::new(headers).title(format!(
+        "Speedup vs {} baseline: {name}",
+        baseline.name()
+    ));
+    for s in speedups {
+        let g = &s.group;
+        let mut cells = Vec::new();
+        if swept {
+            cells.push(g.key.variant.clone());
+        }
+        cells.extend([
+            g.key.workload.clone(),
+            g.key.routing.name().to_string(),
+            g.key.policy.name().to_string(),
+            fmt_agg(&g.mean_ms),
+            fmt_agg(&g.p99_ms),
+            fmt_speedup(s.mean_ratio),
+            fmt_speedup(s.p99_ratio),
+        ]);
+        t.row(cells);
+    }
+    t
+}
+
+/// The regression-diff view: matched cells with signed deltas and a
+/// status column; `REGRESSED` rows are what the CI gate trips on.
+pub fn compare_table(cmp: &Comparison) -> Table {
+    let mut t = Table::new(vec![
+        "Variant",
+        "Workload",
+        "Routing",
+        "Policy",
+        "Base mean",
+        "New mean",
+        "Δ mean",
+        "Base p99",
+        "New p99",
+        "Δ p99",
+        "Failed (base→new)",
+        "Status",
+    ])
+    .title(format!(
+        "Compare (regression threshold {:.1}%)",
+        cmp.threshold_pct
+    ));
+    for d in &cmp.deltas {
+        t.row(vec![
+            d.key.variant.clone(),
+            d.key.workload.clone(),
+            d.key.routing.name().to_string(),
+            d.key.policy.name().to_string(),
+            fmt_ms(d.base_mean),
+            fmt_ms(d.new_mean),
+            fmt_pct(d.mean_pct),
+            fmt_ms(d.base_p99),
+            fmt_ms(d.new_p99),
+            fmt_pct(d.p99_pct),
+            format!("{}→{}", d.base_failed, d.new_failed),
+            if d.regression { "REGRESSED" } else { "ok" }.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::compare::compare;
+    use crate::analysis::speedup::against_baseline;
+    use crate::analysis::stats::{aggregate, test_row as row};
+
+    fn sample_groups() -> Vec<Group> {
+        aggregate(&[
+            row("", "mix", Policy::Cold, 0, 100.0, 10),
+            row("", "mix", Policy::Cold, 1, 120.0, 10),
+            row("", "mix", Policy::InPlace, 0, 10.0, 10),
+            row("", "mix", Policy::InPlace, 1, 10.0, 10),
+        ])
+    }
+
+    #[test]
+    fn format_parses() {
+        assert_eq!("markdown".parse::<Format>().unwrap(), Format::Markdown);
+        assert_eq!("md".parse::<Format>().unwrap(), Format::Markdown);
+        assert_eq!("ASCII".parse::<Format>().unwrap(), Format::Ascii);
+        assert_eq!("csv".parse::<Format>().unwrap(), Format::Csv);
+        assert!("html".parse::<Format>().is_err());
+    }
+
+    #[test]
+    fn aggregate_table_shows_spread_only_when_reps_disagree() {
+        let groups = sample_groups();
+        let ascii = aggregate_table("t", &groups).to_ascii();
+        // Cold's two reps disagree → spread cell; in-place's agree → plain.
+        assert!(ascii.contains("110.00 [100.00, 120.00]"), "{ascii}");
+        assert!(ascii.contains("Reps"), "{ascii}");
+    }
+
+    #[test]
+    fn speedup_table_carries_the_ratio_column() {
+        let groups = sample_groups();
+        let s = against_baseline(&groups, Policy::Cold);
+        let md = render(&speedup_table("t", Policy::Cold, &s), Format::Markdown);
+        assert!(md.contains("× vs cold (mean)"), "{md}");
+        assert!(md.contains("1.00×"), "{md}");
+        assert!(md.contains("11.00×"), "{md}"); // 110 / 10
+        // CSV renders the same cells.
+        let csv = render(&speedup_table("t", Policy::Cold, &s), Format::Csv);
+        assert!(csv.contains("11.00×"), "{csv}");
+    }
+
+    #[test]
+    fn compare_table_marks_regressions() {
+        let base = sample_groups();
+        let new = aggregate(&[
+            row("", "mix", Policy::Cold, 0, 100.0, 10),
+            row("", "mix", Policy::Cold, 1, 120.0, 10),
+            row("", "mix", Policy::InPlace, 0, 20.0, 10),
+            row("", "mix", Policy::InPlace, 1, 20.0, 10),
+        ]);
+        let cmp = compare(&base, &new, 10.0);
+        let ascii = compare_table(&cmp).to_ascii();
+        assert!(ascii.contains("REGRESSED"), "{ascii}");
+        assert!(ascii.contains("+100.0%"), "{ascii}");
+        assert!(ascii.contains("ok"), "{ascii}");
+    }
+}

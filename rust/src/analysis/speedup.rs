@@ -1,0 +1,148 @@
+//! Speedup ratios against a baseline policy — the derivation behind the
+//! paper's headline "in-place improves cold-start latency by 1.16×–18.15×"
+//! (Table 3's improvement column), generalized to any report.
+//!
+//! Within each (variant, workload, routing) cluster the baseline policy's
+//! aggregated latency is the denominator reference: a row's ratio is
+//! `baseline_mean / row_mean`, so >1 means faster than the baseline.
+//! Ratios are `None` (rendered `n/a`, never NaN/∞) when either side has
+//! zero completions or a zero latency.
+
+use crate::analysis::stats::Group;
+use crate::policy::Policy;
+
+/// One aggregated cell plus its ratios against the baseline policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Speedup {
+    pub group: Group,
+    /// `baseline.mean_ms / group.mean_ms` (>1 ⇒ faster than baseline).
+    pub mean_ratio: Option<f64>,
+    /// Same ratio on the aggregated p99.
+    pub p99_ratio: Option<f64>,
+}
+
+/// Divides only when the result is meaningful: both sides saw completed
+/// requests and the denominator is a real latency.
+fn ratio(base: &Group, g: &Group, pick: impl Fn(&Group) -> f64) -> Option<f64> {
+    if !base.has_latency() || !g.has_latency() {
+        return None;
+    }
+    let (b, x) = (pick(base), pick(g));
+    if b <= 0.0 || x <= 0.0 || !b.is_finite() || !x.is_finite() {
+        return None;
+    }
+    Some(b / x)
+}
+
+/// Annotates every group with its ratio against the baseline policy of the
+/// same (variant, workload, routing) cluster. Groups whose cluster has no
+/// baseline entry (mismatched policy sets) get `None` ratios; order is
+/// preserved.
+pub fn against_baseline(groups: &[Group], baseline: Policy) -> Vec<Speedup> {
+    groups
+        .iter()
+        .map(|g| {
+            let base = groups.iter().find(|b| {
+                b.key.policy == baseline
+                    && b.key.variant == g.key.variant
+                    && b.key.workload == g.key.workload
+                    && b.key.routing == g.key.routing
+            });
+            match base {
+                Some(base) => Speedup {
+                    group: g.clone(),
+                    mean_ratio: ratio(base, g, |x| x.mean_ms.mean),
+                    p99_ratio: ratio(base, g, |x| x.p99_ms.mean),
+                },
+                None => Speedup {
+                    group: g.clone(),
+                    mean_ratio: None,
+                    p99_ratio: None,
+                },
+            }
+        })
+        .collect()
+}
+
+/// The min/max mean-latency ratio a policy achieves across every cluster —
+/// the "1.16×–18.15×" headline shape. `None` when the policy has no valid
+/// ratio anywhere.
+pub fn ratio_range(speedups: &[Speedup], policy: Policy) -> Option<(f64, f64)> {
+    let mut range: Option<(f64, f64)> = None;
+    for s in speedups {
+        if s.group.key.policy != policy {
+            continue;
+        }
+        if let Some(r) = s.mean_ratio {
+            range = Some(match range {
+                None => (r, r),
+                Some((lo, hi)) => (lo.min(r), hi.max(r)),
+            });
+        }
+    }
+    range
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::stats::{aggregate, test_row as row};
+
+    #[test]
+    fn ratios_follow_the_paper_convention() {
+        // cold 100 ms vs in-place 10 ms ⇒ in-place shows 10×, cold 1×.
+        let groups = aggregate(&[
+            row("", "mix", Policy::Cold, 0, 100.0, 10),
+            row("", "mix", Policy::InPlace, 0, 10.0, 10),
+        ]);
+        let s = against_baseline(&groups, Policy::Cold);
+        assert_eq!(s[0].group.key.policy, Policy::Cold);
+        assert_eq!(s[0].mean_ratio, Some(1.0));
+        assert_eq!(s[1].group.key.policy, Policy::InPlace);
+        assert_eq!(s[1].mean_ratio, Some(10.0));
+        assert_eq!(s[1].p99_ratio, Some(10.0)); // p99 = 2×mean in the fixture
+    }
+
+    #[test]
+    fn zero_completion_rows_produce_no_ratio_not_nan() {
+        let groups = aggregate(&[
+            row("", "mix", Policy::Cold, 0, 0.0, 0),
+            row("", "mix", Policy::InPlace, 0, 10.0, 10),
+        ]);
+        let s = against_baseline(&groups, Policy::Cold);
+        assert_eq!(s[0].mean_ratio, None);
+        assert_eq!(s[1].mean_ratio, None);
+        // And the mirror case: the measured policy completed nothing.
+        let groups = aggregate(&[
+            row("", "mix", Policy::Cold, 0, 100.0, 10),
+            row("", "mix", Policy::InPlace, 0, 0.0, 0),
+        ]);
+        let s = against_baseline(&groups, Policy::Cold);
+        assert_eq!(s[0].mean_ratio, Some(1.0));
+        assert_eq!(s[1].mean_ratio, None);
+    }
+
+    #[test]
+    fn missing_baseline_cluster_yields_none() {
+        // The in-place rows have no cold twin in their cluster.
+        let groups = aggregate(&[row("", "mix", Policy::InPlace, 0, 10.0, 10)]);
+        let s = against_baseline(&groups, Policy::Cold);
+        assert_eq!(s[0].mean_ratio, None);
+    }
+
+    #[test]
+    fn clusters_do_not_cross_variants_or_workloads() {
+        let groups = aggregate(&[
+            row("a=1", "mix", Policy::Cold, 0, 100.0, 10),
+            row("a=1", "mix", Policy::InPlace, 0, 50.0, 10),
+            row("a=2", "mix", Policy::Cold, 0, 40.0, 10),
+            row("a=2", "mix", Policy::InPlace, 0, 10.0, 10),
+        ]);
+        let s = against_baseline(&groups, Policy::Cold);
+        assert_eq!(s[1].mean_ratio, Some(2.0));
+        assert_eq!(s[3].mean_ratio, Some(4.0));
+        let (lo, hi) = ratio_range(&s, Policy::InPlace).unwrap();
+        assert_eq!((lo, hi), (2.0, 4.0));
+        assert_eq!(ratio_range(&s, Policy::Warm), None);
+    }
+}

@@ -1,0 +1,300 @@
+//! Cross-rep aggregation: collapses the per-run [`ScenarioRow`]s of a
+//! report into one [`Group`] per (variant, workload, routing, policy),
+//! carrying mean / min / max spread across reps for every latency metric.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use crate::coordinator::accounting::RoutingPolicy;
+use crate::policy::Policy;
+use crate::scenario::report::ScenarioRow;
+use crate::util::stats::Summary;
+
+/// Everything that identifies an aggregated cell — a report row minus the
+/// rep index.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    pub variant: String,
+    pub workload: String,
+    pub routing: RoutingPolicy,
+    pub policy: Policy,
+}
+
+impl std::fmt::Display for GroupKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if !self.variant.is_empty() {
+            write!(f, "[{}] ", self.variant)?;
+        }
+        write!(
+            f,
+            "{}/{}/{}",
+            self.workload,
+            self.routing.name(),
+            self.policy.name()
+        )
+    }
+}
+
+/// One metric aggregated across reps: the mean of the per-rep values plus
+/// the min/max spread. With a single rep all three coincide.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricAgg {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl MetricAgg {
+    fn from_summary(s: &Summary) -> MetricAgg {
+        MetricAgg {
+            mean: s.mean(),
+            min: s.min(),
+            max: s.max(),
+        }
+    }
+
+    /// Does the spread carry information beyond the mean?
+    pub fn has_spread(&self) -> bool {
+        self.min != self.max
+    }
+}
+
+/// One aggregated cell: counters summed, latency metrics averaged with
+/// spread, `reps` recording how many rows folded in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Group {
+    pub key: GroupKey,
+    pub reps: u32,
+    pub nodes: usize,
+    pub services: usize,
+    pub completed: u64,
+    pub failed: u64,
+    pub cold_starts: u64,
+    pub inplace_scale_ups: u64,
+    pub pods_created: u64,
+    pub mean_ms: MetricAgg,
+    pub p50_ms: MetricAgg,
+    pub p99_ms: MetricAgg,
+    pub avg_committed_mcpu: MetricAgg,
+}
+
+impl Group {
+    /// A group with zero completions has no meaningful latency numbers —
+    /// speedups against or from it must be suppressed, not NaN.
+    pub fn has_latency(&self) -> bool {
+        self.completed > 0
+    }
+}
+
+/// Per-key accumulator while folding rows.
+struct Acc {
+    reps: u32,
+    nodes: usize,
+    services: usize,
+    completed: u64,
+    failed: u64,
+    cold_starts: u64,
+    inplace_scale_ups: u64,
+    pods_created: u64,
+    mean_ms: Summary,
+    p50_ms: Summary,
+    p99_ms: Summary,
+    avg_committed_mcpu: Summary,
+}
+
+impl Acc {
+    fn new(r: &ScenarioRow) -> Acc {
+        Acc {
+            reps: 0,
+            nodes: r.nodes,
+            services: r.services,
+            completed: 0,
+            failed: 0,
+            cold_starts: 0,
+            inplace_scale_ups: 0,
+            pods_created: 0,
+            mean_ms: Summary::new(),
+            p50_ms: Summary::new(),
+            p99_ms: Summary::new(),
+            avg_committed_mcpu: Summary::new(),
+        }
+    }
+
+    fn fold(&mut self, r: &ScenarioRow) {
+        self.reps += 1;
+        self.completed += r.completed;
+        self.failed += r.failed;
+        self.cold_starts += r.cold_starts;
+        self.inplace_scale_ups += r.inplace_scale_ups;
+        self.pods_created += r.pods_created;
+        // Rows with zero completions report 0.0 latencies; folding those
+        // zeros into the spread would fake a "min latency of 0 ms", so
+        // latency metrics only aggregate over reps that completed work.
+        if r.completed > 0 {
+            self.mean_ms.record(r.mean_ms);
+            self.p50_ms.record(r.p50_ms);
+            self.p99_ms.record(r.p99_ms);
+        }
+        self.avg_committed_mcpu.record(r.avg_committed_mcpu);
+    }
+
+    fn finish(self, key: GroupKey) -> Group {
+        Group {
+            key,
+            reps: self.reps,
+            nodes: self.nodes,
+            services: self.services,
+            completed: self.completed,
+            failed: self.failed,
+            cold_starts: self.cold_starts,
+            inplace_scale_ups: self.inplace_scale_ups,
+            pods_created: self.pods_created,
+            mean_ms: MetricAgg::from_summary(&self.mean_ms),
+            p50_ms: MetricAgg::from_summary(&self.p50_ms),
+            p99_ms: MetricAgg::from_summary(&self.p99_ms),
+            avg_committed_mcpu: MetricAgg::from_summary(&self.avg_committed_mcpu),
+        }
+    }
+}
+
+/// Aggregates report rows across reps, preserving first-appearance order
+/// of the keys (deterministic: report rows are already in grid order).
+pub fn aggregate(rows: &[ScenarioRow]) -> Vec<Group> {
+    let mut order: Vec<GroupKey> = Vec::new();
+    let mut accs: HashMap<GroupKey, Acc> = HashMap::new();
+    for r in rows {
+        let key = GroupKey {
+            variant: r.variant.clone(),
+            workload: r.workload.clone(),
+            routing: r.routing,
+            policy: r.policy,
+        };
+        match accs.entry(key) {
+            Entry::Occupied(mut e) => e.get_mut().fold(r),
+            Entry::Vacant(e) => {
+                order.push(e.key().clone());
+                e.insert(Acc::new(r)).fold(r);
+            }
+        }
+    }
+    order
+        .into_iter()
+        .map(|key| {
+            let acc = accs.remove(&key).expect("every ordered key has an acc");
+            acc.finish(key)
+        })
+        .collect()
+}
+
+/// Shared fixture for the analysis test suites: one synthetic report row.
+#[cfg(test)]
+pub(crate) fn test_row(
+    variant: &str,
+    workload: &str,
+    policy: Policy,
+    rep: u32,
+    mean: f64,
+    completed: u64,
+) -> ScenarioRow {
+    ScenarioRow {
+        scenario: "t".into(),
+        variant: variant.into(),
+        workload: workload.into(),
+        rep,
+        policy,
+        routing: RoutingPolicy::LeastLoaded,
+        nodes: 2,
+        services: 4,
+        completed,
+        failed: 0,
+        mean_ms: mean,
+        p50_ms: mean * 0.9,
+        p99_ms: mean * 2.0,
+        cold_starts: 3,
+        inplace_scale_ups: 1,
+        avg_committed_mcpu: 100.0,
+        pods_created: 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::test_row as row;
+
+    #[test]
+    fn single_rep_spread_collapses_to_the_value() {
+        let groups = aggregate(&[row("", "mix", Policy::Cold, 0, 50.0, 10)]);
+        assert_eq!(groups.len(), 1);
+        let g = &groups[0];
+        assert_eq!(g.reps, 1);
+        assert_eq!(g.mean_ms.mean, 50.0);
+        assert_eq!(g.mean_ms.min, 50.0);
+        assert_eq!(g.mean_ms.max, 50.0);
+        assert!(!g.mean_ms.has_spread());
+        assert!(g.has_latency());
+    }
+
+    #[test]
+    fn multi_rep_mean_and_spread() {
+        let groups = aggregate(&[
+            row("", "mix", Policy::Cold, 0, 40.0, 10),
+            row("", "mix", Policy::Cold, 1, 60.0, 12),
+            row("", "mix", Policy::Cold, 2, 50.0, 11),
+        ]);
+        assert_eq!(groups.len(), 1);
+        let g = &groups[0];
+        assert_eq!(g.reps, 3);
+        assert_eq!(g.completed, 33);
+        assert_eq!(g.cold_starts, 9);
+        assert!((g.mean_ms.mean - 50.0).abs() < 1e-12);
+        assert_eq!(g.mean_ms.min, 40.0);
+        assert_eq!(g.mean_ms.max, 60.0);
+        assert!(g.mean_ms.has_spread());
+    }
+
+    #[test]
+    fn zero_completion_reps_do_not_poison_latency() {
+        // A rep that completed nothing reports 0.0 ms; the aggregate must
+        // not show "min 0 ms".
+        let groups = aggregate(&[
+            row("", "mix", Policy::Cold, 0, 50.0, 10),
+            row("", "mix", Policy::Cold, 1, 0.0, 0),
+        ]);
+        let g = &groups[0];
+        assert_eq!(g.reps, 2);
+        assert_eq!(g.completed, 10);
+        assert_eq!(g.mean_ms.mean, 50.0);
+        assert_eq!(g.mean_ms.min, 50.0);
+        // All reps empty ⇒ no latency at all, flagged via has_latency.
+        let empty = aggregate(&[row("", "mix", Policy::Cold, 0, 0.0, 0)]);
+        assert!(!empty[0].has_latency());
+        assert_eq!(empty[0].mean_ms.mean, 0.0); // Summary::new() default, not NaN
+        assert!(empty[0].mean_ms.mean.is_finite());
+    }
+
+    #[test]
+    fn keys_keep_first_appearance_order() {
+        let rows = vec![
+            row("a=1", "mix", Policy::Cold, 0, 10.0, 1),
+            row("a=1", "mix", Policy::InPlace, 0, 5.0, 1),
+            row("a=2", "mix", Policy::Cold, 0, 20.0, 1),
+            row("a=1", "mix", Policy::Cold, 1, 12.0, 1),
+        ];
+        let groups = aggregate(&rows);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].key.variant, "a=1");
+        assert_eq!(groups[0].key.policy, Policy::Cold);
+        assert_eq!(groups[0].reps, 2);
+        assert_eq!(groups[1].key.policy, Policy::InPlace);
+        assert_eq!(groups[2].key.variant, "a=2");
+    }
+
+    #[test]
+    fn key_display_names_the_cell() {
+        let g = &aggregate(&[row("rate=2", "mix", Policy::InPlace, 0, 1.0, 1)])[0];
+        let s = g.key.to_string();
+        assert!(s.contains("rate=2") && s.contains("in-place"), "{s}");
+    }
+}

@@ -14,6 +14,7 @@
 pub mod simclock;
 pub mod util;
 
+pub mod analysis;
 pub mod apiserver;
 pub mod cgroup;
 pub mod cluster;

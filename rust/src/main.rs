@@ -1,12 +1,17 @@
 //! `kinetic` — the platform CLI.
 //!
 //! Subcommands:
-//! * `run`        — execute a declarative scenario (JSON spec file or preset)
+//! * `run`        — execute a declarative scenario (JSON spec file or preset),
+//!                  optionally on `--threads N` parallel workers
+//! * `analyze`    — aggregate a ScenarioReport: cross-rep stats + speedups
+//!                  vs a baseline policy (the paper's ratio tables)
+//! * `compare`    — diff two ScenarioReports and flag latency regressions
 //! * `exp`        — regenerate paper tables/figures (t1|fig2|fig3|fig4|t2|t3|fig6|all)
 //! * `fleet`      — preset: the three §3 policies over a multi-node topology
 //! * `trace`      — preset: generate + replay an Azure-style trace under all policies
 //! * `serve`      — run the end-to-end serving demo over the PJRT artifacts
 //! * `validate-report` — schema-check an emitted ScenarioReport JSON
+//! * `schema`     — print the scenario JSON reference (docs/SCENARIO_SCHEMA.md)
 //! * `selfcheck`  — validate the AOT artifacts against the manifest oracle
 //!
 //! `fleet` and `trace` are thin wrappers over `run --scenario`: they build
@@ -14,6 +19,7 @@
 //! they always did (the equivalence tests pin them bit-for-bit). New
 //! studies should write a scenario file instead of a new subcommand.
 
+use kinetic::analysis::{self, AnalysisReport, Format};
 use kinetic::experiments::ablation;
 use kinetic::experiments::fleet;
 use kinetic::experiments::memory;
@@ -45,7 +51,29 @@ fn app() -> App {
                      (fleet|trace|paper|smoke)",
                     "smoke",
                 )
-                .opt("out", "directory the ScenarioReport JSON is written to", "results"),
+                .opt("out", "directory the ScenarioReport JSON is written to", "results")
+                .opt_threads("1"),
+        )
+        .command(
+            Command::new(
+                "analyze",
+                "aggregate a ScenarioReport: cross-rep stats + speedups vs a baseline policy",
+            )
+            .opt("file", "path to the ScenarioReport JSON (or first positional)", "")
+            .opt("baseline", "policy the speedup ratios are computed against", "cold")
+            .opt("format", "markdown|ascii|csv", "markdown")
+            .opt(
+                "out",
+                "directory the AnalysisReport JSON is written to ('' = don't write)",
+                "results",
+            ),
+        )
+        .command(
+            Command::new("compare", "diff two ScenarioReports and flag latency regressions")
+                .opt("base", "baseline report JSON (or first positional)", "")
+                .opt("new", "candidate report JSON (or second positional)", "")
+                .opt("threshold", "regression threshold in percent", "10")
+                .opt("format", "markdown|ascii|csv", "markdown"),
         )
         .command(
             Command::new("exp", "regenerate paper tables and figures")
@@ -86,6 +114,10 @@ fn app() -> App {
             Command::new("validate-report", "schema-check a ScenarioReport JSON file")
                 .opt("file", "path to the report JSON", ""),
         )
+        .command(
+            Command::new("schema", "print the scenario JSON reference")
+                .flag("markdown", "emit docs/SCENARIO_SCHEMA.md content (the default)"),
+        )
         .command(Command::new("selfcheck", "validate AOT artifacts against the manifest oracle"))
 }
 
@@ -100,7 +132,7 @@ fn or_die<T>(r: Result<T, CliError>) -> T {
     }
 }
 
-fn run_scenario(arg: &str, out: &str) {
+fn run_scenario(arg: &str, out: &str, threads: usize) {
     let spec = match ScenarioEngine::load(arg) {
         Ok(s) => s,
         Err(e) => {
@@ -119,7 +151,7 @@ fn run_scenario(arg: &str, out: &str) {
         spec.policies.len(),
         spec.reps
     );
-    let report = match ScenarioEngine::run(&spec) {
+    let report = match ScenarioEngine::run_with_threads(&spec, threads) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("error: {e}");
@@ -132,6 +164,112 @@ fn run_scenario(arg: &str, out: &str) {
         Err(e) => {
             eprintln!("could not write report: {e}");
             std::process::exit(1);
+        }
+    }
+}
+
+/// Loads a ScenarioReport or exits with the error.
+fn load_report(file: &str, what: &str) -> ScenarioReport {
+    if file.is_empty() {
+        eprintln!("error: missing the {what} report path");
+        std::process::exit(2);
+    }
+    match ScenarioReport::load(std::path::Path::new(file)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("invalid {what} report: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run_analyze(file: &str, baseline: &str, format: &str, out: &str) {
+    let baseline: Policy = or_die_parse(baseline, "baseline");
+    let format: Format = or_die_parse(format, "format");
+    let report = load_report(file, "scenario");
+    let analyzed = AnalysisReport::from_scenario(&report, baseline);
+    println!("{}", analysis::render(&analyzed.aggregate_table(), format));
+    println!("{}", analysis::render(&analyzed.speedup_table(), format));
+    // The paper's headline shape: the in-place policy's min–max
+    // improvement over the baseline (Table 3 spans 1.16×–18.15×).
+    // Meaningless when in-place *is* the baseline (always 1.00×).
+    if baseline != Policy::InPlace {
+        if let Some((lo, hi)) = analyzed.headline(Policy::InPlace) {
+            println!(
+                "headline: in-place improves on {} by {}×–{}× (mean latency)",
+                baseline.name(),
+                fmt_ratio(lo),
+                fmt_ratio(hi)
+            );
+        }
+    }
+    if !out.is_empty() {
+        match analyzed.save(std::path::Path::new(out)) {
+            Ok(p) => println!("wrote {}", p.display()),
+            Err(e) => {
+                eprintln!("could not write analysis: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn run_compare(base: &str, new: &str, threshold_pct: f64, format: &str) {
+    let format: Format = or_die_parse(format, "format");
+    let base_rep = load_report(base, "base");
+    let new_rep = load_report(new, "new");
+    let cmp = analysis::compare(
+        &analysis::aggregate(&base_rep.rows),
+        &analysis::aggregate(&new_rep.rows),
+        threshold_pct,
+    );
+    println!("{}", analysis::render(&analysis::render::compare_table(&cmp), format));
+    for k in &cmp.only_in_base {
+        eprintln!("coverage: only in base report: {k}");
+    }
+    for k in &cmp.only_in_new {
+        eprintln!("coverage: only in new report: {k}");
+    }
+    let mut gate_failed = false;
+    if cmp.has_regressions() {
+        eprintln!(
+            "{} cell(s) regressed beyond {:.1}%",
+            cmp.regression_count(),
+            threshold_pct
+        );
+        gate_failed = true;
+    }
+    // Mismatched cell sets fail the gate too: a vanished variant means a
+    // regression there would go completely unmeasured, and a comparison
+    // with zero matched cells must never read as a pass.
+    if cmp.keys_mismatch() {
+        eprintln!(
+            "cell coverage changed: {} cell(s) only in base, {} only in new",
+            cmp.only_in_base.len(),
+            cmp.only_in_new.len()
+        );
+        gate_failed = true;
+    }
+    if gate_failed {
+        std::process::exit(1);
+    }
+    println!(
+        "no regressions beyond {:.1}% across {} matched cell(s)",
+        threshold_pct,
+        cmp.deltas.len()
+    );
+}
+
+/// Parses a CLI value through `FromStr` or exits with the parse error.
+fn or_die_parse<T: std::str::FromStr>(raw: &str, opt: &str) -> T
+where
+    T::Err: std::fmt::Display,
+{
+    match raw.parse() {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: invalid --{opt}: {e}");
+            std::process::exit(2);
         }
     }
 }
@@ -500,7 +638,52 @@ fn main() {
     logging::init(if inv.flag("verbose") { 3 } else { 1 });
 
     match inv.command.as_str() {
-        "run" => run_scenario(inv.get_or("scenario", "smoke"), inv.get_or("out", "results")),
+        "run" => run_scenario(
+            inv.get_or("scenario", "smoke"),
+            inv.get_or("out", "results"),
+            or_die(inv.threads()),
+        ),
+        "analyze" => {
+            let file = inv
+                .get("file")
+                .filter(|f| !f.is_empty())
+                .map(str::to_string)
+                .or_else(|| inv.positionals.first().cloned())
+                .unwrap_or_default();
+            run_analyze(
+                &file,
+                inv.get_or("baseline", "cold"),
+                inv.get_or("format", "markdown"),
+                inv.get_or("out", "results"),
+            );
+        }
+        "compare" => {
+            let mut positionals = inv.positionals.iter();
+            let base = inv
+                .get("base")
+                .filter(|f| !f.is_empty())
+                .map(str::to_string)
+                .or_else(|| positionals.next().cloned())
+                .unwrap_or_default();
+            let new = inv
+                .get("new")
+                .filter(|f| !f.is_empty())
+                .map(str::to_string)
+                .or_else(|| positionals.next().cloned())
+                .unwrap_or_default();
+            run_compare(
+                &base,
+                &new,
+                or_die(inv.f64_in("threshold", 0.0, 10_000.0)),
+                inv.get_or("format", "markdown"),
+            );
+        }
+        "schema" => {
+            // `--markdown` is the only (and default) format; accepting the
+            // flag keeps `kinetic schema --markdown > docs/SCENARIO_SCHEMA.md`
+            // self-documenting in CI.
+            print!("{}", kinetic::scenario::schema_doc::markdown());
+        }
         "exp" => run_exp(
             inv.get_or("id", "all"),
             or_die(inv.u64_in("reps", 1, 10_000)) as u32,

@@ -6,12 +6,38 @@
 //! traces to `trace::replay_with`, and the paper's closed-loop rig to
 //! `experiments::policies::PolicyExperiment` — so the legacy subcommands
 //! become presets over this module and can never drift from `kinetic run`.
+//!
+//! # Parallel execution
+//!
+//! A sweep grid is embarrassingly parallel: every cell is an independent
+//! deterministic simulation whose seed derives from the *spec* (base seed
+//! + rep), never from execution order. [`ScenarioEngine::run_with_threads`]
+//! exploits that with scoped `std::thread` workers pulling cells off a
+//! shared cursor. Three invariants keep the parallel report bit-identical
+//! to the serial one:
+//!
+//! 1. **Deterministic job inputs.** Closed-loop validation happens
+//!    single-threaded in [`prepare_variant`] before any worker starts;
+//!    traces build lazily inside the variant's [`TraceStore`] but
+//!    deterministically (files re-read byte-identically, generator
+//!    traces derive from `seed + rep`), so workers only ever run pure
+//!    `(PreparedVariant, routing, policy, rep) → rows` jobs.
+//! 2. **Slot-addressed results.** Each job writes its rows into its own
+//!    pre-allocated slot; the report concatenates slots in job order, so
+//!    scheduling jitter cannot reorder rows.
+//! 3. **Derived seeds.** A job's seed is `spec.seed + rep` exactly as the
+//!    serial loop computed it — no thread-local or time-derived state.
+//!
+//! `tests/analysis.rs` pins `--threads 4` to the `--threads 1` report JSON
+//! byte-for-byte.
 
-use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::accounting::RoutingPolicy;
 use crate::experiments::fleet::{self, FleetConfig};
 use crate::experiments::policies::PolicyExperiment;
+use crate::policy::Policy;
 use crate::scenario::report::{ScenarioReport, ScenarioRow};
 use crate::scenario::spec::{ScenarioSpec, SpecError, TopologySpec, WorkloadSource};
 use crate::simclock::SimTime;
@@ -19,6 +45,8 @@ use crate::trace::generator::{TraceConfig, TraceEvent, TraceGenerator};
 use crate::trace::loader;
 use crate::trace::replay::{replay_with, ReplayConfig};
 use crate::workload::registry::WorkloadKind;
+
+pub use crate::util::cli::MAX_THREADS;
 
 /// Compiles specs into runs.
 pub struct ScenarioEngine;
@@ -32,12 +60,40 @@ impl ScenarioEngine {
         ScenarioSpec::load(std::path::Path::new(arg))
     }
 
-    /// Runs the full grid: every sweep variant × routing × policy × rep.
+    /// Runs the full grid serially: every sweep variant × routing × policy
+    /// × rep. Equivalent to `run_with_threads(spec, 1)`.
     pub fn run(spec: &ScenarioSpec) -> Result<ScenarioReport, SpecError> {
-        let mut rows = Vec::new();
+        ScenarioEngine::run_with_threads(spec, 1)
+    }
+
+    /// Runs the full grid on `threads` scoped workers. The report is
+    /// bit-identical to the serial run regardless of `threads` (see the
+    /// module docs for why); `threads` is clamped to `[1, MAX_THREADS]`
+    /// and never exceeds the number of grid cells.
+    pub fn run_with_threads(
+        spec: &ScenarioSpec,
+        threads: usize,
+    ) -> Result<ScenarioReport, SpecError> {
+        let mut prepared = Vec::new();
         for (label, variant) in spec.expand()? {
-            run_variant(&label, &variant, &mut rows)?;
+            prepared.push(prepare_variant(label, variant)?);
         }
+        let mut jobs = Vec::new();
+        for (vi, p) in prepared.iter().enumerate() {
+            for &routing in &p.spec.routing {
+                for &policy in &p.spec.policies {
+                    for rep in 0..p.spec.reps {
+                        jobs.push(Job {
+                            variant: vi,
+                            routing,
+                            policy,
+                            rep,
+                        });
+                    }
+                }
+            }
+        }
+        let rows = execute(&prepared, &jobs, threads)?;
         Ok(ScenarioReport {
             name: spec.name.clone(),
             spec: spec.to_json(),
@@ -63,187 +119,323 @@ impl ScenarioEngine {
     }
 }
 
-fn run_variant(
-    label: &str,
-    v: &ScenarioSpec,
-    rows: &mut Vec<ScenarioRow>,
-) -> Result<(), SpecError> {
-    match &v.workload {
+/// One grid cell. Executing a job is a pure function of its
+/// [`PreparedVariant`] — seeds derive from the spec, never from execution
+/// order — so jobs may run on any thread in any order.
+#[derive(Debug, Clone, Copy)]
+struct Job {
+    /// Index into the prepared-variant list.
+    variant: usize,
+    routing: RoutingPolicy,
+    policy: Policy,
+    rep: u32,
+}
+
+/// A sweep variant with its jobs' shared state: closed-loop restrictions
+/// already validated, and a [`TraceStore`] for trace sources.
+struct PreparedVariant {
+    label: String,
+    spec: ScenarioSpec,
+    trace: Option<TraceStore>,
+}
+
+/// The trace (events, function count) every job of a variant replays —
+/// shared read-only across routing × policy so each policy sees the
+/// identical arrival stream, the comparison the paper's §3 tables rest on.
+type TraceData = (Vec<TraceEvent>, usize);
+
+/// Reference-counted, lazily built trace storage for one variant.
+///
+/// Slots fill on first checkout — the build is deterministic (files
+/// re-read byte-identically; generator traces derive from `seed + rep`),
+/// so build order cannot change results — and every checkout decrements
+/// a job countdown that drops the slots once the variant's last job has
+/// taken its reference. A large sweep therefore holds only the
+/// in-flight variants' traces, the serial engine's old memory shape,
+/// instead of the whole grid's. I/O errors surface from the variant's
+/// first job, exactly where the serial engine raised them.
+struct TraceStore {
+    inner: Mutex<TraceSlots>,
+}
+
+struct TraceSlots {
+    /// Jobs that have not yet taken their reference.
+    remaining: usize,
+    /// One slot per rep (file traces: a single rep-independent slot).
+    slots: Vec<Option<Arc<TraceData>>>,
+}
+
+impl TraceStore {
+    /// `slots` empty slots (1 for rep-independent file traces, one per
+    /// rep for the generator) to be taken by `jobs` checkouts.
+    fn new(slots: usize, jobs: usize) -> TraceStore {
+        TraceStore {
+            inner: Mutex::new(TraceSlots {
+                remaining: jobs,
+                slots: vec![None; slots],
+            }),
+        }
+    }
+
+    /// Hands one job its trace reference, building the slot if it is
+    /// still empty and dropping all slots after the last checkout.
+    fn checkout(&self, spec: &ScenarioSpec, rep: u32) -> Result<Arc<TraceData>, SpecError> {
+        let idx = |s: &TraceSlots| if s.slots.len() == 1 { 0 } else { rep as usize };
+        {
+            let mut s = self.inner.lock().unwrap();
+            let i = idx(&s);
+            if let Some(data) = &s.slots[i] {
+                let data = Arc::clone(data);
+                s.remaining -= 1;
+                if s.remaining == 0 {
+                    s.slots.clear();
+                }
+                return Ok(data);
+            }
+        }
+        // Build outside the lock so concurrent jobs of the same variant
+        // construct different reps' traces in parallel. Two jobs racing
+        // on the *same* empty slot both build (identical, deterministic
+        // data); the first to re-lock wins the slot. The slots cannot
+        // have been cleared meanwhile: this job has not decremented
+        // `remaining` yet, so it is still positive.
+        let built = Arc::new(build_trace(spec, rep)?);
+        let mut s = self.inner.lock().unwrap();
+        let i = idx(&s);
+        if s.slots[i].is_none() {
+            s.slots[i] = Some(built);
+        }
+        let data = Arc::clone(s.slots[i].as_ref().expect("slot was just filled"));
+        s.remaining -= 1;
+        if s.remaining == 0 {
+            s.slots.clear();
+        }
+        Ok(data)
+    }
+}
+
+fn prepare_variant(label: String, spec: ScenarioSpec) -> Result<PreparedVariant, SpecError> {
+    if let WorkloadSource::ClosedLoop { .. } = &spec.workload {
+        if spec.topology != TopologySpec::Paper {
+            return Err(SpecError::invalid(
+                "topology.kind",
+                "the closed-loop rig reproduces the paper's single-node \
+                 testbed; use topology kind 'paper'",
+            ));
+        }
+        // The rig runs the paper's revision configs verbatim; rather
+        // than silently ignore autoscaler/hybrid settings (a swept
+        // knob would then run identical variants), reject them.
+        if spec.autoscaler != crate::knative::config::ScaleKnobs::fleet_default() {
+            return Err(SpecError::invalid(
+                "autoscaler",
+                "closed-loop scenarios run the paper's per-policy revision \
+                 configs; autoscaler knobs (and sweeps over them) do not \
+                 apply — remove them or use a synthetic/trace source",
+            ));
+        }
+        if spec.hybrid != crate::coordinator::accounting::HybridWeights::default() {
+            return Err(SpecError::invalid(
+                "hybrid_weights",
+                "closed-loop scenarios are single-pod; hybrid weights do \
+                 not apply — remove them or use a synthetic/trace source",
+            ));
+        }
+        // Routing is provably a no-op on the single-pod paper rig (the
+        // golden routing-invariance test pins it), so comparing routing
+        // policies here would emit identical rows per policy.
+        if spec.routing.len() > 1 {
+            return Err(SpecError::invalid(
+                "routing",
+                "closed-loop scenarios are routing-invariant (single \
+                 pod); listing several routing policies would duplicate \
+                 every row — keep one",
+            ));
+        }
+    }
+    let jobs = spec.routing.len() * spec.policies.len() * spec.reps as usize;
+    let trace = match &spec.workload {
+        WorkloadSource::TraceFile { .. } => Some(TraceStore::new(1, jobs)),
+        WorkloadSource::AzureGenerator { .. } => Some(TraceStore::new(spec.reps as usize, jobs)),
+        _ => None,
+    };
+    Ok(PreparedVariant { label, spec, trace })
+}
+
+/// Runs every job and returns the rows in job order. `threads <= 1` runs
+/// inline (stopping at the first error, like the old serial loop);
+/// otherwise scoped workers pull jobs off a shared cursor and write into
+/// per-job slots, which serializes the output identically.
+fn execute(
+    prepared: &[PreparedVariant],
+    jobs: &[Job],
+    threads: usize,
+) -> Result<Vec<ScenarioRow>, SpecError> {
+    let workers = threads.clamp(1, MAX_THREADS).min(jobs.len().max(1));
+    if workers <= 1 {
+        let mut rows = Vec::new();
+        for job in jobs {
+            rows.extend(run_job(&prepared[job.variant], job)?);
+        }
+        return Ok(rows);
+    }
+    let cursor = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let results = Mutex::new(vec![None; jobs.len()]);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                // A failed job stops the grid; later-queued jobs are
+                // skipped (their slots stay None, which is fine — an
+                // erroring run returns no rows at all).
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let job = &jobs[i];
+                let out = run_job(&prepared[job.variant], job);
+                if out.is_err() {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    let mut rows = Vec::new();
+    for slot in results.into_inner().unwrap() {
+        match slot {
+            Some(Ok(r)) => rows.extend(r),
+            Some(Err(e)) => return Err(e),
+            // Skipped after a failure elsewhere; the error slot that
+            // caused it is found by this same scan.
+            None => {}
+        }
+    }
+    Ok(rows)
+}
+
+/// Executes one grid cell: a full deterministic simulation. Closed-loop
+/// cells expand to one row per Table-2 workload; everything else is one
+/// row per cell. The only fallible part is trace checkout (a missing or
+/// malformed trace file).
+fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError> {
+    let v = &p.spec;
+    let seed = v.seed.wrapping_add(u64::from(job.rep));
+    Ok(match &v.workload {
         WorkloadSource::Synthetic {
             services,
             rate_per_service,
             horizon_s,
             mix,
         } => {
-            for &routing in &v.routing {
-                for &policy in &v.policies {
-                    for rep in 0..v.reps {
-                        let cfg = FleetConfig {
-                            topology: v.topology.build(),
-                            services: *services,
-                            rate_per_service: *rate_per_service,
-                            horizon: SimTime::from_secs_f64(*horizon_s),
-                            seed: v.seed.wrapping_add(u64::from(rep)),
-                            routing,
-                            mix: mix.clone(),
-                            knobs: v.autoscaler.clone(),
-                            hybrid: v.hybrid,
-                        };
-                        let f = fleet::run_policy(&cfg, policy);
-                        rows.push(ScenarioRow {
-                            scenario: v.name.clone(),
-                            variant: label.to_string(),
-                            workload: "mix".to_string(),
-                            rep,
-                            policy,
-                            routing,
-                            nodes: f.nodes,
-                            services: f.services,
-                            completed: f.completed,
-                            failed: f.failed,
-                            mean_ms: f.mean_ms,
-                            p50_ms: f.p50_ms,
-                            p99_ms: f.p99_ms,
-                            cold_starts: f.cold_starts,
-                            inplace_scale_ups: f.inplace_scale_ups,
-                            avg_committed_mcpu: f.avg_committed_mcpu,
-                            pods_created: f.pods_created,
-                        });
-                    }
-                }
-            }
+            let cfg = FleetConfig {
+                topology: v.topology.build(),
+                services: *services,
+                rate_per_service: *rate_per_service,
+                horizon: SimTime::from_secs_f64(*horizon_s),
+                seed,
+                routing: job.routing,
+                mix: mix.clone(),
+                knobs: v.autoscaler.clone(),
+                hybrid: v.hybrid,
+            };
+            let f = fleet::run_policy(&cfg, job.policy);
+            vec![ScenarioRow {
+                scenario: v.name.clone(),
+                variant: p.label.clone(),
+                workload: "mix".to_string(),
+                rep: job.rep,
+                policy: job.policy,
+                routing: job.routing,
+                nodes: f.nodes,
+                services: f.services,
+                completed: f.completed,
+                failed: f.failed,
+                mean_ms: f.mean_ms,
+                p50_ms: f.p50_ms,
+                p99_ms: f.p99_ms,
+                cold_starts: f.cold_starts,
+                inplace_scale_ups: f.inplace_scale_ups,
+                avg_committed_mcpu: f.avg_committed_mcpu,
+                pods_created: f.pods_created,
+            }]
         }
         WorkloadSource::AzureGenerator { .. } | WorkloadSource::TraceFile { .. } => {
-            // One trace per rep for the generator (it reseeds per rep); a
-            // file never changes, so it is read and parsed exactly once.
-            // Either way the trace is shared by every routing × policy so
-            // each policy replays the identical arrival stream — the
-            // comparison the paper's §3 tables rest on.
-            let mut cache: BTreeMap<u32, (Vec<TraceEvent>, usize)> = BTreeMap::new();
-            let file_trace = if matches!(v.workload, WorkloadSource::TraceFile { .. }) {
-                Some(build_trace(v, 0)?)
-            } else {
-                for rep in 0..v.reps {
-                    cache.insert(rep, build_trace(v, rep)?);
-                }
-                None
+            let data = p
+                .trace
+                .as_ref()
+                .expect("trace sources are prepared before execution")
+                .checkout(v, job.rep)?;
+            let (trace, functions) = (&data.0, data.1);
+            let cfg = ReplayConfig {
+                functions,
+                policy: job.policy,
+                routing: job.routing,
+                topology: v.topology.build(),
+                knobs: v.autoscaler.clone(),
+                hybrid: v.hybrid,
+                seed,
             };
-            for &routing in &v.routing {
-                for &policy in &v.policies {
-                    for rep in 0..v.reps {
-                        let (trace, functions) = match &file_trace {
-                            Some(t) => t,
-                            None => &cache[&rep],
-                        };
-                        let cfg = ReplayConfig {
-                            functions: *functions,
-                            policy,
-                            routing,
-                            topology: v.topology.build(),
-                            knobs: v.autoscaler.clone(),
-                            hybrid: v.hybrid,
-                            seed: v.seed.wrapping_add(u64::from(rep)),
-                        };
-                        let r = replay_with(trace, &cfg);
-                        rows.push(ScenarioRow {
-                            scenario: v.name.clone(),
-                            variant: label.to_string(),
-                            workload: "trace".to_string(),
-                            rep,
-                            policy,
-                            routing,
-                            nodes: v.topology.nodes(),
-                            services: *functions,
-                            completed: r.completed,
-                            failed: r.failed,
-                            mean_ms: r.mean_ms,
-                            p50_ms: r.p50_ms,
-                            p99_ms: r.p99_ms,
-                            cold_starts: r.cold_starts,
-                            inplace_scale_ups: r.inplace_scale_ups,
-                            avg_committed_mcpu: r.avg_committed_mcpu,
-                            pods_created: r.pods_created,
-                        });
-                    }
-                }
-            }
+            let r = replay_with(trace, &cfg);
+            vec![ScenarioRow {
+                scenario: v.name.clone(),
+                variant: p.label.clone(),
+                workload: "trace".to_string(),
+                rep: job.rep,
+                policy: job.policy,
+                routing: job.routing,
+                nodes: v.topology.nodes(),
+                services: functions,
+                completed: r.completed,
+                failed: r.failed,
+                mean_ms: r.mean_ms,
+                p50_ms: r.p50_ms,
+                p99_ms: r.p99_ms,
+                cold_starts: r.cold_starts,
+                inplace_scale_ups: r.inplace_scale_ups,
+                avg_committed_mcpu: r.avg_committed_mcpu,
+                pods_created: r.pods_created,
+            }]
         }
         WorkloadSource::ClosedLoop { iterations, think_s } => {
-            if v.topology != TopologySpec::Paper {
-                return Err(SpecError::invalid(
-                    "topology.kind",
-                    "the closed-loop rig reproduces the paper's single-node \
-                     testbed; use topology kind 'paper'",
-                ));
-            }
-            // The rig runs the paper's revision configs verbatim; rather
-            // than silently ignore autoscaler/hybrid settings (a swept
-            // knob would then run identical variants), reject them.
-            if v.autoscaler != crate::knative::config::ScaleKnobs::fleet_default() {
-                return Err(SpecError::invalid(
-                    "autoscaler",
-                    "closed-loop scenarios run the paper's per-policy revision \
-                     configs; autoscaler knobs (and sweeps over them) do not \
-                     apply — remove them or use a synthetic/trace source",
-                ));
-            }
-            if v.hybrid != crate::coordinator::accounting::HybridWeights::default() {
-                return Err(SpecError::invalid(
-                    "hybrid_weights",
-                    "closed-loop scenarios are single-pod; hybrid weights do \
-                     not apply — remove them or use a synthetic/trace source",
-                ));
-            }
-            // Routing is provably a no-op on the single-pod paper rig (the
-            // golden routing-invariance test pins it), so comparing routing
-            // policies here would emit identical rows per policy.
-            if v.routing.len() > 1 {
-                return Err(SpecError::invalid(
-                    "routing",
-                    "closed-loop scenarios are routing-invariant (single \
-                     pod); listing several routing policies would duplicate \
-                     every row — keep one",
-                ));
-            }
-            for &routing in &v.routing {
-                for &policy in &v.policies {
-                    for rep in 0..v.reps {
-                        let exp = PolicyExperiment {
-                            iterations: *iterations,
-                            think: SimTime::from_secs_f64(*think_s),
-                            seed: v.seed.wrapping_add(u64::from(rep)),
-                            routing,
-                        };
-                        for kind in WorkloadKind::ALL {
-                            let r = exp.measure_cell_report(kind, policy);
-                            rows.push(ScenarioRow {
-                                scenario: v.name.clone(),
-                                variant: label.to_string(),
-                                workload: kind.name().to_string(),
-                                rep,
-                                policy,
-                                routing,
-                                nodes: 1,
-                                services: 1,
-                                completed: r.completed,
-                                failed: r.failed,
-                                mean_ms: r.mean_ms,
-                                p50_ms: r.p50_ms,
-                                p99_ms: r.p99_ms,
-                                cold_starts: r.cold_starts,
-                                inplace_scale_ups: r.inplace_scale_ups,
-                                avg_committed_mcpu: r.avg_committed_mcpu,
-                                // The rig keeps one min-scale pod; churn is
-                                // not a closed-loop metric.
-                                pods_created: 0,
-                            });
-                        }
+            let exp = PolicyExperiment {
+                iterations: *iterations,
+                think: SimTime::from_secs_f64(*think_s),
+                seed,
+                routing: job.routing,
+            };
+            WorkloadKind::ALL
+                .iter()
+                .map(|&kind| {
+                    let r = exp.measure_cell_report(kind, job.policy);
+                    ScenarioRow {
+                        scenario: v.name.clone(),
+                        variant: p.label.clone(),
+                        workload: kind.name().to_string(),
+                        rep: job.rep,
+                        policy: job.policy,
+                        routing: job.routing,
+                        nodes: 1,
+                        services: 1,
+                        completed: r.completed,
+                        failed: r.failed,
+                        mean_ms: r.mean_ms,
+                        p50_ms: r.p50_ms,
+                        p99_ms: r.p99_ms,
+                        cold_starts: r.cold_starts,
+                        inplace_scale_ups: r.inplace_scale_ups,
+                        avg_committed_mcpu: r.avg_committed_mcpu,
+                        // The rig keeps one min-scale pod; churn is
+                        // not a closed-loop metric.
+                        pods_created: 0,
                     }
-                }
-            }
+                })
+                .collect()
         }
-    }
-    Ok(())
+    })
 }
 
 /// Materializes the trace for one rep: the generator reseeded per rep, or
@@ -309,6 +501,31 @@ mod tests {
         let a = ScenarioEngine::run(&spec).unwrap();
         let b = ScenarioEngine::run(&spec).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_run_matches_serial_exactly() {
+        // A grid with several variants, reps and routing policies so jobs
+        // genuinely interleave: 2 variants × 2 routing × 2 policies × 2
+        // reps = 16 jobs on 3 workers.
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"par",
+                "workload":{"type":"synthetic","services":4,
+                            "rate_per_service":0.2,"horizon_s":20},
+                "topology":{"kind":"uniform","nodes":2},
+                "policies":["cold","in-place"],
+                "routing":["least-loaded","hybrid"],
+                "reps":2,
+                "sweep":[{"param":"target_concurrency","values":[1,4]}]}"#,
+        )
+        .unwrap();
+        let serial = ScenarioEngine::run_with_threads(&spec, 1).unwrap();
+        assert_eq!(serial.rows.len(), 16);
+        let parallel = ScenarioEngine::run_with_threads(&spec, 3).unwrap();
+        assert_eq!(serial, parallel);
+        // More workers than jobs also degrades cleanly.
+        let oversubscribed = ScenarioEngine::run_with_threads(&spec, 64).unwrap();
+        assert_eq!(serial, oversubscribed);
     }
 
     #[test]

@@ -12,10 +12,14 @@
 //!   result document (`kinetic validate-report` gates it in CI).
 //! * [`preset`] — the legacy subcommands (`fleet`, `trace`, the policy
 //!   tables of `exp`) and the CI `smoke` gate as named specs.
+//! * [`schema_doc`] — the generated scenario JSON reference
+//!   (`kinetic schema --markdown` → `docs/SCENARIO_SCHEMA.md`, pinned by
+//!   `tests/docs_drift.rs`).
 
 pub mod engine;
 pub mod preset;
 pub mod report;
+pub mod schema_doc;
 pub mod spec;
 
 pub use engine::ScenarioEngine;

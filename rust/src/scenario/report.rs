@@ -191,15 +191,7 @@ impl ScenarioReport {
 
     /// Writes `<dir>/scenario_<name>.json` (pretty) and returns the path.
     pub fn save(&self, dir: &Path) -> std::io::Result<PathBuf> {
-        std::fs::create_dir_all(dir)?;
-        let slug: String = self
-            .name
-            .chars()
-            .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
-            .collect();
-        let path = dir.join(format!("scenario_{slug}.json"));
-        std::fs::write(&path, self.to_json().to_string_pretty())?;
-        Ok(path)
+        crate::util::json::save_named(dir, "scenario", &self.name, &self.to_json())
     }
 
     /// Loads and validates a saved report.

@@ -30,6 +30,33 @@ pub const MAX_RUNS: usize = 4096;
 /// seeds above this would silently round, so parsing rejects them.
 pub const MAX_EXACT_SEED: u64 = 1 << 53;
 
+/// Every sweepable parameter, in the order [`ScenarioSpec::apply_param`]
+/// handles them — the single source for the unknown-parameter error text
+/// and the generated schema document (`kinetic schema --markdown`).
+pub const SWEEP_PARAMS: [&str; 21] = [
+    "services",
+    "rate_per_service",
+    "horizon_s",
+    "functions",
+    "peak_rate",
+    "burst_p",
+    "time_scale",
+    "iterations",
+    "think_s",
+    "nodes",
+    "max_scale",
+    "target_concurrency",
+    "container_concurrency",
+    "stable_window_s",
+    "panic_window_divisor",
+    "panic_threshold",
+    "parked_cpu_m",
+    "hybrid_in_flight",
+    "hybrid_pressure_div",
+    "hybrid_resize",
+    "seed",
+];
+
 /// Parse/validation error, carrying the JSON path it occurred at.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SpecError {
@@ -747,12 +774,8 @@ impl ScenarioSpec {
                 return Err(SpecError::invalid(
                     &path,
                     format!(
-                        "unknown sweep parameter '{other}' (known: services, \
-                         rate_per_service, horizon_s, functions, peak_rate, burst_p, \
-                         time_scale, iterations, think_s, nodes, max_scale, \
-                         target_concurrency, container_concurrency, stable_window_s, \
-                         panic_window_divisor, panic_threshold, parked_cpu_m, \
-                         hybrid_in_flight, hybrid_pressure_div, hybrid_resize, seed)"
+                        "unknown sweep parameter '{other}' (known: {})",
+                        SWEEP_PARAMS.join(", ")
                     ),
                 ))
             }
@@ -1294,6 +1317,37 @@ mod tests {
         );
         let e = ScenarioSpec::parse(&doc).unwrap_err().to_string();
         assert!(e.contains("cap"), "{e}");
+    }
+
+    /// `SWEEP_PARAMS` (the error text + generated schema doc) must track
+    /// `apply_param` exactly: every listed name is recognized by at least
+    /// one workload source, and unlisted names stay unknown.
+    #[test]
+    fn sweep_params_const_matches_apply_param() {
+        let docs = [
+            r#"{"name":"t","topology":{"kind":"uniform","nodes":2},
+                "workload":{"type":"synthetic","services":1,
+                            "rate_per_service":1,"horizon_s":1}}"#,
+            r#"{"name":"t","workload":{"type":"azure-generator","functions":2,
+                "peak_rate":1,"horizon_s":1}}"#,
+            r#"{"name":"t","workload":{"type":"trace-file","path":"a.csv"}}"#,
+            r#"{"name":"t","workload":{"type":"closed-loop","iterations":2}}"#,
+        ];
+        for &param in SWEEP_PARAMS.iter() {
+            let recognized = docs.iter().any(|doc| {
+                let mut s = ScenarioSpec::parse(doc).unwrap();
+                match s.apply_param(param, 2.0) {
+                    Ok(()) => true,
+                    // A range/applicability error still proves the name is
+                    // known; only "unknown sweep parameter" fails.
+                    Err(e) => !e.to_string().contains("unknown sweep parameter"),
+                }
+            });
+            assert!(recognized, "'{param}' is listed but apply_param rejects it");
+        }
+        let mut s = ScenarioSpec::parse(docs[0]).unwrap();
+        let e = s.apply_param("warp", 1.0).unwrap_err().to_string();
+        assert!(e.contains("unknown sweep parameter"), "{e}");
     }
 
     #[test]

@@ -5,6 +5,13 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// Hard cap on the shared `--threads` option and the scenario engine's
+/// worker clamp — far above any useful count for a ≤4096-cell grid, it
+/// only guards against a mistyped huge value spawning thousands of OS
+/// threads. One constant so the CLI can never accept what the engine
+/// would clamp (or reject what it would run).
+pub const MAX_THREADS: usize = 256;
+
 /// Declared option for a subcommand.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
@@ -129,6 +136,12 @@ impl Invocation {
     pub fn seconds(&self) -> Result<u64, CliError> {
         self.u64_in("seconds", 1, 31_536_000)
     }
+
+    /// The shared `--threads` option: worker count in `[1, MAX_THREADS]`.
+    pub fn threads(&self) -> Result<usize, CliError> {
+        self.u64_in("threads", 1, MAX_THREADS as u64)
+            .map(|v| v as usize)
+    }
 }
 
 /// A subcommand with its options.
@@ -192,6 +205,14 @@ impl Command {
 
     pub fn opt_seconds(self, help: &'static str, default: &'static str) -> Self {
         self.opt("seconds", help, default)
+    }
+
+    pub fn opt_threads(self, default: &'static str) -> Self {
+        self.opt(
+            "threads",
+            "worker threads for the run grid (the report is identical at any count)",
+            default,
+        )
     }
 }
 
@@ -385,12 +406,19 @@ mod tests {
             Command::new("go", "x")
                 .opt_seed("42")
                 .opt_rate("rps", "0.5")
-                .opt_seconds("horizon", "300"),
+                .opt_seconds("horizon", "300")
+                .opt_threads("1"),
         );
         let inv = app.parse(&sv(&["go"])).unwrap();
         assert_eq!(inv.seed().unwrap(), 42);
         assert_eq!(inv.rate().unwrap(), 0.5);
         assert_eq!(inv.seconds().unwrap(), 300);
+        assert_eq!(inv.threads().unwrap(), 1);
+
+        let inv = app.parse(&sv(&["go", "--threads", "0"])).unwrap();
+        assert!(inv.threads().is_err());
+        let inv = app.parse(&sv(&["go", "--threads", "8"])).unwrap();
+        assert_eq!(inv.threads().unwrap(), 8);
 
         let inv = app.parse(&sv(&["go", "--seed", "banana"])).unwrap();
         let e = inv.seed().unwrap_err().to_string();

@@ -6,6 +6,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::path::{Path, PathBuf};
 
 /// A JSON value. Object keys are sorted (BTreeMap) so output is canonical.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,6 +45,21 @@ impl fmt::Display for JsonError {
 }
 
 impl std::error::Error for JsonError {}
+
+/// Writes `<dir>/<prefix>_<slug>.json` (pretty) and returns the path,
+/// slugging non-alphanumeric name characters to `-` — the one naming rule
+/// for every persisted report document (`scenario_*`, `analysis_*`), so
+/// the file pairs a run produces can never drift apart.
+pub fn save_named(dir: &Path, prefix: &str, name: &str, doc: &Json) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let slug: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    let path = dir.join(format!("{prefix}_{slug}.json"));
+    std::fs::write(&path, doc.to_string_pretty())?;
+    Ok(path)
+}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {

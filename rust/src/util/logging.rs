@@ -1,53 +1,21 @@
-//! Tiny `log`-facade backend with per-run verbosity, used by the CLI and
-//! examples. Writes to stderr so experiment tables on stdout stay clean.
+//! Per-run verbosity for the CLI and examples.
+//!
+//! Self-contained on purpose: the crate is dependency-free (see
+//! `Cargo.toml`), so this module cannot use the `log` facade crate — an
+//! earlier revision did, which made `cargo build` impossible with the
+//! empty `[dependencies]` table (and nothing ever emitted through the
+//! facade anyway, so `--verbose` was a no-op even then). Today the
+//! platform prints its diagnostics straight to stderr unconditionally;
+//! this knob is where future rate-limited/debug output should check
+//! before printing, kept so `kinetic exp --verbose` stays wired.
 
-use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
-
-use log::{Level, LevelFilter, Log, Metadata, Record};
 
 static VERBOSITY: AtomicU8 = AtomicU8::new(1);
 
-struct StderrLogger;
-
-impl Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        let v = VERBOSITY.load(Ordering::Relaxed);
-        let max = match v {
-            0 => Level::Error,
-            1 => Level::Warn,
-            2 => Level::Info,
-            3 => Level::Debug,
-            _ => Level::Trace,
-        };
-        metadata.level() <= max
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let mut err = std::io::stderr().lock();
-        let _ = writeln!(
-            err,
-            "[{:<5} {}] {}",
-            record.level(),
-            record.target(),
-            record.args()
-        );
-    }
-
-    fn flush(&self) {}
-}
-
-static LOGGER: StderrLogger = StderrLogger;
-
-/// Installs the logger (idempotent) and sets verbosity 0..=4.
+/// Sets verbosity 0..=4 (error..trace). Idempotent.
 pub fn init(verbosity: u8) {
     VERBOSITY.store(verbosity, Ordering::Relaxed);
-    // Ignore AlreadySet errors — tests may init repeatedly.
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(LevelFilter::Trace);
 }
 
 /// Current verbosity level.
@@ -65,6 +33,7 @@ mod tests {
         assert_eq!(verbosity(), 2);
         init(3);
         assert_eq!(verbosity(), 3);
-        log::info!("logging smoke test");
+        init(1);
+        assert_eq!(verbosity(), 1);
     }
 }

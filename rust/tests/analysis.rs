@@ -1,0 +1,95 @@
+//! End-to-end lock on the measurement pipeline: parallel `kinetic run`
+//! must be byte-identical to serial, and `kinetic analyze` must produce
+//! the paper-style speedup table (cold-policy baseline, ratio column)
+//! from a real scenario run.
+
+use kinetic::analysis::{self, AnalysisReport};
+use kinetic::policy::Policy;
+use kinetic::scenario::preset;
+use kinetic::scenario::{ScenarioEngine, ScenarioReport};
+use kinetic::util::json::Json;
+
+/// The acceptance-criteria test: `--threads 4` emits a ScenarioReport
+/// byte-identical to `--threads 1` on the `smoke` preset — not just
+/// structurally equal, the exact JSON text that lands on disk.
+#[test]
+fn smoke_report_is_byte_identical_across_thread_counts() {
+    let spec = preset::by_name("smoke").expect("smoke preset exists");
+    let serial = ScenarioEngine::run_with_threads(&spec, 1).unwrap();
+    let parallel = ScenarioEngine::run_with_threads(&spec, 4).unwrap();
+    let serial_text = serial.to_json().to_string_pretty();
+    let parallel_text = parallel.to_json().to_string_pretty();
+    assert!(
+        serial_text == parallel_text,
+        "parallel report text diverged from serial"
+    );
+    assert_eq!(serial_text.as_bytes(), parallel_text.as_bytes());
+}
+
+/// `kinetic analyze` on a smoke run: a markdown speedup table with the
+/// cold-policy baseline and the paper-style `×` ratio column.
+#[test]
+fn analyze_smoke_emits_the_paper_style_speedup_table() {
+    let spec = preset::by_name("smoke").unwrap();
+    let report = ScenarioEngine::run(&spec).unwrap();
+    let a = AnalysisReport::from_scenario(&report, Policy::Cold);
+    assert_eq!(a.rows.len(), 3); // one aggregated cell per §3 policy
+
+    let md = analysis::render(&a.speedup_table(), analysis::Format::Markdown);
+    assert!(md.contains("× vs cold (mean)"), "{md}");
+    assert!(md.contains("× vs cold (p99)"), "{md}");
+    // The baseline's own ratio is exactly 1.00×; every policy appears.
+    assert!(md.contains("1.00×"), "{md}");
+    for p in Policy::ALL {
+        assert!(md.contains(p.name()), "missing {} in\n{md}", p.name());
+    }
+    // Smoke completes work under every policy, so every ratio is defined.
+    for row in &a.rows {
+        assert!(row.group.has_latency(), "{:?}", row.group.key);
+        assert!(row.mean_ratio.is_some(), "{:?}", row.group.key);
+        let r = row.mean_ratio.unwrap();
+        assert!(r.is_finite() && r > 0.0, "{r}");
+    }
+    // The emitted AnalysisReport JSON validates and round-trips.
+    let j = a.to_json();
+    AnalysisReport::validate(&j).unwrap();
+    let back = AnalysisReport::from_json(
+        &Json::parse(&j.to_string_pretty()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(back, a);
+}
+
+/// Comparing a report against itself is the degenerate regression check:
+/// zero deltas everywhere, exit path "no regressions".
+#[test]
+fn self_compare_has_no_regressions() {
+    let spec = preset::by_name("smoke").unwrap();
+    let report = ScenarioEngine::run(&spec).unwrap();
+    let groups = analysis::aggregate(&report.rows);
+    let cmp = analysis::compare(&groups, &groups, 1.0);
+    assert_eq!(cmp.deltas.len(), groups.len());
+    assert!(!cmp.has_regressions());
+    assert!(!cmp.keys_mismatch());
+    for d in &cmp.deltas {
+        assert_eq!(d.mean_pct, Some(0.0));
+        assert_eq!(d.p99_pct, Some(0.0));
+    }
+}
+
+/// The saved ScenarioReport (what `kinetic run` writes) loads back and
+/// analyzes — the exact artifact path CI's analyze-smoke step exercises.
+#[test]
+fn saved_report_round_trips_through_analyze() {
+    let dir = std::env::temp_dir().join(format!("kinetic-analyze-{}", std::process::id()));
+    let spec = preset::by_name("smoke").unwrap();
+    let report = ScenarioEngine::run_with_threads(&spec, 2).unwrap();
+    let path = report.save(&dir).unwrap();
+    let loaded = ScenarioReport::load(&path).unwrap();
+    assert_eq!(loaded, report);
+    let a = AnalysisReport::from_scenario(&loaded, Policy::Cold);
+    let saved = a.save(&dir).unwrap();
+    let text = std::fs::read_to_string(&saved).unwrap();
+    AnalysisReport::validate(&Json::parse(&text).unwrap()).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

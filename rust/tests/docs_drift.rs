@@ -1,0 +1,45 @@
+//! Pins `docs/SCENARIO_SCHEMA.md` to the generator behind
+//! `kinetic schema --markdown`: the committed reference must match what
+//! the code would emit today. Refresh an intentionally changed schema
+//! with `KINETIC_BLESS=1 cargo test --test docs_drift`.
+
+use kinetic::scenario::schema_doc;
+
+fn doc_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/SCENARIO_SCHEMA.md")
+}
+
+#[test]
+fn scenario_schema_doc_matches_the_generator() {
+    let want = schema_doc::markdown();
+    let path = doc_path();
+    if std::env::var("KINETIC_BLESS").is_ok() {
+        std::fs::write(&path, &want).expect("write blessed schema doc");
+        eprintln!("blessed {}", path.display());
+        return;
+    }
+    let got = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "{} is missing ({e}); generate it with \
+             `KINETIC_BLESS=1 cargo test --test docs_drift`",
+            path.display()
+        )
+    });
+    if got != want {
+        // Point at the first diverging line instead of dumping both docs.
+        let line = got
+            .lines()
+            .zip(want.lines())
+            .position(|(g, w)| g != w)
+            .map(|i| i + 1)
+            .unwrap_or_else(|| got.lines().count().min(want.lines().count()) + 1);
+        panic!(
+            "docs/SCENARIO_SCHEMA.md is stale (first difference at line {line}); \
+             regenerate with `KINETIC_BLESS=1 cargo test --test docs_drift` \
+             or `kinetic schema --markdown > docs/SCENARIO_SCHEMA.md`.\n\
+             committed: {:?}\ngenerated: {:?}",
+            got.lines().nth(line - 1).unwrap_or("<eof>"),
+            want.lines().nth(line - 1).unwrap_or("<eof>"),
+        );
+    }
+}
