@@ -33,7 +33,9 @@ use crate::util::json::Json;
 use crate::util::table::Table;
 
 /// Bumped when a field changes meaning; `validate` pins it.
-pub const ANALYSIS_SCHEMA_VERSION: u64 = 1;
+/// v2: rows carry the predictive-policy speculation counters
+/// (`speculative_resizes`, `mispredictions`).
+pub const ANALYSIS_SCHEMA_VERSION: u64 = 2;
 
 /// The analysis of one scenario report: aggregated groups annotated with
 /// speedups against `baseline`.
@@ -154,6 +156,8 @@ fn speedup_to_json(s: &Speedup) -> Json {
         ("failed", g.failed.into()),
         ("cold_starts", g.cold_starts.into()),
         ("inplace_scale_ups", g.inplace_scale_ups.into()),
+        ("speculative_resizes", g.speculative_resizes.into()),
+        ("mispredictions", g.mispredictions.into()),
         ("pods_created", g.pods_created.into()),
         ("mean_ms", agg_to_json(&g.mean_ms)),
         ("p50_ms", agg_to_json(&g.p50_ms)),
@@ -219,6 +223,8 @@ fn speedup_from_json(j: &Json, path: &str) -> Result<Speedup, String> {
             failed: req_u64("failed")?,
             cold_starts: req_u64("cold_starts")?,
             inplace_scale_ups: req_u64("inplace_scale_ups")?,
+            speculative_resizes: req_u64("speculative_resizes")?,
+            mispredictions: req_u64("mispredictions")?,
             pods_created: req_u64("pods_created")?,
             mean_ms: agg("mean_ms")?,
             p50_ms: agg("p50_ms")?,

@@ -78,10 +78,16 @@ fn has_variants(groups: &[Group]) -> bool {
 }
 
 /// The cross-rep aggregate view: one row per (variant, workload, routing,
-/// policy) with counters summed and latency spreads.
+/// policy) with counters summed and latency spreads. The speculation
+/// columns (pre-resizes issued / windows missed — the predictive-inplace
+/// hit-rate signal) appear exactly when a predictive policy is in the
+/// comparison — keyed on the policy, not on observed counts, so a spec
+/// always renders the same columns and §3-only reports render exactly as
+/// before.
 pub fn aggregate_table(name: &str, groups: &[Group]) -> Table {
     let swept = has_variants(groups);
     let multi_rep = groups.iter().any(|g| g.reps > 1);
+    let speculative = groups.iter().any(|g| g.key.policy.predictive());
     let mut headers = Vec::new();
     if swept {
         headers.push("Variant");
@@ -97,9 +103,11 @@ pub fn aggregate_table(name: &str, groups: &[Group]) -> Table {
         "p50 (ms)",
         "p99 (ms)",
         "Cold",
-        "Committed (mCPU)",
-        "Pods",
     ]);
+    if speculative {
+        headers.extend(["Spec", "Miss"]);
+    }
+    headers.extend(["Committed (mCPU)", "Pods"]);
     let mut t = Table::new(headers).title(format!("Aggregate: {name}"));
     for g in groups {
         let mut cells = Vec::new();
@@ -121,6 +129,12 @@ pub fn aggregate_table(name: &str, groups: &[Group]) -> Table {
             fmt_agg(&g.p50_ms),
             fmt_agg(&g.p99_ms),
             g.cold_starts.to_string(),
+        ]);
+        if speculative {
+            cells.push(g.speculative_resizes.to_string());
+            cells.push(g.mispredictions.to_string());
+        }
+        cells.extend([
             format!("{:.0}", g.avg_committed_mcpu.mean),
             g.pods_created.to_string(),
         ]);

@@ -71,6 +71,10 @@ pub struct Group {
     pub failed: u64,
     pub cold_starts: u64,
     pub inplace_scale_ups: u64,
+    /// Driver-initiated speculative pre-resizes (predictive-inplace).
+    pub speculative_resizes: u64,
+    /// Speculation windows that closed with no arrival (re-parked).
+    pub mispredictions: u64,
     pub pods_created: u64,
     pub mean_ms: MetricAgg,
     pub p50_ms: MetricAgg,
@@ -95,6 +99,8 @@ struct Acc {
     failed: u64,
     cold_starts: u64,
     inplace_scale_ups: u64,
+    speculative_resizes: u64,
+    mispredictions: u64,
     pods_created: u64,
     mean_ms: Summary,
     p50_ms: Summary,
@@ -112,6 +118,8 @@ impl Acc {
             failed: 0,
             cold_starts: 0,
             inplace_scale_ups: 0,
+            speculative_resizes: 0,
+            mispredictions: 0,
             pods_created: 0,
             mean_ms: Summary::new(),
             p50_ms: Summary::new(),
@@ -126,6 +134,8 @@ impl Acc {
         self.failed += r.failed;
         self.cold_starts += r.cold_starts;
         self.inplace_scale_ups += r.inplace_scale_ups;
+        self.speculative_resizes += r.speculative_resizes;
+        self.mispredictions += r.mispredictions;
         self.pods_created += r.pods_created;
         // Rows with zero completions report 0.0 latencies; folding those
         // zeros into the spread would fake a "min latency of 0 ms", so
@@ -148,6 +158,8 @@ impl Acc {
             failed: self.failed,
             cold_starts: self.cold_starts,
             inplace_scale_ups: self.inplace_scale_ups,
+            speculative_resizes: self.speculative_resizes,
+            mispredictions: self.mispredictions,
             pods_created: self.pods_created,
             mean_ms: MetricAgg::from_summary(&self.mean_ms),
             p50_ms: MetricAgg::from_summary(&self.p50_ms),
@@ -212,6 +224,8 @@ pub(crate) fn test_row(
         p99_ms: mean * 2.0,
         cold_starts: 3,
         inplace_scale_ups: 1,
+        speculative_resizes: 0,
+        mispredictions: 0,
         avg_committed_mcpu: 100.0,
         pods_created: 4,
     }

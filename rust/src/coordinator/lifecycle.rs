@@ -22,10 +22,11 @@ impl Platform {
             let Some(svc) = w.services.get(svc_name) else { return };
             let p = &svc.profile;
             let requests = Resources::new(
-                // In-place pods reserve only a small request — the paper's
-                // resource-availability advantage; warm/cold reserve the
-                // full serving CPU (Guaranteed-ish QoS).
-                if svc.policy == Policy::InPlace {
+                // Parking pods (the in-place hook policies) reserve only a
+                // small request — the paper's resource-availability
+                // advantage; warm/cold/pooled reserve the full serving CPU
+                // (Guaranteed-ish QoS).
+                if svc.policy.inplace_hooks() {
                     MilliCpu(100)
                 } else {
                     svc.cfg.serving_cpu
@@ -133,15 +134,19 @@ impl Platform {
             )
         };
         match policy {
-            Policy::InPlace => {
+            Policy::InPlace | Policy::PredictiveInPlace => {
                 if idle {
-                    // The paper's post-hook: deallocate back to 1 m.
+                    // The paper's post-hook: deallocate back to 1 m. For
+                    // the predictive policy the driver may speculatively
+                    // re-raise the pod ahead of the next forecast arrival.
                     Self::request_resize(w, eng, svc_name, pod_id, parked);
                 }
             }
-            Policy::Cold => {
+            Policy::Cold | Policy::Pooled => {
+                // Arm the idle timer (stable window). Cold pods scale to
+                // zero with it; pooled pods use the same timer but
+                // `idle_check` only retires pods above the pool target.
                 if idle {
-                    // Arm the scale-to-zero timer (stable window).
                     let name = svc_name.to_string();
                     let s = eng.schedule_in(stable_window, move |w: &mut Platform, eng| {
                         Self::idle_check(w, eng, &name, pod_id);
@@ -168,6 +173,17 @@ impl Platform {
         };
         if !idle {
             return;
+        }
+        // Pooled: the pool itself never retires — only pods above the
+        // target trim down (recounted at fire time, so concurrent timers
+        // stop as soon as the pool is back at size).
+        {
+            let svc = &w.services[svc_name];
+            if svc.policy == Policy::Pooled
+                && (svc.idle_ready_pods().count() as u32) <= svc.cfg.forecast.pool_size.max(1)
+            {
+                return;
+            }
         }
         // The pod must still exist and be bound — its node's kubelet times
         // the teardown. (Unbound here would mean inconsistent state; bail

@@ -19,6 +19,12 @@ pub struct ServiceMetrics {
     pub cold_starts: u64,
     /// Requests that triggered an in-place scale-up.
     pub inplace_scale_ups: u64,
+    /// Driver-initiated speculative pre-resizes issued ahead of forecast
+    /// arrivals (predictive-inplace).
+    pub speculative_resizes: u64,
+    /// Speculation windows that closed with no arrival — the pod was
+    /// re-parked (predictive-inplace).
+    pub mispredictions: u64,
 }
 
 /// Time-integral of committed CPU (Σ applied limits of live pods), the

@@ -27,6 +27,10 @@ impl Platform {
             Some(r) => r.service.clone(),
             None => return,
         };
+        // Driver-managed policies learn the arrival stream here — the
+        // activator's view, after the forward hop — and schedule the next
+        // speculation cycle. A no-op for the §3 triple.
+        Self::forecast_observe(w, eng, &svc_name);
         // Placement-aware selection: the scored pick reads the per-node
         // counters, so the service borrow must be shared here.
         let Some(pick) = w
@@ -57,6 +61,9 @@ impl Platform {
                 Self::start_pod(w, eng, &svc_name, true);
             } else {
                 Self::maybe_scale_up(w, eng, &svc_name);
+                // An exhausted warm pool refills proactively too (bounded
+                // by the same scale ceiling the KPA respects).
+                Self::pool_refill(w, eng, &svc_name);
             }
         }
         Self::record_concurrency(w, eng, &svc_name);
@@ -125,6 +132,9 @@ impl Platform {
             w.metrics.service(svc_name).inplace_scale_ups += 1;
             Self::request_resize(w, eng, svc_name, pod_id, serving);
         }
+        // Pooled: this dispatch consumed a pool pod — top the pool back up
+        // so the next burst still finds warm capacity. No-op otherwise.
+        Self::pool_refill(w, eng, svc_name);
         Self::begin_exec(w, eng, svc_name, req, pod_id);
     }
 

@@ -3,6 +3,7 @@
 use crate::cluster::pod::PodId;
 use crate::cluster::NodeId;
 use crate::coordinator::accounting::{FleetAccounting, HybridWeights, RoutingPolicy};
+use crate::forecast::ServicePredictor;
 use crate::knative::activator::{Activator, RequestId};
 use crate::knative::autoscaler::Autoscaler;
 use crate::knative::config::RevisionConfig;
@@ -65,6 +66,9 @@ pub struct Service {
     /// Count of ready, non-terminating pods, maintained on pod
     /// ready/terminating transitions.
     pub ready_count: u32,
+    /// Arrival predictor + speculation bookkeeping — present exactly when
+    /// the policy is driver-managed ([`Policy::predictive`]).
+    pub predictor: Option<ServicePredictor>,
 }
 
 impl Service {
@@ -79,6 +83,7 @@ impl Service {
         policy: Policy,
         cfg: RevisionConfig,
     ) -> Service {
+        let forecast = cfg.forecast;
         Service {
             name: name.to_string(),
             profile,
@@ -90,6 +95,9 @@ impl Service {
             starting: 0,
             in_flight_pods: 0,
             ready_count: 0,
+            predictor: policy
+                .predictive()
+                .then(|| ServicePredictor::new(forecast)),
         }
     }
 
@@ -166,6 +174,14 @@ impl Service {
 
     pub fn pod_index(&self, pod: PodId) -> Option<usize> {
         self.pods.iter().position(|p| p.pod == pod)
+    }
+
+    /// Ready, non-terminating pods with no traffic at all — the warm-pool
+    /// stock (`pooled`) and the speculation targets (`predictive-inplace`).
+    pub fn idle_ready_pods(&self) -> impl Iterator<Item = &ServicePod> {
+        self.pods
+            .iter()
+            .filter(|p| p.ready && !p.terminating && p.proxy.idle())
     }
 
     /// Live pods of this service placed on `node`.
@@ -391,6 +407,31 @@ mod tests {
         s.pods[2].terminating = true;
         assert_eq!(s.pods_on(NodeId(0)).count(), 1);
         assert_eq!(s.pods_on(NodeId(0)).next().unwrap().pod, PodId(0));
+    }
+
+    #[test]
+    fn predictor_present_only_for_driver_managed_policies() {
+        for policy in Policy::PAPER {
+            assert!(svc(policy).predictor.is_none(), "{policy:?}");
+        }
+        assert!(svc(Policy::Pooled).predictor.is_some());
+        assert!(svc(Policy::PredictiveInPlace).predictor.is_some());
+    }
+
+    #[test]
+    fn idle_ready_pods_excludes_busy_unready_and_terminating() {
+        let mut s = svc(Policy::Pooled);
+        for i in 0..4 {
+            s.pods.push(ServicePod::new(PodId(i), 10, false));
+        }
+        s.pods[0].ready = true; // idle + ready → counted
+        s.pods[1].ready = true;
+        s.pods[1].proxy.offer(RequestId(1)); // busy
+        s.pods[2].ready = true;
+        s.pods[2].terminating = true; // terminating
+        // pods[3] not ready.
+        let idle: Vec<PodId> = s.idle_ready_pods().map(|p| p.pod).collect();
+        assert_eq!(idle, vec![PodId(0)]);
     }
 
     #[test]

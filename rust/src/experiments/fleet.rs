@@ -14,6 +14,7 @@ use crate::cluster::topology::Topology;
 use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
 use crate::coordinator::service::Service;
 use crate::coordinator::sim::Simulation;
+use crate::forecast::ForecastConfig;
 use crate::knative::config::ScaleKnobs;
 use crate::loadgen::arrival::Arrival;
 use crate::policy::{PlatformParams, Policy};
@@ -53,6 +54,9 @@ pub struct FleetConfig {
     pub knobs: ScaleKnobs,
     /// Hybrid routing blend weights threaded into the platform.
     pub hybrid: HybridWeights,
+    /// Predictor/driver knobs for the forecast-driven policies (inert for
+    /// the §3 triple; defaults keep them bit-identical).
+    pub forecast: ForecastConfig,
 }
 
 impl FleetConfig {
@@ -71,6 +75,7 @@ impl FleetConfig {
             mix: FLEET_MIX.to_vec(),
             knobs: ScaleKnobs::fleet_default(),
             hybrid: HybridWeights::default(),
+            forecast: ForecastConfig::default(),
         }
     }
 
@@ -95,6 +100,10 @@ pub struct FleetRow {
     pub p99_ms: f64,
     pub cold_starts: u64,
     pub inplace_scale_ups: u64,
+    /// Driver-initiated speculative pre-resizes (predictive-inplace).
+    pub speculative_resizes: u64,
+    /// Speculation windows that closed with no arrival (re-parked).
+    pub mispredictions: u64,
     /// Average committed CPU over the run, milliCPU (reservation cost).
     pub avg_committed_mcpu: f64,
     pub pods_created: u64,
@@ -117,6 +126,7 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
         // knobs bound per-pod concurrency so the KPA path is exercised at
         // scale (defaults reproduce the old hard-wired 4 / 2.0 / 4).
         cfg.knobs.apply(&mut rc);
+        cfg.forecast.apply(&mut rc, policy);
         let svc = Service::with_config(
             &format!("fn-{i}"),
             WorkloadProfile::paper(kind),
@@ -146,11 +156,14 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
     let now = sim.now();
     let mut lat = Samples::new();
     let (mut completed, mut failed, mut cold, mut ups) = (0u64, 0u64, 0u64, 0u64);
+    let (mut spec_ups, mut mispred) = (0u64, 0u64);
     for (_, m) in sim.world.metrics.services() {
         completed += m.completed;
         failed += m.failed;
         cold += m.cold_starts;
         ups += m.inplace_scale_ups;
+        spec_ups += m.speculative_resizes;
+        mispred += m.mispredictions;
         for &v in m.latency_ms.values() {
             lat.record(v);
         }
@@ -167,14 +180,18 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
         p99_ms: lat.percentile(99.0),
         cold_starts: cold,
         inplace_scale_ups: ups,
+        speculative_resizes: spec_ups,
+        mispredictions: mispred,
         avg_committed_mcpu: sim.world.metrics.committed_cpu.average_mcpu(now),
         pods_created: sim.world.metrics.pods_created,
     }
 }
 
-/// All three §3 policies over one fleet.
+/// The paper's §3 policy triple over one fleet — the default comparison
+/// (the predictive policies join through an explicit scenario `policies`
+/// list, never implicitly, so legacy outputs stay bit-identical).
 pub fn run_all(cfg: &FleetConfig) -> Vec<FleetRow> {
-    Policy::ALL.iter().map(|&p| run_policy(cfg, p)).collect()
+    Policy::PAPER.iter().map(|&p| run_policy(cfg, p)).collect()
 }
 
 /// Every routing policy × every §3 policy over one fleet — the

@@ -155,6 +155,8 @@ fn cell_hash(kind: WorkloadKind, policy: Policy) -> u64 {
         Policy::Cold => 3,
         Policy::Warm => 5,
         Policy::InPlace => 7,
+        Policy::Pooled => 11,
+        Policy::PredictiveInPlace => 13,
     };
     k.wrapping_mul(p)
 }

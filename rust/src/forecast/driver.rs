@@ -1,0 +1,164 @@
+//! The proactive driver: consumes per-service forecasts and issues
+//! *driver-initiated* actions ahead of arrivals, extending the reactive
+//! request-initiated resize path of [`coordinator::resize`](crate::coordinator)
+//! with two mechanisms:
+//!
+//! * **Warm-pool maintenance** (`pooled`): every dispatch that consumes a
+//!   pool pod tops the idle pool back up to `pool_size`, and pods above
+//!   the target retire through the cold-style idle timer — the pool-based
+//!   cold-start mitigation of arXiv:1903.12221.
+//! * **Speculative pre-resize** (`predictive-inplace`): each observed
+//!   arrival schedules one speculation cycle for the *next* predicted
+//!   arrival — resize the parked pod up `horizon` ahead of it, and re-park
+//!   2×`horizon` later if no arrival claimed the pod (a misprediction).
+//!   In-place scaling becomes a speculation mechanism: a hit serves the
+//!   request at the full allocation with no resize on the critical path;
+//!   a miss costs one resize round-trip and restores the parked state.
+//!
+//! The driver is event-driven, never tick-driven: one speculation cycle
+//! per observed arrival, generation-stamped so stale events no-op. With
+//! no arrivals nothing is scheduled, the pod stays parked, and the event
+//! queue drains — `predictive-inplace` can never do worse than the §3
+//! in-place policy on a silent service.
+
+use crate::cluster::pod::PodId;
+use crate::coordinator::platform::{Eng, Platform};
+use crate::policy::Policy;
+use crate::util::quantity::MilliCpu;
+
+impl Platform {
+    /// Records an arrival with the service's predictor (driver-managed
+    /// policies only; a no-op for the §3 triple) and schedules the next
+    /// speculation cycle. Called from the activator's `arrive` path, so
+    /// the predictor sees exactly what the activator sees.
+    pub(crate) fn forecast_observe(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        let now = eng.now();
+        let policy = {
+            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(pred) = svc.predictor.as_mut() else { return };
+            pred.predictor.observe(now);
+            // Every arrival supersedes in-flight speculation events: a
+            // pending re-park must not fire for a forecast that just hit.
+            pred.generation += 1;
+            svc.policy
+        };
+        if policy == Policy::PredictiveInPlace {
+            Self::schedule_speculation(w, eng, svc_name);
+        }
+    }
+
+    /// Schedules the pre-resize for the next predicted arrival: `horizon`
+    /// ahead of the predicted time (clamped to now for gaps shorter than
+    /// the horizon). No prediction ⇒ nothing scheduled.
+    pub(crate) fn schedule_speculation(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        let (gen, lead) = {
+            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let horizon = svc.cfg.forecast.horizon;
+            let Some(pred) = svc.predictor.as_mut() else { return };
+            let Some(gap) = pred.predictor.predict_gap() else { return };
+            (pred.generation, gap.saturating_sub(horizon))
+        };
+        let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+        eng.schedule_in(lead, move |w: &mut Platform, eng| {
+            Self::speculative_resize(w, eng, &name, gen);
+        });
+    }
+
+    /// The speculative pre-resize: raise every idle parked pod to the
+    /// serving allocation ahead of the forecast arrival, then arm the
+    /// misprediction watchdog. Skipped when a newer arrival superseded
+    /// this cycle or the rate window has gone quiet (stale histogram).
+    pub(crate) fn speculative_resize(w: &mut Platform, eng: &mut Eng, svc_name: &str, gen: u64) {
+        let now = eng.now();
+        let (serving, horizon, targets) = {
+            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let serving = svc.cfg.serving_cpu;
+            let horizon = svc.cfg.forecast.horizon;
+            let Some(pred) = svc.predictor.as_mut() else { return };
+            if pred.generation != gen {
+                return;
+            }
+            if !pred.predictor.active_at(now) {
+                return;
+            }
+            let targets: Vec<(PodId, Option<MilliCpu>)> = svc
+                .idle_ready_pods()
+                .map(|p| (p.pod, p.desired_limit))
+                .collect();
+            (serving, horizon, targets)
+        };
+        let mut raised = false;
+        for (pod, desired) in targets {
+            let applied = w.applied_limit(pod).unwrap_or(MilliCpu::ZERO);
+            // Below serving, or a park still in flight that would drop it
+            // below serving right before the predicted arrival.
+            if applied < serving || desired.is_some_and(|d| d < serving) {
+                w.metrics.service(svc_name).speculative_resizes += 1;
+                Self::request_resize(w, eng, svc_name, pod, serving);
+                raised = true;
+            }
+        }
+        if raised {
+            // The pre-resize fired `horizon` ahead of the predicted
+            // arrival; 2×horizon later the speculation window
+            // [predicted − horizon, predicted + horizon] has fully
+            // passed. An arrival inside it bumps the generation and this
+            // watchdog no-ops — that is the hit case.
+            let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
+            eng.schedule_in(horizon + horizon, move |w: &mut Platform, eng| {
+                Self::speculation_repark(w, eng, &name, gen);
+            });
+        }
+    }
+
+    /// The misprediction watchdog: no arrival claimed the speculated pods
+    /// within the horizon, so restore the §3 parked state (and the
+    /// resource-availability advantage it buys).
+    pub(crate) fn speculation_repark(w: &mut Platform, eng: &mut Eng, svc_name: &str, gen: u64) {
+        let (parked, targets) = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(pred) = svc.predictor.as_ref() else { return };
+            if pred.generation != gen {
+                return; // an arrival landed inside the window — a hit
+            }
+            let parked = svc.cfg.parked_cpu;
+            let targets: Vec<(PodId, Option<MilliCpu>)> = svc
+                .idle_ready_pods()
+                .map(|p| (p.pod, p.desired_limit))
+                .collect();
+            (parked, targets)
+        };
+        let mut missed = false;
+        for (pod, desired) in targets {
+            let applied = w.applied_limit(pod).unwrap_or(MilliCpu::ZERO);
+            if applied > parked || desired.is_some_and(|d| d > parked) {
+                Self::request_resize(w, eng, svc_name, pod, parked);
+                missed = true;
+            }
+        }
+        if missed {
+            w.metrics.service(svc_name).mispredictions += 1;
+        }
+    }
+
+    /// Pooled: tops the idle warm pool back up to `pool_size`. Starting
+    /// pods count toward the refill (they arrive idle), and total live
+    /// pods stay within the revision's scale ceiling — an exhausted pool
+    /// under saturation degrades to buffered requests exactly like warm.
+    pub(crate) fn pool_refill(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+        let need = {
+            let Some(svc) = w.services.get(svc_name) else { return };
+            if svc.policy != Policy::Pooled {
+                return;
+            }
+            let pool = svc.cfg.forecast.pool_size.max(1);
+            let incoming = svc.idle_ready_pods().count() as u32 + svc.starting;
+            let live = svc.ready_count + svc.starting;
+            let cap = svc.cfg.max_scale.max(pool);
+            pool.saturating_sub(incoming).min(cap.saturating_sub(live))
+        };
+        for _ in 0..need {
+            Self::start_pod(w, eng, svc_name, false);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Bounded inter-arrival histogram — the keep-alive-style predictor of
+//! the pool/prediction cold-start literature: bucket the gaps between
+//! consecutive arrivals and read next-arrival estimates off quantiles of
+//! the counts. Fixed memory (`buckets + 1` counters), integer bucket
+//! math, fully deterministic.
+
+use crate::simclock::SimTime;
+
+/// Histogram of observed inter-arrival gaps.
+#[derive(Debug, Clone)]
+pub struct InterArrivalHistogram {
+    bucket: SimTime,
+    /// `buckets` regular counters plus a trailing overflow counter for
+    /// gaps at or beyond `bucket × buckets`.
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl InterArrivalHistogram {
+    pub fn new(bucket: SimTime, buckets: usize) -> InterArrivalHistogram {
+        InterArrivalHistogram {
+            bucket: bucket.max(SimTime::from_nanos(1)),
+            counts: vec![0; buckets.max(1) + 1],
+            total: 0,
+        }
+    }
+
+    /// Records one observed gap.
+    pub fn record(&mut self, gap: SimTime) {
+        let idx = (gap.as_nanos() / self.bucket.as_nanos()) as usize;
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Gaps recorded so far.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Gaps that landed in the overflow bucket.
+    pub fn overflowed(&self) -> u64 {
+        *self.counts.last().expect("counts is never empty")
+    }
+
+    /// Upper edge of the bucket holding quantile `q` of the recorded gaps
+    /// (the conservative "no later than" estimate the driver wants).
+    /// `None` when the histogram is empty or the quantile falls in the
+    /// overflow bucket — gaps too long or too irregular to speculate on.
+    pub fn quantile(&self, q: f64) -> Option<SimTime> {
+        if self.total == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                if i + 1 == self.counts.len() {
+                    return None; // overflow bucket
+                }
+                return Some(SimTime::from_nanos(
+                    self.bucket.as_nanos() * (i as u64 + 1),
+                ));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist() -> InterArrivalHistogram {
+        InterArrivalHistogram::new(SimTime::from_secs(1), 8)
+    }
+
+    #[test]
+    fn records_into_the_right_bucket() {
+        let mut h = hist();
+        h.record(SimTime::from_millis(300)); // bucket 0
+        h.record(SimTime::from_millis(1500)); // bucket 1
+        h.record(SimTime::from_secs(1)); // exactly on the edge → bucket 1
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.overflowed(), 0);
+    }
+
+    #[test]
+    fn quantile_returns_upper_bucket_edge() {
+        let mut h = hist();
+        for _ in 0..3 {
+            h.record(SimTime::from_millis(2500)); // bucket 2
+        }
+        h.record(SimTime::from_millis(7500)); // bucket 7
+        // Median of {2.5, 2.5, 2.5, 7.5} s → bucket 2 → upper edge 3 s.
+        assert_eq!(h.quantile(0.5), Some(SimTime::from_secs(3)));
+        // The tail quantile reaches the long gap's bucket edge.
+        assert_eq!(h.quantile(1.0), Some(SimTime::from_secs(8)));
+    }
+
+    #[test]
+    fn empty_and_overflow_yield_none() {
+        let mut h = hist();
+        assert_eq!(h.quantile(0.5), None);
+        // All gaps beyond the last regular bucket: never speculate.
+        for _ in 0..5 {
+            h.record(SimTime::from_secs(100));
+        }
+        assert_eq!(h.overflowed(), 5);
+        assert_eq!(h.quantile(0.5), None);
+        // A mixed stream whose median is regular still predicts.
+        let mut h = hist();
+        for _ in 0..3 {
+            h.record(SimTime::from_millis(500));
+        }
+        h.record(SimTime::from_secs(100));
+        assert_eq!(h.quantile(0.5), Some(SimTime::from_secs(1)));
+    }
+
+    #[test]
+    fn deterministic_under_replay() {
+        let gaps: Vec<SimTime> = (0..50)
+            .map(|i| SimTime::from_millis(137 * (i % 13) + 20))
+            .collect();
+        let mut a = hist();
+        let mut b = hist();
+        for &g in &gaps {
+            a.record(g);
+            b.record(g);
+            assert_eq!(a.quantile(0.5), b.quantile(0.5));
+        }
+        assert_eq!(a.counts, b.counts);
+    }
+}

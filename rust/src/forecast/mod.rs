@@ -1,0 +1,137 @@
+//! Forecast-driven proactive scaling — the predictor layer and driver
+//! behind the `pooled` and `predictive-inplace` policies.
+//!
+//! The paper's §3 policy space is purely *reactive*: an in-place pod is
+//! parked at 1 m CPU and resized only once a request is already waiting
+//! at the queue-proxy. This subsystem adds the prediction-driven side of
+//! the design space the related work argues for:
+//!
+//! * [`histogram`] — a bounded inter-arrival histogram (the keep-alive
+//!   predictor shape of the pool/prediction literature, arXiv:1903.12221
+//!   and arXiv:2308.11209): bucket the gaps between arrivals, read the
+//!   next-arrival estimate off a quantile.
+//! * [`window`] — a sliding-window arrival-rate estimator, doubling as
+//!   the staleness bound (no speculation once the window has gone quiet).
+//! * [`predictor`] — [`ArrivalPredictor`] combines the two;
+//!   [`ServicePredictor`] attaches one to a service together with the
+//!   speculation-generation bookkeeping the driver uses.
+//! * [`driver`] — `impl Platform` hooks that consume forecasts and issue
+//!   *driver-initiated* actions ahead of arrivals: warm-pool refills
+//!   (`pooled`) and speculative pre-resizes with misprediction re-parks
+//!   (`predictive-inplace`).
+//!
+//! Everything is deterministic and zero-dependency: predictions are pure
+//! functions of the observed arrival stream, and the driver schedules at
+//! most one speculation cycle per observed arrival, so idle services
+//! schedule nothing and the event queue always drains.
+
+pub mod driver;
+pub mod histogram;
+pub mod predictor;
+pub mod window;
+
+pub use histogram::InterArrivalHistogram;
+pub use predictor::{ArrivalPredictor, ServicePredictor};
+pub use window::RateWindow;
+
+use crate::knative::config::RevisionConfig;
+use crate::policy::Policy;
+use crate::simclock::SimTime;
+
+/// Knobs of the arrival predictor and the proactive driver — carried on
+/// [`RevisionConfig`] and scenario-tunable (`forecast` spec section, the
+/// `forecast_bucket_ms` / `forecast_horizon_ms` / `pool_size` sweep axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ForecastConfig {
+    /// Inter-arrival histogram bucket width. Predictions round up to a
+    /// bucket edge, so keep `horizon >= bucket` for the speculation
+    /// window to cover the rounding.
+    pub bucket: SimTime,
+    /// Sliding window of the rate estimator — also the staleness bound:
+    /// once the window has seen no arrivals, speculation stops.
+    pub window: SimTime,
+    /// Speculation horizon: pre-resize this far ahead of the predicted
+    /// arrival, and re-park this far after it passes unmet.
+    pub horizon: SimTime,
+    /// Warm-pool target for the `pooled` policy.
+    pub pool_size: u32,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> ForecastConfig {
+        ForecastConfig {
+            bucket: SimTime::from_millis(1000),
+            window: SimTime::from_secs(60),
+            horizon: SimTime::from_millis(2000),
+            pool_size: 2,
+        }
+    }
+}
+
+impl ForecastConfig {
+    /// Histogram buckets; gaps past `bucket × BUCKETS` land in the
+    /// overflow bucket and are never speculated on.
+    pub const BUCKETS: usize = 128;
+
+    /// Layers these knobs over a policy's revision config — the forecast
+    /// analogue of `ScaleKnobs::apply`. For the pooled policy the pool is
+    /// the replica floor; the ceiling is raised only to the structural
+    /// minimum (`max_scale >= min_scale`), never beyond the configured
+    /// ceiling — a pool that wants more headroom than `max_scale` allows
+    /// is a spec error (`ScenarioEngine` rejects it), not a silent
+    /// override that would skew cross-policy comparisons.
+    pub fn apply(&self, rc: &mut RevisionConfig, policy: Policy) {
+        rc.forecast = *self;
+        if policy == Policy::Pooled {
+            let pool = self.pool_size.max(1);
+            rc.min_scale = pool;
+            rc.max_scale = rc.max_scale.max(pool);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_keep_horizon_covering_the_bucket() {
+        let d = ForecastConfig::default();
+        assert!(d.horizon >= d.bucket, "horizon must cover bucket rounding");
+        assert!(d.window > d.horizon);
+        assert_eq!(d.pool_size, 2);
+    }
+
+    #[test]
+    fn apply_is_identity_for_reactive_policies() {
+        // The §3 triple must stay bit-identical under a default apply.
+        for policy in Policy::PAPER {
+            let mut rc = policy.revision_config();
+            let want = rc.clone();
+            ForecastConfig::default().apply(&mut rc, policy);
+            assert_eq!(rc, want, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn apply_feeds_pool_size_into_scale_bounds() {
+        let mut rc = Policy::Pooled.revision_config();
+        rc.max_scale = 4; // as the fleet knobs would set it
+        let cfg = ForecastConfig {
+            pool_size: 5,
+            ..ForecastConfig::default()
+        };
+        cfg.apply(&mut rc, Policy::Pooled);
+        assert_eq!(rc.min_scale, 5);
+        // Raised only to the structural minimum (max >= min), never to a
+        // silent headroom multiple — oversize pools are a spec error.
+        assert_eq!(rc.max_scale, 5);
+        assert_eq!(rc.forecast.pool_size, 5);
+
+        // A generous max_scale is kept.
+        let mut rc = Policy::Pooled.revision_config();
+        rc.max_scale = 100;
+        cfg.apply(&mut rc, Policy::Pooled);
+        assert_eq!(rc.max_scale, 100);
+    }
+}

@@ -1,0 +1,138 @@
+//! [`ArrivalPredictor`] — the per-function composite predictor — and
+//! [`ServicePredictor`], the bundle a [`Service`](crate::coordinator::Service)
+//! carries when its policy is driver-managed.
+
+use crate::forecast::{ForecastConfig, InterArrivalHistogram, RateWindow};
+use crate::simclock::SimTime;
+
+/// Composite arrival predictor: inter-arrival histogram (shape memory)
+/// plus sliding-window rate estimator (liveness/heat). Deterministic: the
+/// same observation stream always yields the same forecasts.
+#[derive(Debug, Clone)]
+pub struct ArrivalPredictor {
+    hist: InterArrivalHistogram,
+    window: RateWindow,
+    last_arrival: Option<SimTime>,
+}
+
+impl ArrivalPredictor {
+    pub fn new(cfg: &ForecastConfig) -> ArrivalPredictor {
+        ArrivalPredictor {
+            hist: InterArrivalHistogram::new(cfg.bucket, ForecastConfig::BUCKETS),
+            window: RateWindow::new(cfg.window),
+            last_arrival: None,
+        }
+    }
+
+    /// Feeds one observed arrival (times are monotone simulation time).
+    pub fn observe(&mut self, now: SimTime) {
+        if let Some(prev) = self.last_arrival {
+            self.hist.record(now.saturating_sub(prev));
+        }
+        self.window.record(now);
+        self.last_arrival = Some(now);
+    }
+
+    /// Median-bucket estimate of the gap from the last arrival to the
+    /// next. `None` without enough signal: fewer than two arrivals ever,
+    /// or a median in the histogram's overflow bucket (gaps too long or
+    /// too irregular to speculate on) — the graceful-degradation path.
+    pub fn predict_gap(&self) -> Option<SimTime> {
+        self.hist.quantile(0.5)
+    }
+
+    /// Arrivals per second over the sliding window ending at `now`.
+    pub fn rate_per_sec(&mut self, now: SimTime) -> f64 {
+        self.window.rate_per_sec(now)
+    }
+
+    /// Has the window seen any arrival at `now`? The driver's staleness
+    /// guard: a cold histogram full of old gaps must not keep cycling
+    /// speculative resizes after traffic dies.
+    pub fn active_at(&mut self, now: SimTime) -> bool {
+        self.window.active_at(now)
+    }
+
+    pub fn last_arrival(&self) -> Option<SimTime> {
+        self.last_arrival
+    }
+
+    /// Inter-arrival gaps recorded so far.
+    pub fn observations(&self) -> u64 {
+        self.hist.total()
+    }
+}
+
+/// Predictor plus the driver's speculation bookkeeping for one service.
+#[derive(Debug, Clone)]
+pub struct ServicePredictor {
+    pub predictor: ArrivalPredictor,
+    /// Bumped on every observed arrival. Scheduled speculation events
+    /// carry the generation they were issued under and no-op when it has
+    /// moved on — an arrival superseding a speculation *is* the hit case.
+    pub generation: u64,
+}
+
+impl ServicePredictor {
+    pub fn new(cfg: ForecastConfig) -> ServicePredictor {
+        ServicePredictor {
+            predictor: ArrivalPredictor::new(&cfg),
+            generation: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pred() -> ArrivalPredictor {
+        ArrivalPredictor::new(&ForecastConfig::default())
+    }
+
+    #[test]
+    fn needs_two_arrivals_before_predicting() {
+        let mut p = pred();
+        assert_eq!(p.predict_gap(), None);
+        p.observe(SimTime::from_secs(10));
+        assert_eq!(p.predict_gap(), None);
+        p.observe(SimTime::from_secs(18));
+        // One 8 s gap, 1 s buckets → upper edge 9 s.
+        assert_eq!(p.predict_gap(), Some(SimTime::from_secs(9)));
+        assert_eq!(p.observations(), 1);
+        assert_eq!(p.last_arrival(), Some(SimTime::from_secs(18)));
+    }
+
+    #[test]
+    fn periodic_stream_predicts_its_period() {
+        let mut p = pred();
+        for i in 0..20u64 {
+            p.observe(SimTime::from_millis(10_000 * i + 30));
+        }
+        // 10 s gaps → bucket 10 → upper edge 11 s.
+        assert_eq!(p.predict_gap(), Some(SimTime::from_secs(11)));
+    }
+
+    #[test]
+    fn long_gaps_degrade_to_no_prediction() {
+        // Gaps beyond bucket × BUCKETS (128 s at defaults) overflow.
+        let mut p = pred();
+        for i in 0..5u64 {
+            p.observe(SimTime::from_secs(1000 * i));
+        }
+        assert_eq!(p.predict_gap(), None);
+        assert!(!p.active_at(SimTime::from_secs(5000)));
+    }
+
+    #[test]
+    fn staleness_guard_tracks_the_window() {
+        let mut p = pred();
+        p.observe(SimTime::from_secs(5));
+        p.observe(SimTime::from_secs(10));
+        assert!(p.active_at(SimTime::from_secs(30)));
+        // Default window is 60 s; at t=71 the last arrival (t=10) is out.
+        assert!(!p.active_at(SimTime::from_secs(71)));
+        // But the histogram still predicts — the driver must consult both.
+        assert!(p.predict_gap().is_some());
+    }
+}

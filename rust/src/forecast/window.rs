@@ -1,0 +1,146 @@
+//! Sliding-window arrival-rate estimator: the short-memory half of the
+//! predictor. Where the histogram remembers the *shape* of the arrival
+//! process, the window answers "is this function currently live, and how
+//! hot is it right now" — the staleness guard that keeps the driver from
+//! speculating off a histogram whose traffic died minutes ago.
+//!
+//! Counts are kept in a fixed ring of [`SLOTS`] sub-buckets covering the
+//! window, so memory is O(1) no matter how hot the function or how long
+//! the window — eviction happens at slot granularity (window/64), which
+//! is plenty for a rate signal. Liveness (`active_at`) is exact: it reads
+//! the last-arrival time, not the slotted counts.
+
+use crate::simclock::SimTime;
+
+/// Sub-buckets of the ring; eviction granularity is `window / SLOTS`.
+pub const SLOTS: usize = 64;
+
+/// Slotted arrival counter over a sliding window.
+#[derive(Debug, Clone)]
+pub struct RateWindow {
+    window: SimTime,
+    /// Width of one slot in nanoseconds (`window / SLOTS`, min 1).
+    slot_ns: u64,
+    counts: [u64; SLOTS],
+    /// Absolute slot index the ring is advanced to.
+    current: u64,
+    /// Arrivals currently inside the ring.
+    total: u64,
+    last_arrival: Option<SimTime>,
+}
+
+impl RateWindow {
+    pub fn new(window: SimTime) -> RateWindow {
+        let window = window.max(SimTime::from_nanos(SLOTS as u64));
+        RateWindow {
+            window,
+            slot_ns: (window.as_nanos() / SLOTS as u64).max(1),
+            counts: [0; SLOTS],
+            current: 0,
+            total: 0,
+            last_arrival: None,
+        }
+    }
+
+    /// Rotates the ring forward to `now`, evicting slots that fell out of
+    /// the window. Simulation time is monotone; a probe in the past is a
+    /// no-op (the ring never rewinds).
+    fn advance(&mut self, now: SimTime) {
+        let idx = now.as_nanos() / self.slot_ns;
+        if idx <= self.current {
+            return;
+        }
+        let steps = (idx - self.current).min(SLOTS as u64);
+        for k in 1..=steps {
+            let s = ((self.current + k) % SLOTS as u64) as usize;
+            self.total -= self.counts[s];
+            self.counts[s] = 0;
+        }
+        self.current = idx;
+    }
+
+    /// Records one arrival. Arrival times are monotone (simulation time).
+    pub fn record(&mut self, now: SimTime) {
+        self.advance(now);
+        self.counts[(self.current % SLOTS as u64) as usize] += 1;
+        self.total += 1;
+        self.last_arrival = Some(self.last_arrival.map_or(now, |p| p.max(now)));
+    }
+
+    /// Arrivals currently inside the (slot-granular) window ending at `now`.
+    pub fn count_at(&mut self, now: SimTime) -> u64 {
+        self.advance(now);
+        self.total
+    }
+
+    /// Average arrivals per second over the window ending at `now`.
+    pub fn rate_per_sec(&mut self, now: SimTime) -> f64 {
+        self.count_at(now) as f64 / self.window.as_secs_f64().max(1e-9)
+    }
+
+    /// Did any arrival land within the window ending at `now`? Exact
+    /// (last-arrival based), independent of slot granularity.
+    pub fn active_at(&mut self, now: SimTime) -> bool {
+        self.last_arrival
+            .is_some_and(|t| t >= now.saturating_sub(self.window))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_counts_only_the_window() {
+        // Window 10 s ⇒ slot width 156.25 ms exactly.
+        let mut w = RateWindow::new(SimTime::from_secs(10));
+        for s in 0..20 {
+            w.record(SimTime::from_secs(s));
+        }
+        // At t=19 s the 64-slot ring reaches back to t≈9.06 s, so the
+        // arrivals at 10..=19 s survive and 0..=9 s are evicted.
+        assert_eq!(w.count_at(SimTime::from_secs(19)), 10);
+        let r = w.rate_per_sec(SimTime::from_secs(19));
+        assert!((r - 1.0).abs() < 1e-9, "rate={r}");
+        // Far in the future everything decays to zero.
+        assert_eq!(w.count_at(SimTime::from_secs(120)), 0);
+    }
+
+    #[test]
+    fn goes_quiet_after_the_window_passes() {
+        let mut w = RateWindow::new(SimTime::from_secs(5));
+        w.record(SimTime::from_secs(1));
+        assert!(w.active_at(SimTime::from_secs(4)));
+        assert!(w.active_at(SimTime::from_secs(6))); // 1 s ≥ 6-5 s edge
+        assert!(!w.active_at(SimTime::from_secs(7)));
+        assert_eq!(w.rate_per_sec(SimTime::from_secs(100)), 0.0);
+    }
+
+    #[test]
+    fn memory_is_constant_and_counts_stay_consistent() {
+        // A day-long window with a hot stream: the ring is still 64
+        // counters, and total equals the sum of the slots after any
+        // probe sequence.
+        let mut w = RateWindow::new(SimTime::from_secs(86_400));
+        for i in 0..10_000u64 {
+            w.record(SimTime::from_millis(i * 37));
+        }
+        let total = w.count_at(SimTime::from_millis(10_000 * 37));
+        assert_eq!(total, 10_000, "nothing evicted inside the window");
+        assert_eq!(w.counts.iter().sum::<u64>(), w.total);
+    }
+
+    #[test]
+    fn deterministic_under_replay() {
+        let times: Vec<SimTime> = (0..100)
+            .map(|i| SimTime::from_millis(231 * i + (i * i) % 97))
+            .collect();
+        let mut a = RateWindow::new(SimTime::from_secs(7));
+        let mut b = RateWindow::new(SimTime::from_secs(7));
+        for &t in &times {
+            a.record(t);
+            b.record(t);
+            assert_eq!(a.count_at(t), b.count_at(t));
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! * **In-place**: `min_scale = 1` *but* the pod parks at 1 m CPU between
 //!   requests; the queue-proxy hooks resize it around each request.
 
+use crate::forecast::ForecastConfig;
 use crate::simclock::SimTime;
 use crate::util::quantity::MilliCpu;
 
@@ -37,6 +38,9 @@ pub struct RevisionConfig {
     pub serving_cpu: MilliCpu,
     /// Parked CPU limit between requests (in-place policy only).
     pub parked_cpu: MilliCpu,
+    /// Arrival-predictor and proactive-driver knobs (the forecast-driven
+    /// policies only; inert for the §3 triple).
+    pub forecast: ForecastConfig,
 }
 
 impl Default for RevisionConfig {
@@ -53,6 +57,7 @@ impl Default for RevisionConfig {
             panic_threshold: 2.0,
             serving_cpu: MilliCpu::ONE_CPU,
             parked_cpu: MilliCpu::PARKED,
+            forecast: ForecastConfig::default(),
         }
     }
 }
@@ -82,6 +87,32 @@ impl RevisionConfig {
             min_scale: 1,
             serving_cpu: MilliCpu::ONE_CPU,
             parked_cpu: MilliCpu::PARKED,
+            ..RevisionConfig::default()
+        }
+    }
+
+    /// The pooled policy (arXiv:1903.12221): a warm pool of `pool_size`
+    /// pods at the full serving allocation. The pool is the replica floor
+    /// (pre-created at deploy), the ceiling leaves a pool's worth of
+    /// serving headroom, and the proactive driver refills consumed pods /
+    /// trims the excess after the stable window.
+    pub fn pooled() -> RevisionConfig {
+        let forecast = ForecastConfig::default();
+        let pool = forecast.pool_size.max(1);
+        RevisionConfig {
+            min_scale: pool,
+            max_scale: pool.saturating_mul(2),
+            forecast,
+            ..RevisionConfig::default()
+        }
+    }
+
+    /// The predictive in-place policy: the paper's in-place parking (one
+    /// pod, 1 m parked, queue-proxy hooks) plus speculative pre-resizes
+    /// driven by the arrival predictor.
+    pub fn predictive_inplace() -> RevisionConfig {
+        RevisionConfig {
+            min_scale: 1,
             ..RevisionConfig::default()
         }
     }

@@ -65,6 +65,11 @@ pub struct LoadReport {
     pub throughput_rps: f64,
     pub cold_starts: u64,
     pub inplace_scale_ups: u64,
+    /// Driver-initiated speculative pre-resizes during the run
+    /// (predictive-inplace).
+    pub speculative_resizes: u64,
+    /// Speculation windows that closed with no arrival (re-parked).
+    pub mispredictions: u64,
     /// Average committed CPU over the run (milliCPU) — the reservation cost.
     pub avg_committed_mcpu: f64,
 }
@@ -95,9 +100,16 @@ impl Runner {
     /// completion, and reports. Metrics are deltas over the run.
     pub fn run(sim: &mut Simulation, service: &str, scenario: &Scenario) -> LoadReport {
         let start = sim.now();
-        let (completed0, failed0, cold0, ups0) = {
+        let (completed0, failed0, cold0, ups0, spec0, mis0) = {
             let m = sim.world.metrics.service(service);
-            (m.completed, m.failed, m.cold_starts, m.inplace_scale_ups)
+            (
+                m.completed,
+                m.failed,
+                m.cold_starts,
+                m.inplace_scale_ups,
+                m.speculative_resizes,
+                m.mispredictions,
+            )
         };
         let lat_mark = sim.world.metrics.service(service).latency_ms.len();
 
@@ -159,6 +171,8 @@ impl Runner {
             },
             cold_starts: m.cold_starts - cold0,
             inplace_scale_ups: m.inplace_scale_ups - ups0,
+            speculative_resizes: m.speculative_resizes - spec0,
+            mispredictions: m.mispredictions - mis0,
             avg_committed_mcpu: avg_committed,
         }
     }

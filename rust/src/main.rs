@@ -60,7 +60,7 @@ fn app() -> App {
                 "aggregate a ScenarioReport: cross-rep stats + speedups vs a baseline policy",
             )
             .opt("file", "path to the ScenarioReport JSON (or first positional)", "")
-            .opt("baseline", "policy the speedup ratios are computed against", "cold")
+            .opt_policy("baseline", "policy the speedup ratios are computed against", "cold")
             .opt("format", "markdown|ascii|csv", "markdown")
             .opt(
                 "out",
@@ -100,7 +100,7 @@ fn app() -> App {
         .command(
             Command::new("serve", "serve batched requests over the PJRT artifacts")
                 .opt("requests", "number of requests", "64")
-                .opt("policy", "cold|warm|inplace", "inplace")
+                .opt_policy("policy", "scheduling policy to serve under", "inplace")
                 .opt_seed("42"),
         )
         .command(
@@ -183,8 +183,7 @@ fn load_report(file: &str, what: &str) -> ScenarioReport {
     }
 }
 
-fn run_analyze(file: &str, baseline: &str, format: &str, out: &str) {
-    let baseline: Policy = or_die_parse(baseline, "baseline");
+fn run_analyze(file: &str, baseline: Policy, format: &str, out: &str) {
     let format: Format = or_die_parse(format, "format");
     let report = load_report(file, "scenario");
     let analyzed = AnalysisReport::from_scenario(&report, baseline);
@@ -652,7 +651,7 @@ fn main() {
                 .unwrap_or_default();
             run_analyze(
                 &file,
-                inv.get_or("baseline", "cold"),
+                or_die(inv.opt_policy("baseline")),
                 inv.get_or("format", "markdown"),
                 inv.get_or("out", "results"),
             );
@@ -700,13 +699,11 @@ fn main() {
             or_die(inv.seed()),
         ),
         "serve" => {
-            let policy: Policy = inv
-                .get_or("policy", "inplace")
-                .parse()
-                .unwrap_or(Policy::InPlace);
+            // Shared policy parsing: garbage exits with the full valid-name
+            // list instead of silently falling back to in-place.
             run_serve(
                 or_die(inv.u64_in("requests", 1, 1_000_000)) as u32,
-                policy,
+                or_die(inv.opt_policy("policy")),
                 or_die(inv.seed()),
             );
         }

@@ -1,5 +1,5 @@
-//! The three scheduling policies of the paper's §3 and the platform-wide
-//! calibration bundle.
+//! The scheduling policies — the paper's §3 triple plus the forecast-driven
+//! pair — and the platform-wide calibration bundle.
 
 pub mod calib;
 
@@ -7,7 +7,9 @@ pub use calib::PlatformParams;
 
 use crate::knative::config::RevisionConfig;
 
-/// The §3 policies.
+/// The scheduling policies.
+///
+/// The paper's §3 triple (all *reactive*):
 ///
 /// * `Cold` — scale-to-zero; a request arriving with no live handler pays
 ///   the full pod startup pipeline.
@@ -15,42 +17,93 @@ use crate::knative::config::RevisionConfig;
 /// * `InPlace` — one pod kept, parked at 1 m CPU; the queue-proxy hooks
 ///   resize it to the serving allocation before redirecting each request
 ///   and park it again when the pod goes idle.
+///
+/// The forecast-driven pair (driver-initiated, [`crate::forecast`]):
+///
+/// * `Pooled` — an n-pod warm pool at full allocation, refilled when a
+///   request consumes a pod and trimmed back after the stable window (the
+///   pool-based cold-start mitigation of arXiv:1903.12221).
+/// * `PredictiveInPlace` — in-place parking plus speculation: the arrival
+///   predictor pre-resizes the parked pod to the serving allocation ahead
+///   of the forecast arrival and re-parks on mispredictions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Policy {
     Cold,
     Warm,
     InPlace,
+    Pooled,
+    PredictiveInPlace,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 3] = [Policy::Cold, Policy::Warm, Policy::InPlace];
+    /// Every policy the platform knows — the source for CLI/spec error
+    /// text, the schema document and exhaustiveness checks. Defaults and
+    /// presets compare [`Policy::PAPER`] instead, so growing this list
+    /// can never silently change an existing experiment's output.
+    pub const ALL: [Policy; 5] = [
+        Policy::Cold,
+        Policy::Warm,
+        Policy::InPlace,
+        Policy::Pooled,
+        Policy::PredictiveInPlace,
+    ];
+
+    /// The paper's §3 triple — the default comparison set everywhere
+    /// (spec `policies` default, the `fleet`/`trace`/`paper`/`smoke`
+    /// presets, the golden fixture's substrate).
+    pub const PAPER: [Policy; 3] = [Policy::Cold, Policy::Warm, Policy::InPlace];
 
     pub fn name(&self) -> &'static str {
         match self {
             Policy::Cold => "cold",
             Policy::Warm => "warm",
             Policy::InPlace => "in-place",
+            Policy::Pooled => "pooled",
+            Policy::PredictiveInPlace => "predictive-inplace",
         }
     }
 
-    /// The revision configuration the paper uses for this policy.
+    /// The revision configuration this policy deploys with.
     pub fn revision_config(&self) -> RevisionConfig {
         match self {
             Policy::Cold => RevisionConfig::paper_cold(),
             Policy::Warm => RevisionConfig::paper_warm(),
             Policy::InPlace => RevisionConfig::paper_inplace(),
+            Policy::Pooled => RevisionConfig::pooled(),
+            Policy::PredictiveInPlace => RevisionConfig::predictive_inplace(),
         }
     }
 
     /// Does this policy install the queue-proxy resize hooks?
     pub fn inplace_hooks(&self) -> bool {
-        matches!(self, Policy::InPlace)
+        matches!(self, Policy::InPlace | Policy::PredictiveInPlace)
     }
 
     /// Does this policy scale to zero when idle?
     pub fn scales_to_zero(&self) -> bool {
         matches!(self, Policy::Cold)
     }
+
+    /// Is this policy driver-managed (carries an arrival predictor and
+    /// receives proactive actions from [`crate::forecast::driver`])?
+    pub fn predictive(&self) -> bool {
+        matches!(self, Policy::Pooled | Policy::PredictiveInPlace)
+    }
+}
+
+/// `cold|warm|in-place|pooled|predictive-inplace` — derived from
+/// [`Policy::ALL`] once, so help and error text can never omit a variant.
+pub fn names_pipes() -> &'static str {
+    static NAMES: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    NAMES
+        .get_or_init(|| {
+            Policy::ALL
+                .iter()
+                .map(|p| p.name())
+                .collect::<Vec<_>>()
+                .join("|")
+        })
+        .as_str()
 }
 
 impl std::str::FromStr for Policy {
@@ -61,7 +114,14 @@ impl std::str::FromStr for Policy {
             "cold" => Ok(Policy::Cold),
             "warm" => Ok(Policy::Warm),
             "inplace" | "in-place" => Ok(Policy::InPlace),
-            other => Err(format!("unknown policy: {other}")),
+            "pooled" => Ok(Policy::Pooled),
+            "predictive-inplace" | "predictiveinplace" | "predictive" => {
+                Ok(Policy::PredictiveInPlace)
+            }
+            other => Err(format!(
+                "unknown policy: {other} (expected {})",
+                names_pipes()
+            )),
         }
     }
 }
@@ -85,10 +145,60 @@ mod tests {
     }
 
     #[test]
+    fn predictive_policy_configs() {
+        let pooled = Policy::Pooled.revision_config();
+        assert!(pooled.min_scale >= 1, "the pool is the replica floor");
+        assert_eq!(pooled.min_scale, pooled.forecast.pool_size);
+        assert!(pooled.max_scale >= pooled.min_scale);
+        assert!(!Policy::Pooled.inplace_hooks());
+        assert!(!Policy::Pooled.scales_to_zero());
+        assert!(Policy::Pooled.predictive());
+
+        let pinp = Policy::PredictiveInPlace.revision_config();
+        assert_eq!(pinp.min_scale, 1);
+        assert_eq!(pinp.parked_cpu, crate::util::quantity::MilliCpu(1));
+        assert!(Policy::PredictiveInPlace.inplace_hooks());
+        assert!(!Policy::PredictiveInPlace.scales_to_zero());
+        assert!(Policy::PredictiveInPlace.predictive());
+
+        for p in Policy::PAPER {
+            assert!(!p.predictive(), "{p:?} is reactive");
+        }
+    }
+
+    #[test]
+    fn paper_triple_is_a_prefix_of_all() {
+        assert_eq!(&Policy::ALL[..3], &Policy::PAPER[..]);
+        // Names stay unique.
+        let mut names: Vec<&str> = Policy::ALL.iter().map(|p| p.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Policy::ALL.len());
+    }
+
+    #[test]
     fn parse_policy() {
         assert_eq!("cold".parse::<Policy>().unwrap(), Policy::Cold);
         assert_eq!("in-place".parse::<Policy>().unwrap(), Policy::InPlace);
         assert_eq!("INPLACE".parse::<Policy>().unwrap(), Policy::InPlace);
+        assert_eq!("pooled".parse::<Policy>().unwrap(), Policy::Pooled);
+        assert_eq!(
+            "predictive-inplace".parse::<Policy>().unwrap(),
+            Policy::PredictiveInPlace
+        );
         assert!("hot".parse::<Policy>().is_err());
+    }
+
+    /// Round trip + error text derived from `ALL`, not hand-written.
+    #[test]
+    fn names_round_trip_and_errors_enumerate_all() {
+        for p in Policy::ALL {
+            assert_eq!(p.name().parse::<Policy>().unwrap(), p);
+        }
+        let e = "tepid".parse::<Policy>().unwrap_err();
+        for p in Policy::ALL {
+            assert!(e.contains(p.name()), "error must list {}: {e}", p.name());
+        }
+        assert_eq!(names_pipes().split('|').count(), Policy::ALL.len());
     }
 }

@@ -215,6 +215,23 @@ impl TraceStore {
 }
 
 fn prepare_variant(label: String, spec: ScenarioSpec) -> Result<PreparedVariant, SpecError> {
+    // A warm pool larger than the scale ceiling cannot exist without
+    // silently raising the ceiling for the pooled cells only — which
+    // would skew every cross-policy comparison in the grid. Reject it
+    // (sweeps over pool_size/max_scale are checked per expanded variant).
+    if spec.policies.contains(&Policy::Pooled)
+        && spec.forecast.pool_size > spec.autoscaler.max_scale
+    {
+        return Err(SpecError::invalid(
+            "forecast.pool_size",
+            format!(
+                "pool_size {} exceeds autoscaler.max_scale {} — the warm \
+                 pool is the replica floor; raise max_scale or shrink the \
+                 pool",
+                spec.forecast.pool_size, spec.autoscaler.max_scale
+            ),
+        ));
+    }
     if let WorkloadSource::ClosedLoop { .. } = &spec.workload {
         if spec.topology != TopologySpec::Paper {
             return Err(SpecError::invalid(
@@ -239,6 +256,17 @@ fn prepare_variant(label: String, spec: ScenarioSpec) -> Result<PreparedVariant,
                 "hybrid_weights",
                 "closed-loop scenarios are single-pod; hybrid weights do \
                  not apply — remove them or use a synthetic/trace source",
+            ));
+        }
+        // Predictive policies *are* allowed on the rig (they run their
+        // revision-config defaults, like the §3 triple), but tuned
+        // forecast knobs would be silently ignored — reject instead.
+        if spec.forecast != crate::forecast::ForecastConfig::default() {
+            return Err(SpecError::invalid(
+                "forecast",
+                "closed-loop scenarios run the paper's per-policy revision \
+                 configs; forecast knobs (and sweeps over them) do not \
+                 apply — remove them or use a synthetic/trace source",
             ));
         }
         // Routing is provably a no-op on the single-pod paper rig (the
@@ -341,6 +369,7 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 mix: mix.clone(),
                 knobs: v.autoscaler.clone(),
                 hybrid: v.hybrid,
+                forecast: v.forecast,
             };
             let f = fleet::run_policy(&cfg, job.policy);
             vec![ScenarioRow {
@@ -359,6 +388,8 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 p99_ms: f.p99_ms,
                 cold_starts: f.cold_starts,
                 inplace_scale_ups: f.inplace_scale_ups,
+                speculative_resizes: f.speculative_resizes,
+                mispredictions: f.mispredictions,
                 avg_committed_mcpu: f.avg_committed_mcpu,
                 pods_created: f.pods_created,
             }]
@@ -377,6 +408,7 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 topology: v.topology.build(),
                 knobs: v.autoscaler.clone(),
                 hybrid: v.hybrid,
+                forecast: v.forecast,
                 seed,
             };
             let r = replay_with(trace, &cfg);
@@ -396,6 +428,8 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 p99_ms: r.p99_ms,
                 cold_starts: r.cold_starts,
                 inplace_scale_ups: r.inplace_scale_ups,
+                speculative_resizes: r.speculative_resizes,
+                mispredictions: r.mispredictions,
                 avg_committed_mcpu: r.avg_committed_mcpu,
                 pods_created: r.pods_created,
             }]
@@ -427,6 +461,8 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                         p99_ms: r.p99_ms,
                         cold_starts: r.cold_starts,
                         inplace_scale_ups: r.inplace_scale_ups,
+                        speculative_resizes: r.speculative_resizes,
+                        mispredictions: r.mispredictions,
                         avg_committed_mcpu: r.avg_committed_mcpu,
                         // The rig keeps one min-scale pod; churn is
                         // not a closed-loop metric.
@@ -621,5 +657,78 @@ mod tests {
         .unwrap();
         let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
         assert!(e.contains("routing-invariant"), "{e}");
+
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"closed-loop","iterations":2},
+                "forecast":{"pool_size":4}}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("forecast") && e.contains("do not apply"), "{e}");
+    }
+
+    /// A pool that outgrows the scale ceiling is rejected instead of
+    /// silently raising the ceiling for the pooled cells only.
+    #[test]
+    fn pool_larger_than_max_scale_is_rejected() {
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t",
+                "workload":{"type":"synthetic","services":1,
+                            "rate_per_service":0.1,"horizon_s":10},
+                "policies":["pooled"],
+                "autoscaler":{"max_scale":2},
+                "forecast":{"pool_size":8}}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("pool_size 8") && e.contains("max_scale 2"), "{e}");
+        // Without the pooled policy the same knobs are fine (the pool
+        // config is inert).
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t",
+                "workload":{"type":"synthetic","services":1,
+                            "rate_per_service":0.1,"horizon_s":10},
+                "policies":["warm"],
+                "autoscaler":{"max_scale":2},
+                "forecast":{"pool_size":8}}"#,
+        )
+        .unwrap();
+        assert!(ScenarioEngine::run(&spec).is_ok());
+    }
+
+    /// The forecast-driven policies run end-to-end through the engine and
+    /// their knobs reach the platform (a bigger pool commits more CPU).
+    #[test]
+    fn predictive_policies_run_through_the_engine() {
+        let doc = |pool: u32| {
+            format!(
+                r#"{{"name":"pred",
+                    "workload":{{"type":"synthetic","services":3,
+                                "rate_per_service":0.3,"horizon_s":30}},
+                    "topology":{{"kind":"uniform","nodes":2}},
+                    "policies":["pooled","predictive-inplace"],
+                    "forecast":{{"pool_size":{pool}}}}}"#
+            )
+        };
+        let report = ScenarioEngine::run(&ScenarioSpec::parse(&doc(1)).unwrap()).unwrap();
+        assert_eq!(report.rows.len(), 2);
+        for r in &report.rows {
+            assert_eq!(r.failed, 0, "{:?}", r.policy);
+            assert!(r.completed > 0, "{:?}", r.policy);
+        }
+        ScenarioReport::validate(&report.to_json()).unwrap();
+
+        let small = &report.rows[0];
+        assert_eq!(small.policy, Policy::Pooled);
+        let big_report =
+            ScenarioEngine::run(&ScenarioSpec::parse(&doc(3)).unwrap()).unwrap();
+        let big = &big_report.rows[0];
+        assert_eq!(big.policy, Policy::Pooled);
+        assert!(
+            big.avg_committed_mcpu > small.avg_committed_mcpu,
+            "pool 3 must reserve more than pool 1: {} vs {}",
+            big.avg_committed_mcpu,
+            small.avg_committed_mcpu
+        );
     }
 }

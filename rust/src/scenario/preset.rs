@@ -8,6 +8,7 @@
 
 use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
 use crate::experiments::fleet::FLEET_MIX;
+use crate::forecast::ForecastConfig;
 use crate::knative::config::ScaleKnobs;
 use crate::policy::Policy;
 use crate::scenario::spec::{ScenarioSpec, TopologySpec, WorkloadSource};
@@ -57,10 +58,11 @@ pub fn fleet(
             mix: FLEET_MIX.to_vec(),
         },
         topology,
-        policies: Policy::ALL.to_vec(),
+        policies: Policy::PAPER.to_vec(),
         routing,
         autoscaler: ScaleKnobs::fleet_default(),
         hybrid: HybridWeights::default(),
+        forecast: ForecastConfig::default(),
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -83,10 +85,11 @@ pub fn trace(functions: usize, seconds: u64, rate: f64, seed: u64) -> ScenarioSp
             burst_p: 0.25,
         },
         topology: TopologySpec::Paper,
-        policies: Policy::ALL.to_vec(),
+        policies: Policy::PAPER.to_vec(),
         routing: vec![RoutingPolicy::LeastLoaded],
         autoscaler: ScaleKnobs::trace_default(),
         hybrid: HybridWeights::default(),
+        forecast: ForecastConfig::default(),
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -104,10 +107,11 @@ pub fn paper(reps: u32, seed: u64) -> ScenarioSpec {
             think_s: 8.0,
         },
         topology: TopologySpec::Paper,
-        policies: Policy::ALL.to_vec(),
+        policies: Policy::PAPER.to_vec(),
         routing: vec![RoutingPolicy::LeastLoaded],
         autoscaler: ScaleKnobs::fleet_default(),
         hybrid: HybridWeights::default(),
+        forecast: ForecastConfig::default(),
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -126,10 +130,11 @@ pub fn smoke() -> ScenarioSpec {
             mix: FLEET_MIX.to_vec(),
         },
         topology: TopologySpec::Uniform { nodes: 3 },
-        policies: Policy::ALL.to_vec(),
+        policies: Policy::PAPER.to_vec(),
         routing: vec![RoutingPolicy::LeastLoaded],
         autoscaler: ScaleKnobs::fleet_default(),
         hybrid: HybridWeights::default(),
+        forecast: ForecastConfig::default(),
         seed: 42,
         reps: 1,
         sweep: Vec::new(),

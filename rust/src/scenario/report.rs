@@ -13,7 +13,9 @@ use crate::util::json::Json;
 use crate::util::table::{fmt_ms, Table};
 
 /// Bumped when a field changes meaning; `validate` pins it.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: rows carry the predictive-policy speculation counters
+/// (`speculative_resizes`, `mispredictions`).
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// One run's aggregate metrics.
 #[derive(Debug, Clone, PartialEq)]
@@ -36,6 +38,12 @@ pub struct ScenarioRow {
     pub p99_ms: f64,
     pub cold_starts: u64,
     pub inplace_scale_ups: u64,
+    /// Driver-initiated speculative pre-resizes (predictive-inplace) —
+    /// together with `mispredictions` the hit-rate signal the
+    /// forecast-horizon sweeps measure.
+    pub speculative_resizes: u64,
+    /// Speculation windows that closed with no arrival (re-parked).
+    pub mispredictions: u64,
     pub avg_committed_mcpu: f64,
     pub pods_created: u64,
 }
@@ -56,6 +64,8 @@ impl ScenarioRow {
             p99_ms: self.p99_ms,
             cold_starts: self.cold_starts,
             inplace_scale_ups: self.inplace_scale_ups,
+            speculative_resizes: self.speculative_resizes,
+            mispredictions: self.mispredictions,
             avg_committed_mcpu: self.avg_committed_mcpu,
             pods_created: self.pods_created,
         }
@@ -78,6 +88,8 @@ impl ScenarioRow {
             ("p99_ms", self.p99_ms.into()),
             ("cold_starts", self.cold_starts.into()),
             ("inplace_scale_ups", self.inplace_scale_ups.into()),
+            ("speculative_resizes", self.speculative_resizes.into()),
+            ("mispredictions", self.mispredictions.into()),
             ("avg_committed_mcpu", self.avg_committed_mcpu.into()),
             ("pods_created", self.pods_created.into()),
         ])
@@ -117,6 +129,8 @@ impl ScenarioRow {
             p99_ms: req_f64("p99_ms")?,
             cold_starts: req_u64("cold_starts")?,
             inplace_scale_ups: req_u64("inplace_scale_ups")?,
+            speculative_resizes: req_u64("speculative_resizes")?,
+            mispredictions: req_u64("mispredictions")?,
             avg_committed_mcpu: req_f64("avg_committed_mcpu")?,
             pods_created: req_u64("pods_created")?,
         })
@@ -203,9 +217,15 @@ impl ScenarioReport {
     }
 
     /// Renders the rows as one table (the generic `kinetic run` view).
+    /// The speculation columns appear exactly when a predictive policy is
+    /// in the comparison — keyed on the policy, not on observed counts,
+    /// so a spec always renders the same columns (a zero-speculation
+    /// predictive run is visible as such) and §3-only runs render exactly
+    /// as before.
     pub fn table(&self) -> Table {
         let swept = self.rows.iter().any(|r| !r.variant.is_empty());
         let multi_rep = self.rows.iter().any(|r| r.rep > 0);
+        let speculative = self.rows.iter().any(|r| r.policy.predictive());
         let mut headers = Vec::new();
         if swept {
             headers.push("Variant");
@@ -223,9 +243,11 @@ impl ScenarioReport {
             "p50 (ms)",
             "p99 (ms)",
             "Cold",
-            "Committed (mCPU)",
-            "Pods",
         ]);
+        if speculative {
+            headers.extend(["Spec", "Miss"]);
+        }
+        headers.extend(["Committed (mCPU)", "Pods"]);
         let mut t = Table::new(headers).title(format!("Scenario: {}", self.name));
         for r in &self.rows {
             let mut cells = Vec::new();
@@ -245,6 +267,12 @@ impl ScenarioReport {
                 fmt_ms(r.p50_ms),
                 fmt_ms(r.p99_ms),
                 r.cold_starts.to_string(),
+            ]);
+            if speculative {
+                cells.push(r.speculative_resizes.to_string());
+                cells.push(r.mispredictions.to_string());
+            }
+            cells.extend([
                 format!("{:.0}", r.avg_committed_mcpu),
                 r.pods_created.to_string(),
             ]);
@@ -275,6 +303,8 @@ mod tests {
             p99_ms: mean * 3.0,
             cold_starts: 0,
             inplace_scale_ups: 100,
+            speculative_resizes: 7,
+            mispredictions: 2,
             avg_committed_mcpu: 123.4,
             pods_created: 8,
         }
@@ -367,5 +397,23 @@ mod tests {
         assert_eq!(f.nodes, 4);
         assert_eq!(f.mean_ms.to_bits(), 50.0f64.to_bits());
         assert_eq!(f.pods_created, 8);
+        assert_eq!(f.speculative_resizes, 7);
+        assert_eq!(f.mispredictions, 2);
+    }
+
+    #[test]
+    fn speculation_columns_keyed_on_predictive_policy_presence() {
+        // A predictive policy in the comparison renders the columns even
+        // when its counters happen to be zero (stable schema per spec)...
+        let mut rep = report();
+        rep.rows[0].policy = Policy::PredictiveInPlace;
+        rep.rows[0].speculative_resizes = 0;
+        rep.rows[0].mispredictions = 0;
+        let ascii = rep.table().to_ascii();
+        assert!(ascii.contains("Spec") && ascii.contains("Miss"), "{ascii}");
+        // ...and a §3-only report never grows them.
+        let quiet = report();
+        let ascii = quiet.table().to_ascii();
+        assert!(!ascii.contains("Spec"), "§3-only tables must not grow columns: {ascii}");
     }
 }

@@ -15,6 +15,7 @@ use std::fmt;
 use crate::cluster::topology::{NodeShape, Topology};
 use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
 use crate::experiments::fleet::FLEET_MIX;
+use crate::forecast::ForecastConfig;
 use crate::knative::config::ScaleKnobs;
 use crate::policy::Policy;
 use crate::simclock::SimTime;
@@ -33,7 +34,7 @@ pub const MAX_EXACT_SEED: u64 = 1 << 53;
 /// Every sweepable parameter, in the order [`ScenarioSpec::apply_param`]
 /// handles them — the single source for the unknown-parameter error text
 /// and the generated schema document (`kinetic schema --markdown`).
-pub const SWEEP_PARAMS: [&str; 21] = [
+pub const SWEEP_PARAMS: [&str; 24] = [
     "services",
     "rate_per_service",
     "horizon_s",
@@ -51,6 +52,9 @@ pub const SWEEP_PARAMS: [&str; 21] = [
     "panic_window_divisor",
     "panic_threshold",
     "parked_cpu_m",
+    "forecast_bucket_ms",
+    "forecast_horizon_ms",
+    "pool_size",
     "hybrid_in_flight",
     "hybrid_pressure_div",
     "hybrid_resize",
@@ -229,6 +233,9 @@ pub struct ScenarioSpec {
     pub routing: Vec<RoutingPolicy>,
     pub autoscaler: ScaleKnobs,
     pub hybrid: HybridWeights,
+    /// Predictor/driver knobs for the forecast-driven policies (`pooled`,
+    /// `predictive-inplace`); inert for the §3 triple.
+    pub forecast: ForecastConfig,
     pub seed: u64,
     pub reps: u32,
     pub sweep: Vec<Sweep>,
@@ -382,6 +389,7 @@ impl ScenarioSpec {
                 "routing",
                 "autoscaler",
                 "hybrid_weights",
+                "forecast",
                 "seed",
                 "reps",
                 "sweep",
@@ -398,7 +406,11 @@ impl ScenarioSpec {
             None => TopologySpec::Paper,
             Some(t) => parse_topology(t)?,
         };
-        let policies = parse_name_list(m.get("policies"), "policies", Policy::ALL.to_vec(), |s| {
+        // The default stays the §3 triple — the predictive policies join a
+        // comparison only when listed, so specs that predate them keep
+        // their exact output. Error text still enumerates `Policy::ALL`
+        // (through the shared `FromStr`).
+        let policies = parse_name_list(m.get("policies"), "policies", Policy::PAPER.to_vec(), |s| {
             s.parse::<Policy>()
         })?;
         let routing = parse_name_list(
@@ -415,6 +427,10 @@ impl ScenarioSpec {
             None => HybridWeights::default(),
             Some(h) => parse_hybrid(h)?,
         };
+        let forecast = match m.get("forecast") {
+            None => ForecastConfig::default(),
+            Some(f) => parse_forecast(f)?,
+        };
         let seed = check_range_u64("seed", get_u64(m, "", "seed", 42)?, 0, MAX_EXACT_SEED)?;
         let reps = check_range_u64("reps", get_u64(m, "", "reps", 1)?, 1, 1000)? as u32;
         let sweep = match m.get("sweep") {
@@ -429,6 +445,7 @@ impl ScenarioSpec {
             routing,
             autoscaler,
             hybrid,
+            forecast,
             seed,
             reps,
             sweep,
@@ -590,6 +607,21 @@ impl ScenarioSpec {
                     ("in_flight", self.hybrid.in_flight.into()),
                     ("pressure_div", self.hybrid.pressure_div.into()),
                     ("resize", self.hybrid.resize.into()),
+                ]),
+            ),
+            (
+                "forecast",
+                Json::obj(vec![
+                    (
+                        "bucket_ms",
+                        (self.forecast.bucket.as_nanos() / 1_000_000).into(),
+                    ),
+                    ("window_s", self.forecast.window.as_secs_f64().into()),
+                    (
+                        "horizon_ms",
+                        (self.forecast.horizon.as_nanos() / 1_000_000).into(),
+                    ),
+                    ("pool_size", u64::from(self.forecast.pool_size).into()),
                 ]),
             ),
             ("seed", self.seed.into()),
@@ -756,6 +788,27 @@ impl ScenarioSpec {
             "parked_cpu_m" => {
                 self.autoscaler.parked_cpu =
                     Some(MilliCpu(check_range_u64(&path, as_u64(&path)?, 1, 8000)?));
+            }
+            // Forecast axes (the predictive-policy knob space).
+            "forecast_bucket_ms" => {
+                self.forecast.bucket = SimTime::from_millis(check_range_u64(
+                    &path,
+                    as_u64(&path)?,
+                    1,
+                    3_600_000,
+                )?);
+            }
+            "forecast_horizon_ms" => {
+                self.forecast.horizon = SimTime::from_millis(check_range_u64(
+                    &path,
+                    as_u64(&path)?,
+                    1,
+                    3_600_000,
+                )?);
+            }
+            "pool_size" => {
+                self.forecast.pool_size =
+                    check_range_u64(&path, as_u64(&path)?, 1, 1000)? as u32;
             }
             // Hybrid-routing axes.
             "hybrid_in_flight" => {
@@ -1142,6 +1195,38 @@ fn parse_hybrid(j: &Json) -> Result<HybridWeights, SpecError> {
     })
 }
 
+fn parse_forecast(j: &Json) -> Result<ForecastConfig, SpecError> {
+    let m = as_obj(j, "forecast")?;
+    check_keys(m, "forecast", &["bucket_ms", "window_s", "horizon_ms", "pool_size"])?;
+    let d = ForecastConfig::default();
+    Ok(ForecastConfig {
+        bucket: SimTime::from_millis(check_range_u64(
+            "forecast.bucket_ms",
+            get_u64(m, "forecast", "bucket_ms", d.bucket.as_nanos() / 1_000_000)?,
+            1,
+            3_600_000,
+        )?),
+        window: SimTime::from_secs_f64(check_range_f64(
+            "forecast.window_s",
+            get_f64(m, "forecast", "window_s", d.window.as_secs_f64())?,
+            1.0,
+            86_400.0,
+        )?),
+        horizon: SimTime::from_millis(check_range_u64(
+            "forecast.horizon_ms",
+            get_u64(m, "forecast", "horizon_ms", d.horizon.as_nanos() / 1_000_000)?,
+            1,
+            3_600_000,
+        )?),
+        pool_size: check_range_u64(
+            "forecast.pool_size",
+            get_u64(m, "forecast", "pool_size", u64::from(d.pool_size))?,
+            1,
+            1000,
+        )? as u32,
+    })
+}
+
 fn parse_sweep(j: &Json) -> Result<Vec<Sweep>, SpecError> {
     let arr = j
         .as_arr()
@@ -1194,10 +1279,13 @@ mod tests {
     #[test]
     fn minimal_spec_fills_defaults() {
         let s = ScenarioSpec::parse(minimal()).unwrap();
-        assert_eq!(s.policies, Policy::ALL.to_vec());
+        // The default comparison stays the §3 triple; the predictive
+        // policies must be requested explicitly.
+        assert_eq!(s.policies, Policy::PAPER.to_vec());
         assert_eq!(s.routing, vec![RoutingPolicy::LeastLoaded]);
         assert_eq!(s.topology, TopologySpec::Paper);
         assert_eq!(s.autoscaler, ScaleKnobs::fleet_default());
+        assert_eq!(s.forecast, ForecastConfig::default());
         assert_eq!(s.seed, 42);
         assert_eq!(s.reps, 1);
         match &s.workload {
@@ -1348,6 +1436,80 @@ mod tests {
         let mut s = ScenarioSpec::parse(docs[0]).unwrap();
         let e = s.apply_param("warp", 1.0).unwrap_err().to_string();
         assert!(e.contains("unknown sweep parameter"), "{e}");
+    }
+
+    #[test]
+    fn forecast_section_parses_round_trips_and_sweeps() {
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t",
+                "workload":{"type":"synthetic","services":2,
+                            "rate_per_service":0.5,"horizon_s":30},
+                "policies":["cold","pooled","predictive-inplace"],
+                "forecast":{"bucket_ms":500,"window_s":30,
+                            "horizon_ms":1500,"pool_size":4},
+                "sweep":[{"param":"forecast_horizon_ms","values":[1000,2000]},
+                         {"param":"pool_size","values":[2,4,8]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.forecast.bucket, SimTime::from_millis(500));
+        assert_eq!(s.forecast.window, SimTime::from_secs(30));
+        assert_eq!(s.forecast.horizon, SimTime::from_millis(1500));
+        assert_eq!(s.forecast.pool_size, 4);
+        assert!(s.policies.contains(&Policy::Pooled));
+        assert!(s.policies.contains(&Policy::PredictiveInPlace));
+
+        let again = ScenarioSpec::parse(&s.to_json().to_string_pretty()).unwrap();
+        assert_eq!(s, again);
+
+        let vs = s.expand().unwrap();
+        assert_eq!(vs.len(), 6);
+        assert_eq!(vs[0].0, "forecast_horizon_ms=1000 pool_size=2");
+        assert_eq!(vs[5].1.forecast.horizon, SimTime::from_millis(2000));
+        assert_eq!(vs[5].1.forecast.pool_size, 8);
+
+        // Strictness: unknown forecast keys and out-of-range values fail
+        // with the path.
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},
+                "forecast":{"buckets_ms":500}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("forecast") && e.contains("buckets_ms"), "{e}");
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},
+                "forecast":{"pool_size":0}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("forecast.pool_size") && e.contains("outside"), "{e}");
+    }
+
+    #[test]
+    fn predictive_policy_names_parse_in_specs() {
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},
+                "policies":["pooled","predictive-inplace","in-place"]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            s.policies,
+            vec![Policy::Pooled, Policy::PredictiveInPlace, Policy::InPlace]
+        );
+        // A bad name's error enumerates every known policy (derived from
+        // Policy::ALL, not a hand-written list).
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},"policies":["tepid"]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        for p in Policy::ALL {
+            assert!(e.contains(p.name()), "error must list {}: {e}", p.name());
+        }
     }
 
     #[test]

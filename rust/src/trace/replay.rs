@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use crate::cluster::topology::Topology;
 use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
 use crate::coordinator::platform::Simulation;
+use crate::forecast::ForecastConfig;
 use crate::knative::config::ScaleKnobs;
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::SimTime;
@@ -29,6 +30,8 @@ pub struct ReplayConfig {
     pub topology: Topology,
     pub knobs: ScaleKnobs,
     pub hybrid: HybridWeights,
+    /// Predictor/driver knobs for the forecast-driven policies.
+    pub forecast: ForecastConfig,
     pub seed: u64,
 }
 
@@ -43,6 +46,7 @@ impl ReplayConfig {
             topology: Topology::paper(),
             knobs: ScaleKnobs::trace_default(),
             hybrid: HybridWeights::default(),
+            forecast: ForecastConfig::default(),
             seed,
         }
     }
@@ -59,6 +63,10 @@ pub struct ReplayReport {
     pub p99_ms: f64,
     pub cold_starts: u64,
     pub inplace_scale_ups: u64,
+    /// Driver-initiated speculative pre-resizes (predictive-inplace).
+    pub speculative_resizes: u64,
+    /// Speculation windows that closed with no arrival (re-parked).
+    pub mispredictions: u64,
     /// Average committed CPU over the replay, milliCPU.
     pub avg_committed_mcpu: f64,
     /// Total pods created (churn).
@@ -95,6 +103,7 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
         let name = format!("fn-{rank}");
         let mut rc = cfg.policy.revision_config();
         cfg.knobs.apply(&mut rc);
+        cfg.forecast.apply(&mut rc, cfg.policy);
         let svc = crate::coordinator::service::Service::with_config(
             &name,
             TraceGenerator::profile_for(rank),
@@ -118,11 +127,15 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
     let mut failed = 0;
     let mut cold = 0;
     let mut ups = 0;
+    let mut spec_ups = 0;
+    let mut mispred = 0;
     for (_, m) in sim.world.metrics.services() {
         completed += m.completed;
         failed += m.failed;
         cold += m.cold_starts;
         ups += m.inplace_scale_ups;
+        spec_ups += m.speculative_resizes;
+        mispred += m.mispredictions;
         for &v in m.latency_ms.values() {
             lat.record(v);
         }
@@ -136,6 +149,8 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
         p99_ms: lat.percentile(99.0),
         cold_starts: cold,
         inplace_scale_ups: ups,
+        speculative_resizes: spec_ups,
+        mispredictions: mispred,
         avg_committed_mcpu: sim.world.metrics.committed_cpu.average_mcpu(now),
         pods_created: sim.world.metrics.pods_created,
         wall: now.saturating_sub(start),

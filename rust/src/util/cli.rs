@@ -16,7 +16,9 @@ pub const MAX_THREADS: usize = 256;
 #[derive(Debug, Clone)]
 pub struct OptSpec {
     pub name: &'static str,
-    pub help: &'static str,
+    /// Help text; owned so derived pieces (e.g. the policy-name list
+    /// built from `Policy::ALL`) can be composed in at declaration time.
+    pub help: String,
     pub default: Option<&'static str>,
     pub is_flag: bool,
 }
@@ -142,6 +144,18 @@ impl Invocation {
         self.u64_in("threads", 1, MAX_THREADS as u64)
             .map(|v| v as usize)
     }
+
+    /// A scheduling-policy option (`serve --policy`, `analyze --baseline`,
+    /// ...): one `FromStr` path shared with scenario `policies` lists, so
+    /// the accepted spellings and the valid-name error text (derived from
+    /// `Policy::ALL`) cannot drift between entry points.
+    pub fn opt_policy(&self, name: &str) -> Result<crate::policy::Policy, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        raw.parse()
+            .map_err(|e: String| CliError::InvalidValue(name.to_string(), e))
+    }
 }
 
 /// A subcommand with its options.
@@ -161,30 +175,35 @@ impl Command {
         }
     }
 
-    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: impl Into<String>,
+        default: &'static str,
+    ) -> Self {
         self.opts.push(OptSpec {
             name,
-            help,
+            help: help.into(),
             default: Some(default),
             is_flag: false,
         });
         self
     }
 
-    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+    pub fn opt_req(mut self, name: &'static str, help: impl Into<String>) -> Self {
         self.opts.push(OptSpec {
             name,
-            help,
+            help: help.into(),
             default: None,
             is_flag: false,
         });
         self
     }
 
-    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+    pub fn flag(mut self, name: &'static str, help: impl Into<String>) -> Self {
         self.opts.push(OptSpec {
             name,
-            help,
+            help: help.into(),
             default: None,
             is_flag: true,
         });
@@ -211,6 +230,22 @@ impl Command {
         self.opt(
             "threads",
             "worker threads for the run grid (the report is identical at any count)",
+            default,
+        )
+    }
+
+    /// A scheduling-policy option: the caller's description plus the full
+    /// policy list derived from `Policy::ALL`, so help text keeps saying
+    /// what the option *does* while new variants show up automatically.
+    pub fn opt_policy(
+        self,
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        self.opt(
+            name,
+            format!("{help} ({})", crate::policy::names_pipes()),
             default,
         )
     }
@@ -437,6 +472,40 @@ mod tests {
         // The legacy accessor still silently falls back (documented).
         let inv = app.parse(&sv(&["go", "--seed", "banana"])).unwrap();
         assert_eq!(inv.get_u64("seed", 7), 7);
+    }
+
+    #[test]
+    fn policy_option_parses_through_the_shared_fromstr() {
+        use crate::policy::Policy;
+        let app = App::new("k", "t").command(Command::new("go", "x").opt_policy(
+            "baseline",
+            "policy the ratios are computed against",
+            "cold",
+        ));
+        let inv = app.parse(&sv(&["go"])).unwrap();
+        assert_eq!(inv.opt_policy("baseline").unwrap(), Policy::Cold);
+        let inv = app
+            .parse(&sv(&["go", "--baseline", "predictive-inplace"]))
+            .unwrap();
+        assert_eq!(
+            inv.opt_policy("baseline").unwrap(),
+            Policy::PredictiveInPlace
+        );
+        // The rejection names the option and lists every valid policy.
+        let inv = app.parse(&sv(&["go", "--baseline", "tepid"])).unwrap();
+        let e = inv.opt_policy("baseline").unwrap_err().to_string();
+        assert!(e.contains("--baseline"), "{e}");
+        for p in Policy::ALL {
+            assert!(e.contains(p.name()), "missing {} in {e}", p.name());
+        }
+        // The declared help text keeps the description AND carries the
+        // derived name list.
+        if let Err(CliError::Help(h)) = app.parse(&sv(&["go", "--help"])) {
+            assert!(h.contains("pooled"), "{h}");
+            assert!(h.contains("computed against"), "{h}");
+        } else {
+            panic!("help expected");
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use kinetic::analysis::{self, AnalysisReport};
 use kinetic::policy::Policy;
 use kinetic::scenario::preset;
-use kinetic::scenario::{ScenarioEngine, ScenarioReport};
+use kinetic::scenario::{ScenarioEngine, ScenarioReport, ScenarioSpec};
 use kinetic::util::json::Json;
 
 /// The acceptance-criteria test: `--threads 4` emits a ScenarioReport
@@ -38,9 +38,10 @@ fn analyze_smoke_emits_the_paper_style_speedup_table() {
     let md = analysis::render(&a.speedup_table(), analysis::Format::Markdown);
     assert!(md.contains("× vs cold (mean)"), "{md}");
     assert!(md.contains("× vs cold (p99)"), "{md}");
-    // The baseline's own ratio is exactly 1.00×; every policy appears.
+    // The baseline's own ratio is exactly 1.00×; every §3 policy appears
+    // (the smoke preset intentionally stays the paper triple).
     assert!(md.contains("1.00×"), "{md}");
-    for p in Policy::ALL {
+    for p in Policy::PAPER {
         assert!(md.contains(p.name()), "missing {} in\n{md}", p.name());
     }
     // Smoke completes work under every policy, so every ratio is defined.
@@ -74,6 +75,83 @@ fn self_compare_has_no_regressions() {
     for d in &cmp.deltas {
         assert_eq!(d.mean_pct, Some(0.0));
         assert_eq!(d.p99_pct, Some(0.0));
+    }
+}
+
+/// A spec comparing the forecast-driven policies against the §3 triple:
+/// the full grid (5 policies × reps × a forecast sweep axis).
+fn predictive_spec() -> ScenarioSpec {
+    ScenarioSpec::parse(
+        r#"{
+        "name": "predictive",
+        "workload": {"type": "synthetic", "services": 4,
+                     "rate_per_service": 0.2, "horizon_s": 40},
+        "topology": {"kind": "uniform", "nodes": 2},
+        "policies": ["cold", "warm", "in-place", "pooled", "predictive-inplace"],
+        "forecast": {"pool_size": 2, "horizon_ms": 2000},
+        "reps": 2,
+        "sweep": [{"param": "forecast_horizon_ms", "values": [1000, 2000]}]
+    }"#,
+    )
+    .unwrap()
+}
+
+/// The predictive acceptance pin: `pooled` and `predictive-inplace` run
+/// end-to-end from a ScenarioSpec, the report stays byte-identical across
+/// `--threads` counts, and both policies appear in the `kinetic analyze`
+/// speedup table against the `cold` baseline with defined ratios.
+#[test]
+fn predictive_report_is_byte_identical_and_analyzes_vs_cold() {
+    let spec = predictive_spec();
+    let serial = ScenarioEngine::run_with_threads(&spec, 1).unwrap();
+    // 2 variants × 1 routing × 5 policies × 2 reps.
+    assert_eq!(serial.rows.len(), 20);
+    let parallel = ScenarioEngine::run_with_threads(&spec, 4).unwrap();
+    assert_eq!(
+        serial.to_json().to_string_pretty().as_bytes(),
+        parallel.to_json().to_string_pretty().as_bytes(),
+        "predictive report must not depend on the worker count"
+    );
+    for r in &serial.rows {
+        assert_eq!(r.failed, 0, "{:?}", r.policy);
+        assert!(r.completed > 0, "{:?}", r.policy);
+    }
+
+    let a = AnalysisReport::from_scenario(&serial, Policy::Cold);
+    let md = analysis::render(&a.speedup_table(), analysis::Format::Markdown);
+    assert!(md.contains("× vs cold (mean)"), "{md}");
+    for p in Policy::ALL {
+        assert!(md.contains(p.name()), "missing {} in\n{md}", p.name());
+    }
+    for row in &a.rows {
+        assert!(row.mean_ratio.is_some(), "{:?}", row.group.key);
+        let r = row.mean_ratio.unwrap();
+        assert!(r.is_finite() && r > 0.0, "{r}");
+    }
+    // The warm pool serves from pre-warmed pods: faster than cold.
+    for row in a.rows.iter().filter(|s| s.group.key.policy == Policy::Pooled) {
+        assert!(
+            row.mean_ratio.unwrap() > 1.0,
+            "pooled must beat the cold baseline: {:?}",
+            row.mean_ratio
+        );
+    }
+    // The hit-rate signal is observable end-to-end: predictive cells
+    // carry speculation counters, everything else reports zero.
+    for row in &a.rows {
+        match row.group.key.policy {
+            Policy::PredictiveInPlace => assert!(
+                row.group.speculative_resizes > 0,
+                "predictive cells must record speculation: {:?}",
+                row.group.key
+            ),
+            _ => assert_eq!(
+                (row.group.speculative_resizes, row.group.mispredictions),
+                (0, 0),
+                "{:?}",
+                row.group.key
+            ),
+        }
     }
 }
 

@@ -356,7 +356,10 @@ fn prop_fleet_accounting_matches_rescan() {
 
         let n_services = g.usize(2, 8);
         for i in 0..n_services {
-            let policy = *g.choose(&[Policy::Cold, Policy::Warm, Policy::InPlace]);
+            // Every policy, including the forecast-driven pair: pool
+            // refills/trims and speculative resizes must keep the
+            // incremental counters consistent with the rescan too.
+            let policy = *g.choose(&Policy::ALL);
             let kind = *g.choose(&[
                 WorkloadKind::HelloWorld,
                 WorkloadKind::Cpu,

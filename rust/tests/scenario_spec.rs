@@ -215,8 +215,10 @@ fn trace_preset_matches_legacy_subcommand_pipeline() {
     })
     .generate();
 
-    assert_eq!(report.rows.len(), Policy::ALL.len());
-    for (got, &policy) in report.rows.iter().zip(Policy::ALL.iter()) {
+    // The preset stays the §3 triple (bit-identical to the legacy
+    // subcommand); the predictive policies are opt-in via spec files.
+    assert_eq!(report.rows.len(), Policy::PAPER.len());
+    for (got, &policy) in report.rows.iter().zip(Policy::PAPER.iter()) {
         let want = replay(&legacy_trace, functions, policy, seed);
         assert_eq!(got.policy, policy);
         assert_eq!(got.completed, want.completed, "{policy:?}");
@@ -305,6 +307,29 @@ fn autoscaling_sweep_spec_declares_the_roadmap_grid() {
         WorkloadSource::Synthetic { .. } => {}
         other => panic!("expected a synthetic fleet source, got {other:?}"),
     }
+}
+
+/// The predictive study compares both forecast-driven policies against
+/// the full §3 triple over the committed Azure sample trace, sweeping the
+/// speculation horizon.
+#[test]
+fn predictive_azure_spec_compares_new_policies_to_the_triple() {
+    let spec = ScenarioSpec::load(&scenarios_dir().join("predictive_azure.json")).unwrap();
+    for p in Policy::ALL {
+        assert!(
+            spec.policies.contains(&p),
+            "predictive_azure must include {}",
+            p.name()
+        );
+    }
+    assert!(matches!(spec.workload, WorkloadSource::TraceFile { .. }));
+    assert!(
+        spec.sweep.iter().any(|s| s.param == "forecast_horizon_ms"),
+        "must sweep the speculation horizon"
+    );
+    assert_eq!(spec.forecast.pool_size, 2);
+    // 3 horizon values × 1 routing × 5 policies × 1 rep = 15 runs.
+    assert_eq!(spec.expand().unwrap().len(), 3);
 }
 
 /// The routing-saturation spec sweeps every routing policy at saturating
