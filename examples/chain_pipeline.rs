@@ -10,6 +10,7 @@
 
 use kinetic::coordinator::platform::{Eng, Platform, Simulation};
 use kinetic::coordinator::service::Service;
+use kinetic::coordinator::Event;
 use kinetic::policy::Policy;
 use kinetic::simclock::SimTime;
 use kinetic::util::quantity::MilliCpu;
@@ -59,9 +60,12 @@ fn run(policy: Policy, items: u32, gap: SimTime) -> (f64, f64) {
     let start = sim.now();
     for i in 0..items {
         let at = start + SimTime::from_nanos(gap.as_nanos() * i as u64);
-        sim.engine.schedule_at(at, move |w: &mut Platform, eng| {
-            submit_chain(w, eng, 0);
-        });
+        sim.engine.schedule_at(
+            at,
+            Event::call(move |w: &mut Platform, eng| {
+                submit_chain(w, eng, 0);
+            }),
+        );
     }
     sim.run();
 

@@ -7,29 +7,67 @@
 use kinetic::coordinator::platform::Simulation;
 use kinetic::loadgen::runner::{Runner as LoadRunner, Scenario};
 use kinetic::policy::Policy;
-use kinetic::simclock::{Engine, SimTime};
+use kinetic::simclock::oracle::OracleEngine;
+use kinetic::simclock::{Engine, SimTime, World};
 use kinetic::util::bench::{bench_fn, black_box, BenchConfig, Runner};
 use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+/// Minimal typed world for raw engine throughput: every event is one
+/// counter increment, no allocation anywhere.
+struct Counter(u64);
+
+enum Tick {
+    Incr,
+}
+
+impl World for Counter {
+    type Event = Tick;
+
+    fn handle(&mut self, ev: Tick, _eng: &mut Engine<Counter>) {
+        match ev {
+            Tick::Incr => self.0 += 1,
+        }
+    }
+}
 
 fn main() {
     let runner = Runner::from_args();
     let cfg = BenchConfig::default();
 
     runner.section("engine", || {
-        // Raw DES engine throughput: schedule+run N trivial events.
+        // Raw DES engine throughput: schedule+run N trivial events through
+        // the typed-event calendar queue.
         let r = bench_fn("engine/schedule+run 10k events", &cfg, || {
-            let mut eng: Engine<u64> = Engine::new();
-            let mut world = 0u64;
+            let mut eng: Engine<Counter> = Engine::new();
+            let mut world = Counter(0);
             for i in 0..10_000u64 {
-                eng.schedule_at(SimTime::from_nanos(i), |w: &mut u64, _| *w += 1);
+                eng.schedule_at(SimTime::from_nanos(i), Tick::Incr);
             }
             black_box(eng.run(&mut world));
+            black_box(world.0);
         });
         println!("{}", r.line());
         let per_event = r.mean_ns / 10_000.0;
         println!(
             "  -> {per_event:.0} ns/event  ({:.2} M events/s; target >= 1 M/s)",
             1e3 / per_event
+        );
+
+        // Same workload through the retained boxed-closure BinaryHeap
+        // oracle — the baseline the calendar queue replaced.
+        let o = bench_fn("engine/oracle (boxed + BinaryHeap) 10k", &cfg, || {
+            let mut eng: OracleEngine<u64> = OracleEngine::new();
+            let mut world = 0u64;
+            for i in 0..10_000u64 {
+                eng.schedule_at(SimTime::from_nanos(i), |w: &mut u64, _| *w += 1);
+            }
+            black_box(eng.run(&mut world));
+            black_box(world);
+        });
+        println!("{}", o.line());
+        println!(
+            "  -> speedup vs oracle: {:.2}x",
+            o.mean_ns / r.mean_ns.max(1.0)
         );
     });
 

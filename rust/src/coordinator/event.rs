@@ -1,0 +1,120 @@
+//! The platform's typed event alphabet and its dispatch table.
+//!
+//! Every deferred action in the simulation — proxy forward hops, startup
+//! pipelines, idle timers, resize hooks and landings, speculation cycles,
+//! VU think-time chains — is one variant of [`Event`], dispatched by a
+//! single `match` in [`World::handle`]. Scheduling an event moves a few
+//! words into the calendar queue (service names are `Arc<str>` refcount
+//! bumps); the steady-state loop allocates nothing per event, unlike the
+//! `Box<dyn FnOnce>` handlers this replaced (retained in
+//! [`simclock::oracle`](crate::simclock::oracle) as the ordering oracle).
+//!
+//! [`Event::Call`] is the escape hatch for examples and one-off test
+//! drivers that genuinely want an ad-hoc closure; platform code never
+//! schedules it.
+
+use std::sync::Arc;
+
+use crate::cluster::pod::PodId;
+use crate::cluster::NodeId;
+use crate::coordinator::platform::{Eng, Platform};
+use crate::knative::activator::RequestId;
+use crate::loadgen::runner::Runner;
+use crate::simclock::{SimTime, World};
+use crate::util::quantity::MilliCpu;
+
+/// One scheduled occurrence in the platform world.
+pub enum Event {
+    /// Load generation: submit a fresh request to `service`.
+    Submit { service: Arc<str> },
+    /// The proxy forward hop delivered `req` to the activator.
+    Arrive { req: RequestId },
+    /// `req`'s execution reaches its ETA under the current CFS share.
+    Complete { req: RequestId },
+    /// The kubelet startup pipeline finished; the pod joins the service.
+    PodReady {
+        service: Arc<str>,
+        pod: PodId,
+        node: NodeId,
+        image: Arc<str>,
+    },
+    /// Stable-window idle timer fired (cold / pooled scale-down check).
+    IdleCheck { service: Arc<str>, pod: PodId },
+    /// Termination grace elapsed; remove the pod from the fleet.
+    PodGone { service: Arc<str>, pod: PodId },
+    /// Queue-proxy resize hook dispatch cost elapsed; try the patch.
+    ResizeHook { service: Arc<str>, pod: PodId },
+    /// Conflict backoff elapsed; clear the pending flag and re-try.
+    ResizeRetry { service: Arc<str>, pod: PodId },
+    /// Kubelet propagation done; the new CPU limit is in force.
+    ResizeLanded {
+        service: Arc<str>,
+        pod: PodId,
+        target: MilliCpu,
+    },
+    /// Closed-loop VU think time elapsed; issue the next iteration.
+    VuIterate {
+        service: Arc<str>,
+        remaining: u32,
+        think: SimTime,
+    },
+    /// Forecast-driven speculative pre-resize (generation-stamped).
+    Speculate { service: Arc<str>, generation: u64 },
+    /// Misprediction watchdog: re-park if no arrival claimed the window.
+    SpeculationRepark { service: Arc<str>, generation: u64 },
+    /// Escape hatch for examples/tests; never used by platform code.
+    Call(Box<dyn FnOnce(&mut Platform, &mut Eng)>),
+}
+
+impl Event {
+    /// Wraps an ad-hoc closure as an event (examples/tests only).
+    pub fn call<F>(f: F) -> Event
+    where
+        F: FnOnce(&mut Platform, &mut Eng) + 'static,
+    {
+        Event::Call(Box::new(f))
+    }
+}
+
+impl World for Platform {
+    type Event = Event;
+
+    fn handle(&mut self, ev: Event, eng: &mut Eng) {
+        match ev {
+            Event::Submit { service } => {
+                self.submit(eng, &service);
+            }
+            Event::Arrive { req } => Self::arrive(self, eng, req),
+            Event::Complete { req } => Self::complete(self, eng, req),
+            Event::PodReady {
+                service,
+                pod,
+                node,
+                image,
+            } => Self::pod_ready(self, eng, &service, pod, node, &image),
+            Event::IdleCheck { service, pod } => Self::idle_check(self, eng, &service, pod),
+            Event::PodGone { service, pod } => Self::pod_teardown(self, eng, &service, pod),
+            Event::ResizeHook { service, pod } => Self::try_patch(self, eng, &service, pod),
+            Event::ResizeRetry { service, pod } => Self::retry_patch(self, eng, &service, pod),
+            Event::ResizeLanded {
+                service,
+                pod,
+                target,
+            } => Self::resize_landed(self, eng, &service, pod, target),
+            Event::VuIterate {
+                service,
+                remaining,
+                think,
+            } => Runner::vu_iterate(self, eng, service, remaining, think),
+            Event::Speculate {
+                service,
+                generation,
+            } => Self::speculative_resize(self, eng, &service, generation),
+            Event::SpeculationRepark {
+                service,
+                generation,
+            } => Self::speculation_repark(self, eng, &service, generation),
+            Event::Call(f) => f(self, eng),
+        }
+    }
+}

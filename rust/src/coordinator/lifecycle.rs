@@ -9,6 +9,7 @@
 
 use crate::cluster::kubelet::Kubelet;
 use crate::cluster::pod::{PodId, PodPhase, PodSpec};
+use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::coordinator::service::ServicePod;
 use crate::policy::Policy;
@@ -73,10 +74,15 @@ impl Platform {
             pod.status.phase = PodPhase::Creating;
             pod.created_at = eng.now();
         }
-        let name = svc_name.to_string();
-        eng.schedule_in(total, move |w: &mut Platform, eng| {
-            Self::pod_ready(w, eng, &name, pod_id, node_id, image.clone());
-        });
+        eng.schedule_in(
+            total,
+            Event::PodReady {
+                service: std::sync::Arc::from(svc_name),
+                pod: pod_id,
+                node: node_id,
+                image: std::sync::Arc::from(image.as_str()),
+            },
+        );
     }
 
     pub(crate) fn pod_ready(
@@ -85,9 +91,9 @@ impl Platform {
         svc_name: &str,
         pod_id: PodId,
         node_id: crate::cluster::NodeId,
-        image: String,
+        image: &str,
     ) {
-        w.cluster.node_mut(node_id).cache_image(&image);
+        w.cluster.node_mut(node_id).cache_image(image);
         {
             let Some(pod) = w.cluster.pod_mut(pod_id) else { return };
             pod.status.phase = PodPhase::Running;
@@ -147,10 +153,13 @@ impl Platform {
                 // zero with it; pooled pods use the same timer but
                 // `idle_check` only retires pods above the pool target.
                 if idle {
-                    let name = svc_name.to_string();
-                    let s = eng.schedule_in(stable_window, move |w: &mut Platform, eng| {
-                        Self::idle_check(w, eng, &name, pod_id);
-                    });
+                    let s = eng.schedule_in(
+                        stable_window,
+                        Event::IdleCheck {
+                            service: std::sync::Arc::from(svc_name),
+                            pod: pod_id,
+                        },
+                    );
                     let svc = w.services.get_mut(svc_name).unwrap();
                     if let Some(idx) = svc.pod_index(pod_id) {
                         if let Some(old) = svc.pods[idx].idle_timer.replace(s.id) {
@@ -205,17 +214,26 @@ impl Platform {
         w.fleet.pod_terminating(pod_id);
         Self::committed_changed(w, eng);
         let term = w.kubelets[node_id.0 as usize].termination_time(&mut w.rng);
-        let name = svc_name.to_string();
-        eng.schedule_in(term, move |w: &mut Platform, _eng| {
-            w.cluster.delete_pod(pod_id);
-            w.fleet.pod_gone(pod_id);
-            w.metrics.pods_deleted += 1;
-            if let Some(svc) = w.services.get_mut(&name) {
-                if let Some(idx) = svc.pod_index(pod_id) {
-                    svc.pods.remove(idx);
-                }
+        eng.schedule_in(
+            term,
+            Event::PodGone {
+                service: std::sync::Arc::from(svc_name),
+                pod: pod_id,
+            },
+        );
+    }
+
+    /// Termination grace elapsed: remove the pod from cluster, fleet
+    /// counters and the service's pod list.
+    pub(crate) fn pod_teardown(w: &mut Platform, _eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+        w.cluster.delete_pod(pod_id);
+        w.fleet.pod_gone(pod_id);
+        w.metrics.pods_deleted += 1;
+        if let Some(svc) = w.services.get_mut(svc_name) {
+            if let Some(idx) = svc.pod_index(pod_id) {
+                svc.pods.remove(idx);
             }
-        });
+        }
     }
 
     /// Event-driven KPA evaluation: scale up when the decision demands it.

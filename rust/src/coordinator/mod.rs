@@ -7,12 +7,14 @@
 //! response), with the in-place resize hooks on the request path exactly as
 //! §4.2 describes.
 //!
-//! Behaviour is split by concern — `platform` holds state + event wiring,
-//! `routing` the request hot path, `lifecycle` pod start/park/idle/teardown,
-//! `resize` the in-place patch hooks, `sim` the engine+world harness — all
-//! contributing `impl Platform` blocks to the one coordinator type.
+//! Behaviour is split by concern — `event` the typed event alphabet and its
+//! dispatch `match`, `platform` state + wiring, `routing` the request hot
+//! path, `lifecycle` pod start/park/idle/teardown, `resize` the in-place
+//! patch hooks, `sim` the engine+world harness — all contributing
+//! `impl Platform` blocks to the one coordinator type.
 
 pub mod accounting;
+pub mod event;
 pub mod metrics;
 pub mod platform;
 pub mod request;
@@ -24,6 +26,7 @@ mod resize;
 mod routing;
 
 pub use accounting::{FleetAccounting, NodeCounters, RoutingPolicy};
+pub use event::Event;
 pub use metrics::{CommittedCpuIntegral, Metrics, ServiceMetrics};
 pub use platform::{Eng, Platform};
 pub use request::RequestState;

@@ -30,8 +30,9 @@ use crate::cluster::scheduler::Scheduler;
 use crate::cluster::topology::Topology;
 use crate::cluster::{Cluster, NodeId};
 use crate::coordinator::accounting::{FleetAccounting, HybridWeights, RoutingPolicy};
+use crate::coordinator::event::Event;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::RequestState;
+use crate::coordinator::request::{Continuation, RequestState};
 use crate::coordinator::service::Service;
 use crate::knative::activator::RequestId;
 use crate::policy::{PlatformParams, Policy};
@@ -168,18 +169,18 @@ impl Platform {
         let req = RequestState::new(id, service, eng.now());
         self.requests.insert(id, req);
         let fwd = self.params.proxy.sample_forward(&mut self.rng);
-        eng.schedule_in(fwd, move |w: &mut Platform, eng| {
-            Self::arrive(w, eng, id);
-        });
+        eng.schedule_in(fwd, Event::Arrive { req: id });
         id
     }
 
     /// Schedules a submission at an absolute virtual time (load generation).
     pub fn submit_at(&mut self, eng: &mut Eng, at: SimTime, service: &str) {
-        let service = service.to_string();
-        eng.schedule_at(at, move |w: &mut Platform, eng| {
-            w.submit(eng, &service);
-        });
+        eng.schedule_at(
+            at,
+            Event::Submit {
+                service: std::sync::Arc::from(service),
+            },
+        );
     }
 
     /// Submits a request and registers a one-shot continuation invoked when
@@ -196,6 +197,28 @@ impl Platform {
     pub(crate) fn fire_hook(w: &mut Platform, eng: &mut Eng, req: RequestId) {
         if let Some(hook) = w.completion_hooks.remove(&req) {
             hook(w, eng);
+        }
+    }
+
+    /// Fires a typed completion continuation (the alloc-free counterpart of
+    /// `fire_hook` used by the closed-loop load generator).
+    pub(crate) fn fire_continuation(eng: &mut Eng, cont: Option<Continuation>) {
+        if let Some(Continuation::VuNext {
+            service,
+            remaining,
+            think,
+        }) = cont
+        {
+            if remaining > 1 {
+                eng.schedule_in(
+                    think,
+                    Event::VuIterate {
+                        service,
+                        remaining: remaining - 1,
+                        think,
+                    },
+                );
+            }
         }
     }
 

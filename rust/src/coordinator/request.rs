@@ -13,6 +13,20 @@ pub enum Outcome {
     Failed,
 }
 
+/// Typed one-shot continuation fired when the request finishes (completed
+/// or failed) — the alloc-free replacement for boxed completion hooks on
+/// the load-generation hot path.
+#[derive(Debug, Clone)]
+pub enum Continuation {
+    /// Closed-loop VU: after `think`, issue the next of `remaining`
+    /// iterations against `service`.
+    VuNext {
+        service: std::sync::Arc<str>,
+        remaining: u32,
+        think: SimTime,
+    },
+}
+
 /// A request in flight through the platform.
 #[derive(Debug)]
 pub struct RequestState {
@@ -28,6 +42,8 @@ pub struct RequestState {
     pub share: MilliCpu,
     /// Scheduled completion event (cancelled + rescheduled on regime change).
     pub completion: Option<EventId>,
+    /// Typed continuation fired when the request finishes.
+    pub continuation: Option<Continuation>,
     /// The request caused a pod to be created (cold start).
     pub cold_start: bool,
     /// The request triggered an in-place scale-up.
@@ -44,6 +60,7 @@ impl RequestState {
             exec: None,
             share: MilliCpu::ZERO,
             completion: None,
+            continuation: None,
             cold_start: false,
             scaled_up: false,
         }

@@ -5,6 +5,7 @@
 use crate::apiserver::ResizePatch;
 use crate::cluster::pod::PodId;
 use crate::cluster::NodeId;
+use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::simclock::SimTime;
 use crate::util::quantity::MilliCpu;
@@ -28,10 +29,13 @@ impl Platform {
             svc.pods[idx].desired_limit = Some(target);
         }
         let hook = w.params.proxy.sample_hook(&mut w.rng);
-        let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-        eng.schedule_in(hook, move |w: &mut Platform, eng| {
-            Self::try_patch(w, eng, &name, pod_id);
-        });
+        eng.schedule_in(
+            hook,
+            Event::ResizeHook {
+                service: std::sync::Arc::from(svc_name),
+                pod: pod_id,
+            },
+        );
     }
 
     pub(crate) fn try_patch(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
@@ -77,10 +81,14 @@ impl Platform {
                 let load = Self::node_load(w, node_id);
                 let lat = w.kubelets[node_id.0 as usize]
                     .resize_latency(applied, target, load, &mut w.rng);
-                let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-                eng.schedule_in(lat, move |w: &mut Platform, eng| {
-                    Self::resize_landed(w, eng, &name, pod_id, target);
-                });
+                eng.schedule_in(
+                    lat,
+                    Event::ResizeLanded {
+                        service: std::sync::Arc::from(svc_name),
+                        pod: pod_id,
+                        target,
+                    },
+                );
             }
             Err(e) => {
                 let transient = matches!(
@@ -106,18 +114,27 @@ impl Platform {
                 let Some(idx) = svc.pod_index(pod_id) else { return };
                 if !svc.pods[idx].retry_pending {
                     svc.pods[idx].retry_pending = true;
-                    let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-                    eng.schedule_in(retry, move |w: &mut Platform, eng| {
-                        if let Some(svc) = w.services.get_mut(&*name) {
-                            if let Some(i) = svc.pod_index(pod_id) {
-                                svc.pods[i].retry_pending = false;
-                            }
-                        }
-                        Self::try_patch(w, eng, &name, pod_id);
-                    });
+                    eng.schedule_in(
+                        retry,
+                        Event::ResizeRetry {
+                            service: std::sync::Arc::from(svc_name),
+                            pod: pod_id,
+                        },
+                    );
                 }
             }
         }
+    }
+
+    /// Conflict backoff elapsed: clear the pending flag and re-attempt the
+    /// patch.
+    pub(crate) fn retry_patch(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+        if let Some(svc) = w.services.get_mut(svc_name) {
+            if let Some(i) = svc.pod_index(pod_id) {
+                svc.pods[i].retry_pending = false;
+            }
+        }
+        Self::try_patch(w, eng, svc_name, pod_id);
     }
 
     pub(crate) fn resize_landed(
@@ -149,10 +166,13 @@ impl Platform {
         };
         if let Some(t) = pending {
             if t != target {
-                let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-                eng.schedule_in(SimTime::ZERO, move |w: &mut Platform, eng| {
-                    Self::try_patch(w, eng, &name, pod_id);
-                });
+                eng.schedule_in(
+                    SimTime::ZERO,
+                    Event::ResizeHook {
+                        service: std::sync::Arc::from(svc_name),
+                        pod: pod_id,
+                    },
+                );
             }
         }
     }

@@ -13,6 +13,7 @@
 //! [`platform`](super::platform).
 
 use crate::cluster::pod::PodId;
+use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::knative::activator::RequestId;
 use crate::simclock::SimTime;
@@ -70,10 +71,13 @@ impl Platform {
     }
 
     pub(crate) fn fail_request(w: &mut Platform, eng: &mut Eng, req: RequestId) {
-        if let Some(r) = w.requests.remove(&req) {
+        let mut cont = None;
+        if let Some(mut r) = w.requests.remove(&req) {
+            cont = r.continuation.take();
             w.metrics.service(&r.service).failed += 1;
         }
         Self::fire_hook(w, eng, req);
+        Self::fire_continuation(eng, cont);
     }
 
     // -------------------------------------------------------------- dispatch
@@ -188,15 +192,11 @@ impl Platform {
             }
             if exec.done() {
                 // Finished exactly at this boundary.
-                let s = eng.schedule_in(SimTime::ZERO, move |w: &mut Platform, eng| {
-                    Self::complete(w, eng, id);
-                });
+                let s = eng.schedule_in(SimTime::ZERO, Event::Complete { req: id });
                 r.completion = Some(s.id);
             } else {
                 let eta = exec.eta(share);
-                let s = eng.schedule_in(eta, move |w: &mut Platform, eng| {
-                    Self::complete(w, eng, id);
-                });
+                let s = eng.schedule_in(eta, Event::Complete { req: id });
                 r.completion = Some(s.id);
             }
         }
@@ -216,7 +216,10 @@ impl Platform {
         // Response proxy hop is part of the measured latency.
         let respond = w.params.proxy.sample_respond(&mut w.rng);
         let latency_ms = (now + respond).saturating_sub(r.submitted_at).as_millis_f64();
-        let r = w.requests.remove(&req).unwrap();
+        let mut r = w.requests.remove(&req).unwrap();
+        // Taken now so the early-return paths below drop it un-fired —
+        // exactly where the boxed hooks never ran either.
+        let cont = r.continuation.take();
         {
             let m = w.metrics.service(&svc_name);
             m.latency_ms.record(latency_ms);
@@ -247,6 +250,7 @@ impl Platform {
         Self::record_concurrency(w, eng, &svc_name);
         Self::drain_activator(w, eng, &svc_name);
         Self::fire_hook(w, eng, req);
+        Self::fire_continuation(eng, cont);
     }
 
     /// Dispatches as many buffered requests as capacity allows, failing

@@ -1,0 +1,429 @@
+//! `kinetic bench` — the fixed scale ladder behind the per-PR perf
+//! trajectory (`BENCH_<n>.json` at the repo root).
+//!
+//! Four rungs, smallest to largest, each exercising a different layer of
+//! the hot path:
+//!
+//! | rung              | what it measures                                  |
+//! |-------------------|---------------------------------------------------|
+//! | engine-raw        | typed-event calendar-queue throughput, no platform |
+//! | paper-closed-loop | §3 testbed, closed-loop VUs, in-place policy       |
+//! | fleet-100         | 100 uniform nodes, one tenant each, open-loop      |
+//! | azure-replay      | Azure-sample trace replay, one service per rank    |
+//!
+//! The ladder is *fixed*: rung names, topologies and workloads never
+//! change across PRs, so `BENCH_5.json` vs `BENCH_6.json` is a like-for-
+//! like comparison. `smoke` shrinks every rung to CI size (same shape,
+//! tiny counts) — CI runs `KINETIC_SMOKE=1 kinetic bench` and schema-
+//! validates the output; real numbers come from a release build on a
+//! quiet machine.
+//!
+//! A report with `measured: false` is a placeholder (committed when the
+//! build environment cannot run the ladder); validation only requires
+//! positive throughput when `measured` is true, so placeholders are
+//! schema-valid but visibly unmeasured.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::cluster::topology::Topology;
+use crate::coordinator::platform::Simulation;
+use crate::loadgen::arrival::Arrival;
+use crate::loadgen::runner::{Runner, Scenario};
+use crate::policy::Policy;
+use crate::simclock::{Engine, SimTime, World};
+use crate::trace::generator::TraceGenerator;
+use crate::trace::loader::load_azure_csv;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+/// Version of the bench-report JSON layout.
+pub const SCHEMA_VERSION: u64 = 1;
+/// Document discriminator, so a ScenarioReport can never pass as a bench.
+pub const KIND: &str = "kinetic-bench";
+
+/// One rung of the ladder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RungResult {
+    pub name: String,
+    pub description: String,
+    /// Simulated requests completed (0 for the raw-engine rung).
+    pub requests: u64,
+    /// Engine events processed during the timed section.
+    pub events: u64,
+    /// Host wall time of the timed section, milliseconds.
+    pub wall_ms: f64,
+    /// Events per host second — the headline throughput number.
+    pub events_per_sec: f64,
+}
+
+impl RungResult {
+    fn timed(name: &str, description: &str, requests: u64, events: u64, wall: Duration) -> RungResult {
+        let secs = wall.as_secs_f64();
+        RungResult {
+            name: name.to_string(),
+            description: description.to_string(),
+            requests,
+            events,
+            wall_ms: secs * 1000.0,
+            events_per_sec: if secs > 0.0 { events as f64 / secs } else { 0.0 },
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("description", self.description.as_str().into()),
+            ("requests", self.requests.into()),
+            ("events", self.events.into()),
+            ("wall_ms", self.wall_ms.into()),
+            ("events_per_sec", self.events_per_sec.into()),
+        ])
+    }
+
+    fn from_json(j: &Json, path: &str) -> Result<RungResult, String> {
+        if j.as_obj().is_none() {
+            return Err(format!("{path} must be an object"));
+        }
+        let ctx = |e: crate::util::json::JsonError| format!("{path}: {e}");
+        Ok(RungResult {
+            name: j.req_str("name").map_err(ctx)?.to_string(),
+            description: j.req_str("description").map_err(ctx)?.to_string(),
+            requests: j.req_u64("requests").map_err(ctx)?,
+            events: j.req_u64("events").map_err(ctx)?,
+            wall_ms: j.req_f64("wall_ms").map_err(ctx)?,
+            events_per_sec: j.req_f64("events_per_sec").map_err(ctx)?,
+        })
+    }
+}
+
+/// The perf-trajectory document (`BENCH_<n>.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// True when the rungs ran at CI smoke sizes.
+    pub smoke: bool,
+    /// False marks a placeholder whose numbers are not real measurements.
+    pub measured: bool,
+    pub rungs: Vec<RungResult>,
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", KIND.into()),
+            ("schema_version", SCHEMA_VERSION.into()),
+            ("smoke", self.smoke.into()),
+            ("measured", self.measured.into()),
+            ("rungs", Json::arr(self.rungs.iter().map(RungResult::to_json))),
+        ])
+    }
+
+    /// Parses and validates a document in one pass.
+    pub fn from_json(j: &Json) -> Result<BenchReport, String> {
+        let m = j.as_obj().ok_or("bench report must be a JSON object")?;
+        for key in ["kind", "schema_version", "smoke", "measured", "rungs"] {
+            if !m.contains_key(key) {
+                return Err(format!("missing top-level field '{key}'"));
+            }
+        }
+        let kind = j.req_str("kind").map_err(|e| e.to_string())?;
+        if kind != KIND {
+            return Err(format!("kind '{kind}' is not '{KIND}'"));
+        }
+        let version = j.req_u64("schema_version").map_err(|e| e.to_string())?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {version} unsupported (expected {SCHEMA_VERSION})"
+            ));
+        }
+        let smoke = j
+            .get("smoke")
+            .and_then(Json::as_bool)
+            .ok_or("'smoke' must be a boolean")?;
+        let measured = j
+            .get("measured")
+            .and_then(Json::as_bool)
+            .ok_or("'measured' must be a boolean")?;
+        let rungs = j
+            .req_arr("rungs")
+            .map_err(|e| e.to_string())?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| RungResult::from_json(r, &format!("rungs[{i}]")))
+            .collect::<Result<Vec<_>, _>>()?;
+        if rungs.is_empty() {
+            return Err("'rungs' must not be empty".to_string());
+        }
+        if measured {
+            for r in &rungs {
+                if r.events == 0 || r.events_per_sec <= 0.0 {
+                    return Err(format!(
+                        "measured report has a zero-throughput rung '{}'",
+                        r.name
+                    ));
+                }
+            }
+        }
+        Ok(BenchReport { smoke, measured, rungs })
+    }
+
+    pub fn validate(j: &Json) -> Result<(), String> {
+        BenchReport::from_json(j).map(|_| ())
+    }
+
+    /// Writes the pretty JSON to `path` (exact path — the caller names it
+    /// `BENCH_<n>.json`; no slugging, unlike the results-dir reports).
+    pub fn save(&self, path: &Path) -> std::io::Result<PathBuf> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(path.to_path_buf())
+    }
+
+    /// Loads and validates a saved bench report.
+    pub fn load(path: &Path) -> Result<BenchReport, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        BenchReport::from_json(&j)
+    }
+
+    pub fn table(&self) -> Table {
+        let mode = match (self.measured, self.smoke) {
+            (false, _) => " (placeholder — not measured)",
+            (true, true) => " (smoke sizes)",
+            (true, false) => "",
+        };
+        let mut t = Table::new(vec!["Rung", "Requests", "Events", "Wall (ms)", "Events/s"])
+            .title(format!("kinetic bench: scale ladder{mode}"));
+        for r in &self.rungs {
+            t.row(vec![
+                r.name.clone(),
+                r.requests.to_string(),
+                r.events.to_string(),
+                format!("{:.1}", r.wall_ms),
+                format!("{:.0}", r.events_per_sec),
+            ]);
+        }
+        t
+    }
+}
+
+/// Minimal world for the raw-engine rung: every event bumps a counter.
+struct Counter(u64);
+
+struct Tick;
+
+impl World for Counter {
+    type Event = Tick;
+
+    fn handle(&mut self, _ev: Tick, _eng: &mut Engine<Counter>) {
+        self.0 += 1;
+    }
+}
+
+/// Runs the fixed ladder. `smoke` shrinks counts to CI size; `trace` is
+/// the Azure-sample CSV the last rung replays.
+pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
+    let mut rungs = Vec::new();
+
+    // Rung 1: raw engine throughput — schedule + drain N trivial events.
+    {
+        let n: u64 = if smoke { 20_000 } else { 1_000_000 };
+        let mut eng: Engine<Counter> = Engine::new();
+        let mut world = Counter(0);
+        let t0 = Instant::now();
+        for i in 0..n {
+            eng.schedule_at(SimTime::from_nanos(i), Tick);
+        }
+        let events = eng.run(&mut world);
+        let wall = t0.elapsed();
+        debug_assert_eq!(world.0, n);
+        rungs.push(RungResult::timed(
+            "engine-raw",
+            "typed-event calendar queue, schedule+drain, no platform",
+            0,
+            events,
+            wall,
+        ));
+    }
+
+    // Rung 2: the paper testbed under a closed-loop VU scenario.
+    {
+        let (vus, iterations) = if smoke { (4, 10) } else { (8, 250) };
+        let mut sim = Simulation::paper(7);
+        sim.deploy(
+            "helloworld",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::InPlace,
+        );
+        sim.run(); // pod up and parked
+        let ev0 = sim.engine.processed();
+        let t0 = Instant::now();
+        let report = Runner::run(&mut sim, "helloworld", &Scenario::closed(vus, iterations));
+        let wall = t0.elapsed();
+        rungs.push(RungResult::timed(
+            "paper-closed-loop",
+            "paper topology, helloworld in-place, closed-loop VUs",
+            report.completed,
+            sim.engine.processed() - ev0,
+            wall,
+        ));
+    }
+
+    // Rung 3: a 100-node uniform fleet, one tenant per node, open-loop
+    // Poisson arrivals.
+    {
+        let nodes = if smoke { 10 } else { 100 };
+        let horizon = SimTime::from_secs(if smoke { 5 } else { 60 });
+        let mut sim = Simulation::fleet(Topology::uniform_paper(nodes), 42);
+        for i in 0..nodes {
+            sim.deploy(
+                &format!("svc-{i}"),
+                WorkloadProfile::paper(WorkloadKind::HelloWorld),
+                Policy::InPlace,
+            );
+        }
+        sim.run(); // fleet up
+        let start = sim.now();
+        let arrival = Arrival::Poisson { rate_per_sec: 0.2 };
+        let mut rng = sim.world.rng.fork();
+        let mut submitted: u64 = 0;
+        for i in 0..nodes {
+            for t in arrival.times(horizon, &mut rng) {
+                sim.submit_at(start + t, &format!("svc-{i}"));
+                submitted += 1;
+            }
+        }
+        let ev0 = sim.engine.processed();
+        let t0 = Instant::now();
+        sim.run();
+        let wall = t0.elapsed();
+        rungs.push(RungResult::timed(
+            "fleet-100",
+            "uniform 100-node fleet, 1 tenant/node, Poisson open loop",
+            submitted,
+            sim.engine.processed() - ev0,
+            wall,
+        ));
+    }
+
+    // Rung 4: Azure-sample trace replay, one service per popularity rank.
+    {
+        let loaded = load_azure_csv(trace, 1.0)?;
+        let mut sim = Simulation::paper(3);
+        for rank in 0..loaded.functions {
+            sim.deploy(
+                &format!("fn-{rank}"),
+                TraceGenerator::profile_for(rank),
+                Policy::InPlace,
+            );
+        }
+        sim.run(); // min-scale pods up
+        let start = sim.now();
+        for ev in &loaded.events {
+            sim.submit_at(start + ev.at, &format!("fn-{}", ev.function));
+        }
+        let ev0 = sim.engine.processed();
+        let t0 = Instant::now();
+        sim.run();
+        let wall = t0.elapsed();
+        rungs.push(RungResult::timed(
+            "azure-replay",
+            "Azure-sample minute-count trace, 1 service/rank, in-place",
+            loaded.events.len() as u64,
+            sim.engine.processed() - ev0,
+            wall,
+        ));
+    }
+
+    Ok(BenchReport {
+        smoke,
+        measured: true,
+        rungs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        BenchReport {
+            smoke: true,
+            measured: true,
+            rungs: vec![RungResult {
+                name: "engine-raw".to_string(),
+                description: "d".to_string(),
+                requests: 0,
+                events: 100,
+                wall_ms: 2.0,
+                events_per_sec: 50_000.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = sample();
+        let j = r.to_json();
+        assert_eq!(BenchReport::from_json(&j).unwrap(), r);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        let mut r = sample();
+        let mut j = r.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("kind".to_string(), "scenario".into());
+        }
+        assert!(BenchReport::from_json(&j).unwrap_err().contains("kind"));
+
+        let mut j = r.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema_version".to_string(), 999u64.into());
+        }
+        assert!(BenchReport::from_json(&j)
+            .unwrap_err()
+            .contains("schema_version"));
+
+        r.rungs.clear();
+        assert!(BenchReport::from_json(&r.to_json())
+            .unwrap_err()
+            .contains("rungs"));
+    }
+
+    #[test]
+    fn measured_reports_need_positive_throughput() {
+        let mut r = sample();
+        r.rungs[0].events = 0;
+        r.rungs[0].events_per_sec = 0.0;
+        assert!(BenchReport::from_json(&r.to_json())
+            .unwrap_err()
+            .contains("zero-throughput"));
+        // The same zeros are fine in a placeholder.
+        r.measured = false;
+        assert!(BenchReport::from_json(&r.to_json()).is_ok());
+    }
+
+    /// The committed perf-trajectory document at the repo root must always
+    /// schema-validate (cargo runs tests with cwd = rust/).
+    #[test]
+    fn committed_bench_json_validates() {
+        let r = BenchReport::load(Path::new("../BENCH_6.json")).expect("BENCH_6.json validates");
+        assert_eq!(r.rungs.len(), 4);
+    }
+
+    #[test]
+    fn smoke_ladder_runs_end_to_end() {
+        let r = run_ladder(true, Path::new("../examples/scenarios/azure_sample.csv")).unwrap();
+        assert!(r.smoke && r.measured);
+        assert_eq!(r.rungs.len(), 4);
+        for rung in &r.rungs {
+            assert!(rung.events > 0, "{} processed no events", rung.name);
+        }
+        // Every trace invocation completes on the small sample.
+        let azure = &r.rungs[3];
+        assert!(azure.requests > 0);
+        BenchReport::validate(&r.to_json()).unwrap();
+    }
+}

@@ -10,12 +10,14 @@
 //! | t3   | Table 3 + Fig 5 (policy latencies)  | `policies`          |
 //! | fig6 | Fig 6 (runtime vs in-place effect)  | `policies`          |
 //! | fleet| beyond-paper: policies over a fleet | `fleet`             |
+//! | bench| beyond-paper: perf scale ladder     | `bench`             |
 //!
 //! Each experiment renders the same rows/series the paper reports and is
 //! reachable from both `kinetic exp <id>` and `cargo bench`; the fleet
 //! sweep additionally hangs off `kinetic fleet --nodes N --topology ...`.
 
 pub mod ablation;
+pub mod bench;
 pub mod fleet;
 pub mod memory;
 pub mod policies;
@@ -23,6 +25,7 @@ pub mod report;
 pub mod scaling_overhead;
 
 pub use ablation::AblationPoint;
+pub use bench::{BenchReport, RungResult};
 pub use fleet::{FleetConfig, FleetRow};
 pub use memory::{MemoryOutcome, MemoryProfile};
 pub use policies::{PolicyExperiment, PolicyRow};

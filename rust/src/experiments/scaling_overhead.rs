@@ -15,7 +15,7 @@ use crate::cgroup::Stressor;
 use crate::cluster::kubelet::Kubelet;
 use crate::cluster::pod::{PodId, PodPhase, PodSpec};
 use crate::cluster::{Cluster, NodeId};
-use crate::simclock::{Engine, SimTime};
+use crate::simclock::{Engine, SimTime, World};
 use crate::util::quantity::{Memory, MilliCpu, Resources};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -107,6 +107,29 @@ struct Rig {
 
 type REng = Engine<Rig>;
 
+/// The rig's one-event alphabet: a dispatched patch lands on the cgroup.
+enum RigEvent {
+    Landed { pod: PodId, target: MilliCpu },
+}
+
+impl World for Rig {
+    type Event = RigEvent;
+
+    fn handle(&mut self, ev: RigEvent, eng: &mut REng) {
+        match ev {
+            RigEvent::Landed { pod, target } => {
+                let now = eng.now();
+                let node = self.node;
+                self.cluster.node_mut(node).apply_cpu_limit(pod, target, now);
+                self.api
+                    .mark_done(&mut self.cluster, pod, target, now)
+                    .expect("resize done");
+                self.landed_at = Some(now);
+            }
+        }
+    }
+}
+
 impl Rig {
     fn new(seed: u64, state: WorkState) -> Rig {
         let mut cluster = Cluster::new();
@@ -174,15 +197,7 @@ fn measure(rig: &mut Rig, eng: &mut REng, target: MilliCpu) -> SimTime {
     let load = rig.load();
     let lat = rig.kubelet.resize_latency(cur, target, load, &mut rig.rng);
     let pod = rig.pod;
-    eng.schedule_in(lat, move |w: &mut Rig, eng| {
-        let now = eng.now();
-        let node = w.node;
-        w.cluster.node_mut(node).apply_cpu_limit(pod, target, now);
-        w.api
-            .mark_done(&mut w.cluster, pod, target, now)
-            .expect("resize done");
-        w.landed_at = Some(now);
-    });
+    eng.schedule_in(lat, RigEvent::Landed { pod, target });
     eng.run(rig);
     eng.now() - dispatched
 }

@@ -22,6 +22,7 @@
 //! in-place policy on a silent service.
 
 use crate::cluster::pod::PodId;
+use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::policy::Policy;
 use crate::util::quantity::MilliCpu;
@@ -58,10 +59,13 @@ impl Platform {
             let Some(gap) = pred.predictor.predict_gap() else { return };
             (pred.generation, gap.saturating_sub(horizon))
         };
-        let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-        eng.schedule_in(lead, move |w: &mut Platform, eng| {
-            Self::speculative_resize(w, eng, &name, gen);
-        });
+        eng.schedule_in(
+            lead,
+            Event::Speculate {
+                service: std::sync::Arc::from(svc_name),
+                generation: gen,
+            },
+        );
     }
 
     /// The speculative pre-resize: raise every idle parked pod to the
@@ -104,10 +108,13 @@ impl Platform {
             // [predicted − horizon, predicted + horizon] has fully
             // passed. An arrival inside it bumps the generation and this
             // watchdog no-ops — that is the hit case.
-            let name: std::sync::Arc<str> = std::sync::Arc::from(svc_name);
-            eng.schedule_in(horizon + horizon, move |w: &mut Platform, eng| {
-                Self::speculation_repark(w, eng, &name, gen);
-            });
+            eng.schedule_in(
+                horizon + horizon,
+                Event::SpeculationRepark {
+                    service: std::sync::Arc::from(svc_name),
+                    generation: gen,
+                },
+            );
         }
     }
 

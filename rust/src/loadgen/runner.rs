@@ -1,7 +1,11 @@
 //! Scenario runner: drives a [`Simulation`] with k6-style load and reports
 //! latency statistics.
 
+use std::sync::Arc;
+
+use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform, Simulation};
+use crate::coordinator::request::Continuation;
 use crate::loadgen::arrival::Arrival;
 use crate::simclock::SimTime;
 
@@ -79,21 +83,27 @@ pub struct Runner;
 
 impl Runner {
     /// VU chain: issue one request; on completion, sleep `think` and repeat
-    /// until `remaining` hits zero.
-    fn vu_iterate(w: &mut Platform, eng: &mut Eng, service: String, remaining: u32, think: SimTime) {
+    /// until `remaining` hits zero. The chain rides the typed
+    /// [`Continuation`] on the request — no boxed hook, no allocation per
+    /// iteration beyond the request itself.
+    pub(crate) fn vu_iterate(
+        w: &mut Platform,
+        eng: &mut Eng,
+        service: Arc<str>,
+        remaining: u32,
+        think: SimTime,
+    ) {
         if remaining == 0 {
             return;
         }
-        let svc = service.clone();
-        w.submit_with_hook(eng, &service, move |w, eng| {
-            if remaining > 1 {
-                let svc2 = svc.clone();
-                eng.schedule_in(think, move |w: &mut Platform, eng| {
-                    Self::vu_iterate(w, eng, svc2, remaining - 1, think);
-                });
-                let _ = w;
-            }
-        });
+        let id = w.submit(eng, &service);
+        if let Some(r) = w.requests.get_mut(&id) {
+            r.continuation = Some(Continuation::VuNext {
+                service,
+                remaining,
+                think,
+            });
+        }
     }
 
     /// Executes `scenario` against `service` on `sim`, running the engine to
@@ -119,22 +129,31 @@ impl Runner {
                 iterations,
                 think,
             } => {
+                let svc: Arc<str> = Arc::from(service);
                 for _ in 0..*vus {
-                    let svc = service.to_string();
-                    let (iters, think) = (*iterations, *think);
                     // Stagger VU starts by a few ms like k6 ramp-up.
                     let jitter =
                         SimTime::from_millis_f64(sim.world.rng.range_f64(0.0, 5.0));
-                    sim.engine
-                        .schedule_in(jitter, move |w: &mut Platform, eng| {
-                            Runner::vu_iterate(w, eng, svc, iters, think);
-                        });
+                    sim.engine.schedule_in(
+                        jitter,
+                        Event::VuIterate {
+                            service: svc.clone(),
+                            remaining: *iterations,
+                            think: *think,
+                        },
+                    );
                 }
             }
             Scenario::Open { arrival, horizon } => {
+                let svc: Arc<str> = Arc::from(service);
                 let mut rng = sim.world.rng.fork();
                 for t in arrival.times(*horizon, &mut rng) {
-                    sim.submit_at(start + t, service);
+                    sim.engine.schedule_at(
+                        start + t,
+                        Event::Submit {
+                            service: svc.clone(),
+                        },
+                    );
                 }
             }
         }

@@ -10,6 +10,8 @@
 //! * `fleet`      — preset: the three §3 policies over a multi-node topology
 //! * `trace`      — preset: generate + replay an Azure-style trace under all policies
 //! * `serve`      — run the end-to-end serving demo over the PJRT artifacts
+//! * `bench`      — run the fixed perf scale ladder and write `BENCH_<n>.json`
+//! * `validate-bench` — schema-check an emitted bench report JSON
 //! * `validate-report` — schema-check an emitted ScenarioReport JSON
 //! * `schema`     — print the scenario JSON reference (docs/SCENARIO_SCHEMA.md)
 //! * `selfcheck`  — validate the AOT artifacts against the manifest oracle
@@ -21,6 +23,7 @@
 
 use kinetic::analysis::{self, AnalysisReport, Format};
 use kinetic::experiments::ablation;
+use kinetic::experiments::bench;
 use kinetic::experiments::fleet;
 use kinetic::experiments::memory;
 use kinetic::experiments::report::{
@@ -109,6 +112,20 @@ fn app() -> App {
                 .opt_seconds("trace horizon (virtual seconds)", "600")
                 .opt_rate("peak request rate per second", "4")
                 .opt_seed("1"),
+        )
+        .command(
+            Command::new("bench", "run the fixed perf scale ladder and write a bench JSON")
+                .opt("json", "output path for the bench report", "BENCH_6.json")
+                .opt(
+                    "trace",
+                    "Azure-sample CSV replayed by the last rung",
+                    "examples/scenarios/azure_sample.csv",
+                )
+                .flag("smoke", "CI-size rungs (KINETIC_SMOKE=1 implies this)"),
+        )
+        .command(
+            Command::new("validate-bench", "schema-check a bench report JSON file")
+                .opt("file", "path to the bench JSON", ""),
         )
         .command(
             Command::new("validate-report", "schema-check a ScenarioReport JSON file")
@@ -269,6 +286,50 @@ where
         Err(e) => {
             eprintln!("error: invalid --{opt}: {e}");
             std::process::exit(2);
+        }
+    }
+}
+
+fn run_bench(smoke: bool, out: &str, trace: &str) {
+    let report = match bench::run_ladder(smoke, std::path::Path::new(trace)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("{}", report.table().to_ascii());
+    let path = std::path::Path::new(out);
+    if let Err(e) = report.save(path) {
+        eprintln!("could not write bench report: {e}");
+        std::process::exit(1);
+    }
+    // Reload what we just wrote: the committed artifact must round-trip
+    // through the same validator `validate-bench` applies.
+    match bench::BenchReport::load(path) {
+        Ok(_) => println!("wrote {} (validates)", path.display()),
+        Err(e) => {
+            eprintln!("wrote an invalid bench report: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn validate_bench(file: &str) {
+    if file.is_empty() {
+        eprintln!("error: validate-bench needs --file <bench.json>");
+        std::process::exit(2);
+    }
+    match bench::BenchReport::load(std::path::Path::new(file)) {
+        Ok(rep) => println!(
+            "bench report OK: {} rung(s), measured={}, schema v{}",
+            rep.rungs.len(),
+            rep.measured,
+            bench::SCHEMA_VERSION
+        ),
+        Err(e) => {
+            eprintln!("invalid bench report: {e}");
+            std::process::exit(1);
         }
     }
 }
@@ -713,6 +774,23 @@ fn main() {
             or_die(inv.rate()),
             or_die(inv.seed()),
         ),
+        "bench" => {
+            let smoke = inv.flag("smoke") || std::env::var("KINETIC_SMOKE").is_ok();
+            run_bench(
+                smoke,
+                inv.get_or("json", "BENCH_6.json"),
+                inv.get_or("trace", "examples/scenarios/azure_sample.csv"),
+            );
+        }
+        "validate-bench" => {
+            let file = inv
+                .get("file")
+                .filter(|f| !f.is_empty())
+                .map(str::to_string)
+                .or_else(|| inv.positionals.first().cloned())
+                .unwrap_or_default();
+            validate_bench(&file);
+        }
         "validate-report" => {
             let file = inv
                 .get("file")

@@ -1,0 +1,456 @@
+//! Calendar-queue scheduler: the O(1)-amortized priority queue behind
+//! [`Engine`](super::Engine).
+//!
+//! A classic calendar queue (Brown, CACM '88) hashed on virtual time:
+//! events land in `bucket = (at / width) % buckets`, and the pop path scans
+//! one *rotation* of bucket windows starting at the last-popped time. Bucket
+//! windows within a rotation are disjoint and ascending, so the first bucket
+//! holding an entry inside its current window holds the global minimum —
+//! schedule and pop are O(1) amortized while the queue keeps ~one live
+//! entry per bucket, which the adaptive resize maintains.
+//!
+//! Two departures from the textbook structure, both driven by the engine's
+//! determinism contract:
+//!
+//! * **Exact tie order.** Every entry carries the engine's insertion `seq`;
+//!   minima compare on `(at, seq)`, so same-time events pop in schedule
+//!   order — bit-identical to the BinaryHeap engine it replaced (pinned by
+//!   `tests/engine_diff.rs` against the retained oracle).
+//! * **Slot-based generation-stamped cancellation.** A cancel handle is
+//!   `(slot, generation)` into a slab reused through a free list. Cancelling
+//!   disarms the slot (O(1), exact `len()`), and the entry itself evaporates
+//!   lazily the first time a scan touches it; popping an entry frees its
+//!   slot and bumps the generation, so a stale handle — including one for an
+//!   event that already fired — can never cancel the slot's next tenant.
+//!   This replaces the old engine's grow-forever tombstone `IdHashSet`.
+
+use super::clock::SimTime;
+
+const MIN_BUCKETS: usize = 16;
+/// Starting bucket width: 1 ms of virtual time.
+const INITIAL_WIDTH_NS: u64 = 1_000_000;
+
+struct Entry<T> {
+    at: u64,
+    seq: u64,
+    slot: u32,
+    item: T,
+}
+
+struct Slot {
+    generation: u32,
+    armed: bool,
+}
+
+/// Location of the current minimum, memoized between `peek_at` and `pop`.
+#[derive(Clone, Copy)]
+struct MinLoc {
+    bucket: usize,
+    pos: usize,
+    at: u64,
+    seq: u64,
+}
+
+/// The bucket-array priority queue. Entries are `(at, seq, item)`; handles
+/// returned by [`schedule`](CalendarQueue::schedule) are `(slot, generation)`
+/// pairs for O(1) cancellation.
+pub struct CalendarQueue<T> {
+    buckets: Vec<Vec<Entry<T>>>,
+    /// Virtual nanoseconds each bucket spans in one rotation.
+    width: u64,
+    /// Physical entries across all buckets, including cancelled ones not
+    /// yet purged by a scan.
+    queued: usize,
+    /// Armed (schedulable) entries — `len()` is exact by construction.
+    live: usize,
+    /// Monotone lower bound on every queued `at`: the virtual time of the
+    /// last popped entry. Rotation scans start at its bucket.
+    floor: u64,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    cached: Option<MinLoc>,
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        CalendarQueue::new()
+    }
+}
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> CalendarQueue<T> {
+        CalendarQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            width: INITIAL_WIDTH_NS,
+            queued: 0,
+            live: 0,
+            floor: 0,
+            slots: Vec::new(),
+            free: Vec::new(),
+            cached: None,
+        }
+    }
+
+    /// Live (non-cancelled) entries.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Physical slot-table size — bounded by peak concurrency, not by total
+    /// events or cancellations (the tombstone-leak regression tripwire).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Inserts `item` at virtual time `at` with tie-break rank `seq`
+    /// (callers must pass strictly increasing `seq` values and `at >=` the
+    /// last popped time). Returns the `(slot, generation)` cancel handle.
+    pub fn schedule(&mut self, at: SimTime, seq: u64, item: T) -> (u32, u32) {
+        if self.queued + 1 > self.buckets.len() * 2 {
+            let n = self.buckets.len() * 2;
+            self.rebuild(n);
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(Slot {
+                    generation: 0,
+                    armed: false,
+                });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.slots[slot as usize].armed = true;
+        let generation = self.slots[slot as usize].generation;
+        let at = at.as_nanos();
+        let b = self.bucket_of(at);
+        self.buckets[b].push(Entry {
+            at,
+            seq,
+            slot,
+            item,
+        });
+        self.queued += 1;
+        self.live += 1;
+        // A pushed entry never shifts existing indices, so the memoized min
+        // survives unless the newcomer beats it (equal `at` loses on seq).
+        if self.cached.is_some_and(|c| at < c.at) {
+            self.cached = None;
+        }
+        (slot, generation)
+    }
+
+    /// Disarms the entry behind `(slot, generation)`. Returns whether a
+    /// live entry was cancelled; stale handles (already fired, already
+    /// cancelled, slot since reused) are a no-op.
+    pub fn cancel(&mut self, slot: u32, generation: u32) -> bool {
+        match self.slots.get_mut(slot as usize) {
+            Some(s) if s.armed && s.generation == generation => {
+                s.armed = false;
+                self.live -= 1;
+                self.cached = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Virtual time of the earliest live entry, memoizing its location for
+    /// the following `pop`.
+    pub fn peek_at(&mut self) -> Option<SimTime> {
+        if self.live == 0 {
+            self.purge_if_dead();
+            return None;
+        }
+        if self.cached.is_none() {
+            self.cached = Some(self.find_min());
+        }
+        self.cached.map(|c| SimTime::from_nanos(c.at))
+    }
+
+    /// Removes and returns the earliest live entry (ties by `seq`).
+    pub fn pop(&mut self) -> Option<(SimTime, T)> {
+        if self.live == 0 {
+            self.purge_if_dead();
+            return None;
+        }
+        let loc = match self.cached.take() {
+            Some(c) => c,
+            None => self.find_min(),
+        };
+        let entry = self.buckets[loc.bucket].swap_remove(loc.pos);
+        debug_assert!(entry.at == loc.at && entry.seq == loc.seq);
+        self.queued -= 1;
+        self.live -= 1;
+        self.free_slot(entry.slot);
+        self.floor = entry.at;
+        if self.live * 8 < self.buckets.len() && self.buckets.len() > MIN_BUCKETS {
+            let n = self.buckets.len() / 2;
+            self.rebuild(n);
+        }
+        Some((SimTime::from_nanos(entry.at), entry.item))
+    }
+
+    fn bucket_of(&self, at: u64) -> usize {
+        ((at / self.width) % self.buckets.len() as u64) as usize
+    }
+
+    fn free_slot(&mut self, slot: u32) {
+        let s = &mut self.slots[slot as usize];
+        s.armed = false;
+        s.generation = s.generation.wrapping_add(1);
+        self.free.push(slot);
+    }
+
+    /// Drops every remaining (necessarily cancelled) entry once the queue
+    /// holds no live work, so tombstone memory never outlives a drain.
+    fn purge_if_dead(&mut self) {
+        if self.queued == 0 {
+            return;
+        }
+        for bucket in &mut self.buckets {
+            while let Some(e) = bucket.pop() {
+                let s = &mut self.slots[e.slot as usize];
+                s.armed = false;
+                s.generation = s.generation.wrapping_add(1);
+                self.free.push(e.slot);
+            }
+        }
+        self.queued = 0;
+        self.cached = None;
+    }
+
+    /// Locates the `(at, seq)`-minimum live entry. Requires `live > 0`.
+    fn find_min(&mut self) -> MinLoc {
+        debug_assert!(self.live > 0);
+        let nb = self.buckets.len() as u64;
+        let start = self.floor / self.width;
+        // One rotation from the floor's bucket: windows are disjoint and
+        // ascending, so the first bucket with an in-window entry wins.
+        for step in 0..nb {
+            let virt = start + step;
+            let b = (virt % nb) as usize;
+            let window_end = (virt as u128 + 1) * self.width as u128;
+            if let Some(loc) = self.scan_bucket(b, Some(window_end)) {
+                return loc;
+            }
+        }
+        // Sparse regime: nothing lands inside the next full rotation (the
+        // minimum is more than buckets×width ahead). Fall back to a global
+        // scan — at most once per popped far-future event.
+        let mut best: Option<MinLoc> = None;
+        for b in 0..self.buckets.len() {
+            if let Some(loc) = self.scan_bucket(b, None) {
+                let better = match best {
+                    None => true,
+                    Some(c) => (loc.at, loc.seq) < (c.at, c.seq),
+                };
+                if better {
+                    best = Some(loc);
+                }
+            }
+        }
+        best.expect("live > 0 implies an armed entry exists")
+    }
+
+    /// Scans bucket `b` for its `(at, seq)`-minimum armed entry, purging
+    /// cancelled entries as it goes. With `window_end`, only entries below
+    /// it qualify (the calendar-rotation window).
+    fn scan_bucket(&mut self, b: usize, window_end: Option<u128>) -> Option<MinLoc> {
+        let mut best: Option<MinLoc> = None;
+        let mut i = 0;
+        while i < self.buckets[b].len() {
+            let e = &self.buckets[b][i];
+            let (slot, at, seq) = (e.slot, e.at, e.seq);
+            if !self.slots[slot as usize].armed {
+                // Lazy tombstone purge. `swap_remove` moves the *last*
+                // element into `i`; any memoized best sits at an index < i
+                // and is unaffected.
+                self.buckets[b].swap_remove(i);
+                self.free_slot(slot);
+                self.queued -= 1;
+                continue;
+            }
+            let in_window = match window_end {
+                None => true,
+                Some(w) => (at as u128) < w,
+            };
+            let better = match best {
+                None => true,
+                Some(c) => (at, seq) < (c.at, c.seq),
+            };
+            if in_window && better {
+                best = Some(MinLoc {
+                    bucket: b,
+                    pos: i,
+                    at,
+                    seq,
+                });
+            }
+            i += 1;
+        }
+        best
+    }
+
+    /// Re-hashes every live entry into `nbuckets` buckets, re-fitting the
+    /// bucket width to the live span (≈ one entry per bucket) and dropping
+    /// cancelled entries outright.
+    fn rebuild(&mut self, nbuckets: usize) {
+        let nbuckets = nbuckets.max(MIN_BUCKETS);
+        let mut entries: Vec<Entry<T>> = Vec::with_capacity(self.live);
+        for bucket in &mut self.buckets {
+            while let Some(e) = bucket.pop() {
+                let s = &mut self.slots[e.slot as usize];
+                if s.armed {
+                    entries.push(e);
+                } else {
+                    s.generation = s.generation.wrapping_add(1);
+                    self.free.push(e.slot);
+                }
+            }
+        }
+        self.queued = entries.len();
+        debug_assert_eq!(self.queued, self.live);
+        if entries.len() >= 2 {
+            let mut lo = u64::MAX;
+            let mut hi = 0u64;
+            for e in &entries {
+                lo = lo.min(e.at);
+                hi = hi.max(e.at);
+            }
+            self.width = ((hi - lo) / entries.len() as u64).max(1);
+        }
+        self.buckets = (0..nbuckets).map(|_| Vec::new()).collect();
+        for e in entries {
+            let b = self.bucket_of(e.at);
+            self.buckets[b].push(e);
+        }
+        self.cached = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut CalendarQueue<u32>) -> Vec<(u64, u32)> {
+        let mut out = Vec::new();
+        while let Some((at, item)) = q.pop() {
+            out.push((at.as_nanos(), item));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = CalendarQueue::new();
+        q.schedule(SimTime::from_millis(30), 0, 0u32);
+        q.schedule(SimTime::from_millis(10), 1, 1);
+        q.schedule(SimTime::from_millis(10), 2, 2);
+        q.schedule(SimTime::from_millis(20), 3, 3);
+        assert_eq!(q.len(), 4);
+        let order = drain(&mut q);
+        assert_eq!(
+            order,
+            vec![
+                (10_000_000, 1),
+                (10_000_000, 2),
+                (20_000_000, 3),
+                (30_000_000, 0)
+            ]
+        );
+    }
+
+    #[test]
+    fn cancel_is_exact_and_stale_handles_noop() {
+        let mut q = CalendarQueue::new();
+        let (s1, g1) = q.schedule(SimTime::from_millis(1), 0, 10u32);
+        let (s2, g2) = q.schedule(SimTime::from_millis(2), 1, 20);
+        assert!(q.cancel(s1, g1));
+        assert_eq!(q.len(), 1);
+        // Double-cancel and cancel-after-pop are no-ops.
+        assert!(!q.cancel(s1, g1));
+        assert_eq!(q.pop().map(|(_, v)| v), Some(20));
+        assert!(!q.cancel(s2, g2));
+        assert_eq!(q.len(), 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn stale_cancel_cannot_kill_a_reused_slot() {
+        let mut q = CalendarQueue::new();
+        let (s1, g1) = q.schedule(SimTime::from_millis(1), 0, 1u32);
+        assert_eq!(q.pop().map(|(_, v)| v), Some(1));
+        // The next schedule reuses the freed slot with a bumped generation.
+        let (s2, _g2) = q.schedule(SimTime::from_millis(2), 1, 2);
+        assert_eq!(s1, s2);
+        assert!(!q.cancel(s1, g1), "stale handle must not cancel new tenant");
+        assert_eq!(q.pop().map(|(_, v)| v), Some(2));
+    }
+
+    #[test]
+    fn slot_table_stays_bounded_by_concurrency() {
+        let mut q = CalendarQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule(SimTime::from_nanos(i), i, 0u32);
+            q.pop();
+        }
+        assert!(q.slot_count() <= 2, "slots={}", q.slot_count());
+        // Cancellations recycle slots too once a scan purges them.
+        let mut handles = Vec::new();
+        for i in 0..100u64 {
+            handles.push(q.schedule(SimTime::from_nanos(20_000 + i), 20_000 + i, 0u32));
+        }
+        for (s, g) in handles {
+            q.cancel(s, g);
+        }
+        assert_eq!(q.len(), 0);
+        assert!(q.pop().is_none()); // purges tombstones
+        for i in 0..100u64 {
+            q.schedule(SimTime::from_nanos(30_000 + i), 30_000 + i, 0u32);
+        }
+        assert!(q.slot_count() <= 102, "slots={}", q.slot_count());
+    }
+
+    #[test]
+    fn grows_and_shrinks_through_rebuilds() {
+        let mut q = CalendarQueue::new();
+        // Far beyond 2×MIN_BUCKETS entries forces growth rebuilds.
+        for i in 0..5_000u64 {
+            q.schedule(SimTime::from_micros(i * 37 % 10_000), i, i as u32);
+        }
+        assert_eq!(q.len(), 5_000);
+        let order = drain(&mut q);
+        assert_eq!(order.len(), 5_000);
+        assert!(order.windows(2).all(|w| w[0].0 <= w[1].0), "sorted by time");
+    }
+
+    #[test]
+    fn far_future_entries_use_the_global_fallback() {
+        let mut q = CalendarQueue::new();
+        q.schedule(SimTime::from_nanos(u64::MAX - 1), 0, 99u32);
+        q.schedule(SimTime::from_millis(1), 1, 1);
+        assert_eq!(q.pop().map(|(_, v)| v), Some(1));
+        // The remaining entry is far outside the current rotation.
+        assert_eq!(q.peek_at(), Some(SimTime::from_nanos(u64::MAX - 1)));
+        assert_eq!(q.pop().map(|(_, v)| v), Some(99));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = CalendarQueue::new();
+        for i in 0..200u64 {
+            q.schedule(SimTime::from_micros(i * 13 % 500), i, i as u32);
+        }
+        while let Some(at) = q.peek_at() {
+            let (popped_at, _) = q.pop().unwrap();
+            assert_eq!(at, popped_at);
+        }
+        assert_eq!(q.len(), 0);
+    }
+}

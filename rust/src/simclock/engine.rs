@@ -1,51 +1,47 @@
 //! The event queue engine.
 //!
-//! `Engine<W>` is generic over the world state `W` (the platform). Handlers
-//! are `FnOnce(&mut W, &mut Engine<W>)` — they mutate the world and schedule
-//! follow-up events. Ordering is deterministic: ties in virtual time break by
-//! insertion sequence, so two runs with the same seed replay identically.
+//! `Engine<W>` is generic over the world state `W` (the platform). The
+//! world declares a typed event alphabet via [`World`] and dispatches each
+//! popped event itself — one `match` per event, zero per-event heap
+//! allocation in the steady-state loop. Events live in a
+//! [`CalendarQueue`](super::CalendarQueue) (O(1) amortized schedule/pop)
+//! with slot-based generation-stamped cancellation, so `pending()` is exact
+//! and cancelling an already-fired id is a true no-op rather than a leaked
+//! tombstone. Ordering is deterministic: ties in virtual time break by
+//! insertion sequence, so two runs with the same seed replay identically —
+//! bit-for-bit the same order as the retained BinaryHeap reference in
+//! [`oracle`](super::oracle) (pinned by `tests/engine_diff.rs`).
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
-use crate::util::nohash::IdHashSet;
-
+use super::calendar::CalendarQueue;
 use super::clock::SimTime;
 
+/// World state driven by an [`Engine`]: declares the event alphabet and
+/// dispatches each fired event (typically one `match` over `Self::Event`).
+pub trait World: Sized {
+    type Event;
+
+    fn handle(&mut self, ev: Self::Event, eng: &mut Engine<Self>);
+}
+
 /// Handle for cancelling a scheduled event.
+///
+/// Packs the calendar-queue slot (low 32 bits) and its generation stamp
+/// (high 32 bits): slots are recycled across events, generations make stale
+/// handles inert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EventId(pub u64);
 
-type Handler<W> = Box<dyn FnOnce(&mut W, &mut Engine<W>)>;
-
-struct Entry<W> {
-    at: SimTime,
-    seq: u64,
-    id: EventId,
-    f: Handler<W>,
-}
-
-impl<W> PartialEq for Entry<W> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+impl EventId {
+    fn pack(slot: u32, generation: u32) -> EventId {
+        EventId(((generation as u64) << 32) | slot as u64)
     }
-}
 
-impl<W> Eq for Entry<W> {}
-
-impl<W> PartialOrd for Entry<W> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+    fn slot_index(self) -> u32 {
+        self.0 as u32
     }
-}
 
-impl<W> Ord for Entry<W> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first.
-        other
-            .at
-            .cmp(&self.at)
-            .then_with(|| other.seq.cmp(&self.seq))
+    fn generation(self) -> u32 {
+        (self.0 >> 32) as u32
     }
 }
 
@@ -57,27 +53,25 @@ pub struct Scheduled {
 }
 
 /// Discrete-event engine over world state `W`.
-pub struct Engine<W> {
+pub struct Engine<W: World> {
     now: SimTime,
-    queue: BinaryHeap<Entry<W>>,
+    queue: CalendarQueue<W::Event>,
     next_seq: u64,
-    cancelled: IdHashSet<EventId>,
     processed: u64,
 }
 
-impl<W> Default for Engine<W> {
+impl<W: World> Default for Engine<W> {
     fn default() -> Self {
         Engine::new()
     }
 }
 
-impl<W> Engine<W> {
+impl<W: World> Engine<W> {
     pub fn new() -> Engine<W> {
         Engine {
             now: SimTime::ZERO,
-            queue: BinaryHeap::new(),
+            queue: CalendarQueue::new(),
             next_seq: 0,
-            cancelled: IdHashSet::default(),
             processed: 0,
         }
     }
@@ -87,65 +81,47 @@ impl<W> Engine<W> {
         self.now
     }
 
-    /// Total handlers executed so far (engine throughput metric).
+    /// Total events executed so far (engine throughput metric).
     pub fn processed(&self) -> u64 {
         self.processed
     }
 
-    /// Pending (non-cancelled) events.
+    /// Pending (non-cancelled) events — exact.
     pub fn pending(&self) -> usize {
-        self.queue.len() - self.cancelled.len().min(self.queue.len())
+        self.queue.len()
     }
 
-    /// Schedules `f` at absolute time `at` (clamped to now if in the past).
-    pub fn schedule_at<F>(&mut self, at: SimTime, f: F) -> Scheduled
-    where
-        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
-    {
+    /// Schedules `ev` at absolute time `at` (clamped to now if in the past).
+    pub fn schedule_at(&mut self, at: SimTime, ev: W::Event) -> Scheduled {
         let at = at.max(self.now);
         let seq = self.next_seq;
         self.next_seq += 1;
-        let id = EventId(seq);
-        self.queue.push(Entry {
+        let (slot, generation) = self.queue.schedule(at, seq, ev);
+        Scheduled {
+            id: EventId::pack(slot, generation),
             at,
-            seq,
-            id,
-            f: Box::new(f),
-        });
-        Scheduled { id, at }
-    }
-
-    /// Schedules `f` after virtual delay `d`.
-    pub fn schedule_in<F>(&mut self, d: SimTime, f: F) -> Scheduled
-    where
-        F: FnOnce(&mut W, &mut Engine<W>) + 'static,
-    {
-        self.schedule_at(self.now + d, f)
-    }
-
-    /// Cancels a scheduled event. Safe to call on already-fired ids.
-    pub fn cancel(&mut self, id: EventId) {
-        self.cancelled.insert(id);
-    }
-
-    fn pop_next(&mut self) -> Option<Entry<W>> {
-        while let Some(e) = self.queue.pop() {
-            if self.cancelled.remove(&e.id) {
-                continue;
-            }
-            return Some(e);
         }
-        None
+    }
+
+    /// Schedules `ev` after virtual delay `d`.
+    pub fn schedule_in(&mut self, d: SimTime, ev: W::Event) -> Scheduled {
+        self.schedule_at(self.now + d, ev)
+    }
+
+    /// Cancels a scheduled event. A true no-op on already-fired, already-
+    /// cancelled, or otherwise stale ids — no tombstone survives.
+    pub fn cancel(&mut self, id: EventId) {
+        self.queue.cancel(id.slot_index(), id.generation());
     }
 
     /// Runs until the queue drains. Returns events processed.
     pub fn run(&mut self, world: &mut W) -> u64 {
         let before = self.processed;
-        while let Some(e) = self.pop_next() {
-            debug_assert!(e.at >= self.now, "time went backwards");
-            self.now = e.at;
+        while let Some((at, ev)) = self.queue.pop() {
+            debug_assert!(at >= self.now, "time went backwards");
+            self.now = at;
             self.processed += 1;
-            (e.f)(world, self);
+            world.handle(ev, self);
         }
         self.processed - before
     }
@@ -154,26 +130,14 @@ impl<W> Engine<W> {
     /// `deadline`. Returns events processed.
     pub fn run_until(&mut self, world: &mut W, deadline: SimTime) -> u64 {
         let before = self.processed;
-        loop {
-            let next_at = loop {
-                match self.queue.peek() {
-                    Some(e) if self.cancelled.contains(&e.id) => {
-                        let e = self.queue.pop().unwrap();
-                        self.cancelled.remove(&e.id);
-                    }
-                    Some(e) => break Some(e.at),
-                    None => break None,
-                }
-            };
-            match next_at {
-                Some(at) if at <= deadline => {
-                    let e = self.pop_next().unwrap();
-                    self.now = e.at;
-                    self.processed += 1;
-                    (e.f)(world, self);
-                }
-                _ => break,
+        while let Some(at) = self.queue.peek_at() {
+            if at > deadline {
+                break;
             }
+            let (at, ev) = self.queue.pop().expect("peeked event vanished");
+            self.now = at;
+            self.processed += 1;
+            world.handle(ev, self);
         }
         self.now = self.now.max(deadline);
         self.processed - before
@@ -181,10 +145,10 @@ impl<W> Engine<W> {
 
     /// Runs a single event if one is pending. Returns its time.
     pub fn step(&mut self, world: &mut W) -> Option<SimTime> {
-        let e = self.pop_next()?;
-        self.now = e.at;
+        let (at, ev) = self.queue.pop()?;
+        self.now = at;
         self.processed += 1;
-        (e.f)(world, self);
+        world.handle(ev, self);
         Some(self.now)
     }
 }
@@ -194,23 +158,52 @@ mod tests {
     use super::*;
 
     #[derive(Default)]
-    struct World {
+    struct TestWorld {
         log: Vec<(u64, &'static str)>,
+    }
+
+    /// Typed test alphabet mirroring what the old closure tests expressed.
+    enum Ev {
+        Log(u64, &'static str),
+        /// Log, then schedule a follow-up `delay` later.
+        Chain {
+            log: (u64, &'static str),
+            delay: SimTime,
+            then: (u64, &'static str),
+        },
+        /// Schedule a (possibly past) absolute-time follow-up, then log.
+        ScheduleAt {
+            log: (u64, &'static str),
+            at: SimTime,
+            then: (u64, &'static str),
+        },
+    }
+
+    impl World for TestWorld {
+        type Event = Ev;
+
+        fn handle(&mut self, ev: Ev, eng: &mut Engine<Self>) {
+            match ev {
+                Ev::Log(t, s) => self.log.push((t, s)),
+                Ev::Chain { log, delay, then } => {
+                    self.log.push(log);
+                    eng.schedule_in(delay, Ev::Log(then.0, then.1));
+                }
+                Ev::ScheduleAt { log, at, then } => {
+                    eng.schedule_at(at, Ev::Log(then.0, then.1));
+                    self.log.push(log);
+                }
+            }
+        }
     }
 
     #[test]
     fn events_fire_in_time_order() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        eng.schedule_at(SimTime::from_millis(30), |w: &mut World, _| {
-            w.log.push((30, "c"))
-        });
-        eng.schedule_at(SimTime::from_millis(10), |w: &mut World, _| {
-            w.log.push((10, "a"))
-        });
-        eng.schedule_at(SimTime::from_millis(20), |w: &mut World, _| {
-            w.log.push((20, "b"))
-        });
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        eng.schedule_at(SimTime::from_millis(30), Ev::Log(30, "c"));
+        eng.schedule_at(SimTime::from_millis(10), Ev::Log(10, "a"));
+        eng.schedule_at(SimTime::from_millis(20), Ev::Log(20, "b"));
         let n = eng.run(&mut w);
         assert_eq!(n, 3);
         assert_eq!(w.log, vec![(10, "a"), (20, "b"), (30, "c")]);
@@ -219,25 +212,27 @@ mod tests {
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
         let t = SimTime::from_millis(5);
-        eng.schedule_at(t, |w: &mut World, _| w.log.push((5, "first")));
-        eng.schedule_at(t, |w: &mut World, _| w.log.push((5, "second")));
+        eng.schedule_at(t, Ev::Log(5, "first"));
+        eng.schedule_at(t, Ev::Log(5, "second"));
         eng.run(&mut w);
         assert_eq!(w.log, vec![(5, "first"), (5, "second")]);
     }
 
     #[test]
     fn handlers_can_schedule_follow_ups() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        eng.schedule_at(SimTime::from_millis(1), |w: &mut World, eng| {
-            w.log.push((1, "start"));
-            eng.schedule_in(SimTime::from_millis(9), |w: &mut World, _| {
-                w.log.push((10, "chained"));
-            });
-        });
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        eng.schedule_at(
+            SimTime::from_millis(1),
+            Ev::Chain {
+                log: (1, "start"),
+                delay: SimTime::from_millis(9),
+                then: (10, "chained"),
+            },
+        );
         eng.run(&mut w);
         assert_eq!(w.log, vec![(1, "start"), (10, "chained")]);
         assert_eq!(eng.now(), SimTime::from_millis(10));
@@ -245,14 +240,10 @@ mod tests {
 
     #[test]
     fn cancel_prevents_execution() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        let s = eng.schedule_at(SimTime::from_millis(10), |w: &mut World, _| {
-            w.log.push((10, "cancelled"))
-        });
-        eng.schedule_at(SimTime::from_millis(20), |w: &mut World, _| {
-            w.log.push((20, "kept"))
-        });
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        let s = eng.schedule_at(SimTime::from_millis(10), Ev::Log(10, "cancelled"));
+        eng.schedule_at(SimTime::from_millis(20), Ev::Log(20, "kept"));
         eng.cancel(s.id);
         eng.run(&mut w);
         assert_eq!(w.log, vec![(20, "kept")]);
@@ -260,14 +251,10 @@ mod tests {
 
     #[test]
     fn run_until_stops_and_advances_clock() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        eng.schedule_at(SimTime::from_millis(10), |w: &mut World, _| {
-            w.log.push((10, "in"))
-        });
-        eng.schedule_at(SimTime::from_millis(100), |w: &mut World, _| {
-            w.log.push((100, "out"))
-        });
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        eng.schedule_at(SimTime::from_millis(10), Ev::Log(10, "in"));
+        eng.schedule_at(SimTime::from_millis(100), Ev::Log(100, "out"));
         let n = eng.run_until(&mut w, SimTime::from_millis(50));
         assert_eq!(n, 1);
         assert_eq!(w.log, vec![(10, "in")]);
@@ -278,29 +265,27 @@ mod tests {
 
     #[test]
     fn past_schedules_clamp_to_now() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        eng.schedule_at(SimTime::from_millis(10), |w: &mut World, eng| {
-            // Try to schedule in the past — must fire at `now`, not panic.
-            eng.schedule_at(SimTime::from_millis(1), |w: &mut World, _| {
-                w.log.push((10, "clamped"))
-            });
-            w.log.push((10, "origin"));
-        });
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        eng.schedule_at(
+            SimTime::from_millis(10),
+            Ev::ScheduleAt {
+                log: (10, "origin"),
+                // In the past at fire time — must clamp to `now`, not panic.
+                at: SimTime::from_millis(1),
+                then: (10, "clamped"),
+            },
+        );
         eng.run(&mut w);
         assert_eq!(w.log, vec![(10, "origin"), (10, "clamped")]);
     }
 
     #[test]
     fn step_processes_one_event() {
-        let mut eng: Engine<World> = Engine::new();
-        let mut w = World::default();
-        eng.schedule_at(SimTime::from_millis(1), |w: &mut World, _| {
-            w.log.push((1, "one"))
-        });
-        eng.schedule_at(SimTime::from_millis(2), |w: &mut World, _| {
-            w.log.push((2, "two"))
-        });
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        eng.schedule_at(SimTime::from_millis(1), Ev::Log(1, "one"));
+        eng.schedule_at(SimTime::from_millis(2), Ev::Log(2, "two"));
         assert_eq!(eng.step(&mut w), Some(SimTime::from_millis(1)));
         assert_eq!(w.log.len(), 1);
         assert_eq!(eng.pending(), 1);
@@ -309,16 +294,47 @@ mod tests {
     #[test]
     fn deterministic_processed_count() {
         let run = || {
-            let mut eng: Engine<World> = Engine::new();
-            let mut w = World::default();
+            let mut eng: Engine<TestWorld> = Engine::new();
+            let mut w = TestWorld::default();
             for i in 0..100u64 {
-                eng.schedule_at(SimTime::from_micros(i * 7 % 50), move |w: &mut World, _| {
-                    w.log.push((i, "x"))
-                });
+                eng.schedule_at(SimTime::from_micros(i * 7 % 50), Ev::Log(i, "x"));
             }
             eng.run(&mut w);
             w.log
         };
         assert_eq!(run(), run());
+    }
+
+    /// Regression for the old tombstone leak: cancelling an id that already
+    /// fired must not skew `pending()` — it is exact under the slot design.
+    #[test]
+    fn pending_is_exact_after_cancelling_fired_ids() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        let s = eng.schedule_at(SimTime::from_millis(1), Ev::Log(1, "fired"));
+        eng.run(&mut w);
+        assert_eq!(w.log.len(), 1);
+        eng.cancel(s.id); // no-op: already fired
+        let kept = eng.schedule_at(SimTime::from_millis(2), Ev::Log(2, "pending"));
+        assert_eq!(eng.pending(), 1, "stale cancel must not be subtracted");
+        eng.cancel(kept.id);
+        assert_eq!(eng.pending(), 0);
+        assert_eq!(eng.run(&mut w), 0);
+        assert_eq!(w.log.len(), 1);
+    }
+
+    /// A stale id whose slot was recycled must not cancel the new tenant.
+    #[test]
+    fn stale_cancel_does_not_kill_reused_slot() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        let old = eng.schedule_at(SimTime::from_millis(1), Ev::Log(1, "a"));
+        eng.run(&mut w);
+        let newer = eng.schedule_at(SimTime::from_millis(2), Ev::Log(2, "b"));
+        // Same physical slot, different generation.
+        assert_ne!(old.id, newer.id);
+        eng.cancel(old.id);
+        eng.run(&mut w);
+        assert_eq!(w.log, vec![(1, "a"), (2, "b")]);
     }
 }

@@ -5,9 +5,18 @@
 //! autoscaler ticks, load-generator arrivals — runs on a virtual clock so
 //! a "10-minute video" workload (Table 2's 119 s runtime) simulates in
 //! microseconds and experiments are exactly reproducible.
+//!
+//! The hot path is a typed-event engine: worlds implement [`World`] with an
+//! event enum, and [`Engine`] pops from a [`CalendarQueue`] (O(1) amortized)
+//! with generation-stamped cancellation. The original boxed-closure
+//! BinaryHeap engine survives in [`oracle`] as the differential-test
+//! reference for event ordering.
 
+mod calendar;
 mod clock;
 mod engine;
+pub mod oracle;
 
+pub use calendar::CalendarQueue;
 pub use clock::SimTime;
-pub use engine::{Engine, EventId, Scheduled};
+pub use engine::{Engine, EventId, Scheduled, World};

@@ -1,0 +1,199 @@
+//! The original boxed-closure BinaryHeap engine, retained verbatim as the
+//! *oracle* for differential testing of the calendar-queue core.
+//!
+//! This is the pre-rebuild `Engine` — `Box<dyn FnOnce>` handlers, a
+//! `BinaryHeap` with inverted `Ord`, and tombstone-set cancellation —
+//! including its known warts: `cancel` on an already-fired id leaks a
+//! tombstone forever (skewing `pending()`), and `run_until` carries its own
+//! copy of the cancelled-entry drain loop. **Do not fix anything here.**
+//! Its observable event order is the specification the new engine must
+//! reproduce bit-for-bit; `tests/engine_diff.rs` replays randomized
+//! schedules with cancellations against both and asserts identical firing
+//! order and `processed` counts.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::nohash::IdHashSet;
+
+use super::clock::SimTime;
+
+/// Handle for cancelling a scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OracleEventId(pub u64);
+
+type Handler<W> = Box<dyn FnOnce(&mut W, &mut OracleEngine<W>)>;
+
+struct Entry<W> {
+    at: SimTime,
+    seq: u64,
+    id: OracleEventId,
+    f: Handler<W>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<W> Eq for Entry<W> {}
+
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Result of a scheduling call.
+#[derive(Debug, Clone, Copy)]
+pub struct OracleScheduled {
+    pub id: OracleEventId,
+    pub at: SimTime,
+}
+
+/// Discrete-event engine over world state `W` — the reference
+/// implementation.
+pub struct OracleEngine<W> {
+    now: SimTime,
+    queue: BinaryHeap<Entry<W>>,
+    next_seq: u64,
+    cancelled: IdHashSet<OracleEventId>,
+    processed: u64,
+}
+
+impl<W> Default for OracleEngine<W> {
+    fn default() -> Self {
+        OracleEngine::new()
+    }
+}
+
+impl<W> OracleEngine<W> {
+    pub fn new() -> OracleEngine<W> {
+        OracleEngine {
+            now: SimTime::ZERO,
+            queue: BinaryHeap::new(),
+            next_seq: 0,
+            cancelled: IdHashSet::default(),
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total handlers executed so far (engine throughput metric).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending events — *approximate*: tombstones for already-fired ids are
+    /// subtracted forever (the leak the calendar-queue engine fixes).
+    pub fn pending(&self) -> usize {
+        self.queue.len() - self.cancelled.len().min(self.queue.len())
+    }
+
+    /// Schedules `f` at absolute time `at` (clamped to now if in the past).
+    pub fn schedule_at<F>(&mut self, at: SimTime, f: F) -> OracleScheduled
+    where
+        F: FnOnce(&mut W, &mut OracleEngine<W>) + 'static,
+    {
+        let at = at.max(self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let id = OracleEventId(seq);
+        self.queue.push(Entry {
+            at,
+            seq,
+            id,
+            f: Box::new(f),
+        });
+        OracleScheduled { id, at }
+    }
+
+    /// Schedules `f` after virtual delay `d`.
+    pub fn schedule_in<F>(&mut self, d: SimTime, f: F) -> OracleScheduled
+    where
+        F: FnOnce(&mut W, &mut OracleEngine<W>) + 'static,
+    {
+        self.schedule_at(self.now + d, f)
+    }
+
+    /// Cancels a scheduled event. Safe to call on already-fired ids (but
+    /// leaks a tombstone — see the module docs).
+    pub fn cancel(&mut self, id: OracleEventId) {
+        self.cancelled.insert(id);
+    }
+
+    fn pop_next(&mut self) -> Option<Entry<W>> {
+        while let Some(e) = self.queue.pop() {
+            if self.cancelled.remove(&e.id) {
+                continue;
+            }
+            return Some(e);
+        }
+        None
+    }
+
+    /// Runs until the queue drains. Returns events processed.
+    pub fn run(&mut self, world: &mut W) -> u64 {
+        let before = self.processed;
+        while let Some(e) = self.pop_next() {
+            debug_assert!(e.at >= self.now, "time went backwards");
+            self.now = e.at;
+            self.processed += 1;
+            (e.f)(world, self);
+        }
+        self.processed - before
+    }
+
+    /// Runs events with `at <= deadline`, then advances the clock to
+    /// `deadline`. Returns events processed.
+    pub fn run_until(&mut self, world: &mut W, deadline: SimTime) -> u64 {
+        let before = self.processed;
+        loop {
+            let next_at = loop {
+                match self.queue.peek() {
+                    Some(e) if self.cancelled.contains(&e.id) => {
+                        let e = self.queue.pop().unwrap();
+                        self.cancelled.remove(&e.id);
+                    }
+                    Some(e) => break Some(e.at),
+                    None => break None,
+                }
+            };
+            match next_at {
+                Some(at) if at <= deadline => {
+                    let e = self.pop_next().unwrap();
+                    self.now = e.at;
+                    self.processed += 1;
+                    (e.f)(world, self);
+                }
+                _ => break,
+            }
+        }
+        self.now = self.now.max(deadline);
+        self.processed - before
+    }
+
+    /// Runs a single event if one is pending. Returns its time.
+    pub fn step(&mut self, world: &mut W) -> Option<SimTime> {
+        let e = self.pop_next()?;
+        self.now = e.at;
+        self.processed += 1;
+        (e.f)(world, self);
+        Some(self.now)
+    }
+}

@@ -1,0 +1,278 @@
+//! Differential property tests: the calendar-queue engine against the
+//! retained BinaryHeap oracle ([`kinetic::simclock::oracle`]).
+//!
+//! The oracle's observable firing order is the specification — randomized
+//! schedules with cancellations and in-handler chains must replay on the
+//! new core with identical `(time, tag)` sequences and `processed` counts.
+//! The one place the engines deliberately *differ* is `pending()` after a
+//! stale cancel: the oracle leaks a tombstone forever, the new core is
+//! exact ([`pending_exactness_regression`]).
+
+use kinetic::simclock::oracle::OracleEngine;
+use kinetic::simclock::{Engine, SimTime, World};
+use kinetic::util::rng::Rng;
+
+/// What both engines record: `(virtual nanos at fire, tag)`.
+type Fired = Vec<(u64, u32)>;
+
+/// Chained events get their parent's tag plus this offset.
+const CHAIN_TAG: u32 = 1_000_000;
+
+#[derive(Default)]
+struct Log {
+    fired: Fired,
+}
+
+struct Ev {
+    tag: u32,
+    /// Schedule a follow-up this many nanos after firing.
+    chain: Option<u64>,
+}
+
+impl World for Log {
+    type Event = Ev;
+
+    fn handle(&mut self, ev: Ev, eng: &mut Engine<Self>) {
+        self.fired.push((eng.now().as_nanos(), ev.tag));
+        if let Some(d) = ev.chain {
+            eng.schedule_in(
+                SimTime::from_nanos(d),
+                Ev {
+                    tag: ev.tag + CHAIN_TAG,
+                    chain: None,
+                },
+            );
+        }
+    }
+}
+
+#[derive(Default)]
+struct OLog {
+    fired: Fired,
+}
+
+/// Oracle-side leaf handler: log and stop (the chained event's shape).
+fn oracle_leaf(tag: u32) -> impl FnOnce(&mut OLog, &mut OracleEngine<OLog>) {
+    move |w, eng| w.fired.push((eng.now().as_nanos(), tag))
+}
+
+/// Oracle-side handler mirroring [`Ev`]: log, then maybe chain once.
+fn oracle_handler(tag: u32, chain: Option<u64>) -> impl FnOnce(&mut OLog, &mut OracleEngine<OLog>) {
+    move |w, eng| {
+        w.fired.push((eng.now().as_nanos(), tag));
+        if let Some(d) = chain {
+            eng.schedule_in(SimTime::from_nanos(d), oracle_leaf(tag + CHAIN_TAG));
+        }
+    }
+}
+
+/// One pre-run operation of a randomized schedule script.
+enum Op {
+    Schedule { at: u64, tag: u32, chain: Option<u64> },
+    /// Cancel the `nth` schedule op issued so far (possibly repeatedly).
+    Cancel { nth: usize },
+}
+
+/// Seeded script: ~25% cancels, ~30% of events chain a follow-up.
+fn script(seed: u64, n: usize) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::new();
+    let mut scheduled = 0u64;
+    for i in 0..n {
+        if scheduled > 0 && rng.chance(0.25) {
+            ops.push(Op::Cancel {
+                nth: rng.below(scheduled) as usize,
+            });
+        } else {
+            ops.push(Op::Schedule {
+                at: rng.below(5_000_000),
+                tag: i as u32,
+                chain: if rng.chance(0.3) {
+                    Some(rng.below(200_000) + 1)
+                } else {
+                    None
+                },
+            });
+            scheduled += 1;
+        }
+    }
+    ops
+}
+
+/// Replays `ops` on the new engine. `step_ns = Some(d)` drains via
+/// repeated `run_until(now + d)` instead of one `run`.
+fn run_new(ops: &[Op], step_ns: Option<u64>) -> (Fired, u64, u64) {
+    let mut eng: Engine<Log> = Engine::new();
+    let mut w = Log::default();
+    let mut ids = Vec::new();
+    for op in ops {
+        match op {
+            Op::Schedule { at, tag, chain } => {
+                let s = eng.schedule_at(
+                    SimTime::from_nanos(*at),
+                    Ev {
+                        tag: *tag,
+                        chain: *chain,
+                    },
+                );
+                ids.push(s.id);
+            }
+            Op::Cancel { nth } => eng.cancel(ids[*nth]),
+        }
+    }
+    let mut processed = 0;
+    match step_ns {
+        None => processed += eng.run(&mut w),
+        Some(step) => {
+            while eng.pending() > 0 {
+                let deadline = eng.now() + SimTime::from_nanos(step);
+                processed += eng.run_until(&mut w, deadline);
+            }
+        }
+    }
+    (w.fired, processed, eng.now().as_nanos())
+}
+
+/// Replays `ops` on the oracle, same drive modes.
+fn run_oracle(ops: &[Op], step_ns: Option<u64>) -> (Fired, u64, u64) {
+    let mut eng: OracleEngine<OLog> = OracleEngine::new();
+    let mut w = OLog::default();
+    let mut ids = Vec::new();
+    for op in ops {
+        match op {
+            Op::Schedule { at, tag, chain } => {
+                let (tag, chain) = (*tag, *chain);
+                let s = eng.schedule_at(SimTime::from_nanos(*at), oracle_handler(tag, chain));
+                ids.push(s.id);
+            }
+            Op::Cancel { nth } => eng.cancel(ids[*nth]),
+        }
+    }
+    let mut processed = 0;
+    match step_ns {
+        None => processed += eng.run(&mut w),
+        Some(step) => {
+            // Pre-run cancels only ever tombstone still-queued entries, so
+            // the oracle's approximate `pending()` is exact here too.
+            while eng.pending() > 0 {
+                let deadline = eng.now() + SimTime::from_nanos(step);
+                processed += eng.run_until(&mut w, deadline);
+            }
+        }
+    }
+    (w.fired, processed, eng.now().as_nanos())
+}
+
+/// The tentpole proof: identical event order and processed counts over
+/// randomized schedules with cancellations and chains.
+#[test]
+fn randomized_schedules_match_the_oracle() {
+    for seed in 0..20u64 {
+        let ops = script(seed, 300);
+        let (new_fired, new_n, new_now) = run_new(&ops, None);
+        let (old_fired, old_n, old_now) = run_oracle(&ops, None);
+        assert_eq!(new_fired, old_fired, "firing order diverged (seed {seed})");
+        assert_eq!(new_n, old_n, "processed diverged (seed {seed})");
+        assert_eq!(new_now, old_now, "final clock diverged (seed {seed})");
+    }
+}
+
+/// `run_until` in fixed increments is the same trajectory as one `run`,
+/// on both cores — the deduplicated drain path has no mode skew.
+#[test]
+fn stepped_run_until_matches_run_and_oracle() {
+    for seed in 100..110u64 {
+        let ops = script(seed, 200);
+        let plain = run_new(&ops, None);
+        let stepped = run_new(&ops, Some(250_000));
+        assert_eq!(plain.0, stepped.0, "stepped firing order (seed {seed})");
+        assert_eq!(plain.1, stepped.1, "stepped processed (seed {seed})");
+        let oracle_stepped = run_oracle(&ops, Some(250_000));
+        assert_eq!(stepped, oracle_stepped, "stepped oracle diff (seed {seed})");
+    }
+}
+
+/// Same-time insertions fire in insertion order — on both cores.
+#[test]
+fn same_time_ties_fire_in_insertion_order_on_both() {
+    let ops: Vec<Op> = (0..200)
+        .map(|i| Op::Schedule {
+            at: 7_777,
+            tag: i,
+            chain: None,
+        })
+        .collect();
+    let expect: Fired = (0..200).map(|i| (7_777, i)).collect();
+    assert_eq!(run_new(&ops, None).0, expect);
+    assert_eq!(run_oracle(&ops, None).0, expect);
+}
+
+/// Cancel-then-reschedule chains: every even-numbered schedule is
+/// cancelled immediately; the survivors fire in order, identically.
+#[test]
+fn cancel_then_reschedule_chains_are_deterministic_on_both() {
+    let mut ops = Vec::new();
+    let mut nth = 0;
+    for i in 0..100u32 {
+        ops.push(Op::Schedule {
+            at: 1_000,
+            tag: i,
+            chain: None,
+        });
+        if i % 2 == 0 {
+            ops.push(Op::Cancel { nth });
+        }
+        nth += 1;
+    }
+    let expect: Fired = (0..100).filter(|i| i % 2 == 1).map(|i| (1_000, i)).collect();
+    assert_eq!(run_new(&ops, None).0, expect);
+    assert_eq!(run_oracle(&ops, None).0, expect);
+}
+
+/// Double-cancelling the same event is a no-op on both cores.
+#[test]
+fn double_cancel_is_idempotent_on_both() {
+    let ops = vec![
+        Op::Schedule { at: 10, tag: 0, chain: None },
+        Op::Schedule { at: 20, tag: 1, chain: None },
+        Op::Cancel { nth: 0 },
+        Op::Cancel { nth: 0 },
+    ];
+    let expect: Fired = vec![(20, 1)];
+    let (fired, n, _) = run_new(&ops, None);
+    assert_eq!((fired, n), (expect.clone(), 1));
+    let (fired, n, _) = run_oracle(&ops, None);
+    assert_eq!((fired, n), (expect, 1));
+}
+
+/// The one sanctioned divergence: after cancelling an already-fired id,
+/// the oracle's `pending()` under-counts forever (the tombstone leak);
+/// the slot-based core stays exact.
+#[test]
+fn pending_exactness_regression_documents_the_oracle_leak() {
+    // Oracle: the leak.
+    let mut eng: OracleEngine<OLog> = OracleEngine::new();
+    let mut w = OLog::default();
+    let fired = eng.schedule_at(SimTime::from_nanos(1), oracle_leaf(0));
+    eng.run(&mut w);
+    eng.cancel(fired.id); // stale — leaks a tombstone
+    eng.schedule_at(SimTime::from_nanos(2), oracle_leaf(1));
+    assert_eq!(eng.pending(), 0, "the oracle under-counts (documented wart)");
+
+    // New core: the fix.
+    let mut eng: Engine<Log> = Engine::new();
+    let mut w = Log::default();
+    let fired = eng.schedule_at(SimTime::from_nanos(1), Ev { tag: 0, chain: None });
+    eng.run(&mut w);
+    eng.cancel(fired.id); // stale — true no-op
+    eng.schedule_at(SimTime::from_nanos(2), Ev { tag: 1, chain: None });
+    assert_eq!(eng.pending(), 1, "the slot-based core is exact");
+    assert_eq!(eng.run(&mut w), 1, "the pending event still fires");
+}
+
+/// Same seed, same trajectory — twice.
+#[test]
+fn replays_are_deterministic() {
+    let ops = script(424242, 400);
+    assert_eq!(run_new(&ops, None), run_new(&ops, None));
+}
