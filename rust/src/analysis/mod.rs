@@ -164,6 +164,18 @@ fn speedup_to_json(s: &Speedup) -> Json {
         ("p99_ms", agg_to_json(&g.p99_ms)),
         ("avg_committed_mcpu", agg_to_json(&g.avg_committed_mcpu)),
     ];
+    // Fault-recovery counters only appear when the cell saw fault
+    // activity — fault-free analyses stay byte-identical to pre-fault
+    // emissions (the analysis schema version is unchanged; parsers
+    // default absent counters to zero).
+    if g.has_fault_counters() {
+        pairs.extend([
+            ("pods_unschedulable", Json::from(g.pods_unschedulable)),
+            ("pods_evicted", g.pods_evicted.into()),
+            ("pods_rescheduled", g.pods_rescheduled.into()),
+            ("resize_failures", g.resize_failures.into()),
+        ]);
+    }
     // Undefined ratios are omitted, never NaN.
     if let Some(r) = s.mean_ratio {
         pairs.push(("speedup_mean", r.into()));
@@ -184,6 +196,11 @@ fn agg_from_json(j: &Json, path: &str) -> Result<MetricAgg, String> {
 
 fn speedup_from_json(j: &Json, path: &str) -> Result<Speedup, String> {
     let req_u64 = |k: &str| j.req_u64(k).map_err(|e| format!("{path}.{k}: {e}"));
+    // Fault counters are optional (absent on fault-free cells).
+    let opt_u64 = |k: &str| match j.get(k) {
+        None => Ok(0u64),
+        Some(_) => req_u64(k),
+    };
     let req_str = |k: &str| {
         j.req_str(k)
             .map(str::to_string)
@@ -226,6 +243,10 @@ fn speedup_from_json(j: &Json, path: &str) -> Result<Speedup, String> {
             speculative_resizes: req_u64("speculative_resizes")?,
             mispredictions: req_u64("mispredictions")?,
             pods_created: req_u64("pods_created")?,
+            pods_unschedulable: opt_u64("pods_unschedulable")?,
+            pods_evicted: opt_u64("pods_evicted")?,
+            pods_rescheduled: opt_u64("pods_rescheduled")?,
+            resize_failures: opt_u64("resize_failures")?,
             mean_ms: agg("mean_ms")?,
             p50_ms: agg("p50_ms")?,
             p99_ms: agg("p99_ms")?,
@@ -280,6 +301,27 @@ mod tests {
         assert_eq!(back, a);
         // The undefined warm ratio is omitted from the document.
         assert!(!text.contains("\"speedup_mean\": null"));
+    }
+
+    /// Fault counters round-trip when present and are omitted entirely on
+    /// fault-free cells — old documents and old readers both keep working.
+    #[test]
+    fn fault_counters_round_trip_and_stay_optional() {
+        let clean = analysis();
+        let text = clean.to_json().to_string_pretty();
+        assert!(!text.contains("pods_evicted"), "{text}");
+
+        let mut r = row("", "mix", Policy::Cold, 0, 100.0, 10);
+        r.pods_evicted = 4;
+        r.pods_rescheduled = 3;
+        r.pods_unschedulable = 1;
+        r.resize_failures = 2;
+        let a = AnalysisReport::from_scenario(&scenario_report(vec![r]), Policy::Cold);
+        let text = a.to_json().to_string_pretty();
+        assert!(text.contains("\"pods_evicted\": 4"), "{text}");
+        let back = AnalysisReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, a);
+        assert_eq!(back.rows[0].group.pods_rescheduled, 3);
     }
 
     #[test]

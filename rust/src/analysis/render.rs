@@ -88,6 +88,10 @@ pub fn aggregate_table(name: &str, groups: &[Group]) -> Table {
     let swept = has_variants(groups);
     let multi_rep = groups.iter().any(|g| g.reps > 1);
     let speculative = groups.iter().any(|g| g.key.policy.predictive());
+    // Groups carry no spec, so the fault columns key on observed fault
+    // activity: any eviction/reschedule/unschedulable/resize-failure in
+    // the comparison shows the recovery accounting for every cell.
+    let faulty = groups.iter().any(Group::has_fault_counters);
     let mut headers = Vec::new();
     if swept {
         headers.push("Variant");
@@ -106,6 +110,9 @@ pub fn aggregate_table(name: &str, groups: &[Group]) -> Table {
     ]);
     if speculative {
         headers.extend(["Spec", "Miss"]);
+    }
+    if faulty {
+        headers.extend(["Unsched", "Evict", "Resched", "RszFail"]);
     }
     headers.extend(["Committed (mCPU)", "Pods"]);
     let mut t = Table::new(headers).title(format!("Aggregate: {name}"));
@@ -133,6 +140,12 @@ pub fn aggregate_table(name: &str, groups: &[Group]) -> Table {
         if speculative {
             cells.push(g.speculative_resizes.to_string());
             cells.push(g.mispredictions.to_string());
+        }
+        if faulty {
+            cells.push(g.pods_unschedulable.to_string());
+            cells.push(g.pods_evicted.to_string());
+            cells.push(g.pods_rescheduled.to_string());
+            cells.push(g.resize_failures.to_string());
         }
         cells.extend([
             format!("{:.0}", g.avg_committed_mcpu.mean),
@@ -257,6 +270,20 @@ mod tests {
         // Cold's two reps disagree → spread cell; in-place's agree → plain.
         assert!(ascii.contains("110.00 [100.00, 120.00]"), "{ascii}");
         assert!(ascii.contains("Reps"), "{ascii}");
+    }
+
+    #[test]
+    fn aggregate_table_grows_fault_columns_on_fault_activity() {
+        let mut a = row("", "mix", Policy::Cold, 0, 100.0, 10);
+        a.pods_evicted = 2;
+        a.pods_rescheduled = 2;
+        let b = row("", "mix", Policy::InPlace, 0, 10.0, 10);
+        let groups = aggregate(&[a, b]);
+        let ascii = aggregate_table("t", &groups).to_ascii();
+        assert!(ascii.contains("Evict") && ascii.contains("Resched"), "{ascii}");
+        // Fault-free comparisons render exactly the old columns.
+        let quiet = aggregate_table("t", &sample_groups()).to_ascii();
+        assert!(!quiet.contains("Evict"), "{quiet}");
     }
 
     #[test]

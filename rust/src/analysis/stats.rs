@@ -76,6 +76,15 @@ pub struct Group {
     /// Speculation windows that closed with no arrival (re-parked).
     pub mispredictions: u64,
     pub pods_created: u64,
+    /// Scheduling attempts that found no feasible node (fault runs; zero
+    /// on fault-free reports).
+    pub pods_unschedulable: u64,
+    /// Pods killed by injected node crashes.
+    pub pods_evicted: u64,
+    /// Replacement pods started by crash recovery.
+    pub pods_rescheduled: u64,
+    /// Resize patches rejected by injected API failures.
+    pub resize_failures: u64,
     pub mean_ms: MetricAgg,
     pub p50_ms: MetricAgg,
     pub p99_ms: MetricAgg,
@@ -87,6 +96,13 @@ impl Group {
     /// speedups against or from it must be suppressed, not NaN.
     pub fn has_latency(&self) -> bool {
         self.completed > 0
+    }
+
+    /// Any fault-recovery activity in this cell? Drives the conditional
+    /// fault columns and the optional JSON fields.
+    pub fn has_fault_counters(&self) -> bool {
+        self.pods_unschedulable + self.pods_evicted + self.pods_rescheduled + self.resize_failures
+            > 0
     }
 }
 
@@ -102,6 +118,10 @@ struct Acc {
     speculative_resizes: u64,
     mispredictions: u64,
     pods_created: u64,
+    pods_unschedulable: u64,
+    pods_evicted: u64,
+    pods_rescheduled: u64,
+    resize_failures: u64,
     mean_ms: Summary,
     p50_ms: Summary,
     p99_ms: Summary,
@@ -121,6 +141,10 @@ impl Acc {
             speculative_resizes: 0,
             mispredictions: 0,
             pods_created: 0,
+            pods_unschedulable: 0,
+            pods_evicted: 0,
+            pods_rescheduled: 0,
+            resize_failures: 0,
             mean_ms: Summary::new(),
             p50_ms: Summary::new(),
             p99_ms: Summary::new(),
@@ -137,6 +161,10 @@ impl Acc {
         self.speculative_resizes += r.speculative_resizes;
         self.mispredictions += r.mispredictions;
         self.pods_created += r.pods_created;
+        self.pods_unschedulable += r.pods_unschedulable;
+        self.pods_evicted += r.pods_evicted;
+        self.pods_rescheduled += r.pods_rescheduled;
+        self.resize_failures += r.resize_failures;
         // Rows with zero completions report 0.0 latencies; folding those
         // zeros into the spread would fake a "min latency of 0 ms", so
         // latency metrics only aggregate over reps that completed work.
@@ -161,6 +189,10 @@ impl Acc {
             speculative_resizes: self.speculative_resizes,
             mispredictions: self.mispredictions,
             pods_created: self.pods_created,
+            pods_unschedulable: self.pods_unschedulable,
+            pods_evicted: self.pods_evicted,
+            pods_rescheduled: self.pods_rescheduled,
+            resize_failures: self.resize_failures,
             mean_ms: MetricAgg::from_summary(&self.mean_ms),
             p50_ms: MetricAgg::from_summary(&self.p50_ms),
             p99_ms: MetricAgg::from_summary(&self.p99_ms),
@@ -228,6 +260,10 @@ pub(crate) fn test_row(
         mispredictions: 0,
         avg_committed_mcpu: 100.0,
         pods_created: 4,
+        pods_unschedulable: 0,
+        pods_evicted: 0,
+        pods_rescheduled: 0,
+        resize_failures: 0,
     }
 }
 
@@ -303,6 +339,27 @@ mod tests {
         assert_eq!(groups[0].reps, 2);
         assert_eq!(groups[1].key.policy, Policy::InPlace);
         assert_eq!(groups[2].key.variant, "a=2");
+    }
+
+    #[test]
+    fn fault_counters_sum_across_reps() {
+        let mut a = row("", "mix", Policy::Cold, 0, 50.0, 10);
+        a.pods_evicted = 2;
+        a.pods_rescheduled = 2;
+        a.resize_failures = 1;
+        let mut b = row("", "mix", Policy::Cold, 1, 55.0, 10);
+        b.pods_evicted = 3;
+        b.pods_unschedulable = 1;
+        let groups = aggregate(&[a, b]);
+        let g = &groups[0];
+        assert_eq!(g.pods_evicted, 5);
+        assert_eq!(g.pods_rescheduled, 2);
+        assert_eq!(g.pods_unschedulable, 1);
+        assert_eq!(g.resize_failures, 1);
+        assert!(g.has_fault_counters());
+        // A clean group reports none.
+        let clean = aggregate(&[row("", "mix", Policy::Cold, 0, 50.0, 10)]);
+        assert!(!clean[0].has_fault_counters());
     }
 
     #[test]

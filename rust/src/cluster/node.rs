@@ -32,6 +32,9 @@ pub struct Node {
     image_cache: HashSet<String>,
     /// Attached stress-ng style stressors.
     pub stressors: Vec<Stressor>,
+    /// Is the node serving? Downed nodes (fault injection) are filtered out
+    /// of scheduling until they recover.
+    up: bool,
 }
 
 impl Node {
@@ -48,7 +51,18 @@ impl Node {
             pod_cgroups: HashMap::new(),
             image_cache: HashSet::new(),
             stressors: Vec::new(),
+            up: true,
         }
+    }
+
+    /// Is the node currently serving (not crashed)?
+    pub fn up(&self) -> bool {
+        self.up
+    }
+
+    /// Marks the node up/down (fault injection: crash / recover).
+    pub fn set_up(&mut self, up: bool) {
+        self.up = up;
     }
 
     pub fn capacity(&self) -> Resources {
@@ -144,6 +158,12 @@ impl Node {
 
     pub fn cache_image(&mut self, image: &str) {
         self.image_cache.insert(image.to_string());
+    }
+
+    /// Drops every pulled image — a crashed node restarts with a cold
+    /// image cache, so post-recovery cold starts pay the pull again.
+    pub fn clear_image_cache(&mut self) {
+        self.image_cache.clear();
     }
 
     // -- load ----------------------------------------------------------------
@@ -243,6 +263,18 @@ mod tests {
         assert!(!n.image_cached("img:v1"));
         n.cache_image("img:v1");
         assert!(n.image_cached("img:v1"));
+        n.clear_image_cache();
+        assert!(!n.image_cached("img:v1"));
+    }
+
+    #[test]
+    fn nodes_start_up_and_toggle() {
+        let mut n = node();
+        assert!(n.up());
+        n.set_up(false);
+        assert!(!n.up());
+        n.set_up(true);
+        assert!(n.up());
     }
 
     #[test]

@@ -49,13 +49,15 @@ impl Scheduler {
 
     /// Picks the best node for `requests`, or None if nothing fits.
     ///
-    /// Ties break on the lowest `NodeId` so placement is deterministic
-    /// regardless of how the node slice was produced — on a fresh uniform
-    /// fleet every scheduler in the simulation agrees on the same winner.
+    /// Downed nodes (fault injection) are filtered out alongside nodes the
+    /// pod does not fit on. Ties break on the lowest `NodeId` so placement
+    /// is deterministic regardless of how the node slice was produced — on
+    /// a fresh uniform fleet every scheduler in the simulation agrees on
+    /// the same winner.
     pub fn pick(&self, nodes: &[Node], requests: Resources) -> Option<NodeId> {
         let mut best: Option<(NodeId, f64)> = None;
         for n in nodes {
-            if !requests.fits_in(&n.free()) {
+            if !n.up() || !requests.fits_in(&n.free()) {
                 continue;
             }
             let score = self.score(n, requests);
@@ -147,6 +149,22 @@ mod tests {
             let rev = vec![node(2, 2000), node(1, 2000), node(0, 2000)];
             assert_eq!(s.pick(&rev, Resources::cpu_m(500)), Some(NodeId(0)));
         }
+    }
+
+    #[test]
+    fn downed_nodes_are_filtered() {
+        let s = Scheduler::default();
+        // Node 1 would win on score, but it is down (crashed).
+        let mut nodes = vec![node(0, 4000), node(1, 1000)];
+        nodes[1].set_up(false);
+        assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), Some(NodeId(0)));
+        // Whole fleet down ⇒ unschedulable even though capacity is free.
+        nodes[0].set_up(false);
+        assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), None);
+        // Recovery restores the original pick.
+        nodes[0].set_up(true);
+        nodes[1].set_up(true);
+        assert_eq!(s.pick(&nodes, Resources::cpu_m(500)), Some(NodeId(1)));
     }
 
     #[test]

@@ -62,6 +62,19 @@ pub enum Event {
     Speculate { service: Arc<str>, generation: u64 },
     /// Misprediction watchdog: re-park if no arrival claimed the window.
     SpeculationRepark { service: Arc<str>, generation: u64 },
+    /// Fault injection: the node goes down, killing every resident pod.
+    NodeCrash { node: NodeId },
+    /// Fault injection: the node comes back (with a cold image cache).
+    NodeRecover { node: NodeId },
+    /// Fault injection: a straggler window opens on the node — its kubelet
+    /// pipelines slow down by the given factors until `StragglerEnd`.
+    StragglerStart {
+        node: NodeId,
+        startup_factor: f64,
+        resize_factor: f64,
+    },
+    /// Fault injection: the straggler window closes.
+    StragglerEnd { node: NodeId },
     /// Escape hatch for examples/tests; never used by platform code.
     Call(Box<dyn FnOnce(&mut Platform, &mut Eng)>),
 }
@@ -114,6 +127,14 @@ impl World for Platform {
                 service,
                 generation,
             } => Self::speculation_repark(self, eng, &service, generation),
+            Event::NodeCrash { node } => Self::node_crash(self, eng, node),
+            Event::NodeRecover { node } => Self::node_recover(self, eng, node),
+            Event::StragglerStart {
+                node,
+                startup_factor,
+                resize_factor,
+            } => Self::straggler_start(self, eng, node, startup_factor, resize_factor),
+            Event::StragglerEnd { node } => Self::straggler_end(self, eng, node),
             Event::Call(f) => f(self, eng),
         }
     }

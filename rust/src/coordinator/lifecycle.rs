@@ -10,17 +10,31 @@
 use crate::cluster::kubelet::Kubelet;
 use crate::cluster::pod::{PodId, PodPhase, PodSpec};
 use crate::coordinator::event::Event;
-use crate::coordinator::platform::{Eng, Platform};
+use crate::coordinator::platform::{Eng, Platform, StartingPod};
 use crate::coordinator::service::ServicePod;
+use crate::faults::inflate;
 use crate::policy::Policy;
+use crate::simclock::SimTime;
 use crate::util::quantity::{Memory, MilliCpu, Resources};
+
+/// How long KPA scale-out backs off after an unschedulable pod-start
+/// attempt — re-trying a placement that cannot succeed on every
+/// concurrency tick is pure churn.
+pub(crate) const UNSCHEDULABLE_BACKOFF: SimTime = SimTime(5_000_000_000); // 5 s
 
 impl Platform {
     /// Creates and starts a pod for `svc_name`. `on_demand` marks a
-    /// cold-start (request-triggered) creation.
-    pub(crate) fn start_pod(w: &mut Platform, eng: &mut Eng, svc_name: &str, on_demand: bool) {
+    /// cold-start (request-triggered) creation. Returns whether a pod
+    /// actually entered its startup pipeline — false when the service is
+    /// unknown or no node can fit the pod.
+    pub(crate) fn start_pod(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        on_demand: bool,
+    ) -> bool {
         let (spec, image, image_mb, init_ms) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(svc) = w.services.get(svc_name) else { return false };
             let p = &svc.profile;
             let requests = Resources::new(
                 // Parking pods (the in-place hook policies) reserve only a
@@ -48,13 +62,21 @@ impl Platform {
             w.cluster.nodes(),
             w.cluster.pod(pod_id).unwrap().spec.total_requests(),
         ) else {
-            // Unschedulable — drop the pod; buffered requests will time out.
+            // Unschedulable: count it and back KPA scale-out off — nothing
+            // will fit until capacity frees up, so re-trying every
+            // concurrency tick is pure churn. Cold-start attempts are not
+            // gated by the backoff, so a request arriving after capacity
+            // frees still gets its pod immediately.
             w.cluster.delete_pod(pod_id);
-            return;
+            w.metrics.pods_unschedulable += 1;
+            if let Some(svc) = w.services.get_mut(svc_name) {
+                svc.sched_backoff_until = eng.now() + UNSCHEDULABLE_BACKOFF;
+            }
+            return false;
         };
         if w.cluster.bind(pod_id, node_id).is_err() {
             w.cluster.delete_pod(pod_id);
-            return;
+            return false;
         }
         w.metrics.pods_created += 1;
         {
@@ -68,13 +90,16 @@ impl Platform {
         let cached = w.cluster.node(node_id).image_cached(&image);
         let plan =
             w.kubelets[node_id.0 as usize].startup_plan(cached, image_mb, init_ms, &mut w.rng);
-        let total = Kubelet::plan_total(&plan);
+        // Fault injection: straggler windows and global startup inflation
+        // stretch the pipeline (a no-op returning the exact input when the
+        // factor is 1 — the fault-free byte-identity guard).
+        let total = inflate(Kubelet::plan_total(&plan), w.faults.startup_factor(node_id));
         {
             let pod = w.cluster.pod_mut(pod_id).unwrap();
             pod.status.phase = PodPhase::Creating;
             pod.created_at = eng.now();
         }
-        eng.schedule_in(
+        let s = eng.schedule_in(
             total,
             Event::PodReady {
                 service: std::sync::Arc::from(svc_name),
@@ -83,6 +108,16 @@ impl Platform {
                 image: std::sync::Arc::from(image.as_str()),
             },
         );
+        // Track the in-flight startup so a node crash can cancel it.
+        w.starting_pods.insert(
+            pod_id,
+            StartingPod {
+                service: svc_name.to_string(),
+                node: node_id,
+                ready_event: s.id,
+            },
+        );
+        true
     }
 
     pub(crate) fn pod_ready(
@@ -93,6 +128,7 @@ impl Platform {
         node_id: crate::cluster::NodeId,
         image: &str,
     ) {
+        w.starting_pods.remove(&pod_id);
         w.cluster.node_mut(node_id).cache_image(image);
         {
             let Some(pod) = w.cluster.pod_mut(pod_id) else { return };
@@ -224,22 +260,33 @@ impl Platform {
     }
 
     /// Termination grace elapsed: remove the pod from cluster, fleet
-    /// counters and the service's pod list.
-    pub(crate) fn pod_teardown(w: &mut Platform, _eng: &mut Eng, svc_name: &str, pod_id: PodId) {
-        w.cluster.delete_pod(pod_id);
-        w.fleet.pod_gone(pod_id);
-        w.metrics.pods_deleted += 1;
+    /// counters and the service's pod list. Pod-scoped timers (idle timer,
+    /// pending resize retry) are cancelled and the in-flight resize record
+    /// cleared — stale events firing against a dead `PodId` would inflate
+    /// the calendar queue's exact `pending()` forever.
+    pub(crate) fn pod_teardown(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+        Self::clear_resize_state(w, eng, svc_name, pod_id);
         if let Some(svc) = w.services.get_mut(svc_name) {
             if let Some(idx) = svc.pod_index(pod_id) {
+                if let Some(t) = svc.pods[idx].idle_timer.take() {
+                    eng.cancel(t);
+                }
                 svc.pods.remove(idx);
             }
         }
+        w.cluster.delete_pod(pod_id);
+        w.fleet.pod_gone(pod_id);
+        w.metrics.pods_deleted += 1;
     }
 
     /// Event-driven KPA evaluation: scale up when the decision demands it.
     pub(crate) fn maybe_scale_up(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
         let (desired, live) = {
             let Some(svc) = w.services.get(svc_name) else { return };
+            // Recent unschedulable attempt: nothing fits, don't churn.
+            if eng.now() < svc.sched_backoff_until {
+                return;
+            }
             // `ready_count` mirrors `ready_pods()` incrementally (pinned by
             // the differential property test), and `ready_count + starting`
             // mirrors `live_pods()` — no pod scan on this path.
@@ -247,7 +294,72 @@ impl Platform {
             (d.desired, svc.ready_count + svc.starting)
         };
         for _ in live..desired {
-            Self::start_pod(w, eng, svc_name, true);
+            if !Self::start_pod(w, eng, svc_name, true) {
+                // Unschedulable — the rest of this decision can't fit
+                // either; the backoff just armed suppresses re-tries.
+                break;
+            }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::Topology;
+    use crate::coordinator::platform::Simulation;
+    use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+    /// Satellite regression: tearing a pod down must cancel its pod-scoped
+    /// timers instead of leaving stale events to fire against a dead
+    /// `PodId` — `pending()` is exact, so the leak is directly observable.
+    #[test]
+    fn teardown_cancels_pod_scoped_timers() {
+        let mut sim = Simulation::paper(7);
+        sim.deploy(
+            "fn",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::Cold,
+        );
+        sim.submit("fn");
+        sim.run_to_quiescence();
+        // The request completed; post-request hooks armed the idle timer.
+        let svc = &sim.world.services["fn"];
+        assert_eq!(svc.pods.len(), 1);
+        assert!(svc.pods[0].idle_timer.is_some(), "idle timer armed");
+        let pod = svc.pods[0].pod;
+        let before = sim.engine.pending();
+        Platform::pod_teardown(&mut sim.world, &mut sim.engine, "fn", pod);
+        assert_eq!(
+            sim.engine.pending(),
+            before - 1,
+            "teardown must cancel the armed idle timer"
+        );
+        // Whatever remains drains cleanly against the now-dead pod.
+        sim.run();
+        assert_eq!(sim.engine.pending(), 0);
+    }
+
+    /// Satellite regression: unschedulable pod-start attempts are counted
+    /// and arm a KPA backoff instead of vanishing silently.
+    #[test]
+    fn unschedulable_attempts_are_counted_and_back_off() {
+        // One 8-core node fits 8 × 1000 m warm pods; the 9th can't fit.
+        let mut sim = Simulation::fleet(Topology::uniform_paper(1), 5);
+        for i in 0..9 {
+            sim.deploy(
+                &format!("svc-{i}"),
+                WorkloadProfile::paper(WorkloadKind::HelloWorld),
+                Policy::Warm,
+            );
+        }
+        sim.run();
+        assert_eq!(sim.world.metrics.pods_unschedulable, 1);
+        let ready: usize = sim.world.services.values().map(|s| s.ready_pods()).sum();
+        assert_eq!(ready, 8);
+        // The starved service armed its backoff window.
+        let svc = &sim.world.services["svc-8"];
+        assert!(svc.sched_backoff_until > crate::simclock::SimTime::ZERO);
+        assert!(svc.pods.is_empty());
     }
 }

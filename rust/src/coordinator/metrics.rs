@@ -74,9 +74,19 @@ pub struct Metrics {
     /// Pods created / deleted (cold-start churn).
     pub pods_created: u64,
     pub pods_deleted: u64,
+    /// Pod-start attempts no node could fit (previously dropped silently).
+    pub pods_unschedulable: u64,
+    /// Pods killed by node crashes (fault injection) — distinct from
+    /// `pods_deleted`, which counts orderly scale-to-zero teardowns.
+    pub pods_evicted: u64,
+    /// Crash-evicted pods successfully re-placed through the scheduler.
+    pub pods_rescheduled: u64,
     /// Resize patches accepted / conflicted (hook churn).
     pub resizes_accepted: u64,
     pub resize_conflicts: u64,
+    /// Resize patches rejected by injected faults (beyond the modelled
+    /// conflict path).
+    pub resize_failures: u64,
 }
 
 impl Metrics {

@@ -34,9 +34,10 @@ use crate::coordinator::event::Event;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Continuation, RequestState};
 use crate::coordinator::service::Service;
+use crate::faults::FaultState;
 use crate::knative::activator::RequestId;
 use crate::policy::{PlatformParams, Policy};
-use crate::simclock::{Engine, SimTime};
+use crate::simclock::{Engine, EventId, SimTime};
 use crate::util::quantity::MilliCpu;
 use crate::util::rng::Rng;
 use crate::workload::registry::WorkloadProfile;
@@ -45,6 +46,18 @@ pub use crate::coordinator::sim::Simulation;
 
 /// Engine type alias used across the coordinator.
 pub type Eng = Engine<Platform>;
+
+/// A pod whose startup pipeline is still in flight, keyed by `PodId` in
+/// [`Platform::starting_pods`]. Tracked so node-crash fault handling can
+/// cancel the pending `PodReady` and unwind the owning service's
+/// `starting` counter — the service name is not derivable from the cluster
+/// pod (its spec carries the workload profile name, not the service).
+#[derive(Debug)]
+pub(crate) struct StartingPod {
+    pub service: String,
+    pub node: NodeId,
+    pub ready_event: EventId,
+}
 
 /// The world state driven by the event engine.
 pub struct Platform {
@@ -67,6 +80,14 @@ pub struct Platform {
     /// fleet state behind `node_load`, `committed_changed` and the
     /// placement-aware routing scores.
     pub fleet: FleetAccounting,
+    /// Fault-injection state: latency multipliers, the crash request
+    /// policy and the dedicated fault RNG. Inert (all factors 1, p = 0)
+    /// unless [`Platform::install_faults`] armed it.
+    pub faults: FaultState,
+    /// Pods whose startup pipeline is still running (insert in
+    /// `start_pod`, remove in `pod_ready`). BTreeMap for deterministic
+    /// iteration when a crash sweeps a node.
+    pub(crate) starting_pods: BTreeMap<PodId, StartingPod>,
     pub services: BTreeMap<String, Service>,
     pub(crate) requests: IdHashMap<RequestId, RequestState>,
     pub(crate) next_request: u64,
@@ -107,6 +128,7 @@ impl Platform {
             })
             .collect();
         let fleet = FleetAccounting::for_topology(&topology);
+        let faults = FaultState::inert(kubelets.len(), params.seed);
         let rng = Rng::new(params.seed);
         Platform {
             cluster,
@@ -118,6 +140,8 @@ impl Platform {
             routing: RoutingPolicy::LeastLoaded,
             hybrid_weights: HybridWeights::default(),
             fleet,
+            faults,
+            starting_pods: BTreeMap::new(),
             services: BTreeMap::new(),
             requests: IdHashMap::default(),
             next_request: 1,

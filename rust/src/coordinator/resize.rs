@@ -57,6 +57,20 @@ impl Platform {
             return;
         }
         let now = eng.now();
+        // Fault injection: probabilistic patch rejection beyond the
+        // modelled conflict path. Drawn from the dedicated fault RNG so a
+        // zero-probability config touches neither RNG stream.
+        if w.faults.resize_failure_p > 0.0 && w.faults.rng.chance(w.faults.resize_failure_p) {
+            w.metrics.resize_failures += 1;
+            // Permanent rejection semantics: the desire is dropped and the
+            // pod keeps its current allocation (same as the non-transient
+            // API errors below).
+            let svc = w.services.get_mut(svc_name).unwrap();
+            if let Some(idx) = svc.pod_index(pod_id) {
+                svc.pods[idx].desired_limit = None;
+            }
+            return;
+        }
         match w.api.patch_resize(
             &mut w.cluster,
             ResizePatch {
@@ -71,16 +85,22 @@ impl Platform {
                     let svc = w.services.get_mut(svc_name).unwrap();
                     if let Some(idx) = svc.pod_index(pod_id) {
                         svc.pods[idx].desired_limit = None;
-                        svc.pods[idx].retry_pending = false;
+                        if let Some(t) = svc.pods[idx].retry_timer.take() {
+                            eng.cancel(t);
+                        }
                     }
                 }
                 let _ = w.api.mark_in_progress(&mut w.cluster, pod_id, target, now);
                 // Sample propagation latency under current node load, from
-                // the kubelet owning the pod's node.
+                // the kubelet owning the pod's node — stretched by any
+                // straggler window on that node (factor 1 ⇒ exact input).
                 let node_id = w.cluster.pod(pod_id).unwrap().node.unwrap();
                 let load = Self::node_load(w, node_id);
-                let lat = w.kubelets[node_id.0 as usize]
-                    .resize_latency(applied, target, load, &mut w.rng);
+                let lat = crate::faults::inflate(
+                    w.kubelets[node_id.0 as usize]
+                        .resize_latency(applied, target, load, &mut w.rng),
+                    w.faults.resize_factor(node_id),
+                );
                 eng.schedule_in(
                     lat,
                     Event::ResizeLanded {
@@ -112,29 +132,54 @@ impl Platform {
                 let retry = w.params.resize_retry;
                 let svc = w.services.get_mut(svc_name).unwrap();
                 let Some(idx) = svc.pod_index(pod_id) else { return };
-                if !svc.pods[idx].retry_pending {
-                    svc.pods[idx].retry_pending = true;
-                    eng.schedule_in(
+                if svc.pods[idx].retry_timer.is_none() {
+                    let s = eng.schedule_in(
                         retry,
                         Event::ResizeRetry {
                             service: std::sync::Arc::from(svc_name),
                             pod: pod_id,
                         },
                     );
+                    svc.pods[idx].retry_timer = Some(s.id);
                 }
             }
         }
     }
 
-    /// Conflict backoff elapsed: clear the pending flag and re-attempt the
-    /// patch.
+    /// Conflict backoff elapsed: clear the stored timer (it just fired)
+    /// and re-attempt the patch.
     pub(crate) fn retry_patch(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
         if let Some(svc) = w.services.get_mut(svc_name) {
             if let Some(i) = svc.pod_index(pod_id) {
-                svc.pods[i].retry_pending = false;
+                svc.pods[i].retry_timer = None;
             }
         }
         Self::try_patch(w, eng, svc_name, pod_id);
+    }
+
+    /// Clears every trace of an in-flight resize for `pod_id`: the
+    /// service-side desire, a pending retry timer, and the pod's
+    /// `status.resize` record. Called on teardown/eviction paths — the pod
+    /// is about to leave the cluster, so `resize_landed`'s `mark_done`
+    /// will never run and the record would otherwise stay in-progress
+    /// forever.
+    pub(crate) fn clear_resize_state(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+    ) {
+        if let Some(svc) = w.services.get_mut(svc_name) {
+            if let Some(idx) = svc.pod_index(pod_id) {
+                svc.pods[idx].desired_limit = None;
+                if let Some(t) = svc.pods[idx].retry_timer.take() {
+                    eng.cancel(t);
+                }
+            }
+        }
+        if let Some(pod) = w.cluster.pod_mut(pod_id) {
+            pod.status.resize = None;
+        }
     }
 
     pub(crate) fn resize_landed(

@@ -9,7 +9,7 @@ use crate::knative::autoscaler::Autoscaler;
 use crate::knative::config::RevisionConfig;
 use crate::knative::queue_proxy::QueueProxy;
 use crate::policy::Policy;
-use crate::simclock::EventId;
+use crate::simclock::{EventId, SimTime};
 use crate::util::quantity::MilliCpu;
 use crate::workload::registry::WorkloadProfile;
 
@@ -27,8 +27,10 @@ pub struct ServicePod {
     /// Desired CPU limit the hooks most recently asked for; retried while
     /// the kubelet's per-pod resize pipeline is busy.
     pub desired_limit: Option<MilliCpu>,
-    /// A retry event is already scheduled.
-    pub retry_pending: bool,
+    /// The scheduled `ResizeRetry` event, if one is pending — stored as an
+    /// id so teardown/eviction can cancel it instead of leaving a stale
+    /// event to fire against a dead pod.
+    pub retry_timer: Option<EventId>,
     pub ready: bool,
     pub terminating: bool,
 }
@@ -41,7 +43,7 @@ impl ServicePod {
             proxy: QueueProxy::new(concurrency_limit, hooks),
             idle_timer: None,
             desired_limit: None,
-            retry_pending: false,
+            retry_timer: None,
             ready: false,
             terminating: false,
         }
@@ -66,6 +68,10 @@ pub struct Service {
     /// Count of ready, non-terminating pods, maintained on pod
     /// ready/terminating transitions.
     pub ready_count: u32,
+    /// KPA scale-out is suppressed until this time after an unschedulable
+    /// pod-start attempt — without it every concurrency tick re-attempts a
+    /// placement that cannot succeed.
+    pub sched_backoff_until: SimTime,
     /// Arrival predictor + speculation bookkeeping — present exactly when
     /// the policy is driver-managed ([`Policy::predictive`]).
     pub predictor: Option<ServicePredictor>,
@@ -95,6 +101,7 @@ impl Service {
             starting: 0,
             in_flight_pods: 0,
             ready_count: 0,
+            sched_backoff_until: SimTime::ZERO,
             predictor: policy
                 .predictive()
                 .then(|| ServicePredictor::new(forecast)),
@@ -218,7 +225,7 @@ fn node_pressure(fleet: &FleetAccounting, p: &ServicePod) -> u64 {
 /// Pods with a resize pending or retrying score worse: a request routed
 /// there queues behind the kubelet's per-pod resize serialization.
 fn resize_penalty(p: &ServicePod) -> u64 {
-    u64::from(p.desired_limit.is_some() || p.retry_pending)
+    u64::from(p.desired_limit.is_some() || p.retry_timer.is_some())
 }
 
 #[cfg(test)]

@@ -57,6 +57,10 @@ pub struct FleetConfig {
     /// Predictor/driver knobs for the forecast-driven policies (inert for
     /// the §3 triple; defaults keep them bit-identical).
     pub forecast: ForecastConfig,
+    /// Fault-injection schedule (crashes, stragglers, resize failures).
+    /// The default is inert: installation is a no-op and the run is
+    /// bit-identical to a build without the fault subsystem.
+    pub faults: crate::faults::FaultsConfig,
 }
 
 impl FleetConfig {
@@ -76,6 +80,7 @@ impl FleetConfig {
             knobs: ScaleKnobs::fleet_default(),
             hybrid: HybridWeights::default(),
             forecast: ForecastConfig::default(),
+            faults: crate::faults::FaultsConfig::default(),
         }
     }
 
@@ -107,6 +112,14 @@ pub struct FleetRow {
     /// Average committed CPU over the run, milliCPU (reservation cost).
     pub avg_committed_mcpu: f64,
     pub pods_created: u64,
+    /// Scheduling attempts that found no feasible node (fault runs).
+    pub pods_unschedulable: u64,
+    /// Pods killed by node crashes.
+    pub pods_evicted: u64,
+    /// Replacement pods started by crash recovery.
+    pub pods_rescheduled: u64,
+    /// Resize patches rejected by injected API failures.
+    pub resize_failures: u64,
 }
 
 /// Runs one policy over the configured fleet and aggregates every tenant's
@@ -151,6 +164,10 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
             sim.submit_at(start + t, &name);
         }
     }
+    // Install the fault schedule after the settle run so crash/straggler
+    // offsets are measured from the same origin as the arrival stream.
+    // Inert configs return before touching any state (bit-identity).
+    sim.world.install_faults(&mut sim.engine, &cfg.faults);
     sim.run();
 
     let now = sim.now();
@@ -184,6 +201,10 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
         mispredictions: mispred,
         avg_committed_mcpu: sim.world.metrics.committed_cpu.average_mcpu(now),
         pods_created: sim.world.metrics.pods_created,
+        pods_unschedulable: sim.world.metrics.pods_unschedulable,
+        pods_evicted: sim.world.metrics.pods_evicted,
+        pods_rescheduled: sim.world.metrics.pods_rescheduled,
+        resize_failures: sim.world.metrics.resize_failures,
     }
 }
 

@@ -1,0 +1,694 @@
+//! Fault injection: seeded, schedulable fault processes driven through the
+//! calendar-queue engine — node crash/recover with pod eviction and
+//! rescheduling, straggler windows that inflate a node's startup/resize
+//! pipelines, global startup inflation, and probabilistic resize failures.
+//!
+//! Faults are declared in the strict `faults` section of a
+//! [`ScenarioSpec`](crate::scenario::ScenarioSpec) and installed onto a
+//! built platform with [`Platform::install_faults`] after deployment
+//! settles, so the crash/straggler clock starts with the measured window.
+//! Everything stays deterministic and byte-identical across `--threads N`:
+//! fault schedules are fixed points on the virtual clock, and the only
+//! probabilistic fault (resize failure) draws from a dedicated RNG stream
+//! so a spec without faults leaves the platform's main RNG — and therefore
+//! every report byte — exactly as a fault-free build produced it
+//! (pinned by `tests/faults.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::pod::PodId;
+use crate::cluster::NodeId;
+use crate::coordinator::event::Event;
+use crate::coordinator::platform::{Eng, Platform};
+use crate::knative::activator::RequestId;
+use crate::simclock::SimTime;
+use crate::util::quantity::MilliCpu;
+use crate::util::rng::Rng;
+
+/// Salt XORed into the scenario seed for the dedicated fault RNG, so the
+/// resize-failure stream is decorrelated from the platform stream built
+/// from the same seed.
+const FAULT_RNG_SALT: u64 = 0xFA17_1D1C_ED5E_ED00;
+
+/// What happens to requests resident on a crashed node's pods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CrashRequestPolicy {
+    /// Fail them outright (clients see errors).
+    Fail,
+    /// Re-buffer them at the activator; they re-dispatch to surviving
+    /// capacity and only fail if the buffer overflows.
+    #[default]
+    Requeue,
+}
+
+impl CrashRequestPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CrashRequestPolicy::Fail => "fail",
+            CrashRequestPolicy::Requeue => "requeue",
+        }
+    }
+}
+
+impl std::str::FromStr for CrashRequestPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fail" => Ok(CrashRequestPolicy::Fail),
+            "requeue" => Ok(CrashRequestPolicy::Requeue),
+            other => Err(format!(
+                "unknown crash_requests policy '{other}' (expected 'fail' or 'requeue')"
+            )),
+        }
+    }
+}
+
+/// One node crash: the node goes down at `at` (killing every resident
+/// pod) and recovers `down` later, restarting with a cold image cache.
+/// Times are relative to fault installation (i.e. the start of the
+/// measured window).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeCrash {
+    pub node: u32,
+    pub at: SimTime,
+    pub down: SimTime,
+}
+
+/// A straggler window: between `from` and `until` the node's kubelet
+/// pipelines run slower by the given factors (startup plans and resize
+/// propagation respectively).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Straggler {
+    pub node: u32,
+    pub from: SimTime,
+    pub until: SimTime,
+    pub startup_factor: f64,
+    pub resize_factor: f64,
+}
+
+/// The scenario `faults` section (strictly parsed in
+/// [`scenario::spec`](crate::scenario)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    pub node_crashes: Vec<NodeCrash>,
+    /// Applied to in-flight requests on every crashed pod.
+    pub crash_requests: CrashRequestPolicy,
+    pub stragglers: Vec<Straggler>,
+    /// Global startup-time multiplier (1.0 = off) — container creation
+    /// under infrastructure-wide slowness. Composes multiplicatively with
+    /// per-node straggler windows.
+    pub startup_inflation: f64,
+    /// Probability each resize patch is rejected outright, beyond the
+    /// modelled conflict path. Drawn from the dedicated fault RNG.
+    pub resize_failure_p: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> FaultsConfig {
+        FaultsConfig {
+            node_crashes: Vec::new(),
+            crash_requests: CrashRequestPolicy::default(),
+            stragglers: Vec::new(),
+            startup_inflation: 1.0,
+            resize_failure_p: 0.0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// True when installing the config changes nothing: no events get
+    /// scheduled and every multiplier stays at 1 — the byte-identity
+    /// guard for fault-free specs.
+    pub fn is_inert(&self) -> bool {
+        self.node_crashes.is_empty()
+            && self.stragglers.is_empty()
+            && self.startup_inflation == 1.0
+            && self.resize_failure_p == 0.0
+    }
+
+    /// Highest node index referenced by any crash or straggler entry —
+    /// validated against the variant's topology at scenario compile time.
+    pub fn max_node(&self) -> Option<u32> {
+        self.node_crashes
+            .iter()
+            .map(|c| c.node)
+            .chain(self.stragglers.iter().map(|s| s.node))
+            .max()
+    }
+}
+
+/// Runtime fault state carried by every [`Platform`] (inert by default;
+/// [`Platform::install_faults`] arms it).
+#[derive(Debug)]
+pub struct FaultState {
+    /// Global startup multiplier from `startup_inflation`.
+    pub base_startup: f64,
+    /// Per-node straggler startup multipliers (1.0 = window closed).
+    straggler_startup: Vec<f64>,
+    /// Per-node straggler resize multipliers (1.0 = window closed).
+    straggler_resize: Vec<f64>,
+    /// Per-patch rejection probability.
+    pub resize_failure_p: f64,
+    pub crash_requests: CrashRequestPolicy,
+    /// Dedicated RNG for probabilistic faults. Creating it draws nothing,
+    /// and the resize path only consults it when `resize_failure_p > 0`,
+    /// so fault-free runs never touch it.
+    pub rng: Rng,
+}
+
+impl FaultState {
+    pub fn inert(nodes: usize, seed: u64) -> FaultState {
+        FaultState {
+            base_startup: 1.0,
+            straggler_startup: vec![1.0; nodes],
+            straggler_resize: vec![1.0; nodes],
+            resize_failure_p: 0.0,
+            crash_requests: CrashRequestPolicy::default(),
+            rng: Rng::new(seed ^ FAULT_RNG_SALT),
+        }
+    }
+
+    /// Effective startup multiplier for pods landing on `node`.
+    pub fn startup_factor(&self, node: NodeId) -> f64 {
+        self.base_startup
+            * self
+                .straggler_startup
+                .get(node.0 as usize)
+                .copied()
+                .unwrap_or(1.0)
+    }
+
+    /// Effective resize-propagation multiplier for pods on `node`.
+    pub fn resize_factor(&self, node: NodeId) -> f64 {
+        self.straggler_resize
+            .get(node.0 as usize)
+            .copied()
+            .unwrap_or(1.0)
+    }
+
+    fn set_straggler(&mut self, node: NodeId, startup: f64, resize: f64) {
+        let i = node.0 as usize;
+        if i < self.straggler_startup.len() {
+            self.straggler_startup[i] = startup;
+            self.straggler_resize[i] = resize;
+        }
+    }
+}
+
+/// Scales a latency by a straggler/inflation factor. Factor 1.0 returns
+/// the input bit-identically (no float round-trip) — the fault-free
+/// byte-identity guard on the startup and resize paths.
+pub fn inflate(t: SimTime, factor: f64) -> SimTime {
+    if factor == 1.0 {
+        t
+    } else {
+        SimTime::from_nanos((t.as_nanos() as f64 * factor) as u64)
+    }
+}
+
+impl Platform {
+    /// Arms the fault state and schedules every crash and straggler window
+    /// as typed events, with times relative to `eng.now()`. Call after the
+    /// deploy settle (and after arrival scheduling), before the measured
+    /// run. An inert config schedules nothing and touches nothing, so
+    /// event sequence numbers and both RNG streams stay exactly as without
+    /// a `faults` section.
+    pub fn install_faults(&mut self, eng: &mut Eng, cfg: &FaultsConfig) {
+        if cfg.is_inert() {
+            return;
+        }
+        self.faults.base_startup = cfg.startup_inflation;
+        self.faults.resize_failure_p = cfg.resize_failure_p;
+        self.faults.crash_requests = cfg.crash_requests;
+        let t0 = eng.now();
+        for c in &cfg.node_crashes {
+            eng.schedule_at(t0 + c.at, Event::NodeCrash { node: NodeId(c.node) });
+            eng.schedule_at(
+                t0 + c.at + c.down,
+                Event::NodeRecover { node: NodeId(c.node) },
+            );
+        }
+        for s in &cfg.stragglers {
+            eng.schedule_at(
+                t0 + s.from,
+                Event::StragglerStart {
+                    node: NodeId(s.node),
+                    startup_factor: s.startup_factor,
+                    resize_factor: s.resize_factor,
+                },
+            );
+            eng.schedule_at(t0 + s.until, Event::StragglerEnd { node: NodeId(s.node) });
+        }
+    }
+
+    /// The node goes down: every resident pod dies. Starting pods unwind
+    /// their startup pipeline; ready pods are evicted (in-flight requests
+    /// failed or re-buffered per the crash policy). Terminating pods are
+    /// left to their already-scheduled teardown — they are idle by
+    /// construction (only idle pods terminate), and evicting them would
+    /// double-count the orderly teardown. The recovery half then
+    /// reschedules one replacement per lost pod through the ordinary
+    /// [`Scheduler::pick`](crate::cluster::Scheduler) path onto surviving
+    /// capacity and drains requeued requests.
+    pub(crate) fn node_crash(w: &mut Platform, eng: &mut Eng, node: NodeId) {
+        if node.0 as usize >= w.cluster.nodes().len() || !w.cluster.node(node).up() {
+            return;
+        }
+        w.cluster.node_mut(node).set_up(false);
+
+        // Lost capacity per service — BTreeMap so the reschedule sweep is
+        // deterministic regardless of which pods died.
+        let mut lost: BTreeMap<String, usize> = BTreeMap::new();
+
+        // Starting pods: cancel the in-flight PodReady, unwind `starting`.
+        let doomed: Vec<PodId> = w
+            .starting_pods
+            .iter()
+            .filter(|(_, s)| s.node == node)
+            .map(|(id, _)| *id)
+            .collect();
+        for pod_id in doomed {
+            let entry = w.starting_pods.remove(&pod_id).unwrap();
+            eng.cancel(entry.ready_event);
+            if let Some(svc) = w.services.get_mut(&entry.service) {
+                svc.starting = svc.starting.saturating_sub(1);
+            }
+            w.cluster.delete_pod(pod_id);
+            w.metrics.pods_evicted += 1;
+            *lost.entry(entry.service).or_default() += 1;
+        }
+
+        // Ready pods, service by service (BTreeMap order).
+        let names: Vec<String> = w.services.keys().cloned().collect();
+        let policy = w.faults.crash_requests;
+        for name in &names {
+            let victims: Vec<PodId> = w.services[name]
+                .pods
+                .iter()
+                .filter(|p| p.node == Some(node) && !p.terminating)
+                .map(|p| p.pod)
+                .collect();
+            if victims.is_empty() {
+                continue;
+            }
+            for pod_id in &victims {
+                Self::evict_pod(w, eng, name, *pod_id, policy);
+            }
+            *lost.entry(name.clone()).or_default() += victims.len();
+        }
+        Self::committed_changed(w, eng);
+
+        // Recovery half: reschedule replacements and drain requeued
+        // requests onto whatever capacity survives (a request re-buffered
+        // above is dispatched here if a surviving pod has a free slot, or
+        // when its replacement pod comes up).
+        for (name, n) in &lost {
+            for _ in 0..*n {
+                if Self::start_pod(w, eng, name, true) {
+                    w.metrics.pods_rescheduled += 1;
+                }
+            }
+            Self::drain_activator(w, eng, name);
+        }
+    }
+
+    /// Kills one ready pod of `svc_name`: in-flight requests are detached
+    /// and failed or re-buffered, pod-scoped timers cancelled, the
+    /// in-flight resize record cleared, and cluster/fleet/service state
+    /// unwound. The caller re-schedules replacements.
+    pub(crate) fn evict_pod(
+        w: &mut Platform,
+        eng: &mut Eng,
+        svc_name: &str,
+        pod_id: PodId,
+        policy: CrashRequestPolicy,
+    ) {
+        let orphans: Vec<RequestId> = {
+            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(idx) = svc.pod_index(pod_id) else { return };
+            let sp = &mut svc.pods[idx];
+            if let Some(t) = sp.idle_timer.take() {
+                eng.cancel(t);
+            }
+            sp.proxy.all_requests()
+        };
+        Self::clear_resize_state(w, eng, svc_name, pod_id);
+        // Detach the orphans from the dead pod: their partial execution is
+        // lost (serverless at-most-once inside the container — a requeue
+        // restarts from scratch on another pod).
+        for req in &orphans {
+            if let Some(r) = w.requests.get_mut(req) {
+                if let Some(ev) = r.completion.take() {
+                    eng.cancel(ev);
+                }
+                r.pod = None;
+                r.exec = None;
+                r.share = MilliCpu::ZERO;
+            }
+        }
+        {
+            let svc = w.services.get_mut(svc_name).unwrap();
+            svc.in_flight_pods = svc.in_flight_pods.saturating_sub(orphans.len() as u32);
+            if let Some(idx) = svc.pod_index(pod_id) {
+                let sp = svc.pods.remove(idx);
+                if sp.ready && !sp.terminating {
+                    svc.ready_count = svc.ready_count.saturating_sub(1);
+                }
+            }
+        }
+        // `pod_gone` folds residual in-flight/busy/committed counters out
+        // of the per-node accounting in one step.
+        w.fleet.pod_gone(pod_id);
+        w.cluster.delete_pod(pod_id);
+        w.metrics.pods_evicted += 1;
+        let now = eng.now();
+        for req in orphans {
+            match policy {
+                CrashRequestPolicy::Fail => Self::fail_request(w, eng, req),
+                CrashRequestPolicy::Requeue => {
+                    let requeued = w
+                        .services
+                        .get_mut(svc_name)
+                        .map(|svc| svc.activator.buffer(req, now).is_ok())
+                        .unwrap_or(false);
+                    if !requeued {
+                        Self::fail_request(w, eng, req);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The node comes back: serving again, but with a cold image cache —
+    /// the next pod placed there pays the image pull (the paper's `kind
+    /// load` side-loading happened at deploy time and a restarted node has
+    /// lost it). Buffered demand gets a scale-out pass immediately rather
+    /// than waiting for the next arrival tick.
+    pub(crate) fn node_recover(w: &mut Platform, eng: &mut Eng, node: NodeId) {
+        if node.0 as usize >= w.cluster.nodes().len() || w.cluster.node(node).up() {
+            return;
+        }
+        {
+            let n = w.cluster.node_mut(node);
+            n.set_up(true);
+            n.clear_image_cache();
+        }
+        let names: Vec<String> = w.services.keys().cloned().collect();
+        for name in &names {
+            Self::maybe_scale_up(w, eng, name);
+            Self::drain_activator(w, eng, name);
+        }
+    }
+
+    /// A straggler window opens: the node's pipelines slow down.
+    pub(crate) fn straggler_start(
+        w: &mut Platform,
+        _eng: &mut Eng,
+        node: NodeId,
+        startup_factor: f64,
+        resize_factor: f64,
+    ) {
+        w.faults.set_straggler(node, startup_factor, resize_factor);
+    }
+
+    /// The straggler window closes: factors return to 1.
+    pub(crate) fn straggler_end(w: &mut Platform, _eng: &mut Eng, node: NodeId) {
+        w.faults.set_straggler(node, 1.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::Topology;
+    use crate::coordinator::platform::Simulation;
+    use crate::policy::Policy;
+    use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+    #[test]
+    fn inert_detection_and_max_node() {
+        let cfg = FaultsConfig::default();
+        assert!(cfg.is_inert());
+        assert_eq!(cfg.max_node(), None);
+        let armed = FaultsConfig {
+            node_crashes: vec![NodeCrash {
+                node: 3,
+                at: SimTime::from_secs(1),
+                down: SimTime::from_secs(2),
+            }],
+            stragglers: vec![Straggler {
+                node: 7,
+                from: SimTime::ZERO,
+                until: SimTime::from_secs(9),
+                startup_factor: 2.0,
+                resize_factor: 2.0,
+            }],
+            ..FaultsConfig::default()
+        };
+        assert!(!armed.is_inert());
+        assert_eq!(armed.max_node(), Some(7));
+        assert!(!FaultsConfig {
+            startup_inflation: 1.5,
+            ..FaultsConfig::default()
+        }
+        .is_inert());
+        assert!(!FaultsConfig {
+            resize_failure_p: 0.1,
+            ..FaultsConfig::default()
+        }
+        .is_inert());
+    }
+
+    #[test]
+    fn inflate_is_identity_at_factor_one() {
+        let t = SimTime::from_nanos(123_456_789);
+        assert_eq!(inflate(t, 1.0), t);
+        assert_eq!(inflate(t, 2.0), SimTime::from_nanos(246_913_578));
+        assert_eq!(inflate(SimTime::ZERO, 3.5), SimTime::ZERO);
+    }
+
+    /// Two warm services on a 2-node fleet (LeastAllocated spreads them);
+    /// node 0 crashes and both state unwinding and rescheduling must hold.
+    fn crashed_sim(kind: WorkloadKind) -> Simulation {
+        let mut sim = Simulation::fleet(Topology::uniform_paper(2), 11);
+        for i in 0..2 {
+            sim.deploy(
+                &format!("svc-{i}"),
+                WorkloadProfile::paper(kind),
+                Policy::Warm,
+            );
+        }
+        sim.run(); // settle: svc-0 → node 0, svc-1 → node 1
+        sim
+    }
+
+    #[test]
+    fn crash_evicts_reschedules_and_recovers() {
+        let mut sim = crashed_sim(WorkloadKind::HelloWorld);
+        assert_eq!(
+            sim.world.services["svc-0"].pods[0].node,
+            Some(crate::cluster::NodeId(0))
+        );
+        let cfg = FaultsConfig {
+            node_crashes: vec![NodeCrash {
+                node: 0,
+                at: SimTime::from_secs(1),
+                down: SimTime::from_secs(60),
+            }],
+            ..FaultsConfig::default()
+        };
+        sim.world.install_faults(&mut sim.engine, &cfg);
+        sim.run_until(sim.now() + SimTime::from_secs(30));
+
+        // Node 0 is down; its pod was evicted and replaced on node 1.
+        assert!(!sim.world.cluster.node(crate::cluster::NodeId(0)).up());
+        assert_eq!(sim.world.metrics.pods_evicted, 1);
+        assert_eq!(sim.world.metrics.pods_rescheduled, 1);
+        assert_eq!(sim.world.services["svc-0"].ready_pods(), 1);
+        assert_eq!(
+            sim.world.services["svc-0"].pods[0].node,
+            Some(crate::cluster::NodeId(1))
+        );
+        // The orderly-teardown counter is untouched by eviction.
+        assert_eq!(sim.world.metrics.pods_deleted, 0);
+
+        // Recovery: the node serves again with a cold image cache.
+        sim.run();
+        let node0 = sim.world.cluster.node(crate::cluster::NodeId(0));
+        assert!(node0.up());
+        let image = sim.world.services["svc-0"].profile.image.clone();
+        assert!(!node0.image_cached(&image));
+    }
+
+    #[test]
+    fn crash_requeues_in_flight_requests_to_survivors() {
+        let mut sim = crashed_sim(WorkloadKind::Cpu);
+        sim.submit("svc-0");
+        // Mid-execution (cpu runs ~2.5 s) the pod's node crashes.
+        sim.run_until(sim.now() + SimTime::from_millis(500));
+        Platform::node_crash(&mut sim.world, &mut sim.engine, crate::cluster::NodeId(0));
+        sim.run_to_quiescence();
+        let m = sim.world.metrics.service_ref("svc-0").unwrap();
+        assert_eq!(m.failed, 0, "requeue policy must not fail the request");
+        assert_eq!(m.completed, 1);
+        assert_eq!(sim.world.metrics.pods_evicted, 1);
+    }
+
+    #[test]
+    fn crash_fails_in_flight_requests_under_fail_policy() {
+        let mut sim = crashed_sim(WorkloadKind::Cpu);
+        sim.world.faults.crash_requests = CrashRequestPolicy::Fail;
+        sim.submit("svc-0");
+        sim.run_until(sim.now() + SimTime::from_millis(500));
+        Platform::node_crash(&mut sim.world, &mut sim.engine, crate::cluster::NodeId(0));
+        sim.run_to_quiescence();
+        let m = sim.world.metrics.service_ref("svc-0").unwrap();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 0);
+    }
+
+    /// A crash mid-startup cancels the pending PodReady, unwinds
+    /// `starting`, and reschedules the pod so the buffered cold-start
+    /// request still completes.
+    #[test]
+    fn crash_during_startup_unwinds_and_reschedules() {
+        let mut sim = Simulation::fleet(Topology::uniform_paper(2), 13);
+        sim.deploy(
+            "fn",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::Cold,
+        );
+        sim.submit("fn");
+        // Let the cold start begin its pipeline (≈1.2 s) without finishing.
+        sim.run_until(sim.now() + SimTime::from_millis(300));
+        assert_eq!(sim.world.services["fn"].starting, 1);
+        let node = sim.world.starting_pods.values().next().unwrap().node;
+        let before = sim.engine.pending();
+        Platform::node_crash(&mut sim.world, &mut sim.engine, node);
+        assert!(sim.engine.pending() <= before, "PodReady cancelled");
+        assert_eq!(sim.world.services["fn"].starting, 1, "replacement started");
+        assert!(sim.world.starting_pods.len() == 1);
+        sim.run_to_quiescence();
+        let m = sim.world.metrics.service_ref("fn").unwrap();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn straggler_window_inflates_cold_start() {
+        let cold_latency = |straggle: bool| {
+            let mut sim = Simulation::fleet(Topology::uniform_paper(1), 7);
+            sim.deploy(
+                "fn",
+                WorkloadProfile::paper(WorkloadKind::HelloWorld),
+                Policy::Cold,
+            );
+            if straggle {
+                Platform::straggler_start(
+                    &mut sim.world,
+                    &mut sim.engine,
+                    crate::cluster::NodeId(0),
+                    4.0,
+                    1.0,
+                );
+            }
+            sim.submit("fn");
+            sim.run_to_quiescence();
+            sim.world
+                .metrics
+                .service_ref("fn")
+                .unwrap()
+                .latency_ms
+                .mean()
+        };
+        let normal = cold_latency(false);
+        let straggled = cold_latency(true);
+        assert!(
+            straggled > normal * 2.0,
+            "straggler 4× must dominate: {normal} vs {straggled}"
+        );
+    }
+
+    #[test]
+    fn resize_failures_reject_patches_and_count() {
+        let mut sim = Simulation::fleet(Topology::uniform_paper(1), 7);
+        sim.deploy(
+            "fn",
+            WorkloadProfile::paper(WorkloadKind::HelloWorld),
+            Policy::InPlace,
+        );
+        sim.world.faults.resize_failure_p = 1.0;
+        sim.run(); // the post-ready park patch is rejected
+        assert!(sim.world.metrics.resize_failures >= 1);
+        assert_eq!(sim.world.metrics.resizes_accepted, 0);
+        // The pod keeps its current (serving) allocation.
+        let pod = sim.world.services["fn"].pods[0].pod;
+        assert_eq!(
+            sim.world.cluster.pod(pod).unwrap().status.applied_cpu_limit,
+            MilliCpu(1000)
+        );
+        // No desire left dangling.
+        assert!(sim.world.services["fn"].pods[0].desired_limit.is_none());
+    }
+
+    #[test]
+    fn crash_runs_are_deterministic() {
+        let run = || {
+            let mut sim = crashed_sim(WorkloadKind::Cpu);
+            let cfg = FaultsConfig {
+                node_crashes: vec![NodeCrash {
+                    node: 0,
+                    at: SimTime::from_secs(1),
+                    down: SimTime::from_secs(10),
+                }],
+                crash_requests: CrashRequestPolicy::Requeue,
+                ..FaultsConfig::default()
+            };
+            sim.world.install_faults(&mut sim.engine, &cfg);
+            for _ in 0..3 {
+                sim.submit("svc-0");
+            }
+            sim.run_to_quiescence();
+            sim.run();
+            (
+                sim.world
+                    .metrics
+                    .service_ref("svc-0")
+                    .unwrap()
+                    .latency_ms
+                    .mean()
+                    .to_bits(),
+                sim.world.metrics.pods_evicted,
+                sim.world.metrics.pods_rescheduled,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    /// Installing an inert config must change nothing at all: same event
+    /// count, same metrics bits as never calling install_faults.
+    #[test]
+    fn inert_install_is_a_true_noop() {
+        let run = |install: bool| {
+            let mut sim = crashed_sim(WorkloadKind::HelloWorld);
+            if install {
+                let cfg = FaultsConfig::default();
+                sim.world.install_faults(&mut sim.engine, &cfg);
+            }
+            sim.submit("svc-0");
+            sim.run_to_quiescence();
+            (
+                sim.engine.processed(),
+                sim.world
+                    .metrics
+                    .service_ref("svc-0")
+                    .unwrap()
+                    .latency_ms
+                    .mean()
+                    .to_bits(),
+            )
+        };
+        assert_eq!(run(false), run(true));
+    }
+}

@@ -139,6 +139,13 @@ impl QueueProxy {
         &self.active
     }
 
+    /// Every request the proxy holds — active first, then queued, in
+    /// admission order. Pod-death paths (node crash eviction) use this to
+    /// fail or re-buffer the full resident set deterministically.
+    pub fn all_requests(&self) -> Vec<RequestId> {
+        self.active.iter().chain(self.queue.iter()).copied().collect()
+    }
+
     /// True when the pod is idle (hook layer decides to scale down).
     pub fn idle(&self) -> bool {
         self.active.is_empty() && self.queue.is_empty()
@@ -170,6 +177,19 @@ mod tests {
         assert!(q.queued_count() == 0);
         assert_eq!(q.complete(RequestId(2)), None);
         assert!(q.idle());
+    }
+
+    #[test]
+    fn all_requests_lists_active_then_queued() {
+        let mut q = QueueProxy::new(2, false);
+        q.offer(RequestId(1));
+        q.offer(RequestId(2));
+        q.offer(RequestId(3)); // queued behind the limit
+        assert_eq!(
+            q.all_requests(),
+            vec![RequestId(1), RequestId(2), RequestId(3)]
+        );
+        assert!(QueueProxy::new(1, false).all_requests().is_empty());
     }
 
     #[test]

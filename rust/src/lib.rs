@@ -20,6 +20,7 @@ pub mod cgroup;
 pub mod cluster;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod forecast;
 pub mod knative;
 pub mod loadgen;

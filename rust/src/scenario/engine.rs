@@ -232,6 +232,22 @@ fn prepare_variant(label: String, spec: ScenarioSpec) -> Result<PreparedVariant,
             ),
         ));
     }
+    // Fault schedules name nodes by index; a crash or straggler aimed past
+    // the variant's topology would silently never fire. Reject it
+    // (sweeps over topology are checked per expanded variant).
+    if let Some(max) = spec.faults.max_node() {
+        let nodes = spec.topology.nodes();
+        if max as usize >= nodes {
+            return Err(SpecError::invalid(
+                "faults",
+                format!(
+                    "fault targets node {max} but the topology has {nodes} \
+                     node(s) (indices 0..={})",
+                    nodes.saturating_sub(1)
+                ),
+            ));
+        }
+    }
     if let WorkloadSource::ClosedLoop { .. } = &spec.workload {
         if spec.topology != TopologySpec::Paper {
             return Err(SpecError::invalid(
@@ -267,6 +283,17 @@ fn prepare_variant(label: String, spec: ScenarioSpec) -> Result<PreparedVariant,
                 "closed-loop scenarios run the paper's per-policy revision \
                  configs; forecast knobs (and sweeps over them) do not \
                  apply — remove them or use a synthetic/trace source",
+            ));
+        }
+        // The rig drives the coordinator directly (no fleet settle phase
+        // to install a fault schedule into); rather than silently ignore
+        // a faults section, reject it.
+        if spec.faults != crate::faults::FaultsConfig::default() {
+            return Err(SpecError::invalid(
+                "faults",
+                "closed-loop scenarios run the paper's fault-free rig; \
+                 fault injection (and sweeps over it) does not apply — \
+                 remove it or use a synthetic/trace source",
             ));
         }
         // Routing is provably a no-op on the single-pod paper rig (the
@@ -370,6 +397,7 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 knobs: v.autoscaler.clone(),
                 hybrid: v.hybrid,
                 forecast: v.forecast,
+                faults: v.faults.clone(),
             };
             let f = fleet::run_policy(&cfg, job.policy);
             vec![ScenarioRow {
@@ -392,6 +420,10 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 mispredictions: f.mispredictions,
                 avg_committed_mcpu: f.avg_committed_mcpu,
                 pods_created: f.pods_created,
+                pods_unschedulable: f.pods_unschedulable,
+                pods_evicted: f.pods_evicted,
+                pods_rescheduled: f.pods_rescheduled,
+                resize_failures: f.resize_failures,
             }]
         }
         WorkloadSource::AzureGenerator { .. } | WorkloadSource::TraceFile { .. } => {
@@ -409,6 +441,7 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 knobs: v.autoscaler.clone(),
                 hybrid: v.hybrid,
                 forecast: v.forecast,
+                faults: v.faults.clone(),
                 seed,
             };
             let r = replay_with(trace, &cfg);
@@ -432,6 +465,10 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 mispredictions: r.mispredictions,
                 avg_committed_mcpu: r.avg_committed_mcpu,
                 pods_created: r.pods_created,
+                pods_unschedulable: r.pods_unschedulable,
+                pods_evicted: r.pods_evicted,
+                pods_rescheduled: r.pods_rescheduled,
+                resize_failures: r.resize_failures,
             }]
         }
         WorkloadSource::ClosedLoop { iterations, think_s } => {
@@ -465,8 +502,13 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                         mispredictions: r.mispredictions,
                         avg_committed_mcpu: r.avg_committed_mcpu,
                         // The rig keeps one min-scale pod; churn is
-                        // not a closed-loop metric.
+                        // not a closed-loop metric, and faults are
+                        // rejected on this source at prepare time.
                         pods_created: 0,
+                        pods_unschedulable: 0,
+                        pods_evicted: 0,
+                        pods_rescheduled: 0,
+                        resize_failures: 0,
                     }
                 })
                 .collect()
@@ -486,6 +528,7 @@ fn build_trace(v: &ScenarioSpec, rep: u32) -> Result<(Vec<TraceEvent>, usize), S
             trough_ratio,
             period_s,
             burst_p,
+            pattern,
         } => {
             let cfg = TraceConfig {
                 functions: *functions,
@@ -495,6 +538,7 @@ fn build_trace(v: &ScenarioSpec, rep: u32) -> Result<(Vec<TraceEvent>, usize), S
                 period: SimTime::from_secs_f64(*period_s),
                 horizon: SimTime::from_secs_f64(*horizon_s),
                 burst_p: *burst_p,
+                pattern: *pattern,
                 seed: v.seed.wrapping_add(u64::from(rep)),
             };
             Ok((TraceGenerator::new(cfg).generate(), *functions))
@@ -665,6 +709,75 @@ mod tests {
         .unwrap();
         let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
         assert!(e.contains("forecast") && e.contains("do not apply"), "{e}");
+    }
+
+    /// A fault aimed past the variant's topology is rejected instead of
+    /// silently never firing.
+    #[test]
+    fn fault_node_out_of_range_is_rejected() {
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t",
+                "workload":{"type":"synthetic","services":2,
+                            "rate_per_service":0.1,"horizon_s":10},
+                "topology":{"kind":"uniform","nodes":2},
+                "faults":{"node_crashes":[{"node":5,"at_s":1,"down_s":5}]}}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("node 5") && e.contains("0..=1"), "{e}");
+        // Stragglers are checked through the same path.
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t",
+                "workload":{"type":"synthetic","services":2,
+                            "rate_per_service":0.1,"horizon_s":10},
+                "faults":{"stragglers":[{"node":1,"until_s":30}]}}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("node 1") && e.contains("1 node"), "{e}");
+    }
+
+    /// The closed-loop rig has no fault installation point; a faults
+    /// section is rejected rather than silently ignored.
+    #[test]
+    fn closed_loop_rejects_faults() {
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"closed-loop","iterations":2},
+                "faults":{"resize_failure_p":0.5}}"#,
+        )
+        .unwrap();
+        let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+        assert!(e.contains("fault") && e.contains("does not apply"), "{e}");
+    }
+
+    /// A crash scenario runs end to end: the fault fires mid-run, the
+    /// recovery counters land in the rows, and the document emits (and
+    /// validates) under the fault schema version.
+    #[test]
+    fn crash_scenario_runs_end_to_end_with_counters() {
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"crash",
+                "workload":{"type":"synthetic","services":4,
+                            "rate_per_service":0.3,"horizon_s":60},
+                "topology":{"kind":"uniform","nodes":2},
+                "policies":["warm"],
+                "faults":{"node_crashes":[{"node":1,"at_s":10,"down_s":30}]}}"#,
+        )
+        .unwrap();
+        let report = ScenarioEngine::run(&spec).unwrap();
+        assert_eq!(report.rows.len(), 1);
+        let r = &report.rows[0];
+        assert!(r.pods_evicted > 0, "crash must evict the node's pods");
+        assert_eq!(
+            r.pods_rescheduled, r.pods_evicted,
+            "warm pods reschedule onto the survivor"
+        );
+        assert!(r.completed > 0);
+        let j = report.to_json();
+        ScenarioReport::validate(&j).unwrap();
+        assert!(j
+            .to_string_pretty()
+            .contains("\"schema_version\": 3"));
     }
 
     /// A pool that outgrows the scale ceiling is rejected instead of

@@ -63,6 +63,7 @@ pub fn fleet(
         autoscaler: ScaleKnobs::fleet_default(),
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
+        faults: crate::faults::FaultsConfig::default(),
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -83,6 +84,7 @@ pub fn trace(functions: usize, seconds: u64, rate: f64, seed: u64) -> ScenarioSp
             trough_ratio: 0.15,
             period_s: 600.0,
             burst_p: 0.25,
+            pattern: crate::trace::generator::RatePattern::Diurnal,
         },
         topology: TopologySpec::Paper,
         policies: Policy::PAPER.to_vec(),
@@ -90,6 +92,7 @@ pub fn trace(functions: usize, seconds: u64, rate: f64, seed: u64) -> ScenarioSp
         autoscaler: ScaleKnobs::trace_default(),
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
+        faults: crate::faults::FaultsConfig::default(),
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -112,6 +115,7 @@ pub fn paper(reps: u32, seed: u64) -> ScenarioSpec {
         autoscaler: ScaleKnobs::fleet_default(),
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
+        faults: crate::faults::FaultsConfig::default(),
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -135,6 +139,7 @@ pub fn smoke() -> ScenarioSpec {
         autoscaler: ScaleKnobs::fleet_default(),
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
+        faults: crate::faults::FaultsConfig::default(),
         seed: 42,
         reps: 1,
         sweep: Vec::new(),

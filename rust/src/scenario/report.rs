@@ -17,6 +17,37 @@ use crate::util::table::{fmt_ms, Table};
 /// (`speculative_resizes`, `mispredictions`).
 pub const SCHEMA_VERSION: u64 = 2;
 
+/// Schema version emitted by fault-injection runs: rows additionally carry
+/// the fault counters (`pods_unschedulable`, `pods_evicted`,
+/// `pods_rescheduled`, `resize_failures`). A spec without a `faults`
+/// section (and without fault sweep axes) still emits
+/// [`SCHEMA_VERSION`]-versioned documents byte-identical to pre-fault
+/// builds; `validate` accepts both versions.
+pub const SCHEMA_VERSION_FAULTS: u64 = 3;
+
+/// Sweep axes that inject faults without a `faults` section in the spec
+/// echo (`resize_failure_p` can be swept over an otherwise fault-free
+/// base spec).
+const FAULT_SWEEP_AXES: [&str; 3] = ["resize_failure_p", "crash_down_s", "straggler_factor"];
+
+/// True when the spec echo configures fault injection — the condition
+/// under which the report upgrades to [`SCHEMA_VERSION_FAULTS`] and the
+/// table grows the fault columns.
+fn spec_has_faults(spec: &Json) -> bool {
+    if spec.get("faults").is_some() {
+        return true;
+    }
+    spec.get("sweep")
+        .and_then(Json::as_arr)
+        .is_some_and(|sweeps| {
+            sweeps.iter().any(|s| {
+                s.get("param")
+                    .and_then(Json::as_str)
+                    .is_some_and(|p| FAULT_SWEEP_AXES.contains(&p))
+            })
+        })
+}
+
 /// One run's aggregate metrics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioRow {
@@ -46,6 +77,15 @@ pub struct ScenarioRow {
     pub mispredictions: u64,
     pub avg_committed_mcpu: f64,
     pub pods_created: u64,
+    /// Scheduling attempts that found no feasible node. Serialized only in
+    /// [`SCHEMA_VERSION_FAULTS`] documents (fault specs); zero otherwise.
+    pub pods_unschedulable: u64,
+    /// Pods killed by injected node crashes.
+    pub pods_evicted: u64,
+    /// Replacement pods started by crash recovery.
+    pub pods_rescheduled: u64,
+    /// Resize patches rejected by injected API failures.
+    pub resize_failures: u64,
 }
 
 impl ScenarioRow {
@@ -68,11 +108,17 @@ impl ScenarioRow {
             mispredictions: self.mispredictions,
             avg_committed_mcpu: self.avg_committed_mcpu,
             pods_created: self.pods_created,
+            pods_unschedulable: self.pods_unschedulable,
+            pods_evicted: self.pods_evicted,
+            pods_rescheduled: self.pods_rescheduled,
+            resize_failures: self.resize_failures,
         }
     }
 
-    fn to_json(&self) -> Json {
-        Json::obj(vec![
+    /// `with_faults` selects the schema: v3 rows append the fault
+    /// counters, v2 rows stay byte-identical to pre-fault emissions.
+    fn to_json(&self, with_faults: bool) -> Json {
+        let mut fields = vec![
             ("scenario", self.scenario.as_str().into()),
             ("variant", self.variant.as_str().into()),
             ("workload", self.workload.as_str().into()),
@@ -92,7 +138,16 @@ impl ScenarioRow {
             ("mispredictions", self.mispredictions.into()),
             ("avg_committed_mcpu", self.avg_committed_mcpu.into()),
             ("pods_created", self.pods_created.into()),
-        ])
+        ];
+        if with_faults {
+            fields.extend([
+                ("pods_unschedulable", self.pods_unschedulable.into()),
+                ("pods_evicted", self.pods_evicted.into()),
+                ("pods_rescheduled", self.pods_rescheduled.into()),
+                ("resize_failures", self.resize_failures.into()),
+            ]);
+        }
+        Json::obj(fields)
     }
 
     fn from_json(j: &Json, path: &str) -> Result<ScenarioRow, String> {
@@ -108,6 +163,11 @@ impl ScenarioRow {
             j.req_str(k)
                 .map(str::to_string)
                 .map_err(|e| format!("{path}.{k}: {e}"))
+        };
+        // Fault counters only exist in v3 rows; absent (v2) means zero.
+        let opt_u64 = |k: &str| match j.get(k) {
+            None => Ok(0u64),
+            Some(_) => req_u64(k),
         };
         Ok(ScenarioRow {
             scenario: req_str("scenario")?,
@@ -133,6 +193,10 @@ impl ScenarioRow {
             mispredictions: req_u64("mispredictions")?,
             avg_committed_mcpu: req_f64("avg_committed_mcpu")?,
             pods_created: req_u64("pods_created")?,
+            pods_unschedulable: opt_u64("pods_unschedulable")?,
+            pods_evicted: opt_u64("pods_evicted")?,
+            pods_rescheduled: opt_u64("pods_rescheduled")?,
+            resize_failures: opt_u64("resize_failures")?,
         })
     }
 }
@@ -148,11 +212,22 @@ pub struct ScenarioReport {
 
 impl ScenarioReport {
     pub fn to_json(&self) -> Json {
+        // A fault spec upgrades the whole document to the fault schema;
+        // anything else emits exactly the pre-fault v2 bytes.
+        let with_faults = spec_has_faults(&self.spec);
+        let version = if with_faults {
+            SCHEMA_VERSION_FAULTS
+        } else {
+            SCHEMA_VERSION
+        };
         Json::obj(vec![
-            ("schema_version", SCHEMA_VERSION.into()),
+            ("schema_version", version.into()),
             ("name", self.name.as_str().into()),
             ("spec", self.spec.clone()),
-            ("rows", Json::arr(self.rows.iter().map(ScenarioRow::to_json))),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| r.to_json(with_faults))),
+            ),
         ])
     }
 
@@ -179,9 +254,10 @@ impl ScenarioReport {
         let version = j
             .req_u64("schema_version")
             .map_err(|e| e.to_string())?;
-        if version != SCHEMA_VERSION {
+        if version != SCHEMA_VERSION && version != SCHEMA_VERSION_FAULTS {
             return Err(format!(
-                "schema_version {version} unsupported (expected {SCHEMA_VERSION})"
+                "schema_version {version} unsupported (expected {SCHEMA_VERSION} \
+                 or {SCHEMA_VERSION_FAULTS})"
             ));
         }
         let spec = j
@@ -226,6 +302,10 @@ impl ScenarioReport {
         let swept = self.rows.iter().any(|r| !r.variant.is_empty());
         let multi_rep = self.rows.iter().any(|r| r.rep > 0);
         let speculative = self.rows.iter().any(|r| r.policy.predictive());
+        // Like the speculation columns: keyed on the spec, not on observed
+        // counts, so a fault run that happened to hurt nothing still shows
+        // its zeros and a fault-free spec renders exactly as before.
+        let faulty = spec_has_faults(&self.spec);
         let mut headers = Vec::new();
         if swept {
             headers.push("Variant");
@@ -246,6 +326,9 @@ impl ScenarioReport {
         ]);
         if speculative {
             headers.extend(["Spec", "Miss"]);
+        }
+        if faulty {
+            headers.extend(["Unsched", "Evict", "Resched", "RszFail"]);
         }
         headers.extend(["Committed (mCPU)", "Pods"]);
         let mut t = Table::new(headers).title(format!("Scenario: {}", self.name));
@@ -271,6 +354,12 @@ impl ScenarioReport {
             if speculative {
                 cells.push(r.speculative_resizes.to_string());
                 cells.push(r.mispredictions.to_string());
+            }
+            if faulty {
+                cells.push(r.pods_unschedulable.to_string());
+                cells.push(r.pods_evicted.to_string());
+                cells.push(r.pods_rescheduled.to_string());
+                cells.push(r.resize_failures.to_string());
             }
             cells.extend([
                 format!("{:.0}", r.avg_committed_mcpu),
@@ -307,6 +396,10 @@ mod tests {
             mispredictions: 2,
             avg_committed_mcpu: 123.4,
             pods_created: 8,
+            pods_unschedulable: 0,
+            pods_evicted: 0,
+            pods_rescheduled: 0,
+            resize_failures: 0,
         }
     }
 
@@ -399,6 +492,74 @@ mod tests {
         assert_eq!(f.pods_created, 8);
         assert_eq!(f.speculative_resizes, 7);
         assert_eq!(f.mispredictions, 2);
+    }
+
+    /// A spec with a `faults` section (or a fault sweep axis) upgrades the
+    /// document to v3 with the fault counters; a fault-free spec emits v2
+    /// bytes with no trace of them. Both versions load back.
+    #[test]
+    fn fault_specs_emit_v3_and_plain_specs_stay_v2() {
+        let plain = report();
+        let text = plain.to_json().to_string_pretty();
+        assert!(text.contains("\"schema_version\": 2"), "{text}");
+        assert!(!text.contains("pods_evicted"), "{text}");
+
+        let mut faulty = report();
+        faulty.spec = Json::obj(vec![
+            ("name", "t".into()),
+            ("faults", Json::obj(vec![])),
+        ]);
+        faulty.rows[0].pods_evicted = 3;
+        faulty.rows[0].pods_rescheduled = 3;
+        faulty.rows[0].resize_failures = 1;
+        let text = faulty.to_json().to_string_pretty();
+        assert!(text.contains("\"schema_version\": 3"), "{text}");
+        assert!(text.contains("\"pods_evicted\": 3"), "{text}");
+        let back = ScenarioReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, faulty);
+
+        // A fault sweep axis over a fault-free base spec also upgrades
+        // (its variants inject even though the base section is absent).
+        let mut swept = report();
+        swept.spec = Json::obj(vec![
+            ("name", "t".into()),
+            (
+                "sweep",
+                Json::arr([Json::obj(vec![
+                    ("param", "resize_failure_p".into()),
+                    ("values", Json::arr([0.0.into(), 0.5.into()])),
+                ])]),
+            ),
+        ]);
+        let text = swept.to_json().to_string_pretty();
+        assert!(text.contains("\"schema_version\": 3"), "{text}");
+    }
+
+    /// v2 documents (no fault counters) still validate and load with the
+    /// counters zeroed — old saved reports keep working.
+    #[test]
+    fn v2_documents_without_fault_counters_still_load() {
+        let rep = report();
+        let back = ScenarioReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back.rows[0].pods_evicted, 0);
+        assert_eq!(back.rows[0].resize_failures, 0);
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn fault_columns_keyed_on_spec_not_counts() {
+        // A fault spec renders the columns even when nothing broke...
+        let mut rep = report();
+        rep.spec = Json::obj(vec![
+            ("name", "t".into()),
+            ("faults", Json::obj(vec![])),
+        ]);
+        let ascii = rep.table().to_ascii();
+        assert!(ascii.contains("Evict") && ascii.contains("RszFail"), "{ascii}");
+        // ...and a fault-free report never grows them.
+        let quiet = report();
+        let ascii = quiet.table().to_ascii();
+        assert!(!ascii.contains("Evict"), "fault-free tables must not grow columns: {ascii}");
     }
 
     #[test]

@@ -15,10 +15,12 @@ use std::fmt;
 use crate::cluster::topology::{NodeShape, Topology};
 use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
 use crate::experiments::fleet::FLEET_MIX;
+use crate::faults::{CrashRequestPolicy, FaultsConfig, NodeCrash, Straggler};
 use crate::forecast::ForecastConfig;
 use crate::knative::config::ScaleKnobs;
 use crate::policy::Policy;
 use crate::simclock::SimTime;
+use crate::trace::generator::RatePattern;
 use crate::util::json::Json;
 use crate::util::quantity::{Memory, MilliCpu, Resources};
 use crate::workload::registry::WorkloadKind;
@@ -34,7 +36,7 @@ pub const MAX_EXACT_SEED: u64 = 1 << 53;
 /// Every sweepable parameter, in the order [`ScenarioSpec::apply_param`]
 /// handles them — the single source for the unknown-parameter error text
 /// and the generated schema document (`kinetic schema --markdown`).
-pub const SWEEP_PARAMS: [&str; 24] = [
+pub const SWEEP_PARAMS: [&str; 27] = [
     "services",
     "rate_per_service",
     "horizon_s",
@@ -58,6 +60,9 @@ pub const SWEEP_PARAMS: [&str; 24] = [
     "hybrid_in_flight",
     "hybrid_pressure_div",
     "hybrid_resize",
+    "resize_failure_p",
+    "crash_down_s",
+    "straggler_factor",
     "seed",
 ];
 
@@ -126,6 +131,9 @@ pub enum WorkloadSource {
         trough_ratio: f64,
         period_s: f64,
         burst_p: f64,
+        /// Aggregate-rate shape (diurnal default; flash-crowd / on-off are
+        /// the adversarial patterns for fault scenarios).
+        pattern: RatePattern,
     },
     /// Replay of a real Azure Functions minute-count CSV.
     TraceFile { path: String, time_scale: f64 },
@@ -236,6 +244,10 @@ pub struct ScenarioSpec {
     /// Predictor/driver knobs for the forecast-driven policies (`pooled`,
     /// `predictive-inplace`); inert for the §3 triple.
     pub forecast: ForecastConfig,
+    /// Fault-injection schedule: node crashes, stragglers, startup
+    /// inflation and probabilistic resize failures. Default (no `faults`
+    /// section) is inert — specs without one keep byte-identical output.
+    pub faults: FaultsConfig,
     pub seed: u64,
     pub reps: u32,
     pub sweep: Vec<Sweep>,
@@ -390,6 +402,7 @@ impl ScenarioSpec {
                 "autoscaler",
                 "hybrid_weights",
                 "forecast",
+                "faults",
                 "seed",
                 "reps",
                 "sweep",
@@ -431,6 +444,10 @@ impl ScenarioSpec {
             None => ForecastConfig::default(),
             Some(f) => parse_forecast(f)?,
         };
+        let faults = match m.get("faults") {
+            None => FaultsConfig::default(),
+            Some(f) => parse_faults(f)?,
+        };
         let seed = check_range_u64("seed", get_u64(m, "", "seed", 42)?, 0, MAX_EXACT_SEED)?;
         let reps = check_range_u64("reps", get_u64(m, "", "reps", 1)?, 1, 1000)? as u32;
         let sweep = match m.get("sweep") {
@@ -446,6 +463,7 @@ impl ScenarioSpec {
             autoscaler,
             hybrid,
             forecast,
+            faults,
             seed,
             reps,
             sweep,
@@ -517,16 +535,25 @@ impl ScenarioSpec {
                 trough_ratio,
                 period_s,
                 burst_p,
-            } => Json::obj(vec![
-                ("type", "azure-generator".into()),
-                ("functions", (*functions as u64).into()),
-                ("peak_rate", (*peak_rate).into()),
-                ("horizon_s", (*horizon_s).into()),
-                ("popularity_s", (*popularity_s).into()),
-                ("trough_ratio", (*trough_ratio).into()),
-                ("period_s", (*period_s).into()),
-                ("burst_p", (*burst_p).into()),
-            ]),
+                pattern,
+            } => {
+                let mut fields = vec![
+                    ("type", Json::from("azure-generator")),
+                    ("functions", (*functions as u64).into()),
+                    ("peak_rate", (*peak_rate).into()),
+                    ("horizon_s", (*horizon_s).into()),
+                    ("popularity_s", (*popularity_s).into()),
+                    ("trough_ratio", (*trough_ratio).into()),
+                    ("period_s", (*period_s).into()),
+                    ("burst_p", (*burst_p).into()),
+                ];
+                // The diurnal default is omitted so pre-pattern specs
+                // echo byte-identically.
+                if *pattern != RatePattern::Diurnal {
+                    fields.push(("pattern", pattern_to_json(pattern)));
+                }
+                Json::obj(fields)
+            }
             WorkloadSource::TraceFile { path, time_scale } => Json::obj(vec![
                 ("type", "trace-file".into()),
                 ("path", path.as_str().into()),
@@ -588,7 +615,7 @@ impl ScenarioSpec {
         if let Some(p) = self.autoscaler.parked_cpu {
             autoscaler.push(("parked_cpu_m", p.0.into()));
         }
-        Json::obj(vec![
+        let mut top = vec![
             ("name", self.name.as_str().into()),
             ("workload", workload),
             ("topology", topology),
@@ -624,18 +651,25 @@ impl ScenarioSpec {
                     ("pool_size", u64::from(self.forecast.pool_size).into()),
                 ]),
             ),
-            ("seed", self.seed.into()),
-            ("reps", u64::from(self.reps).into()),
-            (
-                "sweep",
-                Json::arr(self.sweep.iter().map(|s| {
-                    Json::obj(vec![
-                        ("param", s.param.as_str().into()),
-                        ("values", Json::arr(s.values.iter().map(|&v| Json::from(v)))),
-                    ])
-                })),
-            ),
-        ])
+        ];
+        // Fault-free specs omit the section entirely, keeping the canonical
+        // form (and therefore the spec echo inside every report) exactly as
+        // it was before fault injection existed.
+        if self.faults != FaultsConfig::default() {
+            top.push(("faults", faults_to_json(&self.faults)));
+        }
+        top.push(("seed", self.seed.into()));
+        top.push(("reps", u64::from(self.reps).into()));
+        top.push((
+            "sweep",
+            Json::arr(self.sweep.iter().map(|s| {
+                Json::obj(vec![
+                    ("param", s.param.as_str().into()),
+                    ("values", Json::arr(s.values.iter().map(|&v| Json::from(v)))),
+                ])
+            })),
+        ));
+        Json::obj(top)
     }
 
     // ----------------------------------------------------------- sweeping
@@ -820,6 +854,38 @@ impl ScenarioSpec {
             "hybrid_resize" => {
                 self.hybrid.resize = check_range_u64(&path, as_u64(&path)?, 0, 1_000_000)?;
             }
+            // Fault axes. `resize_failure_p` stands alone; the crash and
+            // straggler axes reshape entries the `faults` section must
+            // already declare — sweeping a fault that isn't configured is a
+            // spec bug, not an implicit default.
+            "resize_failure_p" => {
+                self.faults.resize_failure_p = check_range_f64(&path, v, 0.0, 1.0)?;
+            }
+            "crash_down_s" => {
+                if self.faults.node_crashes.is_empty() {
+                    return Err(SpecError::invalid(
+                        &path,
+                        "no faults.node_crashes configured to apply the down time to",
+                    ));
+                }
+                let down = SimTime::from_secs_f64(check_range_f64(&path, v, 1e-3, 1e7)?);
+                for c in &mut self.faults.node_crashes {
+                    c.down = down;
+                }
+            }
+            "straggler_factor" => {
+                if self.faults.stragglers.is_empty() {
+                    return Err(SpecError::invalid(
+                        &path,
+                        "no faults.stragglers configured to apply the factor to",
+                    ));
+                }
+                let f = check_range_f64(&path, v, 1.0, 1000.0)?;
+                for s in &mut self.faults.stragglers {
+                    s.startup_factor = f;
+                    s.resize_factor = f;
+                }
+            }
             "seed" => {
                 self.seed = check_range_u64(&path, as_u64(&path)?, 0, MAX_EXACT_SEED)?;
             }
@@ -922,6 +988,7 @@ fn parse_workload(j: &Json) -> Result<WorkloadSource, SpecError> {
                     "trough_ratio",
                     "period_s",
                     "burst_p",
+                    "pattern",
                 ],
             )?;
             Ok(WorkloadSource::AzureGenerator {
@@ -967,6 +1034,10 @@ fn parse_workload(j: &Json) -> Result<WorkloadSource, SpecError> {
                     0.0,
                     1.0,
                 )?,
+                pattern: match m.get("pattern") {
+                    None => RatePattern::Diurnal,
+                    Some(p) => parse_pattern(p)?,
+                },
             })
         }
         "trace-file" => {
@@ -1227,6 +1298,256 @@ fn parse_forecast(j: &Json) -> Result<ForecastConfig, SpecError> {
     })
 }
 
+/// Strictly parses `workload.pattern` — the aggregate-rate shape of the
+/// azure-generator source.
+fn parse_pattern(j: &Json) -> Result<RatePattern, SpecError> {
+    let m = as_obj(j, "workload.pattern")?;
+    let path = "workload.pattern";
+    match req_str(m, path, "type")? {
+        "diurnal" => {
+            check_keys(m, path, &["type"])?;
+            Ok(RatePattern::Diurnal)
+        }
+        "flash-crowd" => {
+            check_keys(m, path, &["type", "at_s", "magnitude", "width_s"])?;
+            Ok(RatePattern::FlashCrowd {
+                at: SimTime::from_secs_f64(check_range_f64(
+                    "workload.pattern.at_s",
+                    req_f64(m, path, "at_s")?,
+                    0.0,
+                    1e7,
+                )?),
+                magnitude: check_range_f64(
+                    "workload.pattern.magnitude",
+                    req_f64(m, path, "magnitude")?,
+                    1.0,
+                    1e4,
+                )?,
+                width: SimTime::from_secs_f64(check_range_f64(
+                    "workload.pattern.width_s",
+                    req_f64(m, path, "width_s")?,
+                    1e-3,
+                    1e7,
+                )?),
+            })
+        }
+        "on-off" => {
+            check_keys(m, path, &["type", "on_s", "off_s"])?;
+            Ok(RatePattern::OnOff {
+                on: SimTime::from_secs_f64(check_range_f64(
+                    "workload.pattern.on_s",
+                    req_f64(m, path, "on_s")?,
+                    1e-3,
+                    1e7,
+                )?),
+                off: SimTime::from_secs_f64(check_range_f64(
+                    "workload.pattern.off_s",
+                    req_f64(m, path, "off_s")?,
+                    1e-3,
+                    1e7,
+                )?),
+            })
+        }
+        other => Err(SpecError::invalid(
+            "workload.pattern.type",
+            format!("unknown pattern type '{other}' (expected diurnal|flash-crowd|on-off)"),
+        )),
+    }
+}
+
+fn pattern_to_json(p: &RatePattern) -> Json {
+    match p {
+        RatePattern::Diurnal => Json::obj(vec![("type", "diurnal".into())]),
+        RatePattern::FlashCrowd { at, magnitude, width } => Json::obj(vec![
+            ("type", "flash-crowd".into()),
+            ("at_s", at.as_secs_f64().into()),
+            ("magnitude", (*magnitude).into()),
+            ("width_s", width.as_secs_f64().into()),
+        ]),
+        RatePattern::OnOff { on, off } => Json::obj(vec![
+            ("type", "on-off".into()),
+            ("on_s", on.as_secs_f64().into()),
+            ("off_s", off.as_secs_f64().into()),
+        ]),
+    }
+}
+
+fn parse_faults(j: &Json) -> Result<FaultsConfig, SpecError> {
+    let m = as_obj(j, "faults")?;
+    check_keys(
+        m,
+        "faults",
+        &[
+            "node_crashes",
+            "crash_requests",
+            "stragglers",
+            "startup_inflation",
+            "resize_failure_p",
+        ],
+    )?;
+    let node_crashes = match m.get("node_crashes") {
+        None => Vec::new(),
+        Some(a) => a
+            .as_arr()
+            .ok_or_else(|| SpecError::invalid("faults.node_crashes", "expected an array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let path = format!("faults.node_crashes[{i}]");
+                let cm = as_obj(c, &path)?;
+                check_keys(cm, &path, &["node", "at_s", "down_s"])?;
+                Ok(NodeCrash {
+                    node: check_range_u64(
+                        &format!("{path}.node"),
+                        req_u64(cm, &path, "node")?,
+                        0,
+                        9_999,
+                    )? as u32,
+                    at: SimTime::from_secs_f64(check_range_f64(
+                        &format!("{path}.at_s"),
+                        req_f64(cm, &path, "at_s")?,
+                        0.0,
+                        1e7,
+                    )?),
+                    down: SimTime::from_secs_f64(check_range_f64(
+                        &format!("{path}.down_s"),
+                        req_f64(cm, &path, "down_s")?,
+                        1e-3,
+                        1e7,
+                    )?),
+                })
+            })
+            .collect::<Result<Vec<_>, SpecError>>()?,
+    };
+    let crash_requests = match m.get("crash_requests") {
+        None => CrashRequestPolicy::default(),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| {
+                SpecError::invalid("faults.crash_requests", "expected a string")
+            })?
+            .parse::<CrashRequestPolicy>()
+            .map_err(|e| SpecError::invalid("faults.crash_requests", e))?,
+    };
+    let stragglers = match m.get("stragglers") {
+        None => Vec::new(),
+        Some(a) => a
+            .as_arr()
+            .ok_or_else(|| SpecError::invalid("faults.stragglers", "expected an array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let path = format!("faults.stragglers[{i}]");
+                let sm = as_obj(s, &path)?;
+                check_keys(
+                    sm,
+                    &path,
+                    &["node", "from_s", "until_s", "startup_factor", "resize_factor"],
+                )?;
+                let from_s = check_range_f64(
+                    &format!("{path}.from_s"),
+                    get_f64(sm, &path, "from_s", 0.0)?,
+                    0.0,
+                    1e7,
+                )?;
+                let until_s = check_range_f64(
+                    &format!("{path}.until_s"),
+                    req_f64(sm, &path, "until_s")?,
+                    1e-3,
+                    1e7,
+                )?;
+                if until_s <= from_s {
+                    return Err(SpecError::invalid(
+                        &format!("{path}.until_s"),
+                        format!("window is empty ({until_s} <= from_s {from_s})"),
+                    ));
+                }
+                Ok(Straggler {
+                    node: check_range_u64(
+                        &format!("{path}.node"),
+                        req_u64(sm, &path, "node")?,
+                        0,
+                        9_999,
+                    )? as u32,
+                    from: SimTime::from_secs_f64(from_s),
+                    until: SimTime::from_secs_f64(until_s),
+                    startup_factor: check_range_f64(
+                        &format!("{path}.startup_factor"),
+                        get_f64(sm, &path, "startup_factor", 1.0)?,
+                        1.0,
+                        1000.0,
+                    )?,
+                    resize_factor: check_range_f64(
+                        &format!("{path}.resize_factor"),
+                        get_f64(sm, &path, "resize_factor", 1.0)?,
+                        1.0,
+                        1000.0,
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>, SpecError>>()?,
+    };
+    Ok(FaultsConfig {
+        node_crashes,
+        crash_requests,
+        stragglers,
+        startup_inflation: check_range_f64(
+            "faults.startup_inflation",
+            get_f64(m, "faults", "startup_inflation", 1.0)?,
+            1.0,
+            1000.0,
+        )?,
+        resize_failure_p: check_range_f64(
+            "faults.resize_failure_p",
+            get_f64(m, "faults", "resize_failure_p", 0.0)?,
+            0.0,
+            1.0,
+        )?,
+    })
+}
+
+/// Canonical JSON form of a non-default `faults` section — inert knobs are
+/// omitted, matching the style of the other optional sections.
+fn faults_to_json(f: &FaultsConfig) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    if !f.node_crashes.is_empty() {
+        pairs.push((
+            "node_crashes",
+            Json::arr(f.node_crashes.iter().map(|c| {
+                Json::obj(vec![
+                    ("node", u64::from(c.node).into()),
+                    ("at_s", c.at.as_secs_f64().into()),
+                    ("down_s", c.down.as_secs_f64().into()),
+                ])
+            })),
+        ));
+    }
+    if f.crash_requests != CrashRequestPolicy::default() {
+        pairs.push(("crash_requests", f.crash_requests.name().into()));
+    }
+    if !f.stragglers.is_empty() {
+        pairs.push((
+            "stragglers",
+            Json::arr(f.stragglers.iter().map(|s| {
+                Json::obj(vec![
+                    ("node", u64::from(s.node).into()),
+                    ("from_s", s.from.as_secs_f64().into()),
+                    ("until_s", s.until.as_secs_f64().into()),
+                    ("startup_factor", s.startup_factor.into()),
+                    ("resize_factor", s.resize_factor.into()),
+                ])
+            })),
+        ));
+    }
+    if f.startup_inflation != 1.0 {
+        pairs.push(("startup_inflation", f.startup_inflation.into()));
+    }
+    if f.resize_failure_p != 0.0 {
+        pairs.push(("resize_failure_p", f.resize_failure_p.into()));
+    }
+    Json::obj(pairs)
+}
+
 fn parse_sweep(j: &Json) -> Result<Vec<Sweep>, SpecError> {
     let arr = j
         .as_arr()
@@ -1485,6 +1806,226 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(e.contains("forecast.pool_size") && e.contains("outside"), "{e}");
+    }
+
+    #[test]
+    fn faults_section_parses_round_trips_and_sweeps() {
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t",
+                "workload":{"type":"synthetic","services":2,
+                            "rate_per_service":0.5,"horizon_s":120},
+                "topology":{"kind":"uniform","nodes":4},
+                "faults":{
+                    "node_crashes":[{"node":1,"at_s":30,"down_s":60}],
+                    "crash_requests":"fail",
+                    "stragglers":[{"node":2,"from_s":0,"until_s":90,
+                                   "startup_factor":4,"resize_factor":2}],
+                    "startup_inflation":1.5,
+                    "resize_failure_p":0.05},
+                "sweep":[{"param":"crash_down_s","values":[30,60]},
+                         {"param":"straggler_factor","values":[2,8]},
+                         {"param":"resize_failure_p","values":[0,0.5]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.faults.node_crashes.len(), 1);
+        assert_eq!(s.faults.node_crashes[0].node, 1);
+        assert_eq!(s.faults.node_crashes[0].at, SimTime::from_secs(30));
+        assert_eq!(s.faults.node_crashes[0].down, SimTime::from_secs(60));
+        assert_eq!(s.faults.crash_requests, CrashRequestPolicy::Fail);
+        assert_eq!(s.faults.stragglers.len(), 1);
+        assert_eq!(s.faults.stragglers[0].startup_factor, 4.0);
+        assert_eq!(s.faults.startup_inflation, 1.5);
+        assert_eq!(s.faults.resize_failure_p, 0.05);
+
+        let again = ScenarioSpec::parse(&s.to_json().to_string_pretty()).unwrap();
+        assert_eq!(s, again);
+
+        // 2 × 2 × 2 fault values × 3 policies; axes apply to the clones.
+        let vs = s.expand().unwrap();
+        assert_eq!(vs.len(), 8);
+        assert_eq!(vs[7].1.faults.node_crashes[0].down, SimTime::from_secs(60));
+        assert_eq!(vs[7].1.faults.stragglers[0].startup_factor, 8.0);
+        assert_eq!(vs[7].1.faults.stragglers[0].resize_factor, 8.0);
+        assert_eq!(vs[7].1.faults.resize_failure_p, 0.5);
+    }
+
+    #[test]
+    fn faults_defaults_stay_inert_and_omitted() {
+        // No `faults` key ⇒ the default (inert) config, and the canonical
+        // form does not grow a `faults` key — pre-fault specs keep their
+        // exact spec echo.
+        let s = ScenarioSpec::parse(minimal()).unwrap();
+        assert_eq!(s.faults, FaultsConfig::default());
+        assert!(s.faults.is_inert());
+        let text = s.to_json().to_string_pretty();
+        assert!(!text.contains("faults"), "{text}");
+
+        // An explicit empty section is equally inert (and stays omitted on
+        // the way back out).
+        let s2 = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":4,
+                "rate_per_service":0.1,"horizon_s":30},"faults":{}}"#,
+        )
+        .unwrap();
+        assert_eq!(s2.faults, FaultsConfig::default());
+        assert_eq!(s2.to_json().to_string_pretty(), text);
+    }
+
+    #[test]
+    fn generator_patterns_parse_round_trip_and_stay_omitted_by_default() {
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"azure-generator","functions":4,
+                "peak_rate":2.0,"horizon_s":120,
+                "pattern":{"type":"flash-crowd","at_s":60,"magnitude":8,"width_s":10}}}"#,
+        )
+        .unwrap();
+        match &spec.workload {
+            WorkloadSource::AzureGenerator { pattern, .. } => assert_eq!(
+                *pattern,
+                RatePattern::FlashCrowd {
+                    at: SimTime::from_secs(60),
+                    magnitude: 8.0,
+                    width: SimTime::from_secs(10),
+                }
+            ),
+            other => panic!("wrong source: {other:?}"),
+        }
+        let text = spec.to_json().to_string_pretty();
+        assert!(text.contains("flash-crowd"), "{text}");
+        let back = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+
+        let spec = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"azure-generator","functions":4,
+                "peak_rate":2.0,"horizon_s":120,
+                "pattern":{"type":"on-off","on_s":30,"off_s":60}}}"#,
+        )
+        .unwrap();
+        match &spec.workload {
+            WorkloadSource::AzureGenerator { pattern, .. } => assert_eq!(
+                *pattern,
+                RatePattern::OnOff {
+                    on: SimTime::from_secs(30),
+                    off: SimTime::from_secs(60),
+                }
+            ),
+            other => panic!("wrong source: {other:?}"),
+        }
+        let text = spec.to_json().to_string_pretty();
+        let back = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), text);
+
+        // No pattern key (or an explicit diurnal) echoes no pattern key.
+        let plain = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"azure-generator","functions":4,
+                "peak_rate":2.0,"horizon_s":120}}"#,
+        )
+        .unwrap();
+        assert!(!plain.to_json().to_string_pretty().contains("pattern"));
+        let diurnal = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"azure-generator","functions":4,
+                "peak_rate":2.0,"horizon_s":120,"pattern":{"type":"diurnal"}}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            diurnal.to_json().to_string_pretty(),
+            plain.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn generator_pattern_strictness_rejects_bad_values_with_paths() {
+        let azure = |pattern: &str| {
+            format!(
+                r#"{{"name":"t","workload":{{"type":"azure-generator","functions":4,
+                    "peak_rate":2.0,"horizon_s":120,"pattern":{pattern}}}}}"#
+            )
+        };
+        let e = ScenarioSpec::parse(&azure(r#"{"type":"square"}"#))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("square") && e.contains("pattern"), "{e}");
+
+        let e = ScenarioSpec::parse(&azure(r#"{"type":"flash-crowd","at_s":60,"magnitude":8}"#))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("width_s"), "{e}");
+
+        let e = ScenarioSpec::parse(&azure(
+            r#"{"type":"flash-crowd","at_s":60,"magnitude":0.5,"width_s":10}"#,
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("magnitude"), "{e}");
+
+        let e = ScenarioSpec::parse(&azure(r#"{"type":"on-off","on_s":30,"of_s":60}"#))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("of_s"), "{e}");
+
+        // A pattern on a non-generator source is an unknown workload key.
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":2,
+                "rate_per_service":0.1,"horizon_s":10,
+                "pattern":{"type":"diurnal"}}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("pattern"), "{e}");
+    }
+
+    #[test]
+    fn faults_strictness_rejects_bad_values_with_paths() {
+        let base = |faults: &str| {
+            format!(
+                r#"{{"name":"t","workload":{{"type":"synthetic","services":1,
+                    "rate_per_service":1,"horizon_s":1}},"faults":{faults}}}"#
+            )
+        };
+        let e = ScenarioSpec::parse(&base(r#"{"node_crashs":[]}"#))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("node_crashs") && e.contains("node_crashes"), "{e}");
+
+        let e = ScenarioSpec::parse(&base(
+            r#"{"node_crashes":[{"node":0,"at_s":10}]}"#,
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("node_crashes[0].down_s"), "{e}");
+
+        let e = ScenarioSpec::parse(&base(r#"{"crash_requests":"retry"}"#))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("crash_requests") && e.contains("retry"), "{e}");
+
+        let e = ScenarioSpec::parse(&base(
+            r#"{"stragglers":[{"node":0,"from_s":50,"until_s":50}]}"#,
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("until_s") && e.contains("empty"), "{e}");
+
+        let e = ScenarioSpec::parse(&base(r#"{"resize_failure_p":1.5}"#))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("resize_failure_p") && e.contains("outside"), "{e}");
+
+        let e = ScenarioSpec::parse(&base(r#"{"startup_inflation":0.5}"#))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("startup_inflation") && e.contains("outside"), "{e}");
+
+        // Sweeping a crash/straggler axis without the matching entries is a
+        // parse-time error, not a silent no-op mid-run.
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},
+                "sweep":[{"param":"crash_down_s","values":[30]}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("crash_down_s") && e.contains("node_crashes"), "{e}");
     }
 
     #[test]

@@ -12,6 +12,27 @@ pub struct TraceEvent {
     pub function: usize,
 }
 
+/// Shape of the time-varying aggregate rate — the adversarial workload
+/// knob for fault scenarios (a flash crowd landing inside a straggler
+/// window, an ON-OFF square wave fighting the scale-down grace period).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum RatePattern {
+    /// Sinusoid between trough and peak (the Shahrad-style scaled "day").
+    #[default]
+    Diurnal,
+    /// The diurnal base with a Gaussian flash-crowd spike centered at
+    /// `at`: the rate multiplies by up to `magnitude`, decaying with a
+    /// standard deviation of `width`.
+    FlashCrowd {
+        at: SimTime,
+        magnitude: f64,
+        width: SimTime,
+    },
+    /// A square wave: `peak_rate` for `on`, the trough rate for `off`,
+    /// repeating — maximal churn pressure on scale-to-zero policies.
+    OnOff { on: SimTime, off: SimTime },
+}
+
 /// Trace generation parameters.
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
@@ -29,6 +50,9 @@ pub struct TraceConfig {
     pub horizon: SimTime,
     /// Burstiness: probability an arrival spawns an immediate follow-up.
     pub burst_p: f64,
+    /// Shape of the aggregate rate over time (default: diurnal sinusoid,
+    /// which reproduces pre-pattern traces bit-for-bit).
+    pub pattern: RatePattern,
     pub seed: u64,
 }
 
@@ -42,6 +66,7 @@ impl Default for TraceConfig {
             period: SimTime::from_secs(600),
             horizon: SimTime::from_secs(1200),
             burst_p: 0.25,
+            pattern: RatePattern::Diurnal,
             seed: 1,
         }
     }
@@ -57,13 +82,49 @@ impl TraceGenerator {
         TraceGenerator { cfg }
     }
 
-    /// Diurnal rate at time `t` (sinusoid between trough and peak).
-    pub fn rate_at(&self, t: SimTime) -> f64 {
+    /// The diurnal sinusoid between trough and peak — the base every
+    /// pattern modulates.
+    fn diurnal_at(&self, t: SimTime) -> f64 {
         let phase = 2.0 * std::f64::consts::PI * t.as_secs_f64()
             / self.cfg.period.as_secs_f64().max(1e-9);
         let lo = self.cfg.peak_rate * self.cfg.trough_ratio;
         let hi = self.cfg.peak_rate;
         lo + (hi - lo) * 0.5 * (1.0 - phase.cos())
+    }
+
+    /// Instantaneous aggregate rate at time `t` under the configured
+    /// [`RatePattern`].
+    pub fn rate_at(&self, t: SimTime) -> f64 {
+        match self.cfg.pattern {
+            RatePattern::Diurnal => self.diurnal_at(t),
+            RatePattern::FlashCrowd { at, magnitude, width } => {
+                let d = (t.as_secs_f64() - at.as_secs_f64())
+                    / width.as_secs_f64().max(1e-9);
+                self.diurnal_at(t) * (1.0 + (magnitude - 1.0) * (-0.5 * d * d).exp())
+            }
+            RatePattern::OnOff { on, off } => {
+                let period = (on + off).as_secs_f64().max(1e-9);
+                let phase = t.as_secs_f64() % period;
+                if phase < on.as_secs_f64() {
+                    self.cfg.peak_rate
+                } else {
+                    self.cfg.peak_rate * self.cfg.trough_ratio
+                }
+            }
+        }
+    }
+
+    /// The thinning envelope: an upper bound on [`TraceGenerator::rate_at`]
+    /// over the whole horizon. Diurnal and ON-OFF peak at `peak_rate`; a
+    /// flash crowd exceeds it by its magnitude, so the envelope must grow
+    /// with it or the spike would be silently clipped.
+    pub fn max_rate(&self) -> f64 {
+        match self.cfg.pattern {
+            RatePattern::FlashCrowd { magnitude, .. } => {
+                self.cfg.peak_rate * magnitude.max(1.0)
+            }
+            _ => self.cfg.peak_rate,
+        }
     }
 
     /// Generates the trace: thinned (time-varying) Poisson arrivals with
@@ -72,7 +133,7 @@ impl TraceGenerator {
         let mut rng = Rng::new(self.cfg.seed);
         let mut out = Vec::new();
         let horizon_s = self.cfg.horizon.as_secs_f64();
-        let peak = self.cfg.peak_rate.max(1e-9);
+        let peak = self.max_rate().max(1e-9);
         let mut t = 0.0f64;
         loop {
             // Thinning: candidate arrivals at the peak rate, accepted with
@@ -173,6 +234,76 @@ mod tests {
         })
         .generate();
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn flash_crowd_spikes_rate_and_arrivals() {
+        let at = SimTime::from_secs(150);
+        let g = TraceGenerator::new(TraceConfig {
+            pattern: RatePattern::FlashCrowd {
+                at,
+                magnitude: 6.0,
+                width: SimTime::from_secs(10),
+            },
+            ..small()
+        });
+        let base = TraceGenerator::new(small());
+        // At the spike center the rate is magnified...
+        assert!(g.rate_at(at) > 4.0 * base.rate_at(at));
+        // ...and stays under the thinning envelope everywhere, so the
+        // acceptance probability is a real probability.
+        for s in 0..300 {
+            let t = SimTime::from_secs(s);
+            assert!(
+                g.rate_at(t) <= g.max_rate() + 1e-9,
+                "rate at {s}s exceeds the envelope"
+            );
+        }
+        // The generated trace densifies around the spike.
+        let trace = g.generate();
+        let window = |lo: u64, hi: u64| {
+            trace
+                .iter()
+                .filter(|e| {
+                    e.at >= SimTime::from_secs(lo) && e.at < SimTime::from_secs(hi)
+                })
+                .count()
+        };
+        assert!(
+            window(140, 160) > 2 * window(40, 60),
+            "spike window {} vs quiet window {}",
+            window(140, 160),
+            window(40, 60)
+        );
+    }
+
+    #[test]
+    fn on_off_square_wave_alternates_between_peak_and_trough() {
+        let cfg = TraceConfig {
+            pattern: RatePattern::OnOff {
+                on: SimTime::from_secs(30),
+                off: SimTime::from_secs(30),
+            },
+            ..small()
+        };
+        let g = TraceGenerator::new(cfg.clone());
+        assert_eq!(g.rate_at(SimTime::from_secs(10)), cfg.peak_rate);
+        assert_eq!(
+            g.rate_at(SimTime::from_secs(40)),
+            cfg.peak_rate * cfg.trough_ratio
+        );
+        // Next period: on again.
+        assert_eq!(g.rate_at(SimTime::from_secs(70)), cfg.peak_rate);
+        assert_eq!(g.max_rate(), cfg.peak_rate);
+    }
+
+    /// The default pattern is the pre-pattern diurnal path: the thinning
+    /// envelope is unchanged, so existing seeds reproduce bit-for-bit.
+    #[test]
+    fn diurnal_default_keeps_the_envelope() {
+        let g = TraceGenerator::new(small());
+        assert_eq!(g.max_rate(), small().peak_rate);
+        assert_eq!(small().pattern, RatePattern::Diurnal);
     }
 
     #[test]

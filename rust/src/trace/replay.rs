@@ -32,6 +32,9 @@ pub struct ReplayConfig {
     pub hybrid: HybridWeights,
     /// Predictor/driver knobs for the forecast-driven policies.
     pub forecast: ForecastConfig,
+    /// Fault-injection schedule; the default is inert (installation is a
+    /// no-op and the replay stays bit-identical).
+    pub faults: crate::faults::FaultsConfig,
     pub seed: u64,
 }
 
@@ -47,6 +50,7 @@ impl ReplayConfig {
             knobs: ScaleKnobs::trace_default(),
             hybrid: HybridWeights::default(),
             forecast: ForecastConfig::default(),
+            faults: crate::faults::FaultsConfig::default(),
             seed,
         }
     }
@@ -71,6 +75,14 @@ pub struct ReplayReport {
     pub avg_committed_mcpu: f64,
     /// Total pods created (churn).
     pub pods_created: u64,
+    /// Scheduling attempts that found no feasible node (fault runs).
+    pub pods_unschedulable: u64,
+    /// Pods killed by node crashes.
+    pub pods_evicted: u64,
+    /// Replacement pods started by crash recovery.
+    pub pods_rescheduled: u64,
+    /// Resize patches rejected by injected API failures.
+    pub resize_failures: u64,
     pub wall: SimTime,
 }
 
@@ -119,6 +131,9 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
     for ev in trace {
         sim.submit_at(start + ev.at, &names[&ev.function]);
     }
+    // Fault offsets are measured from the same origin as the trace; inert
+    // configs return before touching any state (bit-identity).
+    sim.world.install_faults(&mut sim.engine, &cfg.faults);
     sim.run();
 
     let now = sim.now();
@@ -153,6 +168,10 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
         mispredictions: mispred,
         avg_committed_mcpu: sim.world.metrics.committed_cpu.average_mcpu(now),
         pods_created: sim.world.metrics.pods_created,
+        pods_unschedulable: sim.world.metrics.pods_unschedulable,
+        pods_evicted: sim.world.metrics.pods_evicted,
+        pods_rescheduled: sim.world.metrics.pods_rescheduled,
+        resize_failures: sim.world.metrics.resize_failures,
         wall: now.saturating_sub(start),
     }
 }

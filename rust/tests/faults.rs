@@ -1,0 +1,196 @@
+//! Integration locks for the fault-injection subsystem:
+//!
+//! 1. Fault runs are deterministic — `--threads 4` emits a report
+//!    byte-identical to `--threads 1` even with crashes, stragglers and
+//!    probabilistic resize failures in play.
+//! 2. Specs WITHOUT a `faults` section keep emitting the exact pre-fault
+//!    v2 document: same schema version, same row key set, no fault
+//!    counters anywhere — old baselines stay byte-comparable.
+//! 3. The committed `node_crash.json` study shows crash recovery
+//!    end-to-end: evictions, reschedules and the analyze fault columns.
+
+use std::path::PathBuf;
+
+use kinetic::analysis::{self, AnalysisReport};
+use kinetic::policy::Policy;
+use kinetic::scenario::preset;
+use kinetic::scenario::{ScenarioEngine, ScenarioSpec};
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+/// A compact spec exercising every fault process at once: a mid-run node
+/// crash with requeue recovery, a straggler window, global startup
+/// inflation, a probabilistic resize-failure draw, and a sweep over the
+/// failure probability (two variants × 3 policies × 2 reps = 12 rows).
+fn crash_spec() -> ScenarioSpec {
+    ScenarioSpec::parse(
+        r#"{
+        "name": "crash-det",
+        "workload": {"type": "synthetic", "services": 4,
+                     "rate_per_service": 0.4, "horizon_s": 45},
+        "topology": {"kind": "uniform", "nodes": 3},
+        "policies": ["cold", "warm", "in-place"],
+        "reps": 2,
+        "faults": {
+            "node_crashes": [{"node": 2, "at_s": 8, "down_s": 12}],
+            "crash_requests": "requeue",
+            "stragglers": [{"node": 0, "from_s": 0, "until_s": 20,
+                            "startup_factor": 3.0}],
+            "startup_inflation": 1.5,
+            "resize_failure_p": 0.1
+        },
+        "sweep": [{"param": "resize_failure_p", "values": [0.0, 0.25]}]
+    }"#,
+    )
+    .unwrap()
+}
+
+/// The acceptance-criteria property: fault schedules ride the same typed
+/// event queue as everything else, so the worker count must not change a
+/// single byte of the report — crashes, stragglers and seeded
+/// resize-failure draws included.
+#[test]
+fn fault_reports_are_byte_identical_across_thread_counts() {
+    let spec = crash_spec();
+    let serial = ScenarioEngine::run_with_threads(&spec, 1).unwrap();
+    assert_eq!(serial.rows.len(), 12); // 2 variants × 3 policies × 2 reps
+    let parallel = ScenarioEngine::run_with_threads(&spec, 4).unwrap();
+    assert_eq!(
+        serial.to_json().to_string_pretty().as_bytes(),
+        parallel.to_json().to_string_pretty().as_bytes(),
+        "fault-injection report must not depend on the worker count"
+    );
+
+    // The document upgrades to the fault schema and the injected crash is
+    // visible in the counters: pods died and recovery replaced them.
+    let text = serial.to_json().to_string_pretty();
+    assert!(text.contains("\"schema_version\": 3"), "{text}");
+    assert!(
+        serial.rows.iter().any(|r| r.pods_evicted > 0),
+        "the node crash must evict at least one pod somewhere in the grid"
+    );
+    assert!(
+        serial.rows.iter().any(|r| r.pods_rescheduled > 0),
+        "recovery must reschedule onto the surviving nodes"
+    );
+    for r in &serial.rows {
+        // Recovery starts at most one replacement per lost pod; an attempt
+        // that finds no feasible node counts unschedulable instead.
+        assert!(
+            r.pods_rescheduled <= r.pods_evicted,
+            "rescheduled {} > evicted {} ({:?})",
+            r.pods_rescheduled,
+            r.pods_evicted,
+            r.policy
+        );
+        assert!(r.completed > 0, "{:?}", r.policy);
+    }
+    // The swept failure probability is observable: the p=0 variant draws
+    // nothing, so its rows record zero resize failures.
+    let p0_failures: u64 = serial
+        .rows
+        .iter()
+        .filter(|r| r.variant == "resize_failure_p=0")
+        .map(|r| r.resize_failures)
+        .sum();
+    assert_eq!(p0_failures, 0, "p=0 variant must never fail a resize");
+    assert!(
+        serial.rows.iter().any(|r| r.variant == "resize_failure_p=0"),
+        "expected the p=0 sweep variant in {:?}",
+        serial.rows.iter().map(|r| r.variant.clone()).collect::<Vec<_>>()
+    );
+}
+
+/// Re-running the same fault spec reproduces the same bytes — the seeded
+/// fault RNG is part of the run's identity, not ambient randomness.
+#[test]
+fn fault_runs_are_reproducible_per_seed() {
+    let a = ScenarioEngine::run(&crash_spec()).unwrap();
+    let b = ScenarioEngine::run(&crash_spec()).unwrap();
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty()
+    );
+}
+
+/// The exact v2 row key set, in the (alphabetical) order `BTreeMap` keys
+/// iterate. A fault-free run must emit exactly these — nothing added,
+/// nothing renamed — so pre-fault baselines diff clean.
+const V2_ROW_KEYS: [&str; 19] = [
+    "avg_committed_mcpu",
+    "cold_starts",
+    "completed",
+    "failed",
+    "inplace_scale_ups",
+    "mean_ms",
+    "mispredictions",
+    "nodes",
+    "p50_ms",
+    "p99_ms",
+    "pods_created",
+    "policy",
+    "rep",
+    "routing",
+    "scenario",
+    "services",
+    "speculative_resizes",
+    "variant",
+    "workload",
+];
+
+/// The no-faults byte-compatibility pin: a spec without a `faults` section
+/// emits a v2 document whose rows carry exactly the pre-fault key set and
+/// whose spec echo never mentions faults.
+#[test]
+fn fault_free_specs_keep_emitting_the_v2_document() {
+    let spec = preset::by_name("smoke").unwrap();
+    let report = ScenarioEngine::run(&spec).unwrap();
+    let j = report.to_json();
+    let text = j.to_string_pretty();
+    assert!(text.contains("\"schema_version\": 2"), "{text}");
+    for fault_key in [
+        "faults",
+        "pods_unschedulable",
+        "pods_evicted",
+        "pods_rescheduled",
+        "resize_failures",
+    ] {
+        assert!(
+            !text.contains(fault_key),
+            "fault-free report leaked '{fault_key}':\n{text}"
+        );
+    }
+    for row in j.req_arr("rows").unwrap() {
+        let m = row.as_obj().unwrap();
+        let keys: Vec<&str> = m.keys().map(String::as_str).collect();
+        assert_eq!(keys, V2_ROW_KEYS, "v2 row key set drifted");
+    }
+}
+
+/// The committed crash study runs end-to-end and analyzes: nonzero
+/// eviction/reschedule counters flow from the simulated crash through the
+/// report into the `kinetic analyze` aggregate table's fault columns.
+#[test]
+fn node_crash_example_shows_recovery_in_analyze() {
+    let spec = ScenarioSpec::load(&scenarios_dir().join("node_crash.json")).unwrap();
+    let report = ScenarioEngine::run_with_threads(&spec, 2).unwrap();
+    let evicted: u64 = report.rows.iter().map(|r| r.pods_evicted).sum();
+    let rescheduled: u64 = report.rows.iter().map(|r| r.pods_rescheduled).sum();
+    assert!(evicted > 0, "the committed crash must evict pods");
+    assert!(rescheduled > 0, "recovery must reschedule the evicted pods");
+
+    let a = AnalysisReport::from_scenario(&report, Policy::Cold);
+    let md = analysis::render(&a.aggregate_table(), analysis::Format::Markdown);
+    assert!(
+        md.contains("Evict") && md.contains("Resched"),
+        "analyze must surface the recovery accounting:\n{md}"
+    );
+    // The run's counters survive the analysis round trip.
+    let back = AnalysisReport::from_json(
+        &kinetic::util::json::Json::parse(&a.to_json().to_string_pretty()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(back, a);
+}
