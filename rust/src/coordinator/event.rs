@@ -75,15 +75,19 @@ pub enum Event {
     },
     /// Fault injection: the straggler window closes.
     StragglerEnd { node: NodeId },
+    /// Sharded execution: a sibling cell crashed with no surviving local
+    /// capacity; reschedule `pods` replacement pods for `service` here.
+    /// Delivered at a window barrier, always ≥ one lookahead after emit.
+    XShardReschedule { service: Arc<str>, pods: u32 },
     /// Escape hatch for examples/tests; never used by platform code.
-    Call(Box<dyn FnOnce(&mut Platform, &mut Eng)>),
+    Call(Box<dyn FnOnce(&mut Platform, &mut Eng) + Send>),
 }
 
 impl Event {
     /// Wraps an ad-hoc closure as an event (examples/tests only).
     pub fn call<F>(f: F) -> Event
     where
-        F: FnOnce(&mut Platform, &mut Eng) + 'static,
+        F: FnOnce(&mut Platform, &mut Eng) + Send + 'static,
     {
         Event::Call(Box::new(f))
     }
@@ -135,6 +139,9 @@ impl World for Platform {
                 resize_factor,
             } => Self::straggler_start(self, eng, node, startup_factor, resize_factor),
             Event::StragglerEnd { node } => Self::straggler_end(self, eng, node),
+            Event::XShardReschedule { service, pods } => {
+                Self::xshard_reschedule(self, eng, &service, pods)
+            }
             Event::Call(f) => f(self, eng),
         }
     }

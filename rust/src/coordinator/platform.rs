@@ -59,6 +59,18 @@ pub(crate) struct StartingPod {
     pub ready_event: EventId,
 }
 
+/// A pending cross-shard reschedule request emitted by a cell whose only
+/// node crashed with no surviving local capacity. Collected in
+/// [`Platform::xshard_outbox`] and delivered by the sharded runtime at the
+/// next window barrier (see `crate::shard`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct XShardMsg {
+    /// Local virtual time of emission (the crash instant).
+    pub at: SimTime,
+    pub service: std::sync::Arc<str>,
+    pub pods: u32,
+}
+
 /// The world state driven by the event engine.
 pub struct Platform {
     pub cluster: Cluster,
@@ -95,10 +107,16 @@ pub struct Platform {
     pub metrics: Metrics,
     /// One-shot continuations fired when a request completes (or fails) —
     /// how closed-loop virtual users chain their iterations.
-    pub(crate) completion_hooks: IdHashMap<RequestId, Box<dyn FnOnce(&mut Platform, &mut Eng)>>,
+    pub(crate) completion_hooks:
+        IdHashMap<RequestId, Box<dyn FnOnce(&mut Platform, &mut Eng) + Send>>,
     /// Scratch buffer reused by `recompute_pod` (hot path: one regime change
     /// per request start/finish/resize; avoids a per-event allocation).
     pub(crate) scratch_active: Vec<RequestId>,
+    /// Cross-shard reschedule outbox. `None` (the default) means this
+    /// platform is a standalone world and node crashes reschedule locally;
+    /// `Some` marks it as one cell of a sharded run, where a crash with no
+    /// surviving local capacity escalates to the sharded runtime instead.
+    pub(crate) xshard_outbox: Option<Vec<XShardMsg>>,
 }
 
 impl Platform {
@@ -149,6 +167,24 @@ impl Platform {
             metrics: Metrics::default(),
             completion_hooks: IdHashMap::default(),
             scratch_active: Vec::with_capacity(64),
+            xshard_outbox: None,
+        }
+    }
+
+    // ---------------------------------------------------------- sharded runs
+
+    /// Marks this platform as one cell of a sharded run: node crashes with
+    /// no surviving local capacity push [`XShardMsg`]s instead of burning
+    /// local reschedule attempts (see `crate::shard`).
+    pub fn arm_xshard_outbox(&mut self) {
+        self.xshard_outbox = Some(Vec::new());
+    }
+
+    /// Drains the cross-shard outbox (empty for standalone platforms).
+    pub fn take_xshard_msgs(&mut self) -> Vec<XShardMsg> {
+        match self.xshard_outbox.as_mut() {
+            Some(v) => std::mem::take(v),
+            None => Vec::new(),
         }
     }
 
@@ -211,7 +247,7 @@ impl Platform {
     /// it completes or fails (closed-loop load generation).
     pub fn submit_with_hook<F>(&mut self, eng: &mut Eng, service: &str, hook: F) -> RequestId
     where
-        F: FnOnce(&mut Platform, &mut Eng) + 'static,
+        F: FnOnce(&mut Platform, &mut Eng) + Send + 'static,
     {
         let id = self.submit(eng, service);
         self.completion_hooks.insert(id, Box::new(hook));

@@ -1,7 +1,7 @@
 //! `kinetic bench` — the fixed scale ladder behind the per-PR perf
 //! trajectory (`BENCH_<n>.json` at the repo root).
 //!
-//! Four rungs, smallest to largest, each exercising a different layer of
+//! Five rungs, smallest to largest, each exercising a different layer of
 //! the hot path:
 //!
 //! | rung              | what it measures                                  |
@@ -10,6 +10,7 @@
 //! | paper-closed-loop | §3 testbed, closed-loop VUs, in-place policy       |
 //! | fleet-100         | 100 uniform nodes, one tenant each, open-loop      |
 //! | azure-replay      | Azure-sample trace replay, one service per rank    |
+//! | fleet-sharded     | same fleet under the sharded runtime, 1/2/4 shards |
 //!
 //! The ladder is *fixed*: rung names, topologies and workloads never
 //! change across PRs, so `BENCH_5.json` vs `BENCH_6.json` is a like-for-
@@ -28,6 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::topology::Topology;
 use crate::coordinator::platform::Simulation;
+use crate::experiments::fleet::FleetConfig;
 use crate::loadgen::arrival::Arrival;
 use crate::loadgen::runner::{Runner, Scenario};
 use crate::policy::Policy;
@@ -336,6 +338,49 @@ pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
         ));
     }
 
+    // Rung 5: the sharded multi-coordinator runtime over the rung-3 fleet
+    // shape — one full pass per shard count (1, 2, 4), with the
+    // byte-identity contract asserted inline: the merged row must be the
+    // same at every count or the rung fails outright.
+    {
+        let nodes = if smoke { 10 } else { 100 };
+        let horizon = SimTime::from_secs(if smoke { 5 } else { 60 });
+        let cfg = FleetConfig {
+            services: nodes,
+            rate_per_service: 0.2,
+            horizon,
+            ..FleetConfig::base(Topology::uniform_paper(nodes), 42)
+        };
+        let mut events: u64 = 0;
+        let mut requests: u64 = 0;
+        let mut baseline: Option<String> = None;
+        let t0 = Instant::now();
+        for shards in [1u32, 2, 4] {
+            let (row, ev) =
+                crate::shard::run_policy_sharded_counting(&cfg, Policy::InPlace, shards);
+            events += ev;
+            requests = row.completed + row.failed;
+            let fingerprint = format!("{row:?}");
+            match &baseline {
+                None => baseline = Some(fingerprint),
+                Some(b) if *b != fingerprint => {
+                    return Err(format!(
+                        "fleet-sharded rung: merged row diverged at {shards} shard(s)"
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+        let wall = t0.elapsed();
+        rungs.push(RungResult::timed(
+            "fleet-sharded",
+            "rung-3 fleet under the sharded runtime at 1/2/4 shards",
+            requests,
+            events,
+            wall,
+        ));
+    }
+
     Ok(BenchReport {
         smoke,
         measured: true,
@@ -409,15 +454,15 @@ mod tests {
     /// schema-validate (cargo runs tests with cwd = rust/).
     #[test]
     fn committed_bench_json_validates() {
-        let r = BenchReport::load(Path::new("../BENCH_6.json")).expect("BENCH_6.json validates");
-        assert_eq!(r.rungs.len(), 4);
+        let r = BenchReport::load(Path::new("../BENCH_8.json")).expect("BENCH_8.json validates");
+        assert_eq!(r.rungs.len(), 5);
     }
 
     #[test]
     fn smoke_ladder_runs_end_to_end() {
         let r = run_ladder(true, Path::new("../examples/scenarios/azure_sample.csv")).unwrap();
         assert!(r.smoke && r.measured);
-        assert_eq!(r.rungs.len(), 4);
+        assert_eq!(r.rungs.len(), 5);
         for rung in &r.rungs {
             assert!(rung.events > 0, "{} processed no events", rung.name);
         }

@@ -19,7 +19,7 @@ use std::collections::BTreeMap;
 use crate::cluster::pod::PodId;
 use crate::cluster::NodeId;
 use crate::coordinator::event::Event;
-use crate::coordinator::platform::{Eng, Platform};
+use crate::coordinator::platform::{Eng, Platform, XShardMsg};
 use crate::knative::activator::RequestId;
 use crate::simclock::SimTime;
 use crate::util::quantity::MilliCpu;
@@ -299,6 +299,25 @@ impl Platform {
         }
         Self::committed_changed(w, eng);
 
+        // Sharded run with no surviving local capacity: escalate the lost
+        // pods to the sharded runtime instead of burning doomed local
+        // scheduler attempts. The runtime delivers each entry to a sibling
+        // cell one lookahead later (see `crate::shard`); nothing can drain
+        // here, so the local recovery half is skipped entirely.
+        if w.xshard_outbox.is_some() && !w.cluster.nodes().iter().any(|n| n.up()) {
+            let at = eng.now();
+            let msgs: Vec<XShardMsg> = lost
+                .iter()
+                .map(|(name, n)| XShardMsg {
+                    at,
+                    service: std::sync::Arc::from(name.as_str()),
+                    pods: *n as u32,
+                })
+                .collect();
+            w.xshard_outbox.as_mut().unwrap().extend(msgs);
+            return;
+        }
+
         // Recovery half: reschedule replacements and drain requeued
         // requests onto whatever capacity survives (a request re-buffered
         // above is dispatched here if a surviving pod has a free slot, or
@@ -311,6 +330,22 @@ impl Platform {
             }
             Self::drain_activator(w, eng, name);
         }
+    }
+
+    /// Delivered by the sharded runtime one lookahead after a sibling
+    /// cell's crash escalated its lost pods here: reschedule `pods`
+    /// replacements for `service` through the ordinary scheduler path —
+    /// the cross-shard counterpart of the local recovery half above.
+    pub(crate) fn xshard_reschedule(w: &mut Platform, eng: &mut Eng, service: &str, pods: u32) {
+        if !w.services.contains_key(service) {
+            return;
+        }
+        for _ in 0..pods {
+            if Self::start_pod(w, eng, service, true) {
+                w.metrics.pods_rescheduled += 1;
+            }
+        }
+        Self::drain_activator(w, eng, service);
     }
 
     /// Kills one ready pod of `svc_name`: in-flight requests are detached

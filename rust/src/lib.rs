@@ -27,5 +27,6 @@ pub mod loadgen;
 pub mod policy;
 pub mod runtime;
 pub mod scenario;
+pub mod shard;
 pub mod trace;
 pub mod workload;

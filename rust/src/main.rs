@@ -55,7 +55,8 @@ fn app() -> App {
                     "smoke",
                 )
                 .opt("out", "directory the ScenarioReport JSON is written to", "results")
-                .opt_threads("1"),
+                .opt_threads("1")
+                .opt_shards(),
         )
         .command(
             Command::new(
@@ -98,7 +99,8 @@ fn app() -> App {
                 .opt("services", "deployed tenants (0 = 2 per node)", "0")
                 .opt_rate("Poisson requests/second per tenant", "0.05")
                 .opt_seconds("arrival-stream horizon (virtual seconds)", "300")
-                .opt_seed("42"),
+                .opt_seed("42")
+                .opt_shards(),
         )
         .command(
             Command::new("serve", "serve batched requests over the PJRT artifacts")
@@ -115,7 +117,7 @@ fn app() -> App {
         )
         .command(
             Command::new("bench", "run the fixed perf scale ladder and write a bench JSON")
-                .opt("json", "output path for the bench report", "BENCH_6.json")
+                .opt("json", "output path for the bench report", "BENCH_8.json")
                 .opt(
                     "trace",
                     "Azure-sample CSV replayed by the last rung",
@@ -149,7 +151,7 @@ fn or_die<T>(r: Result<T, CliError>) -> T {
     }
 }
 
-fn run_scenario(arg: &str, out: &str, threads: usize) {
+fn run_scenario(arg: &str, out: &str, threads: usize, shards: Option<u32>) {
     let spec = match ScenarioEngine::load(arg) {
         Ok(s) => s,
         Err(e) => {
@@ -168,7 +170,7 @@ fn run_scenario(arg: &str, out: &str, threads: usize) {
         spec.policies.len(),
         spec.reps
     );
-    let report = match ScenarioEngine::run_with_threads(&spec, threads) {
+    let report = match ScenarioEngine::run_with_options(&spec, threads, shards) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("error: {e}");
@@ -542,6 +544,7 @@ fn run_fleet(
     rate: f64,
     seconds: u64,
     seed: u64,
+    shards: Option<u32>,
 ) {
     let topo = match TopologySpec::from_cli(topology_spec, nodes) {
         Ok(t) => t,
@@ -576,7 +579,7 @@ fn run_fleet(
         topology.total_capacity().cpu.0,
         if sweep_routing { "sweep" } else { spec.routing[0].name() },
     );
-    let report = match ScenarioEngine::run(&spec) {
+    let report = match ScenarioEngine::run_with_options(&spec, 1, shards) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("error: {e}");
@@ -702,6 +705,7 @@ fn main() {
             inv.get_or("scenario", "smoke"),
             inv.get_or("out", "results"),
             or_die(inv.threads()),
+            or_die(inv.shards()),
         ),
         "analyze" => {
             let file = inv
@@ -758,6 +762,7 @@ fn main() {
             or_die(inv.rate()),
             or_die(inv.seconds()),
             or_die(inv.seed()),
+            or_die(inv.shards()),
         ),
         "serve" => {
             // Shared policy parsing: garbage exits with the full valid-name
@@ -778,7 +783,7 @@ fn main() {
             let smoke = inv.flag("smoke") || std::env::var("KINETIC_SMOKE").is_ok();
             run_bench(
                 smoke,
-                inv.get_or("json", "BENCH_6.json"),
+                inv.get_or("json", "BENCH_8.json"),
                 inv.get_or("trace", "examples/scenarios/azure_sample.csv"),
             );
         }

@@ -74,6 +74,30 @@ impl ScenarioEngine {
         spec: &ScenarioSpec,
         threads: usize,
     ) -> Result<ScenarioReport, SpecError> {
+        ScenarioEngine::run_with_options(spec, threads, None)
+    }
+
+    /// Runs the full grid with an optional shard-count override for the
+    /// sharded multi-coordinator runtime (`crate::shard`). `shards` (the
+    /// CLI `--shards` flag) beats the spec's `shards` knob; `None`/no knob
+    /// keeps the classic single-coordinator path byte-for-byte. Sharded
+    /// reports are themselves byte-identical at any shard count.
+    pub fn run_with_options(
+        spec: &ScenarioSpec,
+        threads: usize,
+        shards: Option<u32>,
+    ) -> Result<ScenarioReport, SpecError> {
+        let shards = shards.or(spec.shards);
+        if shards.is_some() {
+            if let WorkloadSource::ClosedLoop { .. } = spec.workload {
+                return Err(SpecError::invalid(
+                    "shards",
+                    "closed-loop scenarios run the paper's single-node rig; \
+                     sharded execution does not apply — remove the shards \
+                     knob or use a synthetic/trace source",
+                ));
+            }
+        }
         let mut prepared = Vec::new();
         for (label, variant) in spec.expand()? {
             prepared.push(prepare_variant(label, variant)?);
@@ -93,7 +117,7 @@ impl ScenarioEngine {
                 }
             }
         }
-        let rows = execute(&prepared, &jobs, threads)?;
+        let rows = execute(&prepared, &jobs, threads, shards)?;
         Ok(ScenarioReport {
             name: spec.name.clone(),
             spec: spec.to_json(),
@@ -325,12 +349,13 @@ fn execute(
     prepared: &[PreparedVariant],
     jobs: &[Job],
     threads: usize,
+    shards: Option<u32>,
 ) -> Result<Vec<ScenarioRow>, SpecError> {
     let workers = threads.clamp(1, MAX_THREADS).min(jobs.len().max(1));
     if workers <= 1 {
         let mut rows = Vec::new();
         for job in jobs {
-            rows.extend(run_job(&prepared[job.variant], job)?);
+            rows.extend(run_job(&prepared[job.variant], job, shards)?);
         }
         return Ok(rows);
     }
@@ -351,7 +376,7 @@ fn execute(
                     break;
                 }
                 let job = &jobs[i];
-                let out = run_job(&prepared[job.variant], job);
+                let out = run_job(&prepared[job.variant], job, shards);
                 if out.is_err() {
                     failed.store(true, Ordering::Relaxed);
                 }
@@ -376,7 +401,11 @@ fn execute(
 /// cells expand to one row per Table-2 workload; everything else is one
 /// row per cell. The only fallible part is trace checkout (a missing or
 /// malformed trace file).
-fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError> {
+fn run_job(
+    p: &PreparedVariant,
+    job: &Job,
+    shards: Option<u32>,
+) -> Result<Vec<ScenarioRow>, SpecError> {
     let v = &p.spec;
     let seed = v.seed.wrapping_add(u64::from(job.rep));
     Ok(match &v.workload {
@@ -399,7 +428,10 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 forecast: v.forecast,
                 faults: v.faults.clone(),
             };
-            let f = fleet::run_policy(&cfg, job.policy);
+            let f = match shards {
+                Some(n) => crate::shard::run_policy_sharded(&cfg, job.policy, n),
+                None => fleet::run_policy(&cfg, job.policy),
+            };
             vec![ScenarioRow {
                 scenario: v.name.clone(),
                 variant: p.label.clone(),
@@ -444,7 +476,10 @@ fn run_job(p: &PreparedVariant, job: &Job) -> Result<Vec<ScenarioRow>, SpecError
                 faults: v.faults.clone(),
                 seed,
             };
-            let r = replay_with(trace, &cfg);
+            let r = match shards {
+                Some(n) => crate::shard::replay_sharded(trace, &cfg, n),
+                None => replay_with(trace, &cfg),
+            };
             vec![ScenarioRow {
                 scenario: v.name.clone(),
                 variant: p.label.clone(),

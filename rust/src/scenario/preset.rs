@@ -64,6 +64,7 @@ pub fn fleet(
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
         faults: crate::faults::FaultsConfig::default(),
+        shards: None,
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -93,6 +94,7 @@ pub fn trace(functions: usize, seconds: u64, rate: f64, seed: u64) -> ScenarioSp
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
         faults: crate::faults::FaultsConfig::default(),
+        shards: None,
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -116,6 +118,7 @@ pub fn paper(reps: u32, seed: u64) -> ScenarioSpec {
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
         faults: crate::faults::FaultsConfig::default(),
+        shards: None,
         seed,
         reps: 1,
         sweep: Vec::new(),
@@ -140,6 +143,7 @@ pub fn smoke() -> ScenarioSpec {
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
         faults: crate::faults::FaultsConfig::default(),
+        shards: None,
         seed: 42,
         reps: 1,
         sweep: Vec::new(),

@@ -248,6 +248,10 @@ pub struct ScenarioSpec {
     /// inflation and probabilistic resize failures. Default (no `faults`
     /// section) is inert — specs without one keep byte-identical output.
     pub faults: FaultsConfig,
+    /// Worker shards for the sharded multi-coordinator runtime (`None` =
+    /// the classic single-coordinator path). Reports are byte-identical at
+    /// any shard count; the CLI `--shards` flag overrides this knob.
+    pub shards: Option<u32>,
     pub seed: u64,
     pub reps: u32,
     pub sweep: Vec<Sweep>,
@@ -403,6 +407,7 @@ impl ScenarioSpec {
                 "hybrid_weights",
                 "forecast",
                 "faults",
+                "shards",
                 "seed",
                 "reps",
                 "sweep",
@@ -448,6 +453,15 @@ impl ScenarioSpec {
             None => FaultsConfig::default(),
             Some(f) => parse_faults(f)?,
         };
+        let shards = match m.get("shards") {
+            None => None,
+            Some(_) => Some(check_range_u64(
+                "shards",
+                get_u64(m, "", "shards", 1)?,
+                1,
+                crate::util::cli::MAX_SHARDS,
+            )? as u32),
+        };
         let seed = check_range_u64("seed", get_u64(m, "", "seed", 42)?, 0, MAX_EXACT_SEED)?;
         let reps = check_range_u64("reps", get_u64(m, "", "reps", 1)?, 1, 1000)? as u32;
         let sweep = match m.get("sweep") {
@@ -464,6 +478,7 @@ impl ScenarioSpec {
             hybrid,
             forecast,
             faults,
+            shards,
             seed,
             reps,
             sweep,
@@ -657,6 +672,11 @@ impl ScenarioSpec {
         // it was before fault injection existed.
         if self.faults != FaultsConfig::default() {
             top.push(("faults", faults_to_json(&self.faults)));
+        }
+        // Unsharded specs omit the knob, keeping the canonical form (and
+        // the spec echo inside every report) exactly as before sharding.
+        if let Some(s) = self.shards {
+            top.push(("shards", u64::from(s).into()));
         }
         top.push(("seed", self.seed.into()));
         top.push(("reps", u64::from(self.reps).into()));

@@ -1,0 +1,24 @@
+//! Sharded multi-coordinator execution: parallelism *inside* one run.
+//!
+//! The serial engine simulates one global platform; the sweep grid (PR 4)
+//! parallelized *across* runs. This subsystem parallelizes a single run:
+//! the fleet is partitioned into cells (one node + coordinator + engine
+//! each) grouped onto shards of scoped worker threads, synchronized by a
+//! conservative time-window protocol with lookahead equal to the
+//! kube-scheduler decision stage — the minimum cross-cell latency.
+//!
+//! * [`plan`] — the deterministic shard planner and its schema-versioned
+//!   manifest (`kinetic-shard-manifest`).
+//! * [`runtime`] — the lockstep window driver, cross-shard message
+//!   delivery, and the sharded counterparts of the fleet/replay runners.
+//!
+//! The contract, pinned by `tests/shard.rs` and the CI diff gate: reports
+//! are **byte-identical at any shard count**. See `docs/REPRODUCING.md`
+//! ("Sharded execution") for the protocol sketch and the determinism
+//! argument.
+
+pub mod plan;
+pub mod runtime;
+
+pub use plan::{stable_hash, ShardPlan, MANIFEST_KIND, MANIFEST_SCHEMA_VERSION};
+pub use runtime::{replay_sharded, run_policy_sharded, run_policy_sharded_counting};

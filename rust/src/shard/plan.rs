@@ -1,0 +1,205 @@
+//! The deterministic shard planner: stable hashes map nodes to cells to
+//! shards, and the assignment is written out as a schema-versioned shard
+//! manifest (the pb-sharder idiom: the partition is an auditable document,
+//! not an accident of thread scheduling).
+//!
+//! Two layers, both pure functions of names and counts:
+//!
+//! * **cell** — the unit of simulation state. One cell per topology node;
+//!   cell `i` owns node `i` and every service whose name hashes to `i`.
+//!   Cells exist at *every* shard count (including 1), which is what makes
+//!   reports byte-identical: changing `--shards` never moves state, only
+//!   which worker thread drives it.
+//! * **shard** — the unit of execution. `stable_hash("node-<i>") % shards`
+//!   groups cells onto worker threads; a shard may own zero cells (more
+//!   shards than nodes is legal and harmless).
+
+use crate::cluster::topology::Topology;
+use crate::util::json::Json;
+
+/// Version of the shard-manifest JSON layout.
+pub const MANIFEST_SCHEMA_VERSION: u64 = 1;
+/// Document discriminator for shard manifests.
+pub const MANIFEST_KIND: &str = "kinetic-shard-manifest";
+
+/// FNV-1a over the bytes of `s` — a stable, dependency-free hash that never
+/// changes across platforms or compiler versions, so shard assignment is
+/// part of the repo's contract rather than `DefaultHasher`'s whim.
+pub fn stable_hash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The deterministic partition of one run: cells (one per node) and their
+/// shard assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Worker-thread count the plan was built for.
+    pub shards: u32,
+    /// Shard owning each cell, indexed by cell (== node) index.
+    pub shard_of: Vec<u32>,
+}
+
+impl ShardPlan {
+    /// Plans `shards` workers over the topology: cell `i` is node `i`,
+    /// assigned to `stable_hash("node-<i>") % shards`.
+    pub fn new(topology: &Topology, shards: u32) -> ShardPlan {
+        assert!(shards > 0, "shard count must be >= 1");
+        let shard_of = (0..topology.len())
+            .map(|i| (stable_hash(&format!("node-{i}")) % u64::from(shards)) as u32)
+            .collect();
+        ShardPlan { shards, shard_of }
+    }
+
+    /// Number of cells (== topology nodes).
+    pub fn cells(&self) -> usize {
+        self.shard_of.len()
+    }
+
+    /// Home cell of a service: `stable_hash(name) % cells`. Every arrival
+    /// for the service is injected there, at any shard count.
+    pub fn cell_of(&self, service: &str) -> usize {
+        (stable_hash(service) % self.shard_of.len() as u64) as usize
+    }
+
+    /// The schema-versioned shard manifest: one entry per cell with its
+    /// node, shard, and the home services assigned to it.
+    pub fn manifest(&self, services: &[String]) -> Json {
+        let cells = (0..self.cells()).map(|i| {
+            let homed: Vec<Json> = services
+                .iter()
+                .filter(|s| self.cell_of(s) == i)
+                .map(|s| s.as_str().into())
+                .collect();
+            Json::obj(vec![
+                ("cell", (i as u64).into()),
+                ("node", (i as u64).into()),
+                ("shard", u64::from(self.shard_of[i]).into()),
+                ("services", Json::Arr(homed)),
+            ])
+        });
+        Json::obj(vec![
+            ("kind", MANIFEST_KIND.into()),
+            ("schema_version", MANIFEST_SCHEMA_VERSION.into()),
+            ("shards", u64::from(self.shards).into()),
+            ("cells", Json::arr(cells)),
+        ])
+    }
+
+    /// Rebuilds a plan from a manifest, validating kind and version.
+    pub fn from_manifest(j: &Json) -> Result<ShardPlan, String> {
+        let kind = j.req_str("kind").map_err(|e| e.to_string())?;
+        if kind != MANIFEST_KIND {
+            return Err(format!("kind '{kind}' is not '{MANIFEST_KIND}'"));
+        }
+        let version = j.req_u64("schema_version").map_err(|e| e.to_string())?;
+        if version != MANIFEST_SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {version} unsupported (expected {MANIFEST_SCHEMA_VERSION})"
+            ));
+        }
+        let shards = j.req_u64("shards").map_err(|e| e.to_string())?;
+        if shards == 0 {
+            return Err("'shards' must be >= 1".to_string());
+        }
+        let cells = j.req_arr("cells").map_err(|e| e.to_string())?;
+        let mut shard_of = Vec::with_capacity(cells.len());
+        for (i, c) in cells.iter().enumerate() {
+            let ctx = |e: crate::util::json::JsonError| format!("cells[{i}]: {e}");
+            let cell = c.req_u64("cell").map_err(ctx)?;
+            if cell != i as u64 {
+                return Err(format!("cells[{i}] has cell index {cell}"));
+            }
+            let shard = c.req_u64("shard").map_err(ctx)?;
+            if shard >= shards {
+                return Err(format!("cells[{i}] assigned to shard {shard} of {shards}"));
+            }
+            shard_of.push(shard as u32);
+        }
+        Ok(ShardPlan {
+            shards: shards as u32,
+            shard_of,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_hash_is_pinned() {
+        // FNV-1a reference vectors: the assignment contract must never move.
+        assert_eq!(stable_hash(""), 0xcbf29ce484222325);
+        assert_eq!(stable_hash("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(stable_hash("node-0"), stable_hash("node-0"));
+        assert_ne!(stable_hash("node-0"), stable_hash("node-1"));
+    }
+
+    #[test]
+    fn assignment_is_stable_and_shard_count_independent_for_cells() {
+        let topo = Topology::uniform_paper(8);
+        let p1 = ShardPlan::new(&topo, 1);
+        let p4 = ShardPlan::new(&topo, 4);
+        assert_eq!(p1.cells(), 8);
+        assert_eq!(p4.cells(), 8);
+        // Cell homing ignores the shard count entirely.
+        for svc in ["fn-0", "fn-1", "helloworld"] {
+            assert_eq!(p1.cell_of(svc), p4.cell_of(svc));
+        }
+        // Everything lands on shard 0 at shards=1.
+        assert!(p1.shard_of.iter().all(|&s| s == 0));
+        assert!(p4.shard_of.iter().all(|&s| s < 4));
+        // Re-planning is bit-identical.
+        assert_eq!(p4, ShardPlan::new(&topo, 4));
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let topo = Topology::uniform_paper(3);
+        let plan = ShardPlan::new(&topo, 2);
+        let services = vec!["fn-0".to_string(), "fn-1".to_string(), "fn-2".to_string()];
+        let j = plan.manifest(&services);
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(ShardPlan::from_manifest(&parsed).unwrap(), plan);
+        // Every service appears in exactly one cell.
+        let cells = parsed.req_arr("cells").unwrap();
+        let mut seen = 0;
+        for c in cells {
+            seen += c.req_arr("services").unwrap().len();
+        }
+        assert_eq!(seen, services.len());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_documents() {
+        let topo = Topology::uniform_paper(2);
+        let plan = ShardPlan::new(&topo, 2);
+        let mut j = plan.manifest(&[]);
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema_version".to_string(), 99u64.into());
+        }
+        assert!(ShardPlan::from_manifest(&j)
+            .unwrap_err()
+            .contains("schema_version"));
+        let mut j = plan.manifest(&[]);
+        if let Json::Obj(m) = &mut j {
+            m.insert("kind".to_string(), "something-else".into());
+        }
+        assert!(ShardPlan::from_manifest(&j).unwrap_err().contains("kind"));
+    }
+
+    #[test]
+    fn more_shards_than_cells_leaves_some_shards_empty() {
+        let topo = Topology::uniform_paper(2);
+        let plan = ShardPlan::new(&topo, 16);
+        assert_eq!(plan.cells(), 2);
+        let used: std::collections::BTreeSet<u32> = plan.shard_of.iter().copied().collect();
+        assert!(used.len() <= 2, "at most one shard per cell is populated");
+    }
+}

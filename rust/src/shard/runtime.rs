@@ -1,0 +1,559 @@
+//! The sharded multi-coordinator runtime: one cell (node + coordinator +
+//! calendar-queue engine) per topology node, driven in lockstep time
+//! windows, with shards of cells running on scoped worker threads.
+//!
+//! ## Protocol
+//!
+//! Conservative (Chandy–Misra style) synchronization over a fixed global
+//! window ladder:
+//!
+//! 1. Every cell settles its deploy locally; its settle instant becomes
+//!    the origin of *global* time for that cell (`g = local − settle`).
+//! 2. Each round, the driver peeks every cell's earliest pending event and
+//!    jumps the window start to the earliest one (dead windows are
+//!    skipped, not simulated). The window is `[start, start + L]` where
+//!    `L` is the lookahead.
+//! 3. Cells run `run_until(settle + window_end)` — grouped by shard, one
+//!    scoped thread per non-empty shard. The scope join is the barrier.
+//! 4. At the barrier, cross-cell messages (crash-driven pod reschedules)
+//!    are drained from every cell outbox in deterministic order, a target
+//!    cell is picked by a pure function of cell state, and the delivery is
+//!    scheduled in the target's queue at `emit + L` — which is `>=` the
+//!    window end, so no cell ever receives an event from its past.
+//!
+//! ## Lookahead
+//!
+//! `L = StartupParams::schedule_ms` — the kube-scheduler decision/binding
+//! stage, the first stage of *any* cross-cell pod placement. A crash
+//! escalated at `t` cannot materially affect a sibling cell before
+//! `t + L`, so delivering at exactly `t + L` loses nothing.
+//!
+//! ## Why reports are byte-identical at any shard count
+//!
+//! Cells and their seeds, service homing, arrival streams, fault splits,
+//! the window ladder, outbox ordering and target choice are all pure
+//! functions of the spec — never of the shard count. Shards only decide
+//! which worker thread calls `run_until` on a cell, and cells share no
+//! mutable state, so `--shards 1`, `2` and `4` execute identical event
+//! sequences per cell and merge in the same canonical order.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::topology::Topology;
+use crate::coordinator::event::Event;
+use crate::coordinator::platform::{Simulation, XShardMsg};
+use crate::coordinator::service::Service;
+use crate::experiments::fleet::{FleetConfig, FleetRow, FLEET_MIX};
+use crate::faults::FaultsConfig;
+use crate::knative::config::RevisionConfig;
+use crate::loadgen::arrival::Arrival;
+use crate::policy::{PlatformParams, Policy};
+use crate::shard::plan::ShardPlan;
+use crate::simclock::SimTime;
+use crate::trace::generator::{TraceEvent, TraceGenerator};
+use crate::trace::replay::{ReplayConfig, ReplayReport};
+use crate::util::stats::Samples;
+use crate::workload::registry::{WorkloadKind, WorkloadProfile};
+
+/// One cell: a full platform over a single node, plus the local settle
+/// instant that anchors it to global time.
+struct Cell {
+    sim: Simulation,
+    settle: SimTime,
+}
+
+impl Cell {
+    fn next_global(&mut self) -> Option<SimTime> {
+        let settle = self.settle;
+        self.sim
+            .engine
+            .next_at()
+            .map(|at| at.saturating_sub(settle))
+    }
+}
+
+/// What a service looked like at deploy time — enough to stamp a replica
+/// (min-scale zero) into a sibling cell when a crash reschedules across
+/// the shard boundary.
+struct ServiceTemplate {
+    profile: WorkloadProfile,
+    policy: Policy,
+    rc: RevisionConfig,
+}
+
+/// Mixes the cell index into the scenario seed (splitmix64's golden-ratio
+/// increment) so per-cell RNG streams are decorrelated but depend only on
+/// (seed, cell) — never on the shard count.
+fn cell_seed(seed: u64, cell: usize) -> u64 {
+    seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(cell as u64 + 1)
+}
+
+/// The conservative lookahead: the scheduler decision/binding stage, the
+/// first stage of any cross-cell pod placement.
+fn lookahead(params: &PlatformParams) -> SimTime {
+    SimTime::from_millis_f64(params.startup.schedule_ms)
+}
+
+/// Builds one armed cell per topology node.
+fn build_cells(topology: &Topology, seed: u64) -> Vec<Cell> {
+    topology
+        .shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, shape)| {
+            let params = PlatformParams::with_seed(cell_seed(seed, i));
+            let mut sim =
+                Simulation::fleet_with_params(Topology::heterogeneous(vec![shape.clone()]), params);
+            sim.world.arm_xshard_outbox();
+            Cell {
+                sim,
+                settle: SimTime::ZERO,
+            }
+        })
+        .collect()
+}
+
+/// Projects the global fault schedule onto one cell: crash/straggler
+/// entries for node `i` become entries for the cell's only node (index 0);
+/// the global knobs (inflation, resize failures, crash policy) apply
+/// everywhere. Node ids were validated against the *global* topology by
+/// the scenario compiler before this projection.
+fn local_faults(cfg: &FaultsConfig, cell: u32) -> FaultsConfig {
+    FaultsConfig {
+        node_crashes: cfg
+            .node_crashes
+            .iter()
+            .filter(|c| c.node == cell)
+            .map(|c| crate::faults::NodeCrash { node: 0, ..*c })
+            .collect(),
+        crash_requests: cfg.crash_requests,
+        stragglers: cfg
+            .stragglers
+            .iter()
+            .filter(|s| s.node == cell)
+            .map(|s| crate::faults::Straggler { node: 0, ..*s })
+            .collect(),
+        startup_inflation: cfg.startup_inflation,
+        resize_failure_p: cfg.resize_failure_p,
+    }
+}
+
+/// Runs one window on every cell, shard groups in parallel. The scope
+/// join is the window barrier.
+fn run_window(cells: &mut [Cell], plan: &ShardPlan, window_end: SimTime) {
+    let mut groups: Vec<Vec<&mut Cell>> = (0..plan.shards as usize).map(|_| Vec::new()).collect();
+    for (i, cell) in cells.iter_mut().enumerate() {
+        groups[plan.shard_of[i] as usize].push(cell);
+    }
+    let mut live: Vec<Vec<&mut Cell>> = groups.into_iter().filter(|g| !g.is_empty()).collect();
+    if live.len() <= 1 {
+        // One populated shard (or none): no threads to spawn.
+        for group in &mut live {
+            for cell in group.iter_mut() {
+                let deadline = cell.settle + window_end;
+                cell.sim.run_until(deadline);
+            }
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for group in live {
+            s.spawn(move || {
+                for cell in group {
+                    let deadline = cell.settle + window_end;
+                    cell.sim.run_until(deadline);
+                }
+            });
+        }
+    });
+}
+
+/// Picks the reschedule target for a message from `src`: the sibling cell
+/// whose node is up with the most free CPU, ties to the lowest cell index.
+/// A pure function of cell state, so the choice is shard-count
+/// independent.
+fn pick_target(cells: &[Cell], src: usize) -> Option<usize> {
+    let mut best: Option<(u64, usize)> = None;
+    for (i, cell) in cells.iter().enumerate() {
+        if i == src {
+            continue;
+        }
+        let node = &cell.sim.world.cluster.nodes()[0];
+        if !node.up() {
+            continue;
+        }
+        let free = node.capacity().cpu.0.saturating_sub(node.reserved().cpu.0);
+        match best {
+            Some((best_free, _)) if free <= best_free => {}
+            _ => best = Some((free, i)),
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+/// Makes sure `service` exists in `cell`, stamping a min-scale-zero
+/// replica from its deploy-time template if not. The replica hosts
+/// rescheduled replacement pods; traffic keeps flowing to the home cell.
+fn ensure_service(cell: &mut Cell, service: &str, templates: &BTreeMap<String, ServiceTemplate>) {
+    if cell.sim.world.services.contains_key(service) {
+        return;
+    }
+    let Some(t) = templates.get(service) else { return };
+    let mut rc = t.rc.clone();
+    rc.min_scale = 0;
+    cell.sim
+        .deploy_service(Service::with_config(service, t.profile.clone(), t.policy, rc));
+}
+
+/// Drains every cell's cross-shard outbox at a window barrier and
+/// schedules each message into its target cell at `emit + L` (>= the
+/// window end by construction, so targets never see the past).
+fn deliver(
+    cells: &mut [Cell],
+    templates: &BTreeMap<String, ServiceTemplate>,
+    lookahead: SimTime,
+) {
+    // (emit in global time, source cell, message) — collected in cell
+    // order, stably sorted by (emit, source), so delivery order is a pure
+    // function of simulation state.
+    let mut batch: Vec<(SimTime, usize, XShardMsg)> = Vec::new();
+    for (i, cell) in cells.iter_mut().enumerate() {
+        let settle = cell.settle;
+        for msg in cell.sim.world.take_xshard_msgs() {
+            batch.push((msg.at.saturating_sub(settle), i, msg));
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
+    batch.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    for (emit, src, msg) in batch {
+        match pick_target(cells, src) {
+            Some(target) => {
+                ensure_service(&mut cells[target], &msg.service, templates);
+                let at = cells[target].settle + emit + lookahead;
+                cells[target].sim.engine.schedule_at(
+                    at,
+                    Event::XShardReschedule {
+                        service: msg.service,
+                        pods: msg.pods,
+                    },
+                );
+            }
+            // The whole fleet is down: nothing can host the replacements.
+            None => cells[src].sim.world.metrics.pods_unschedulable += u64::from(msg.pods),
+        }
+    }
+}
+
+/// The lockstep window loop: run windows until every cell's queue drains.
+/// Progress is guaranteed — the window start jumps to the earliest pending
+/// event, which is then strictly inside the window.
+fn drive(
+    cells: &mut [Cell],
+    plan: &ShardPlan,
+    templates: &BTreeMap<String, ServiceTemplate>,
+    lookahead: SimTime,
+) {
+    loop {
+        let next = cells.iter_mut().filter_map(Cell::next_global).min();
+        let Some(window_start) = next else { break };
+        run_window(cells, plan, window_start + lookahead);
+        deliver(cells, templates, lookahead);
+    }
+}
+
+/// Canonical merge of per-cell service metrics: cells in node order,
+/// services in BTreeMap order within each — so floats sum in a fixed
+/// order and the merged report is bit-identical at any shard count.
+struct Merged {
+    lat: Samples,
+    completed: u64,
+    failed: u64,
+    cold: u64,
+    ups: u64,
+    spec_ups: u64,
+    mispred: u64,
+    avg_committed_mcpu: f64,
+    pods_created: u64,
+    pods_unschedulable: u64,
+    pods_evicted: u64,
+    pods_rescheduled: u64,
+    resize_failures: u64,
+    /// Longest per-cell measured span (now − settle).
+    wall: SimTime,
+}
+
+fn merge(cells: &[Cell]) -> Merged {
+    let mut m = Merged {
+        lat: Samples::new(),
+        completed: 0,
+        failed: 0,
+        cold: 0,
+        ups: 0,
+        spec_ups: 0,
+        mispred: 0,
+        avg_committed_mcpu: 0.0,
+        pods_created: 0,
+        pods_unschedulable: 0,
+        pods_evicted: 0,
+        pods_rescheduled: 0,
+        resize_failures: 0,
+        wall: SimTime::ZERO,
+    };
+    for cell in cells.iter() {
+        let now = cell.sim.engine.now();
+        let metrics = &cell.sim.world.metrics;
+        for (_, s) in metrics.services() {
+            m.completed += s.completed;
+            m.failed += s.failed;
+            m.cold += s.cold_starts;
+            m.ups += s.inplace_scale_ups;
+            m.spec_ups += s.speculative_resizes;
+            m.mispred += s.mispredictions;
+            for &v in s.latency_ms.values() {
+                m.lat.record(v);
+            }
+        }
+        m.avg_committed_mcpu += metrics.committed_cpu.average_mcpu(now);
+        m.pods_created += metrics.pods_created;
+        m.pods_unschedulable += metrics.pods_unschedulable;
+        m.pods_evicted += metrics.pods_evicted;
+        m.pods_rescheduled += metrics.pods_rescheduled;
+        m.resize_failures += metrics.resize_failures;
+        m.wall = m.wall.max(now.saturating_sub(cell.settle));
+    }
+    m
+}
+
+/// Sharded counterpart of [`fleet::run_policy`](crate::experiments::fleet::run_policy):
+/// the same synthetic open-loop fleet, partitioned one cell per node.
+pub fn run_policy_sharded(cfg: &FleetConfig, policy: Policy, shards: u32) -> FleetRow {
+    run_policy_sharded_counting(cfg, policy, shards).0
+}
+
+/// Like [`run_policy_sharded`] but also returns total engine events
+/// processed across every cell (the bench ladder's throughput numerator).
+pub fn run_policy_sharded_counting(
+    cfg: &FleetConfig,
+    policy: Policy,
+    shards: u32,
+) -> (FleetRow, u64) {
+    let plan = ShardPlan::new(&cfg.topology, shards);
+    let la = lookahead(&PlatformParams::with_seed(cfg.seed));
+    let mut cells = build_cells(&cfg.topology, cfg.seed);
+    for cell in cells.iter_mut() {
+        cell.sim.world.routing = cfg.routing;
+        cell.sim.world.hybrid_weights = cfg.hybrid;
+    }
+
+    // Deploy every tenant into its home cell, keeping the template for
+    // cross-cell replicas.
+    let mix: &[WorkloadKind] = if cfg.mix.is_empty() { &FLEET_MIX } else { &cfg.mix };
+    let mut templates: BTreeMap<String, ServiceTemplate> = BTreeMap::new();
+    for i in 0..cfg.services {
+        let kind = mix[i % mix.len()];
+        let mut rc = policy.revision_config();
+        cfg.knobs.apply(&mut rc);
+        cfg.forecast.apply(&mut rc, policy);
+        let name = format!("fn-{i}");
+        let profile = WorkloadProfile::paper(kind);
+        let home = plan.cell_of(&name);
+        cells[home]
+            .sim
+            .deploy_service(Service::with_config(&name, profile.clone(), policy, rc.clone()));
+        templates.insert(name, ServiceTemplate { profile, policy, rc });
+    }
+    for cell in cells.iter_mut() {
+        cell.sim.run(); // settle: min-scale pods up / in-place pods parked
+        cell.settle = cell.sim.now();
+    }
+
+    // Open-loop Poisson stream per tenant — the exact per-service seeds of
+    // the serial path, injected upfront into the home cell.
+    for i in 0..cfg.services {
+        let mut rng = crate::util::rng::Rng::new(cfg.seed ^ (0xF1EE7 + i as u64));
+        let arrival = Arrival::Poisson {
+            rate_per_sec: cfg.rate_per_service,
+        };
+        let name = format!("fn-{i}");
+        let home = plan.cell_of(&name);
+        let start = cells[home].settle;
+        for t in arrival.times(cfg.horizon, &mut rng) {
+            cells[home].sim.submit_at(start + t, &name);
+        }
+    }
+
+    for (i, cell) in cells.iter_mut().enumerate() {
+        let local = local_faults(&cfg.faults, i as u32);
+        let engine = &mut cell.sim.engine;
+        cell.sim.world.install_faults(engine, &local);
+    }
+
+    drive(&mut cells, &plan, &templates, la);
+
+    let mut m = merge(&cells);
+    let events = cells.iter().map(|c| c.sim.engine.processed()).sum();
+    let row = FleetRow {
+        policy,
+        routing: cfg.routing,
+        nodes: cfg.topology.len(),
+        services: cfg.services,
+        completed: m.completed,
+        failed: m.failed,
+        mean_ms: m.lat.mean(),
+        p50_ms: m.lat.percentile(50.0),
+        p99_ms: m.lat.percentile(99.0),
+        cold_starts: m.cold,
+        inplace_scale_ups: m.ups,
+        speculative_resizes: m.spec_ups,
+        mispredictions: m.mispred,
+        avg_committed_mcpu: m.avg_committed_mcpu,
+        pods_created: m.pods_created,
+        pods_unschedulable: m.pods_unschedulable,
+        pods_evicted: m.pods_evicted,
+        pods_rescheduled: m.pods_rescheduled,
+        resize_failures: m.resize_failures,
+    };
+    (row, events)
+}
+
+/// Sharded counterpart of [`replay_with`](crate::trace::replay::replay_with):
+/// the same trace replay, one cell per topology node, functions homed by
+/// rank name.
+pub fn replay_sharded(trace: &[TraceEvent], cfg: &ReplayConfig, shards: u32) -> ReplayReport {
+    let plan = ShardPlan::new(&cfg.topology, shards);
+    let la = lookahead(&PlatformParams::with_seed(cfg.seed));
+    let mut cells = build_cells(&cfg.topology, cfg.seed);
+    for cell in cells.iter_mut() {
+        cell.sim.world.routing = cfg.routing;
+        cell.sim.world.hybrid_weights = cfg.hybrid;
+    }
+
+    let mut names: BTreeMap<usize, String> = BTreeMap::new();
+    let mut templates: BTreeMap<String, ServiceTemplate> = BTreeMap::new();
+    for rank in 0..cfg.functions {
+        let name = format!("fn-{rank}");
+        let mut rc = cfg.policy.revision_config();
+        cfg.knobs.apply(&mut rc);
+        cfg.forecast.apply(&mut rc, cfg.policy);
+        let profile = TraceGenerator::profile_for(rank);
+        let home = plan.cell_of(&name);
+        cells[home].sim.deploy_service(Service::with_config(
+            &name,
+            profile.clone(),
+            cfg.policy,
+            rc.clone(),
+        ));
+        templates.insert(
+            name.clone(),
+            ServiceTemplate {
+                profile,
+                policy: cfg.policy,
+                rc,
+            },
+        );
+        names.insert(rank, name);
+    }
+    for cell in cells.iter_mut() {
+        cell.sim.run();
+        cell.settle = cell.sim.now();
+    }
+
+    for ev in trace {
+        let name = &names[&ev.function];
+        let home = plan.cell_of(name);
+        let start = cells[home].settle;
+        cells[home].sim.submit_at(start + ev.at, name);
+    }
+
+    for (i, cell) in cells.iter_mut().enumerate() {
+        let local = local_faults(&cfg.faults, i as u32);
+        let engine = &mut cell.sim.engine;
+        cell.sim.world.install_faults(engine, &local);
+    }
+
+    drive(&mut cells, &plan, &templates, la);
+
+    let mut m = merge(&cells);
+    ReplayReport {
+        policy: cfg.policy,
+        completed: m.completed,
+        failed: m.failed,
+        mean_ms: m.lat.mean(),
+        p50_ms: m.lat.percentile(50.0),
+        p99_ms: m.lat.percentile(99.0),
+        cold_starts: m.cold,
+        inplace_scale_ups: m.ups,
+        speculative_resizes: m.spec_ups,
+        mispredictions: m.mispred,
+        avg_committed_mcpu: m.avg_committed_mcpu,
+        pods_created: m.pods_created,
+        pods_unschedulable: m.pods_unschedulable,
+        pods_evicted: m.pods_evicted,
+        pods_rescheduled: m.pods_rescheduled,
+        resize_failures: m.resize_failures,
+        wall: m.wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accounting::RoutingPolicy;
+
+    fn tiny_cfg() -> FleetConfig {
+        FleetConfig {
+            services: 6,
+            rate_per_service: 0.2,
+            horizon: SimTime::from_secs(20),
+            routing: RoutingPolicy::LeastLoaded,
+            ..FleetConfig::base(Topology::uniform_paper(3), 42)
+        }
+    }
+
+    #[test]
+    fn fleet_rows_are_identical_across_shard_counts() {
+        let cfg = tiny_cfg();
+        for policy in [Policy::InPlace, Policy::Warm] {
+            let one = run_policy_sharded(&cfg, policy, 1);
+            let two = run_policy_sharded(&cfg, policy, 2);
+            let four = run_policy_sharded(&cfg, policy, 4);
+            assert_eq!(format!("{one:?}"), format!("{two:?}"), "{policy:?} 1 vs 2");
+            assert_eq!(format!("{one:?}"), format!("{four:?}"), "{policy:?} 1 vs 4");
+            assert!(one.completed > 0, "{policy:?} completed nothing");
+            assert_eq!(one.failed, 0);
+        }
+    }
+
+    #[test]
+    fn crash_escalation_reschedules_into_a_sibling_cell() {
+        let mut cfg = tiny_cfg();
+        cfg.faults = FaultsConfig {
+            node_crashes: vec![crate::faults::NodeCrash {
+                node: 0,
+                at: SimTime::from_secs(2),
+                down: SimTime::from_secs(60),
+            }],
+            crash_requests: crate::faults::CrashRequestPolicy::Fail,
+            ..FaultsConfig::default()
+        };
+        let one = run_policy_sharded(&cfg, Policy::Warm, 1);
+        let four = run_policy_sharded(&cfg, Policy::Warm, 4);
+        assert_eq!(one.pods_evicted, four.pods_evicted);
+        assert_eq!(one.pods_rescheduled, four.pods_rescheduled);
+        assert!(one.pods_evicted > 0, "the crash must evict something");
+        assert!(
+            one.pods_rescheduled > 0,
+            "replacements must land in a sibling cell"
+        );
+    }
+
+    #[test]
+    fn more_shards_than_cells_is_harmless() {
+        let cfg = tiny_cfg();
+        let one = run_policy_sharded(&cfg, Policy::InPlace, 1);
+        let many = run_policy_sharded(&cfg, Policy::InPlace, 16);
+        assert_eq!(format!("{one:?}"), format!("{many:?}"));
+    }
+}

@@ -91,6 +91,12 @@ impl<W: World> Engine<W> {
         self.queue.len()
     }
 
+    /// Virtual time of the earliest pending event, if any. Lets a windowed
+    /// multi-engine driver skip dead windows without popping anything.
+    pub fn next_at(&mut self) -> Option<SimTime> {
+        self.queue.peek_at()
+    }
+
     /// Schedules `ev` at absolute time `at` (clamped to now if in the past).
     pub fn schedule_at(&mut self, at: SimTime, ev: W::Event) -> Scheduled {
         let at = at.max(self.now);
@@ -321,6 +327,19 @@ mod tests {
         assert_eq!(eng.pending(), 0);
         assert_eq!(eng.run(&mut w), 0);
         assert_eq!(w.log.len(), 1);
+    }
+
+    #[test]
+    fn next_at_peeks_without_popping() {
+        let mut eng: Engine<TestWorld> = Engine::new();
+        let mut w = TestWorld::default();
+        assert_eq!(eng.next_at(), None);
+        eng.schedule_at(SimTime::from_millis(20), Ev::Log(20, "later"));
+        eng.schedule_at(SimTime::from_millis(10), Ev::Log(10, "sooner"));
+        assert_eq!(eng.next_at(), Some(SimTime::from_millis(10)));
+        assert_eq!(eng.pending(), 2, "peek must not consume");
+        eng.run(&mut w);
+        assert_eq!(eng.next_at(), None);
     }
 
     /// A stale id whose slot was recycled must not cancel the new tenant.

@@ -12,6 +12,13 @@ use std::fmt;
 /// would clamp (or reject what it would run).
 pub const MAX_THREADS: usize = 256;
 
+/// Hard cap on the shared `--shards` option and the scenario spec's
+/// `shards` knob. A shard can never hold less than one fleet cell, and
+/// no committed topology exceeds a few hundred nodes, so 64 is already
+/// past the point of diminishing returns; like [`MAX_THREADS`] this only
+/// guards against a mistyped huge value.
+pub const MAX_SHARDS: u64 = 64;
+
 /// Declared option for a subcommand.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
@@ -145,6 +152,16 @@ impl Invocation {
             .map(|v| v as usize)
     }
 
+    /// The shared `--shards` option: shard count in `[1, MAX_SHARDS]`, or
+    /// `None` when the flag was left at its empty default (meaning "use
+    /// the spec's `shards` knob, or the classic single-coordinator path").
+    pub fn shards(&self) -> Result<Option<u32>, CliError> {
+        match self.get("shards") {
+            None | Some("") => Ok(None),
+            Some(_) => self.u64_in("shards", 1, MAX_SHARDS).map(|v| Some(v as u32)),
+        }
+    }
+
     /// A scheduling-policy option (`serve --policy`, `analyze --baseline`,
     /// ...): one `FromStr` path shared with scenario `policies` lists, so
     /// the accepted spellings and the valid-name error text (derived from
@@ -231,6 +248,15 @@ impl Command {
             "threads",
             "worker threads for the run grid (the report is identical at any count)",
             default,
+        )
+    }
+
+    pub fn opt_shards(self) -> Self {
+        self.opt(
+            "shards",
+            "coordinator shards for one run (the report is byte-identical \
+             at any count); empty = the spec's `shards` knob",
+            "",
         )
     }
 
@@ -472,6 +498,35 @@ mod tests {
         // The legacy accessor still silently falls back (documented).
         let inv = app.parse(&sv(&["go", "--seed", "banana"])).unwrap();
         assert_eq!(inv.get_u64("seed", 7), 7);
+    }
+
+    #[test]
+    fn shards_option_is_optional_and_range_checked() {
+        let app =
+            App::new("k", "t").command(Command::new("go", "x").opt_shards());
+
+        // Left at the empty default: no override requested.
+        let inv = app.parse(&sv(&["go"])).unwrap();
+        assert_eq!(inv.shards().unwrap(), None);
+
+        let inv = app.parse(&sv(&["go", "--shards", "1"])).unwrap();
+        assert_eq!(inv.shards().unwrap(), Some(1));
+        let inv = app.parse(&sv(&["go", "--shards", "64"])).unwrap();
+        assert_eq!(inv.shards().unwrap(), Some(64));
+
+        let inv = app.parse(&sv(&["go", "--shards", "0"])).unwrap();
+        let e = inv.shards().unwrap_err().to_string();
+        assert!(e.contains("--shards") && e.contains("outside"), "{e}");
+        let inv = app.parse(&sv(&["go", "--shards", "65"])).unwrap();
+        assert!(inv.shards().is_err());
+        let inv = app.parse(&sv(&["go", "--shards", "many"])).unwrap();
+        let e = inv.shards().unwrap_err().to_string();
+        assert!(e.contains("not an integer"), "{e}");
+
+        // A command that never declared the option reports None too.
+        let bare = App::new("k", "t").command(Command::new("go", "x"));
+        let inv = bare.parse(&sv(&["go"])).unwrap();
+        assert_eq!(inv.shards().unwrap(), None);
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Integration locks for the sharded multi-coordinator runtime:
+//!
+//! 1. The acceptance criterion — `kinetic run --shards N` emits a
+//!    ScenarioReport **byte-identical** to `--shards 1` for N ∈ {2, 4} on
+//!    the smoke, predictive and node-crash studies (the sharded sibling of
+//!    `analysis.rs::smoke_report_is_byte_identical_across_thread_counts`).
+//! 2. Shard × fault interplay: fault node indices are validated against
+//!    the *global* topology before shard planning, and crash-evicted pods
+//!    reschedule deterministically regardless of the shard count.
+//! 3. The shard planner's public contract: stable assignment, manifest
+//!    round-trip, empty shards are harmless.
+
+use kinetic::scenario::preset;
+use kinetic::scenario::{ScenarioEngine, ScenarioReport, ScenarioSpec};
+use kinetic::shard::{ShardPlan, MANIFEST_KIND};
+
+/// Runs `spec` under the sharded runtime at the given shard count, via
+/// the same entry point the CLI `--shards` flag uses. The spec itself is
+/// untouched, so the spec echo inside the report is identical across
+/// counts — any byte difference is a real divergence in the rows.
+fn run_sharded(spec: &ScenarioSpec, shards: u32) -> ScenarioReport {
+    ScenarioEngine::run_with_options(spec, 1, Some(shards)).unwrap()
+}
+
+fn assert_identical_across_shard_counts(spec: &ScenarioSpec) -> ScenarioReport {
+    let one = run_sharded(spec, 1);
+    for n in [2u32, 4] {
+        let sharded = run_sharded(spec, n);
+        assert_eq!(
+            one.to_json().to_string_pretty().as_bytes(),
+            sharded.to_json().to_string_pretty().as_bytes(),
+            "'{}' report at --shards {n} diverged from --shards 1",
+            spec.name
+        );
+    }
+    one
+}
+
+/// Acceptance criterion on the smoke preset: byte-identical at 1/2/4
+/// shards, and the run completes real work under every policy.
+#[test]
+fn smoke_report_is_byte_identical_across_shard_counts() {
+    let spec = preset::by_name("smoke").expect("smoke preset exists");
+    let report = assert_identical_across_shard_counts(&spec);
+    assert!(!report.rows.is_empty());
+    for r in &report.rows {
+        assert!(r.completed > 0, "{:?}", r.policy);
+    }
+}
+
+/// Acceptance criterion on a predictive study: the forecast-driven
+/// policies (pre-warm pool + speculative resize) ride the sharded runtime
+/// with the same determinism guarantee.
+#[test]
+fn predictive_report_is_byte_identical_across_shard_counts() {
+    let spec = ScenarioSpec::parse(
+        r#"{
+        "name": "predictive-sharded",
+        "workload": {"type": "synthetic", "services": 4,
+                     "rate_per_service": 0.2, "horizon_s": 40},
+        "topology": {"kind": "uniform", "nodes": 2},
+        "policies": ["cold", "pooled", "predictive-inplace"],
+        "forecast": {"pool_size": 2, "horizon_ms": 2000},
+        "reps": 2
+    }"#,
+    )
+    .unwrap();
+    let report = assert_identical_across_shard_counts(&spec);
+    assert_eq!(report.rows.len(), 6); // 3 policies × 2 reps
+    for r in &report.rows {
+        assert!(r.completed > 0, "{:?}", r.policy);
+    }
+}
+
+/// A mid-run node crash taking out an entire cell: the cross-shard
+/// escalation path (reschedule into a sibling cell one lookahead later)
+/// must be byte-identical at any shard count too.
+fn crash_spec() -> ScenarioSpec {
+    ScenarioSpec::parse(
+        r#"{
+        "name": "crash-sharded",
+        "workload": {"type": "synthetic", "services": 6,
+                     "rate_per_service": 0.4, "horizon_s": 45},
+        "topology": {"kind": "uniform", "nodes": 3},
+        "policies": ["warm", "in-place"],
+        "reps": 2,
+        "faults": {
+            "node_crashes": [{"node": 2, "at_s": 8, "down_s": 12}],
+            "crash_requests": "fail"
+        }
+    }"#,
+    )
+    .unwrap()
+}
+
+/// The shard × fault regression pin: crash-evicted pods reschedule
+/// deterministically regardless of shard count — `pods_rescheduled` (and
+/// every other fault counter, via the byte comparison) is equal at
+/// `--shards 1` and `--shards 4`.
+#[test]
+fn crash_recovery_is_identical_across_shard_counts() {
+    let spec = crash_spec();
+    let one = assert_identical_across_shard_counts(&spec);
+    let four = run_sharded(&spec, 4);
+    assert!(
+        one.rows.iter().any(|r| r.pods_evicted > 0),
+        "the node crash must evict at least one pod somewhere in the grid"
+    );
+    for (a, b) in one.rows.iter().zip(four.rows.iter()) {
+        assert_eq!(
+            a.pods_rescheduled, b.pods_rescheduled,
+            "reschedule count diverged at --shards 4 for {:?}",
+            a.policy
+        );
+        assert_eq!(a.pods_evicted, b.pods_evicted, "{:?}", a.policy);
+    }
+}
+
+/// Fault node indices are validated against the GLOBAL topology before
+/// any shard planning happens: a 3-node fleet rejects `node: 7` with the
+/// same path-qualified error whether or not the run is sharded.
+#[test]
+fn fault_node_validation_uses_the_global_topology_under_sharding() {
+    let spec = ScenarioSpec::parse(
+        r#"{
+        "name": "bad-crash",
+        "workload": {"type": "synthetic", "services": 2,
+                     "rate_per_service": 0.2, "horizon_s": 20},
+        "topology": {"kind": "uniform", "nodes": 3},
+        "policies": ["in-place"],
+        "faults": {"node_crashes": [{"node": 7, "at_s": 5, "down_s": 5}]}
+    }"#,
+    )
+    .unwrap();
+    for shards in [None, Some(2)] {
+        let e = ScenarioEngine::run_with_options(&spec, 1, shards)
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("node 7") && e.contains("3 node(s)"),
+            "error must name the fault node and the global topology: {e}"
+        );
+    }
+}
+
+/// The spec-level `shards` knob drives the sharded runtime without any
+/// CLI flag, echoes through the report, and is beaten by the override.
+#[test]
+fn spec_shards_knob_matches_the_cli_override() {
+    let mut spec = preset::by_name("smoke").unwrap();
+    spec.shards = Some(2);
+    assert!(
+        spec.to_json().to_string_pretty().contains("\"shards\": 2"),
+        "the knob must echo through the canonical spec form"
+    );
+    let via_knob = ScenarioEngine::run(&spec).unwrap();
+    // Same rows whether the count comes from the knob or the override
+    // (the spec echo differs by exactly the `shards` key, so compare rows).
+    let via_flag = run_sharded(&spec, 2);
+    assert_eq!(via_knob.rows, via_flag.rows);
+    // The CLI override wins over the knob: --shards 4 on a shards:2 spec
+    // is still byte-identical (determinism), so rows match as well.
+    let overridden = ScenarioEngine::run_with_options(&spec, 1, Some(4)).unwrap();
+    assert_eq!(via_knob.rows, overridden.rows);
+}
+
+/// Closed-loop specs run the paper's single-node rig; asking for shards
+/// there is a spec error, not a silent fallback.
+#[test]
+fn closed_loop_rejects_shards() {
+    let spec = preset::paper(2, 42);
+    let e = ScenarioEngine::run_with_options(&spec, 1, Some(2))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("shards"), "{e}");
+    // And via the spec knob, without any CLI flag.
+    let mut spec = preset::paper(2, 42);
+    spec.shards = Some(2);
+    let e = ScenarioEngine::run(&spec).unwrap_err().to_string();
+    assert!(e.contains("shards"), "{e}");
+}
+
+/// Planner contract at integration level: assignments depend only on the
+/// node id and shard count, the manifest round-trips, and shard counts
+/// beyond the cell count leave empty shards that change nothing.
+#[test]
+fn shard_planner_contract() {
+    use kinetic::cluster::Topology;
+    let topo = Topology::uniform_paper(5);
+    let plan = ShardPlan::new(&topo, 3);
+    assert_eq!(plan.cells(), 5);
+    // Stable: recomputing yields the same assignment.
+    assert_eq!(plan.shard_of, ShardPlan::new(&topo, 3).shard_of);
+    // Manifest round-trip preserves the plan exactly.
+    let services: Vec<String> = (0..4).map(|i| format!("svc-{i}")).collect();
+    let m = plan.manifest(&services);
+    assert_eq!(m.req_str("kind").unwrap(), MANIFEST_KIND);
+    let back = ShardPlan::from_manifest(&m).unwrap();
+    assert_eq!(back.shards, plan.shards);
+    assert_eq!(back.shard_of, plan.shard_of);
+    // More shards than cells: every cell still lands somewhere valid.
+    let wide = ShardPlan::new(&topo, 64);
+    assert!(wide.shard_of.iter().all(|&s| s < 64));
+}
