@@ -1,10 +1,12 @@
 //! Bench: fleet-scale behaviour beyond the paper — per-policy latency on a
 //! 10-node topology, simulator throughput as the fleet grows 10 → 100
 //! nodes, the routing-policy sweep over a calibrated heterogeneous fleet,
-//! and the incremental-accounting speedup (O(1) counter read vs the
-//! O(total pods) rescan the hot path used to pay per event).
+//! the incremental-accounting speedup (O(1) counter read vs the
+//! O(total pods) rescan the hot path used to pay per event), and the
+//! state-layer speedup (generational-slab pod lookup vs the map probe the
+//! dispatch/complete path paid before the arena overhaul).
 //!
-//! `cargo bench --bench fleet_scale [-- table|scale|hetero|routing|accounting]`
+//! `cargo bench --bench fleet_scale [-- table|scale|hetero|routing|accounting|arena]`
 //!
 //! Set `KINETIC_SMOKE=1` to run every section at minimal size (1 bench
 //! iteration, small fleets, short horizons) — the CI smoke gate that keeps
@@ -131,6 +133,70 @@ fn main() {
         assert!(
             sim.world.fleet.diff(&sim.world.rescan_accounting()).is_none(),
             "incremental counters drifted from rescan"
+        );
+    });
+
+    runner.section("arena", || {
+        // The state-layer win: a generational-slab pod lookup (one bounds
+        // check + one generation compare) vs the `HashMap<PodId, _>` probe
+        // every dispatch/complete/resize event paid before the arena
+        // overhaul. A third of the fleet is retired and replaced first so
+        // the slab carries real generation churn, like a crash-heavy run.
+        use std::collections::HashMap;
+
+        use kinetic::cluster::arena::PodSlab;
+        use kinetic::cluster::pod::{PodId, PodSpec};
+        use kinetic::util::quantity::{Memory, MilliCpu, Resources};
+        use kinetic::util::rng::Rng;
+
+        let pods: usize = if smoke() { 256 } else { 8192 };
+        let spec = PodSpec::single(
+            "fn",
+            "img",
+            Resources::new(MilliCpu(100), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(128)),
+        );
+        let mut slab = PodSlab::new();
+        let mut live: Vec<PodId> = (0..pods).map(|_| slab.alloc(spec.clone())).collect();
+        let mut rng = Rng::new(13);
+        for _ in 0..pods / 3 {
+            let i = rng.below(live.len() as u64) as usize;
+            slab.remove(live.swap_remove(i));
+            live.push(slab.alloc(spec.clone()));
+        }
+        let map: HashMap<PodId, u64> = live.iter().map(|&id| (id, id.0)).collect();
+        let mut probes = live.clone();
+        rng.shuffle(&mut probes);
+
+        let iters: u64 = if smoke() { 20 } else { 2000 };
+        let lookups = iters * probes.len() as u64;
+        let t0 = std::time::Instant::now();
+        let mut slab_hits = 0u64;
+        for _ in 0..iters {
+            for &id in &probes {
+                if black_box(slab.get(id)).is_some() {
+                    slab_hits += 1;
+                }
+            }
+        }
+        let slab_ns = t0.elapsed().as_nanos() as f64 / lookups as f64;
+        let t1 = std::time::Instant::now();
+        let mut map_hits = 0u64;
+        for _ in 0..iters {
+            for &id in &probes {
+                if black_box(map.get(&id)).is_some() {
+                    map_hits += 1;
+                }
+            }
+        }
+        let map_ns = t1.elapsed().as_nanos() as f64 / lookups as f64;
+        assert_eq!(slab_hits, map_hits, "slab and map oracle disagree on the live set");
+        assert_eq!(slab_hits, lookups, "every live id must resolve");
+        println!(
+            "arena/{pods} pods ({} retired+replaced): slab get {slab_ns:.1} ns vs \
+             map get {map_ns:.1} ns per lookup  ({:.1}× per event)",
+            pods / 3,
+            map_ns / slab_ns.max(0.1)
         );
     });
 }

@@ -1,0 +1,218 @@
+//! Generational pod slab: arena storage for [`Pod`]s with ABA-safe
+//! handles.
+//!
+//! The old `Cluster.pods: HashMap<PodId, Pod>` paid a hash + probe per
+//! lookup on every dispatch/complete/resize event and iterated in
+//! `RandomState` order (never observable, but a standing determinism
+//! hazard). The slab stores pods in a flat `Vec` of slots; a [`PodId`] now
+//! *packs* a [`PodHandle`] — `(generation << 32) | index` — so every
+//! lookup is one bounds check plus one generation compare, and a handle
+//! to a freed-and-reused slot can never alias the new tenant: removal
+//! bumps the slot's generation, invalidating all outstanding ids for the
+//! old pod (the same slot+generation scheme `simclock`'s `EventId` uses
+//! for timer cancellation).
+//!
+//! Pods that are never freed receive ids `0, 1, 2, …` — exactly the
+//! monotone uids the old allocator produced — and `iter()` walks slots in
+//! index order, so the slab is drop-in deterministic.
+
+use crate::cluster::pod::{Pod, PodId, PodSpec};
+
+/// Unpacked view of a [`PodId`]: slot index + slot generation at
+/// allocation time. The id is stale (its pod was freed, and the slot
+/// possibly reused) iff the slot's current generation differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PodHandle {
+    pub index: u32,
+    pub generation: u32,
+}
+
+impl PodHandle {
+    /// Packs the handle into the ubiquitous [`PodId`] key type.
+    pub fn to_id(self) -> PodId {
+        PodId(((self.generation as u64) << 32) | self.index as u64)
+    }
+
+    /// Unpacks a [`PodId`] produced by [`PodHandle::to_id`].
+    pub fn from_id(id: PodId) -> PodHandle {
+        PodHandle {
+            index: (id.0 & 0xFFFF_FFFF) as u32,
+            generation: (id.0 >> 32) as u32,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Slot {
+    Vacant { generation: u32 },
+    Occupied { generation: u32, pod: Pod },
+}
+
+/// The slab. Freed slots are reused LIFO (hot in cache, deterministic).
+#[derive(Debug, Default)]
+pub struct PodSlab {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl PodSlab {
+    pub fn new() -> PodSlab {
+        PodSlab::default()
+    }
+
+    /// Allocates a slot and constructs the pod in place; returns its id.
+    pub fn alloc(&mut self, spec: PodSpec) -> PodId {
+        let (index, generation) = match self.free.pop() {
+            Some(i) => match self.slots[i as usize] {
+                Slot::Vacant { generation } => (i, generation),
+                Slot::Occupied { .. } => unreachable!("free list points at occupied slot"),
+            },
+            None => {
+                self.slots.push(Slot::Vacant { generation: 0 });
+                ((self.slots.len() - 1) as u32, 0)
+            }
+        };
+        let id = PodHandle { index, generation }.to_id();
+        self.slots[index as usize] = Slot::Occupied {
+            generation,
+            pod: Pod::new(id, spec),
+        };
+        self.len += 1;
+        id
+    }
+
+    /// Generation-checked lookup: `None` for stale ids (freed slot, or a
+    /// reused slot whose generation moved on) and foreign indices alike.
+    pub fn get(&self, id: PodId) -> Option<&Pod> {
+        let h = PodHandle::from_id(id);
+        match self.slots.get(h.index as usize) {
+            Some(Slot::Occupied { generation, pod }) if *generation == h.generation => Some(pod),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, id: PodId) -> Option<&mut Pod> {
+        let h = PodHandle::from_id(id);
+        match self.slots.get_mut(h.index as usize) {
+            Some(Slot::Occupied { generation, pod }) if *generation == h.generation => Some(pod),
+            _ => None,
+        }
+    }
+
+    /// Frees the slot, bumping its generation so every outstanding id for
+    /// this pod turns stale. Stale ids are a no-op returning `None`.
+    pub fn remove(&mut self, id: PodId) -> Option<Pod> {
+        let h = PodHandle::from_id(id);
+        let slot = self.slots.get_mut(h.index as usize)?;
+        match slot {
+            Slot::Occupied { generation, .. } if *generation == h.generation => {
+                let next = Slot::Vacant {
+                    generation: generation.wrapping_add(1),
+                };
+                let old = std::mem::replace(slot, next);
+                self.free.push(h.index);
+                self.len -= 1;
+                match old {
+                    Slot::Occupied { pod, .. } => Some(pod),
+                    Slot::Vacant { .. } => unreachable!(),
+                }
+            }
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Live pods in slot-index order — deterministic, unlike the
+    /// `HashMap` iteration this replaced.
+    pub fn iter(&self) -> impl Iterator<Item = &Pod> {
+        self.slots.iter().filter_map(|s| match s {
+            Slot::Occupied { pod, .. } => Some(pod),
+            Slot::Vacant { .. } => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quantity::{Memory, MilliCpu, Resources};
+
+    fn spec() -> PodSpec {
+        PodSpec::single(
+            "fn",
+            "img",
+            Resources::new(MilliCpu(100), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(128)),
+        )
+    }
+
+    #[test]
+    fn handle_roundtrips_through_pod_id() {
+        let h = PodHandle {
+            index: 7,
+            generation: 3,
+        };
+        assert_eq!(PodHandle::from_id(h.to_id()), h);
+        // Generation 0 ids are plain small integers — the old uid shape.
+        let first = PodHandle {
+            index: 0,
+            generation: 0,
+        };
+        assert_eq!(first.to_id(), PodId(0));
+    }
+
+    #[test]
+    fn never_freed_ids_are_monotone_uids() {
+        let mut s = PodSlab::new();
+        for want in 0..4u64 {
+            assert_eq!(s.alloc(spec()), PodId(want));
+        }
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn stale_id_rejected_after_free() {
+        let mut s = PodSlab::new();
+        let a = s.alloc(spec());
+        assert!(s.get(a).is_some());
+        assert!(s.remove(a).is_some());
+        assert!(s.get(a).is_none(), "freed id must read as gone");
+        assert!(s.remove(a).is_none(), "double free is a no-op");
+    }
+
+    #[test]
+    fn reused_slot_does_not_alias_old_id() {
+        let mut s = PodSlab::new();
+        let a = s.alloc(spec());
+        s.remove(a);
+        let b = s.alloc(spec());
+        // Same slot, bumped generation: distinct ids, no ABA.
+        assert_eq!(PodHandle::from_id(b).index, PodHandle::from_id(a).index);
+        assert_ne!(a, b);
+        assert!(s.get(a).is_none());
+        assert!(s.get(b).is_some());
+        assert_eq!(s.get(b).unwrap().id, b);
+    }
+
+    #[test]
+    fn iteration_is_slot_ordered() {
+        let mut s = PodSlab::new();
+        let ids: Vec<PodId> = (0..5).map(|_| s.alloc(spec())).collect();
+        s.remove(ids[1]);
+        s.remove(ids[3]);
+        let seen: Vec<PodId> = s.iter().map(|p| p.id).collect();
+        assert_eq!(seen, vec![ids[0], ids[2], ids[4]]);
+        // LIFO reuse: slot 3 comes back first, with generation 1.
+        let next = s.alloc(spec());
+        let h = PodHandle::from_id(next);
+        assert_eq!((h.index, h.generation), (3, 1));
+    }
+}

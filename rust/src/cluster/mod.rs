@@ -6,6 +6,7 @@
 //! *plans* (stage, duration) that the coordinator schedules on the DES
 //! engine. That keeps every piece unit-testable without a running platform.
 
+pub mod arena;
 pub mod container;
 pub mod deployment;
 pub mod kubelet;
@@ -14,6 +15,7 @@ pub mod pod;
 pub mod scheduler;
 pub mod topology;
 
+pub use arena::{PodHandle, PodSlab};
 pub use container::{ContainerSpec, ResizePolicy, RestartPolicy};
 pub use deployment::{Action as DeploymentAction, Deployment};
 pub use kubelet::{Kubelet, StartupParams, StartupStage};
@@ -22,16 +24,14 @@ pub use pod::{Pod, PodId, PodPhase, PodSpec, PodStatus, ResizeStatus};
 pub use scheduler::{ScheduleError, Scheduler, ScoringPolicy};
 pub use topology::{NodeShape, Topology};
 
-use std::collections::HashMap;
+use crate::simclock::SimTime;
+use crate::util::quantity::{MilliCpu, Resources};
 
-use crate::util::quantity::Resources;
-
-/// The cluster: node + pod tables with uid allocation.
+/// The cluster: node table + the generational pod slab.
 #[derive(Debug, Default)]
 pub struct Cluster {
     nodes: Vec<Node>,
-    pods: HashMap<PodId, Pod>,
-    next_pod_uid: u64,
+    pods: PodSlab,
 }
 
 impl Cluster {
@@ -58,24 +58,25 @@ impl Cluster {
         &self.nodes
     }
 
-    /// Creates a pod in `Pending`; the scheduler binds it later.
+    /// Creates a pod in `Pending`; the scheduler binds it later. The
+    /// returned id packs the slab handle (slot + generation), so a stale
+    /// id after deletion can never alias a reused slot.
     pub fn create_pod(&mut self, spec: PodSpec) -> PodId {
-        let id = PodId(self.next_pod_uid);
-        self.next_pod_uid += 1;
-        self.pods.insert(id, Pod::new(id, spec));
-        id
+        self.pods.alloc(spec)
     }
 
+    /// Generation-checked lookup: `None` for deleted/stale ids.
     pub fn pod(&self, id: PodId) -> Option<&Pod> {
-        self.pods.get(&id)
+        self.pods.get(id)
     }
 
     pub fn pod_mut(&mut self, id: PodId) -> Option<&mut Pod> {
-        self.pods.get_mut(&id)
+        self.pods.get_mut(id)
     }
 
+    /// Live pods in slot order (deterministic).
     pub fn pods(&self) -> impl Iterator<Item = &Pod> {
-        self.pods.values()
+        self.pods.iter()
     }
 
     /// Binds `pod` to `node`, reserving its requests on the node and
@@ -84,7 +85,7 @@ impl Cluster {
         let requests = {
             let pod = self
                 .pods
-                .get(&pod_id)
+                .get(pod_id)
                 .ok_or(ScheduleError::NoSuchPod(pod_id))?;
             if pod.node.is_some() {
                 return Err(ScheduleError::AlreadyBound(pod_id));
@@ -96,23 +97,46 @@ impl Cluster {
             return Err(ScheduleError::Unschedulable(pod_id));
         }
         node.reserve(requests);
-        let cgroup = node.create_pod_cgroups(pod_id, &self.pods[&pod_id].spec);
-        let pod = self.pods.get_mut(&pod_id).unwrap();
+        let spec = self.pods.get(pod_id).unwrap().spec.clone();
+        let (cgroup, ctrs) = node.create_pod_cgroups(pod_id, &spec);
+        let pod = self.pods.get_mut(pod_id).unwrap();
         pod.node = Some(node_id);
         pod.cgroup = Some(cgroup);
+        pod.container_cgroups = ctrs;
         pod.status.phase = PodPhase::Scheduled;
         Ok(())
     }
 
     /// Removes a terminated pod, releasing node resources and cgroups.
+    /// Stale ids (already deleted) are a no-op.
     pub fn delete_pod(&mut self, pod_id: PodId) {
-        if let Some(pod) = self.pods.remove(&pod_id) {
+        if let Some(pod) = self.pods.remove(pod_id) {
             if let Some(node_id) = pod.node {
                 let node = &mut self.nodes[node_id.0 as usize];
                 node.release(pod.reserved());
-                node.remove_pod_cgroups(pod_id);
+                if let Some(pod_cg) = pod.cgroup {
+                    node.remove_pod_cgroups(pod_cg, &pod.container_cgroups);
+                }
             }
         }
+    }
+
+    /// Applies an in-place CPU-limit resize to the pod's cgroups on its
+    /// node — the write whose propagation §4.1 measures. Returns false
+    /// for unbound or stale pods. Pod cgroup ids live on the pod itself
+    /// (the per-node `HashMap<PodId, _>` this replaced is gone).
+    pub fn apply_cpu_limit(&mut self, pod_id: PodId, new_limit: MilliCpu, now: SimTime) -> bool {
+        let Some(pod) = self.pods.get(pod_id) else {
+            return false;
+        };
+        let (Some(node_id), Some(pod_cg)) = (pod.node, pod.cgroup) else {
+            return false;
+        };
+        let Some(&ctr) = pod.container_cgroups.first() else {
+            return false;
+        };
+        self.nodes[node_id.0 as usize].write_cpu_limit(pod_cg, ctr, new_limit, now);
+        true
     }
 
     /// Total CPU currently *reserved* by requests across all nodes — the

@@ -1,7 +1,7 @@
 //! Nodes: allocatable accounting, per-node cgroup filesystem, image cache,
 //! and attached stressors (the §4.1 load conditions).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 
 use crate::cgroup::{CgroupFs, CgroupId, CpuMax, Stressor};
 use crate::cgroup::latency::NodeLoad;
@@ -26,9 +26,9 @@ pub struct Node {
     pub cgfs: CgroupFs,
     /// kubepods root cgroup.
     kubepods: CgroupId,
-    /// pod uid → (pod cgroup, container cgroups).
-    pod_cgroups: HashMap<PodId, (CgroupId, Vec<CgroupId>)>,
     /// Pulled images (cold starts hit the pull path once per image).
+    /// Lookup-only: never iterated, so `HashSet` order can't leak into
+    /// behavior (pinned by the determinism audit in `tests/arena.rs`).
     image_cache: HashSet<String>,
     /// Attached stress-ng style stressors.
     pub stressors: Vec<Stressor>,
@@ -48,7 +48,6 @@ impl Node {
             reserved: Resources::ZERO,
             cgfs,
             kubepods,
-            pod_cgroups: HashMap::new(),
             image_cache: HashSet::new(),
             stressors: Vec::new(),
             up: true,
@@ -91,8 +90,10 @@ impl Node {
 
     /// Creates `/kubepods/pod-<uid>` + one child per container, wiring
     /// weights from requests and `cpu.max` from limits. Returns the pod
-    /// cgroup id.
-    pub fn create_pod_cgroups(&mut self, pod: PodId, spec: &PodSpec) -> CgroupId {
+    /// cgroup id and the per-container cgroup ids — ownership lives on
+    /// the [`Pod`](crate::cluster::pod::Pod) itself, not in a per-node
+    /// map, so lookups on the resize path are field reads.
+    pub fn create_pod_cgroups(&mut self, pod: PodId, spec: &PodSpec) -> (CgroupId, Vec<CgroupId>) {
         let pod_cg = self
             .cgfs
             .create(self.kubepods, &format!("pod-{}", pod.0))
@@ -111,43 +112,34 @@ impl Node {
             self.cgfs.write_weight(cg, c.cpu_weight().max(1)).unwrap();
             ctrs.push(cg);
         }
-        self.pod_cgroups.insert(pod, (pod_cg, ctrs));
-        pod_cg
+        (pod_cg, ctrs)
     }
 
-    pub fn remove_pod_cgroups(&mut self, pod: PodId) {
-        if let Some((pod_cg, ctrs)) = self.pod_cgroups.remove(&pod) {
-            for c in ctrs {
-                let _ = self.cgfs.remove(c);
-            }
-            let _ = self.cgfs.remove(pod_cg);
+    /// Tears down the pod's cgroup subtree (ids come from the pod).
+    pub fn remove_pod_cgroups(&mut self, pod_cg: CgroupId, ctrs: &[CgroupId]) {
+        for &c in ctrs {
+            let _ = self.cgfs.remove(c);
         }
-    }
-
-    /// The main-container cgroup of a pod on this node.
-    pub fn container_cgroup(&self, pod: PodId) -> Option<CgroupId> {
-        self.pod_cgroups.get(&pod).and_then(|(_, cs)| cs.first().copied())
-    }
-
-    pub fn pod_cgroup(&self, pod: PodId) -> Option<CgroupId> {
-        self.pod_cgroups.get(&pod).map(|(p, _)| *p)
+        let _ = self.cgfs.remove(pod_cg);
     }
 
     /// Applies a CPU limit resize to both the pod and main-container
-    /// cgroups — the write whose propagation §4.1 measures.
-    pub fn apply_cpu_limit(&mut self, pod: PodId, new_limit: MilliCpu, now: SimTime) -> bool {
-        if let Some((pod_cg, ctrs)) = self.pod_cgroups.get(&pod) {
-            let (pod_cg, ctr) = (*pod_cg, ctrs[0]);
-            self.cgfs
-                .write_cpu_max(pod_cg, CpuMax::from_millicpu(new_limit), now)
-                .unwrap();
-            self.cgfs
-                .write_cpu_max(ctr, CpuMax::from_millicpu(new_limit), now)
-                .unwrap();
-            true
-        } else {
-            false
-        }
+    /// cgroups — the write whose propagation §4.1 measures. Callers go
+    /// through [`Cluster::apply_cpu_limit`](crate::cluster::Cluster),
+    /// which resolves the ids from the pod.
+    pub fn write_cpu_limit(
+        &mut self,
+        pod_cg: CgroupId,
+        ctr: CgroupId,
+        new_limit: MilliCpu,
+        now: SimTime,
+    ) {
+        self.cgfs
+            .write_cpu_max(pod_cg, CpuMax::from_millicpu(new_limit), now)
+            .unwrap();
+        self.cgfs
+            .write_cpu_max(ctr, CpuMax::from_millicpu(new_limit), now)
+            .unwrap();
     }
 
     // -- image cache --------------------------------------------------------
@@ -215,9 +207,9 @@ mod tests {
     #[test]
     fn cgroup_tree_wired_from_spec() {
         let mut n = node();
-        let cg = n.create_pod_cgroups(PodId(7), &spec());
+        let (cg, ctrs) = n.create_pod_cgroups(PodId(7), &spec());
         assert_eq!(n.cgfs.path_of(cg), "/kubepods/pod-7");
-        let ctr = n.container_cgroup(PodId(7)).unwrap();
+        let ctr = ctrs[0];
         assert_eq!(n.cgfs.path_of(ctr), "/kubepods/pod-7/fn");
         assert_eq!(
             n.cgfs.effective_limit(ctr).unwrap(),
@@ -226,22 +218,23 @@ mod tests {
     }
 
     #[test]
-    fn apply_cpu_limit_updates_both_levels() {
+    fn write_cpu_limit_updates_both_levels() {
         let mut n = node();
-        n.create_pod_cgroups(PodId(1), &spec());
-        assert!(n.apply_cpu_limit(PodId(1), MilliCpu(1), SimTime::from_millis(9)));
-        let ctr = n.container_cgroup(PodId(1)).unwrap();
-        assert_eq!(n.cgfs.effective_limit(ctr).unwrap(), Some(MilliCpu(1)));
-        assert_eq!(n.cgfs.get(ctr).unwrap().last_write, SimTime::from_millis(9));
-        assert!(!n.apply_cpu_limit(PodId(99), MilliCpu(1), SimTime::ZERO));
+        let (cg, ctrs) = n.create_pod_cgroups(PodId(1), &spec());
+        n.write_cpu_limit(cg, ctrs[0], MilliCpu(1), SimTime::from_millis(9));
+        assert_eq!(n.cgfs.effective_limit(ctrs[0]).unwrap(), Some(MilliCpu(1)));
+        assert_eq!(
+            n.cgfs.get(ctrs[0]).unwrap().last_write,
+            SimTime::from_millis(9)
+        );
+        assert_eq!(n.cgfs.effective_limit(cg).unwrap(), Some(MilliCpu(1)));
     }
 
     #[test]
     fn remove_pod_cgroups_cleans_up() {
         let mut n = node();
-        n.create_pod_cgroups(PodId(1), &spec());
-        n.remove_pod_cgroups(PodId(1));
-        assert!(n.container_cgroup(PodId(1)).is_none());
+        let (cg, ctrs) = n.create_pod_cgroups(PodId(1), &spec());
+        n.remove_pod_cgroups(cg, &ctrs);
         assert!(n.cgfs.lookup("/kubepods/pod-1").is_err());
     }
 

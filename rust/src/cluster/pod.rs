@@ -177,6 +177,9 @@ pub struct Pod {
     pub node: Option<NodeId>,
     /// Pod-level cgroup on the node (container cgroups are children).
     pub cgroup: Option<CgroupId>,
+    /// Per-container cgroups, in spec order (main container first). Kept
+    /// on the pod so resize-path lookups are field reads, not map probes.
+    pub container_cgroups: Vec<CgroupId>,
     /// Resources reserved on the node at bind time (requests). In-place
     /// resize of *limits* does not change this — that asymmetry is the
     /// "enhanced resource availability" the paper claims.
@@ -198,6 +201,7 @@ impl Pod {
             status: PodStatus::new(limit),
             node: None,
             cgroup: None,
+            container_cgroups: Vec::new(),
             reserved,
             created_at: SimTime::ZERO,
         }

@@ -4,10 +4,10 @@
 //! pipelines, idle timers, resize hooks and landings, speculation cycles,
 //! VU think-time chains — is one variant of [`Event`], dispatched by a
 //! single `match` in [`World::handle`]. Scheduling an event moves a few
-//! words into the calendar queue (service names are `Arc<str>` refcount
-//! bumps); the steady-state loop allocates nothing per event, unlike the
-//! `Box<dyn FnOnce>` handlers this replaced (retained in
-//! [`simclock::oracle`](crate::simclock::oracle) as the ordering oracle).
+//! words into the calendar queue: service fields are interned
+//! [`ServiceId`]s (`Copy` u32s), so the steady-state loop neither
+//! allocates nor touches an `Arc` refcount per event — the last string
+//! traffic left the hot path with the intern table (`util::intern`).
 //!
 //! [`Event::Call`] is the escape hatch for examples and one-off test
 //! drivers that genuinely want an ad-hoc closure; platform code never
@@ -21,47 +21,54 @@ use crate::coordinator::platform::{Eng, Platform};
 use crate::knative::activator::RequestId;
 use crate::loadgen::runner::Runner;
 use crate::simclock::{SimTime, World};
+use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
 
 /// One scheduled occurrence in the platform world.
 pub enum Event {
     /// Load generation: submit a fresh request to `service`.
-    Submit { service: Arc<str> },
+    Submit { service: ServiceId },
     /// The proxy forward hop delivered `req` to the activator.
     Arrive { req: RequestId },
     /// `req`'s execution reaches its ETA under the current CFS share.
     Complete { req: RequestId },
     /// The kubelet startup pipeline finished; the pod joins the service.
     PodReady {
-        service: Arc<str>,
+        service: ServiceId,
         pod: PodId,
         node: NodeId,
         image: Arc<str>,
     },
     /// Stable-window idle timer fired (cold / pooled scale-down check).
-    IdleCheck { service: Arc<str>, pod: PodId },
+    IdleCheck { service: ServiceId, pod: PodId },
     /// Termination grace elapsed; remove the pod from the fleet.
-    PodGone { service: Arc<str>, pod: PodId },
+    PodGone { service: ServiceId, pod: PodId },
     /// Queue-proxy resize hook dispatch cost elapsed; try the patch.
-    ResizeHook { service: Arc<str>, pod: PodId },
+    ResizeHook { service: ServiceId, pod: PodId },
     /// Conflict backoff elapsed; clear the pending flag and re-try.
-    ResizeRetry { service: Arc<str>, pod: PodId },
+    ResizeRetry { service: ServiceId, pod: PodId },
     /// Kubelet propagation done; the new CPU limit is in force.
     ResizeLanded {
-        service: Arc<str>,
+        service: ServiceId,
         pod: PodId,
         target: MilliCpu,
     },
     /// Closed-loop VU think time elapsed; issue the next iteration.
     VuIterate {
-        service: Arc<str>,
+        service: ServiceId,
         remaining: u32,
         think: SimTime,
     },
     /// Forecast-driven speculative pre-resize (generation-stamped).
-    Speculate { service: Arc<str>, generation: u64 },
+    Speculate {
+        service: ServiceId,
+        generation: u64,
+    },
     /// Misprediction watchdog: re-park if no arrival claimed the window.
-    SpeculationRepark { service: Arc<str>, generation: u64 },
+    SpeculationRepark {
+        service: ServiceId,
+        generation: u64,
+    },
     /// Fault injection: the node goes down, killing every resident pod.
     NodeCrash { node: NodeId },
     /// Fault injection: the node comes back (with a cold image cache).
@@ -78,7 +85,9 @@ pub enum Event {
     /// Sharded execution: a sibling cell crashed with no surviving local
     /// capacity; reschedule `pods` replacement pods for `service` here.
     /// Delivered at a window barrier, always ≥ one lookahead after emit.
-    XShardReschedule { service: Arc<str>, pods: u32 },
+    /// The id is *this* cell's — the runtime translates the wire-format
+    /// service name into the target cell's intern table at delivery.
+    XShardReschedule { service: ServiceId, pods: u32 },
     /// Escape hatch for examples/tests; never used by platform code.
     Call(Box<dyn FnOnce(&mut Platform, &mut Eng) + Send>),
 }
@@ -99,7 +108,7 @@ impl World for Platform {
     fn handle(&mut self, ev: Event, eng: &mut Eng) {
         match ev {
             Event::Submit { service } => {
-                self.submit(eng, &service);
+                self.submit_id(eng, service);
             }
             Event::Arrive { req } => Self::arrive(self, eng, req),
             Event::Complete { req } => Self::complete(self, eng, req),
@@ -108,16 +117,16 @@ impl World for Platform {
                 pod,
                 node,
                 image,
-            } => Self::pod_ready(self, eng, &service, pod, node, &image),
-            Event::IdleCheck { service, pod } => Self::idle_check(self, eng, &service, pod),
-            Event::PodGone { service, pod } => Self::pod_teardown(self, eng, &service, pod),
-            Event::ResizeHook { service, pod } => Self::try_patch(self, eng, &service, pod),
-            Event::ResizeRetry { service, pod } => Self::retry_patch(self, eng, &service, pod),
+            } => Self::pod_ready(self, eng, service, pod, node, &image),
+            Event::IdleCheck { service, pod } => Self::idle_check(self, eng, service, pod),
+            Event::PodGone { service, pod } => Self::pod_teardown(self, eng, service, pod),
+            Event::ResizeHook { service, pod } => Self::try_patch(self, eng, service, pod),
+            Event::ResizeRetry { service, pod } => Self::retry_patch(self, eng, service, pod),
             Event::ResizeLanded {
                 service,
                 pod,
                 target,
-            } => Self::resize_landed(self, eng, &service, pod, target),
+            } => Self::resize_landed(self, eng, service, pod, target),
             Event::VuIterate {
                 service,
                 remaining,
@@ -126,11 +135,11 @@ impl World for Platform {
             Event::Speculate {
                 service,
                 generation,
-            } => Self::speculative_resize(self, eng, &service, generation),
+            } => Self::speculative_resize(self, eng, service, generation),
             Event::SpeculationRepark {
                 service,
                 generation,
-            } => Self::speculation_repark(self, eng, &service, generation),
+            } => Self::speculation_repark(self, eng, service, generation),
             Event::NodeCrash { node } => Self::node_crash(self, eng, node),
             Event::NodeRecover { node } => Self::node_recover(self, eng, node),
             Event::StragglerStart {
@@ -140,7 +149,7 @@ impl World for Platform {
             } => Self::straggler_start(self, eng, node, startup_factor, resize_factor),
             Event::StragglerEnd { node } => Self::straggler_end(self, eng, node),
             Event::XShardReschedule { service, pods } => {
-                Self::xshard_reschedule(self, eng, &service, pods)
+                Self::xshard_reschedule(self, eng, service, pods)
             }
             Event::Call(f) => f(self, eng),
         }

@@ -15,6 +15,7 @@ use crate::coordinator::service::ServicePod;
 use crate::faults::inflate;
 use crate::policy::Policy;
 use crate::simclock::SimTime;
+use crate::util::intern::ServiceId;
 use crate::util::quantity::{Memory, MilliCpu, Resources};
 
 /// How long KPA scale-out backs off after an unschedulable pod-start
@@ -23,18 +24,18 @@ use crate::util::quantity::{Memory, MilliCpu, Resources};
 pub(crate) const UNSCHEDULABLE_BACKOFF: SimTime = SimTime(5_000_000_000); // 5 s
 
 impl Platform {
-    /// Creates and starts a pod for `svc_name`. `on_demand` marks a
+    /// Creates and starts a pod for the service. `on_demand` marks a
     /// cold-start (request-triggered) creation. Returns whether a pod
     /// actually entered its startup pipeline — false when the service is
     /// unknown or no node can fit the pod.
     pub(crate) fn start_pod(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         on_demand: bool,
     ) -> bool {
         let (spec, image, image_mb, init_ms) = {
-            let Some(svc) = w.services.get(svc_name) else { return false };
+            let Some(svc) = w.services.get(svc_id) else { return false };
             let p = &svc.profile;
             let requests = Resources::new(
                 // Parking pods (the in-place hook policies) reserve only a
@@ -69,7 +70,7 @@ impl Platform {
             // frees still gets its pod immediately.
             w.cluster.delete_pod(pod_id);
             w.metrics.pods_unschedulable += 1;
-            if let Some(svc) = w.services.get_mut(svc_name) {
+            if let Some(svc) = w.services.get_mut(svc_id) {
                 svc.sched_backoff_until = eng.now() + UNSCHEDULABLE_BACKOFF;
             }
             return false;
@@ -80,7 +81,7 @@ impl Platform {
         }
         w.metrics.pods_created += 1;
         {
-            let svc = w.services.get_mut(svc_name).unwrap();
+            let svc = w.services.get_mut(svc_id).unwrap();
             svc.starting += 1;
         }
         let _ = on_demand;
@@ -102,7 +103,7 @@ impl Platform {
         let s = eng.schedule_in(
             total,
             Event::PodReady {
-                service: std::sync::Arc::from(svc_name),
+                service: svc_id,
                 pod: pod_id,
                 node: node_id,
                 image: std::sync::Arc::from(image.as_str()),
@@ -112,7 +113,7 @@ impl Platform {
         w.starting_pods.insert(
             pod_id,
             StartingPod {
-                service: svc_name.to_string(),
+                service: svc_id,
                 node: node_id,
                 ready_event: s.id,
             },
@@ -123,12 +124,12 @@ impl Platform {
     pub(crate) fn pod_ready(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         pod_id: PodId,
         node_id: crate::cluster::NodeId,
         image: &str,
     ) {
-        w.starting_pods.remove(&pod_id);
+        w.starting_pods.remove(pod_id);
         w.cluster.node_mut(node_id).cache_image(image);
         {
             let Some(pod) = w.cluster.pod_mut(pod_id) else { return };
@@ -136,11 +137,11 @@ impl Platform {
             pod.status.ready = true;
         }
         let (hooks, climit) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(svc) = w.services.get(svc_id) else { return };
             (svc.policy.inplace_hooks(), svc.cfg.concurrency_limit())
         };
         {
-            let svc = w.services.get_mut(svc_name).unwrap();
+            let svc = w.services.get_mut(svc_id).unwrap();
             svc.starting = svc.starting.saturating_sub(1);
             let mut sp = ServicePod::new(pod_id, climit, hooks);
             sp.ready = true;
@@ -151,22 +152,22 @@ impl Platform {
         let applied = w.applied_limit(pod_id).unwrap_or(MilliCpu::ZERO);
         w.fleet.pod_up(pod_id, node_id, applied);
         Self::committed_changed(w, eng);
-        Self::drain_activator(w, eng, svc_name);
+        Self::drain_activator(w, eng, svc_id);
 
         // A fresh pod with nothing to do behaves exactly like one a request
         // just left: in-place parks immediately, cold arms its idle timer.
-        Self::post_request_hooks(w, eng, svc_name, pod_id);
+        Self::post_request_hooks(w, eng, svc_id, pod_id);
     }
 
     /// Policy post-hooks after a request leaves a pod.
     pub(crate) fn post_request_hooks(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         pod_id: PodId,
     ) {
         let (policy, idle, parked, stable_window) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(svc) = w.services.get(svc_id) else { return };
             let Some(idx) = svc.pod_index(pod_id) else { return };
             (
                 svc.policy,
@@ -181,7 +182,7 @@ impl Platform {
                     // The paper's post-hook: deallocate back to 1 m. For
                     // the predictive policy the driver may speculatively
                     // re-raise the pod ahead of the next forecast arrival.
-                    Self::request_resize(w, eng, svc_name, pod_id, parked);
+                    Self::request_resize(w, eng, svc_id, pod_id, parked);
                 }
             }
             Policy::Cold | Policy::Pooled => {
@@ -192,11 +193,11 @@ impl Platform {
                     let s = eng.schedule_in(
                         stable_window,
                         Event::IdleCheck {
-                            service: std::sync::Arc::from(svc_name),
+                            service: svc_id,
                             pod: pod_id,
                         },
                     );
-                    let svc = w.services.get_mut(svc_name).unwrap();
+                    let svc = w.services.get_mut(svc_id).unwrap();
                     if let Some(idx) = svc.pod_index(pod_id) {
                         if let Some(old) = svc.pods[idx].idle_timer.replace(s.id) {
                             eng.cancel(old);
@@ -209,9 +210,9 @@ impl Platform {
     }
 
     /// Cold policy: scale this pod to zero if its stable window stayed quiet.
-    pub(crate) fn idle_check(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+    pub(crate) fn idle_check(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId, pod_id: PodId) {
         let idle = {
-            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(svc) = w.services.get_mut(svc_id) else { return };
             let Some(idx) = svc.pod_index(pod_id) else { return };
             svc.pods[idx].idle_timer = None;
             svc.pods[idx].proxy.idle() && !svc.pods[idx].terminating
@@ -223,7 +224,7 @@ impl Platform {
         // target trim down (recounted at fire time, so concurrent timers
         // stop as soon as the pool is back at size).
         {
-            let svc = &w.services[svc_name];
+            let svc = &w.services[svc_id];
             if svc.policy == Policy::Pooled
                 && (svc.idle_ready_pods().count() as u32) <= svc.cfg.forecast.pool_size.max(1)
             {
@@ -238,7 +239,7 @@ impl Platform {
         };
         // Begin termination.
         {
-            let svc = w.services.get_mut(svc_name).unwrap();
+            let svc = w.services.get_mut(svc_id).unwrap();
             let idx = svc.pod_index(pod_id).unwrap();
             svc.pods[idx].terminating = true;
             svc.ready_count = svc.ready_count.saturating_sub(1);
@@ -253,7 +254,7 @@ impl Platform {
         eng.schedule_in(
             term,
             Event::PodGone {
-                service: std::sync::Arc::from(svc_name),
+                service: svc_id,
                 pod: pod_id,
             },
         );
@@ -264,9 +265,9 @@ impl Platform {
     /// pending resize retry) are cancelled and the in-flight resize record
     /// cleared — stale events firing against a dead `PodId` would inflate
     /// the calendar queue's exact `pending()` forever.
-    pub(crate) fn pod_teardown(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
-        Self::clear_resize_state(w, eng, svc_name, pod_id);
-        if let Some(svc) = w.services.get_mut(svc_name) {
+    pub(crate) fn pod_teardown(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId, pod_id: PodId) {
+        Self::clear_resize_state(w, eng, svc_id, pod_id);
+        if let Some(svc) = w.services.get_mut(svc_id) {
             if let Some(idx) = svc.pod_index(pod_id) {
                 if let Some(t) = svc.pods[idx].idle_timer.take() {
                     eng.cancel(t);
@@ -280,9 +281,9 @@ impl Platform {
     }
 
     /// Event-driven KPA evaluation: scale up when the decision demands it.
-    pub(crate) fn maybe_scale_up(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+    pub(crate) fn maybe_scale_up(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId) {
         let (desired, live) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(svc) = w.services.get(svc_id) else { return };
             // Recent unschedulable attempt: nothing fits, don't churn.
             if eng.now() < svc.sched_backoff_until {
                 return;
@@ -294,7 +295,7 @@ impl Platform {
             (d.desired, svc.ready_count + svc.starting)
         };
         for _ in live..desired {
-            if !Self::start_pod(w, eng, svc_name, true) {
+            if !Self::start_pod(w, eng, svc_id, true) {
                 // Unschedulable — the rest of this decision can't fit
                 // either; the backoff just armed suppresses re-tries.
                 break;
@@ -328,8 +329,9 @@ mod tests {
         assert_eq!(svc.pods.len(), 1);
         assert!(svc.pods[0].idle_timer.is_some(), "idle timer armed");
         let pod = svc.pods[0].pod;
+        let fn_id = sim.world.services.id_of("fn").unwrap();
         let before = sim.engine.pending();
-        Platform::pod_teardown(&mut sim.world, &mut sim.engine, "fn", pod);
+        Platform::pod_teardown(&mut sim.world, &mut sim.engine, fn_id, pod);
         assert_eq!(
             sim.engine.pending(),
             before - 1,

@@ -1,10 +1,18 @@
 //! Platform metrics: per-service latency samples, request counters, and the
 //! committed-CPU integral backing the paper's "enhanced resource
 //! availability" claim (§3 advantage 2).
+//!
+//! Per-service rows live in a flat `Vec` indexed by [`ServiceId`] — the
+//! hot path ([`Metrics::row_mut`]) is one bounds-checked index, not the
+//! `BTreeMap<String, _>` walk (plus `to_string` allocation) every event
+//! used to pay. Rendering stays in lexicographic name order through the
+//! side index [`Metrics::services`] walks, so reports are byte-identical
+//! to the map era.
 
 use std::collections::BTreeMap;
 
 use crate::simclock::SimTime;
+use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
 use crate::util::stats::Samples;
 
@@ -69,7 +77,12 @@ impl CommittedCpuIntegral {
 /// All platform metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    services: BTreeMap<String, ServiceMetrics>,
+    /// Per-service rows, indexed by `ServiceId` (registration order).
+    rows: Vec<ServiceMetrics>,
+    /// `ServiceId` → name, aligned with `rows` (render boundary).
+    names: Vec<String>,
+    /// name → row index, iterated for the canonical name-sorted render.
+    by_name: BTreeMap<String, u32>,
     pub committed_cpu: CommittedCpuIntegral,
     /// Pods created / deleted (cold-start churn).
     pub pods_created: u64,
@@ -90,16 +103,62 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Registers the row for a freshly interned service. The platform
+    /// interner is the sole id allocator and registers every id it hands
+    /// out, so rows and ids stay aligned by construction; re-registering
+    /// an existing id is a no-op.
+    pub fn register(&mut self, id: ServiceId, name: &str) {
+        if id.index() < self.rows.len() {
+            debug_assert_eq!(self.names[id.index()], name, "metrics row misaligned");
+            return;
+        }
+        assert_eq!(
+            id.index(),
+            self.rows.len(),
+            "ServiceId {id:?} registered out of order (rows={})",
+            self.rows.len()
+        );
+        self.rows.push(ServiceMetrics::default());
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id.0);
+    }
+
+    /// Hot-path row access: one index, no hashing, no allocation.
+    #[inline]
+    pub fn row_mut(&mut self, id: ServiceId) -> &mut ServiceMetrics {
+        &mut self.rows[id.index()]
+    }
+
+    #[inline]
+    pub fn row(&self, id: ServiceId) -> &ServiceMetrics {
+        &self.rows[id.index()]
+    }
+
+    /// Name-addressed row for tests and boundary code. Creates the row on
+    /// demand (the map era's `entry()` behavior) — platform code uses
+    /// [`Metrics::row_mut`] with a registered id instead.
     pub fn service(&mut self, name: &str) -> &mut ServiceMetrics {
-        self.services.entry(name.to_string()).or_default()
+        let i = match self.by_name.get(name) {
+            Some(&i) => i as usize,
+            None => {
+                let i = self.rows.len();
+                self.register(ServiceId(i as u32), name);
+                i
+            }
+        };
+        &mut self.rows[i]
     }
 
     pub fn service_ref(&self, name: &str) -> Option<&ServiceMetrics> {
-        self.services.get(name)
+        self.by_name.get(name).map(|&i| &self.rows[i as usize])
     }
 
+    /// Rows in lexicographic name order — the canonical render pass every
+    /// report/merge walks (byte-identical to the old `BTreeMap` order).
     pub fn services(&self) -> impl Iterator<Item = (&String, &ServiceMetrics)> {
-        self.services.iter()
+        self.by_name
+            .iter()
+            .map(|(n, &i)| (n, &self.rows[i as usize]))
     }
 }
 
@@ -149,5 +208,20 @@ mod tests {
         assert_eq!(m.service_ref("b").unwrap().completed, 2);
         assert!(m.service_ref("c").is_none());
         assert_eq!(m.services().count(), 2);
+    }
+
+    #[test]
+    fn rows_align_with_ids_and_render_name_sorted() {
+        let mut m = Metrics::default();
+        // Deploy order b, a — ids 0, 1; render must come back a, b.
+        m.register(ServiceId(0), "b");
+        m.register(ServiceId(1), "a");
+        m.register(ServiceId(0), "b"); // idempotent
+        m.row_mut(ServiceId(0)).completed += 3;
+        m.row_mut(ServiceId(1)).failed += 1;
+        assert_eq!(m.row(ServiceId(0)).completed, 3);
+        assert_eq!(m.service("b").completed, 3, "name path hits the same row");
+        let order: Vec<&str> = m.services().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(order, vec!["a", "b"]);
     }
 }

@@ -19,8 +19,9 @@
 //! heterogeneous pools, per-node kubelets, the scheduler's filter/score
 //! path) flows from the same constructor.
 
-use std::collections::BTreeMap;
+use std::sync::Arc;
 
+use crate::util::intern::{Interner, ServiceId};
 use crate::util::nohash::IdHashMap;
 
 use crate::apiserver::{ApiServer, FeatureGates};
@@ -47,16 +48,178 @@ pub use crate::coordinator::sim::Simulation;
 /// Engine type alias used across the coordinator.
 pub type Eng = Engine<Platform>;
 
-/// A pod whose startup pipeline is still in flight, keyed by `PodId` in
+/// A pod whose startup pipeline is still in flight, tracked in
 /// [`Platform::starting_pods`]. Tracked so node-crash fault handling can
 /// cancel the pending `PodReady` and unwind the owning service's
-/// `starting` counter — the service name is not derivable from the cluster
+/// `starting` counter — the service is not derivable from the cluster
 /// pod (its spec carries the workload profile name, not the service).
 #[derive(Debug)]
 pub(crate) struct StartingPod {
-    pub service: String,
+    pub service: ServiceId,
     pub node: NodeId,
     pub ready_event: EventId,
+}
+
+/// In-flight startup pipelines in insertion order — the same order the
+/// old `BTreeMap<PodId, _>` iterated in (pod uids were monotone), kept
+/// explicit now that slab ids pack a generation and no longer sort by
+/// creation time.
+#[derive(Debug, Default)]
+pub(crate) struct StartingPods(Vec<(PodId, StartingPod)>);
+
+impl StartingPods {
+    pub fn insert(&mut self, pod: PodId, s: StartingPod) {
+        debug_assert!(self.0.iter().all(|(p, _)| *p != pod));
+        self.0.push((pod, s));
+    }
+
+    /// Removes by pod id, preserving insertion order of the rest.
+    pub fn remove(&mut self, pod: PodId) -> Option<StartingPod> {
+        let i = self.0.iter().position(|(p, _)| *p == pod)?;
+        Some(self.0.remove(i).1)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (PodId, &StartingPod)> {
+        self.0.iter().map(|(p, s)| (*p, s))
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &StartingPod> {
+        self.0.iter().map(|(_, s)| s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// The service directory: the intern table plus a dense slot per id.
+///
+/// A slot is `None` for names that were interned (submitted against,
+/// messaged about) but never deployed — exactly the set the old
+/// `BTreeMap<String, Service>` simply had no entry for. Iteration
+/// ([`Services::values`], [`Services::keys`], [`Services::ids_by_name`])
+/// stays in lexicographic name order, matching the map era everywhere an
+/// iteration order can reach the RNG or a report.
+#[derive(Default)]
+pub struct Services {
+    interner: Interner,
+    slots: Vec<Option<Service>>,
+}
+
+impl Services {
+    /// Interns a name (allocating its dense id on first sight) without
+    /// deploying anything. Platform code goes through
+    /// [`Platform::intern_service`], which also registers the metrics row.
+    pub(crate) fn intern(&mut self, name: &str) -> ServiceId {
+        let id = self.interner.intern(name);
+        if self.slots.len() <= id.index() {
+            self.slots.resize_with(id.index() + 1, || None);
+        }
+        id
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<ServiceId> {
+        self.interner.get(name)
+    }
+
+    /// The name behind an id (render/boundary use).
+    pub fn name(&self, id: ServiceId) -> &Arc<str> {
+        self.interner.name(id)
+    }
+
+    /// The deployed service behind an id (`None` if interned-only).
+    #[inline]
+    pub fn get(&self, id: ServiceId) -> Option<&Service> {
+        self.slots.get(id.index())?.as_ref()
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: ServiceId) -> Option<&mut Service> {
+        self.slots.get_mut(id.index())?.as_mut()
+    }
+
+    pub fn get_by_name(&self, name: &str) -> Option<&Service> {
+        self.get(self.id_of(name)?)
+    }
+
+    /// Is a service with this name deployed?
+    pub fn contains_key(&self, name: &str) -> bool {
+        self.get_by_name(name).is_some()
+    }
+
+    pub(crate) fn insert(&mut self, id: ServiceId, svc: Service) {
+        self.slots[id.index()] = Some(svc);
+    }
+
+    /// Deployed services in name order.
+    pub fn values(&self) -> impl Iterator<Item = &Service> {
+        self.interner
+            .ids_by_name()
+            .filter_map(|id| self.slots[id.index()].as_ref())
+    }
+
+    /// Deployed service names in name order.
+    pub fn keys(&self) -> impl Iterator<Item = &Arc<str>> {
+        self.interner
+            .iter_by_name()
+            .filter(|(_, id)| self.slots[id.index()].is_some())
+            .map(|(n, _)| n)
+    }
+
+    /// Deployed service ids in name order — the canonical sweep order for
+    /// RNG-bearing loops (crash recovery, scale-up sweeps), where deploy
+    /// order (`fn-0, fn-1, fn-10, …` interleaves differently) would
+    /// silently reorder RNG draws.
+    pub fn ids_by_name(&self) -> impl Iterator<Item = ServiceId> + '_ {
+        self.interner
+            .ids_by_name()
+            .filter(|id| self.slots[id.index()].is_some())
+    }
+
+    /// Number of deployed services.
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::ops::Index<ServiceId> for Services {
+    type Output = Service;
+
+    fn index(&self, id: ServiceId) -> &Service {
+        self.get(id).expect("service not deployed")
+    }
+}
+
+impl std::ops::Index<&str> for Services {
+    type Output = Service;
+
+    fn index(&self, name: &str) -> &Service {
+        self.get_by_name(name)
+            .unwrap_or_else(|| panic!("service {name:?} not deployed"))
+    }
+}
+
+/// Map-style iteration in name order — the `&BTreeMap<String, Service>`
+/// surface tests and debug sweeps loop over.
+impl<'a> IntoIterator for &'a Services {
+    type Item = (&'a Arc<str>, &'a Service);
+    type IntoIter = std::vec::IntoIter<(&'a Arc<str>, &'a Service)>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.interner
+            .iter_by_name()
+            .filter_map(|(n, id)| self.slots[id.index()].as_ref().map(|s| (n, s)))
+            .collect::<Vec<_>>()
+            .into_iter()
+    }
 }
 
 /// A pending cross-shard reschedule request emitted by a cell whose only
@@ -97,10 +260,10 @@ pub struct Platform {
     /// unless [`Platform::install_faults`] armed it.
     pub faults: FaultState,
     /// Pods whose startup pipeline is still running (insert in
-    /// `start_pod`, remove in `pod_ready`). BTreeMap for deterministic
-    /// iteration when a crash sweeps a node.
-    pub(crate) starting_pods: BTreeMap<PodId, StartingPod>,
-    pub services: BTreeMap<String, Service>,
+    /// `start_pod`, remove in `pod_ready`). Insertion-ordered for
+    /// deterministic iteration when a crash sweeps a node.
+    pub(crate) starting_pods: StartingPods,
+    pub services: Services,
     pub(crate) requests: IdHashMap<RequestId, RequestState>,
     pub(crate) next_request: u64,
     pub rng: Rng,
@@ -159,8 +322,8 @@ impl Platform {
             hybrid_weights: HybridWeights::default(),
             fleet,
             faults,
-            starting_pods: BTreeMap::new(),
-            services: BTreeMap::new(),
+            starting_pods: StartingPods::default(),
+            services: Services::default(),
             requests: IdHashMap::default(),
             next_request: 1,
             rng,
@@ -195,7 +358,6 @@ impl Platform {
     /// setup), so cold starts pay container start + init, not a registry
     /// pull.
     pub fn deploy(&mut self, eng: &mut Eng, svc: Service) {
-        let name = svc.name.clone();
         let min = svc.cfg.min_scale;
         let image = svc.profile.image.clone();
         for i in 0..self.cluster.nodes().len() {
@@ -203,10 +365,20 @@ impl Platform {
                 .node_mut(NodeId(i as u32))
                 .cache_image(&image);
         }
-        self.services.insert(name.clone(), svc);
+        let id = self.intern_service(&svc.name);
+        self.services.insert(id, svc);
         for _ in 0..min {
-            Self::start_pod(self, eng, &name, false);
+            Self::start_pod(self, eng, id, false);
         }
+    }
+
+    /// Interns a service name (the string → [`ServiceId`] boundary) and
+    /// registers its metrics row — the sole id allocator, so the intern
+    /// table and the metrics rows stay aligned by construction.
+    pub fn intern_service(&mut self, name: &str) -> ServiceId {
+        let id = self.services.intern(name);
+        self.metrics.register(id, name);
+        id
     }
 
     /// Convenience: deploy a paper workload under a policy.
@@ -222,8 +394,16 @@ impl Platform {
 
     // ---------------------------------------------------------------- submit
 
-    /// Submits a request now; returns its id.
+    /// Submits a request now; returns its id. Name-addressed boundary —
+    /// the event loop uses [`Platform::submit_id`].
     pub fn submit(&mut self, eng: &mut Eng, service: &str) -> RequestId {
+        let svc = self.intern_service(service);
+        self.submit_id(eng, svc)
+    }
+
+    /// Submits a request against an interned service id (the hot path:
+    /// no string hashing, no allocation).
+    pub fn submit_id(&mut self, eng: &mut Eng, service: ServiceId) -> RequestId {
         let id = RequestId(self.next_request);
         self.next_request += 1;
         let req = RequestState::new(id, service, eng.now());
@@ -235,12 +415,8 @@ impl Platform {
 
     /// Schedules a submission at an absolute virtual time (load generation).
     pub fn submit_at(&mut self, eng: &mut Eng, at: SimTime, service: &str) {
-        eng.schedule_at(
-            at,
-            Event::Submit {
-                service: std::sync::Arc::from(service),
-            },
-        );
+        let service = self.intern_service(service);
+        eng.schedule_at(at, Event::Submit { service });
     }
 
     /// Submits a request and registers a one-shot continuation invoked when

@@ -3,6 +3,7 @@
 use crate::cluster::pod::PodId;
 use crate::knative::activator::RequestId;
 use crate::simclock::{EventId, SimTime};
+use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
 use crate::workload::exec::Execution;
 
@@ -16,12 +17,12 @@ pub enum Outcome {
 /// Typed one-shot continuation fired when the request finishes (completed
 /// or failed) — the alloc-free replacement for boxed completion hooks on
 /// the load-generation hot path.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub enum Continuation {
     /// Closed-loop VU: after `think`, issue the next of `remaining`
     /// iterations against `service`.
     VuNext {
-        service: std::sync::Arc<str>,
+        service: ServiceId,
         remaining: u32,
         think: SimTime,
     },
@@ -31,9 +32,10 @@ pub enum Continuation {
 #[derive(Debug)]
 pub struct RequestState {
     pub id: RequestId,
-    /// Owning service name; `Arc<str>` so per-request clones on the hot
-    /// path are refcount bumps, not heap copies.
-    pub service: std::sync::Arc<str>,
+    /// Owning service — an interned id, so per-request copies on the hot
+    /// path are plain `u32` moves (not even the `Arc<str>` refcount bump
+    /// this replaced).
+    pub service: ServiceId,
     pub pod: Option<PodId>,
     pub submitted_at: SimTime,
     /// Execution progress once dispatched into a container.
@@ -51,10 +53,10 @@ pub struct RequestState {
 }
 
 impl RequestState {
-    pub fn new(id: RequestId, service: &str, submitted_at: SimTime) -> RequestState {
+    pub fn new(id: RequestId, service: ServiceId, submitted_at: SimTime) -> RequestState {
         RequestState {
             id,
-            service: std::sync::Arc::from(service),
+            service,
             pod: None,
             submitted_at,
             exec: None,
@@ -77,10 +79,10 @@ mod tests {
 
     #[test]
     fn fresh_request_state() {
-        let r = RequestState::new(RequestId(1), "svc", SimTime::from_millis(5));
+        let r = RequestState::new(RequestId(1), ServiceId(0), SimTime::from_millis(5));
         assert!(!r.executing());
         assert!(!r.cold_start);
         assert_eq!(r.submitted_at, SimTime::from_millis(5));
-        assert_eq!(&*r.service, "svc");
+        assert_eq!(r.service, ServiceId(0));
     }
 }

@@ -8,6 +8,7 @@ use crate::cluster::NodeId;
 use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::simclock::SimTime;
+use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
 
 impl Platform {
@@ -18,13 +19,13 @@ impl Platform {
     pub(crate) fn request_resize(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         pod_id: PodId,
         target: MilliCpu,
     ) {
         // Record the latest desire; older pending desires are superseded.
         {
-            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(svc) = w.services.get_mut(svc_id) else { return };
             let Some(idx) = svc.pod_index(pod_id) else { return };
             svc.pods[idx].desired_limit = Some(target);
         }
@@ -32,15 +33,15 @@ impl Platform {
         eng.schedule_in(
             hook,
             Event::ResizeHook {
-                service: std::sync::Arc::from(svc_name),
+                service: svc_id,
                 pod: pod_id,
             },
         );
     }
 
-    pub(crate) fn try_patch(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
+    pub(crate) fn try_patch(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId, pod_id: PodId) {
         let target = {
-            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(svc) = w.services.get(svc_id) else { return };
             let Some(idx) = svc.pod_index(pod_id) else { return };
             match svc.pods[idx].desired_limit {
                 Some(t) => t,
@@ -50,7 +51,7 @@ impl Platform {
         let Some(applied) = w.applied_limit(pod_id) else { return };
         if applied == target && w.cluster.pod(pod_id).unwrap().status.resize.is_none() {
             // Already there.
-            let svc = w.services.get_mut(svc_name).unwrap();
+            let svc = w.services.get_mut(svc_id).unwrap();
             if let Some(idx) = svc.pod_index(pod_id) {
                 svc.pods[idx].desired_limit = None;
             }
@@ -65,7 +66,7 @@ impl Platform {
             // Permanent rejection semantics: the desire is dropped and the
             // pod keeps its current allocation (same as the non-transient
             // API errors below).
-            let svc = w.services.get_mut(svc_name).unwrap();
+            let svc = w.services.get_mut(svc_id).unwrap();
             if let Some(idx) = svc.pod_index(pod_id) {
                 svc.pods[idx].desired_limit = None;
             }
@@ -82,7 +83,7 @@ impl Platform {
             Ok(()) => {
                 w.metrics.resizes_accepted += 1;
                 {
-                    let svc = w.services.get_mut(svc_name).unwrap();
+                    let svc = w.services.get_mut(svc_id).unwrap();
                     if let Some(idx) = svc.pod_index(pod_id) {
                         svc.pods[idx].desired_limit = None;
                         if let Some(t) = svc.pods[idx].retry_timer.take() {
@@ -104,7 +105,7 @@ impl Platform {
                 eng.schedule_in(
                     lat,
                     Event::ResizeLanded {
-                        service: std::sync::Arc::from(svc_name),
+                        service: svc_id,
                         pod: pod_id,
                         target,
                     },
@@ -120,7 +121,7 @@ impl Platform {
                     // Permanent rejection (gate disabled, restart-required
                     // policy, invalid limit): drop the desire — the pod
                     // simply keeps its current allocation.
-                    let svc = w.services.get_mut(svc_name).unwrap();
+                    let svc = w.services.get_mut(svc_id).unwrap();
                     if let Some(idx) = svc.pod_index(pod_id) {
                         svc.pods[idx].desired_limit = None;
                     }
@@ -130,13 +131,13 @@ impl Platform {
                 // coming up): retry shortly unless one is already scheduled.
                 w.metrics.resize_conflicts += 1;
                 let retry = w.params.resize_retry;
-                let svc = w.services.get_mut(svc_name).unwrap();
+                let svc = w.services.get_mut(svc_id).unwrap();
                 let Some(idx) = svc.pod_index(pod_id) else { return };
                 if svc.pods[idx].retry_timer.is_none() {
                     let s = eng.schedule_in(
                         retry,
                         Event::ResizeRetry {
-                            service: std::sync::Arc::from(svc_name),
+                            service: svc_id,
                             pod: pod_id,
                         },
                     );
@@ -148,13 +149,13 @@ impl Platform {
 
     /// Conflict backoff elapsed: clear the stored timer (it just fired)
     /// and re-attempt the patch.
-    pub(crate) fn retry_patch(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod_id: PodId) {
-        if let Some(svc) = w.services.get_mut(svc_name) {
+    pub(crate) fn retry_patch(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId, pod_id: PodId) {
+        if let Some(svc) = w.services.get_mut(svc_id) {
             if let Some(i) = svc.pod_index(pod_id) {
                 svc.pods[i].retry_timer = None;
             }
         }
-        Self::try_patch(w, eng, svc_name, pod_id);
+        Self::try_patch(w, eng, svc_id, pod_id);
     }
 
     /// Clears every trace of an in-flight resize for `pod_id`: the
@@ -166,10 +167,10 @@ impl Platform {
     pub(crate) fn clear_resize_state(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         pod_id: PodId,
     ) {
-        if let Some(svc) = w.services.get_mut(svc_name) {
+        if let Some(svc) = w.services.get_mut(svc_id) {
             if let Some(idx) = svc.pod_index(pod_id) {
                 svc.pods[idx].desired_limit = None;
                 if let Some(t) = svc.pods[idx].retry_timer.take() {
@@ -185,16 +186,14 @@ impl Platform {
     pub(crate) fn resize_landed(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         pod_id: PodId,
         target: MilliCpu,
     ) {
         let now = eng.now();
-        let Some(pod) = w.cluster.pod(pod_id) else { return };
-        let Some(node_id) = pod.node else { return };
-        w.cluster
-            .node_mut(node_id)
-            .apply_cpu_limit(pod_id, target, now);
+        if !w.cluster.apply_cpu_limit(pod_id, target, now) {
+            return;
+        }
         let _ = w.api.mark_done(&mut w.cluster, pod_id, target, now);
         // Mirror whatever limit is actually in force (mark_done may reject
         // pathological state transitions), so the counters track the
@@ -202,19 +201,19 @@ impl Platform {
         let applied = w.applied_limit(pod_id).unwrap_or(target);
         w.fleet.resize_landed(pod_id, applied);
         Self::committed_changed(w, eng);
-        Self::recompute_pod(w, eng, svc_name, pod_id);
+        Self::recompute_pod(w, eng, svc_id, pod_id);
         // A newer desire may have raced in (up while down was landing).
         let pending = {
-            let svc = w.services.get(svc_name);
+            let svc = w.services.get(svc_id);
             svc.and_then(|s| s.pod_index(pod_id))
-                .and_then(|i| w.services[svc_name].pods[i].desired_limit)
+                .and_then(|i| w.services[svc_id].pods[i].desired_limit)
         };
         if let Some(t) = pending {
             if t != target {
                 eng.schedule_in(
                     SimTime::ZERO,
                     Event::ResizeHook {
-                        service: std::sync::Arc::from(svc_name),
+                        service: svc_id,
                         pod: pod_id,
                     },
                 );
@@ -256,6 +255,6 @@ impl Platform {
     pub(crate) fn committed_changed(w: &mut Platform, eng: &mut Eng) {
         w.metrics
             .committed_cpu
-            .update(eng.now(), w.fleet.committed_total());
+            .update(eng.now(), w.fleet.committed_total())
     }
 }

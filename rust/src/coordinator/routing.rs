@@ -10,13 +10,17 @@
 //!
 //! All handlers are associated functions on [`Platform`] taking
 //! `(&mut Platform, &mut Eng)`; state lives in
-//! [`platform`](super::platform).
+//! [`platform`](super::platform). Services are addressed by interned
+//! [`ServiceId`]s end to end — no string hashing, cloning, or `Arc`
+//! refcount traffic anywhere on this path (pinned by the grep gate in
+//! `tests/interning.rs`).
 
 use crate::cluster::pod::PodId;
 use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::knative::activator::RequestId;
 use crate::simclock::SimTime;
+use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
 use crate::workload::exec::Execution;
 
@@ -24,19 +28,19 @@ impl Platform {
     // ---------------------------------------------------------------- arrive
 
     pub(crate) fn arrive(w: &mut Platform, eng: &mut Eng, req: RequestId) {
-        let svc_name = match w.requests.get(&req) {
-            Some(r) => r.service.clone(),
+        let svc_id = match w.requests.get(&req) {
+            Some(r) => r.service,
             None => return,
         };
         // Driver-managed policies learn the arrival stream here — the
         // activator's view, after the forward hop — and schedule the next
         // speculation cycle. A no-op for the §3 triple.
-        Self::forecast_observe(w, eng, &svc_name);
+        Self::forecast_observe(w, eng, svc_id);
         // Placement-aware selection: the scored pick reads the per-node
         // counters, so the service borrow must be shared here.
         let Some(pick) = w
             .services
-            .get(&*svc_name)
+            .get(svc_id)
             .map(|svc| svc.pick_pod_with(w.routing, &w.fleet, w.hybrid_weights))
         else {
             // Unknown service: fail fast.
@@ -45,11 +49,11 @@ impl Platform {
         };
 
         if let Some(idx) = pick {
-            Self::dispatch(w, eng, &svc_name, req, idx);
+            Self::dispatch(w, eng, svc_id, req, idx);
         } else {
             // Buffer at the activator; start a pod if none is coming up.
             let now = eng.now();
-            let svc = w.services.get_mut(&*svc_name).unwrap();
+            let svc = w.services.get_mut(svc_id).unwrap();
             if svc.activator.buffer(req, now).is_err() {
                 Self::fail_request(w, eng, req);
                 return;
@@ -59,22 +63,22 @@ impl Platform {
                 if let Some(r) = w.requests.get_mut(&req) {
                     r.cold_start = true;
                 }
-                Self::start_pod(w, eng, &svc_name, true);
+                Self::start_pod(w, eng, svc_id, true);
             } else {
-                Self::maybe_scale_up(w, eng, &svc_name);
+                Self::maybe_scale_up(w, eng, svc_id);
                 // An exhausted warm pool refills proactively too (bounded
                 // by the same scale ceiling the KPA respects).
-                Self::pool_refill(w, eng, &svc_name);
+                Self::pool_refill(w, eng, svc_id);
             }
         }
-        Self::record_concurrency(w, eng, &svc_name);
+        Self::record_concurrency(w, eng, svc_id);
     }
 
     pub(crate) fn fail_request(w: &mut Platform, eng: &mut Eng, req: RequestId) {
         let mut cont = None;
         if let Some(mut r) = w.requests.remove(&req) {
             cont = r.continuation.take();
-            w.metrics.service(&r.service).failed += 1;
+            w.metrics.row_mut(r.service).failed += 1;
         }
         Self::fire_hook(w, eng, req);
         Self::fire_continuation(eng, cont);
@@ -82,17 +86,17 @@ impl Platform {
 
     // -------------------------------------------------------------- dispatch
 
-    /// Admits `req` into pod `idx` of `svc` and (policy-dependent) fires the
-    /// pre-request resize hook before redirecting.
+    /// Admits `req` into pod `idx` of the service and (policy-dependent)
+    /// fires the pre-request resize hook before redirecting.
     pub(crate) fn dispatch(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         req: RequestId,
         idx: usize,
     ) {
         let (pod_id, hooks, serving) = {
-            let svc = w.services.get_mut(svc_name).unwrap();
+            let svc = w.services.get_mut(svc_id).unwrap();
             let serving = svc.cfg.serving_cpu;
             let sp = &mut svc.pods[idx];
             sp.proxy.offer(req);
@@ -107,7 +111,7 @@ impl Platform {
             r.pod = Some(pod_id);
         }
         // Cancel any pending idle scale-down for this pod.
-        let svc = w.services.get_mut(svc_name).unwrap();
+        let svc = w.services.get_mut(svc_id).unwrap();
         if let Some(t) = svc.pods[idx].idle_timer.take() {
             eng.cancel(t);
         }
@@ -120,7 +124,7 @@ impl Platform {
             .map(|p| p.status.resize.is_some())
             .unwrap_or(false);
         let park_desired = {
-            let svc = &w.services[svc_name];
+            let svc = &w.services[svc_id];
             svc.pod_index(pod_id)
                 .and_then(|i| svc.pods[i].desired_limit)
                 .map(|d| d < serving)
@@ -133,27 +137,27 @@ impl Platform {
             if let Some(r) = w.requests.get_mut(&req) {
                 r.scaled_up = true;
             }
-            w.metrics.service(svc_name).inplace_scale_ups += 1;
-            Self::request_resize(w, eng, svc_name, pod_id, serving);
+            w.metrics.row_mut(svc_id).inplace_scale_ups += 1;
+            Self::request_resize(w, eng, svc_id, pod_id, serving);
         }
         // Pooled: this dispatch consumed a pool pod — top the pool back up
         // so the next burst still finds warm capacity. No-op otherwise.
-        Self::pool_refill(w, eng, svc_name);
-        Self::begin_exec(w, eng, svc_name, req, pod_id);
+        Self::pool_refill(w, eng, svc_id);
+        Self::begin_exec(w, eng, svc_id, req, pod_id);
     }
 
     pub(crate) fn begin_exec(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         req: RequestId,
         pod: PodId,
     ) {
-        let profile = w.services[svc_name].profile.clone();
+        let profile = w.services[svc_id].profile.clone();
         if let Some(r) = w.requests.get_mut(&req) {
             r.exec = Some(Execution::start(&profile, eng.now()));
         }
-        Self::recompute_pod(w, eng, svc_name, pod);
+        Self::recompute_pod(w, eng, svc_id, pod);
     }
 
     // ------------------------------------------------------------- execution
@@ -161,15 +165,14 @@ impl Platform {
     /// Re-integrates progress for every active request on `pod` and
     /// reschedules their completion events under the current allocation.
     /// Called on every regime change: request start/finish, resize landing.
-    pub(crate) fn recompute_pod(w: &mut Platform, eng: &mut Eng, svc_name: &str, pod: PodId) {
+    pub(crate) fn recompute_pod(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId, pod: PodId) {
         let now = eng.now();
-        let Some(svc) = w.services.get(svc_name) else { return };
+        let Some(svc) = w.services.get(svc_id) else { return };
         let Some(idx) = svc.pod_index(pod) else { return };
         // Reuse the platform scratch buffer instead of allocating per event.
         let mut active = std::mem::take(&mut w.scratch_active);
         active.clear();
-        active.extend_from_slice(w.services[svc_name].pods[idx].proxy.active_requests());
-        let _ = svc;
+        active.extend_from_slice(w.services[svc_id].pods[idx].proxy.active_requests());
         if active.is_empty() {
             w.scratch_active = active;
             return;
@@ -206,7 +209,7 @@ impl Platform {
     pub(crate) fn complete(w: &mut Platform, eng: &mut Eng, req: RequestId) {
         let now = eng.now();
         let Some(r) = w.requests.get_mut(&req) else { return };
-        let svc_name = r.service.clone();
+        let svc_id = r.service;
         let pod = r.pod;
         if let Some(exec) = r.exec.as_mut() {
             exec.advance(now, r.share.max(MilliCpu(1)));
@@ -221,7 +224,7 @@ impl Platform {
         // exactly where the boxed hooks never ran either.
         let cont = r.continuation.take();
         {
-            let m = w.metrics.service(&svc_name);
+            let m = w.metrics.row_mut(svc_id);
             m.latency_ms.record(latency_ms);
             m.completed += 1;
             if r.cold_start {
@@ -232,7 +235,7 @@ impl Platform {
         let Some(pod_id) = pod else { return };
         // Free the concurrency slot; promote a queued request if any.
         let promoted = {
-            let Some(svc) = w.services.get_mut(&*svc_name) else { return };
+            let Some(svc) = w.services.get_mut(svc_id) else { return };
             let Some(idx) = svc.pod_index(pod_id) else { return };
             // Net one request leaves the pod whether or not a queued one is
             // promoted into the freed slot.
@@ -241,26 +244,26 @@ impl Platform {
         };
         w.fleet.completed(pod_id);
         if let Some(next) = promoted {
-            Self::begin_exec(w, eng, &svc_name, next, pod_id);
+            Self::begin_exec(w, eng, svc_id, next, pod_id);
         } else {
-            Self::recompute_pod(w, eng, &svc_name, pod_id);
+            Self::recompute_pod(w, eng, svc_id, pod_id);
         }
 
-        Self::post_request_hooks(w, eng, &svc_name, pod_id);
-        Self::record_concurrency(w, eng, &svc_name);
-        Self::drain_activator(w, eng, &svc_name);
+        Self::post_request_hooks(w, eng, svc_id, pod_id);
+        Self::record_concurrency(w, eng, svc_id);
+        Self::drain_activator(w, eng, svc_id);
         Self::fire_hook(w, eng, req);
         Self::fire_continuation(eng, cont);
     }
 
     /// Dispatches as many buffered requests as capacity allows, failing
     /// timed-out entries as they surface.
-    pub(crate) fn drain_activator(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+    pub(crate) fn drain_activator(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId) {
         let policy = w.routing;
         let weights = w.hybrid_weights;
         loop {
             let (next, dead) = {
-                let Some(svc) = w.services.get_mut(svc_name) else { return };
+                let Some(svc) = w.services.get_mut(svc_id) else { return };
                 if svc.pick_pod_with(policy, &w.fleet, weights).is_none() {
                     return;
                 }
@@ -278,7 +281,7 @@ impl Platform {
             // have mutated pod state.
             let Some(idx) = w
                 .services
-                .get(svc_name)
+                .get(svc_id)
                 .and_then(|s| s.pick_pod_with(policy, &w.fleet, weights))
             else {
                 // Capacity vanished under us (a hook claimed it): re-buffer
@@ -287,7 +290,7 @@ impl Platform {
                 // popped, so dropping it here would leak it in flight.
                 let requeued = w
                     .services
-                    .get_mut(svc_name)
+                    .get_mut(svc_id)
                     .map(|svc| svc.activator.buffer(b.request, b.enqueued_at).is_ok())
                     .unwrap_or(false);
                 if !requeued {
@@ -295,16 +298,16 @@ impl Platform {
                 }
                 return;
             };
-            Self::dispatch(w, eng, svc_name, b.request, idx);
+            Self::dispatch(w, eng, svc_id, b.request, idx);
         }
     }
 
     /// Level-triggered concurrency bookkeeping after every arrival and
     /// completion: records the KPA sample and considers scale-out whenever
     /// observed concurrency exceeds what the current fleet targets.
-    pub(crate) fn record_concurrency(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+    pub(crate) fn record_concurrency(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId) {
         let now = eng.now();
-        let overloaded = if let Some(svc) = w.services.get_mut(svc_name) {
+        let overloaded = if let Some(svc) = w.services.get_mut(svc_id) {
             // O(1): the per-service counters maintained on dispatch/complete
             // and pod ready/terminating transitions replace the former
             // per-tick scan over every pod. `kpa_signal_matches_scan` (in
@@ -325,7 +328,7 @@ impl Platform {
             false
         };
         if overloaded {
-            Self::maybe_scale_up(w, eng, svc_name);
+            Self::maybe_scale_up(w, eng, svc_id);
         }
     }
 }

@@ -1,7 +1,7 @@
 //! `kinetic bench` — the fixed scale ladder behind the per-PR perf
 //! trajectory (`BENCH_<n>.json` at the repo root).
 //!
-//! Five rungs, smallest to largest, each exercising a different layer of
+//! Six rungs, smallest to largest, each exercising a different layer of
 //! the hot path:
 //!
 //! | rung              | what it measures                                  |
@@ -11,10 +11,12 @@
 //! | fleet-100         | 100 uniform nodes, one tenant each, open-loop      |
 //! | azure-replay      | Azure-sample trace replay, one service per rank    |
 //! | fleet-sharded     | same fleet under the sharded runtime, 1/2/4 shards |
+//! | state-layer       | generational pod slab vs map oracle, raw lookups   |
 //!
-//! The ladder is *fixed*: rung names, topologies and workloads never
-//! change across PRs, so `BENCH_5.json` vs `BENCH_6.json` is a like-for-
-//! like comparison. `smoke` shrinks every rung to CI size (same shape,
+//! The ladder is *append-only*: existing rung names, topologies and
+//! workloads never change across PRs (new rungs may be appended), so
+//! `BENCH_5.json` vs `BENCH_6.json` is a like-for-like comparison on the
+//! shared prefix. `smoke` shrinks every rung to CI size (same shape,
 //! tiny counts) — CI runs `KINETIC_SMOKE=1 kinetic bench` and schema-
 //! validates the output; real numbers come from a release build on a
 //! quiet machine.
@@ -381,6 +383,72 @@ pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
         ));
     }
 
+    // Rung 6: the state layer in isolation — generational-slab pod
+    // lookups (the arena overhaul's hot-path primitive) against a map
+    // oracle over the same churned id set, with agreement asserted. The
+    // paired timing lands in `cargo bench --bench fleet_scale -- arena`;
+    // this rung keeps the slab number on the per-PR trajectory.
+    {
+        use std::collections::HashMap;
+
+        use crate::cluster::arena::PodSlab;
+        use crate::cluster::pod::{PodId, PodSpec};
+        use crate::util::quantity::{Memory, MilliCpu, Resources};
+        use crate::util::rng::Rng;
+
+        let pods: usize = if smoke { 512 } else { 8192 };
+        let iters: u64 = if smoke { 50 } else { 2000 };
+        let spec = PodSpec::single(
+            "fn",
+            "img",
+            Resources::new(MilliCpu(100), Memory::from_mib(64)),
+            Resources::new(MilliCpu(1000), Memory::from_mib(128)),
+        );
+        let mut slab = PodSlab::new();
+        let mut live: Vec<PodId> = (0..pods).map(|_| slab.alloc(spec.clone())).collect();
+        let mut rng = Rng::new(13);
+        // Retire and replace a third of the fleet: real generation churn.
+        for _ in 0..pods / 3 {
+            let i = rng.below(live.len() as u64) as usize;
+            slab.remove(live.swap_remove(i));
+            live.push(slab.alloc(spec.clone()));
+        }
+        let map: HashMap<PodId, u64> = live.iter().map(|&id| (id, id.0)).collect();
+        let mut probes = live.clone();
+        rng.shuffle(&mut probes);
+        let lookups = iters * probes.len() as u64;
+        let mut slab_hits = 0u64;
+        let mut map_hits = 0u64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            for &id in &probes {
+                if slab.get(id).is_some() {
+                    slab_hits += 1;
+                }
+            }
+        }
+        for _ in 0..iters {
+            for &id in &probes {
+                if map.get(&id).is_some() {
+                    map_hits += 1;
+                }
+            }
+        }
+        let wall = t0.elapsed();
+        if slab_hits != map_hits || slab_hits != lookups {
+            return Err(format!(
+                "state-layer rung: slab saw {slab_hits}/{lookups} hits, map oracle {map_hits}"
+            ));
+        }
+        rungs.push(RungResult::timed(
+            "state-layer",
+            "generational pod slab vs map oracle, randomized lookups",
+            0,
+            lookups * 2,
+            wall,
+        ));
+    }
+
     Ok(BenchReport {
         smoke,
         measured: true,
@@ -450,19 +518,23 @@ mod tests {
         assert!(BenchReport::from_json(&r.to_json()).is_ok());
     }
 
-    /// The committed perf-trajectory document at the repo root must always
-    /// schema-validate (cargo runs tests with cwd = rust/).
+    /// The committed perf-trajectory documents at the repo root must
+    /// always schema-validate (cargo runs tests with cwd = rust/). The
+    /// ladder is append-only: BENCH_9 grew the state-layer rung.
     #[test]
     fn committed_bench_json_validates() {
         let r = BenchReport::load(Path::new("../BENCH_8.json")).expect("BENCH_8.json validates");
         assert_eq!(r.rungs.len(), 5);
+        let r9 = BenchReport::load(Path::new("../BENCH_9.json")).expect("BENCH_9.json validates");
+        assert_eq!(r9.rungs.len(), 6);
+        assert_eq!(r9.rungs[5].name, "state-layer");
     }
 
     #[test]
     fn smoke_ladder_runs_end_to_end() {
         let r = run_ladder(true, Path::new("../examples/scenarios/azure_sample.csv")).unwrap();
         assert!(r.smoke && r.measured);
-        assert_eq!(r.rungs.len(), 5);
+        assert_eq!(r.rungs.len(), 6);
         for rung in &r.rungs {
             assert!(rung.events > 0, "{} processed no events", rung.name);
         }

@@ -119,8 +119,7 @@ impl World for Rig {
         match ev {
             RigEvent::Landed { pod, target } => {
                 let now = eng.now();
-                let node = self.node;
-                self.cluster.node_mut(node).apply_cpu_limit(pod, target, now);
+                self.cluster.apply_cpu_limit(pod, target, now);
                 self.api
                     .mark_done(&mut self.cluster, pod, target, now)
                     .expect("resize done");
@@ -170,8 +169,7 @@ impl Rig {
         let pod = self.cluster.pod_mut(self.pod).unwrap();
         pod.status.applied_cpu_limit = m;
         pod.main_container_mut().limits.cpu = m;
-        let node = self.node;
-        self.cluster.node_mut(node).apply_cpu_limit(self.pod, m, now);
+        self.cluster.apply_cpu_limit(self.pod, m, now);
     }
 
 }

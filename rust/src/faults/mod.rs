@@ -13,6 +13,11 @@
 //! so a spec without faults leaves the platform's main RNG — and therefore
 //! every report byte — exactly as a fault-free build produced it
 //! (pinned by `tests/faults.rs`).
+//!
+//! Every RNG-bearing sweep here (crash eviction, recovery rescheduling)
+//! walks services in *name* order via `Services::ids_by_name` — interned
+//! ids are assigned in deploy order, which differs from name order, and
+//! reordering the sweeps would reorder RNG draws and break byte-identity.
 
 use std::collections::BTreeMap;
 
@@ -22,6 +27,7 @@ use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform, XShardMsg};
 use crate::knative::activator::RequestId;
 use crate::simclock::SimTime;
+use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
 use crate::util::rng::Rng;
 
@@ -242,6 +248,16 @@ impl Platform {
         }
     }
 
+    /// Restricts `lost` to name order: the RNG-bearing recovery sweeps
+    /// below must walk services lexicographically (the old
+    /// `BTreeMap<String, _>` order), not in ServiceId (deploy) order.
+    fn lost_by_name(w: &Platform, lost: &BTreeMap<ServiceId, usize>) -> Vec<(ServiceId, usize)> {
+        w.services
+            .ids_by_name()
+            .filter_map(|id| lost.get(&id).map(|&n| (id, n)))
+            .collect()
+    }
+
     /// The node goes down: every resident pod dies. Starting pods unwind
     /// their startup pipeline; ready pods are evicted (in-flight requests
     /// failed or re-buffered per the crash policy). Terminating pods are
@@ -257,21 +273,21 @@ impl Platform {
         }
         w.cluster.node_mut(node).set_up(false);
 
-        // Lost capacity per service — BTreeMap so the reschedule sweep is
-        // deterministic regardless of which pods died.
-        let mut lost: BTreeMap<String, usize> = BTreeMap::new();
+        // Lost capacity per service; the sweeps below iterate it through
+        // `lost_by_name` so which pods died never reorders RNG draws.
+        let mut lost: BTreeMap<ServiceId, usize> = BTreeMap::new();
 
         // Starting pods: cancel the in-flight PodReady, unwind `starting`.
         let doomed: Vec<PodId> = w
             .starting_pods
             .iter()
             .filter(|(_, s)| s.node == node)
-            .map(|(id, _)| *id)
+            .map(|(id, _)| id)
             .collect();
         for pod_id in doomed {
-            let entry = w.starting_pods.remove(&pod_id).unwrap();
+            let entry = w.starting_pods.remove(pod_id).unwrap();
             eng.cancel(entry.ready_event);
-            if let Some(svc) = w.services.get_mut(&entry.service) {
+            if let Some(svc) = w.services.get_mut(entry.service) {
                 svc.starting = svc.starting.saturating_sub(1);
             }
             w.cluster.delete_pod(pod_id);
@@ -279,11 +295,11 @@ impl Platform {
             *lost.entry(entry.service).or_default() += 1;
         }
 
-        // Ready pods, service by service (BTreeMap order).
-        let names: Vec<String> = w.services.keys().cloned().collect();
+        // Ready pods, service by service (name order).
+        let ids: Vec<ServiceId> = w.services.ids_by_name().collect();
         let policy = w.faults.crash_requests;
-        for name in &names {
-            let victims: Vec<PodId> = w.services[name]
+        for svc_id in ids {
+            let victims: Vec<PodId> = w.services[svc_id]
                 .pods
                 .iter()
                 .filter(|p| p.node == Some(node) && !p.terminating)
@@ -293,9 +309,9 @@ impl Platform {
                 continue;
             }
             for pod_id in &victims {
-                Self::evict_pod(w, eng, name, *pod_id, policy);
+                Self::evict_pod(w, eng, svc_id, *pod_id, policy);
             }
-            *lost.entry(name.clone()).or_default() += victims.len();
+            *lost.entry(svc_id).or_default() += victims.len();
         }
         Self::committed_changed(w, eng);
 
@@ -303,15 +319,18 @@ impl Platform {
         // pods to the sharded runtime instead of burning doomed local
         // scheduler attempts. The runtime delivers each entry to a sibling
         // cell one lookahead later (see `crate::shard`); nothing can drain
-        // here, so the local recovery half is skipped entirely.
+        // here, so the local recovery half is skipped entirely. The wire
+        // format stays name-addressed — ids are per-cell, so the sibling
+        // re-interns the name into its own table at delivery.
         if w.xshard_outbox.is_some() && !w.cluster.nodes().iter().any(|n| n.up()) {
             let at = eng.now();
-            let msgs: Vec<XShardMsg> = lost
+            let order = Self::lost_by_name(w, &lost);
+            let msgs: Vec<XShardMsg> = order
                 .iter()
-                .map(|(name, n)| XShardMsg {
+                .map(|&(id, n)| XShardMsg {
                     at,
-                    service: std::sync::Arc::from(name.as_str()),
-                    pods: *n as u32,
+                    service: std::sync::Arc::clone(w.services.name(id)),
+                    pods: n as u32,
                 })
                 .collect();
             w.xshard_outbox.as_mut().unwrap().extend(msgs);
@@ -322,22 +341,22 @@ impl Platform {
         // requests onto whatever capacity survives (a request re-buffered
         // above is dispatched here if a surviving pod has a free slot, or
         // when its replacement pod comes up).
-        for (name, n) in &lost {
-            for _ in 0..*n {
-                if Self::start_pod(w, eng, name, true) {
+        for (svc_id, n) in Self::lost_by_name(w, &lost) {
+            for _ in 0..n {
+                if Self::start_pod(w, eng, svc_id, true) {
                     w.metrics.pods_rescheduled += 1;
                 }
             }
-            Self::drain_activator(w, eng, name);
+            Self::drain_activator(w, eng, svc_id);
         }
     }
 
     /// Delivered by the sharded runtime one lookahead after a sibling
     /// cell's crash escalated its lost pods here: reschedule `pods`
-    /// replacements for `service` through the ordinary scheduler path —
+    /// replacements for the service through the ordinary scheduler path —
     /// the cross-shard counterpart of the local recovery half above.
-    pub(crate) fn xshard_reschedule(w: &mut Platform, eng: &mut Eng, service: &str, pods: u32) {
-        if !w.services.contains_key(service) {
+    pub(crate) fn xshard_reschedule(w: &mut Platform, eng: &mut Eng, service: ServiceId, pods: u32) {
+        if w.services.get(service).is_none() {
             return;
         }
         for _ in 0..pods {
@@ -348,19 +367,19 @@ impl Platform {
         Self::drain_activator(w, eng, service);
     }
 
-    /// Kills one ready pod of `svc_name`: in-flight requests are detached
+    /// Kills one ready pod of the service: in-flight requests are detached
     /// and failed or re-buffered, pod-scoped timers cancelled, the
     /// in-flight resize record cleared, and cluster/fleet/service state
     /// unwound. The caller re-schedules replacements.
     pub(crate) fn evict_pod(
         w: &mut Platform,
         eng: &mut Eng,
-        svc_name: &str,
+        svc_id: ServiceId,
         pod_id: PodId,
         policy: CrashRequestPolicy,
     ) {
         let orphans: Vec<RequestId> = {
-            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(svc) = w.services.get_mut(svc_id) else { return };
             let Some(idx) = svc.pod_index(pod_id) else { return };
             let sp = &mut svc.pods[idx];
             if let Some(t) = sp.idle_timer.take() {
@@ -368,7 +387,7 @@ impl Platform {
             }
             sp.proxy.all_requests()
         };
-        Self::clear_resize_state(w, eng, svc_name, pod_id);
+        Self::clear_resize_state(w, eng, svc_id, pod_id);
         // Detach the orphans from the dead pod: their partial execution is
         // lost (serverless at-most-once inside the container — a requeue
         // restarts from scratch on another pod).
@@ -383,7 +402,7 @@ impl Platform {
             }
         }
         {
-            let svc = w.services.get_mut(svc_name).unwrap();
+            let svc = w.services.get_mut(svc_id).unwrap();
             svc.in_flight_pods = svc.in_flight_pods.saturating_sub(orphans.len() as u32);
             if let Some(idx) = svc.pod_index(pod_id) {
                 let sp = svc.pods.remove(idx);
@@ -404,7 +423,7 @@ impl Platform {
                 CrashRequestPolicy::Requeue => {
                     let requeued = w
                         .services
-                        .get_mut(svc_name)
+                        .get_mut(svc_id)
                         .map(|svc| svc.activator.buffer(req, now).is_ok())
                         .unwrap_or(false);
                     if !requeued {
@@ -429,10 +448,12 @@ impl Platform {
             n.set_up(true);
             n.clear_image_cache();
         }
-        let names: Vec<String> = w.services.keys().cloned().collect();
-        for name in &names {
-            Self::maybe_scale_up(w, eng, name);
-            Self::drain_activator(w, eng, name);
+        // Name order — the RNG-bearing scale-up sweep must match the old
+        // `services.keys()` (String BTreeMap) iteration exactly.
+        let ids: Vec<ServiceId> = w.services.ids_by_name().collect();
+        for svc_id in ids {
+            Self::maybe_scale_up(w, eng, svc_id);
+            Self::drain_activator(w, eng, svc_id);
         }
     }
 

@@ -25,6 +25,7 @@ use crate::cluster::pod::PodId;
 use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::policy::Policy;
+use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
 
 impl Platform {
@@ -32,10 +33,10 @@ impl Platform {
     /// policies only; a no-op for the §3 triple) and schedules the next
     /// speculation cycle. Called from the activator's `arrive` path, so
     /// the predictor sees exactly what the activator sees.
-    pub(crate) fn forecast_observe(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+    pub(crate) fn forecast_observe(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId) {
         let now = eng.now();
         let policy = {
-            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(svc) = w.services.get_mut(svc_id) else { return };
             let Some(pred) = svc.predictor.as_mut() else { return };
             pred.predictor.observe(now);
             // Every arrival supersedes in-flight speculation events: a
@@ -44,16 +45,16 @@ impl Platform {
             svc.policy
         };
         if policy == Policy::PredictiveInPlace {
-            Self::schedule_speculation(w, eng, svc_name);
+            Self::schedule_speculation(w, eng, svc_id);
         }
     }
 
     /// Schedules the pre-resize for the next predicted arrival: `horizon`
     /// ahead of the predicted time (clamped to now for gaps shorter than
     /// the horizon). No prediction ⇒ nothing scheduled.
-    pub(crate) fn schedule_speculation(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+    pub(crate) fn schedule_speculation(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId) {
         let (gen, lead) = {
-            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(svc) = w.services.get_mut(svc_id) else { return };
             let horizon = svc.cfg.forecast.horizon;
             let Some(pred) = svc.predictor.as_mut() else { return };
             let Some(gap) = pred.predictor.predict_gap() else { return };
@@ -62,7 +63,7 @@ impl Platform {
         eng.schedule_in(
             lead,
             Event::Speculate {
-                service: std::sync::Arc::from(svc_name),
+                service: svc_id,
                 generation: gen,
             },
         );
@@ -72,10 +73,10 @@ impl Platform {
     /// serving allocation ahead of the forecast arrival, then arm the
     /// misprediction watchdog. Skipped when a newer arrival superseded
     /// this cycle or the rate window has gone quiet (stale histogram).
-    pub(crate) fn speculative_resize(w: &mut Platform, eng: &mut Eng, svc_name: &str, gen: u64) {
+    pub(crate) fn speculative_resize(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId, gen: u64) {
         let now = eng.now();
         let (serving, horizon, targets) = {
-            let Some(svc) = w.services.get_mut(svc_name) else { return };
+            let Some(svc) = w.services.get_mut(svc_id) else { return };
             let serving = svc.cfg.serving_cpu;
             let horizon = svc.cfg.forecast.horizon;
             let Some(pred) = svc.predictor.as_mut() else { return };
@@ -97,8 +98,8 @@ impl Platform {
             // Below serving, or a park still in flight that would drop it
             // below serving right before the predicted arrival.
             if applied < serving || desired.is_some_and(|d| d < serving) {
-                w.metrics.service(svc_name).speculative_resizes += 1;
-                Self::request_resize(w, eng, svc_name, pod, serving);
+                w.metrics.row_mut(svc_id).speculative_resizes += 1;
+                Self::request_resize(w, eng, svc_id, pod, serving);
                 raised = true;
             }
         }
@@ -111,7 +112,7 @@ impl Platform {
             eng.schedule_in(
                 horizon + horizon,
                 Event::SpeculationRepark {
-                    service: std::sync::Arc::from(svc_name),
+                    service: svc_id,
                     generation: gen,
                 },
             );
@@ -121,9 +122,9 @@ impl Platform {
     /// The misprediction watchdog: no arrival claimed the speculated pods
     /// within the horizon, so restore the §3 parked state (and the
     /// resource-availability advantage it buys).
-    pub(crate) fn speculation_repark(w: &mut Platform, eng: &mut Eng, svc_name: &str, gen: u64) {
+    pub(crate) fn speculation_repark(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId, gen: u64) {
         let (parked, targets) = {
-            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(svc) = w.services.get(svc_id) else { return };
             let Some(pred) = svc.predictor.as_ref() else { return };
             if pred.generation != gen {
                 return; // an arrival landed inside the window — a hit
@@ -139,12 +140,12 @@ impl Platform {
         for (pod, desired) in targets {
             let applied = w.applied_limit(pod).unwrap_or(MilliCpu::ZERO);
             if applied > parked || desired.is_some_and(|d| d > parked) {
-                Self::request_resize(w, eng, svc_name, pod, parked);
+                Self::request_resize(w, eng, svc_id, pod, parked);
                 missed = true;
             }
         }
         if missed {
-            w.metrics.service(svc_name).mispredictions += 1;
+            w.metrics.row_mut(svc_id).mispredictions += 1;
         }
     }
 
@@ -152,9 +153,9 @@ impl Platform {
     /// pods count toward the refill (they arrive idle), and total live
     /// pods stay within the revision's scale ceiling — an exhausted pool
     /// under saturation degrades to buffered requests exactly like warm.
-    pub(crate) fn pool_refill(w: &mut Platform, eng: &mut Eng, svc_name: &str) {
+    pub(crate) fn pool_refill(w: &mut Platform, eng: &mut Eng, svc_id: ServiceId) {
         let need = {
-            let Some(svc) = w.services.get(svc_name) else { return };
+            let Some(svc) = w.services.get(svc_id) else { return };
             if svc.policy != Policy::Pooled {
                 return;
             }
@@ -165,7 +166,7 @@ impl Platform {
             pool.saturating_sub(incoming).min(cap.saturating_sub(live))
         };
         for _ in 0..need {
-            Self::start_pod(w, eng, svc_name, false);
+            Self::start_pod(w, eng, svc_id, false);
         }
     }
 }

@@ -1,13 +1,12 @@
 //! Scenario runner: drives a [`Simulation`] with k6-style load and reports
 //! latency statistics.
 
-use std::sync::Arc;
-
 use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform, Simulation};
 use crate::coordinator::request::Continuation;
 use crate::loadgen::arrival::Arrival;
 use crate::simclock::SimTime;
+use crate::util::intern::ServiceId;
 
 /// A load scenario against one service.
 #[derive(Debug, Clone)]
@@ -89,14 +88,14 @@ impl Runner {
     pub(crate) fn vu_iterate(
         w: &mut Platform,
         eng: &mut Eng,
-        service: Arc<str>,
+        service: ServiceId,
         remaining: u32,
         think: SimTime,
     ) {
         if remaining == 0 {
             return;
         }
-        let id = w.submit(eng, &service);
+        let id = w.submit_id(eng, service);
         if let Some(r) = w.requests.get_mut(&id) {
             r.continuation = Some(Continuation::VuNext {
                 service,
@@ -129,7 +128,7 @@ impl Runner {
                 iterations,
                 think,
             } => {
-                let svc: Arc<str> = Arc::from(service);
+                let svc = sim.world.intern_service(service);
                 for _ in 0..*vus {
                     // Stagger VU starts by a few ms like k6 ramp-up.
                     let jitter =
@@ -137,7 +136,7 @@ impl Runner {
                     sim.engine.schedule_in(
                         jitter,
                         Event::VuIterate {
-                            service: svc.clone(),
+                            service: svc,
                             remaining: *iterations,
                             think: *think,
                         },
@@ -145,15 +144,11 @@ impl Runner {
                 }
             }
             Scenario::Open { arrival, horizon } => {
-                let svc: Arc<str> = Arc::from(service);
+                let svc = sim.world.intern_service(service);
                 let mut rng = sim.world.rng.fork();
                 for t in arrival.times(*horizon, &mut rng) {
-                    sim.engine.schedule_at(
-                        start + t,
-                        Event::Submit {
-                            service: svc.clone(),
-                        },
-                    );
+                    sim.engine
+                        .schedule_at(start + t, Event::Submit { service: svc });
                 }
             }
         }

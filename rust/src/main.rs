@@ -117,7 +117,7 @@ fn app() -> App {
         )
         .command(
             Command::new("bench", "run the fixed perf scale ladder and write a bench JSON")
-                .opt("json", "output path for the bench report", "BENCH_8.json")
+                .opt("json", "output path for the bench report", "BENCH_9.json")
                 .opt(
                     "trace",
                     "Azure-sample CSV replayed by the last rung",
@@ -783,7 +783,7 @@ fn main() {
             let smoke = inv.flag("smoke") || std::env::var("KINETIC_SMOKE").is_ok();
             run_bench(
                 smoke,
-                inv.get_or("json", "BENCH_8.json"),
+                inv.get_or("json", "BENCH_9.json"),
                 inv.get_or("trace", "examples/scenarios/azure_sample.csv"),
             );
         }

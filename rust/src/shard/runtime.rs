@@ -231,11 +231,18 @@ fn deliver(
         match pick_target(cells, src) {
             Some(target) => {
                 ensure_service(&mut cells[target], &msg.service, templates);
+                // Interned ids are per-cell: translate the wire-format
+                // service name into the *target* cell's id space here at
+                // the barrier. No template ⇒ no replica can exist, and
+                // the old name-addressed event would have no-opped too.
+                let Some(svc_id) = cells[target].sim.world.services.id_of(&msg.service) else {
+                    continue;
+                };
                 let at = cells[target].settle + emit + lookahead;
                 cells[target].sim.engine.schedule_at(
                     at,
                     Event::XShardReschedule {
-                        service: msg.service,
+                        service: svc_id,
                         pods: msg.pods,
                     },
                 );

@@ -1,0 +1,140 @@
+//! Service-name interning: the hot path carries dense [`ServiceId`]s
+//! instead of `Arc<str>`/`String` keys.
+//!
+//! Ids are assigned in first-intern order (deploy order on the platform),
+//! so the same spec produces the same id assignment on every run, thread
+//! count and shard count. Rendering stays canonical through
+//! [`Interner::ids_by_name`], which walks the side index in lexicographic
+//! name order — the exact order the old `BTreeMap<String, _>` tables
+//! iterated in, so reports are byte-identical to the map era.
+//!
+//! Names survive only at the boundaries: spec parse / `deploy` interns,
+//! report render resolves ids back via [`Interner::name`]. Everything in
+//! between — events, requests, forecast state, fault sweeps — moves a
+//! `Copy` u32.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Dense index of an interned service name. `ServiceId(n)` is the `n`-th
+/// distinct name ever interned (first-seen order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ServiceId(pub u32);
+
+impl ServiceId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// The intern table: name → id (lookup) and id → name (render).
+#[derive(Debug, Clone, Default)]
+pub struct Interner {
+    /// Indexed by `ServiceId`; assignment order.
+    names: Vec<Arc<str>>,
+    /// Lexicographic side index (canonical render/iteration order).
+    by_name: BTreeMap<Arc<str>, ServiceId>,
+}
+
+impl Interner {
+    pub fn new() -> Interner {
+        Interner::default()
+    }
+
+    /// Returns the id for `name`, allocating the next dense id on first
+    /// sight. Idempotent: interning an existing name is a pure lookup.
+    pub fn intern(&mut self, name: &str) -> ServiceId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = ServiceId(self.names.len() as u32);
+        let arc: Arc<str> = Arc::from(name);
+        self.names.push(Arc::clone(&arc));
+        self.by_name.insert(arc, id);
+        id
+    }
+
+    /// Lookup without allocation.
+    pub fn get(&self, name: &str) -> Option<ServiceId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// The name behind an id. Panics on an id from a different interner
+    /// that is out of range — ids are not portable across tables.
+    pub fn name(&self, id: ServiceId) -> &Arc<str> {
+        &self.names[id.index()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Ids in first-interned (assignment) order.
+    pub fn ids(&self) -> impl Iterator<Item = ServiceId> + '_ {
+        (0..self.names.len() as u32).map(ServiceId)
+    }
+
+    /// Ids in lexicographic name order — the canonical iteration order
+    /// everywhere the old string-keyed `BTreeMap`s were walked (render
+    /// passes and RNG-bearing sweeps alike).
+    pub fn ids_by_name(&self) -> impl Iterator<Item = ServiceId> + '_ {
+        self.by_name.values().copied()
+    }
+
+    /// `(name, id)` pairs in lexicographic name order.
+    pub fn iter_by_name(&self) -> impl Iterator<Item = (&Arc<str>, ServiceId)> + '_ {
+        self.by_name.iter().map(|(n, &id)| (n, id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_seen_order_assignment() {
+        let mut t = Interner::new();
+        assert_eq!(t.intern("fn-1"), ServiceId(0));
+        assert_eq!(t.intern("fn-0"), ServiceId(1));
+        assert_eq!(t.intern("fn-1"), ServiceId(0), "re-intern is a lookup");
+        assert_eq!(t.len(), 2);
+        assert_eq!(&**t.name(ServiceId(1)), "fn-0");
+    }
+
+    #[test]
+    fn name_order_differs_from_id_order() {
+        // fn-10 sorts before fn-2 lexicographically but interns after it —
+        // the divergence the canonical render order has to paper over.
+        let mut t = Interner::new();
+        for n in ["fn-2", "fn-10"] {
+            t.intern(n);
+        }
+        let by_id: Vec<_> = t.ids().collect();
+        assert_eq!(by_id, vec![ServiceId(0), ServiceId(1)]);
+        let by_name: Vec<_> = t.ids_by_name().collect();
+        assert_eq!(by_name, vec![ServiceId(1), ServiceId(0)]);
+    }
+
+    #[test]
+    fn get_does_not_allocate() {
+        let mut t = Interner::new();
+        assert_eq!(t.get("missing"), None);
+        let id = t.intern("svc");
+        assert_eq!(t.get("svc"), Some(id));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_across_tables() {
+        let names = ["b", "a", "c", "a", "b", "d"];
+        let mut x = Interner::new();
+        let mut y = Interner::new();
+        let ix: Vec<_> = names.iter().map(|n| x.intern(n)).collect();
+        let iy: Vec<_> = names.iter().map(|n| y.intern(n)).collect();
+        assert_eq!(ix, iy);
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod intern;
 pub mod json;
 pub mod logging;
 pub mod nohash;

@@ -1,0 +1,246 @@
+//! ABA regression suite for the generational pod slab
+//! (`cluster::arena`): stale `PodHandle`s — freed slots, reused indices,
+//! bumped generations — must be rejected everywhere a `PodId` can outlive
+//! its pod. Randomized create/free churn pins the slab itself; the
+//! platform-level tests walk the two paths that actually retire pods
+//! out from under outstanding ids: crash eviction (PR 7 faults) and
+//! cross-shard reschedule (PR 8 sharded runtime).
+//!
+//! The HashMap audit rides here too: the slab replaced the last *iterated*
+//! `HashMap` in the hot state (`Cluster.pods`); the surviving hash
+//! containers (`Node.image_cache`, the request table) are lookup-only and
+//! can never leak iteration order into a report — `tests/interning.rs`
+//! pins that with seed-repro byte-identity.
+
+use kinetic::cluster::arena::{PodHandle, PodSlab};
+use kinetic::cluster::pod::{PodId, PodSpec};
+use kinetic::cluster::topology::Topology;
+use kinetic::coordinator::event::Event;
+use kinetic::coordinator::platform::Simulation;
+use kinetic::policy::Policy;
+use kinetic::simclock::SimTime;
+use kinetic::util::prop::{property, Gen};
+use kinetic::util::quantity::{Memory, MilliCpu, Resources};
+use kinetic::workload::registry::{WorkloadKind, WorkloadProfile};
+
+fn spec() -> PodSpec {
+    PodSpec::single(
+        "fn",
+        "img",
+        Resources::new(MilliCpu(100), Memory::from_mib(64)),
+        Resources::new(MilliCpu(1000), Memory::from_mib(128)),
+    )
+}
+
+// ------------------------------------------------------------- slab props
+
+/// Randomized alloc/free churn: live ids always resolve, every retired id
+/// is rejected forever (even after its slot is reused), double frees are
+/// no-ops, and `len`/iteration stay consistent throughout.
+#[test]
+fn prop_stale_handles_rejected_under_churn() {
+    property("stale_handles_rejected_under_churn", 120, |g: &mut Gen| {
+        let mut slab = PodSlab::new();
+        let mut live: Vec<PodId> = Vec::new();
+        let mut dead: Vec<PodId> = Vec::new();
+        let ops = g.usize(10, 120);
+        for _ in 0..ops {
+            if live.is_empty() || g.bool() {
+                let id = slab.alloc(spec());
+                if live.contains(&id) || dead.contains(&id) {
+                    return Err(format!("id {id:?} reissued — ABA"));
+                }
+                live.push(id);
+            } else {
+                let victim = live.remove(g.usize(0, live.len() - 1));
+                let pod = slab.remove(victim).ok_or("live remove failed")?;
+                if pod.id != victim {
+                    return Err(format!("removed {:?} via {victim:?}", pod.id));
+                }
+                dead.push(victim);
+            }
+            // Occasionally poke a dead id: reads and frees must both miss.
+            if !dead.is_empty() && g.bool() {
+                let stale = dead[g.usize(0, dead.len() - 1)];
+                if slab.get(stale).is_some() {
+                    return Err(format!("stale {stale:?} resolved"));
+                }
+                if slab.remove(stale).is_some() {
+                    return Err(format!("stale {stale:?} freed twice"));
+                }
+            }
+            if slab.len() != live.len() {
+                return Err(format!("len {} != live {}", slab.len(), live.len()));
+            }
+        }
+        for &id in &live {
+            let pod = slab.get(id).ok_or_else(|| format!("live {id:?} lost"))?;
+            if pod.id != id {
+                return Err(format!("live {id:?} resolved to {:?}", pod.id));
+            }
+        }
+        for &id in &dead {
+            if slab.get(id).is_some() {
+                return Err(format!("dead {id:?} resurrected"));
+            }
+        }
+        // Iteration covers exactly the live set, in slot order.
+        let seen: Vec<PodId> = slab.iter().map(|p| p.id).collect();
+        if seen.len() != live.len() {
+            return Err(format!("iter saw {} of {} live", seen.len(), live.len()));
+        }
+        let indices: Vec<u32> = seen.iter().map(|&i| PodHandle::from_id(i).index).collect();
+        let mut sorted = indices.clone();
+        sorted.sort_unstable();
+        if indices != sorted {
+            return Err("iteration not slot-ordered".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// The packed-id encoding is a bijection: any (index, generation) pair
+/// survives `to_id`/`from_id`, and distinct pairs give distinct ids.
+#[test]
+fn prop_handle_packing_roundtrips() {
+    property("handle_packing_roundtrips", 200, |g: &mut Gen| {
+        let a = PodHandle {
+            index: g.u64(0, u32::MAX as u64) as u32,
+            generation: g.u64(0, u32::MAX as u64) as u32,
+        };
+        let b = PodHandle {
+            index: g.u64(0, u32::MAX as u64) as u32,
+            generation: g.u64(0, u32::MAX as u64) as u32,
+        };
+        if PodHandle::from_id(a.to_id()) != a {
+            return Err(format!("{a:?} did not round-trip"));
+        }
+        if a != b && a.to_id() == b.to_id() {
+            return Err(format!("{a:?} and {b:?} collide"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- platform retire paths
+
+/// Scale-to-zero teardown retires the pod's slot; the captured id must go
+/// stale and stay stale after the slot is reused by the next cold start.
+#[test]
+fn teardown_and_reuse_keep_old_id_stale() {
+    let mut sim = Simulation::paper(11);
+    sim.deploy(
+        "fn",
+        WorkloadProfile::paper(WorkloadKind::HelloWorld),
+        Policy::Cold,
+    );
+    sim.run();
+    sim.submit("fn");
+    // Capture the cold-started pod's id before the 6 s stable window can
+    // tear it down (helloworld cold start lands well under 4 s).
+    sim.run_until(sim.now() + SimTime::from_secs(4));
+    let first = sim.world.services["fn"].pods[0].pod;
+    assert!(sim.world.cluster.pod(first).is_some(), "pod live mid-run");
+    sim.run(); // drain the idle check + teardown: the slot retires
+    assert_eq!(sim.world.services["fn"].pods.len(), 0, "cold pod torn down");
+    assert!(
+        sim.world.cluster.pod(first).is_none(),
+        "retired id must not resolve"
+    );
+    // Next cold start reuses the slot (LIFO free list) under a bumped
+    // generation: fresh id, same index, old id still rejected.
+    sim.submit("fn");
+    sim.run_until(sim.now() + SimTime::from_secs(4));
+    let second = sim.world.services["fn"].pods[0].pod;
+    assert_ne!(first, second, "reused slot must mint a distinct id");
+    assert_eq!(
+        PodHandle::from_id(first).index,
+        PodHandle::from_id(second).index,
+        "LIFO reuse returns the same slot"
+    );
+    assert!(sim.world.cluster.pod(first).is_none(), "ABA: old id aliased");
+    assert_eq!(sim.world.cluster.pod(second).unwrap().id, second);
+}
+
+/// The PR 7 crash-evict path: a node crash force-evicts every resident
+/// pod. Ids captured before the crash must read as gone even after
+/// recovery reuses their slots for replacement pods.
+#[test]
+fn crash_evict_invalidates_captured_ids() {
+    let mut sim = Simulation::fleet(Topology::uniform_paper(2), 5);
+    sim.deploy(
+        "fn",
+        WorkloadProfile::paper(WorkloadKind::HelloWorld),
+        Policy::Warm,
+    );
+    sim.run();
+    let doomed = sim.world.services["fn"].pods[0].pod;
+    let node = sim.world.services["fn"].pods[0].node.expect("pod placed");
+    assert!(sim.world.cluster.pod(doomed).is_some());
+
+    sim.engine
+        .schedule_at(sim.now() + SimTime::from_secs(1), Event::NodeCrash { node });
+    sim.run();
+
+    assert!(
+        sim.world.metrics.pods_evicted >= 1,
+        "crash must evict the resident pod"
+    );
+    assert!(
+        sim.world.cluster.pod(doomed).is_none(),
+        "evicted id must not resolve after recovery reuses the slot"
+    );
+    // Recovery replaced the pod on the surviving node with a fresh handle.
+    let svc = &sim.world.services["fn"];
+    assert_eq!(svc.ready_pods(), 1, "replacement came up");
+    let replacement = svc.pods[0].pod;
+    assert_ne!(replacement, doomed);
+    assert_eq!(sim.world.cluster.pod(replacement).unwrap().id, replacement);
+    assert_ne!(svc.pods[0].node, Some(node), "replaced off the dead node");
+}
+
+/// The PR 8 cross-shard reschedule path: an `XShardReschedule` delivery
+/// starts replacement pods through the same slab; the new handles resolve,
+/// and the event is a no-op for interned-but-never-deployed services
+/// (the guard the sharded runtime relies on at window barriers).
+#[test]
+fn xshard_reschedule_mints_valid_handles() {
+    let mut sim = Simulation::fleet(Topology::uniform_paper(2), 9);
+    sim.deploy(
+        "fn",
+        WorkloadProfile::paper(WorkloadKind::HelloWorld),
+        Policy::Warm,
+    );
+    sim.run();
+    let before: Vec<_> = sim.world.services["fn"].pods.iter().map(|p| p.pod).collect();
+    let svc_id = sim.world.services.id_of("fn").expect("deployed service interned");
+    sim.engine.schedule_at(
+        sim.now() + SimTime::from_millis(10),
+        Event::XShardReschedule {
+            service: svc_id,
+            pods: 2,
+        },
+    );
+    // Capture before the stable window can park the surplus replicas.
+    sim.run_until(sim.now() + SimTime::from_secs(4));
+    assert_eq!(sim.world.metrics.pods_rescheduled, 2);
+    let after: Vec<_> = sim.world.services["fn"].pods.iter().map(|p| p.pod).collect();
+    assert_eq!(after.len(), before.len() + 2);
+    for &id in &after {
+        assert_eq!(sim.world.cluster.pod(id).unwrap().id, id);
+    }
+
+    // Interned-but-undeployed target: the delivery must no-op, not panic.
+    let ghost = sim.world.intern_service("ghost");
+    let rescheduled = sim.world.metrics.pods_rescheduled;
+    sim.engine.schedule_at(
+        sim.now() + SimTime::from_millis(10),
+        Event::XShardReschedule {
+            service: ghost,
+            pods: 3,
+        },
+    );
+    sim.run();
+    assert_eq!(sim.world.metrics.pods_rescheduled, rescheduled);
+    assert!(sim.world.services.get(ghost).is_none());
+}
