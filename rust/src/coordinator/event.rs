@@ -88,11 +88,65 @@ pub enum Event {
     /// The id is *this* cell's — the runtime translates the wire-format
     /// service name into the target cell's intern table at delivery.
     XShardReschedule { service: ServiceId, pods: u32 },
+    /// Observability: cadence tick of the timeline gauge sampler. The
+    /// handler is strictly read-only over simulation state (it only appends
+    /// to the armed obs buffers), so its presence in the queue never
+    /// changes simulation behavior.
+    ObsTick,
     /// Escape hatch for examples/tests; never used by platform code.
     Call(Box<dyn FnOnce(&mut Platform, &mut Eng) + Send>),
 }
 
 impl Event {
+    /// Display names of every variant, indexed by [`Event::kind_index`] —
+    /// the label table of the self-profiling plane.
+    pub const KINDS: [&'static str; 19] = [
+        "Submit",
+        "Arrive",
+        "Complete",
+        "PodReady",
+        "IdleCheck",
+        "PodGone",
+        "ResizeHook",
+        "ResizeRetry",
+        "ResizeLanded",
+        "VuIterate",
+        "Speculate",
+        "SpeculationRepark",
+        "NodeCrash",
+        "NodeRecover",
+        "StragglerStart",
+        "StragglerEnd",
+        "XShardReschedule",
+        "ObsTick",
+        "Call",
+    ];
+
+    /// Index of this variant into [`Event::KINDS`].
+    pub fn kind_index(&self) -> usize {
+        match self {
+            Event::Submit { .. } => 0,
+            Event::Arrive { .. } => 1,
+            Event::Complete { .. } => 2,
+            Event::PodReady { .. } => 3,
+            Event::IdleCheck { .. } => 4,
+            Event::PodGone { .. } => 5,
+            Event::ResizeHook { .. } => 6,
+            Event::ResizeRetry { .. } => 7,
+            Event::ResizeLanded { .. } => 8,
+            Event::VuIterate { .. } => 9,
+            Event::Speculate { .. } => 10,
+            Event::SpeculationRepark { .. } => 11,
+            Event::NodeCrash { .. } => 12,
+            Event::NodeRecover { .. } => 13,
+            Event::StragglerStart { .. } => 14,
+            Event::StragglerEnd { .. } => 15,
+            Event::XShardReschedule { .. } => 16,
+            Event::ObsTick => 17,
+            Event::Call(_) => 18,
+        }
+    }
+
     /// Wraps an ad-hoc closure as an event (examples/tests only).
     pub fn call<F>(f: F) -> Event
     where
@@ -106,6 +160,37 @@ impl World for Platform {
     type Event = Event;
 
     fn handle(&mut self, ev: Event, eng: &mut Eng) {
+        // Self-profiling wrapper: measured dispatch only when armed, so
+        // the unobserved hot path keeps its single-match shape with one
+        // extra branch. Cadence ticks trail the workload by up to one
+        // period, so the observed end-of-run clock (which feeds the
+        // report's time-averaged gauges) tracks the last *real* event.
+        let profiled = match &mut self.obs {
+            Some(obs) => {
+                if !matches!(ev, Event::ObsTick) {
+                    obs.note_real_event(eng.now());
+                }
+                obs.profile_enabled()
+            }
+            None => false,
+        };
+        if profiled {
+            let kind = ev.kind_index();
+            let t0 = std::time::Instant::now();
+            self.dispatch(ev, eng);
+            let wall = t0.elapsed();
+            if let Some(obs) = &mut self.obs {
+                obs.profile_mut().record(kind, wall);
+            }
+            return;
+        }
+        self.dispatch(ev, eng);
+    }
+}
+
+impl Platform {
+    /// The event dispatch table proper.
+    fn dispatch(&mut self, ev: Event, eng: &mut Eng) {
         match ev {
             Event::Submit { service } => {
                 self.submit_id(eng, service);
@@ -151,6 +236,7 @@ impl World for Platform {
             Event::XShardReschedule { service, pods } => {
                 Self::xshard_reschedule(self, eng, service, pods)
             }
+            Event::ObsTick => Self::obs_tick(self, eng),
             Event::Call(f) => f(self, eng),
         }
     }

@@ -14,13 +14,17 @@ use std::collections::BTreeMap;
 use crate::simclock::SimTime;
 use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
-use crate::util::stats::Samples;
+use crate::util::stats::{Samples, StreamStats};
 
 /// Latency + outcome accounting for one service.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
     /// End-to-end request latencies, milliseconds.
     pub latency_ms: Samples,
+    /// Streaming twin of `latency_ms` (count/sum/min/max + fixed buckets),
+    /// consumed by the observability artifacts. Reports keep reading the
+    /// exact reservoir, so this field adds no bytes to any report.
+    pub latency_stream: StreamStats,
     pub completed: u64,
     pub failed: u64,
     /// Requests that experienced a cold start (pod created on their behalf).
@@ -208,6 +212,19 @@ mod tests {
         assert_eq!(m.service_ref("b").unwrap().completed, 2);
         assert!(m.service_ref("c").is_none());
         assert_eq!(m.services().count(), 2);
+    }
+
+    #[test]
+    fn latency_stream_twins_the_reservoir() {
+        let mut m = Metrics::default();
+        for x in [12.0, 310.0, 4.5] {
+            let row = m.service("a");
+            row.latency_ms.record(x);
+            row.latency_stream.record(x);
+        }
+        let row = m.service_ref("a").unwrap();
+        assert_eq!(row.latency_stream.count(), row.latency_ms.len() as u64);
+        assert!((row.latency_stream.mean() - row.latency_ms.mean()).abs() < 1e-12);
     }
 
     #[test]

@@ -37,6 +37,7 @@ use crate::coordinator::request::{Continuation, RequestState};
 use crate::coordinator::service::Service;
 use crate::faults::FaultState;
 use crate::knative::activator::RequestId;
+use crate::obs::{ObsState, ObserveConfig, TimelineSample};
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::{Engine, EventId, SimTime};
 use crate::util::quantity::MilliCpu;
@@ -280,6 +281,11 @@ pub struct Platform {
     /// `Some` marks it as one cell of a sharded run, where a crash with no
     /// surviving local capacity escalates to the sharded runtime instead.
     pub(crate) xshard_outbox: Option<Vec<XShardMsg>>,
+    /// Observation plane (`None` unless a spec/CLI armed it). Boxed so the
+    /// unobserved platform pays one pointer of state; every hook site is a
+    /// read-only stamp behind `if let Some(..)`, so arming never perturbs
+    /// RNG draws or event ordering.
+    pub obs: Option<Box<ObsState>>,
 }
 
 impl Platform {
@@ -331,6 +337,89 @@ impl Platform {
             completion_hooks: IdHashMap::default(),
             scratch_active: Vec::with_capacity(64),
             xshard_outbox: None,
+            obs: None,
+        }
+    }
+
+    // ----------------------------------------------------------- observation
+
+    /// Arms the observation plane: request-lifecycle spans, timeline
+    /// gauges and event self-profiling per `cfg`. `seed` feeds the
+    /// deterministic span sampler only — the simulation RNG is untouched.
+    /// `origin` (the current simulation time, i.e. the end of the settle
+    /// run) re-bases every exported timestamp onto the measured window,
+    /// which is what keeps sharded span output identical at any shard
+    /// count despite per-cell settle jitter. Call sites that want timeline
+    /// gauges must also schedule the first [`Event::ObsTick`] at one
+    /// cadence from now.
+    pub fn arm_obs(&mut self, cfg: ObserveConfig, seed: u64, origin: crate::simclock::SimTime) {
+        self.obs = Some(Box::new(ObsState::new(cfg, seed, Event::KIND_COUNT, origin)));
+    }
+
+    /// Detaches the observation state for harvesting (no-op when unarmed).
+    pub fn take_obs(&mut self) -> Option<Box<ObsState>> {
+        self.obs.take()
+    }
+
+    /// The end-of-run clock when observation is armed: the time of the
+    /// last real (non-`ObsTick`) event. Harvest sites must prefer this
+    /// over the engine clock — trailing cadence ticks run past the
+    /// workload, and time-averaged report gauges must cover exactly the
+    /// span an unobserved run covers (byte identity).
+    pub fn obs_end_clock(&self) -> Option<crate::simclock::SimTime> {
+        self.obs.as_ref().map(|o| o.last_real_event())
+    }
+
+    /// [`Event::ObsTick`] handler: append one gauge sample and re-arm the
+    /// cadence. Strictly read-only over simulation state.
+    pub(crate) fn obs_tick(w: &mut Platform, eng: &mut Eng) {
+        let Some(obs) = w.obs.as_ref() else { return };
+        if !obs.timeline_enabled() {
+            return;
+        }
+        let cadence = obs.cfg().timeline_cadence;
+        let sample = w.sample_timeline(eng.now());
+        if let Some(obs) = w.obs.as_mut() {
+            obs.record_timeline(sample);
+        }
+        // Re-arm only while simulation work remains: `Engine::run` drains
+        // the queue to empty, so an unconditional self-reschedule would
+        // keep every run alive forever. At most one trailing sample lands
+        // after the last workload event.
+        if eng.pending() > 0 {
+            eng.schedule_in(cadence, Event::ObsTick);
+        }
+    }
+
+    /// One timeline gauge sample: pods by state per node, activator queue
+    /// depth, in-flight concurrency and the summed KPA signal.
+    fn sample_timeline(&self, at: SimTime) -> TimelineSample {
+        let nodes = self.cluster.nodes().len();
+        let mut node_ready = vec![0u32; nodes];
+        let mut node_starting = vec![0u32; nodes];
+        let mut activator_depth = 0u64;
+        let mut in_flight = 0u64;
+        let mut kpa_signal = 0.0f64;
+        for svc in self.services.values() {
+            activator_depth += svc.buffered() as u64;
+            in_flight += svc.total_in_flight() as u64;
+            kpa_signal += f64::from(svc.observed_concurrency());
+            for sp in &svc.pods {
+                if let (Some(node), true) = (sp.node, sp.ready) {
+                    node_ready[node.0 as usize] += 1;
+                }
+            }
+        }
+        for s in self.starting_pods.values() {
+            node_starting[s.node.0 as usize] += 1;
+        }
+        TimelineSample {
+            at,
+            node_ready,
+            node_starting,
+            activator_depth,
+            in_flight,
+            kpa_signal,
         }
     }
 
@@ -408,6 +497,10 @@ impl Platform {
         self.next_request += 1;
         let req = RequestState::new(id, service, eng.now());
         self.requests.insert(id, req);
+        if let Some(obs) = &mut self.obs {
+            let name: &str = self.services.name(service);
+            obs.on_submit(id.0, service.index(), name, eng.now());
+        }
         let fwd = self.params.proxy.sample_forward(&mut self.rng);
         eng.schedule_in(fwd, Event::Arrive { req: id });
         id

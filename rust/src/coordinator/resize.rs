@@ -7,6 +7,8 @@ use crate::cluster::pod::PodId;
 use crate::cluster::NodeId;
 use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
+use crate::knative::activator::RequestId;
+use crate::obs::Phase;
 use crate::simclock::SimTime;
 use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
@@ -200,6 +202,28 @@ impl Platform {
         // cluster, not the intent.
         let applied = w.applied_limit(pod_id).unwrap_or(target);
         w.fleet.resize_landed(pod_id, applied);
+        // Observation probe: the landing only knows the pod, so find the
+        // sampled in-flight requests riding on it via the request table
+        // (two-phase to keep the obs and request borrows disjoint).
+        if w.obs.is_some() {
+            let affected: Vec<u64> = w
+                .obs
+                .as_ref()
+                .map(|o| o.open_ids())
+                .unwrap_or_default()
+                .into_iter()
+                .filter(|id| {
+                    w.requests
+                        .get(&RequestId(*id))
+                        .is_some_and(|r| r.pod == Some(pod_id))
+                })
+                .collect();
+            if let Some(obs) = w.obs.as_mut() {
+                for id in affected {
+                    obs.mark(id, Phase::ResizeLanded, now);
+                }
+            }
+        }
         Self::committed_changed(w, eng);
         Self::recompute_pod(w, eng, svc_id, pod_id);
         // A newer desire may have raced in (up while down was landing).

@@ -19,6 +19,7 @@ use crate::cluster::pod::PodId;
 use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform};
 use crate::knative::activator::RequestId;
+use crate::obs::{Phase, SpanOutcome};
 use crate::simclock::SimTime;
 use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
@@ -49,6 +50,9 @@ impl Platform {
         };
 
         if let Some(idx) = pick {
+            if let Some(obs) = &mut w.obs {
+                obs.mark(req.0, Phase::Scheduled, eng.now());
+            }
             Self::dispatch(w, eng, svc_id, req, idx);
         } else {
             // Buffer at the activator; start a pod if none is coming up.
@@ -59,11 +63,17 @@ impl Platform {
                 return;
             }
             let needs_pod = svc.live_pods() == 0;
+            if let Some(obs) = &mut w.obs {
+                obs.mark(req.0, Phase::Buffered, now);
+            }
             if needs_pod {
                 if let Some(r) = w.requests.get_mut(&req) {
                     r.cold_start = true;
                 }
                 Self::start_pod(w, eng, svc_id, true);
+                if let Some(obs) = &mut w.obs {
+                    obs.mark(req.0, Phase::StartupWait, now);
+                }
             } else {
                 Self::maybe_scale_up(w, eng, svc_id);
                 // An exhausted warm pool refills proactively too (bounded
@@ -80,6 +90,9 @@ impl Platform {
             cont = r.continuation.take();
             w.metrics.row_mut(r.service).failed += 1;
         }
+        if let Some(obs) = &mut w.obs {
+            obs.close(req.0, SpanOutcome::Failed, None, eng.now());
+        }
         Self::fire_hook(w, eng, req);
         Self::fire_continuation(eng, cont);
     }
@@ -95,6 +108,12 @@ impl Platform {
         req: RequestId,
         idx: usize,
     ) {
+        if let Some(obs) = &mut w.obs {
+            if obs.last_mark_is(req.0, Phase::Requeued) {
+                obs.mark(req.0, Phase::Rescheduled, eng.now());
+            }
+            obs.mark(req.0, Phase::Dispatched, eng.now());
+        }
         let (pod_id, hooks, serving) = {
             let svc = w.services.get_mut(svc_id).unwrap();
             let serving = svc.cfg.serving_cpu;
@@ -138,6 +157,9 @@ impl Platform {
                 r.scaled_up = true;
             }
             w.metrics.row_mut(svc_id).inplace_scale_ups += 1;
+            if let Some(obs) = &mut w.obs {
+                obs.mark(req.0, Phase::ResizeWait, eng.now());
+            }
             Self::request_resize(w, eng, svc_id, pod_id, serving);
         }
         // Pooled: this dispatch consumed a pool pod — top the pool back up
@@ -223,9 +245,13 @@ impl Platform {
         // Taken now so the early-return paths below drop it un-fired —
         // exactly where the boxed hooks never ran either.
         let cont = r.continuation.take();
+        if let Some(obs) = &mut w.obs {
+            obs.close(req.0, SpanOutcome::Completed, Some(latency_ms), now);
+        }
         {
             let m = w.metrics.row_mut(svc_id);
             m.latency_ms.record(latency_ms);
+            m.latency_stream.record(latency_ms);
             m.completed += 1;
             if r.cold_start {
                 m.cold_starts += 1;

@@ -30,10 +30,13 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::cluster::topology::Topology;
+use crate::coordinator::event::Event;
 use crate::coordinator::platform::Simulation;
 use crate::experiments::fleet::FleetConfig;
 use crate::loadgen::arrival::Arrival;
 use crate::loadgen::runner::{Runner, Scenario};
+use crate::obs::export::profile_doc;
+use crate::obs::ObserveConfig;
 use crate::policy::Policy;
 use crate::simclock::{Engine, SimTime, World};
 use crate::trace::generator::TraceGenerator;
@@ -60,6 +63,11 @@ pub struct RungResult {
     pub wall_ms: f64,
     /// Events per host second — the headline throughput number.
     pub events_per_sec: f64,
+    /// Simulator self-profile (per-event-kind dispatch counts/wall time +
+    /// calendar-queue internals) for rungs that drive the platform engine.
+    /// Absent on raw/state rungs and on pre-profile reports (BENCH_≤9) —
+    /// the field is optional so the trajectory stays comparable.
+    pub profile: Option<Json>,
 }
 
 impl RungResult {
@@ -72,18 +80,28 @@ impl RungResult {
             events,
             wall_ms: secs * 1000.0,
             events_per_sec: if secs > 0.0 { events as f64 / secs } else { 0.0 },
+            profile: None,
         }
     }
 
+    fn with_profile(mut self, profile: Option<Json>) -> RungResult {
+        self.profile = profile;
+        self
+    }
+
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs: Vec<(&str, Json)> = vec![
             ("name", self.name.as_str().into()),
             ("description", self.description.as_str().into()),
             ("requests", self.requests.into()),
             ("events", self.events.into()),
             ("wall_ms", self.wall_ms.into()),
             ("events_per_sec", self.events_per_sec.into()),
-        ])
+        ];
+        if let Some(p) = &self.profile {
+            pairs.push(("profile", p.clone()));
+        }
+        Json::obj(pairs)
     }
 
     fn from_json(j: &Json, path: &str) -> Result<RungResult, String> {
@@ -91,6 +109,14 @@ impl RungResult {
             return Err(format!("{path} must be an object"));
         }
         let ctx = |e: crate::util::json::JsonError| format!("{path}: {e}");
+        let profile = match j.get("profile") {
+            None => None,
+            Some(p) => {
+                crate::obs::export::validate_profile(p)
+                    .map_err(|e| format!("{path}.profile: {e}"))?;
+                Some(p.clone())
+            }
+        };
         Ok(RungResult {
             name: j.req_str("name").map_err(ctx)?.to_string(),
             description: j.req_str("description").map_err(ctx)?.to_string(),
@@ -98,6 +124,7 @@ impl RungResult {
             events: j.req_u64("events").map_err(ctx)?,
             wall_ms: j.req_f64("wall_ms").map_err(ctx)?,
             events_per_sec: j.req_f64("events_per_sec").map_err(ctx)?,
+            profile,
         })
     }
 }
@@ -225,8 +252,23 @@ impl World for Counter {
     }
 }
 
+/// Drains the profile-only observation state armed over a platform rung's
+/// timed section into the rung's `profile` JSON.
+fn harvest_profile(sim: &mut Simulation) -> Option<Json> {
+    let queue = sim.engine.queue_stats();
+    let processed = sim.engine.processed();
+    sim.world
+        .take_obs()
+        .map(|o| o.finish(queue, processed))
+        .map(|b| profile_doc(&b.profile, &Event::KINDS))
+}
+
 /// Runs the fixed ladder. `smoke` shrinks counts to CI size; `trace` is
-/// the Azure-sample CSV the last rung replays.
+/// the Azure-sample CSV the last rung replays. Platform rungs run with the
+/// profile-only observation plane armed (spans/timeline off), so each
+/// carries a per-event-kind dispatch self-profile; the per-event
+/// `Instant` reads are part of the measured section on every rung alike,
+/// keeping the trajectory like-for-like from this report onward.
 pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
     let mut rungs = Vec::new();
 
@@ -261,17 +303,23 @@ pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
             Policy::InPlace,
         );
         sim.run(); // pod up and parked
+        let origin = sim.now();
+        sim.world.arm_obs(ObserveConfig::profile_only(), 7, origin);
         let ev0 = sim.engine.processed();
         let t0 = Instant::now();
         let report = Runner::run(&mut sim, "helloworld", &Scenario::closed(vus, iterations));
         let wall = t0.elapsed();
-        rungs.push(RungResult::timed(
-            "paper-closed-loop",
-            "paper topology, helloworld in-place, closed-loop VUs",
-            report.completed,
-            sim.engine.processed() - ev0,
-            wall,
-        ));
+        let profile = harvest_profile(&mut sim);
+        rungs.push(
+            RungResult::timed(
+                "paper-closed-loop",
+                "paper topology, helloworld in-place, closed-loop VUs",
+                report.completed,
+                sim.engine.processed() - ev0,
+                wall,
+            )
+            .with_profile(profile),
+        );
     }
 
     // Rung 3: a 100-node uniform fleet, one tenant per node, open-loop
@@ -298,17 +346,23 @@ pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
                 submitted += 1;
             }
         }
+        let origin = sim.now();
+        sim.world.arm_obs(ObserveConfig::profile_only(), 42, origin);
         let ev0 = sim.engine.processed();
         let t0 = Instant::now();
         sim.run();
         let wall = t0.elapsed();
-        rungs.push(RungResult::timed(
-            "fleet-100",
-            "uniform 100-node fleet, 1 tenant/node, Poisson open loop",
-            submitted,
-            sim.engine.processed() - ev0,
-            wall,
-        ));
+        let profile = harvest_profile(&mut sim);
+        rungs.push(
+            RungResult::timed(
+                "fleet-100",
+                "uniform 100-node fleet, 1 tenant/node, Poisson open loop",
+                submitted,
+                sim.engine.processed() - ev0,
+                wall,
+            )
+            .with_profile(profile),
+        );
     }
 
     // Rung 4: Azure-sample trace replay, one service per popularity rank.
@@ -327,17 +381,23 @@ pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
         for ev in &loaded.events {
             sim.submit_at(start + ev.at, &format!("fn-{}", ev.function));
         }
+        let origin = sim.now();
+        sim.world.arm_obs(ObserveConfig::profile_only(), 3, origin);
         let ev0 = sim.engine.processed();
         let t0 = Instant::now();
         sim.run();
         let wall = t0.elapsed();
-        rungs.push(RungResult::timed(
-            "azure-replay",
-            "Azure-sample minute-count trace, 1 service/rank, in-place",
-            loaded.events.len() as u64,
-            sim.engine.processed() - ev0,
-            wall,
-        ));
+        let profile = harvest_profile(&mut sim);
+        rungs.push(
+            RungResult::timed(
+                "azure-replay",
+                "Azure-sample minute-count trace, 1 service/rank, in-place",
+                loaded.events.len() as u64,
+                sim.engine.processed() - ev0,
+                wall,
+            )
+            .with_profile(profile),
+        );
     }
 
     // Rung 5: the sharded multi-coordinator runtime over the rung-3 fleet
@@ -356,12 +416,23 @@ pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
         let mut events: u64 = 0;
         let mut requests: u64 = 0;
         let mut baseline: Option<String> = None;
+        let mut profile: Option<Json> = None;
+        let profile_cfg = ObserveConfig::profile_only();
         let t0 = Instant::now();
         for shards in [1u32, 2, 4] {
-            let (row, ev) =
-                crate::shard::run_policy_sharded_counting(&cfg, Policy::InPlace, shards);
+            let (row, ev, bundle) = crate::shard::run_policy_sharded_observed(
+                &cfg,
+                Policy::InPlace,
+                shards,
+                Some(&profile_cfg),
+            );
             events += ev;
             requests = row.completed + row.failed;
+            // Keep the 4-shard pass's merged profile: it exercises the
+            // most cells (dispatch counts are summed across them).
+            profile = bundle
+                .map(|b| profile_doc(&b.profile, &Event::KINDS))
+                .or(profile);
             let fingerprint = format!("{row:?}");
             match &baseline {
                 None => baseline = Some(fingerprint),
@@ -374,13 +445,16 @@ pub fn run_ladder(smoke: bool, trace: &Path) -> Result<BenchReport, String> {
             }
         }
         let wall = t0.elapsed();
-        rungs.push(RungResult::timed(
-            "fleet-sharded",
-            "rung-3 fleet under the sharded runtime at 1/2/4 shards",
-            requests,
-            events,
-            wall,
-        ));
+        rungs.push(
+            RungResult::timed(
+                "fleet-sharded",
+                "rung-3 fleet under the sharded runtime at 1/2/4 shards",
+                requests,
+                events,
+                wall,
+            )
+            .with_profile(profile),
+        );
     }
 
     // Rung 6: the state layer in isolation — generational-slab pod
@@ -542,5 +616,26 @@ mod tests {
         let azure = &r.rungs[3];
         assert!(azure.requests > 0);
         BenchReport::validate(&r.to_json()).unwrap();
+        // Platform rungs carry a schema-valid self-profile (non-empty
+        // per-event-kind counts — validate_profile enforces count > 0);
+        // the raw-engine and state-layer rungs never do.
+        for i in [1usize, 2, 3, 4] {
+            let p = r.rungs[i].profile.as_ref().unwrap_or_else(|| {
+                panic!("rung '{}' is missing its self-profile", r.rungs[i].name)
+            });
+            crate::obs::export::validate_profile(p).unwrap();
+        }
+        assert!(r.rungs[0].profile.is_none());
+        assert!(r.rungs[5].profile.is_none());
+    }
+
+    /// A malformed profile section is rejected, not silently carried.
+    #[test]
+    fn profile_sections_are_validated_on_load() {
+        let mut r = sample();
+        r.rungs[0].profile = Some(Json::obj(vec![("events", Json::Arr(vec![]))]));
+        assert!(BenchReport::from_json(&r.to_json())
+            .unwrap_err()
+            .contains("profile"));
     }
 }

@@ -12,11 +12,13 @@
 
 use crate::cluster::topology::Topology;
 use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
+use crate::coordinator::event::Event;
 use crate::coordinator::service::Service;
 use crate::coordinator::sim::Simulation;
 use crate::forecast::ForecastConfig;
 use crate::knative::config::ScaleKnobs;
 use crate::loadgen::arrival::Arrival;
+use crate::obs::{ObsBundle, ObserveConfig};
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::SimTime;
 use crate::util::stats::Samples;
@@ -125,6 +127,18 @@ pub struct FleetRow {
 /// Runs one policy over the configured fleet and aggregates every tenant's
 /// metrics.
 pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
+    run_policy_observed(cfg, policy, None).0
+}
+
+/// [`run_policy`] with the observation plane optionally armed over the
+/// measured window. `None` is exactly the legacy run — arming never
+/// perturbs RNG draws or the relative order of simulation events, so the
+/// returned row is byte-identical either way (pinned by `tests/obs.rs`).
+pub fn run_policy_observed(
+    cfg: &FleetConfig,
+    policy: Policy,
+    observe: Option<&ObserveConfig>,
+) -> (FleetRow, Option<ObsBundle>) {
     let mut sim = Simulation::fleet_with_params(
         cfg.topology.clone(),
         PlatformParams::with_seed(cfg.seed),
@@ -150,6 +164,16 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
     }
     sim.run(); // bring up min-scale pods / let in-place pods park
 
+    // Arm observation at the start of the measured window (after the
+    // settle run) so spans and gauges cover the arrival stream only.
+    if let Some(oc) = observe {
+        let origin = sim.now();
+        sim.world.arm_obs(oc.clone(), cfg.seed, origin);
+        if oc.timeline {
+            sim.engine.schedule_in(oc.timeline_cadence, Event::ObsTick);
+        }
+    }
+
     // Open-loop Poisson stream per tenant, seeded independently of the
     // platform RNG so arrival times are identical across the three
     // policies (same seed).
@@ -170,7 +194,14 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
     sim.world.install_faults(&mut sim.engine, &cfg.faults);
     sim.run();
 
-    let now = sim.now();
+    // Observed runs harvest at the last *real* event: trailing ObsTicks
+    // advance the engine clock past the workload, and the time-averaged
+    // gauges below must cover exactly the unobserved run's span.
+    let now = sim.world.obs_end_clock().unwrap_or_else(|| sim.now());
+    let bundle = sim
+        .world
+        .take_obs()
+        .map(|o| o.finish(sim.engine.queue_stats(), sim.engine.processed()));
     let mut lat = Samples::new();
     let (mut completed, mut failed, mut cold, mut ups) = (0u64, 0u64, 0u64, 0u64);
     let (mut spec_ups, mut mispred) = (0u64, 0u64);
@@ -185,7 +216,7 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
             lat.record(v);
         }
     }
-    FleetRow {
+    let row = FleetRow {
         policy,
         routing: cfg.routing,
         nodes: cfg.topology.len(),
@@ -205,7 +236,8 @@ pub fn run_policy(cfg: &FleetConfig, policy: Policy) -> FleetRow {
         pods_evicted: sim.world.metrics.pods_evicted,
         pods_rescheduled: sim.world.metrics.pods_rescheduled,
         resize_failures: sim.world.metrics.resize_failures,
-    }
+    };
+    (row, bundle)
 }
 
 /// The paper's §3 policy triple over one fleet — the default comparison

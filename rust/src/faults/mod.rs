@@ -26,6 +26,7 @@ use crate::cluster::NodeId;
 use crate::coordinator::event::Event;
 use crate::coordinator::platform::{Eng, Platform, XShardMsg};
 use crate::knative::activator::RequestId;
+use crate::obs::Phase;
 use crate::simclock::SimTime;
 use crate::util::intern::ServiceId;
 use crate::util::quantity::MilliCpu;
@@ -418,6 +419,9 @@ impl Platform {
         w.metrics.pods_evicted += 1;
         let now = eng.now();
         for req in orphans {
+            if let Some(obs) = &mut w.obs {
+                obs.mark(req.0, Phase::Evicted, now);
+            }
             match policy {
                 CrashRequestPolicy::Fail => Self::fail_request(w, eng, req),
                 CrashRequestPolicy::Requeue => {
@@ -428,6 +432,8 @@ impl Platform {
                         .unwrap_or(false);
                     if !requeued {
                         Self::fail_request(w, eng, req);
+                    } else if let Some(obs) = &mut w.obs {
+                        obs.mark(req.0, Phase::Requeued, now);
                     }
                 }
             }

@@ -24,6 +24,7 @@ pub mod faults;
 pub mod forecast;
 pub mod knative;
 pub mod loadgen;
+pub mod obs;
 pub mod policy;
 pub mod runtime;
 pub mod scenario;

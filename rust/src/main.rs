@@ -11,8 +11,10 @@
 //! * `trace`      — preset: generate + replay an Azure-style trace under all policies
 //! * `serve`      — run the end-to-end serving demo over the PJRT artifacts
 //! * `bench`      — run the fixed perf scale ladder and write `BENCH_<n>.json`
+//! * `profile`    — render the simulator self-profile from a bench report
 //! * `validate-bench` — schema-check an emitted bench report JSON
 //! * `validate-report` — schema-check an emitted ScenarioReport JSON
+//! * `validate-obs` — schema-check an observation artifact (summary/trace/timeline/profile)
 //! * `schema`     — print the scenario JSON reference (docs/SCENARIO_SCHEMA.md)
 //! * `selfcheck`  — validate the AOT artifacts against the manifest oracle
 //!
@@ -56,7 +58,13 @@ fn app() -> App {
                 )
                 .opt("out", "directory the ScenarioReport JSON is written to", "results")
                 .opt_threads("1")
-                .opt_shards(),
+                .opt_shards()
+                .flag(
+                    "observe",
+                    "arm the observation plane (spans/timeline/profile) and \
+                     write artifacts beside the report; the report itself is \
+                     byte-identical either way",
+                ),
         )
         .command(
             Command::new(
@@ -126,8 +134,20 @@ fn app() -> App {
                 .flag("smoke", "CI-size rungs (KINETIC_SMOKE=1 implies this)"),
         )
         .command(
+            Command::new("profile", "render the simulator self-profile from a bench report")
+                .opt("file", "path to the bench JSON", "BENCH_9.json"),
+        )
+        .command(
             Command::new("validate-bench", "schema-check a bench report JSON file")
                 .opt("file", "path to the bench JSON", ""),
+        )
+        .command(
+            Command::new(
+                "validate-obs",
+                "schema-check an observation artifact JSON (summary, Chrome \
+                 trace, timeline, or self-profile — sniffed from the document)",
+            )
+            .opt("file", "path to the artifact JSON", ""),
         )
         .command(
             Command::new("validate-report", "schema-check a ScenarioReport JSON file")
@@ -151,13 +171,22 @@ fn or_die<T>(r: Result<T, CliError>) -> T {
     }
 }
 
-fn run_scenario(arg: &str, out: &str, threads: usize, shards: Option<u32>) {
+fn run_scenario(arg: &str, out: &str, threads: usize, shards: Option<u32>, observe: bool) {
     let spec = match ScenarioEngine::load(arg) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: {e}");
             std::process::exit(2);
         }
+    };
+    // The effective observation config: `--observe` arms defaults when the
+    // spec has no `observe` section; without the flag the spec decides.
+    // The engine itself never falls back to the spec — resolution is a
+    // CLI concern, like the artifacts.
+    let effective = if observe {
+        Some(spec.observe.clone().unwrap_or_default())
+    } else {
+        spec.observe.clone()
     };
     // Grid size is the product of axis lengths — no need to materialize
     // the expansion here (load() already validated it; run() performs it).
@@ -170,21 +199,80 @@ fn run_scenario(arg: &str, out: &str, threads: usize, shards: Option<u32>) {
         spec.policies.len(),
         spec.reps
     );
-    let report = match ScenarioEngine::run_with_options(&spec, threads, shards) {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("error: {e}");
-            std::process::exit(1);
-        }
+    // The structured-log sink counts emissions only while an observed run
+    // is in flight; the counts land in the summary artifact.
+    if effective.is_some() {
+        logging::arm_sink();
+    }
+    let (report, obs) =
+        match ScenarioEngine::run_observed(&spec, threads, shards, effective.as_ref()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        };
+    let log_counts = if effective.is_some() {
+        logging::drain_sink()
+    } else {
+        [0u64; 4]
     };
     println!("{}", report.table().to_ascii());
     match report.save(std::path::Path::new(out)) {
-        Ok(p) => println!("wrote {}", p.display()),
+        Ok(p) => {
+            println!("wrote {}", p.display());
+            if let Some(oc) = &effective {
+                if let Err(e) = write_obs_artifacts(&p, &report.name, &obs, oc, &log_counts) {
+                    eprintln!("could not write observation artifacts: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
         Err(e) => {
             eprintln!("could not write report: {e}");
             std::process::exit(1);
         }
     }
+}
+
+/// Writes the observation artifacts beside the saved report
+/// (`scenario_<slug>_obs.json`, `_trace.json`, `_spans.jsonl`,
+/// `_timeline.json`, `_timeline.csv`) and prints each path. Span and
+/// timeline artifacts appear only when their plane was armed; the summary
+/// always does. The sharded profile is deliberately *not* written here —
+/// wall-times differ run to run, so it lives in bench reports only.
+fn write_obs_artifacts(
+    report_path: &std::path::Path,
+    name: &str,
+    runs: &[kinetic::obs::export::RunObs],
+    oc: &kinetic::obs::ObserveConfig,
+    log_counts: &[u64; 4],
+) -> std::io::Result<()> {
+    use kinetic::obs::export;
+    let full = report_path.to_string_lossy();
+    let stem = full.strip_suffix(".json").unwrap_or(&full);
+    let emit = |suffix: &str, contents: String| -> std::io::Result<()> {
+        let path = format!("{stem}{suffix}");
+        std::fs::write(&path, contents)?;
+        println!("wrote {path}");
+        Ok(())
+    };
+    emit(
+        "_obs.json",
+        export::summary_doc(name, runs, log_counts).to_string_pretty(),
+    )?;
+    if oc.spans {
+        emit("_trace.json", export::trace_doc(runs).to_string_pretty())?;
+        emit("_spans.jsonl", export::spans_jsonl(runs))?;
+    }
+    if oc.timeline {
+        emit(
+            "_timeline.json",
+            export::timeline_doc(name, runs).to_string_pretty(),
+        )?;
+        emit("_timeline.csv", export::timeline_csv(runs))?;
+    }
+    Ok(())
 }
 
 /// Loads a ScenarioReport or exits with the error.
@@ -208,6 +296,12 @@ fn run_analyze(file: &str, baseline: Policy, format: &str, out: &str) {
     let analyzed = AnalysisReport::from_scenario(&report, baseline);
     println!("{}", analysis::render(&analyzed.aggregate_table(), format));
     println!("{}", analysis::render(&analyzed.speedup_table(), format));
+    // Phase-breakdown table from the sibling observation summary, written
+    // by `kinetic run --observe` beside the report. Absent sibling = the
+    // run was unobserved; nothing extra renders.
+    if let Some(t) = obs_phase_table(file) {
+        println!("{}", analysis::render(&t, format));
+    }
     // The paper's headline shape: the in-place policy's min–max
     // improvement over the baseline (Table 3 spans 1.16×–18.15×).
     // Meaningless when in-place *is* the baseline (always 1.00×).
@@ -230,6 +324,70 @@ fn run_analyze(file: &str, baseline: Policy, format: &str, out: &str) {
             }
         }
     }
+}
+
+/// Loads `<report>_obs.json` beside the analyzed report, when present, and
+/// builds the per-(service, policy) phase breakdown. A malformed sibling
+/// is reported to stderr and skipped — the report analysis still stands.
+fn obs_phase_table(report_file: &str) -> Option<Table> {
+    use kinetic::util::json::Json;
+    let path = format!(
+        "{}_obs.json",
+        report_file.strip_suffix(".json").unwrap_or(report_file)
+    );
+    let text = std::fs::read_to_string(&path).ok()?;
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("ignoring malformed observation summary {path}: {e}");
+            return None;
+        }
+    };
+    if let Err(e) = kinetic::obs::export::validate_summary(&doc) {
+        eprintln!("ignoring invalid observation summary {path}: {e}");
+        return None;
+    }
+    let mut t = Table::new(vec![
+        "Run",
+        "Service",
+        "Phase",
+        "Count",
+        "Mean (ms)",
+        "Min (ms)",
+        "Max (ms)",
+    ])
+    .title("Request-phase breakdown (observed spans)");
+    let mut rows = 0u64;
+    for run in doc.get("runs")?.as_arr()? {
+        let variant = run.get("variant").and_then(Json::as_str).unwrap_or("");
+        let routing = run.get("routing").and_then(Json::as_str).unwrap_or("?");
+        let policy = run.get("policy").and_then(Json::as_str).unwrap_or("?");
+        let rep = run.get("rep").and_then(Json::as_u64).unwrap_or(0);
+        let mut label = String::new();
+        if !variant.is_empty() {
+            label.push_str(variant);
+            label.push('/');
+        }
+        label.push_str(routing);
+        label.push('/');
+        label.push_str(policy);
+        if rep > 0 {
+            label.push_str(&format!("#{rep}"));
+        }
+        for p in run.get("phases")?.as_arr()? {
+            rows += 1;
+            t.row(vec![
+                label.clone(),
+                p.get("service").and_then(Json::as_str).unwrap_or("?").to_string(),
+                p.get("phase").and_then(Json::as_str).unwrap_or("?").to_string(),
+                p.get("count").and_then(Json::as_u64).unwrap_or(0).to_string(),
+                fmt_ms(p.get("mean_ms").and_then(Json::as_f64).unwrap_or(0.0)),
+                fmt_ms(p.get("min_ms").and_then(Json::as_f64).unwrap_or(0.0)),
+                fmt_ms(p.get("max_ms").and_then(Json::as_f64).unwrap_or(0.0)),
+            ]);
+        }
+    }
+    (rows > 0).then_some(t)
 }
 
 fn run_compare(base: &str, new: &str, threshold_pct: f64, format: &str) {
@@ -350,6 +508,104 @@ fn validate_report(file: &str) {
         ),
         Err(e) => {
             eprintln!("invalid report: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `kinetic profile` — renders the self-profile sections of a bench
+/// report: per-event-kind dispatch counts/wall time plus calendar-queue
+/// internals, one table per profiled rung.
+fn run_profile(file: &str) {
+    use kinetic::util::json::Json;
+    let rep = match bench::BenchReport::load(std::path::Path::new(file)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("invalid bench report: {e}");
+            std::process::exit(1);
+        }
+    };
+    let mut any = false;
+    for rung in &rep.rungs {
+        let Some(p) = &rung.profile else { continue };
+        any = true;
+        let mut t = Table::new(vec!["Event", "Count", "Wall (ms)"])
+            .title(format!("self-profile: {}", rung.name));
+        if let Some(events) = p.get("events").and_then(Json::as_arr) {
+            for ev in events {
+                t.row(vec![
+                    ev.get("kind").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    ev.get("count").and_then(Json::as_u64).unwrap_or(0).to_string(),
+                    format!(
+                        "{:.3}",
+                        ev.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0)
+                    ),
+                ]);
+            }
+        }
+        println!("{}", t.to_ascii());
+        let processed = p.get("processed").and_then(Json::as_u64).unwrap_or(0);
+        if let Some(q) = p.get("queue") {
+            println!(
+                "queue: rebuilds={} entry_scans={} max_bucket={} (processed {processed})\n",
+                q.get("rebuilds").and_then(Json::as_u64).unwrap_or(0),
+                q.get("entry_scans").and_then(Json::as_u64).unwrap_or(0),
+                q.get("max_bucket").and_then(Json::as_u64).unwrap_or(0),
+            );
+        }
+    }
+    if !any {
+        eprintln!(
+            "no self-profile sections in {file} — pre-profile bench reports \
+             (BENCH_9 and earlier) do not carry them; re-run `kinetic bench`"
+        );
+        std::process::exit(1);
+    }
+}
+
+/// `kinetic validate-obs` — strict-validates one observation artifact,
+/// sniffing which schema applies from the document itself.
+fn validate_obs(file: &str) {
+    use kinetic::obs::export;
+    use kinetic::util::json::Json;
+    if file.is_empty() {
+        eprintln!("error: validate-obs needs --file <artifact.json>");
+        std::process::exit(2);
+    }
+    let text = match std::fs::read_to_string(file) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {file}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{file}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let result = match doc.get("kind").and_then(Json::as_str) {
+        Some("kinetic-obs") => export::validate_summary(&doc).map(|()| "observation summary"),
+        Some("kinetic-timeline") => export::validate_timeline(&doc).map(|()| "timeline"),
+        _ if doc.get("traceEvents").is_some() => {
+            export::validate_trace(&doc).map(|()| "Chrome trace")
+        }
+        _ if doc.get("events").is_some() => {
+            export::validate_profile(&doc).map(|()| "self-profile")
+        }
+        _ => Err(
+            "unrecognized artifact: expected a kinetic-obs or kinetic-timeline \
+             document, a Chrome trace (traceEvents), or a self-profile \
+             (events/queue/processed)"
+                .to_string(),
+        ),
+    };
+    match result {
+        Ok(what) => println!("{what} OK: {file}"),
+        Err(e) => {
+            eprintln!("invalid observation artifact {file}: {e}");
             std::process::exit(1);
         }
     }
@@ -706,6 +962,7 @@ fn main() {
             inv.get_or("out", "results"),
             or_die(inv.threads()),
             or_die(inv.shards()),
+            inv.flag("observe"),
         ),
         "analyze" => {
             let file = inv
@@ -787,6 +1044,15 @@ fn main() {
                 inv.get_or("trace", "examples/scenarios/azure_sample.csv"),
             );
         }
+        "profile" => {
+            let file = inv
+                .get("file")
+                .filter(|f| !f.is_empty())
+                .map(str::to_string)
+                .or_else(|| inv.positionals.first().cloned())
+                .unwrap_or_else(|| "BENCH_9.json".to_string());
+            run_profile(&file);
+        }
         "validate-bench" => {
             let file = inv
                 .get("file")
@@ -795,6 +1061,15 @@ fn main() {
                 .or_else(|| inv.positionals.first().cloned())
                 .unwrap_or_default();
             validate_bench(&file);
+        }
+        "validate-obs" => {
+            let file = inv
+                .get("file")
+                .filter(|f| !f.is_empty())
+                .map(str::to_string)
+                .or_else(|| inv.positionals.first().cloned())
+                .unwrap_or_default();
+            validate_obs(&file);
         }
         "validate-report" => {
             let file = inv

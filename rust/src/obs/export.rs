@@ -1,0 +1,747 @@
+//! Observation artifact builders and their strict validators.
+//!
+//! Four export surfaces, all derived from the per-run [`ObsBundle`]s a
+//! scenario run harvests:
+//!
+//! - **summary** (`scenario_<name>_obs.json`) — per-run sampling stats and
+//!   the per-(service, phase) breakdown tables `kinetic analyze` renders.
+//! - **Chrome trace** (`scenario_<name>_trace.json`) — `traceEvents` in the
+//!   trace-event format; load it in Perfetto (<https://ui.perfetto.dev>) or
+//!   `chrome://tracing`. One process per run, one thread per service, one
+//!   complete ("X") slice per phase interval.
+//! - **spans JSONL** (`scenario_<name>_spans.jsonl`) — one span per line
+//!   for ad-hoc processing.
+//! - **timeline** (`scenario_<name>_timeline.{json,csv}`) — the cadence
+//!   gauges; the CSV carries fleet totals for quick plotting, the JSON adds
+//!   the per-node pods-by-state vectors.
+//!
+//! Validators are **strict**: unknown keys are rejected with their path, so
+//! a hand-edited artifact can't silently pass CI.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::obs::{EventProfile, ObsBundle, Phase};
+use crate::util::json::Json;
+use crate::util::stats::StreamStats;
+
+/// Schema version stamped into (and required from) the summary and
+/// timeline documents.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One observed run of a scenario grid, tagged with its grid coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunObs {
+    /// Sweep-variant label (empty when the spec has no sweep).
+    pub variant: String,
+    pub routing: String,
+    pub policy: String,
+    pub rep: u32,
+    pub bundle: ObsBundle,
+}
+
+impl RunObs {
+    /// `[variant/]routing/policy[#rep]` — the run's display label.
+    pub fn label(&self) -> String {
+        let mut l = String::new();
+        if !self.variant.is_empty() {
+            l.push_str(&self.variant);
+            l.push('/');
+        }
+        l.push_str(&self.routing);
+        l.push('/');
+        l.push_str(&self.policy);
+        if self.rep > 0 {
+            let _ = write!(l, "#{}", self.rep);
+        }
+        l
+    }
+}
+
+/// Per-(service, phase) aggregate over a bundle's spans: the interval from
+/// each mark to the next is attributed to the phase being exited, so the
+/// rows of one span telescope to `marked_ms()`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseRow {
+    pub service: String,
+    pub phase: Phase,
+    pub stats: StreamStats,
+}
+
+impl PhaseRow {
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.stats.sum()
+    }
+}
+
+pub fn phase_rows(bundle: &ObsBundle) -> Vec<PhaseRow> {
+    let mut acc: BTreeMap<(String, Phase), StreamStats> = BTreeMap::new();
+    for span in &bundle.spans {
+        for pair in span.marks.windows(2) {
+            let (phase, at) = pair[0];
+            let (_, next) = pair[1];
+            let ms = (next - at).as_millis_f64();
+            acc.entry((span.service.clone(), phase))
+                .or_default()
+                .record(ms);
+        }
+    }
+    acc.into_iter()
+        .map(|((service, phase), stats)| PhaseRow {
+            service,
+            phase,
+            stats,
+        })
+        .collect()
+}
+
+/// The `scenario_<name>_obs.json` summary document.
+pub fn summary_doc(name: &str, runs: &[RunObs], log_counts: &[u64; 4]) -> Json {
+    let runs_json = Json::arr(runs.iter().map(|r| {
+        let phases = Json::arr(phase_rows(&r.bundle).into_iter().map(|p| {
+            Json::obj(vec![
+                ("service", p.service.as_str().into()),
+                ("phase", p.phase.name().into()),
+                ("count", p.count().into()),
+                ("total_ms", p.total_ms().into()),
+                ("mean_ms", p.stats.mean().into()),
+                ("min_ms", p.stats.min().into()),
+                ("max_ms", p.stats.max().into()),
+            ])
+        }));
+        Json::obj(vec![
+            ("variant", r.variant.as_str().into()),
+            ("routing", r.routing.as_str().into()),
+            ("policy", r.policy.as_str().into()),
+            ("rep", u64::from(r.rep).into()),
+            ("sample_1_in_n", r.bundle.sample_1_in_n.into()),
+            ("spans", (r.bundle.spans.len() as u64).into()),
+            ("spans_dropped", r.bundle.spans_dropped.into()),
+            ("spans_open", r.bundle.spans_open.into()),
+            ("timeline_samples", (r.bundle.timeline.len() as u64).into()),
+            ("timeline_dropped", r.bundle.timeline_dropped.into()),
+            ("phases", phases),
+        ])
+    }));
+    Json::obj(vec![
+        ("kind", "kinetic-obs".into()),
+        ("schema_version", SCHEMA_VERSION.into()),
+        ("name", name.into()),
+        (
+            "log_counts",
+            Json::obj(vec![
+                ("error", log_counts[0].into()),
+                ("warn", log_counts[1].into()),
+                ("info", log_counts[2].into()),
+                ("debug", log_counts[3].into()),
+            ]),
+        ),
+        ("runs", runs_json),
+    ])
+}
+
+/// The Chrome trace-event document (`scenario_<name>_trace.json`).
+pub fn trace_doc(runs: &[RunObs]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (run_idx, run) in runs.iter().enumerate() {
+        let pid = run_idx as u64 + 1;
+        events.push(Json::obj(vec![
+            ("name", "process_name".into()),
+            ("ph", "M".into()),
+            ("pid", pid.into()),
+            ("args", Json::obj(vec![("name", run.label().as_str().into())])),
+        ]));
+        let mut tids: BTreeMap<&str, u64> = BTreeMap::new();
+        for span in &run.bundle.spans {
+            let next = tids.len() as u64 + 1;
+            let tid = *tids.entry(span.service.as_str()).or_insert(next);
+            for pair in span.marks.windows(2) {
+                let (phase, at) = pair[0];
+                let (_, end) = pair[1];
+                events.push(Json::obj(vec![
+                    ("name", phase.name().into()),
+                    ("cat", "request".into()),
+                    ("ph", "X".into()),
+                    ("ts", at.as_micros_f64().into()),
+                    ("dur", (end - at).as_micros_f64().into()),
+                    ("pid", pid.into()),
+                    ("tid", tid.into()),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("service", span.service.as_str().into()),
+                            ("index", span.index.into()),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+        for (name, tid) in tids {
+            events.push(Json::obj(vec![
+                ("name", "thread_name".into()),
+                ("ph", "M".into()),
+                ("pid", pid.into()),
+                ("tid", tid.into()),
+                ("args", Json::obj(vec![("name", name.into())])),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", "ms".into()),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// One span per line (`scenario_<name>_spans.jsonl`).
+pub fn spans_jsonl(runs: &[RunObs]) -> String {
+    let mut out = String::new();
+    for run in runs {
+        let label = run.label();
+        for span in &run.bundle.spans {
+            let marks = Json::arr(span.marks.iter().map(|(p, at)| {
+                Json::obj(vec![
+                    ("phase", p.name().into()),
+                    ("at_ms", at.as_millis_f64().into()),
+                ])
+            }));
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("run", label.as_str().into()),
+                ("service", span.service.as_str().into()),
+                ("index", span.index.into()),
+                ("outcome", span.outcome.name().into()),
+            ];
+            if let Some(l) = span.latency_ms {
+                pairs.push(("latency_ms", l.into()));
+            }
+            pairs.push(("marks", marks));
+            out.push_str(&Json::obj(pairs).to_string_compact());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// The timeline JSON document (`scenario_<name>_timeline.json`).
+pub fn timeline_doc(name: &str, runs: &[RunObs]) -> Json {
+    let runs_json = Json::arr(runs.iter().map(|r| {
+        let samples = Json::arr(r.bundle.timeline.iter().map(|s| {
+            Json::obj(vec![
+                ("at_ms", s.at.as_millis_f64().into()),
+                (
+                    "node_ready",
+                    Json::arr(s.node_ready.iter().map(|&n| Json::from(u64::from(n)))),
+                ),
+                (
+                    "node_starting",
+                    Json::arr(s.node_starting.iter().map(|&n| Json::from(u64::from(n)))),
+                ),
+                ("activator_depth", s.activator_depth.into()),
+                ("in_flight", s.in_flight.into()),
+                ("kpa_signal", s.kpa_signal.into()),
+            ])
+        }));
+        Json::obj(vec![
+            ("variant", r.variant.as_str().into()),
+            ("routing", r.routing.as_str().into()),
+            ("policy", r.policy.as_str().into()),
+            ("rep", u64::from(r.rep).into()),
+            ("dropped", r.bundle.timeline_dropped.into()),
+            ("samples", samples),
+        ])
+    }));
+    Json::obj(vec![
+        ("kind", "kinetic-timeline".into()),
+        ("schema_version", SCHEMA_VERSION.into()),
+        ("name", name.into()),
+        ("runs", runs_json),
+    ])
+}
+
+/// Fleet-total gauges as CSV for quick plotting.
+pub fn timeline_csv(runs: &[RunObs]) -> String {
+    let mut out =
+        String::from("run,at_ms,pods_ready,pods_starting,activator_depth,in_flight,kpa_signal\n");
+    for run in runs {
+        let label = run.label();
+        for s in &run.bundle.timeline {
+            let ready: u64 = s.node_ready.iter().map(|&n| u64::from(n)).sum();
+            let starting: u64 = s.node_starting.iter().map(|&n| u64::from(n)).sum();
+            let _ = writeln!(
+                out,
+                "{label},{},{ready},{starting},{},{},{}",
+                s.at.as_millis_f64(),
+                s.activator_depth,
+                s.in_flight,
+                s.kpa_signal
+            );
+        }
+    }
+    out
+}
+
+/// The self-profile section attached to bench rungs: per-event-kind counts
+/// and wall time (only kinds that fired) plus calendar-queue internals.
+pub fn profile_doc(profile: &EventProfile, kinds: &[&str]) -> Json {
+    let events = Json::arr(profile.counts.iter().enumerate().filter_map(|(i, &c)| {
+        if c == 0 {
+            return None;
+        }
+        let wall_ns = profile.wall_ns.get(i).copied().unwrap_or(0);
+        let kind = kinds.get(i).copied().unwrap_or("?");
+        Some(Json::obj(vec![
+            ("kind", kind.into()),
+            ("count", c.into()),
+            ("wall_ms", (wall_ns as f64 / 1e6).into()),
+        ]))
+    }));
+    Json::obj(vec![
+        ("events", events),
+        (
+            "queue",
+            Json::obj(vec![
+                ("rebuilds", profile.queue.rebuilds.into()),
+                ("entry_scans", profile.queue.entry_scans.into()),
+                ("max_bucket", profile.queue.max_bucket.into()),
+            ]),
+        ),
+        ("processed", profile.processed.into()),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Strict validators.
+
+fn obj<'a>(j: &'a Json, path: &str) -> Result<&'a BTreeMap<String, Json>, String> {
+    j.as_obj().ok_or_else(|| format!("{path}: expected an object"))
+}
+
+fn strict_keys(
+    m: &BTreeMap<String, Json>,
+    path: &str,
+    required: &[&str],
+    optional: &[&str],
+) -> Result<(), String> {
+    for k in required {
+        if !m.contains_key(*k) {
+            return Err(format!("{path}: missing required key '{k}'"));
+        }
+    }
+    for k in m.keys() {
+        if !required.contains(&k.as_str()) && !optional.contains(&k.as_str()) {
+            return Err(format!("{path}: unknown key '{k}'"));
+        }
+    }
+    Ok(())
+}
+
+fn num(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<f64, String> {
+    m.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("{path}.{key}: expected a number"))
+}
+
+fn uint(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<u64, String> {
+    m.get(key)
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| format!("{path}.{key}: expected a non-negative integer"))
+}
+
+fn string<'a>(m: &'a BTreeMap<String, Json>, path: &str, key: &str) -> Result<&'a str, String> {
+    m.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("{path}.{key}: expected a string"))
+}
+
+fn arr<'a>(m: &'a BTreeMap<String, Json>, path: &str, key: &str) -> Result<&'a [Json], String> {
+    m.get(key)
+        .and_then(|v| v.as_arr())
+        .map(Vec::as_slice)
+        .ok_or_else(|| format!("{path}.{key}: expected an array"))
+}
+
+fn check_kind_version(
+    m: &BTreeMap<String, Json>,
+    path: &str,
+    kind: &str,
+) -> Result<(), String> {
+    let k = string(m, path, "kind")?;
+    if k != kind {
+        return Err(format!("{path}.kind: expected '{kind}', got '{k}'"));
+    }
+    let v = uint(m, path, "schema_version")?;
+    if v != SCHEMA_VERSION {
+        return Err(format!(
+            "{path}.schema_version: expected {SCHEMA_VERSION}, got {v}"
+        ));
+    }
+    Ok(())
+}
+
+/// Validates a `kinetic-obs` summary document.
+pub fn validate_summary(doc: &Json) -> Result<(), String> {
+    let m = obj(doc, "$")?;
+    strict_keys(
+        m,
+        "$",
+        &["kind", "schema_version", "name", "log_counts", "runs"],
+        &[],
+    )?;
+    check_kind_version(m, "$", "kinetic-obs")?;
+    string(m, "$", "name")?;
+    let lc = obj(m.get("log_counts").unwrap(), "$.log_counts")?;
+    strict_keys(lc, "$.log_counts", &["error", "warn", "info", "debug"], &[])?;
+    for k in ["error", "warn", "info", "debug"] {
+        uint(lc, "$.log_counts", k)?;
+    }
+    for (i, run) in arr(m, "$", "runs")?.iter().enumerate() {
+        let path = format!("$.runs[{i}]");
+        let rm = obj(run, &path)?;
+        strict_keys(
+            rm,
+            &path,
+            &[
+                "variant",
+                "routing",
+                "policy",
+                "rep",
+                "sample_1_in_n",
+                "spans",
+                "spans_dropped",
+                "spans_open",
+                "timeline_samples",
+                "timeline_dropped",
+                "phases",
+            ],
+            &[],
+        )?;
+        string(rm, &path, "routing")?;
+        string(rm, &path, "policy")?;
+        for k in [
+            "rep",
+            "sample_1_in_n",
+            "spans",
+            "spans_dropped",
+            "spans_open",
+            "timeline_samples",
+            "timeline_dropped",
+        ] {
+            uint(rm, &path, k)?;
+        }
+        for (j, p) in arr(rm, &path, "phases")?.iter().enumerate() {
+            let ppath = format!("{path}.phases[{j}]");
+            let pm = obj(p, &ppath)?;
+            strict_keys(
+                pm,
+                &ppath,
+                &["service", "phase", "count", "total_ms", "mean_ms", "min_ms", "max_ms"],
+                &[],
+            )?;
+            let phase = string(pm, &ppath, "phase")?;
+            if Phase::parse(phase).is_none() {
+                return Err(format!("{ppath}.phase: unknown phase '{phase}'"));
+            }
+            uint(pm, &ppath, "count")?;
+            for k in ["total_ms", "mean_ms", "min_ms", "max_ms"] {
+                num(pm, &ppath, k)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validates a Chrome trace-event document.
+pub fn validate_trace(doc: &Json) -> Result<(), String> {
+    let m = obj(doc, "$")?;
+    strict_keys(m, "$", &["displayTimeUnit", "traceEvents"], &[])?;
+    for (i, ev) in arr(m, "$", "traceEvents")?.iter().enumerate() {
+        let path = format!("$.traceEvents[{i}]");
+        let em = obj(ev, &path)?;
+        strict_keys(
+            em,
+            &path,
+            &["name", "ph"],
+            &["cat", "ts", "dur", "pid", "tid", "args"],
+        )?;
+        string(em, &path, "name")?;
+        match string(em, &path, "ph")? {
+            "M" => {}
+            "X" => {
+                num(em, &path, "ts")?;
+                num(em, &path, "dur")?;
+                uint(em, &path, "pid")?;
+                uint(em, &path, "tid")?;
+            }
+            other => return Err(format!("{path}.ph: unsupported event type '{other}'")),
+        }
+    }
+    Ok(())
+}
+
+/// Validates a `kinetic-timeline` document.
+pub fn validate_timeline(doc: &Json) -> Result<(), String> {
+    let m = obj(doc, "$")?;
+    strict_keys(m, "$", &["kind", "schema_version", "name", "runs"], &[])?;
+    check_kind_version(m, "$", "kinetic-timeline")?;
+    string(m, "$", "name")?;
+    for (i, run) in arr(m, "$", "runs")?.iter().enumerate() {
+        let path = format!("$.runs[{i}]");
+        let rm = obj(run, &path)?;
+        strict_keys(
+            rm,
+            &path,
+            &["variant", "routing", "policy", "rep", "dropped", "samples"],
+            &[],
+        )?;
+        string(rm, &path, "routing")?;
+        string(rm, &path, "policy")?;
+        uint(rm, &path, "rep")?;
+        uint(rm, &path, "dropped")?;
+        for (j, s) in arr(rm, &path, "samples")?.iter().enumerate() {
+            let spath = format!("{path}.samples[{j}]");
+            let sm = obj(s, &spath)?;
+            strict_keys(
+                sm,
+                &spath,
+                &[
+                    "at_ms",
+                    "node_ready",
+                    "node_starting",
+                    "activator_depth",
+                    "in_flight",
+                    "kpa_signal",
+                ],
+                &[],
+            )?;
+            num(sm, &spath, "at_ms")?;
+            num(sm, &spath, "kpa_signal")?;
+            uint(sm, &spath, "activator_depth")?;
+            uint(sm, &spath, "in_flight")?;
+            for k in ["node_ready", "node_starting"] {
+                for (n, v) in arr(sm, &spath, k)?.iter().enumerate() {
+                    if v.as_u64().is_none() {
+                        return Err(format!("{spath}.{k}[{n}]: expected an integer"));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validates a self-profile section (bench rungs); requires every listed
+/// event kind to have fired.
+pub fn validate_profile(doc: &Json) -> Result<(), String> {
+    let m = obj(doc, "$.profile")?;
+    strict_keys(m, "$.profile", &["events", "queue", "processed"], &[])?;
+    uint(m, "$.profile", "processed")?;
+    let events = arr(m, "$.profile", "events")?;
+    if events.is_empty() {
+        return Err("$.profile.events: must not be empty".into());
+    }
+    for (i, ev) in events.iter().enumerate() {
+        let path = format!("$.profile.events[{i}]");
+        let em = obj(ev, &path)?;
+        strict_keys(em, &path, &["kind", "count", "wall_ms"], &[])?;
+        string(em, &path, "kind")?;
+        if uint(em, &path, "count")? == 0 {
+            return Err(format!("{path}.count: must be > 0"));
+        }
+        num(em, &path, "wall_ms")?;
+    }
+    let qm = obj(m.get("queue").unwrap(), "$.profile.queue")?;
+    strict_keys(
+        qm,
+        "$.profile.queue",
+        &["rebuilds", "entry_scans", "max_bucket"],
+        &[],
+    )?;
+    for k in ["rebuilds", "entry_scans", "max_bucket"] {
+        uint(qm, "$.profile.queue", k)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Span, SpanOutcome, TimelineSample};
+    use crate::simclock::SimTime;
+
+    fn sample_runs() -> Vec<RunObs> {
+        let span = Span {
+            service: "fn-0".to_string(),
+            index: 3,
+            marks: vec![
+                (Phase::Submitted, SimTime::from_millis(10)),
+                (Phase::Buffered, SimTime::from_millis(11)),
+                (Phase::Dispatched, SimTime::from_millis(20)),
+            ],
+            latency_ms: Some(45.0),
+            outcome: SpanOutcome::Completed,
+        };
+        let tl = TimelineSample {
+            at: SimTime::from_secs(1),
+            node_ready: vec![2, 0],
+            node_starting: vec![0, 1],
+            activator_depth: 4,
+            in_flight: 3,
+            kpa_signal: 3.0,
+        };
+        vec![RunObs {
+            variant: String::new(),
+            routing: "least-loaded".to_string(),
+            policy: "in-place".to_string(),
+            rep: 0,
+            bundle: ObsBundle {
+                sample_1_in_n: 1,
+                spans: vec![span],
+                spans_dropped: 0,
+                spans_open: 0,
+                timeline: vec![tl],
+                timeline_dropped: 0,
+                profile: EventProfile::new(4),
+            },
+        }]
+    }
+
+    #[test]
+    fn summary_round_trips_and_validates() {
+        let runs = sample_runs();
+        let doc = summary_doc("t", &runs, &[0, 1, 2, 0]);
+        let text = doc.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        validate_summary(&back).unwrap();
+        assert_eq!(back.to_string_pretty(), text);
+    }
+
+    #[test]
+    fn summary_rejects_unknown_keys() {
+        let runs = sample_runs();
+        let doc = summary_doc("t", &runs, &[0; 4]);
+        let mut m = doc.as_obj().unwrap().clone();
+        m.insert("extra".to_string(), Json::from(1u64));
+        let e = validate_summary(&Json::Obj(m)).unwrap_err();
+        assert!(e.contains("extra"), "{e}");
+    }
+
+    #[test]
+    fn trace_doc_validates_and_slices_phase_intervals() {
+        let runs = sample_runs();
+        let doc = trace_doc(&runs);
+        validate_trace(&doc).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // process_name meta + 2 phase slices + thread_name meta.
+        assert_eq!(events.len(), 4);
+        let e = &events[1];
+        assert_eq!(e.get("name").unwrap().as_str().unwrap(), "submitted");
+        assert_eq!(e.get("ts").unwrap().as_f64().unwrap(), 10_000.0);
+        assert_eq!(e.get("dur").unwrap().as_f64().unwrap(), 1_000.0);
+    }
+
+    #[test]
+    fn trace_rejects_unknown_event_keys() {
+        let doc = Json::parse(
+            r#"{"displayTimeUnit":"ms","traceEvents":[
+                {"name":"x","ph":"X","ts":1,"dur":2,"pid":1,"tid":1,"zz":9}]}"#,
+        )
+        .unwrap();
+        let e = validate_trace(&doc).unwrap_err();
+        assert!(e.contains("zz"), "{e}");
+    }
+
+    #[test]
+    fn timeline_json_and_csv_agree_on_totals() {
+        let runs = sample_runs();
+        let doc = timeline_doc("t", &runs);
+        validate_timeline(&doc).unwrap();
+        let csv = timeline_csv(&runs);
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "run,at_ms,pods_ready,pods_starting,activator_depth,in_flight,kpa_signal"
+        );
+        assert_eq!(
+            lines.next().unwrap(),
+            "least-loaded/in-place,1000,2,1,4,3,3"
+        );
+    }
+
+    #[test]
+    fn timeline_rejects_unknown_sample_keys() {
+        let runs = sample_runs();
+        let doc = timeline_doc("t", &runs);
+        let mut m = doc.as_obj().unwrap().clone();
+        let runs_arr = m.get_mut("runs").unwrap();
+        if let Json::Arr(rs) = runs_arr {
+            if let Json::Obj(rm) = &mut rs[0] {
+                if let Some(Json::Arr(ss)) = rm.get_mut("samples") {
+                    if let Json::Obj(sm) = &mut ss[0] {
+                        sm.insert("bogus".to_string(), Json::from(1u64));
+                    }
+                }
+            }
+        }
+        let e = validate_timeline(&Json::Obj(m)).unwrap_err();
+        assert!(e.contains("bogus"), "{e}");
+    }
+
+    #[test]
+    fn spans_jsonl_is_one_parseable_object_per_line() {
+        let runs = sample_runs();
+        let text = spans_jsonl(&runs);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("service").unwrap().as_str().unwrap(), "fn-0");
+        assert_eq!(j.get("outcome").unwrap().as_str().unwrap(), "completed");
+        assert_eq!(j.get("marks").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn phase_rows_telescope_to_marked_interval() {
+        let runs = sample_runs();
+        let rows = phase_rows(&runs[0].bundle);
+        let total: f64 = rows.iter().map(|r| r.total_ms()).sum();
+        assert_eq!(total, runs[0].bundle.spans[0].marked_ms());
+        assert_eq!(rows.len(), 2); // submitted→buffered, buffered→dispatched
+    }
+
+    #[test]
+    fn profile_doc_validates_and_skips_idle_kinds() {
+        let mut p = EventProfile::new(3);
+        p.record(0, std::time::Duration::from_micros(5));
+        p.record(0, std::time::Duration::from_micros(5));
+        p.record(2, std::time::Duration::from_micros(1));
+        p.processed = 3;
+        let doc = profile_doc(&p, &["A", "B", "C"]);
+        validate_profile(&doc).unwrap();
+        let events = doc.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("kind").unwrap().as_str().unwrap(), "A");
+        assert_eq!(events[0].get("count").unwrap().as_u64().unwrap(), 2);
+    }
+
+    #[test]
+    fn profile_rejects_zero_counts_and_unknown_keys() {
+        let doc = Json::parse(
+            r#"{"events":[{"kind":"A","count":0,"wall_ms":1}],
+                "queue":{"rebuilds":0,"entry_scans":0,"max_bucket":0},
+                "processed":1}"#,
+        )
+        .unwrap();
+        let e = validate_profile(&doc).unwrap_err();
+        assert!(e.contains("count"), "{e}");
+        let doc = Json::parse(
+            r#"{"events":[{"kind":"A","count":1,"wall_ms":1}],
+                "queue":{"rebuilds":0,"entry_scans":0,"max_bucket":0,"depth":2},
+                "processed":1}"#,
+        )
+        .unwrap();
+        let e = validate_profile(&doc).unwrap_err();
+        assert!(e.contains("depth"), "{e}");
+    }
+}

@@ -1,0 +1,663 @@
+//! Observability subsystem: request-lifecycle spans, timeline gauges, and
+//! simulator self-profiling.
+//!
+//! The subsystem is **armed only on demand** — a spec's `observe` section or
+//! `kinetic run --observe` — and is built around one hard invariant: arming
+//! it must never perturb the simulation. Every stamp is a read-only probe
+//! behind `if let Some(obs) = &mut w.obs`; nothing here draws from the
+//! platform RNG, schedules state-changing events, or touches metrics, so an
+//! observe-on run emits a byte-for-byte identical scenario report to an
+//! observe-off run (pinned by `tests/obs.rs`).
+//!
+//! Three planes:
+//!
+//! 1. **Request-lifecycle spans** ([`Span`]) — a per-request phase ledger
+//!    (submitted → buffered → dispatched → completed, plus the fault-path
+//!    phases) stamped at the existing hook points in
+//!    `coordinator/{platform,routing,lifecycle,resize}.rs` and `faults/`.
+//!    Sampling is deterministic per (seed, service): each service keeps an
+//!    arrival counter and samples one request in `sample_1_in_n`, with the
+//!    block offset drawn once from an RNG seeded
+//!    `seed ^ OBS_RNG_SALT ^ fnv1a(service_name)` — per-service state makes
+//!    the choice independent of shard count (a service's arrival order
+//!    within its home cell is the same at any `--shards N`). Closed spans
+//!    land in a bounded ring so multi-million-request replays stay O(ring).
+//! 2. **Timeline gauges** ([`TimelineSample`]) — a cadence-driven sampler
+//!    (its own `Event::ObsTick` variant through the calendar queue, handler
+//!    strictly read-only) recording pods-by-state per node, activator queue
+//!    depth, in-flight concurrency, and the KPA concurrency signal.
+//! 3. **Simulator self-profiling** ([`EventProfile`]) — per-`Event`-variant
+//!    dispatch counts and wall-time plus [`CalendarQueue`] internals
+//!    (rebuilds, entry scans, max bucket occupancy), surfaced in
+//!    `kinetic bench --json` rungs and rendered by `kinetic profile`.
+//!
+//! [`CalendarQueue`]: crate::simclock::CalendarQueue
+
+pub mod export;
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use crate::simclock::{QueueStats, SimTime};
+use crate::util::rng::Rng;
+
+/// Salt folded into the observation sampling seed so the sampler's single
+/// per-service draw can never collide with a simulation stream (same
+/// discipline as `FAULT_RNG_SALT`).
+pub const OBS_RNG_SALT: u64 = 0x0B5E_ACE5_A110_CA7E;
+
+/// FNV-1a over a service name — folds the name into the per-service
+/// sampling seed so the sampled subset is a function of (seed, service),
+/// not of submission interleaving or shard layout.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Knobs of the `observe` spec section (strictly parsed in
+/// `scenario/spec.rs`). The three plane toggles are internal — the spec
+/// arms all planes; `kinetic bench` uses [`ObserveConfig::profile_only`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObserveConfig {
+    /// Sample one request in `n` per service (1 = every request).
+    pub sample_1_in_n: u64,
+    /// Closed-span ring capacity per run (per cell when sharded).
+    pub max_spans: u64,
+    /// Timeline gauge sampling cadence.
+    pub timeline_cadence: SimTime,
+    /// Timeline ring capacity per run (per cell when sharded).
+    pub max_timeline: u64,
+    /// Plane toggles (not spec-exposed; default all-on).
+    pub spans: bool,
+    pub timeline: bool,
+    pub profile: bool,
+}
+
+impl Default for ObserveConfig {
+    fn default() -> ObserveConfig {
+        ObserveConfig {
+            sample_1_in_n: 1,
+            max_spans: 65_536,
+            timeline_cadence: SimTime::from_secs(1),
+            max_timeline: 65_536,
+            spans: true,
+            timeline: true,
+            profile: true,
+        }
+    }
+}
+
+impl ObserveConfig {
+    /// Engine self-profiling only — what `kinetic bench` arms so the span
+    /// and timeline planes cost nothing on the scale ladder.
+    pub fn profile_only() -> ObserveConfig {
+        ObserveConfig {
+            spans: false,
+            timeline: false,
+            ..ObserveConfig::default()
+        }
+    }
+}
+
+/// A lifecycle phase mark. Marks are appended in event order; the exported
+/// breakdown attributes the interval up to the next mark to the phase being
+/// exited, so per-span phase sums telescope to `last.at - first.at` and can
+/// never exceed the end-to-end latency (which additionally includes the
+/// proxy forward/respond hops outside the marked window).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Request accepted by the platform (ingress, before the forward hop).
+    Submitted,
+    /// Arrived with a ready pod available — dispatched without buffering.
+    Scheduled,
+    /// Parked in the activator queue (no pod had a free slot).
+    Buffered,
+    /// Buffered behind an on-demand cold start this request triggered.
+    StartupWait,
+    /// In-flight work evicted by a node crash.
+    Evicted,
+    /// Re-parked at the activator after eviction (`crash_requests=requeue`).
+    Requeued,
+    /// Re-dispatched onto surviving capacity after a requeue.
+    Rescheduled,
+    /// Dispatch triggered an in-place resize; executing under the parked
+    /// allocation until the patch lands.
+    ResizeWait,
+    /// The in-place resize patch landed on the serving pod.
+    ResizeLanded,
+    /// Handed to a pod's queue-proxy; execution starts.
+    Dispatched,
+    /// Response produced (terminal).
+    Completed,
+    /// Failed: buffer overflow or `crash_requests=fail` (terminal).
+    Failed,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 12] = [
+        Phase::Submitted,
+        Phase::Scheduled,
+        Phase::Buffered,
+        Phase::StartupWait,
+        Phase::Evicted,
+        Phase::Requeued,
+        Phase::Rescheduled,
+        Phase::ResizeWait,
+        Phase::ResizeLanded,
+        Phase::Dispatched,
+        Phase::Completed,
+        Phase::Failed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Submitted => "submitted",
+            Phase::Scheduled => "scheduled",
+            Phase::Buffered => "buffered",
+            Phase::StartupWait => "startup-wait",
+            Phase::Evicted => "evicted",
+            Phase::Requeued => "requeued",
+            Phase::Rescheduled => "rescheduled",
+            Phase::ResizeWait => "resize-wait",
+            Phase::ResizeLanded => "resize-landed",
+            Phase::Dispatched => "dispatched",
+            Phase::Completed => "completed",
+            Phase::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// Terminal state of a span when the run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Still in flight when observation stopped (truncated).
+    Open,
+    Completed,
+    Failed,
+}
+
+impl SpanOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanOutcome::Open => "open",
+            SpanOutcome::Completed => "completed",
+            SpanOutcome::Failed => "failed",
+        }
+    }
+}
+
+/// One sampled request's phase ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub service: String,
+    /// Per-service arrival index (0-based) — stable across shard counts.
+    pub index: u64,
+    pub marks: Vec<(Phase, SimTime)>,
+    /// End-to-end latency as the report records it (includes the proxy
+    /// respond hop beyond the last mark); `None` until completed.
+    pub latency_ms: Option<f64>,
+    pub outcome: SpanOutcome,
+}
+
+impl Span {
+    /// `last mark - first mark` in ms — the telescoped sum of all phase
+    /// intervals, by construction ≤ the end-to-end latency.
+    pub fn marked_ms(&self) -> f64 {
+        match (self.marks.first(), self.marks.last()) {
+            (Some((_, a)), Some((_, b))) => (*b - *a).as_millis_f64(),
+            _ => 0.0,
+        }
+    }
+}
+
+/// One timeline gauge sample (read-only snapshot of fleet state).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineSample {
+    pub at: SimTime,
+    /// Ready (running) pods per node index.
+    pub node_ready: Vec<u32>,
+    /// Starting (scheduled, not yet ready) pods per node index.
+    pub node_starting: Vec<u32>,
+    /// Requests parked across all activators.
+    pub activator_depth: u64,
+    /// Requests executing on pods.
+    pub in_flight: u64,
+    /// The KPA input signal: observed concurrency summed over services.
+    pub kpa_signal: f64,
+}
+
+/// Per-`Event`-variant dispatch counts and wall time, plus calendar-queue
+/// internals. Counts are deterministic for a given run; wall times are
+/// real-machine measurements and vary run to run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EventProfile {
+    pub counts: Vec<u64>,
+    pub wall_ns: Vec<u64>,
+    pub queue: QueueStats,
+    pub processed: u64,
+}
+
+impl EventProfile {
+    pub fn new(kinds: usize) -> EventProfile {
+        EventProfile {
+            counts: vec![0; kinds],
+            wall_ns: vec![0; kinds],
+            queue: QueueStats::default(),
+            processed: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, kind: usize, wall: std::time::Duration) {
+        if kind < self.counts.len() {
+            self.counts[kind] += 1;
+            self.wall_ns[kind] += wall.as_nanos() as u64;
+        }
+    }
+
+    /// Folds another profile in (sharded cells, bench aggregation).
+    pub fn merge(&mut self, other: &EventProfile) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+            self.wall_ns.resize(other.wall_ns.len(), 0);
+        }
+        for (i, c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        for (i, w) in other.wall_ns.iter().enumerate() {
+            self.wall_ns[i] += w;
+        }
+        self.queue.rebuilds += other.queue.rebuilds;
+        self.queue.entry_scans += other.queue.entry_scans;
+        self.queue.max_bucket = self.queue.max_bucket.max(other.queue.max_bucket);
+        self.processed += other.processed;
+    }
+}
+
+/// Everything one observed run produced — harvested from the platform after
+/// the engine drains (per cell when sharded, then merged in canonical cell
+/// order by [`ObsBundle::merge`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObsBundle {
+    pub sample_1_in_n: u64,
+    /// Closed spans in canonical (service, index) order.
+    pub spans: Vec<Span>,
+    /// Spans evicted from the ring (oldest-first) to stay bounded.
+    pub spans_dropped: u64,
+    /// Spans still open when observation stopped.
+    pub spans_open: u64,
+    pub timeline: Vec<TimelineSample>,
+    pub timeline_dropped: u64,
+    pub profile: EventProfile,
+}
+
+impl ObsBundle {
+    /// Merges per-cell bundles in canonical cell (index) order, then
+    /// re-sorts spans into the global (service, index) order so the span
+    /// plane is byte-identical at any shard count.
+    pub fn merge(cells: Vec<ObsBundle>) -> ObsBundle {
+        let mut out = ObsBundle::default();
+        for cell in cells {
+            out.sample_1_in_n = out.sample_1_in_n.max(cell.sample_1_in_n);
+            out.spans.extend(cell.spans);
+            out.spans_dropped += cell.spans_dropped;
+            out.spans_open += cell.spans_open;
+            out.timeline.extend(cell.timeline);
+            out.timeline_dropped += cell.timeline_dropped;
+            out.profile.merge(&cell.profile);
+        }
+        sort_spans(&mut out.spans);
+        out.timeline.sort_by(|a, b| a.at.cmp(&b.at));
+        out
+    }
+}
+
+fn sort_spans(spans: &mut [Span]) {
+    spans.sort_by(|a, b| a.service.cmp(&b.service).then(a.index.cmp(&b.index)));
+}
+
+/// Deterministic per-service sampler state.
+#[derive(Debug, Clone)]
+struct Sampler {
+    count: u64,
+    offset: u64,
+}
+
+impl Sampler {
+    fn new(seed: u64, name: &str, n: u64) -> Sampler {
+        let offset = if n <= 1 {
+            0
+        } else {
+            Rng::new(seed ^ OBS_RNG_SALT ^ fnv1a(name)).below(n)
+        };
+        Sampler { count: 0, offset }
+    }
+}
+
+/// The armed observation state carried by a `Platform`. `None` (the
+/// default) is observe-off: every probe site is a single branch.
+#[derive(Debug, Clone)]
+pub struct ObsState {
+    cfg: ObserveConfig,
+    seed: u64,
+    /// Simulation time when the plane was armed (end of the settle run).
+    /// Every exported timestamp is relative to it: cell-local clocks drift
+    /// apart with per-cell startup jitter, so window-relative stamps are
+    /// what makes sharded span output identical at any `--shards N`.
+    origin: SimTime,
+    /// Absolute time of the last non-`ObsTick` event dispatched — the
+    /// end-of-run clock an observed run reports at. Trailing cadence ticks
+    /// fire up to one period past the workload, so the engine clock alone
+    /// would stretch time-averaged report gauges and break byte identity
+    /// with the unobserved run.
+    last_real: SimTime,
+    samplers: Vec<Option<Sampler>>,
+    open: BTreeMap<u64, Span>,
+    closed: VecDeque<Span>,
+    dropped: u64,
+    timeline: Vec<TimelineSample>,
+    timeline_dropped: u64,
+    profile: EventProfile,
+}
+
+impl ObsState {
+    pub fn new(cfg: ObserveConfig, seed: u64, event_kinds: usize, origin: SimTime) -> ObsState {
+        let profile = EventProfile::new(event_kinds);
+        ObsState {
+            cfg,
+            seed,
+            origin,
+            last_real: origin,
+            samplers: Vec::new(),
+            open: BTreeMap::new(),
+            closed: VecDeque::new(),
+            dropped: 0,
+            timeline: Vec::new(),
+            timeline_dropped: 0,
+            profile,
+        }
+    }
+
+    pub fn cfg(&self) -> &ObserveConfig {
+        &self.cfg
+    }
+
+    pub fn spans_enabled(&self) -> bool {
+        self.cfg.spans
+    }
+
+    pub fn timeline_enabled(&self) -> bool {
+        self.cfg.timeline
+    }
+
+    pub fn profile_enabled(&self) -> bool {
+        self.cfg.profile
+    }
+
+    /// Records that a non-`ObsTick` event was dispatched at `now`
+    /// (absolute simulation time).
+    pub fn note_real_event(&mut self, now: SimTime) {
+        self.last_real = now;
+    }
+
+    /// Absolute time of the last real (non-`ObsTick`) event — the clock an
+    /// observed run harvests metrics at, matching the unobserved run.
+    pub fn last_real_event(&self) -> SimTime {
+        self.last_real
+    }
+
+    /// Submission probe: advances the service's arrival counter and opens a
+    /// span when the deterministic sampler selects this request.
+    pub fn on_submit(&mut self, req: u64, service_idx: usize, name: &str, now: SimTime) {
+        if !self.cfg.spans {
+            return;
+        }
+        let now = now.saturating_sub(self.origin);
+        if self.samplers.len() <= service_idx {
+            self.samplers.resize(service_idx + 1, None);
+        }
+        let n = self.cfg.sample_1_in_n.max(1);
+        let seed = self.seed;
+        let s = self.samplers[service_idx]
+            .get_or_insert_with(|| Sampler::new(seed, name, n));
+        let index = s.count;
+        s.count += 1;
+        if index % n != s.offset {
+            return;
+        }
+        self.open.insert(
+            req,
+            Span {
+                service: name.to_string(),
+                index,
+                marks: vec![(Phase::Submitted, now)],
+                latency_ms: None,
+                outcome: SpanOutcome::Open,
+            },
+        );
+    }
+
+    /// Appends a phase mark to the request's open span, if it is sampled.
+    #[inline]
+    pub fn mark(&mut self, req: u64, phase: Phase, now: SimTime) {
+        if let Some(span) = self.open.get_mut(&req) {
+            span.marks.push((phase, now.saturating_sub(self.origin)));
+        }
+    }
+
+    /// Whether the open span's most recent mark is `phase` (drives the
+    /// requeue → rescheduled transition at dispatch).
+    pub fn last_mark_is(&self, req: u64, phase: Phase) -> bool {
+        self.open
+            .get(&req)
+            .and_then(|s| s.marks.last())
+            .is_some_and(|(p, _)| *p == phase)
+    }
+
+    /// Request ids with open spans — for probes that only know the pod
+    /// (e.g. a resize landing) and need the platform's request table to
+    /// find the affected requests.
+    pub fn open_ids(&self) -> Vec<u64> {
+        self.open.keys().copied().collect()
+    }
+
+    /// Terminal probe: stamps the final mark and moves the span into the
+    /// bounded ring.
+    pub fn close(&mut self, req: u64, outcome: SpanOutcome, latency_ms: Option<f64>, now: SimTime) {
+        let Some(mut span) = self.open.remove(&req) else {
+            return;
+        };
+        let phase = match outcome {
+            SpanOutcome::Completed => Phase::Completed,
+            _ => Phase::Failed,
+        };
+        span.marks.push((phase, now.saturating_sub(self.origin)));
+        span.latency_ms = latency_ms;
+        span.outcome = outcome;
+        self.push_closed(span);
+    }
+
+    fn push_closed(&mut self, span: Span) {
+        if self.closed.len() as u64 >= self.cfg.max_spans {
+            self.closed.pop_front();
+            self.dropped += 1;
+        }
+        self.closed.push_back(span);
+    }
+
+    /// Timeline probe (called from the `ObsTick` handler). The sample's
+    /// timestamp is re-based onto the measured window like span marks.
+    pub fn record_timeline(&mut self, mut sample: TimelineSample) {
+        if self.timeline.len() as u64 >= self.cfg.max_timeline {
+            self.timeline_dropped += 1;
+            return;
+        }
+        sample.at = sample.at.saturating_sub(self.origin);
+        self.timeline.push(sample);
+    }
+
+    #[inline]
+    pub fn profile_mut(&mut self) -> &mut EventProfile {
+        &mut self.profile
+    }
+
+    /// Harvests the run's observation data. Spans still open are exported
+    /// with outcome `open`; spans sort into canonical (service, index)
+    /// order so output is independent of completion interleaving.
+    pub fn finish(mut self, queue: QueueStats, processed: u64) -> ObsBundle {
+        let spans_open = self.open.len() as u64;
+        let open: Vec<Span> = std::mem::take(&mut self.open).into_values().collect();
+        for span in open {
+            self.push_closed(span);
+        }
+        let mut spans: Vec<Span> = self.closed.into();
+        sort_spans(&mut spans);
+        self.profile.queue = queue;
+        self.profile.processed = processed;
+        ObsBundle {
+            sample_1_in_n: self.cfg.sample_1_in_n.max(1),
+            spans,
+            spans_dropped: self.dropped,
+            spans_open,
+            timeline: self.timeline,
+            timeline_dropped: self.timeline_dropped,
+            profile: self.profile,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(n: u64, cap: u64) -> ObsState {
+        let cfg = ObserveConfig {
+            sample_1_in_n: n,
+            max_spans: cap,
+            ..ObserveConfig::default()
+        };
+        ObsState::new(cfg, 42, 4, SimTime::ZERO)
+    }
+
+    #[test]
+    fn sample_every_request_opens_and_closes_spans() {
+        let mut o = state(1, 100);
+        o.on_submit(7, 0, "fn-0", SimTime::from_millis(1));
+        o.mark(7, Phase::Buffered, SimTime::from_millis(2));
+        o.mark(7, Phase::Dispatched, SimTime::from_millis(5));
+        o.close(7, SpanOutcome::Completed, Some(9.5), SimTime::from_millis(8));
+        let b = o.finish(QueueStats::default(), 10);
+        assert_eq!(b.spans.len(), 1);
+        let s = &b.spans[0];
+        assert_eq!(s.service, "fn-0");
+        assert_eq!(s.index, 0);
+        assert_eq!(s.outcome, SpanOutcome::Completed);
+        assert_eq!(s.marks.len(), 4);
+        assert_eq!(s.marked_ms(), 7.0);
+        assert!(s.marked_ms() <= s.latency_ms.unwrap());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed_and_service() {
+        let pick = |seed: u64| -> Vec<u64> {
+            let cfg = ObserveConfig {
+                sample_1_in_n: 4,
+                ..ObserveConfig::default()
+            };
+            let mut o = ObsState::new(cfg, seed, 4, SimTime::ZERO);
+            for i in 0..32u64 {
+                o.on_submit(i, 0, "fn-0", SimTime::from_millis(i));
+                o.close(i, SpanOutcome::Completed, Some(1.0), SimTime::from_millis(i + 1));
+            }
+            o.finish(QueueStats::default(), 0)
+                .spans
+                .iter()
+                .map(|s| s.index)
+                .collect()
+        };
+        let a = pick(42);
+        assert_eq!(a, pick(42), "same seed must sample identically");
+        assert_eq!(a.len(), 8, "1-in-4 of 32 arrivals");
+        // Offsets within blocks of 4 are congruent.
+        let off = a[0] % 4;
+        assert!(a.iter().all(|i| i % 4 == off));
+    }
+
+    #[test]
+    fn ring_bounds_memory_and_counts_drops() {
+        let mut o = state(1, 3);
+        for i in 0..10u64 {
+            o.on_submit(i, 0, "fn-0", SimTime::from_millis(i));
+            o.close(i, SpanOutcome::Completed, Some(1.0), SimTime::from_millis(i + 1));
+        }
+        let b = o.finish(QueueStats::default(), 0);
+        assert_eq!(b.spans.len(), 3);
+        assert_eq!(b.spans_dropped, 7);
+        // The ring keeps the newest spans.
+        assert_eq!(b.spans[0].index, 7);
+    }
+
+    #[test]
+    fn open_spans_truncate_at_finish() {
+        let mut o = state(1, 10);
+        o.on_submit(1, 0, "fn-0", SimTime::ZERO);
+        let b = o.finish(QueueStats::default(), 0);
+        assert_eq!(b.spans_open, 1);
+        assert_eq!(b.spans[0].outcome, SpanOutcome::Open);
+        assert_eq!(b.spans[0].latency_ms, None);
+    }
+
+    #[test]
+    fn merge_is_canonical_and_shard_invariant() {
+        let span = |svc: &str, idx: u64| Span {
+            service: svc.to_string(),
+            index: idx,
+            marks: vec![(Phase::Submitted, SimTime::ZERO)],
+            latency_ms: Some(1.0),
+            outcome: SpanOutcome::Completed,
+        };
+        let cell_a = ObsBundle {
+            sample_1_in_n: 1,
+            spans: vec![span("fn-1", 0), span("fn-1", 1)],
+            ..ObsBundle::default()
+        };
+        let cell_b = ObsBundle {
+            sample_1_in_n: 1,
+            spans: vec![span("fn-0", 0)],
+            ..ObsBundle::default()
+        };
+        let merged = ObsBundle::merge(vec![cell_a.clone(), cell_b.clone()]);
+        let merged_rev = ObsBundle::merge(vec![cell_b, cell_a]);
+        assert_eq!(merged, merged_rev);
+        assert_eq!(merged.spans[0].service, "fn-0");
+    }
+
+    #[test]
+    fn profile_merge_sums_counts_and_maxes_occupancy() {
+        let mut a = EventProfile::new(2);
+        a.record(0, std::time::Duration::from_nanos(5));
+        a.queue.max_bucket = 3;
+        let mut b = EventProfile::new(2);
+        b.record(0, std::time::Duration::from_nanos(7));
+        b.record(1, std::time::Duration::from_nanos(1));
+        b.queue.max_bucket = 9;
+        a.merge(&b);
+        assert_eq!(a.counts, vec![2, 1]);
+        assert_eq!(a.wall_ns[0], 12);
+        assert_eq!(a.queue.max_bucket, 9);
+    }
+
+    #[test]
+    fn fnv1a_separates_names() {
+        assert_ne!(fnv1a("fn-0"), fnv1a("fn-1"));
+        assert_eq!(fnv1a("fn-0"), fnv1a("fn-0"));
+    }
+}

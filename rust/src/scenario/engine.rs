@@ -37,13 +37,15 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::accounting::RoutingPolicy;
 use crate::experiments::fleet::{self, FleetConfig};
 use crate::experiments::policies::PolicyExperiment;
+use crate::obs::export::RunObs;
+use crate::obs::{ObsBundle, ObserveConfig};
 use crate::policy::Policy;
 use crate::scenario::report::{ScenarioReport, ScenarioRow};
 use crate::scenario::spec::{ScenarioSpec, SpecError, TopologySpec, WorkloadSource};
 use crate::simclock::SimTime;
 use crate::trace::generator::{TraceConfig, TraceEvent, TraceGenerator};
 use crate::trace::loader;
-use crate::trace::replay::{replay_with, ReplayConfig};
+use crate::trace::replay::{replay_with_observed, ReplayConfig};
 use crate::workload::registry::WorkloadKind;
 
 pub use crate::util::cli::MAX_THREADS;
@@ -87,6 +89,22 @@ impl ScenarioEngine {
         threads: usize,
         shards: Option<u32>,
     ) -> Result<ScenarioReport, SpecError> {
+        ScenarioEngine::run_observed(spec, threads, shards, None).map(|(r, _)| r)
+    }
+
+    /// [`run_with_options`] plus the observation plane. `observe` is the
+    /// *effective* config — the CLI resolves `--observe` vs the spec's
+    /// `observe` section before calling; the engine never falls back to
+    /// the spec on its own, so library entry points stay observation-free.
+    /// The report is byte-identical whether `observe` is set or not; the
+    /// per-run [`RunObs`] bundles come back in job order (the same order
+    /// rows land in the report).
+    pub fn run_observed(
+        spec: &ScenarioSpec,
+        threads: usize,
+        shards: Option<u32>,
+        observe: Option<&ObserveConfig>,
+    ) -> Result<(ScenarioReport, Vec<RunObs>), SpecError> {
         let shards = shards.or(spec.shards);
         if shards.is_some() {
             if let WorkloadSource::ClosedLoop { .. } = spec.workload {
@@ -117,12 +135,28 @@ impl ScenarioEngine {
                 }
             }
         }
-        let rows = execute(&prepared, &jobs, threads, shards)?;
-        Ok(ScenarioReport {
-            name: spec.name.clone(),
-            spec: spec.to_json(),
-            rows,
-        })
+        let (rows, bundles) = execute(&prepared, &jobs, threads, shards, observe)?;
+        let obs = jobs
+            .iter()
+            .zip(bundles)
+            .filter_map(|(job, bundle)| {
+                bundle.map(|bundle| RunObs {
+                    variant: prepared[job.variant].label.clone(),
+                    routing: job.routing.name().to_string(),
+                    policy: job.policy.name().to_string(),
+                    rep: job.rep,
+                    bundle,
+                })
+            })
+            .collect();
+        Ok((
+            ScenarioReport {
+                name: spec.name.clone(),
+                spec: spec.to_json(),
+                rows,
+            },
+            obs,
+        ))
     }
 
     /// The `kinetic exp` policy preset: a closed-loop spec as the exact
@@ -341,7 +375,8 @@ fn prepare_variant(label: String, spec: ScenarioSpec) -> Result<PreparedVariant,
     Ok(PreparedVariant { label, spec, trace })
 }
 
-/// Runs every job and returns the rows in job order. `threads <= 1` runs
+/// Runs every job and returns the rows (concatenated) plus one optional
+/// observation bundle per job, both in job order. `threads <= 1` runs
 /// inline (stopping at the first error, like the old serial loop);
 /// otherwise scoped workers pull jobs off a shared cursor and write into
 /// per-job slots, which serializes the output identically.
@@ -350,14 +385,18 @@ fn execute(
     jobs: &[Job],
     threads: usize,
     shards: Option<u32>,
-) -> Result<Vec<ScenarioRow>, SpecError> {
+    observe: Option<&ObserveConfig>,
+) -> Result<(Vec<ScenarioRow>, Vec<Option<ObsBundle>>), SpecError> {
     let workers = threads.clamp(1, MAX_THREADS).min(jobs.len().max(1));
     if workers <= 1 {
         let mut rows = Vec::new();
+        let mut bundles = Vec::new();
         for job in jobs {
-            rows.extend(run_job(&prepared[job.variant], job, shards)?);
+            let (r, b) = run_job(&prepared[job.variant], job, shards, observe)?;
+            rows.extend(r);
+            bundles.push(b);
         }
-        return Ok(rows);
+        return Ok((rows, bundles));
     }
     let cursor = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
@@ -376,7 +415,7 @@ fn execute(
                     break;
                 }
                 let job = &jobs[i];
-                let out = run_job(&prepared[job.variant], job, shards);
+                let out = run_job(&prepared[job.variant], job, shards, observe);
                 if out.is_err() {
                     failed.store(true, Ordering::Relaxed);
                 }
@@ -385,27 +424,35 @@ fn execute(
         }
     });
     let mut rows = Vec::new();
+    let mut bundles = Vec::new();
     for slot in results.into_inner().unwrap() {
         match slot {
-            Some(Ok(r)) => rows.extend(r),
+            Some(Ok((r, b))) => {
+                rows.extend(r);
+                bundles.push(b);
+            }
             Some(Err(e)) => return Err(e),
             // Skipped after a failure elsewhere; the error slot that
             // caused it is found by this same scan.
             None => {}
         }
     }
-    Ok(rows)
+    Ok((rows, bundles))
 }
 
 /// Executes one grid cell: a full deterministic simulation. Closed-loop
 /// cells expand to one row per Table-2 workload; everything else is one
 /// row per cell. The only fallible part is trace checkout (a missing or
-/// malformed trace file).
+/// malformed trace file). With `observe` set the cell's platform is armed
+/// over its measured window and the bundle rides back alongside the rows
+/// (closed-loop cells run the paper rig, which has no observation hooks —
+/// they return `None`).
 fn run_job(
     p: &PreparedVariant,
     job: &Job,
     shards: Option<u32>,
-) -> Result<Vec<ScenarioRow>, SpecError> {
+    observe: Option<&ObserveConfig>,
+) -> Result<(Vec<ScenarioRow>, Option<ObsBundle>), SpecError> {
     let v = &p.spec;
     let seed = v.seed.wrapping_add(u64::from(job.rep));
     Ok(match &v.workload {
@@ -428,11 +475,15 @@ fn run_job(
                 forecast: v.forecast,
                 faults: v.faults.clone(),
             };
-            let f = match shards {
-                Some(n) => crate::shard::run_policy_sharded(&cfg, job.policy, n),
-                None => fleet::run_policy(&cfg, job.policy),
+            let (f, bundle) = match shards {
+                Some(n) => {
+                    let (f, _, b) =
+                        crate::shard::run_policy_sharded_observed(&cfg, job.policy, n, observe);
+                    (f, b)
+                }
+                None => fleet::run_policy_observed(&cfg, job.policy, observe),
             };
-            vec![ScenarioRow {
+            let rows = vec![ScenarioRow {
                 scenario: v.name.clone(),
                 variant: p.label.clone(),
                 workload: "mix".to_string(),
@@ -456,7 +507,8 @@ fn run_job(
                 pods_evicted: f.pods_evicted,
                 pods_rescheduled: f.pods_rescheduled,
                 resize_failures: f.resize_failures,
-            }]
+            }];
+            (rows, bundle)
         }
         WorkloadSource::AzureGenerator { .. } | WorkloadSource::TraceFile { .. } => {
             let data = p
@@ -476,11 +528,11 @@ fn run_job(
                 faults: v.faults.clone(),
                 seed,
             };
-            let r = match shards {
-                Some(n) => crate::shard::replay_sharded(trace, &cfg, n),
-                None => replay_with(trace, &cfg),
+            let (r, bundle) = match shards {
+                Some(n) => crate::shard::replay_sharded_observed(trace, &cfg, n, observe),
+                None => replay_with_observed(trace, &cfg, observe),
             };
-            vec![ScenarioRow {
+            let rows = vec![ScenarioRow {
                 scenario: v.name.clone(),
                 variant: p.label.clone(),
                 workload: "trace".to_string(),
@@ -504,7 +556,8 @@ fn run_job(
                 pods_evicted: r.pods_evicted,
                 pods_rescheduled: r.pods_rescheduled,
                 resize_failures: r.resize_failures,
-            }]
+            }];
+            (rows, bundle)
         }
         WorkloadSource::ClosedLoop { iterations, think_s } => {
             let exp = PolicyExperiment {
@@ -513,7 +566,7 @@ fn run_job(
                 seed,
                 routing: job.routing,
             };
-            WorkloadKind::ALL
+            let rows = WorkloadKind::ALL
                 .iter()
                 .map(|&kind| {
                     let r = exp.measure_cell_report(kind, job.policy);
@@ -546,7 +599,8 @@ fn run_job(
                         resize_failures: 0,
                     }
                 })
-                .collect()
+                .collect();
+            (rows, None)
         }
     })
 }

@@ -64,6 +64,7 @@ pub fn fleet(
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
         faults: crate::faults::FaultsConfig::default(),
+        observe: None,
         shards: None,
         seed,
         reps: 1,
@@ -94,6 +95,7 @@ pub fn trace(functions: usize, seconds: u64, rate: f64, seed: u64) -> ScenarioSp
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
         faults: crate::faults::FaultsConfig::default(),
+        observe: None,
         shards: None,
         seed,
         reps: 1,
@@ -118,6 +120,7 @@ pub fn paper(reps: u32, seed: u64) -> ScenarioSpec {
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
         faults: crate::faults::FaultsConfig::default(),
+        observe: None,
         shards: None,
         seed,
         reps: 1,
@@ -143,6 +146,7 @@ pub fn smoke() -> ScenarioSpec {
         hybrid: HybridWeights::default(),
         forecast: ForecastConfig::default(),
         faults: crate::faults::FaultsConfig::default(),
+        observe: None,
         shards: None,
         seed: 42,
         reps: 1,

@@ -18,6 +18,7 @@ use crate::experiments::fleet::FLEET_MIX;
 use crate::faults::{CrashRequestPolicy, FaultsConfig, NodeCrash, Straggler};
 use crate::forecast::ForecastConfig;
 use crate::knative::config::ScaleKnobs;
+use crate::obs::ObserveConfig;
 use crate::policy::Policy;
 use crate::simclock::SimTime;
 use crate::trace::generator::RatePattern;
@@ -248,6 +249,11 @@ pub struct ScenarioSpec {
     /// inflation and probabilistic resize failures. Default (no `faults`
     /// section) is inert — specs without one keep byte-identical output.
     pub faults: FaultsConfig,
+    /// Observation plane (spans, timeline gauges, self-profiling). `None`
+    /// (no `observe` section) leaves the plane disarmed; arming it never
+    /// changes the report — observation is strictly read-only. The CLI
+    /// `--observe` flag arms the defaults when the section is absent.
+    pub observe: Option<ObserveConfig>,
     /// Worker shards for the sharded multi-coordinator runtime (`None` =
     /// the classic single-coordinator path). Reports are byte-identical at
     /// any shard count; the CLI `--shards` flag overrides this knob.
@@ -407,6 +413,7 @@ impl ScenarioSpec {
                 "hybrid_weights",
                 "forecast",
                 "faults",
+                "observe",
                 "shards",
                 "seed",
                 "reps",
@@ -453,6 +460,10 @@ impl ScenarioSpec {
             None => FaultsConfig::default(),
             Some(f) => parse_faults(f)?,
         };
+        let observe = match m.get("observe") {
+            None => None,
+            Some(o) => Some(parse_observe(o)?),
+        };
         let shards = match m.get("shards") {
             None => None,
             Some(_) => Some(check_range_u64(
@@ -478,6 +489,7 @@ impl ScenarioSpec {
             hybrid,
             forecast,
             faults,
+            observe,
             shards,
             seed,
             reps,
@@ -673,6 +685,12 @@ impl ScenarioSpec {
         if self.faults != FaultsConfig::default() {
             top.push(("faults", faults_to_json(&self.faults)));
         }
+        // The `observe` section is deliberately NEVER echoed: the canonical
+        // form feeds the spec echo inside every report, and the hard
+        // observability invariant is that an observe-on run's report is
+        // byte-for-byte identical to the observe-off run (artifacts land in
+        // sibling files instead). Round-tripping a spec therefore drops the
+        // section by design.
         // Unsharded specs omit the knob, keeping the canonical form (and
         // the spec echo inside every report) exactly as before sharding.
         if let Some(s) = self.shards {
@@ -1568,6 +1586,51 @@ fn faults_to_json(f: &FaultsConfig) -> Json {
     Json::obj(pairs)
 }
 
+/// Strictly parses the `observe` section. All knobs default (an empty
+/// `"observe": {}` arms the plane with defaults); the plane toggles are
+/// not spec-exposed — a spec arms all three.
+fn parse_observe(j: &Json) -> Result<ObserveConfig, SpecError> {
+    let m = as_obj(j, "observe")?;
+    check_keys(
+        m,
+        "observe",
+        &["sample_1_in_n", "max_spans", "timeline_cadence_s", "max_timeline"],
+    )?;
+    let d = ObserveConfig::default();
+    Ok(ObserveConfig {
+        sample_1_in_n: check_range_u64(
+            "observe.sample_1_in_n",
+            get_u64(m, "observe", "sample_1_in_n", d.sample_1_in_n)?,
+            1,
+            1_000_000,
+        )?,
+        max_spans: check_range_u64(
+            "observe.max_spans",
+            get_u64(m, "observe", "max_spans", d.max_spans)?,
+            1,
+            10_000_000,
+        )?,
+        timeline_cadence: SimTime::from_secs_f64(check_range_f64(
+            "observe.timeline_cadence_s",
+            get_f64(
+                m,
+                "observe",
+                "timeline_cadence_s",
+                d.timeline_cadence.as_secs_f64(),
+            )?,
+            1e-3,
+            1e5,
+        )?),
+        max_timeline: check_range_u64(
+            "observe.max_timeline",
+            get_u64(m, "observe", "max_timeline", d.max_timeline)?,
+            1,
+            10_000_000,
+        )?,
+        ..d
+    })
+}
+
 fn parse_sweep(j: &Json) -> Result<Vec<Sweep>, SpecError> {
     let arr = j
         .as_arr()
@@ -2046,6 +2109,69 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(e.contains("crash_down_s") && e.contains("node_crashes"), "{e}");
+    }
+
+    #[test]
+    fn observe_section_parses_strictly_and_never_echoes() {
+        // Empty section ⇒ defaults, armed.
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":4,
+                "rate_per_service":0.1,"horizon_s":30},"observe":{}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.observe, Some(ObserveConfig::default()));
+
+        // Explicit knobs land.
+        let s = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":4,
+                "rate_per_service":0.1,"horizon_s":30},
+                "observe":{"sample_1_in_n":8,"max_spans":1024,
+                           "timeline_cadence_s":0.5,"max_timeline":2048}}"#,
+        )
+        .unwrap();
+        let oc = s.observe.clone().unwrap();
+        assert_eq!(oc.sample_1_in_n, 8);
+        assert_eq!(oc.max_spans, 1024);
+        assert_eq!(oc.timeline_cadence, SimTime::from_millis(500));
+        assert_eq!(oc.max_timeline, 2048);
+        assert!(oc.spans && oc.timeline && oc.profile);
+
+        // The canonical form never grows an `observe` key — that is the
+        // mechanism behind observe-on/off report byte-identity. The echo of
+        // an observed spec is byte-identical to the same spec without the
+        // section.
+        let text = s.to_json().to_string_pretty();
+        assert!(!text.contains("observe"), "{text}");
+        let mut plain = s.clone();
+        plain.observe = None;
+        assert_eq!(text, plain.to_json().to_string_pretty());
+        assert_eq!(ScenarioSpec::parse(&text).unwrap().observe, None);
+
+        // Strictness: unknown keys and out-of-range values fail with paths.
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},
+                "observe":{"sample_one_in_n":8}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("observe") && e.contains("sample_1_in_n"), "{e}");
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},
+                "observe":{"sample_1_in_n":0}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("observe.sample_1_in_n") && e.contains("outside"), "{e}");
+        let e = ScenarioSpec::parse(
+            r#"{"name":"t","workload":{"type":"synthetic","services":1,
+                "rate_per_service":1,"horizon_s":1},
+                "observe":{"timeline_cadence_s":0}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("observe.timeline_cadence_s"), "{e}");
     }
 
     #[test]

@@ -21,4 +21,7 @@ pub mod plan;
 pub mod runtime;
 
 pub use plan::{stable_hash, ShardPlan, MANIFEST_KIND, MANIFEST_SCHEMA_VERSION};
-pub use runtime::{replay_sharded, run_policy_sharded, run_policy_sharded_counting};
+pub use runtime::{
+    replay_sharded, replay_sharded_observed, run_policy_sharded, run_policy_sharded_counting,
+    run_policy_sharded_observed,
+};

@@ -47,6 +47,7 @@ use crate::experiments::fleet::{FleetConfig, FleetRow, FLEET_MIX};
 use crate::faults::FaultsConfig;
 use crate::knative::config::RevisionConfig;
 use crate::loadgen::arrival::Arrival;
+use crate::obs::{ObsBundle, ObserveConfig};
 use crate::policy::{PlatformParams, Policy};
 use crate::shard::plan::ShardPlan;
 use crate::simclock::SimTime;
@@ -309,7 +310,16 @@ fn merge(cells: &[Cell]) -> Merged {
         wall: SimTime::ZERO,
     };
     for cell in cells.iter() {
-        let now = cell.sim.engine.now();
+        // The window-partition-invariant end-of-run clock: the engine's
+        // `now` lands on the final sync-window deadline (and observed
+        // runs window past the workload on trailing ObsTicks), so merge
+        // at the last real event instead — identical whether or not the
+        // run was observed, and at any shard count.
+        let now = cell
+            .sim
+            .world
+            .obs_end_clock()
+            .unwrap_or_else(|| cell.sim.engine.last_processed_at());
         let metrics = &cell.sim.world.metrics;
         for (_, s) in metrics.services() {
             m.completed += s.completed;
@@ -333,6 +343,38 @@ fn merge(cells: &[Cell]) -> Merged {
     m
 }
 
+/// Arms every cell's observation plane with the *scenario* seed (not the
+/// cell seed): the sampler keys on (seed, service name) with per-service
+/// counters, so arming each cell identically reproduces the serial path's
+/// sampling decisions no matter where a service is homed.
+fn arm_cells(cells: &mut [Cell], observe: Option<&ObserveConfig>, seed: u64) {
+    let Some(oc) = observe else { return };
+    for cell in cells.iter_mut() {
+        let origin = cell.sim.engine.now();
+        cell.sim.world.arm_obs(oc.clone(), seed, origin);
+        if oc.timeline {
+            cell.sim.engine.schedule_in(oc.timeline_cadence, Event::ObsTick);
+        }
+    }
+}
+
+/// Harvests per-cell bundles in canonical cell (node index) order and
+/// merges them, so the observation output is identical at any `--shards N`.
+fn harvest_cells(cells: &mut [Cell], observed: bool) -> Option<ObsBundle> {
+    if !observed {
+        return None;
+    }
+    let bundles: Vec<ObsBundle> = cells
+        .iter_mut()
+        .filter_map(|c| {
+            let queue = c.sim.engine.queue_stats();
+            let processed = c.sim.engine.processed();
+            c.sim.world.take_obs().map(|o| o.finish(queue, processed))
+        })
+        .collect();
+    Some(ObsBundle::merge(bundles))
+}
+
 /// Sharded counterpart of [`fleet::run_policy`](crate::experiments::fleet::run_policy):
 /// the same synthetic open-loop fleet, partitioned one cell per node.
 pub fn run_policy_sharded(cfg: &FleetConfig, policy: Policy, shards: u32) -> FleetRow {
@@ -346,6 +388,18 @@ pub fn run_policy_sharded_counting(
     policy: Policy,
     shards: u32,
 ) -> (FleetRow, u64) {
+    let (row, events, _) = run_policy_sharded_observed(cfg, policy, shards, None);
+    (row, events)
+}
+
+/// [`run_policy_sharded_counting`] plus an optional observation plane,
+/// armed per cell and merged in canonical cell order.
+pub fn run_policy_sharded_observed(
+    cfg: &FleetConfig,
+    policy: Policy,
+    shards: u32,
+    observe: Option<&ObserveConfig>,
+) -> (FleetRow, u64, Option<ObsBundle>) {
     let plan = ShardPlan::new(&cfg.topology, shards);
     let la = lookahead(&PlatformParams::with_seed(cfg.seed));
     let mut cells = build_cells(&cfg.topology, cfg.seed);
@@ -375,6 +429,7 @@ pub fn run_policy_sharded_counting(
         cell.sim.run(); // settle: min-scale pods up / in-place pods parked
         cell.settle = cell.sim.now();
     }
+    arm_cells(&mut cells, observe, cfg.seed);
 
     // Open-loop Poisson stream per tenant — the exact per-service seeds of
     // the serial path, injected upfront into the home cell.
@@ -399,7 +454,10 @@ pub fn run_policy_sharded_counting(
 
     drive(&mut cells, &plan, &templates, la);
 
+    // Merge before harvesting: the merge clock reads the observation
+    // state's last-real-event time, which take_obs detaches.
     let mut m = merge(&cells);
+    let bundle = harvest_cells(&mut cells, observe.is_some());
     let events = cells.iter().map(|c| c.sim.engine.processed()).sum();
     let row = FleetRow {
         policy,
@@ -422,13 +480,24 @@ pub fn run_policy_sharded_counting(
         pods_rescheduled: m.pods_rescheduled,
         resize_failures: m.resize_failures,
     };
-    (row, events)
+    (row, events, bundle)
 }
 
 /// Sharded counterpart of [`replay_with`](crate::trace::replay::replay_with):
 /// the same trace replay, one cell per topology node, functions homed by
 /// rank name.
 pub fn replay_sharded(trace: &[TraceEvent], cfg: &ReplayConfig, shards: u32) -> ReplayReport {
+    replay_sharded_observed(trace, cfg, shards, None).0
+}
+
+/// [`replay_sharded`] plus an optional observation plane, armed per cell
+/// and merged in canonical cell order.
+pub fn replay_sharded_observed(
+    trace: &[TraceEvent],
+    cfg: &ReplayConfig,
+    shards: u32,
+    observe: Option<&ObserveConfig>,
+) -> (ReplayReport, Option<ObsBundle>) {
     let plan = ShardPlan::new(&cfg.topology, shards);
     let la = lookahead(&PlatformParams::with_seed(cfg.seed));
     let mut cells = build_cells(&cfg.topology, cfg.seed);
@@ -466,6 +535,7 @@ pub fn replay_sharded(trace: &[TraceEvent], cfg: &ReplayConfig, shards: u32) -> 
         cell.sim.run();
         cell.settle = cell.sim.now();
     }
+    arm_cells(&mut cells, observe, cfg.seed);
 
     for ev in trace {
         let name = &names[&ev.function];
@@ -482,8 +552,11 @@ pub fn replay_sharded(trace: &[TraceEvent], cfg: &ReplayConfig, shards: u32) -> 
 
     drive(&mut cells, &plan, &templates, la);
 
+    // Merge before harvesting: the merge clock reads the observation
+    // state's last-real-event time, which take_obs detaches.
     let mut m = merge(&cells);
-    ReplayReport {
+    let bundle = harvest_cells(&mut cells, observe.is_some());
+    let report = ReplayReport {
         policy: cfg.policy,
         completed: m.completed,
         failed: m.failed,
@@ -501,7 +574,8 @@ pub fn replay_sharded(trace: &[TraceEvent], cfg: &ReplayConfig, shards: u32) -> 
         pods_rescheduled: m.pods_rescheduled,
         resize_failures: m.resize_failures,
         wall: m.wall,
-    }
+    };
+    (report, bundle)
 }
 
 #[cfg(test)]

@@ -30,6 +30,19 @@ const MIN_BUCKETS: usize = 16;
 /// Starting bucket width: 1 ms of virtual time.
 const INITIAL_WIDTH_NS: u64 = 1_000_000;
 
+/// Internal activity counters for the self-profiling plane — plain `u64`
+/// bumps on paths the queue takes anyway, so they cost nothing measurable
+/// and never affect scheduling behavior.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QueueStats {
+    /// Adaptive resizes (grow + shrink re-hashes).
+    pub rebuilds: u64,
+    /// Entries examined by bucket scans (`find_min` work).
+    pub entry_scans: u64,
+    /// Largest bucket occupancy ever reached.
+    pub max_bucket: u64,
+}
+
 struct Entry<T> {
     at: u64,
     seq: u64,
@@ -69,6 +82,7 @@ pub struct CalendarQueue<T> {
     slots: Vec<Slot>,
     free: Vec<u32>,
     cached: Option<MinLoc>,
+    stats: QueueStats,
 }
 
 impl<T> Default for CalendarQueue<T> {
@@ -88,7 +102,13 @@ impl<T> CalendarQueue<T> {
             slots: Vec::new(),
             free: Vec::new(),
             cached: None,
+            stats: QueueStats::default(),
         }
+    }
+
+    /// Snapshot of the internal activity counters.
+    pub fn stats(&self) -> QueueStats {
+        self.stats
     }
 
     /// Live (non-cancelled) entries.
@@ -136,6 +156,7 @@ impl<T> CalendarQueue<T> {
         });
         self.queued += 1;
         self.live += 1;
+        self.stats.max_bucket = self.stats.max_bucket.max(self.buckets[b].len() as u64);
         // A pushed entry never shifts existing indices, so the memoized min
         // survives unless the newcomer beats it (equal `at` loses on seq).
         if self.cached.is_some_and(|c| at < c.at) {
@@ -264,6 +285,7 @@ impl<T> CalendarQueue<T> {
         let mut best: Option<MinLoc> = None;
         let mut i = 0;
         while i < self.buckets[b].len() {
+            self.stats.entry_scans += 1;
             let e = &self.buckets[b][i];
             let (slot, at, seq) = (e.slot, e.at, e.seq);
             if !self.slots[slot as usize].armed {
@@ -301,6 +323,7 @@ impl<T> CalendarQueue<T> {
     /// cancelled entries outright.
     fn rebuild(&mut self, nbuckets: usize) {
         let nbuckets = nbuckets.max(MIN_BUCKETS);
+        self.stats.rebuilds += 1;
         let mut entries: Vec<Entry<T>> = Vec::with_capacity(self.live);
         for bucket in &mut self.buckets {
             while let Some(e) = bucket.pop() {
@@ -439,6 +462,22 @@ mod tests {
         assert_eq!(q.peek_at(), Some(SimTime::from_nanos(u64::MAX - 1)));
         assert_eq!(q.pop().map(|(_, v)| v), Some(99));
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn stats_track_rebuilds_scans_and_occupancy() {
+        let mut q = CalendarQueue::new();
+        assert_eq!(q.stats(), QueueStats::default());
+        for i in 0..5_000u64 {
+            q.schedule(SimTime::from_micros(i * 37 % 10_000), i, i as u32);
+        }
+        let after_fill = q.stats();
+        assert!(after_fill.rebuilds > 0, "growth must rebuild");
+        assert!(after_fill.max_bucket > 0);
+        drain(&mut q);
+        let after_drain = q.stats();
+        assert!(after_drain.entry_scans > 0, "pops must scan entries");
+        assert!(after_drain.rebuilds >= after_fill.rebuilds);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! bit-for-bit the same order as the retained BinaryHeap reference in
 //! [`oracle`](super::oracle) (pinned by `tests/engine_diff.rs`).
 
-use super::calendar::CalendarQueue;
+use super::calendar::{CalendarQueue, QueueStats};
 use super::clock::SimTime;
 
 /// World state driven by an [`Engine`]: declares the event alphabet and
@@ -58,6 +58,7 @@ pub struct Engine<W: World> {
     queue: CalendarQueue<W::Event>,
     next_seq: u64,
     processed: u64,
+    last_processed_at: SimTime,
 }
 
 impl<W: World> Default for Engine<W> {
@@ -73,6 +74,7 @@ impl<W: World> Engine<W> {
             queue: CalendarQueue::new(),
             next_seq: 0,
             processed: 0,
+            last_processed_at: SimTime::ZERO,
         }
     }
 
@@ -86,9 +88,25 @@ impl<W: World> Engine<W> {
         self.processed
     }
 
+    /// Virtual time of the most recently executed event. Unlike [`now`],
+    /// this never advances on an eventless `run_until` — it is the
+    /// window-partition-invariant end-of-run clock the sharded runtime
+    /// merges metrics at (`Engine::now` lands on the final sync-window
+    /// deadline instead, which depends on how the run was windowed).
+    ///
+    /// [`now`]: Engine::now
+    pub fn last_processed_at(&self) -> SimTime {
+        self.last_processed_at
+    }
+
     /// Pending (non-cancelled) events — exact.
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Calendar-queue activity counters (self-profiling plane).
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
     }
 
     /// Virtual time of the earliest pending event, if any. Lets a windowed
@@ -126,6 +144,7 @@ impl<W: World> Engine<W> {
         while let Some((at, ev)) = self.queue.pop() {
             debug_assert!(at >= self.now, "time went backwards");
             self.now = at;
+            self.last_processed_at = at;
             self.processed += 1;
             world.handle(ev, self);
         }
@@ -142,6 +161,7 @@ impl<W: World> Engine<W> {
             }
             let (at, ev) = self.queue.pop().expect("peeked event vanished");
             self.now = at;
+            self.last_processed_at = at;
             self.processed += 1;
             world.handle(ev, self);
         }
@@ -153,6 +173,7 @@ impl<W: World> Engine<W> {
     pub fn step(&mut self, world: &mut W) -> Option<SimTime> {
         let (at, ev) = self.queue.pop()?;
         self.now = at;
+        self.last_processed_at = at;
         self.processed += 1;
         world.handle(ev, self);
         Some(self.now)

@@ -17,6 +17,6 @@ mod clock;
 mod engine;
 pub mod oracle;
 
-pub use calendar::CalendarQueue;
+pub use calendar::{CalendarQueue, QueueStats};
 pub use clock::SimTime;
 pub use engine::{Engine, EventId, Scheduled, World};

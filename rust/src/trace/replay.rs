@@ -12,9 +12,11 @@ use std::collections::BTreeMap;
 
 use crate::cluster::topology::Topology;
 use crate::coordinator::accounting::{HybridWeights, RoutingPolicy};
+use crate::coordinator::event::Event;
 use crate::coordinator::platform::Simulation;
 use crate::forecast::ForecastConfig;
 use crate::knative::config::ScaleKnobs;
+use crate::obs::{ObsBundle, ObserveConfig};
 use crate::policy::{PlatformParams, Policy};
 use crate::simclock::SimTime;
 use crate::trace::generator::{TraceEvent, TraceGenerator};
@@ -99,6 +101,18 @@ pub fn replay(
 
 /// Replays `trace` under an arbitrary topology / routing / knob bundle.
 pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
+    replay_with_observed(trace, cfg, None).0
+}
+
+/// [`replay_with`] plus an optional observation plane. With `observe` set,
+/// the platform is armed after the settle run so the span/timeline window
+/// covers exactly the replayed arrivals; the report is byte-identical to
+/// the unobserved run either way.
+pub fn replay_with_observed(
+    trace: &[TraceEvent],
+    cfg: &ReplayConfig,
+    observe: Option<&ObserveConfig>,
+) -> (ReplayReport, Option<ObsBundle>) {
     let mut sim = Simulation::fleet_with_params(
         cfg.topology.clone(),
         PlatformParams::with_seed(cfg.seed),
@@ -127,6 +141,16 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
     }
     sim.run(); // bring up min-scale pods
 
+    // Arm observation at the start of the measured window (after settle)
+    // so spans and gauges cover the replayed arrivals only.
+    if let Some(oc) = observe {
+        let origin = sim.now();
+        sim.world.arm_obs(oc.clone(), cfg.seed, origin);
+        if oc.timeline {
+            sim.engine.schedule_in(oc.timeline_cadence, Event::ObsTick);
+        }
+    }
+
     let start = sim.now();
     for ev in trace {
         sim.submit_at(start + ev.at, &names[&ev.function]);
@@ -136,7 +160,14 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
     sim.world.install_faults(&mut sim.engine, &cfg.faults);
     sim.run();
 
-    let now = sim.now();
+    // Observed runs harvest at the last *real* event: trailing ObsTicks
+    // advance the engine clock past the workload, and the time-averaged
+    // gauges below must cover exactly the unobserved run's span.
+    let now = sim.world.obs_end_clock().unwrap_or_else(|| sim.now());
+    let bundle = sim
+        .world
+        .take_obs()
+        .map(|o| o.finish(sim.engine.queue_stats(), sim.engine.processed()));
     let mut lat = Samples::new();
     let mut completed = 0;
     let mut failed = 0;
@@ -155,7 +186,7 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
             lat.record(v);
         }
     }
-    ReplayReport {
+    let report = ReplayReport {
         policy: cfg.policy,
         completed,
         failed,
@@ -173,7 +204,8 @@ pub fn replay_with(trace: &[TraceEvent], cfg: &ReplayConfig) -> ReplayReport {
         pods_rescheduled: sim.world.metrics.pods_rescheduled,
         resize_failures: sim.world.metrics.resize_failures,
         wall: now.saturating_sub(start),
-    }
+    };
+    (report, bundle)
 }
 
 #[cfg(test)]

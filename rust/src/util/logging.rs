@@ -1,19 +1,60 @@
-//! Per-run verbosity for the CLI and examples.
+//! Structured, level-tagged diagnostics for the CLI and examples.
 //!
 //! Self-contained on purpose: the crate is dependency-free (see
 //! `Cargo.toml`), so this module cannot use the `log` facade crate — an
 //! earlier revision did, which made `cargo build` impossible with the
-//! empty `[dependencies]` table (and nothing ever emitted through the
-//! facade anyway, so `--verbose` was a no-op even then). Today the
-//! platform prints its diagnostics straight to stderr unconditionally;
-//! this knob is where future rate-limited/debug output should check
-//! before printing, kept so `kinetic exp --verbose` stays wired.
+//! empty `[dependencies]` table. Instead, [`log_event!`] routes through
+//! this module: a message prints to stderr when its [`Level`] clears the
+//! run verbosity, and is *counted* per level when the observation sink is
+//! armed (the counts land in the `scenario_<name>_obs.json` summary).
+//!
+//! The disabled path is a guaranteed no-op: the macro checks
+//! [`armed`]/[`enabled`] before building `format_args!`, so with the sink
+//! disarmed and the level filtered there is no formatting and no
+//! allocation — safe to leave on paths near the simulation hot loop.
+//! Counts are process-global; the CLI arms the sink only around a single
+//! scenario run, never in library code, so parallel tests stay isolated.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+
+/// Diagnostic severity. The numeric value is both the count-array slot and
+/// the verbosity rank (a level is visible when `index < verbosity`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub const ALL: [Level; 4] = [Level::Error, Level::Warn, Level::Info, Level::Debug];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
 
 static VERBOSITY: AtomicU8 = AtomicU8::new(1);
+static SINK_ARMED: AtomicBool = AtomicBool::new(false);
+static COUNTS: [AtomicU64; 4] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
 
-/// Sets verbosity 0..=4 (error..trace). Idempotent.
+/// Sets verbosity 0..=4 (0 silent, 1 errors, … 4 debug). Idempotent.
 pub fn init(verbosity: u8) {
     VERBOSITY.store(verbosity, Ordering::Relaxed);
 }
@@ -21,6 +62,60 @@ pub fn init(verbosity: u8) {
 /// Current verbosity level.
 pub fn verbosity() -> u8 {
     VERBOSITY.load(Ordering::Relaxed)
+}
+
+/// Would a message at `level` print to stderr right now?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level.index() as u8) < VERBOSITY.load(Ordering::Relaxed)
+}
+
+/// Is the observation sink counting emissions?
+#[inline]
+pub fn armed() -> bool {
+    SINK_ARMED.load(Ordering::Relaxed)
+}
+
+/// Arms the per-level emission counters (CLI-only, around one run).
+pub fn arm_sink() {
+    for c in &COUNTS {
+        c.store(0, Ordering::Relaxed);
+    }
+    SINK_ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarms the sink and returns the per-level counts
+/// (`[error, warn, info, debug]`) accumulated since [`arm_sink`].
+pub fn drain_sink() -> [u64; 4] {
+    SINK_ARMED.store(false, Ordering::Relaxed);
+    let mut out = [0u64; 4];
+    for (i, c) in COUNTS.iter().enumerate() {
+        out[i] = c.swap(0, Ordering::Relaxed);
+    }
+    out
+}
+
+/// Emission backend for [`log_event!`] — call through the macro so the
+/// disabled path never reaches here.
+pub fn note(level: Level, message: std::fmt::Arguments<'_>) {
+    if armed() {
+        COUNTS[level.index()].fetch_add(1, Ordering::Relaxed);
+    }
+    if enabled(level) {
+        eprintln!("[{}] {}", level.name(), message);
+    }
+}
+
+/// Level-tagged structured emission. Checks [`armed`]/[`enabled`] *before*
+/// constructing the format arguments, so a filtered call does no
+/// formatting and no allocation.
+#[macro_export]
+macro_rules! log_event {
+    ($level:expr, $($arg:tt)*) => {
+        if $crate::util::logging::armed() || $crate::util::logging::enabled($level) {
+            $crate::util::logging::note($level, format_args!($($arg)*));
+        }
+    };
 }
 
 #[cfg(test)]
@@ -35,5 +130,29 @@ mod tests {
         assert_eq!(verbosity(), 3);
         init(1);
         assert_eq!(verbosity(), 1);
+    }
+
+    #[test]
+    fn level_ranks_and_names_are_stable() {
+        assert_eq!(Level::Error.index(), 0);
+        assert_eq!(Level::Debug.index(), 3);
+        let names: Vec<&str> = Level::ALL.iter().map(|l| l.name()).collect();
+        assert_eq!(names, vec!["error", "warn", "info", "debug"]);
+    }
+
+    #[test]
+    fn sink_counts_per_level_and_drains() {
+        arm_sink();
+        assert!(armed());
+        log_event!(Level::Warn, "w {}", 1);
+        log_event!(Level::Warn, "w {}", 2);
+        log_event!(Level::Debug, "d");
+        let counts = drain_sink();
+        assert!(!armed());
+        assert_eq!(counts[Level::Warn.index()], 2);
+        assert_eq!(counts[Level::Debug.index()], 1);
+        assert_eq!(counts[Level::Error.index()], 0);
+        // Draining resets: a second drain is all zeroes.
+        assert_eq!(drain_sink(), [0; 4]);
     }
 }

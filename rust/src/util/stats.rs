@@ -308,6 +308,112 @@ impl LogHistogram {
     }
 }
 
+/// Streaming twin of [`Samples`]: count/sum/min/max plus a fixed-bucket
+/// linear histogram. O(1) record, constant memory, mergeable — the shape
+/// the observability artifacts aggregate with, where a full reservoir per
+/// sampled dimension would defeat the bounded-memory discipline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamStats {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// `buckets[i]` counts values in `[i·width, (i+1)·width)`; the last
+    /// bucket absorbs everything beyond the covered range.
+    buckets: Vec<u64>,
+    width: f64,
+}
+
+impl Default for StreamStats {
+    /// 64 × 250 ms buckets — covers request latencies up to 16 s linearly.
+    fn default() -> StreamStats {
+        StreamStats::new(64, 250.0)
+    }
+}
+
+impl StreamStats {
+    pub fn new(buckets: usize, width: f64) -> StreamStats {
+        assert!(buckets > 0 && width > 0.0);
+        StreamStats {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: vec![0; buckets],
+            width,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let i = if x <= 0.0 {
+            0
+        } else {
+            ((x / self.width) as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[i] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn bucket_width(&self) -> f64 {
+        self.width
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    pub fn merge(&mut self, other: &StreamStats) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        assert_eq!(self.width, other.width);
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +507,48 @@ mod tests {
         assert_eq!(a.count(), 1000);
         let p50 = a.percentile(50.0);
         assert!((p50 - 500.0).abs() / 500.0 < 0.08, "p50={p50}");
+    }
+
+    #[test]
+    fn stream_stats_tracks_moments_and_buckets() {
+        let mut s = StreamStats::new(4, 10.0);
+        for x in [0.0, 5.0, 15.0, 25.0, 1000.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.sum(), 1045.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 1000.0);
+        assert_eq!(s.mean(), 209.0);
+        // [0,10) ×2, [10,20) ×1, [20,30) ×1, overflow ×1.
+        assert_eq!(s.bucket_counts(), &[2, 1, 1, 1]);
+    }
+
+    #[test]
+    fn stream_stats_merge_equals_concat() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 3.7).collect();
+        let mut whole = StreamStats::new(8, 20.0);
+        let mut a = StreamStats::new(8, 20.0);
+        let mut b = StreamStats::new(8, 20.0);
+        for (i, &x) in xs.iter().enumerate() {
+            whole.record(x);
+            if i % 2 == 0 {
+                a.record(x)
+            } else {
+                b.record(x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn empty_stream_stats_is_zeroes() {
+        let s = StreamStats::default();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
     }
 
     #[test]

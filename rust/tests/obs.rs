@@ -1,0 +1,237 @@
+//! Integration locks for the observation plane (`obs/`):
+//!
+//! 1. The hard invariant — arming observation changes NOTHING about the
+//!    scenario report: byte-identical to the plain run at every
+//!    `--threads` × `--shards` combination.
+//! 2. Sharded observation: the span-plane artifacts (summary, Chrome
+//!    trace, spans JSONL) are identical at any shard count thanks to
+//!    window-relative timestamps and canonical merge order. The timeline
+//!    plane is pinned deterministic for a *fixed* shard count (its
+//!    per-node vectors are partitioned per cell, so cross-count identity
+//!    is structurally impossible — see `write_obs_artifacts` in main.rs).
+//! 3. Export schema round-trips through the strict validators; unknown
+//!    keys and wrong kinds are rejected with their path.
+//! 4. Physics: the telescoped phase marks of a span never exceed the
+//!    end-to-end latency the report records for it.
+//! 5. `sample_1_in_n` is deterministic per seed: reruns pick the same
+//!    spans, and every kept index within a service shares one residue.
+
+use kinetic::coordinator::event::Event;
+use kinetic::obs::export;
+use kinetic::obs::{ObserveConfig, SpanOutcome};
+use kinetic::scenario::{ScenarioEngine, ScenarioReport, ScenarioSpec};
+use kinetic::util::json::Json;
+
+fn spec() -> ScenarioSpec {
+    ScenarioSpec::parse(
+        r#"{
+        "name": "obs-lock",
+        "workload": {"type": "synthetic", "services": 4,
+                     "rate_per_service": 0.3, "horizon_s": 60},
+        "topology": {"kind": "uniform", "nodes": 4},
+        "policies": ["warm", "in-place"]
+    }"#,
+    )
+    .unwrap()
+}
+
+fn bytes(r: &ScenarioReport) -> Vec<u8> {
+    r.to_json().to_string_pretty().into_bytes()
+}
+
+/// The invariant the whole subsystem hangs off: observation is read-only.
+/// For every threads × shards combination, the observed report is
+/// byte-for-byte the plain report.
+#[test]
+fn observed_report_is_byte_identical_to_plain() {
+    let spec = spec();
+    let cfg = ObserveConfig::default();
+    for threads in [1usize, 4] {
+        for shards in [None, Some(1u32), Some(4)] {
+            let plain = ScenarioEngine::run_with_options(&spec, threads, shards).unwrap();
+            let (observed, obs) =
+                ScenarioEngine::run_observed(&spec, threads, shards, Some(&cfg)).unwrap();
+            assert_eq!(
+                bytes(&plain),
+                bytes(&observed),
+                "report diverged under observation at threads={threads} shards={shards:?}"
+            );
+            assert_eq!(
+                obs.len(),
+                observed.rows.len(),
+                "one bundle per run at threads={threads} shards={shards:?}"
+            );
+            assert!(
+                obs.iter().all(|r| !r.bundle.spans.is_empty()),
+                "every run must close spans at threads={threads} shards={shards:?}"
+            );
+        }
+    }
+}
+
+/// Span-plane artifacts are identical at any shard count: per-cell trace
+/// buffers merge in canonical (service, index) order and every timestamp
+/// is window-relative, so per-cell settle jitter cancels out.
+#[test]
+fn span_artifacts_are_identical_across_shard_counts() {
+    let spec = spec();
+    let cfg = ObserveConfig {
+        timeline: false,
+        ..ObserveConfig::default()
+    };
+    let (_, one) = ScenarioEngine::run_observed(&spec, 1, Some(1), Some(&cfg)).unwrap();
+    for n in [2u32, 4] {
+        let (_, many) = ScenarioEngine::run_observed(&spec, 1, Some(n), Some(&cfg)).unwrap();
+        assert_eq!(
+            export::summary_doc("obs-lock", &one, &[0; 4]).to_string_pretty(),
+            export::summary_doc("obs-lock", &many, &[0; 4]).to_string_pretty(),
+            "summary diverged at --shards {n}"
+        );
+        assert_eq!(
+            export::trace_doc(&one).to_string_pretty(),
+            export::trace_doc(&many).to_string_pretty(),
+            "Chrome trace diverged at --shards {n}"
+        );
+        assert_eq!(
+            export::spans_jsonl(&one),
+            export::spans_jsonl(&many),
+            "spans JSONL diverged at --shards {n}"
+        );
+    }
+}
+
+/// The timeline plane is deterministic for a fixed shard count: two runs
+/// of the same spec at the same count produce identical gauges.
+#[test]
+fn timeline_is_deterministic_for_a_fixed_shard_count() {
+    let spec = spec();
+    let cfg = ObserveConfig::default();
+    for shards in [None, Some(2u32)] {
+        let (_, a) = ScenarioEngine::run_observed(&spec, 1, shards, Some(&cfg)).unwrap();
+        let (_, b) = ScenarioEngine::run_observed(&spec, 1, shards, Some(&cfg)).unwrap();
+        assert!(
+            a.iter().any(|r| !r.bundle.timeline.is_empty()),
+            "cadence sampler must record gauges at shards={shards:?}"
+        );
+        assert_eq!(
+            export::timeline_doc("obs-lock", &a).to_string_pretty(),
+            export::timeline_doc("obs-lock", &b).to_string_pretty(),
+            "timeline JSON not deterministic at shards={shards:?}"
+        );
+        assert_eq!(
+            export::timeline_csv(&a),
+            export::timeline_csv(&b),
+            "timeline CSV not deterministic at shards={shards:?}"
+        );
+    }
+}
+
+/// Every export surface round-trips its own strict validator, and the
+/// validators reject unknown keys and foreign kinds with their path.
+#[test]
+fn exports_validate_and_reject_unknown_keys() {
+    let spec = spec();
+    let cfg = ObserveConfig::default();
+    let (_, obs) = ScenarioEngine::run_observed(&spec, 1, None, Some(&cfg)).unwrap();
+
+    let summary = export::summary_doc("obs-lock", &obs, &[0, 1, 2, 3]);
+    export::validate_summary(&summary).expect("summary must self-validate");
+    let trace = export::trace_doc(&obs);
+    export::validate_trace(&trace).expect("trace must self-validate");
+    let timeline = export::timeline_doc("obs-lock", &obs);
+    export::validate_timeline(&timeline).expect("timeline must self-validate");
+    let profile = export::profile_doc(&obs[0].bundle.profile, &Event::KINDS);
+    export::validate_profile(&profile).expect("profile must self-validate");
+
+    // Unknown top-level key: strict parse refuses it by name.
+    let mut doctored = summary.clone();
+    if let Json::Obj(map) = &mut doctored {
+        map.insert("surprise".into(), Json::Bool(true));
+    }
+    let e = export::validate_summary(&doctored).unwrap_err();
+    assert!(e.contains("surprise"), "must name the unknown key: {e}");
+
+    // Foreign kind: a timeline document is not a summary document.
+    let e = export::validate_summary(&timeline).unwrap_err();
+    assert!(e.contains("kind"), "must flag the kind mismatch: {e}");
+
+    // Unknown key nested inside a run entry is rejected too.
+    let mut doctored = summary;
+    if let Json::Obj(map) = &mut doctored {
+        if let Some(Json::Arr(runs)) = map.get_mut("runs") {
+            if let Some(Json::Obj(run)) = runs.first_mut() {
+                run.insert("extra".into(), Json::Num(1.0));
+            }
+        }
+    }
+    let e = export::validate_summary(&doctored).unwrap_err();
+    assert!(e.contains("extra"), "must name the nested unknown key: {e}");
+}
+
+/// A span's marks telescope: the interval from first to last mark can
+/// never exceed the end-to-end latency the report records (the report's
+/// latency additionally includes the proxy respond hop).
+#[test]
+fn phase_marks_telescope_within_latency() {
+    let spec = spec();
+    let cfg = ObserveConfig::default();
+    let (_, obs) = ScenarioEngine::run_observed(&spec, 1, None, Some(&cfg)).unwrap();
+    let mut completed = 0u64;
+    for run in &obs {
+        for span in &run.bundle.spans {
+            assert!(
+                span.marks.windows(2).all(|w| w[0].1 <= w[1].1),
+                "marks must be time-ordered: {}#{}",
+                span.service,
+                span.index
+            );
+            if let Some(latency) = span.latency_ms {
+                assert_eq!(span.outcome, SpanOutcome::Completed);
+                assert!(
+                    span.marked_ms() <= latency + 1e-6,
+                    "{}#{}: marked {} ms exceeds end-to-end {} ms",
+                    span.service,
+                    span.index,
+                    span.marked_ms(),
+                    latency
+                );
+                completed += 1;
+            }
+        }
+    }
+    assert!(completed > 0, "the run must complete observed requests");
+}
+
+/// `sample_1_in_n` rides the seeded RNG discipline: reruns are identical,
+/// and the kept indices of each service share a single residue mod n —
+/// the per-service offset drawn from the observation seed.
+#[test]
+fn sampling_is_deterministic_per_seed() {
+    let spec = spec();
+    let cfg = ObserveConfig {
+        sample_1_in_n: 4,
+        ..ObserveConfig::default()
+    };
+    let (_, a) = ScenarioEngine::run_observed(&spec, 1, None, Some(&cfg)).unwrap();
+    let (_, b) = ScenarioEngine::run_observed(&spec, 1, None, Some(&cfg)).unwrap();
+    assert_eq!(
+        export::spans_jsonl(&a),
+        export::spans_jsonl(&b),
+        "sampling must be identical across reruns of the same spec"
+    );
+    let mut sampled = 0u64;
+    for run in &a {
+        let mut offsets: std::collections::BTreeMap<&str, u64> = Default::default();
+        for span in &run.bundle.spans {
+            let residue = span.index % cfg.sample_1_in_n;
+            let prev = offsets.entry(span.service.as_str()).or_insert(residue);
+            assert_eq!(
+                *prev, residue,
+                "service {} mixes residues {} and {} at 1-in-{}",
+                span.service, prev, residue, cfg.sample_1_in_n
+            );
+            sampled += 1;
+        }
+    }
+    assert!(sampled > 0, "1-in-4 sampling must still keep some spans");
+}
